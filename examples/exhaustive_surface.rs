@@ -1,0 +1,82 @@
+//! Exhaustive-search surface — regenerate the paper's Fig. 2: WordCount
+//! running time over `mapreduce.job.reduces` × `mapreduce.task.io.sort.mb`,
+//! rendered as a terminal heat map + CSV + gnuplot script.
+//!
+//! Run: `cargo run --release --example exhaustive_surface [out_dir]`
+
+use catla::catla::visualize::{gnuplot_fig2, surface_heatmap};
+use catla::config::params::{HadoopConfig, P_IO_SORT_MB, P_REDUCES};
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::{cluster_objective, GridSearch, ParamSpace};
+use catla::util::csv::Csv;
+use catla::workloads::wordcount;
+
+fn main() -> Result<(), String> {
+    let out_dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "history".into()),
+    );
+    let workload = wordcount(10_240.0);
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let spec = TuningSpec::fig2();
+    let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+    println!(
+        "exhaustive search over {} = {} cluster runs ...",
+        spec.ranges
+            .iter()
+            .map(|r| r.grid().len().to_string())
+            .collect::<Vec<_>>()
+            .join(" x "),
+        spec.grid_size()
+    );
+
+    let outcome = {
+        let mut obj = cluster_objective(&mut cluster, &workload, 1);
+        GridSearch.run(&space, &mut obj, usize::MAX)
+    };
+
+    // organize into the (reduces, sort.mb) matrix
+    let reduces_axis = spec.ranges[0].grid();
+    let sortmb_axis = spec.ranges[1].grid();
+    let mut z = vec![vec![0.0f64; sortmb_axis.len()]; reduces_axis.len()];
+    let mut csv = Csv::new(&["mapreduce.job.reduces", "mapreduce.task.io.sort.mb", "runtime_s"]);
+    for rec in &outcome.records {
+        let r = rec.config.get(P_REDUCES);
+        let s = rec.config.get(P_IO_SORT_MB);
+        let ri = reduces_axis.iter().position(|&v| v == r).unwrap();
+        let si = sortmb_axis.iter().position(|&v| v == s).unwrap();
+        z[ri][si] = rec.value;
+        csv.push(&[r.to_string(), s.to_string(), format!("{:.3}", rec.value)]);
+    }
+
+    std::fs::create_dir_all(&out_dir).map_err(|e| e.to_string())?;
+    let csv_path = out_dir.join("fig2_surface.csv");
+    csv.save(&csv_path).map_err(|e| e.to_string())?;
+    let gp_path = out_dir.join("fig2.gnuplot");
+    std::fs::write(&gp_path, gnuplot_fig2("fig2_surface.csv", "fig2.png"))
+        .map_err(|e| e.to_string())?;
+
+    println!(
+        "\n{}",
+        surface_heatmap(
+            "Fig. 2 — WordCount running time (simulated cluster)",
+            "reduces",
+            &reduces_axis,
+            "io.sort.mb",
+            &sortmb_axis,
+            &z,
+        )
+    );
+    println!(
+        "best: {:.1}s at {}   worst: {:.1}s",
+        outcome.best_value,
+        outcome.best_config.summary(),
+        outcome
+            .records
+            .iter()
+            .map(|r| r.value)
+            .fold(f64::MIN, f64::max)
+    );
+    println!("wrote {} and {}", csv_path.display(), gp_path.display());
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! PageRank pipeline — a multi-stage workflow DAG (prep → N rank
+//! iterations → merge), tuned as a group: the shared configuration found
+//! by the group tuner is applied to every stage and the end-to-end
+//! makespan is compared against Hadoop defaults.
+//!
+//! Run: `cargo run --release --example pagerank_pipeline [iterations]`
+
+use catla::catla::workflow::{parse_workflow_line, run_workflow, WorkflowJob};
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::{Bobyqa, ParamSpace};
+use catla::workloads::pagerank_iteration;
+
+fn pipeline(iters: usize, cfg_args: &str) -> Vec<WorkflowJob> {
+    let mut lines = vec![format!("prep grep 4096 {cfg_args}")];
+    for i in 1..=iters {
+        let dep = if i == 1 { "prep".to_string() } else { format!("rank{}", i - 1) };
+        lines.push(format!("rank{i} pagerank 2048 {cfg_args} after={dep}"));
+    }
+    lines.push(format!(
+        "merge join 4096 {cfg_args} after=rank{iters}"
+    ));
+    lines
+        .iter()
+        .map(|l| parse_workflow_line(l).expect("valid line"))
+        .collect()
+}
+
+fn main() -> Result<(), String> {
+    let iters: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5);
+
+    // tune a shared config on the dominant stage (one rank iteration)
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let wl = pagerank_iteration(2048.0);
+    let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let outcome = {
+        let mut obj = catla::optim::cluster_objective(&mut cluster, &wl, 1);
+        Bobyqa::default().run(&space, &mut obj, 40)
+    };
+    println!(
+        "tuned shared config in {} evals: {}",
+        outcome.evals(),
+        outcome.best_config.summary()
+    );
+    let cfg_args = TuningSpec::fig3()
+        .ranges
+        .iter()
+        .map(|r| format!("conf.{}={}", r.meta.name, outcome.best_config.get(r.meta.index)))
+        .collect::<Vec<_>>()
+        .join(" ");
+
+    // run the DAG under defaults vs tuned
+    let default_wf = pipeline(iters, "");
+    let tuned_wf = pipeline(iters, &cfg_args);
+    let mut c1 = SimCluster::new(ClusterSpec::default());
+    let mut c2 = SimCluster::new(ClusterSpec::default());
+    let before = run_workflow(&mut c1, &default_wf)?;
+    let after = run_workflow(&mut c2, &tuned_wf)?;
+
+    println!("\n{:<10} {:>12} {:>12}", "stage", "default_s", "tuned_s");
+    for (a, b) in before.stages.iter().zip(&after.stages) {
+        println!("{:<10} {:>12.1} {:>12.1}", a.name, a.runtime_s, b.runtime_s);
+    }
+    println!(
+        "\npipeline makespan: default {:.1}s -> tuned {:.1}s ({:.1}% faster, {} stages)",
+        before.makespan_s,
+        after.makespan_s,
+        (1.0 - after.makespan_s / before.makespan_s) * 100.0,
+        before.stages.len()
+    );
+    if after.makespan_s >= before.makespan_s {
+        return Err("tuned pipeline not faster than defaults".into());
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Project Runner — run an organized group of jobs across all five
+//! built-in workloads (the "project-based template" flow), then compare
+//! their resource profiles from the downloaded metrics.
+//!
+//! Run: `cargo run --release --example project_batch`
+
+use catla::catla::{create_template, Project, ProjectKind, ProjectRunner};
+use catla::hadoop::{Cluster, ClusterSpec, SimCluster};
+
+fn main() -> Result<(), String> {
+    let dir = std::env::temp_dir().join("catla_project_batch");
+    let _ = std::fs::remove_dir_all(&dir);
+    create_template(&dir, ProjectKind::Project, "wordcount", 4096.0)?;
+
+    // replace the template's jobs.list with a five-workload comparison,
+    // each with a sensible non-default configuration override
+    std::fs::write(
+        dir.join("jobs.list"),
+        "wc    wordcount 4096 conf.mapreduce.job.reduces=16\n\
+         sort  terasort  4096 conf.mapreduce.job.reduces=32 conf.mapreduce.task.io.sort.mb=512\n\
+         grep  grep      4096 conf.mapreduce.job.reduces=4\n\
+         join  join      4096 conf.mapreduce.job.reduces=24\n\
+         pr    pagerank  4096 conf.mapreduce.job.reduces=16 conf.mapreduce.map.output.compress=1\n",
+    )
+    .map_err(|e| e.to_string())?;
+
+    let project = Project::load(&dir)?;
+    let mut cluster = SimCluster::new(ClusterSpec::from_env(&project.env));
+    println!("{}\n", cluster.describe());
+
+    let out = ProjectRunner::new(&mut cluster).run(&project)?;
+
+    println!(
+        "{:<6} {:>10} {:>10} {:>10} {:>8} {:>10}",
+        "job", "runtime_s", "map_s", "reduce_s", "maps", "shuffle_MB"
+    );
+    for (name, m) in &out.jobs {
+        println!(
+            "{:<6} {:>10.1} {:>10.1} {:>10.1} {:>8} {:>10.0}",
+            name, m.runtime_s, m.map_phase_s, m.reduce_phase_s, m.maps, m.shuffle_mb
+        );
+    }
+    println!(
+        "\nall artifacts organized under {} (per-job subfolders + history/jobs.csv)",
+        project.results_dir().display()
+    );
+    Ok(())
+}

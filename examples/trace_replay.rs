@@ -1,0 +1,65 @@
+//! Trace replay — "tune once, run the pipeline faster": generate a
+//! day-long mixed-workload arrival trace, tune one shared configuration
+//! on a representative job, then replay the whole trace under default vs
+//! tuned configs and compare makespan / waits / utilization.
+//!
+//! Run: `cargo run --release --example trace_replay [n_jobs]`
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::trace::{replay, TraceGen};
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::{cluster_objective, Bobyqa, ParamSpace};
+use catla::workloads::wordcount;
+
+fn main() {
+    let n_jobs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+
+    // a loaded cluster: jobs arrive faster than the default config drains
+    let gen = TraceGen {
+        mean_interarrival_s: 25.0,
+        ..TraceGen::default()
+    };
+    let trace = gen.generate(n_jobs, 42);
+    let cl = ClusterSpec::default();
+    println!(
+        "trace: {n_jobs} jobs over {:.1} h (mixed: wc/grep/terasort/join/pagerank)",
+        trace.last().unwrap().arrival_s / 3600.0
+    );
+
+    // tune one shared config on the dominant workload
+    let mut cluster = SimCluster::new(cl.clone());
+    let wl = wordcount(2048.0);
+    let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let outcome = {
+        let mut obj = cluster_objective(&mut cluster, &wl, 1);
+        Bobyqa::default().run(&space, &mut obj, 40)
+    };
+    println!(
+        "tuned on representative wordcount in {} evals -> {}",
+        outcome.evals(),
+        outcome.best_config.summary()
+    );
+
+    let before = replay(&cl, &trace, &HadoopConfig::default(), 7);
+    let after = replay(&cl, &trace, &outcome.best_config, 7);
+
+    println!("\n{:<22} {:>12} {:>12}", "metric", "default", "tuned");
+    for (name, a, b) in [
+        ("makespan (h)", before.makespan_s / 3600.0, after.makespan_s / 3600.0),
+        ("mean job runtime (s)", before.mean_runtime_s, after.mean_runtime_s),
+        ("mean queue wait (s)", before.mean_wait_s, after.mean_wait_s),
+        ("p95 queue wait (s)", before.p95_wait_s, after.p95_wait_s),
+        ("utilization", before.utilization, after.utilization),
+    ] {
+        println!("{name:<22} {a:>12.2} {b:>12.2}");
+    }
+    println!(
+        "\nmakespan reduction: {:.1}%   wait reduction: {:.1}%",
+        (1.0 - after.makespan_s / before.makespan_s) * 100.0,
+        (1.0 - after.mean_wait_s / before.mean_wait_s.max(1e-9)) * 100.0
+    );
+}

@@ -1,0 +1,53 @@
+//! Tune WordCount with BOBYQA — the paper's Fig. 3 scenario as a library
+//! client: 4 Hadoop parameters, 60 noisy cluster evaluations, convergence
+//! chart on the terminal.
+//!
+//! Run: `cargo run --release --example tune_wordcount [budget]`
+
+use catla::catla::visualize::line_chart;
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::{cluster_objective, Bobyqa, ParamSpace};
+use catla::workloads::wordcount;
+
+fn main() {
+    let budget: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+
+    let workload = wordcount(10_240.0);
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let spec = TuningSpec::fig3();
+    let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+
+    println!("tuning {} over {} parameters, budget {budget} evaluations:", workload.name, spec.dims());
+    for r in &spec.ranges {
+        println!("  {:<48} [{}, {}]", r.meta.name, r.lo, r.hi);
+    }
+
+    // default-config baseline (what a user who never tunes gets)
+    let mut obj = cluster_objective(&mut cluster, &workload, 1);
+    let default_runtime = obj(&HadoopConfig::default());
+
+    let outcome = Bobyqa::default().run(&space, &mut obj, budget);
+    drop(obj);
+
+    println!("\nbest configuration found ({} evals):", outcome.evals());
+    for r in &spec.ranges {
+        println!(
+            "  {:<48} {}",
+            r.meta.name,
+            outcome.best_config.get(r.meta.index)
+        );
+    }
+    println!(
+        "\ndefault config: {default_runtime:.1}s   tuned: {:.1}s   speedup: {:.2}x",
+        outcome.best_value,
+        default_runtime / outcome.best_value
+    );
+
+    println!("\n{}", line_chart("running time per iteration (raw)", &outcome.raw_series(), 64, 14));
+    println!("{}", line_chart("best-so-far (convergence)", &outcome.convergence(), 64, 14));
+}

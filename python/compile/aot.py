@@ -1,0 +1,81 @@
+"""AOT-lower the L2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate binds) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits:
+  costmodel_n{128,1024}.hlo.txt   (configs, consts, weights) -> tuple(runtime, phases)
+  quadratic_n256.hlo.txt          (x, g, h, c0) -> tuple(q)
+  manifest.txt                    shapes the rust runtime asserts against
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from . import spec as S
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cost_model(n: int) -> str:
+    cfg = jax.ShapeDtypeStruct((n, S.N_PARAMS), np.float32)
+    consts = jax.ShapeDtypeStruct((S.N_CONSTS,), np.float32)
+    weights = jax.ShapeDtypeStruct((S.N_PHASES, S.N_PHASES), np.float32)
+    return to_hlo_text(jax.jit(model.cost_model).lower(cfg, consts, weights))
+
+
+def lower_quadratic(n: int, d: int) -> str:
+    x = jax.ShapeDtypeStruct((n, d), np.float32)
+    g = jax.ShapeDtypeStruct((d,), np.float32)
+    h = jax.ShapeDtypeStruct((d, d), np.float32)
+    c0 = jax.ShapeDtypeStruct((1,), np.float32)
+    return to_hlo_text(jax.jit(model.quadratic_eval).lower(x, g, h, c0))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for n in S.AOT_BATCH_SIZES:
+        name = f"costmodel_n{n}.hlo.txt"
+        text = lower_cost_model(n)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name} cost_model n={n} params={S.N_PARAMS} "
+            f"consts={S.N_CONSTS} phases={S.N_PHASES}"
+        )
+        print(f"wrote {name}: {len(text)} chars")
+
+    name = f"quadratic_n{S.QUAD_BATCH}.hlo.txt"
+    text = lower_quadratic(S.QUAD_BATCH, S.QUAD_DIM)
+    with open(os.path.join(args.out_dir, name), "w") as f:
+        f.write(text)
+    manifest.append(f"{name} quadratic n={S.QUAD_BATCH} dim={S.QUAD_DIM}")
+    print(f"wrote {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print("wrote manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 pallas kernel: batched Hadoop-config -> phase-times/runtime scoring.
+
+The hot-spot of Catla's surrogate-assisted tuning is scoring large batches
+of candidate configurations against the analytic cost model.  The kernel
+tiles the batch axis N into BLOCK_N-row blocks (VMEM-resident), computes
+the phase channels elementwise (VPU work) and applies the [N_PHASES x
+N_PHASES] calibration matmul (MXU work on real TPU).  `consts` and
+`weights` stay resident across the whole grid.
+
+interpret=True always: the CPU PJRT client cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in
+DESIGN.md / EXPERIMENTS.md (Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import spec as S
+from . import ref
+
+
+def _kernel(cfg_ref, consts_ref, w_ref, runtime_ref, phases_ref):
+    cfg = cfg_ref[...]
+    consts = consts_ref[...]
+    w = w_ref[...]
+    ph = ref.phase_math(cfg, consts)
+    calibrated = jnp.dot(ph, w, preferred_element_type=jnp.float32)
+    phases_ref[...] = ph
+    runtime_ref[...] = jnp.sum(calibrated, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def cost_model_pallas(cfg, consts, weights, *, block_n: int = S.BLOCK_N):
+    """Batched cost model as a pallas_call.
+
+    cfg: f32[N, N_PARAMS] with N a multiple of `block_n`
+    consts: f32[N_CONSTS]; weights: f32[N_PHASES, N_PHASES]
+    returns (runtime f32[N], phases f32[N, N_PHASES])
+    """
+    n = cfg.shape[0]
+    if n % block_n != 0:
+        raise ValueError(f"batch {n} not a multiple of block {block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, S.N_PARAMS), lambda i: (i, 0)),
+            # consts + weights: one block covering the whole array, reused
+            # by every grid step (index_map pins block 0).
+            pl.BlockSpec((S.N_CONSTS,), lambda i: (0,)),
+            pl.BlockSpec((S.N_PHASES, S.N_PHASES), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, S.N_PHASES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n, S.N_PHASES), jnp.float32),
+        ],
+        interpret=True,
+    )(cfg, consts, weights)

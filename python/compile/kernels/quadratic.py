@@ -1,0 +1,54 @@
+"""L1 pallas kernel: batched quadratic-surrogate evaluation.
+
+BOBYQA-style DFO builds a quadratic model q(x) = c + g.x + 0.5 x^T H x of
+the (noisy) job running time; surrogate prescreening evaluates q over many
+candidate points per iteration.  The kernel blocks the candidate batch and
+evaluates the quadratic form with two small matmuls per block.
+
+interpret=True: see costmodel.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import spec as S
+
+
+def _kernel(x_ref, g_ref, h_ref, c_ref, q_ref):
+    x = x_ref[...]
+    g = g_ref[...]
+    h = h_ref[...]
+    c0 = c_ref[0]
+    lin = jnp.dot(x, g[:, None], preferred_element_type=jnp.float32)[:, 0]
+    xh = jnp.dot(x, h, preferred_element_type=jnp.float32)
+    quad = 0.5 * jnp.sum(xh * x, axis=-1)
+    q_ref[...] = c0 + lin + quad
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def quadratic_pallas(x, g, h, c0, *, block_n: int = S.BLOCK_N):
+    """Batched quadratic form.
+
+    x: f32[N, D] (N multiple of block_n), g: f32[D], h: f32[D, D],
+    c0: f32[1] -> q: f32[N]
+    """
+    n, d = x.shape
+    if n % block_n != 0:
+        raise ValueError(f"batch {n} not a multiple of block {block_n}")
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, g, h, c0)

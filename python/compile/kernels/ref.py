@@ -1,0 +1,164 @@
+"""Pure-jnp oracle for the Catla analytic cost model and the quadratic
+surrogate.  The pallas kernels in `costmodel.py` / `quadratic.py` must match
+these to float tolerance; pytest+hypothesis enforces it.
+
+The arithmetic lives in `phase_math` so the pallas kernel bodies can reuse
+the *same* expression graph on VMEM blocks while this module applies it to
+whole arrays — the tests then validate the pallas plumbing (BlockSpec
+tiling, grid, padding) rather than two hand-copies of the formulas.
+"""
+
+import jax.numpy as jnp
+
+from .. import spec as S
+
+_EPS = 1e-6
+
+
+def phase_math(cfg, consts):
+    """Compute phase-time channels for a batch of configurations.
+
+    cfg:    f32[N, N_PARAMS] -- Hadoop parameter vectors
+    consts: f32[N_CONSTS]    -- workload + cluster descriptor
+    returns f32[N, N_PHASES] -- per-phase seconds (uncalibrated)
+    """
+    f32 = jnp.float32
+
+    def c(i):
+        return consts[i].astype(f32)
+
+    reduces = jnp.maximum(cfg[:, S.P_REDUCES], 1.0)
+    sort_mb = jnp.maximum(cfg[:, S.P_IO_SORT_MB], 1.0)
+    sort_factor = jnp.maximum(cfg[:, S.P_SORT_FACTOR], 2.0)
+    spill_pct = jnp.clip(cfg[:, S.P_SPILL_PERCENT], 0.05, 1.0)
+    pcopies = jnp.maximum(cfg[:, S.P_PARALLEL_COPIES], 1.0)
+    slowstart = jnp.clip(cfg[:, S.P_SLOWSTART], 0.0, 1.0)
+    map_mem = jnp.maximum(cfg[:, S.P_MAP_MEM_MB], 128.0)
+    red_mem = jnp.maximum(cfg[:, S.P_RED_MEM_MB], 128.0)
+    compress = jnp.clip(cfg[:, S.P_COMPRESS], 0.0, 1.0)
+    split_mb = jnp.maximum(cfg[:, S.P_SPLIT_MB], 1.0)
+
+    input_mb = jnp.maximum(c(S.C_INPUT_MB), 1.0)
+    sel = c(S.C_MAP_SELECTIVITY)
+    cpu_map = c(S.C_CPU_PER_MB_MAP)
+    cpu_red = c(S.C_CPU_PER_MB_RED)
+    nodes = jnp.maximum(c(S.C_NODES), 1.0)
+    node_mem = jnp.maximum(c(S.C_MEM_PER_NODE_MB), 256.0)
+    vcores = jnp.maximum(c(S.C_VCORES), 1.0)
+    disk = jnp.maximum(c(S.C_DISK_MBS), _EPS)
+    net = jnp.maximum(c(S.C_NET_MBS), _EPS)
+    cratio = c(S.C_COMPRESS_RATIO)
+    out_sel = c(S.C_OUTPUT_SELECTIVITY)
+    repl = jnp.maximum(c(S.C_REPLICATION), 1.0)
+    t_task = c(S.C_TASK_OVERHEAD_S)
+    t_am = c(S.C_AM_OVERHEAD_S)
+    record_kb = jnp.maximum(c(S.C_RECORD_KB), 1e-4)
+    locality = jnp.clip(c(S.C_LOCALITY), 0.0, 1.0)
+
+    # ---- task counts and container waves --------------------------------
+    maps = jnp.ceil(input_mb / split_mb)
+    map_slots = nodes * jnp.maximum(
+        1.0, jnp.minimum(jnp.floor(node_mem / map_mem), vcores)
+    )
+    red_slots = nodes * jnp.maximum(
+        1.0, jnp.minimum(jnp.floor(node_mem / red_mem), vcores)
+    )
+    map_waves = jnp.ceil(maps / map_slots)
+    red_waves = jnp.ceil(reduces / red_slots)
+
+    # ---- map task --------------------------------------------------------
+    mb_per_map = input_mb / maps
+    read_rate = disk * (locality + (1.0 - locality) * 0.6)
+    t_read = mb_per_map / read_rate
+
+    t_map_fn = mb_per_map * cpu_map
+    map_out = mb_per_map * sel  # logical (uncompressed) map output, MB
+    disk_out = map_out * (1.0 - compress * (1.0 - cratio))
+
+    buf = sort_mb * spill_pct
+    spills = jnp.maximum(1.0, jnp.ceil(map_out / jnp.maximum(buf, _EPS)))
+    # in-memory sort CPU: n log n over the records of each buffer fill
+    buf_records = jnp.maximum(2.0, jnp.minimum(map_out, buf) * 1024.0 / record_kb)
+    t_sort = map_out * cpu_map * 0.25 * jnp.log2(buf_records) / 20.0
+    t_compress = map_out * cpu_map * 0.30 * compress
+
+    t_spill_io = disk_out / disk
+    merge_passes = jnp.where(
+        spills > 1.0,
+        jnp.ceil(jnp.log(spills) / jnp.log(sort_factor)),
+        0.0,
+    )
+    t_merge_io = merge_passes * 2.0 * disk_out / disk
+
+    # ---- shuffle ---------------------------------------------------------
+    total_shuffle = maps * disk_out  # MB moved over the network
+    per_red = total_shuffle / reduces
+    copy_eff = net * (0.4 + 0.6 * jnp.minimum(pcopies, 16.0) / 16.0)
+    active_red = jnp.minimum(reduces, red_slots)
+    fair_share = net * nodes / jnp.maximum(active_red, 1.0)
+    rate = jnp.minimum(copy_eff, fair_share)
+    t_copy = per_red / jnp.maximum(rate, _EPS)
+
+    map_phase = map_waves * (t_read + t_map_fn + t_sort + t_compress
+                             + t_spill_io + t_merge_io)
+    # shuffle overlaps the map phase once `slowstart` of maps completed
+    overlap = (1.0 - slowstart) * map_phase
+    shuffle_tail = jnp.maximum(t_copy - overlap, t_copy * 0.05)
+    # reducers started early squat on containers while maps still need them
+    squat = (1.0 - slowstart) * 0.05 * map_phase * jnp.minimum(
+        reduces / jnp.maximum(red_slots, 1.0), 1.0
+    )
+    shuffle_ch = shuffle_tail + squat
+
+    # ---- reduce task -----------------------------------------------------
+    per_red_logical = maps * map_out / reduces
+    t_decompress = per_red_logical * cpu_map * 0.10 * compress
+    merge_passes_r = jnp.maximum(
+        jnp.ceil(jnp.log(jnp.maximum(maps, 2.0)) / jnp.log(sort_factor)) - 1.0,
+        0.0,
+    )
+    in_memory = per_red <= 0.70 * red_mem
+    t_rmerge = jnp.where(
+        in_memory, 0.0, merge_passes_r * 2.0 * per_red / disk
+    )
+    t_red_fn = per_red_logical * cpu_red
+    out_mb = per_red_logical * out_sel
+    t_write = out_mb * repl / disk
+
+    # ---- assemble channels (already wave-multiplied) ---------------------
+    ph = jnp.stack(
+        [
+            map_waves * t_read,
+            map_waves * (t_map_fn + t_sort + t_compress),
+            map_waves * (t_spill_io + t_merge_io),
+            shuffle_ch,
+            red_waves * t_rmerge,
+            red_waves * (t_red_fn + t_decompress),
+            red_waves * t_write,
+            t_am + (map_waves + red_waves) * t_task,
+        ],
+        axis=-1,
+    )
+    return ph
+
+
+def cost_model_ref(cfg, consts, weights):
+    """Reference batched cost model.
+
+    Returns (runtime f32[N], phases f32[N, N_PHASES]) where
+    runtime = sum(phases @ weights, axis=-1).
+    """
+    ph = phase_math(cfg, consts)
+    calibrated = ph @ weights
+    return jnp.sum(calibrated, axis=-1), ph
+
+
+def quadratic_ref(x, g, h, c0):
+    """Reference batched quadratic surrogate.
+
+    q(x) = c0 + x.g + 0.5 * x^T H x  for each row of x.
+    x: f32[N, D], g: f32[D], h: f32[D, D], c0: f32[] -> f32[N]
+    """
+    lin = x @ g
+    quad = 0.5 * jnp.sum((x @ h) * x, axis=-1)
+    return c0 + lin + quad

@@ -1,0 +1,47 @@
+"""L2: the jax compute graphs Catla AOT-compiles for its rust runtime.
+
+Two graphs, both calling the L1 pallas kernels:
+
+  * `cost_model`      — batched analytic Hadoop cost model (configs ->
+                        predicted runtimes + phase breakdown)
+  * `quadratic_eval`  — batched quadratic-surrogate evaluation for
+                        DFO prescreening
+
+Build-time only: `aot.py` lowers these once to HLO text; the rust
+coordinator loads and executes the artifacts via PJRT.  Python is never on
+the tuning request path.
+"""
+
+import jax.numpy as jnp
+
+from . import spec as S
+from .kernels.costmodel import cost_model_pallas
+from .kernels.quadratic import quadratic_pallas
+
+
+def cost_model(cfg, consts, weights):
+    """configs f32[N, N_PARAMS], consts f32[N_CONSTS],
+    weights f32[N_PHASES, N_PHASES] -> (runtime f32[N], phases f32[N, K])."""
+    cfg = cfg.astype(jnp.float32)
+    runtime, phases = cost_model_pallas(cfg, consts, weights)
+    return runtime, phases
+
+
+def quadratic_eval(x, g, h, c0):
+    """x f32[N, D], g f32[D], h f32[D, D], c0 f32[1] -> q f32[N]."""
+    return quadratic_pallas(x.astype(jnp.float32), g, h, c0)
+
+
+def pad_batch(arr, batch):
+    """Pad the leading axis of `arr` with its last row up to `batch` rows.
+
+    Mirrors what the rust runtime does before invoking the fixed-shape
+    AOT executable; exposed for tests.
+    """
+    n = arr.shape[0]
+    if n == batch:
+        return arr
+    if n > batch:
+        raise ValueError(f"batch {n} exceeds artifact batch {batch}")
+    pad = jnp.repeat(arr[-1:], batch - n, axis=0)
+    return jnp.concatenate([arr, pad], axis=0)

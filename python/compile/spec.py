@@ -1,0 +1,134 @@
+"""Shared specification of the Catla analytic cost model.
+
+Single source of truth (python side) for:
+  * the order of Hadoop configuration parameters in a config vector,
+  * the order of workload/cluster constants in the consts vector,
+  * the phase channels produced by the model,
+  * the default calibration matrix.
+
+The rust simulator (`rust/src/hadoop/costmodel.rs`) mirrors these indices
+and formulas; integration tests compare the two through the AOT artifacts.
+
+Units: **megabytes** and **seconds** everywhere (f32 stays well inside its
+7 significant digits for multi-TB inputs expressed in MB).
+"""
+
+import numpy as np
+
+# ---------------------------------------------------------------- params --
+# Hadoop configuration parameters, in config-vector order.
+P_REDUCES = 0  # mapreduce.job.reduces
+P_IO_SORT_MB = 1  # mapreduce.task.io.sort.mb
+P_SORT_FACTOR = 2  # mapreduce.task.io.sort.factor
+P_SPILL_PERCENT = 3  # mapreduce.map.sort.spill.percent
+P_PARALLEL_COPIES = 4  # mapreduce.reduce.shuffle.parallelcopies
+P_SLOWSTART = 5  # mapreduce.job.reduce.slowstart.completedmaps
+P_MAP_MEM_MB = 6  # mapreduce.map.memory.mb
+P_RED_MEM_MB = 7  # mapreduce.reduce.memory.mb
+P_COMPRESS = 8  # mapreduce.map.output.compress (0/1)
+P_SPLIT_MB = 9  # effective input split size (dfs.blocksize / minsize)
+N_PARAMS = 10
+
+PARAM_NAMES = [
+    "mapreduce.job.reduces",
+    "mapreduce.task.io.sort.mb",
+    "mapreduce.task.io.sort.factor",
+    "mapreduce.map.sort.spill.percent",
+    "mapreduce.reduce.shuffle.parallelcopies",
+    "mapreduce.job.reduce.slowstart.completedmaps",
+    "mapreduce.map.memory.mb",
+    "mapreduce.reduce.memory.mb",
+    "mapreduce.map.output.compress",
+    "mapreduce.input.fileinputformat.split.mb",
+]
+
+# Box bounds used by optimizers and by the hypothesis test generators.
+PARAM_LO = np.array([1, 16, 2, 0.50, 1, 0.05, 512, 512, 0, 32], np.float32)
+PARAM_HI = np.array(
+    [64, 2048, 128, 0.95, 64, 1.00, 4096, 8192, 1, 512], np.float32
+)
+
+# ---------------------------------------------------------------- consts --
+# Workload + cluster descriptor, in consts-vector order.
+C_INPUT_MB = 0  # total job input size
+C_MAP_SELECTIVITY = 1  # map output bytes / input bytes
+C_CPU_PER_MB_MAP = 2  # seconds of map-function CPU per MB
+C_CPU_PER_MB_RED = 3  # seconds of reduce-function CPU per MB
+C_NODES = 4  # worker node count
+C_MEM_PER_NODE_MB = 5  # NodeManager memory
+C_VCORES = 6  # vcores per node
+C_DISK_MBS = 7  # sequential disk MB/s
+C_NET_MBS = 8  # per-node network MB/s
+C_COMPRESS_RATIO = 9  # compressed size / raw size
+C_OUTPUT_SELECTIVITY = 10  # reduce output bytes / reduce input bytes
+C_REPLICATION = 11  # HDFS replication of job output
+C_TASK_OVERHEAD_S = 12  # container launch + JVM start per task
+C_AM_OVERHEAD_S = 13  # job setup/teardown (AM) seconds
+C_RECORD_KB = 14  # average record size in KB
+C_LOCALITY = 15  # fraction of node-local map input reads
+N_CONSTS = 16
+
+# ---------------------------------------------------------------- phases --
+PH_READ = 0  # map input read
+PH_MAP_CPU = 1  # map function + sort + compress CPU
+PH_MAP_IO = 2  # spill + map-side merge disk IO
+PH_SHUFFLE = 3  # non-overlapped shuffle copy tail
+PH_RED_IO = 4  # reduce-side merge disk IO
+PH_RED_CPU = 5  # reduce function CPU
+PH_WRITE = 6  # HDFS output write
+PH_OVERHEAD = 7  # AM + per-wave scheduling overhead
+N_PHASES = 8
+
+PHASE_NAMES = [
+    "read",
+    "map_cpu",
+    "map_io",
+    "shuffle",
+    "red_io",
+    "red_cpu",
+    "write",
+    "overhead",
+]
+
+
+def default_weights() -> np.ndarray:
+    """Default phase-calibration matrix W [N_PHASES, N_PHASES].
+
+    runtime = sum(phases @ W, axis=-1).  Identity plus small off-diagonal
+    overlap discounts: map CPU hides a slice of map IO, reduce CPU hides a
+    slice of reduce IO.
+    """
+    w = np.eye(N_PHASES, dtype=np.float32)
+    w[PH_MAP_CPU, PH_MAP_IO] = -0.08
+    w[PH_RED_CPU, PH_RED_IO] = -0.05
+    return w
+
+
+def wordcount_consts(input_mb: float = 10240.0, nodes: int = 16) -> np.ndarray:
+    """Consts vector for the paper's WordCount experiment."""
+    c = np.zeros(N_CONSTS, np.float32)
+    c[C_INPUT_MB] = input_mb
+    c[C_MAP_SELECTIVITY] = 0.30  # wordcount emits (word, 1) pairs, combiner on
+    c[C_CPU_PER_MB_MAP] = 0.012
+    c[C_CPU_PER_MB_RED] = 0.006
+    c[C_NODES] = nodes
+    c[C_MEM_PER_NODE_MB] = 8192
+    c[C_VCORES] = 8
+    c[C_DISK_MBS] = 120.0
+    c[C_NET_MBS] = 110.0
+    c[C_COMPRESS_RATIO] = 0.35
+    c[C_OUTPUT_SELECTIVITY] = 0.10
+    c[C_REPLICATION] = 3
+    c[C_TASK_OVERHEAD_S] = 1.2
+    c[C_AM_OVERHEAD_S] = 8.0
+    c[C_RECORD_KB] = 0.05
+    c[C_LOCALITY] = 0.85
+    return c
+
+
+# AOT batch sizes emitted by aot.py; the rust runtime pads batches up to
+# the nearest available size.
+AOT_BATCH_SIZES = (128, 1024)
+QUAD_DIM = 8  # quadratic surrogate dimension (optimizers pad with zeros)
+QUAD_BATCH = 256
+BLOCK_N = 128  # pallas block size along the config-batch axis

@@ -1,0 +1,25 @@
+"""AOT path: lowering to HLO text must succeed and produce parseable,
+entry-computation-bearing modules of the expected arity."""
+
+from compile import aot
+from compile import spec as S
+
+
+class TestLowering:
+    def test_cost_model_lowers_to_hlo_text(self):
+        text = aot.lower_cost_model(S.AOT_BATCH_SIZES[0])
+        assert "ENTRY" in text
+        assert "f32[128,10]" in text  # configs param
+        assert "f32[16]" in text      # consts param
+
+    def test_quadratic_lowers_to_hlo_text(self):
+        text = aot.lower_quadratic(S.QUAD_BATCH, S.QUAD_DIM)
+        assert "ENTRY" in text
+        assert f"f32[{S.QUAD_BATCH},{S.QUAD_DIM}]" in text
+
+    def test_no_custom_calls(self):
+        """interpret=True pallas must lower to plain HLO the CPU PJRT
+        client can run — no mosaic custom-calls allowed."""
+        for text in (aot.lower_cost_model(128),
+                     aot.lower_quadratic(S.QUAD_BATCH, S.QUAD_DIM)):
+            assert "custom-call" not in text, "found custom-call in HLO"

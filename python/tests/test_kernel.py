@@ -1,0 +1,159 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal for L1.
+
+hypothesis sweeps batch shapes, block sizes, parameter ranges and dtypes;
+every pallas result must match the pure-jnp reference to float tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import spec as S
+from compile.kernels import ref
+from compile.kernels.costmodel import cost_model_pallas
+from compile.kernels.quadratic import quadratic_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def random_configs(n, rng=None, dtype=np.float32):
+    rng = rng or RNG
+    u = rng.random((n, S.N_PARAMS), np.float32)
+    cfg = S.PARAM_LO + u * (S.PARAM_HI - S.PARAM_LO)
+    # integer-valued params arrive rounded from the optimizer
+    for i in (S.P_REDUCES, S.P_IO_SORT_MB, S.P_SORT_FACTOR,
+              S.P_PARALLEL_COPIES, S.P_MAP_MEM_MB, S.P_RED_MEM_MB,
+              S.P_SPLIT_MB):
+        cfg[:, i] = np.round(cfg[:, i])
+    cfg[:, S.P_COMPRESS] = np.round(cfg[:, S.P_COMPRESS])
+    return cfg.astype(dtype)
+
+
+def assert_matches_ref(cfg, consts, weights, block_n):
+    rt_k, ph_k = cost_model_pallas(cfg, consts, weights, block_n=block_n)
+    rt_r, ph_r = ref.cost_model_ref(cfg, consts, weights)
+    np.testing.assert_allclose(np.asarray(ph_k), np.asarray(ph_r),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(rt_k), np.asarray(rt_r),
+                               rtol=1e-5, atol=1e-3)
+
+
+class TestCostModelKernel:
+    def test_basic_block(self):
+        cfg = random_configs(S.BLOCK_N)
+        assert_matches_ref(cfg, S.wordcount_consts(), S.default_weights(),
+                           S.BLOCK_N)
+
+    def test_multi_block(self):
+        cfg = random_configs(4 * S.BLOCK_N)
+        assert_matches_ref(cfg, S.wordcount_consts(), S.default_weights(),
+                           S.BLOCK_N)
+
+    def test_rejects_ragged_batch(self):
+        cfg = random_configs(S.BLOCK_N + 1)
+        with pytest.raises(ValueError, match="not a multiple"):
+            cost_model_pallas(cfg, S.wordcount_consts(), S.default_weights())
+
+    def test_runtime_positive(self):
+        cfg = random_configs(2 * S.BLOCK_N)
+        rt, ph = cost_model_pallas(cfg, S.wordcount_consts(),
+                                   S.default_weights())
+        assert np.all(np.asarray(rt) > 0)
+        assert np.all(np.asarray(ph) >= 0)
+
+    def test_more_sort_mb_never_more_spill_io(self):
+        """Larger io.sort.mb => fewer (or equal) spills => map_io channel
+        non-increasing, everything else fixed (paper Fig. 2 trend)."""
+        base = random_configs(S.BLOCK_N)
+        lo = base.copy(); lo[:, S.P_IO_SORT_MB] = 64.0
+        hi = base.copy(); hi[:, S.P_IO_SORT_MB] = 1024.0
+        c, w = S.wordcount_consts(), S.default_weights()
+        _, ph_lo = cost_model_pallas(lo, c, w)
+        _, ph_hi = cost_model_pallas(hi, c, w)
+        assert np.all(np.asarray(ph_hi)[:, S.PH_MAP_IO]
+                      <= np.asarray(ph_lo)[:, S.PH_MAP_IO] + 1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=6),
+        block_n=st.sampled_from([8, 32, 128]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, blocks, block_n, seed):
+        rng = np.random.default_rng(seed)
+        cfg = random_configs(blocks * block_n, rng)
+        assert_matches_ref(cfg, S.wordcount_consts(), S.default_weights(),
+                           block_n)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        input_mb=st.floats(min_value=64.0, max_value=4.0e6),
+        nodes=st.integers(min_value=1, max_value=256),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_workloads(self, input_mb, nodes, seed):
+        rng = np.random.default_rng(seed)
+        cfg = random_configs(S.BLOCK_N, rng)
+        consts = S.wordcount_consts(input_mb=input_mb, nodes=nodes)
+        assert_matches_ref(cfg, consts, S.default_weights(), S.BLOCK_N)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_hypothesis_f64_configs_cast(self, seed):
+        """f64 configs are accepted and cast; result matches the f32 ref."""
+        rng = np.random.default_rng(seed)
+        cfg64 = random_configs(S.BLOCK_N, rng, dtype=np.float64)
+        from compile.model import cost_model
+        rt, _ = cost_model(cfg64, S.wordcount_consts(), S.default_weights())
+        rt_r, _ = ref.cost_model_ref(cfg64.astype(np.float32),
+                                     S.wordcount_consts(),
+                                     S.default_weights())
+        np.testing.assert_allclose(np.asarray(rt), np.asarray(rt_r),
+                                   rtol=1e-5, atol=1e-3)
+
+
+class TestQuadraticKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=4),
+        block_n=st.sampled_from([8, 64, 128]),
+        d=st.integers(min_value=1, max_value=12),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, blocks, block_n, d, seed):
+        rng = np.random.default_rng(seed)
+        n = blocks * block_n
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        g = rng.standard_normal(d).astype(np.float32)
+        a = rng.standard_normal((d, d)).astype(np.float32)
+        h = (a + a.T) / 2.0
+        c0 = np.array([rng.standard_normal()], np.float32)
+        q_k = quadratic_pallas(x, g, h, c0, block_n=block_n)
+        q_r = ref.quadratic_ref(x, g, h, c0[0])
+        np.testing.assert_allclose(np.asarray(q_k), np.asarray(q_r),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_zero_padding_is_neutral(self):
+        """Padding candidate dims with zeros must not change q (the rust
+        optimizer pads low-dim problems up to QUAD_DIM)."""
+        rng = np.random.default_rng(7)
+        n, d, dpad = 128, 4, S.QUAD_DIM
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        g = rng.standard_normal(d).astype(np.float32)
+        a = rng.standard_normal((d, d)).astype(np.float32)
+        h = (a + a.T) / 2.0
+        c0 = np.array([0.5], np.float32)
+        xp = np.zeros((n, dpad), np.float32); xp[:, :d] = x
+        gp = np.zeros(dpad, np.float32); gp[:d] = g
+        hp = np.zeros((dpad, dpad), np.float32); hp[:d, :d] = h
+        q_pad = quadratic_pallas(xp, gp, hp, c0)
+        q_ref = ref.quadratic_ref(x, g, h, c0[0])
+        np.testing.assert_allclose(np.asarray(q_pad), np.asarray(q_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rejects_ragged_batch(self):
+        x = np.zeros((100, 4), np.float32)
+        with pytest.raises(ValueError, match="not a multiple"):
+            quadratic_pallas(x, np.zeros(4, np.float32),
+                             np.zeros((4, 4), np.float32),
+                             np.zeros(1, np.float32))

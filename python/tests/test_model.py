@@ -1,0 +1,88 @@
+"""L2 model-level tests: shapes, physics sanity of the cost surface
+(the paper's Fig. 2 trends), and padding semantics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import spec as S
+from compile.model import cost_model, pad_batch
+
+
+def grid_configs(reduces_vals, sortmb_vals):
+    """Cross product over the two Fig.2 params with defaults elsewhere."""
+    rows = []
+    for r in reduces_vals:
+        for s in sortmb_vals:
+            cfg = np.array(
+                [r, s, 10, 0.8, 5, 0.8, 1024, 1024, 0, 128], np.float32
+            )
+            rows.append(cfg)
+    return np.stack(rows)
+
+
+class TestCostSurface:
+    def test_fig2_trend_larger_sortmb_helps_on_average(self):
+        """Paper: larger io.sort.mb tends to reduce running time."""
+        reduces = [8]
+        cfgs = grid_configs(reduces, [32, 64, 128, 256, 512, 1024])
+        cfgs = pad_batch(np.asarray(cfgs), S.BLOCK_N)
+        rt, _ = cost_model(cfgs, S.wordcount_consts(), S.default_weights())
+        rt = np.asarray(rt)[:6]
+        assert rt[-1] <= rt[0], f"sort.mb=1024 not faster than 32: {rt}"
+
+    def test_fig2_trend_more_reducers_help_until_waves(self):
+        """More reduce parallelism lowers runtime until container waves
+        kick in; with 16 nodes x 8 slots, 64 reducers are one wave."""
+        cfgs = grid_configs([1, 2, 4, 8, 16, 32], [256])
+        cfgs = pad_batch(np.asarray(cfgs), S.BLOCK_N)
+        rt, _ = cost_model(cfgs, S.wordcount_consts(), S.default_weights())
+        rt = np.asarray(rt)[:6]
+        assert rt[5] < rt[0], f"32 reducers not faster than 1: {rt}"
+
+    def test_wave_boundary_creates_jump(self):
+        """Crossing a reduce-wave boundary must *increase* runtime — the
+        source of the paper's 'huge fluctuations'."""
+        consts = S.wordcount_consts(nodes=4)  # 4 nodes x 8 vcores = 32 slots
+        cfgs = grid_configs([32, 33], [256])  # 33 reducers -> 2 waves
+        cfgs = pad_batch(np.asarray(cfgs), S.BLOCK_N)
+        rt, _ = cost_model(cfgs, consts, S.default_weights())
+        rt = np.asarray(rt)
+        assert rt[1] > rt[0]
+
+    def test_phase_decomposition_sums(self):
+        cfgs = pad_batch(grid_configs([8], [256]), S.BLOCK_N)
+        rt, ph = cost_model(cfgs, S.wordcount_consts(), S.default_weights())
+        manual = np.asarray(ph) @ S.default_weights()
+        np.testing.assert_allclose(
+            np.asarray(rt), manual.sum(-1), rtol=1e-5, atol=1e-3
+        )
+
+
+class TestPadBatch:
+    def test_pad_identity(self):
+        x = np.ones((128, 3), np.float32)
+        assert pad_batch(x, 128) is x
+
+    def test_pad_repeats_last_row(self):
+        x = np.arange(6, dtype=np.float32).reshape(3, 2)
+        out = np.asarray(pad_batch(x, 5))
+        assert out.shape == (5, 2)
+        np.testing.assert_array_equal(out[3], x[2])
+        np.testing.assert_array_equal(out[4], x[2])
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(min_value=1, max_value=128))
+    def test_padding_never_changes_leading_results(self, n):
+        rng = np.random.default_rng(n)
+        u = rng.random((n, S.N_PARAMS), np.float32)
+        cfg = S.PARAM_LO + u * (S.PARAM_HI - S.PARAM_LO)
+        padded = pad_batch(cfg, S.BLOCK_N)
+        rt_p, _ = cost_model(np.asarray(padded), S.wordcount_consts(),
+                             S.default_weights())
+        # reference: evaluate the unpadded rows in a full block of copies
+        full = np.repeat(cfg[:1], S.BLOCK_N, axis=0)
+        full[:n] = cfg
+        rt_f, _ = cost_model(full, S.wordcount_consts(), S.default_weights())
+        np.testing.assert_allclose(np.asarray(rt_p)[:n],
+                                   np.asarray(rt_f)[:n],
+                                   rtol=1e-6, atol=1e-4)

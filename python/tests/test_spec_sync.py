@@ -1,0 +1,76 @@
+"""Cross-language guard: the rust mirrors of spec.py (parameter order,
+bounds, consts layout, calibration matrix) must stay in lockstep.  Parses
+the rust sources directly so a drift fails the python suite too (the rust
+side has the complementary check via the AOT artifacts)."""
+
+import os
+import re
+
+import numpy as np
+
+from compile import spec as S
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def read(rel):
+    with open(os.path.join(ROOT, rel)) as f:
+        return f.read()
+
+
+class TestParamTableSync:
+    def setup_method(self):
+        self.rust = read("rust/src/config/params.rs")
+
+    def test_param_count_matches(self):
+        m = re.search(r"pub const N_PARAMS: usize = (\d+);", self.rust)
+        assert int(m.group(1)) == S.N_PARAMS
+
+    def test_names_order_and_bounds_match(self):
+        rows = re.findall(
+            r'ParamMeta \{ index: (\w+), name: "([^"]+)", lo: ([\d.]+), '
+            r"hi: ([\d.]+), integer: (\w+)", self.rust)
+        assert len(rows) == S.N_PARAMS
+        for i, (_, name, lo, hi, _integer) in enumerate(rows):
+            assert name == S.PARAM_NAMES[i], f"param {i} name drift"
+            assert float(lo) == S.PARAM_LO[i], f"{name} lo drift"
+            assert float(hi) == S.PARAM_HI[i], f"{name} hi drift"
+
+    def test_integerness_matches_test_generator(self):
+        rows = [m[4] for m in re.findall(
+            r'ParamMeta \{ index: (\w+), name: "([^"]+)", lo: ([\d.]+), '
+            r"hi: ([\d.]+), integer: (\w+)", self.rust)]
+        int_idx = {S.P_REDUCES, S.P_IO_SORT_MB, S.P_SORT_FACTOR,
+                   S.P_PARALLEL_COPIES, S.P_MAP_MEM_MB, S.P_RED_MEM_MB,
+                   S.P_SPLIT_MB, S.P_COMPRESS}
+        for i, flag in enumerate(rows):
+            assert (flag == "true") == (i in int_idx), f"param {i} integer drift"
+
+
+class TestConstsLayoutSync:
+    def test_to_consts_order(self):
+        rust = read("rust/src/hadoop/mod.rs")
+        body = rust.split("pub fn to_consts")[1].split("\n    }")[0]
+        comments = re.findall(r"// (C_\w+)", body)
+        expected = ["C_INPUT_MB", "C_MAP_SELECTIVITY", "C_CPU_PER_MB_MAP",
+                    "C_CPU_PER_MB_RED", "C_NODES", "C_MEM_PER_NODE_MB",
+                    "C_VCORES", "C_DISK_MBS", "C_NET_MBS", "C_COMPRESS_RATIO",
+                    "C_OUTPUT_SELECTIVITY", "C_REPLICATION",
+                    "C_TASK_OVERHEAD_S", "C_AM_OVERHEAD_S", "C_RECORD_KB",
+                    "C_LOCALITY"]
+        assert comments == expected
+        for i, name in enumerate(expected):
+            assert getattr(S, name) == i
+
+
+class TestWeightsSync:
+    def test_calibration_matrix_matches(self):
+        rust = read("rust/src/hadoop/costmodel.rs")
+        body = rust.split("pub fn default_weights")[1]
+        pairs = re.findall(r"w\[(\w+)\]\[(\w+)\] = (-?[\d.]+);", body)
+        w = np.eye(S.N_PHASES, dtype=np.float32)
+        names = {"PH_MAP_CPU": S.PH_MAP_CPU, "PH_MAP_IO": S.PH_MAP_IO,
+                 "PH_RED_CPU": S.PH_RED_CPU, "PH_RED_IO": S.PH_RED_IO}
+        for a, b, v in pairs:
+            w[names[a], names[b]] = float(v)
+        np.testing.assert_array_equal(w, S.default_weights())

@@ -1,0 +1,113 @@
+//! ABL3 + ABL4 — robustness ablations (DESIGN.md §7):
+//!
+//!   ABL3  noise sweep: how does each optimizer family degrade as the
+//!         cluster's runtime noise σ grows? (the paper's stated reason
+//!         for using black-box DFO)
+//!   ABL4  speculative execution: simulator-level ablation — how much do
+//!         stragglers hurt, and how much does speculation recover?
+//!
+//! Run: `cargo bench --bench noise_robustness`
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::noise::NoiseModel;
+use catla::hadoop::{simulate_job, ClusterSpec, SimCluster};
+use catla::optim::{cluster_objective, Method, ParamSpace};
+use catla::util::csv::Csv;
+use catla::workloads::wordcount;
+
+const BUDGET: usize = 40;
+const SEEDS: [u64; 4] = [5, 19, 33, 61];
+
+fn main() {
+    let workload = wordcount(10_240.0);
+    let spec = TuningSpec::fig2();
+    let space = ParamSpace::new(spec, HadoopConfig::default());
+    let methods = ["hooke-jeeves", "nelder-mead", "annealing", "bobyqa", "random"];
+    let mut csv = Csv::new(&["sigma", "optimizer", "seed", "best_runtime_s"]);
+
+    // ---- ABL3: noise sweep ----------------------------------------------
+    println!("# ABL3 — optimizer robustness vs runtime noise (budget {BUDGET}, {} seeds)\n", SEEDS.len());
+    println!("| sigma | {} |", methods.join(" | "));
+    println!("|{}|", "---|".repeat(methods.len() + 1));
+    for sigma in [0.0, 0.06, 0.12, 0.25, 0.40] {
+        let mut row = format!("| {sigma:.2} ");
+        for m in methods {
+            let mut bests = Vec::new();
+            for &seed in &SEEDS {
+                let cl = ClusterSpec {
+                    seed,
+                    noise: NoiseModel {
+                        sigma,
+                        ..NoiseModel::default()
+                    },
+                    ..ClusterSpec::default()
+                };
+                let mut cluster = SimCluster::new(cl);
+                let out = {
+                    let mut obj = cluster_objective(&mut cluster, &workload, 1);
+                    Method::from_name(m, seed).unwrap().run(&space, &mut obj, BUDGET)
+                };
+                // re-measure the chosen config on a clean cluster so the
+                // comparison is not polluted by lucky noise draws
+                let mut verify = SimCluster::new(ClusterSpec {
+                    seed: seed + 999,
+                    noise: NoiseModel::noiseless(),
+                    speculative: false,
+                    ..ClusterSpec::default()
+                });
+                let truth = verify
+                    .run_job(&catla::hadoop::JobSubmission {
+                        name: "verify".into(),
+                        workload: workload.clone(),
+                        config: out.best_config.clone(),
+                    })
+                    .runtime_s;
+                csv.push(&[
+                    format!("{sigma}"),
+                    m.to_string(),
+                    seed.to_string(),
+                    format!("{truth:.3}"),
+                ]);
+                bests.push(truth);
+            }
+            let mean = bests.iter().sum::<f64>() / bests.len() as f64;
+            row.push_str(&format!("| {mean:.1} "));
+        }
+        println!("{row}|");
+    }
+    println!("\n(cells: true noiseless runtime of the config each optimizer picked, mean over seeds — lower is better)");
+
+    // ---- ABL4: speculative execution --------------------------------------
+    println!("\n# ABL4 — speculative execution vs stragglers\n");
+    println!("| straggler prob | spec off (s) | spec on (s) | recovered |");
+    println!("|---|---|---|---|");
+    // map-bound configuration: with the default reduces=1 the job is
+    // reduce-bound and map speculation is irrelevant by construction
+    let mut cfg = HadoopConfig::default();
+    cfg.set_by_name("mapreduce.job.reduces", 32.0).unwrap();
+    cfg.set_by_name("mapreduce.task.io.sort.mb", 256.0).unwrap();
+    for p in [0.0, 0.02, 0.05, 0.10, 0.20] {
+        let mean_rt = |speculative: bool| -> f64 {
+            let cl = ClusterSpec {
+                speculative,
+                noise: NoiseModel {
+                    straggler_prob: p,
+                    ..NoiseModel::default()
+                },
+                ..ClusterSpec::default()
+            };
+            (0..30)
+                .map(|s| simulate_job(&cl, &workload, &cfg, s).runtime_s)
+                .sum::<f64>()
+                / 30.0
+        };
+        let off = mean_rt(false);
+        let on = mean_rt(true);
+        println!("| {p:.2} | {off:.1} | {on:.1} | {:.1}% |", (off - on) / off * 100.0);
+    }
+
+    std::fs::create_dir_all("history").unwrap();
+    csv.save(std::path::Path::new("history/noise_robustness.csv")).unwrap();
+    println!("\nwrote history/noise_robustness.csv");
+}

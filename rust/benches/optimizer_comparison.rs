@@ -1,0 +1,170 @@
+//! ABL1 + ABL2 — the comparisons the paper's design implies but does not
+//! tabulate:
+//!
+//!   ABL1  direct search vs DFO: every optimizer, equal budget, on the
+//!         Fig. 2 two-parameter space; metric = best runtime found and
+//!         evaluations-to-within-5%-of-the-grid-optimum.
+//!   ABL2  surrogate prescreening: BOBYQA vs BOBYQA seeded through the
+//!         analytic cost model (native mirror and, when artifacts exist,
+//!         the AOT JAX/Pallas model on PJRT).
+//!
+//! Run: `cargo bench --bench optimizer_comparison`
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::surrogate::{NativeScorer, Prescreen};
+use catla::optim::{cluster_objective, GridSearch, Method, ParamSpace, ALL_METHODS};
+use catla::runtime::{CostModelExec, Runtime};
+use catla::util::csv::Csv;
+use catla::workloads::wordcount;
+
+const BUDGET: usize = 40;
+const SEEDS: [u64; 5] = [2, 9, 23, 41, 77];
+
+fn main() {
+    let workload = wordcount(10_240.0);
+    let spec = TuningSpec::fig2();
+    let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+
+    // ---- reference: the full-grid optimum (256 evals) -------------------
+    let grid_best = {
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut obj = cluster_objective(&mut cluster, &workload, 1);
+        GridSearch.run(&space, &mut obj, usize::MAX)
+    };
+    println!(
+        "# ABL1/ABL2: budget {BUDGET} vs grid optimum {:.1}s (256 evals), {} seeds\n",
+        grid_best.best_value,
+        SEEDS.len()
+    );
+
+    let mut csv = Csv::new(&["optimizer", "seed", "best_runtime_s", "evals_to_5pct"]);
+
+    // ---- ABL1: every method --------------------------------------------
+    println!("## ABL1 — direct search vs DFO (mean over seeds)\n");
+    println!("| optimizer | family | best found (s) | evals to 5% of grid-opt |");
+    println!("|---|---|---|---|");
+    for name in ALL_METHODS {
+        if name == "grid" {
+            continue; // the reference itself
+        }
+        let mut bests = Vec::new();
+        let mut hits = Vec::new();
+        for &seed in &SEEDS {
+            let method = Method::from_name(name, seed).unwrap();
+            let mut cluster = SimCluster::new(ClusterSpec {
+                seed,
+                ..ClusterSpec::default()
+            });
+            let out = {
+                let mut obj = cluster_objective(&mut cluster, &workload, 1);
+                method.run(&space, &mut obj, BUDGET)
+            };
+            let hit = out.evals_to_within(grid_best.best_value, 0.05);
+            csv.push(&[
+                name.to_string(),
+                seed.to_string(),
+                format!("{:.3}", out.best_value),
+                hit.map(|h| h.to_string()).unwrap_or_else(|| "-".into()),
+            ]);
+            bests.push(out.best_value);
+            if let Some(h) = hit {
+                hits.push(h as f64);
+            }
+        }
+        let mean_best = bests.iter().sum::<f64>() / bests.len() as f64;
+        let family = if Method::from_name(name, 0).unwrap().is_direct_search() {
+            "direct"
+        } else {
+            "DFO"
+        };
+        let hit_str = if hits.is_empty() {
+            format!("never (in {BUDGET})")
+        } else {
+            format!("{:.1} ({}/{} seeds)", hits.iter().sum::<f64>() / hits.len() as f64, hits.len(), SEEDS.len())
+        };
+        println!("| {name} | {family} | {mean_best:.1} | {hit_str} |");
+    }
+    println!(
+        "| grid (reference) | direct | {:.1} | 256 evals always |",
+        grid_best.best_value
+    );
+
+    // ---- ABL2: prescreening ---------------------------------------------
+    println!("\n## ABL2 — surrogate prescreening (BOBYQA, mean over seeds)\n");
+    println!("| variant | best found (s) | evals to 5% of grid-opt |");
+    println!("|---|---|---|");
+
+    let mut run_variant = |label: &str, prescreen: Option<&str>| {
+        let mut bests = Vec::new();
+        let mut hits: Vec<f64> = Vec::new();
+        for &seed in &SEEDS {
+            let mut cluster = SimCluster::new(ClusterSpec {
+                seed,
+                ..ClusterSpec::default()
+            });
+            let out = {
+                let mut obj = cluster_objective(&mut cluster, &workload, 1);
+                match prescreen {
+                    None => Method::Bobyqa { seed }.run(&space, &mut obj, BUDGET),
+                    Some("native") => {
+                        let scorer = NativeScorer {
+                            workload: workload.clone(),
+                            cluster: ClusterSpec::default(),
+                        };
+                        let mut p = Prescreen::new(scorer);
+                        p.seed = seed;
+                        p.run_bobyqa(&space, &mut obj, BUDGET).unwrap()
+                    }
+                    Some("pjrt") => {
+                        let rt = Runtime::open_default().expect("make artifacts first");
+                        let scorer =
+                            CostModelExec::load(&rt, &workload, &ClusterSpec::default()).unwrap();
+                        let mut p = Prescreen::new(scorer);
+                        p.seed = seed;
+                        p.run_bobyqa(&space, &mut obj, BUDGET).unwrap()
+                    }
+                    _ => unreachable!(),
+                }
+            };
+            csv.push(&[
+                label.to_string(),
+                seed.to_string(),
+                format!("{:.3}", out.best_value),
+                out.evals_to_within(grid_best.best_value, 0.05)
+                    .map(|h| h.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            bests.push(out.best_value);
+            if let Some(h) = out.evals_to_within(grid_best.best_value, 0.05) {
+                hits.push(h as f64);
+            }
+        }
+        let mean_best = bests.iter().sum::<f64>() / bests.len() as f64;
+        let hit_str = if hits.is_empty() {
+            format!("never (in {BUDGET})")
+        } else {
+            format!(
+                "{:.1} ({}/{} seeds)",
+                hits.iter().sum::<f64>() / hits.len() as f64,
+                hits.len(),
+                SEEDS.len()
+            )
+        };
+        println!("| {label} | {mean_best:.1} | {hit_str} |");
+    };
+
+    run_variant("bobyqa (no prescreen)", None);
+    run_variant("bobyqa + native prescreen", Some("native"));
+    if Runtime::open_default().is_ok() {
+        run_variant("bobyqa + PJRT prescreen (L1/L2 artifacts)", Some("pjrt"));
+    } else {
+        println!("| bobyqa + PJRT prescreen | skipped (run `make artifacts`) | - |");
+    }
+
+    std::fs::create_dir_all("history").unwrap();
+    csv.save(std::path::Path::new("history/optimizer_comparison.csv"))
+        .unwrap();
+    println!("\nwrote history/optimizer_comparison.csv");
+}

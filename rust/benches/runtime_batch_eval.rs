@@ -1,0 +1,85 @@
+//! PERF1b — batched config scoring through the AOT JAX/Pallas artifacts
+//! on XLA PJRT vs the native rust mirror: configs/second across batch
+//! sizes. This is the surrogate-prescreening hot path (L1+L2+runtime).
+//!
+//! Run: `make artifacts && cargo bench --bench runtime_batch_eval`
+
+use catla::config::params::{HadoopConfig, PARAMS};
+use catla::hadoop::{costmodel, ClusterSpec};
+use catla::runtime::{CostModelExec, QuadraticExec, Runtime};
+use catla::util::bench::Bench;
+use catla::util::rng::Rng;
+use catla::workloads::wordcount;
+
+fn random_configs(n: usize, seed: u64) -> Vec<HadoopConfig> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut c = HadoopConfig::default();
+            for p in PARAMS.iter() {
+                c.set(p.index, rng.range_f64(p.lo, p.hi));
+            }
+            c
+        })
+        .collect()
+}
+
+fn main() {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime_batch_eval: {e}");
+            return;
+        }
+    };
+    let wl = wordcount(10_240.0);
+    let cl = ClusterSpec::default();
+    let mut exec = CostModelExec::load(&rt, &wl, &cl).expect("compile artifacts");
+    let mut bench = Bench::new();
+
+    for n in [128usize, 1024, 4096] {
+        let cfgs = random_configs(n, n as u64);
+        bench.run_throughput(
+            &format!("PJRT cost model, batch {n}"),
+            n as f64,
+            "configs",
+            || exec.predict(&cfgs).unwrap().len(),
+        );
+        bench.run_throughput(
+            &format!("native rust mirror, batch {n}"),
+            n as f64,
+            "configs",
+            || {
+                cfgs.iter()
+                    .map(|c| costmodel::predict_runtime(c, &wl, &cl))
+                    .sum::<f64>()
+            },
+        );
+    }
+
+    // quadratic surrogate evaluation (BOBYQA prescreen inner op)
+    let mut quad = QuadraticExec::load(&rt).expect("compile quadratic artifact");
+    let mut rng = Rng::new(5);
+    let d = 8;
+    let xs: Vec<Vec<f64>> = (0..256)
+        .map(|_| (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+        .collect();
+    let g: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+    let mut h = vec![vec![0.0; d]; d];
+    for i in 0..d {
+        for j in 0..=i {
+            let v = rng.range_f64(-1.0, 1.0);
+            h[i][j] = v;
+            h[j][i] = v;
+        }
+    }
+    bench.run_throughput("PJRT quadratic surrogate, batch 256", 256.0, "points", || {
+        quad.eval(&xs, &g, &h, 0.5).unwrap().len()
+    });
+
+    bench.print_table("PERF1b — batched scoring throughput");
+    println!(
+        "note: PJRT wins on accelerator hardware; on this CPU-PJRT testbed the\n\
+         native mirror bounds the achievable speedup — see EXPERIMENTS.md §Perf."
+    );
+}

@@ -1,0 +1,84 @@
+//! PERF1a — cluster-simulator throughput: simulated jobs/second and
+//! task-throughput across cluster and input scales. The simulator is the
+//! tuning loop's inner cost, so this bounds end-to-end tuning speed.
+//!
+//! Run: `cargo bench --bench simulator_throughput`
+
+use catla::config::params::{HadoopConfig, P_REDUCES, P_SPLIT_MB};
+use catla::hadoop::{simulate_job, ClusterSpec, SimCluster, JobSubmission};
+use catla::util::bench::Bench;
+use catla::workloads::{terasort, wordcount};
+
+fn main() {
+    let mut bench = Bench::new();
+
+    // scale over input size (task count grows linearly)
+    for input_mb in [1024.0, 10_240.0, 102_400.0] {
+        let wl = wordcount(input_mb);
+        let cl = ClusterSpec::default();
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_REDUCES, 16.0);
+        let tasks = (input_mb / 128.0).ceil() + 16.0;
+        let mut seed = 0u64;
+        bench.run_throughput(
+            &format!("simulate wordcount {:.0} GiB ({} tasks)", input_mb / 1024.0, tasks as u64),
+            tasks,
+            "tasks",
+            || {
+                seed += 1;
+                simulate_job(&cl, &wl, &cfg, seed).runtime_s
+            },
+        );
+    }
+
+    // scale over cluster size
+    for nodes in [4u32, 16, 64, 256] {
+        let wl = terasort(10_240.0);
+        let cl = ClusterSpec {
+            nodes,
+            ..ClusterSpec::default()
+        };
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_REDUCES, (nodes * 2) as f64);
+        let mut seed = 0u64;
+        bench.run_throughput(
+            &format!("simulate terasort 10 GiB on {nodes} nodes"),
+            1.0,
+            "jobs",
+            || {
+                seed += 1;
+                simulate_job(&cl, &wl, &cfg, seed).runtime_s
+            },
+        );
+    }
+
+    // many-task stress: small splits -> 1600 map tasks
+    {
+        let wl = wordcount(102_400.0);
+        let cl = ClusterSpec::default();
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_SPLIT_MB, 64.0);
+        cfg.set(P_REDUCES, 64.0);
+        let mut seed = 0u64;
+        bench.run_throughput("simulate 1600-map job", 1664.0, "tasks", || {
+            seed += 1;
+            simulate_job(&cl, &wl, &cfg, seed).runtime_s
+        });
+    }
+
+    // the full submit/poll/fetch lifecycle (Task Runner's path)
+    {
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let wl = wordcount(2048.0);
+        bench.run_throughput("SimCluster run_job lifecycle", 1.0, "jobs", || {
+            cluster.run_job(&JobSubmission {
+                name: "bench".into(),
+                workload: wl.clone(),
+                config: HadoopConfig::default(),
+            })
+            .runtime_s
+        });
+    }
+
+    bench.print_table("PERF1a — simulator throughput");
+}

@@ -1,0 +1,153 @@
+//! Log (re-)aggregation — "When the tuning process is stopped in the
+//! middle of tuning, the log aggregation is not finished. Therefore, the
+//! user can start this command to re-aggregate existing logs from
+//! /history folder." (§II.C.4)
+//!
+//! Scans a project folder for every downloaded `*.history.json`
+//! (including per-job subfolders left by the Project Runner), rebuilds
+//! `history/jobs.csv` from scratch, and reconciles the tuning log's
+//! best-so-far column.
+
+use std::path::{Path, PathBuf};
+
+use crate::catla::history::History;
+use crate::catla::metrics::JobMetrics;
+use crate::util::csv::Csv;
+
+/// What re-aggregation found and rebuilt.
+#[derive(Debug, Default)]
+pub struct AggregateReport {
+    pub histories_found: usize,
+    pub jobs_csv_rows: usize,
+    pub tuning_rows_repaired: usize,
+}
+
+/// Recursively collect `*.history.json` under `dir`.
+fn find_histories(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            find_histories(&p, out);
+        } else if p
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.ends_with("history.json"))
+            .unwrap_or(false)
+        {
+            out.push(p);
+        }
+    }
+}
+
+/// Re-aggregate a project folder.
+pub fn aggregate(project_dir: &Path) -> Result<AggregateReport, String> {
+    let mut report = AggregateReport::default();
+    let results = project_dir.join("downloaded_results");
+    let mut histories = Vec::new();
+    if results.is_dir() {
+        find_histories(&results, &mut histories);
+    }
+    report.histories_found = histories.len();
+
+    // rebuild jobs.csv from scratch so partial rows never duplicate
+    let history = History::open(project_dir).map_err(|e| e.to_string())?;
+    let jobs_path = history.dir.join(crate::catla::history::JOBS_CSV);
+    if jobs_path.is_file() {
+        std::fs::remove_file(&jobs_path).map_err(|e| e.to_string())?;
+    }
+    for h in &histories {
+        let m = JobMetrics::from_file(h)?;
+        history.append_job(&m)?;
+        report.jobs_csv_rows += 1;
+    }
+
+    // repair the tuning log's best_so_far column if one exists
+    let tuning_path = history.dir.join(crate::catla::history::TUNING_CSV);
+    if tuning_path.is_file() {
+        let mut csv = Csv::load(&tuning_path)?;
+        let vi = csv
+            .col_index("runtime_s")
+            .ok_or("tuning log missing runtime_s")?;
+        let bi = csv
+            .col_index("best_so_far")
+            .ok_or("tuning log missing best_so_far")?;
+        let mut best = f64::INFINITY;
+        for row in csv.rows.iter_mut() {
+            let v: f64 = row[vi].parse().map_err(|_| "bad runtime cell")?;
+            best = best.min(v);
+            let fixed = format!("{best:.3}");
+            if row[bi] != fixed {
+                row[bi] = fixed;
+                report.tuning_rows_repaired += 1;
+            }
+        }
+        csv.save(&tuning_path).map_err(|e| e.to_string())?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::project::{create_template, Project, ProjectKind};
+    use crate::catla::task_runner::TaskRunner;
+    use crate::hadoop::{ClusterSpec, SimCluster};
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-agg-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn rebuilds_jobs_csv_idempotently() {
+        let dir = tmp("rebuild");
+        create_template(&dir, ProjectKind::Task, "wordcount", 1024.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut tr = TaskRunner::new(&mut cluster);
+        tr.run(&project).unwrap();
+        tr.run(&project).unwrap();
+
+        let r1 = aggregate(&dir).unwrap();
+        assert_eq!(r1.histories_found, 2);
+        assert_eq!(r1.jobs_csv_rows, 2);
+        // idempotent: re-running does not duplicate
+        let r2 = aggregate(&dir).unwrap();
+        assert_eq!(r2.jobs_csv_rows, 2);
+        let h = History::open(&dir).unwrap();
+        assert_eq!(h.load_jobs().unwrap().rows.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repairs_corrupted_best_so_far() {
+        let dir = tmp("repair");
+        create_template(&dir, ProjectKind::Task, "grep", 256.0).unwrap();
+        let history = History::open(&dir).unwrap();
+        // simulate an interrupted tuning log with a broken best column
+        let csv_text = "iter,optimizer,runtime_s,best_so_far,mapreduce.job.reduces\n\
+                        1,bobyqa,120.000,120.000,4\n\
+                        2,bobyqa,100.000,999.000,8\n\
+                        3,bobyqa,110.000,0.000,12\n";
+        std::fs::write(history.dir.join("tuning_log.csv"), csv_text).unwrap();
+        let report = aggregate(&dir).unwrap();
+        assert_eq!(report.tuning_rows_repaired, 2);
+        let csv = history.load_tuning_log().unwrap();
+        assert_eq!(csv.col_f64("best_so_far").unwrap(), vec![120.0, 100.0, 100.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_project_reports_zero() {
+        let dir = tmp("empty");
+        create_template(&dir, ProjectKind::Task, "join", 128.0).unwrap();
+        let r = aggregate(&dir).unwrap();
+        assert_eq!(r.histories_found, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

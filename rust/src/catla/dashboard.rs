@@ -1,0 +1,122 @@
+//! Terminal dashboard — the CatlaUI feature set ("run, monitor and tune a
+//! MapReduce without Windows commands") rendered as a static terminal
+//! report over a project folder: recent jobs, tuning state, best config,
+//! convergence chart.
+
+use std::path::Path;
+
+use crate::catla::history::History;
+use crate::catla::project::{Project, ProjectKind};
+use crate::catla::visualize;
+
+/// Render the dashboard for a project folder.
+pub fn render(dir: &Path) -> Result<String, String> {
+    let project = Project::load(dir)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "┌─ Catla dashboard ─ {} ({:?} project)\n",
+        dir.display(),
+        project.kind
+    ));
+    let wl = project.workload()?;
+    out.push_str(&format!(
+        "│ workload: {} ({:.1} GiB input)\n",
+        wl.name,
+        wl.input_mb / 1024.0
+    ));
+    out.push_str(&format!(
+        "│ cluster : {} nodes (sim), seed {}\n",
+        project.env.get_u64("sim.nodes", 16),
+        project.env.get_u64("sim.seed", 42)
+    ));
+
+    let history = History::open(dir).map_err(|e| e.to_string())?;
+
+    // recent jobs
+    match history.load_jobs() {
+        Ok(jobs) if !jobs.rows.is_empty() => {
+            out.push_str(&format!("│\n│ recent jobs ({} total):\n", jobs.rows.len()));
+            let id_i = jobs.col_index("job_id").unwrap_or(0);
+            let rt_i = jobs.col_index("runtime_s").unwrap_or(2);
+            for row in jobs.rows.iter().rev().take(5) {
+                out.push_str(&format!("│   {:<28} {:>9}s\n", row[id_i], row[rt_i]));
+            }
+        }
+        _ => out.push_str("│\n│ no completed jobs yet (run `catla task`)\n"),
+    }
+
+    // tuning state
+    match history.load_tuning_log() {
+        Ok(log) if !log.rows.is_empty() => {
+            let conv = History::convergence_from_log(&log)?;
+            let best = conv.last().map(|(_, b)| *b).unwrap_or(f64::NAN);
+            out.push_str(&format!(
+                "│\n│ tuning: {} evaluations, best {:.1}s\n│\n",
+                log.rows.len(),
+                best
+            ));
+            for line in visualize::line_chart("│ convergence", &conv, 48, 8).lines() {
+                out.push_str(&format!("│ {line}\n"));
+            }
+        }
+        _ => {
+            if project.kind == ProjectKind::Tuning {
+                out.push_str("│\n│ no tuning log yet (run `catla tuning`)\n");
+            }
+        }
+    }
+    out.push_str("└─\n");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::project::{create_template, ProjectKind};
+    use crate::catla::task_runner::TaskRunner;
+    use crate::hadoop::{ClusterSpec, SimCluster};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-dash-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn renders_empty_project() {
+        let dir = tmp("empty");
+        create_template(&dir, ProjectKind::Task, "wordcount", 512.0).unwrap();
+        let s = render(&dir).unwrap();
+        assert!(s.contains("no completed jobs yet"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn renders_jobs_and_tuning() {
+        let dir = tmp("full");
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 512.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        TaskRunner::new(&mut cluster).run(&project).unwrap();
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=bobyqa\nbudget=10\nseed=1\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        crate::catla::OptimizerRunner::new(&mut cluster)
+            .run(&project)
+            .unwrap();
+        let s = render(&dir).unwrap();
+        assert!(s.contains("recent jobs"));
+        assert!(s.contains("tuning: 10 evaluations"));
+        assert!(s.contains("convergence"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_project_is_error() {
+        assert!(render(Path::new("/nonexistent")).is_err());
+    }
+}

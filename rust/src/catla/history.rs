@@ -1,0 +1,242 @@
+//! The `/history` folder: CSV summaries of every run in a project.
+//!
+//! "After job completion, the summaries of job metrics are in the sub
+//! folder /history of the project root ... you can visualize the results
+//! from the information of *.csv files" (§II.C.5). Tuning logs are
+//! written incrementally per evaluation so an interrupted run can be
+//! re-aggregated (§II.C.4) or resumed.
+
+use std::path::{Path, PathBuf};
+
+use crate::catla::metrics::JobMetrics;
+use crate::config::spec::TuningSpec;
+use crate::optim::result::TuningOutcome;
+use crate::util::csv::Csv;
+
+pub const JOBS_CSV: &str = "jobs.csv";
+pub const TUNING_CSV: &str = "tuning_log.csv";
+pub const SUMMARY_CSV: &str = "summary.csv";
+
+/// Handle over a project's history directory.
+pub struct History {
+    pub dir: PathBuf,
+}
+
+impl History {
+    pub fn open(project_dir: &Path) -> std::io::Result<History> {
+        let dir = project_dir.join("history");
+        std::fs::create_dir_all(&dir)?;
+        Ok(History { dir })
+    }
+
+    fn jobs_header() -> Vec<&'static str> {
+        vec![
+            "job_id",
+            "workload",
+            "runtime_s",
+            "map_phase_s",
+            "reduce_phase_s",
+            "maps",
+            "reduces",
+            "failed_attempts",
+            "data_local_fraction",
+            "shuffle_mb",
+        ]
+    }
+
+    /// Append one completed job to `jobs.csv` (creates it on first use).
+    pub fn append_job(&self, m: &JobMetrics) -> Result<(), String> {
+        let path = self.dir.join(JOBS_CSV);
+        let mut csv = if path.is_file() {
+            Csv::load(&path)?
+        } else {
+            Csv::new(&Self::jobs_header())
+        };
+        csv.push_row(vec![
+            m.job_id.clone(),
+            m.workload.clone(),
+            format!("{:.3}", m.runtime_s),
+            format!("{:.3}", m.map_phase_s),
+            format!("{:.3}", m.reduce_phase_s),
+            m.maps.to_string(),
+            m.reduces.to_string(),
+            m.failed_attempts.to_string(),
+            format!("{:.4}", m.data_local_fraction),
+            format!("{:.1}", m.shuffle_mb),
+        ]);
+        csv.save(&path).map_err(|e| e.to_string())
+    }
+
+    pub fn load_jobs(&self) -> Result<Csv, String> {
+        Csv::load(&self.dir.join(JOBS_CSV))
+    }
+
+    fn tuning_header(spec: &TuningSpec) -> Vec<String> {
+        let mut h = vec![
+            "iter".to_string(),
+            "optimizer".to_string(),
+            "runtime_s".to_string(),
+            "best_so_far".to_string(),
+        ];
+        for r in &spec.ranges {
+            h.push(r.meta.name.to_string());
+        }
+        h
+    }
+
+    /// Write (overwrite) the full tuning log for an outcome.
+    pub fn write_tuning_log(
+        &self,
+        spec: &TuningSpec,
+        outcome: &TuningOutcome,
+    ) -> Result<PathBuf, String> {
+        let path = self.dir.join(TUNING_CSV);
+        let header = Self::tuning_header(spec);
+        let mut csv = Csv {
+            header: header.clone(),
+            rows: Vec::new(),
+        };
+        for rec in &outcome.records {
+            let mut row = vec![
+                rec.iter.to_string(),
+                outcome.optimizer.clone(),
+                format!("{:.3}", rec.value),
+                format!("{:.3}", rec.best_so_far),
+            ];
+            for r in &spec.ranges {
+                row.push(format!("{}", rec.config.get(r.meta.index)));
+            }
+            csv.push_row(row);
+        }
+        csv.save(&path).map_err(|e| e.to_string())?;
+        Ok(path)
+    }
+
+    /// Append a summary row (one per tuning run) to `summary.csv`.
+    pub fn append_summary(
+        &self,
+        spec: &TuningSpec,
+        outcome: &TuningOutcome,
+    ) -> Result<(), String> {
+        let path = self.dir.join(SUMMARY_CSV);
+        let mut header = vec![
+            "optimizer".to_string(),
+            "evals".to_string(),
+            "best_runtime_s".to_string(),
+        ];
+        for r in &spec.ranges {
+            header.push(format!("best.{}", r.meta.name));
+        }
+        let mut csv = if path.is_file() {
+            Csv::load(&path)?
+        } else {
+            Csv {
+                header: header.clone(),
+                rows: Vec::new(),
+            }
+        };
+        if csv.header != header {
+            return Err("summary.csv header mismatch (different params.spec?)".into());
+        }
+        let mut row = vec![
+            outcome.optimizer.clone(),
+            outcome.evals().to_string(),
+            format!("{:.3}", outcome.best_value),
+        ];
+        for r in &spec.ranges {
+            row.push(format!("{}", outcome.best_config.get(r.meta.index)));
+        }
+        csv.push_row(row);
+        csv.save(&path).map_err(|e| e.to_string())
+    }
+
+    /// Load the tuning log back (resume / aggregate / visualize).
+    pub fn load_tuning_log(&self) -> Result<Csv, String> {
+        Csv::load(&self.dir.join(TUNING_CSV))
+    }
+
+    /// Convergence series (iter, best_so_far) from a stored log.
+    pub fn convergence_from_log(csv: &Csv) -> Result<Vec<(usize, f64)>, String> {
+        let iters = csv.col_f64("iter").ok_or("no iter column")?;
+        let best = csv.col_f64("best_so_far").ok_or("no best_so_far column")?;
+        Ok(iters
+            .into_iter()
+            .zip(best)
+            .map(|(i, b)| (i as usize, b))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::optim::result::Recorder;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-hist-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn outcome(spec: &TuningSpec, values: &[f64]) -> TuningOutcome {
+        let mut rec = Recorder::new();
+        for (i, v) in values.iter().enumerate() {
+            let mut cfg = HadoopConfig::default();
+            cfg.set(spec.ranges[0].meta.index, 2.0 + i as f64 * 2.0);
+            rec.record(vec![0.5; spec.dims()], cfg, *v);
+        }
+        rec.finish("bobyqa")
+    }
+
+    #[test]
+    fn tuning_log_roundtrip() {
+        let dir = tmp("log");
+        let h = History::open(&dir).unwrap();
+        let spec = TuningSpec::fig2();
+        let out = outcome(&spec, &[120.0, 100.0, 110.0, 90.0]);
+        h.write_tuning_log(&spec, &out).unwrap();
+        let csv = h.load_tuning_log().unwrap();
+        assert_eq!(csv.rows.len(), 4);
+        let conv = History::convergence_from_log(&csv).unwrap();
+        assert_eq!(conv.last().unwrap().1, 90.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summary_appends_across_runs() {
+        let dir = tmp("summary");
+        let h = History::open(&dir).unwrap();
+        let spec = TuningSpec::fig2();
+        h.append_summary(&spec, &outcome(&spec, &[120.0, 100.0])).unwrap();
+        h.append_summary(&spec, &outcome(&spec, &[130.0, 95.0])).unwrap();
+        let csv = Csv::load(&h.dir.join(SUMMARY_CSV)).unwrap();
+        assert_eq!(csv.rows.len(), 2);
+        assert_eq!(csv.col_f64("best_runtime_s").unwrap(), vec![100.0, 95.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn jobs_csv_accumulates() {
+        let dir = tmp("jobs");
+        let h = History::open(&dir).unwrap();
+        let m = JobMetrics {
+            job_id: "job_1".into(),
+            workload: "wordcount".into(),
+            runtime_s: 100.0,
+            map_phase_s: 60.0,
+            reduce_phase_s: 40.0,
+            maps: 80,
+            reduces: 8,
+            failed_attempts: 0,
+            data_local_fraction: 0.9,
+            shuffle_mb: 1000.0,
+            config: vec![],
+        };
+        h.append_job(&m).unwrap();
+        h.append_job(&m).unwrap();
+        assert_eq!(h.load_jobs().unwrap().rows.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,152 @@
+//! Metrics extraction: parse downloaded artifacts back into numbers.
+//!
+//! "It is difficult for general users to execute a MapReduce job and
+//! obtain metrics of performance after job completion" — this module is
+//! the answering half: given a `downloaded_results/` folder it recovers
+//! running time, phase milestones and counters from the history JSON.
+
+use std::path::Path;
+
+use crate::hadoop::joblogs::{parse_history, ParsedHistory};
+
+/// Summary metrics of one completed job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobMetrics {
+    pub job_id: String,
+    pub workload: String,
+    pub runtime_s: f64,
+    pub map_phase_s: f64,
+    pub reduce_phase_s: f64,
+    pub maps: u64,
+    pub reduces: u64,
+    pub failed_attempts: u64,
+    pub data_local_fraction: f64,
+    pub shuffle_mb: f64,
+    pub config: Vec<(String, f64)>,
+}
+
+impl JobMetrics {
+    pub fn from_history(h: &ParsedHistory) -> JobMetrics {
+        let total_loc = h.counters.data_local_maps
+            + h.counters.rack_local_maps
+            + h.counters.off_rack_maps;
+        JobMetrics {
+            job_id: h.job_id.clone(),
+            workload: h.workload.clone(),
+            runtime_s: h.runtime_s,
+            map_phase_s: h.map_phase_end_s,
+            reduce_phase_s: (h.runtime_s - h.map_phase_end_s).max(0.0),
+            maps: h.counters.total_maps,
+            reduces: h.counters.total_reduces,
+            failed_attempts: h.counters.failed_task_attempts,
+            data_local_fraction: if total_loc > 0 {
+                h.counters.data_local_maps as f64 / total_loc as f64
+            } else {
+                0.0
+            },
+            shuffle_mb: h.counters.shuffle_mb,
+            config: h.config.clone(),
+        }
+    }
+
+    /// Parse from a downloaded `history.json` file.
+    pub fn from_file(path: &Path) -> Result<JobMetrics, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Ok(Self::from_history(&parse_history(&text)?))
+    }
+
+    /// Scan a `downloaded_results/` folder (or any folder with one or
+    /// more `*history.json`) and parse every history document found.
+    pub fn scan_dir(dir: &Path) -> Result<Vec<JobMetrics>, String> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        let mut paths: Vec<_> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.ends_with("history.json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        for p in paths {
+            out.push(Self::from_file(&p)?);
+        }
+        Ok(out)
+    }
+
+    /// Value of one Hadoop parameter in the job's configuration echo.
+    pub fn config_value(&self, param: &str) -> Option<f64> {
+        self.config
+            .iter()
+            .find(|(k, _)| k == param)
+            .map(|(_, v)| *v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::hadoop::joblogs::to_history_json;
+    use crate::hadoop::{simulate_job, ClusterSpec};
+    use crate::workloads::wordcount;
+
+    fn metrics() -> JobMetrics {
+        let r = simulate_job(
+            &ClusterSpec::default(),
+            &wordcount(2048.0),
+            &HadoopConfig::default(),
+            1,
+        );
+        let text = to_history_json("job_42", &r).to_string();
+        JobMetrics::from_history(&parse_history(&text).unwrap())
+    }
+
+    #[test]
+    fn phases_partition_runtime() {
+        let m = metrics();
+        assert!(m.map_phase_s > 0.0);
+        assert!(m.reduce_phase_s >= 0.0);
+        assert!(m.map_phase_s <= m.runtime_s);
+    }
+
+    #[test]
+    fn config_echo_readable() {
+        let m = metrics();
+        assert_eq!(m.config_value("mapreduce.job.reduces"), Some(1.0));
+        assert!(m.config_value("not.a.param").is_none());
+    }
+
+    #[test]
+    fn locality_fraction_in_unit_range() {
+        let m = metrics();
+        assert!((0.0..=1.0).contains(&m.data_local_fraction));
+    }
+
+    #[test]
+    fn scan_dir_finds_histories() {
+        let dir = std::env::temp_dir().join(format!("catla-scan-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let r = simulate_job(
+            &ClusterSpec::default(),
+            &wordcount(1024.0),
+            &HadoopConfig::default(),
+            2,
+        );
+        for i in 0..3 {
+            std::fs::write(
+                dir.join(format!("job_{i}.history.json")),
+                to_history_json(&format!("job_{i}"), &r).to_string(),
+            )
+            .unwrap();
+        }
+        std::fs::write(dir.join("unrelated.txt"), "x").unwrap();
+        let ms = JobMetrics::scan_dir(&dir).unwrap();
+        assert_eq!(ms.len(), 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

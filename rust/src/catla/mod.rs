@@ -1,0 +1,26 @@
+//! The Catla system proper — the paper's contribution (§II.A):
+//! [`task_runner::TaskRunner`], [`project_runner::ProjectRunner`] and
+//! [`optimizer_runner::OptimizerRunner`] over rule-based project
+//! templates ([`project`]), with `/history` CSV summaries ([`history`]),
+//! log re-aggregation ([`aggregate`]), metrics mining ([`metrics`]) and
+//! terminal visualization ([`visualize`]).
+
+pub mod aggregate;
+pub mod dashboard;
+pub mod history;
+pub mod metrics;
+pub mod multi_job;
+pub mod optimizer_runner;
+pub mod project;
+pub mod project_runner;
+pub mod resume;
+pub mod task_runner;
+pub mod visualize;
+pub mod workflow;
+
+pub use history::History;
+pub use metrics::JobMetrics;
+pub use optimizer_runner::{OptimizerRunner, TuningSettings};
+pub use project::{create_template, Project, ProjectKind};
+pub use project_runner::ProjectRunner;
+pub use task_runner::TaskRunner;

@@ -1,0 +1,186 @@
+//! Multi-job tuning (extension, DESIGN.md §7): find ONE Hadoop
+//! configuration that minimizes the aggregate running time of a whole job
+//! group — the realistic shared-cluster scenario where `mapred-site.xml`
+//! is set once for a mixed workload, not per job.
+
+use crate::catla::history::History;
+use crate::catla::project::Project;
+use crate::catla::project_runner::{parse_job_line, GroupJob};
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{JobSubmission, SimCluster};
+use crate::optim::{Method, ParamSpace, TuningOutcome};
+
+/// How per-job runtimes combine into one objective value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupMetric {
+    /// Total cluster seconds (throughput view).
+    Sum,
+    /// Worst job (tail/SLO view).
+    Max,
+}
+
+impl GroupMetric {
+    pub fn from_name(s: &str) -> Result<GroupMetric, String> {
+        match s {
+            "sum" | "total" => Ok(GroupMetric::Sum),
+            "max" | "worst" => Ok(GroupMetric::Max),
+            other => Err(format!("unknown group.metric {other:?} (sum|max)")),
+        }
+    }
+
+    fn combine(&self, runtimes: &[f64]) -> f64 {
+        match self {
+            GroupMetric::Sum => runtimes.iter().sum(),
+            GroupMetric::Max => runtimes.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+}
+
+/// Objective over a job group: run every job with the candidate config.
+pub fn group_objective<'a>(
+    cluster: &'a mut SimCluster,
+    jobs: &'a [GroupJob],
+    metric: GroupMetric,
+) -> impl FnMut(&HadoopConfig) -> f64 + 'a {
+    move |cfg: &HadoopConfig| {
+        let runtimes: Vec<f64> = jobs
+            .iter()
+            .map(|j| {
+                cluster
+                    .run_job(&JobSubmission {
+                        name: j.name.clone(),
+                        workload: j.workload.clone(),
+                        config: cfg.clone(),
+                    })
+                    .runtime_s
+            })
+            .collect();
+        metric.combine(&runtimes)
+    }
+}
+
+/// Tune one shared configuration for a project's whole `jobs.list`.
+/// Requires both `jobs.list` and `params.spec` in the project folder;
+/// `tuning.properties` may set `group.metric=sum|max`.
+pub fn tune_group(
+    cluster: &mut SimCluster,
+    project: &Project,
+) -> Result<TuningOutcome, String> {
+    if project.jobs.is_empty() {
+        return Err("multi-job tuning needs a jobs.list".into());
+    }
+    let spec = project
+        .spec
+        .clone()
+        .ok_or("multi-job tuning needs params.spec")?;
+    let jobs: Vec<GroupJob> = project
+        .jobs
+        .iter()
+        .map(|l| parse_job_line(l))
+        .collect::<Result<_, _>>()?;
+
+    let (optimizer, budget, seed, metric) = match &project.tuning {
+        Some(t) => (
+            t.get("optimizer").unwrap_or("bobyqa").to_string(),
+            t.get("budget").and_then(|s| s.parse().ok()).unwrap_or(40),
+            t.get("seed").and_then(|s| s.parse().ok()).unwrap_or(7),
+            GroupMetric::from_name(t.get("group.metric").unwrap_or("sum"))?,
+        ),
+        None => ("bobyqa".to_string(), 40, 7, GroupMetric::Sum),
+    };
+
+    let space = ParamSpace::new(spec.clone(), project.base_config()?);
+    let method = Method::from_name(&optimizer, seed)?;
+    let mut outcome = {
+        let mut obj = group_objective(cluster, &jobs, metric);
+        method.run(&space, &mut obj, budget)
+    };
+    outcome.optimizer = format!("{}[group-{:?}x{}]", outcome.optimizer, metric, jobs.len());
+
+    let history = History::open(&project.dir).map_err(|e| e.to_string())?;
+    history.write_tuning_log(&spec, &outcome)?;
+    history.append_summary(&spec, &outcome)?;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::project::{create_template, ProjectKind};
+    use crate::hadoop::ClusterSpec;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-multi-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn group_project(name: &str, metric: &str) -> PathBuf {
+        let dir = tmp(name);
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 2048.0).unwrap();
+        std::fs::write(
+            dir.join("jobs.list"),
+            "wc wordcount 2048\nsort terasort 2048\ngrep grep 2048\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("tuning.properties"),
+            format!("optimizer=bobyqa\nbudget=20\nseed=3\ngroup.metric={metric}\n"),
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn metric_combinators() {
+        assert_eq!(GroupMetric::Sum.combine(&[1.0, 2.0, 3.0]), 6.0);
+        assert_eq!(GroupMetric::Max.combine(&[1.0, 5.0, 3.0]), 5.0);
+        assert!(GroupMetric::from_name("median").is_err());
+    }
+
+    #[test]
+    fn tunes_shared_config_over_group() {
+        let dir = group_project("sum", "sum");
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = tune_group(&mut cluster, &project).unwrap();
+        assert!(out.optimizer.contains("group-Sum"));
+        assert!(out.evals() <= 20);
+        // shared tuned config must beat defaults on the group objective
+        let jobs: Vec<GroupJob> = project
+            .jobs
+            .iter()
+            .map(|l| parse_job_line(l).unwrap())
+            .collect();
+        let mut verify = SimCluster::new(ClusterSpec::default());
+        let avg = |cluster: &mut SimCluster, cfg: &HadoopConfig| -> f64 {
+            let mut obj = group_objective(cluster, &jobs, GroupMetric::Sum);
+            (0..5).map(|_| obj(cfg)).sum::<f64>() / 5.0
+        };
+        let tuned = avg(&mut verify, &out.best_config);
+        let default = avg(&mut verify, &HadoopConfig::default());
+        assert!(tuned < default, "group-tuned {tuned:.1} vs default {default:.1}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn max_metric_runs() {
+        let dir = group_project("max", "max");
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = tune_group(&mut cluster, &project).unwrap();
+        assert!(out.optimizer.contains("group-Max"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn requires_jobs_list() {
+        let dir = tmp("nojobs");
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 512.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        assert!(tune_group(&mut cluster, &project).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,246 @@
+//! Optimizer Runner — "creates a series of MapReduce jobs with different
+//! combinations of parameter values according to parameter configuration
+//! files and obtains the optimal parameter value sets with minimum
+//! running time after the tuning process is finished." (§II.A)
+//!
+//! Reads `params.spec` + `tuning.properties` from a tuning project,
+//! drives the chosen search method against the cluster, and records the
+//! per-iteration log + summary into `/history`.
+
+use crate::catla::history::History;
+use crate::catla::project::Project;
+use crate::hadoop::SimCluster;
+use crate::optim::surrogate::{CandidateScorer, Prescreen};
+use crate::optim::{cluster_objective, Method, ParamSpace, TuningOutcome};
+
+/// Parsed tuning settings (from `tuning.properties`).
+#[derive(Clone, Debug)]
+pub struct TuningSettings {
+    pub optimizer: String,
+    pub budget: usize,
+    pub repeats: usize,
+    pub seed: u64,
+    /// Prescreen cluster starts with the surrogate model ("auto" | "off").
+    pub prescreen: bool,
+}
+
+impl TuningSettings {
+    pub fn from_project(project: &Project) -> Result<TuningSettings, String> {
+        let t = project
+            .tuning
+            .as_ref()
+            .ok_or("not a tuning project (missing tuning.properties)")?;
+        let parse_usize = |k: &str, d: usize| -> Result<usize, String> {
+            match t.get(k) {
+                None => Ok(d),
+                Some(s) => s.parse().map_err(|_| format!("bad {k}={s:?}")),
+            }
+        };
+        Ok(TuningSettings {
+            optimizer: t.get("optimizer").unwrap_or("bobyqa").to_string(),
+            budget: parse_usize("budget", 60)?,
+            repeats: parse_usize("repeats", 1)?,
+            seed: t
+                .get("seed")
+                .map(|s| s.parse().map_err(|_| format!("bad seed={s:?}")))
+                .transpose()?
+                .unwrap_or(7),
+            prescreen: t.get("prescreen").map(|v| v == "auto").unwrap_or(false),
+        })
+    }
+}
+
+/// Outcome + where the logs went.
+#[derive(Debug)]
+pub struct TuningRunOutcome {
+    pub outcome: TuningOutcome,
+    pub cluster_evals: usize,
+    pub log_path: std::path::PathBuf,
+}
+
+pub struct OptimizerRunner<'a> {
+    pub cluster: &'a mut SimCluster,
+    /// Optional surrogate scorer for prescreen=auto projects.
+    pub scorer: Option<&'a mut dyn CandidateScorer>,
+}
+
+impl<'a> OptimizerRunner<'a> {
+    pub fn new(cluster: &'a mut SimCluster) -> Self {
+        Self {
+            cluster,
+            scorer: None,
+        }
+    }
+
+    pub fn with_scorer(cluster: &'a mut SimCluster, scorer: &'a mut dyn CandidateScorer) -> Self {
+        Self {
+            cluster,
+            scorer: Some(scorer),
+        }
+    }
+
+    /// Run the tuning project end to end.
+    pub fn run(&mut self, project: &Project) -> Result<TuningRunOutcome, String> {
+        let settings = TuningSettings::from_project(project)?;
+        let spec = project
+            .spec
+            .clone()
+            .ok_or("tuning project missing params.spec")?;
+        let workload = project.workload()?;
+        let base = project.base_config()?;
+        let space = ParamSpace::new(spec.clone(), base);
+
+        let outcome = {
+            let mut obj = cluster_objective(self.cluster, &workload, settings.repeats);
+            if settings.prescreen {
+                let scorer = self
+                    .scorer
+                    .as_deref_mut()
+                    .ok_or("prescreen=auto but no surrogate scorer attached")?;
+                run_prescreened(scorer, &settings, &space, &mut obj)?
+            } else {
+                let method = Method::from_name(&settings.optimizer, settings.seed)?;
+                method.run(&space, &mut obj, settings.budget)
+            }
+        };
+
+        let history = History::open(&project.dir).map_err(|e| e.to_string())?;
+        let log_path = history.write_tuning_log(&spec, &outcome)?;
+        history.append_summary(&spec, &outcome)?;
+        let cluster_evals = outcome.evals() * settings.repeats;
+        Ok(TuningRunOutcome {
+            outcome,
+            cluster_evals,
+            log_path,
+        })
+    }
+}
+
+fn run_prescreened(
+    scorer: &mut dyn CandidateScorer,
+    settings: &TuningSettings,
+    space: &ParamSpace,
+    obj: &mut crate::optim::ObjectiveFn<'_>,
+) -> Result<TuningOutcome, String> {
+    // only DFO methods benefit from a seeded start; direct search ignores it
+    match settings.optimizer.as_str() {
+        "bobyqa" => {
+            let mut p = Prescreen::new(scorer);
+            p.seed = settings.seed;
+            p.run_bobyqa(space, obj, settings.budget)
+        }
+        other => {
+            let method = Method::from_name(other, settings.seed)?;
+            Ok(method.run(space, obj, settings.budget))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::project::{create_template, ProjectKind};
+    use crate::hadoop::ClusterSpec;
+    use crate::optim::surrogate::NativeScorer;
+    use crate::workloads::wordcount;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-opt-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn make_tuning_project(name: &str, optimizer: &str, budget: usize) -> PathBuf {
+        let dir = tmp(name);
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 2048.0).unwrap();
+        let tp = dir.join("tuning.properties");
+        std::fs::write(
+            &tp,
+            format!("optimizer={optimizer}\nbudget={budget}\nrepeats=1\nseed=5\n"),
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn bobyqa_tuning_project_end_to_end() {
+        let dir = make_tuning_project("bobyqa", "bobyqa", 25);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        assert!(out.outcome.evals() <= 25);
+        assert!(out.log_path.is_file());
+        // tuning log has one row per evaluation
+        let h = History::open(&dir).unwrap();
+        assert_eq!(h.load_tuning_log().unwrap().rows.len(), out.outcome.evals());
+        // best-so-far column is monotone non-increasing
+        let conv =
+            History::convergence_from_log(&h.load_tuning_log().unwrap()).unwrap();
+        for w in conv.windows(2) {
+            assert!(w[1].1 <= w[0].1 + 1e-9);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tuning_improves_over_first_sample() {
+        let dir = make_tuning_project("improve", "bobyqa", 40);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        let first = out.outcome.records[0].value;
+        assert!(
+            out.outcome.best_value < first,
+            "no improvement: best {} vs first {first}",
+            out.outcome.best_value
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prescreen_requires_scorer() {
+        let dir = make_tuning_project("prescreen-miss", "bobyqa", 10);
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=bobyqa\nbudget=10\nprescreen=auto\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        assert!(OptimizerRunner::new(&mut cluster).run(&project).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prescreen_with_native_scorer_runs() {
+        let dir = make_tuning_project("prescreen", "bobyqa", 15);
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=bobyqa\nbudget=15\nprescreen=auto\nseed=5\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut scorer = NativeScorer {
+            workload: wordcount(2048.0),
+            cluster: ClusterSpec::default(),
+        };
+        let out = OptimizerRunner::with_scorer(&mut cluster, &mut scorer)
+            .run(&project)
+            .unwrap();
+        assert!(out.outcome.optimizer.contains("prescreen"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn grid_method_also_supported() {
+        let dir = make_tuning_project("grid", "grid", 30);
+        // fig3 spec has no steps -> default grids; budget caps at 30
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        assert_eq!(out.outcome.evals(), 30);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

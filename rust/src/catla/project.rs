@@ -1,0 +1,303 @@
+//! Project folders and rule-based templates.
+//!
+//! The paper organizes every tuning activity as a *project folder* built
+//! from templates ("Catla uses rule-based templates to organize necessary
+//! information of tuning MapReduce jobs"). Three kinds:
+//!
+//! * **task** — one job: `HadoopEnv.txt` + `job.properties`
+//! * **project** — a job group: adds `jobs.list`
+//! * **tuning** — an optimization run: adds `params.spec` + `tuning.properties`
+//!
+//! After a run the folder gains `downloaded_results/` (history.json,
+//! container logs, outputs) and `history/` (CSV summaries) — exactly the
+//! Step-5 layout of the paper's §II.B.2 walkthrough.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::env::HadoopEnv;
+use crate::config::params::HadoopConfig;
+use crate::config::spec::TuningSpec;
+use crate::workloads::{self, WorkloadSpec};
+
+/// Key=value properties file (job.properties / tuning.properties).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Properties {
+    pub entries: Vec<(String, String)>,
+}
+
+impl Properties {
+    pub fn parse(text: &str) -> Result<Properties, String> {
+        let mut entries = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("properties line {}: expected key=value", no + 1))?;
+            entries.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        Ok(Properties { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        match self.entries.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v = value.to_string(),
+            None => self.entries.push((key.to_string(), value.to_string())),
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.entries {
+            s.push_str(&format!("{k}={v}\n"));
+        }
+        s
+    }
+}
+
+/// Kind of project folder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectKind {
+    Task,
+    Project,
+    Tuning,
+}
+
+/// A loaded project folder.
+#[derive(Clone, Debug)]
+pub struct Project {
+    pub dir: PathBuf,
+    pub kind: ProjectKind,
+    pub env: HadoopEnv,
+    pub job: Properties,
+    /// `tuning.properties`, for tuning projects.
+    pub tuning: Option<Properties>,
+    /// `params.spec`, for tuning projects.
+    pub spec: Option<TuningSpec>,
+    /// `jobs.list` lines, for project folders.
+    pub jobs: Vec<String>,
+}
+
+impl Project {
+    /// Load and validate a project folder.
+    pub fn load(dir: &Path) -> Result<Project, String> {
+        if !dir.is_dir() {
+            return Err(format!("project folder {} does not exist", dir.display()));
+        }
+        let env = HadoopEnv::load(&dir.join("HadoopEnv.txt"))?;
+        let job = Properties::parse(
+            &std::fs::read_to_string(dir.join("job.properties"))
+                .map_err(|e| format!("job.properties: {e}"))?,
+        )?;
+        let tuning_path = dir.join("tuning.properties");
+        let spec_path = dir.join("params.spec");
+        let jobs_path = dir.join("jobs.list");
+        let kind = if tuning_path.is_file() {
+            ProjectKind::Tuning
+        } else if jobs_path.is_file() {
+            ProjectKind::Project
+        } else {
+            ProjectKind::Task
+        };
+        let tuning = if tuning_path.is_file() {
+            Some(Properties::parse(
+                &std::fs::read_to_string(&tuning_path).map_err(|e| e.to_string())?,
+            )?)
+        } else {
+            None
+        };
+        let spec = if spec_path.is_file() {
+            Some(TuningSpec::load(&spec_path)?)
+        } else {
+            None
+        };
+        if kind == ProjectKind::Tuning && spec.is_none() {
+            return Err("tuning project missing params.spec".into());
+        }
+        let jobs = if jobs_path.is_file() {
+            std::fs::read_to_string(&jobs_path)
+                .map_err(|e| e.to_string())?
+                .lines()
+                .map(|l| l.trim().to_string())
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(Project {
+            dir: dir.to_path_buf(),
+            kind,
+            env,
+            job,
+            tuning,
+            spec,
+            jobs,
+        })
+    }
+
+    /// Resolve the workload this project's job runs.
+    pub fn workload(&self) -> Result<WorkloadSpec, String> {
+        let name = self
+            .job
+            .get("workload")
+            .ok_or("job.properties missing `workload`")?;
+        let input_mb: f64 = self
+            .job
+            .get("input.mb")
+            .unwrap_or("1024")
+            .parse()
+            .map_err(|_| "bad input.mb")?;
+        workloads::by_name(name, input_mb)
+            .ok_or_else(|| format!("unknown workload {name:?} (known: {:?})", workloads::BUILTIN_NAMES))
+    }
+
+    /// Base Hadoop configuration: defaults + `conf.<param>=value` overrides.
+    pub fn base_config(&self) -> Result<HadoopConfig, String> {
+        let mut cfg = HadoopConfig::default();
+        for (k, v) in &self.job.entries {
+            if let Some(param) = k.strip_prefix("conf.") {
+                let val: f64 = v.parse().map_err(|_| format!("bad value for {k}"))?;
+                cfg.set_by_name(param, val)?;
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.dir.join("downloaded_results")
+    }
+
+    pub fn history_dir(&self) -> PathBuf {
+        self.dir.join("history")
+    }
+}
+
+/// Materialize a template folder (the paper's "task-based template").
+pub fn create_template(
+    dir: &Path,
+    kind: ProjectKind,
+    workload: &str,
+    input_mb: f64,
+) -> Result<(), String> {
+    if workloads::by_name(workload, input_mb).is_none() {
+        return Err(format!("unknown workload {workload:?}"));
+    }
+    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    HadoopEnv::default()
+        .save(&dir.join("HadoopEnv.txt"))
+        .map_err(|e| e.to_string())?;
+    let mut job = Properties::default();
+    job.set("name", &format!("{workload}-job"));
+    job.set("workload", workload);
+    job.set("input.mb", &format!("{input_mb}"));
+    job.set("jar", &format!("{workload}.jar")); // cosmetic against a sim cluster
+    std::fs::write(dir.join("job.properties"), job.to_string()).map_err(|e| e.to_string())?;
+    match kind {
+        ProjectKind::Task => {}
+        ProjectKind::Project => {
+            std::fs::write(
+                dir.join("jobs.list"),
+                format!("# one job per line: <name> <workload> <input_mb> [conf.param=value ...]\n\
+                         {workload}-small {workload} {}\n{workload}-large {workload} {}\n",
+                        input_mb / 4.0, input_mb),
+            )
+            .map_err(|e| e.to_string())?;
+        }
+        ProjectKind::Tuning => {
+            std::fs::write(dir.join("params.spec"), TuningSpec::fig3().to_string())
+                .map_err(|e| e.to_string())?;
+            let mut t = Properties::default();
+            t.set("optimizer", "bobyqa");
+            t.set("budget", "60");
+            t.set("repeats", "1");
+            t.set("seed", "7");
+            std::fs::write(dir.join("tuning.properties"), t.to_string())
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-test-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn task_template_roundtrip() {
+        let dir = tmp("task");
+        create_template(&dir, ProjectKind::Task, "wordcount", 2048.0).unwrap();
+        let p = Project::load(&dir).unwrap();
+        assert_eq!(p.kind, ProjectKind::Task);
+        assert_eq!(p.workload().unwrap().name, "wordcount");
+        assert_eq!(p.workload().unwrap().input_mb, 2048.0);
+        p.base_config().unwrap().validate().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tuning_template_has_spec() {
+        let dir = tmp("tuning");
+        create_template(&dir, ProjectKind::Tuning, "terasort", 4096.0).unwrap();
+        let p = Project::load(&dir).unwrap();
+        assert_eq!(p.kind, ProjectKind::Tuning);
+        assert!(p.spec.is_some());
+        assert_eq!(p.tuning.as_ref().unwrap().get("optimizer"), Some("bobyqa"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn project_template_lists_jobs() {
+        let dir = tmp("project");
+        create_template(&dir, ProjectKind::Project, "grep", 1024.0).unwrap();
+        let p = Project::load(&dir).unwrap();
+        assert_eq!(p.kind, ProjectKind::Project);
+        assert_eq!(p.jobs.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn conf_overrides_apply() {
+        let dir = tmp("conf");
+        create_template(&dir, ProjectKind::Task, "wordcount", 512.0).unwrap();
+        let mut text = std::fs::read_to_string(dir.join("job.properties")).unwrap();
+        text.push_str("conf.mapreduce.job.reduces=12\n");
+        std::fs::write(dir.join("job.properties"), text).unwrap();
+        let p = Project::load(&dir).unwrap();
+        assert_eq!(
+            p.base_config().unwrap().get(crate::config::params::P_REDUCES),
+            12.0
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_workload_rejected() {
+        let dir = tmp("bad");
+        assert!(create_template(&dir, ProjectKind::Task, "sleep", 1.0).is_err());
+    }
+
+    #[test]
+    fn missing_folder_is_error() {
+        assert!(Project::load(Path::new("/nonexistent/project")).is_err());
+    }
+
+    #[test]
+    fn properties_parse_rejects_garbage() {
+        assert!(Properties::parse("key-without-value\n").is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Project Runner — "submits a group of MapReduce jobs in an organized
+//! project folder and monitors the status of its running until job
+//! completion; eventually, all analyzing results and their logs ... are
+//! downloaded and organized to specified location in its project folder."
+//! (§II.A)
+//!
+//! Jobs come from `jobs.list`: `<name> <workload> <input_mb>
+//! [conf.param=value ...]`, one per line.
+
+use crate::catla::history::History;
+use crate::catla::metrics::JobMetrics;
+use crate::catla::project::Project;
+use crate::catla::task_runner::TaskRunner;
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{Cluster, JobSubmission, JobStatus};
+use crate::workloads::{self, WorkloadSpec};
+
+/// One parsed `jobs.list` entry.
+#[derive(Clone, Debug)]
+pub struct GroupJob {
+    pub name: String,
+    pub workload: WorkloadSpec,
+    pub config: HadoopConfig,
+}
+
+/// Parse a `jobs.list` line.
+pub fn parse_job_line(line: &str) -> Result<GroupJob, String> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    if toks.len() < 3 {
+        return Err(format!("jobs.list line {line:?}: expected <name> <workload> <input_mb>"));
+    }
+    let input_mb: f64 = toks[2]
+        .parse()
+        .map_err(|_| format!("bad input_mb {:?}", toks[2]))?;
+    let workload = workloads::by_name(toks[1], input_mb)
+        .ok_or_else(|| format!("unknown workload {:?}", toks[1]))?;
+    let mut config = HadoopConfig::default();
+    for t in &toks[3..] {
+        let (k, v) = t
+            .split_once('=')
+            .ok_or_else(|| format!("bad override {t:?}"))?;
+        let param = k
+            .strip_prefix("conf.")
+            .ok_or_else(|| format!("override {t:?} must start with conf."))?;
+        config.set_by_name(param, v.parse().map_err(|_| format!("bad value {v:?}"))?)?;
+    }
+    Ok(GroupJob {
+        name: toks[0].to_string(),
+        workload,
+        config,
+    })
+}
+
+/// Result of running a whole project folder.
+#[derive(Clone, Debug)]
+pub struct ProjectRunOutcome {
+    pub jobs: Vec<(String, JobMetrics)>, // (group name, metrics)
+}
+
+pub struct ProjectRunner<'a, C: Cluster> {
+    pub cluster: &'a mut C,
+}
+
+impl<'a, C: Cluster> ProjectRunner<'a, C> {
+    pub fn new(cluster: &'a mut C) -> Self {
+        Self { cluster }
+    }
+
+    /// Submit every job in the group, monitor to completion, download
+    /// all artifacts into per-job subfolders of `downloaded_results/`.
+    pub fn run(&mut self, project: &Project) -> Result<ProjectRunOutcome, String> {
+        if project.jobs.is_empty() {
+            return Err("project has no jobs.list entries".into());
+        }
+        let group: Vec<GroupJob> = project
+            .jobs
+            .iter()
+            .map(|l| parse_job_line(l))
+            .collect::<Result<_, _>>()?;
+
+        // submit all up front (the paper's runner monitors a batch)
+        let mut submitted: Vec<(String, String)> = Vec::new(); // (group name, job id)
+        for j in &group {
+            let id = self.cluster.submit_job(JobSubmission {
+                name: j.name.clone(),
+                workload: j.workload.clone(),
+                config: j.config.clone(),
+            })?;
+            submitted.push((j.name.clone(), id));
+        }
+
+        // monitor until every job completes
+        let mut done: Vec<bool> = vec![false; submitted.len()];
+        let mut guard = 0u32;
+        while done.iter().any(|d| !d) {
+            guard += 1;
+            if guard > 100_000 {
+                return Err("project monitor exceeded poll budget".into());
+            }
+            for (i, (_, id)) in submitted.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                match self.cluster.poll(id)? {
+                    JobStatus::Running { .. } => {}
+                    JobStatus::Failed { reason } => {
+                        return Err(format!("job {id} failed: {reason}"))
+                    }
+                    JobStatus::Succeeded { .. } => done[i] = true,
+                }
+            }
+        }
+
+        // download + organize per job
+        let history = History::open(&project.dir).map_err(|e| e.to_string())?;
+        let mut jobs = Vec::new();
+        for (name, id) in &submitted {
+            let job_dir = project.results_dir().join(name);
+            let logs_dir = job_dir.join("logs");
+            std::fs::create_dir_all(&logs_dir).map_err(|e| e.to_string())?;
+            let artifacts = self.cluster.fetch_artifacts(id)?;
+            let hist_path = job_dir.join(format!("{id}.history.json"));
+            std::fs::write(&hist_path, &artifacts.history_json).map_err(|e| e.to_string())?;
+            for (fname, content) in &artifacts.container_logs {
+                std::fs::write(logs_dir.join(fname), content).map_err(|e| e.to_string())?;
+            }
+            for (fname, content) in &artifacts.outputs {
+                std::fs::write(job_dir.join(fname), content).map_err(|e| e.to_string())?;
+            }
+            let metrics = JobMetrics::from_file(&hist_path)?;
+            history.append_job(&metrics)?;
+            jobs.push((name.clone(), metrics));
+        }
+        Ok(ProjectRunOutcome { jobs })
+    }
+}
+
+/// Convenience: run a single-job project through the Task Runner (used
+/// by the CLI when a project folder turns out to be a task template).
+pub fn run_as_task<C: Cluster>(
+    cluster: &mut C,
+    project: &Project,
+) -> Result<ProjectRunOutcome, String> {
+    let mut tr = TaskRunner::new(cluster);
+    let out = tr.run(project)?;
+    Ok(ProjectRunOutcome {
+        jobs: vec![("task".into(), out.metrics)],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::project::{create_template, ProjectKind};
+    use crate::hadoop::{ClusterSpec, SimCluster};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-proj-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn parse_job_line_full() {
+        let j = parse_job_line("wc-a wordcount 2048 conf.mapreduce.job.reduces=8").unwrap();
+        assert_eq!(j.name, "wc-a");
+        assert_eq!(j.workload.input_mb, 2048.0);
+        assert_eq!(j.config.get(crate::config::params::P_REDUCES), 8.0);
+    }
+
+    #[test]
+    fn parse_job_line_rejects_malformed() {
+        assert!(parse_job_line("only-two args").is_err());
+        assert!(parse_job_line("n wordcount notanumber").is_err());
+        assert!(parse_job_line("n wordcount 100 reduces=8").is_err());
+        assert!(parse_job_line("n mystery 100").is_err());
+    }
+
+    #[test]
+    fn group_run_downloads_everything() {
+        let dir = tmp("group");
+        create_template(&dir, ProjectKind::Project, "wordcount", 2048.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = ProjectRunner::new(&mut cluster).run(&project).unwrap();
+        assert_eq!(out.jobs.len(), 2);
+        for (name, m) in &out.jobs {
+            assert!(m.runtime_s > 0.0);
+            let jd = project.results_dir().join(name);
+            assert!(jd.is_dir(), "missing {}", jd.display());
+            assert!(jd.join("logs").is_dir());
+        }
+        // both jobs in jobs.csv
+        let h = History::open(&dir).unwrap();
+        assert_eq!(h.load_jobs().unwrap().rows.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_project_is_error() {
+        let dir = tmp("empty");
+        create_template(&dir, ProjectKind::Task, "grep", 64.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        assert!(ProjectRunner::new(&mut cluster).run(&project).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,243 @@
+//! Resumable tuning (extension, DESIGN.md §7): continue an interrupted
+//! run from `history/tuning_log.csv` instead of restarting from scratch.
+//!
+//! * direct search (grid): already-evaluated grid points are skipped —
+//!   their logged values are replayed into the recorder, then the sweep
+//!   continues where it stopped.
+//! * DFO: the search state is not serialized; the resume strategy is to
+//!   restart the optimizer *seeded at the best logged configuration* with
+//!   the remaining budget (documented divergence from a full checkpoint).
+
+use crate::catla::history::History;
+use crate::catla::project::Project;
+use crate::config::spec::TuningSpec;
+use crate::hadoop::SimCluster;
+use crate::optim::result::Recorder;
+use crate::optim::{cluster_objective, Bobyqa, Method, ParamSpace, TuningOutcome};
+use crate::util::csv::Csv;
+
+/// Parsed prior evaluations from a tuning log.
+#[derive(Clone, Debug, Default)]
+pub struct PriorRuns {
+    /// (config values per spec dimension, runtime)
+    pub evals: Vec<(Vec<f64>, f64)>,
+}
+
+impl PriorRuns {
+    pub fn from_log(csv: &Csv, spec: &TuningSpec) -> Result<PriorRuns, String> {
+        let vi = csv.col_index("runtime_s").ok_or("log missing runtime_s")?;
+        let dims: Vec<usize> = spec
+            .ranges
+            .iter()
+            .map(|r| {
+                csv.col_index(r.meta.name)
+                    .ok_or_else(|| format!("log missing column {}", r.meta.name))
+            })
+            .collect::<Result<_, _>>()?;
+        let mut evals = Vec::with_capacity(csv.rows.len());
+        for row in &csv.rows {
+            let v: f64 = row[vi].parse().map_err(|_| "bad runtime cell")?;
+            let xs: Vec<f64> = dims
+                .iter()
+                .map(|&i| row[i].parse::<f64>().map_err(|_| "bad param cell".to_string()))
+                .collect::<Result<_, _>>()?;
+            evals.push((xs, v));
+        }
+        Ok(PriorRuns { evals })
+    }
+
+    pub fn best(&self) -> Option<&(Vec<f64>, f64)> {
+        self.evals
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+    }
+}
+
+/// Resume a tuning project. `budget` is the TOTAL budget including prior
+/// evaluations; returns an outcome covering prior + new evaluations.
+pub fn resume_tuning(
+    cluster: &mut SimCluster,
+    project: &Project,
+    budget: usize,
+) -> Result<TuningOutcome, String> {
+    let spec = project.spec.clone().ok_or("not a tuning project")?;
+    let history = History::open(&project.dir).map_err(|e| e.to_string())?;
+    let prior = match history.load_tuning_log() {
+        Ok(csv) => PriorRuns::from_log(&csv, &spec)?,
+        Err(_) => PriorRuns::default(),
+    };
+    let optimizer = project
+        .tuning
+        .as_ref()
+        .and_then(|t| t.get("optimizer"))
+        .unwrap_or("bobyqa")
+        .to_string();
+    let seed: u64 = project
+        .tuning
+        .as_ref()
+        .and_then(|t| t.get("seed"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7);
+    let workload = project.workload()?;
+    let space = ParamSpace::new(spec.clone(), project.base_config()?);
+
+    let remaining = budget.saturating_sub(prior.evals.len());
+
+    // replay prior evaluations into the recorder so the resumed outcome's
+    // convergence series covers the whole run
+    let mut rec = Recorder::new();
+    for (xs, v) in &prior.evals {
+        let mut cfg = project.base_config()?;
+        for (r, x) in spec.ranges.iter().zip(xs) {
+            cfg.set(r.meta.index, *x);
+        }
+        rec.record(space.encode(&cfg), cfg, *v);
+    }
+
+    let outcome = if remaining == 0 {
+        rec.finish(&format!("{optimizer}[resumed,exhausted]"))
+    } else if optimizer == "grid" {
+        // skip already-evaluated grid points, continue the sweep
+        let done: std::collections::BTreeSet<String> = prior
+            .evals
+            .iter()
+            .map(|(xs, _)| format!("{xs:?}"))
+            .collect();
+        let mut obj = cluster_objective(cluster, &workload, 1);
+        for x in space.unit_grid() {
+            if rec.evals() >= budget {
+                break;
+            }
+            let cfg = space.decode(&x);
+            let key = format!(
+                "{:?}",
+                spec.ranges
+                    .iter()
+                    .map(|r| cfg.get(r.meta.index))
+                    .collect::<Vec<f64>>()
+            );
+            if done.contains(&key) {
+                continue;
+            }
+            let v = obj(&cfg);
+            rec.record(x, cfg, v);
+        }
+        rec.finish("grid[resumed]")
+    } else {
+        // DFO: restart at the best prior point with the remaining budget
+        let start = prior.best().map(|(xs, _)| {
+            let mut cfg = project.base_config().unwrap();
+            for (r, x) in spec.ranges.iter().zip(xs) {
+                cfg.set(r.meta.index, *x);
+            }
+            space.encode(&cfg)
+        });
+        let mut obj = cluster_objective(cluster, &workload, 1);
+        let fresh = match optimizer.as_str() {
+            "bobyqa" => Bobyqa {
+                seed,
+                start,
+                ..Bobyqa::default()
+            }
+            .run(&space, &mut obj, remaining),
+            other => Method::from_name(other, seed)?.run(&space, &mut obj, remaining),
+        };
+        for r in &fresh.records {
+            rec.record(r.unit_x.clone(), r.config.clone(), r.value);
+        }
+        rec.finish(&format!("{optimizer}[resumed@{}]", prior.evals.len()))
+    };
+
+    history.write_tuning_log(&spec, &outcome)?;
+    Ok(outcome)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::optimizer_runner::OptimizerRunner;
+    use crate::catla::project::{create_template, ProjectKind};
+    use crate::hadoop::ClusterSpec;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-resume-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tuning_project(name: &str, optimizer: &str, budget: usize) -> PathBuf {
+        let dir = tmp(name);
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+        std::fs::write(
+            dir.join("params.spec"),
+            "param mapreduce.job.reduces int 2 32 step 2\n\
+             param mapreduce.task.io.sort.mb int 50 800 step 150\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("tuning.properties"),
+            format!("optimizer={optimizer}\nbudget={budget}\nseed=3\n"),
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn grid_resume_skips_done_points_and_finishes() {
+        let dir = tuning_project("grid", "grid", 10);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        // phase 1: interrupted after 10 grid evals
+        let first = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        assert_eq!(first.outcome.evals(), 10);
+        // phase 2: resume up to the full 96-point grid
+        let full = 16 * 6;
+        let resumed = resume_tuning(&mut cluster, &project, full).unwrap();
+        assert_eq!(resumed.evals(), full, "resume did not cover the grid");
+        assert!(resumed.optimizer.contains("resumed"));
+        // the first 10 rows come from the prior log (replayed, not rerun):
+        // their values must match the original log exactly
+        for (a, b) in first.outcome.records.iter().zip(&resumed.records) {
+            assert!((a.value - b.value).abs() < 1e-3);
+        }
+        // no duplicate grid points overall
+        let mut keys: Vec<String> = resumed
+            .records
+            .iter()
+            .map(|r| format!("{:?}", r.config.values))
+            .collect();
+        keys.sort();
+        let n = keys.len();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate grid evaluations after resume");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dfo_resume_seeds_from_best_prior() {
+        let dir = tuning_project("bobyqa", "bobyqa", 15);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let first = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        let resumed = resume_tuning(&mut cluster, &project, 30).unwrap();
+        assert_eq!(resumed.evals(), 30);
+        // resumed best can only improve on the prior best (1e-3: the
+        // tuning log stores runtimes rounded to 3 decimals)
+        assert!(resumed.best_value <= first.outcome.best_value + 1e-3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn exhausted_budget_replays_only() {
+        let dir = tuning_project("done", "bobyqa", 12);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        let before = cluster.jobs_completed();
+        let resumed = resume_tuning(&mut cluster, &project, 12).unwrap();
+        assert_eq!(resumed.evals(), 12);
+        assert_eq!(cluster.jobs_completed(), before, "exhausted resume ran jobs");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

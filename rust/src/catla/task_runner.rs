@@ -1,0 +1,169 @@
+//! Task Runner — "submits a single MapReduce job to a Hadoop cluster and
+//! obtains its analyzing results and logs after the job is completed.
+//! This component provides the basis of Project Runner and Optimizer
+//! Runner." (§II.A)
+
+use std::path::PathBuf;
+
+use crate::catla::history::History;
+use crate::catla::metrics::JobMetrics;
+use crate::catla::project::Project;
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{Cluster, JobStatus, JobSubmission};
+
+/// Outcome of one Task-Runner execution.
+#[derive(Clone, Debug)]
+pub struct TaskRunOutcome {
+    pub job_id: String,
+    pub metrics: JobMetrics,
+    /// Where artifacts were downloaded (`<project>/downloaded_results`).
+    pub results_dir: PathBuf,
+    pub polls: u32,
+}
+
+pub struct TaskRunner<'a, C: Cluster> {
+    pub cluster: &'a mut C,
+    /// Cap on poll iterations before declaring the job hung.
+    pub max_polls: u32,
+}
+
+impl<'a, C: Cluster> TaskRunner<'a, C> {
+    pub fn new(cluster: &'a mut C) -> Self {
+        Self {
+            cluster,
+            max_polls: 10_000,
+        }
+    }
+
+    /// Run the project's job with an explicit configuration.
+    pub fn run_with_config(
+        &mut self,
+        project: &Project,
+        config: &HadoopConfig,
+    ) -> Result<TaskRunOutcome, String> {
+        let workload = project.workload()?;
+        let name = project.job.get("name").unwrap_or("job").to_string();
+        let submission = JobSubmission {
+            name,
+            workload,
+            config: config.clone(),
+        };
+        let job_id = self.cluster.submit_job(submission)?;
+
+        // poll until completion (SimCluster completes after a few polls;
+        // a real SSH cluster would take minutes)
+        let mut polls = 0;
+        loop {
+            polls += 1;
+            if polls > self.max_polls {
+                return Err(format!("job {job_id} did not finish after {polls} polls"));
+            }
+            match self.cluster.poll(&job_id)? {
+                JobStatus::Running { .. } => continue,
+                JobStatus::Failed { reason } => {
+                    return Err(format!("job {job_id} failed: {reason}"))
+                }
+                JobStatus::Succeeded { .. } => break,
+            }
+        }
+
+        // download artifacts into the project folder (paper Step 5)
+        let results_dir = project.results_dir();
+        let logs_dir = results_dir.join("logs");
+        std::fs::create_dir_all(&logs_dir).map_err(|e| e.to_string())?;
+        let artifacts = self.cluster.fetch_artifacts(&job_id)?;
+        let history_path = results_dir.join(format!("{job_id}.history.json"));
+        std::fs::write(&history_path, &artifacts.history_json).map_err(|e| e.to_string())?;
+        for (name, content) in &artifacts.container_logs {
+            std::fs::write(logs_dir.join(name), content).map_err(|e| e.to_string())?;
+        }
+        for (name, content) in &artifacts.outputs {
+            std::fs::write(results_dir.join(name), content).map_err(|e| e.to_string())?;
+        }
+
+        // parse metrics and append to /history
+        let metrics = JobMetrics::from_file(&history_path)?;
+        let history = History::open(&project.dir).map_err(|e| e.to_string())?;
+        history.append_job(&metrics)?;
+
+        Ok(TaskRunOutcome {
+            job_id,
+            metrics,
+            results_dir,
+            polls,
+        })
+    }
+
+    /// Run with the project's own base configuration (the plain
+    /// `catla task -dir ...` flow).
+    pub fn run(&mut self, project: &Project) -> Result<TaskRunOutcome, String> {
+        let cfg = project.base_config()?;
+        self.run_with_config(project, &cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::project::{create_template, ProjectKind};
+    use crate::hadoop::{ClusterSpec, SimCluster};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-task-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn paper_step_walkthrough() {
+        // Steps 1-5 of §II.B.2 against the simulated cluster
+        let dir = tmp("wordcount");
+        create_template(&dir, ProjectKind::Task, "wordcount", 2048.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::from_env(&project.env));
+        let mut runner = TaskRunner::new(&mut cluster);
+        let out = runner.run(&project).unwrap();
+
+        // Step 5: downloaded_results exists and holds the artifacts
+        assert!(out.results_dir.is_dir());
+        assert!(out.results_dir.join(format!("{}.history.json", out.job_id)).is_file());
+        assert!(out.results_dir.join("logs").is_dir());
+        assert!(out.metrics.runtime_s > 0.0);
+        assert!(out.polls >= 2, "poll loop not exercised");
+
+        // history/jobs.csv got a row
+        let h = History::open(&dir).unwrap();
+        assert_eq!(h.load_jobs().unwrap().rows.len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repeated_runs_accumulate_history() {
+        let dir = tmp("repeat");
+        create_template(&dir, ProjectKind::Task, "grep", 512.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut runner = TaskRunner::new(&mut cluster);
+        runner.run(&project).unwrap();
+        runner.run(&project).unwrap();
+        let h = History::open(&dir).unwrap();
+        assert_eq!(h.load_jobs().unwrap().rows.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn explicit_config_reaches_the_cluster() {
+        let dir = tmp("cfg");
+        create_template(&dir, ProjectKind::Task, "wordcount", 1024.0).unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut runner = TaskRunner::new(&mut cluster);
+        let mut cfg = HadoopConfig::default();
+        cfg.set_by_name("mapreduce.job.reduces", 16.0).unwrap();
+        let out = runner.run_with_config(&project, &cfg).unwrap();
+        assert_eq!(out.metrics.config_value("mapreduce.job.reduces"), Some(16.0));
+        assert_eq!(out.metrics.reduces, 16);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

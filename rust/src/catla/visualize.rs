@@ -1,0 +1,197 @@
+//! Visualization — CSV out plus self-contained ASCII renderings of the
+//! paper's two figure types (the paper defers to Minitab/MATLAB; CatlaUI
+//! adds a runtime-vs-iteration line chart, which we render in the
+//! terminal), and gnuplot scripts for camera-ready plots.
+
+use crate::util::csv::Csv;
+
+/// ASCII line chart of a (x, y) series — CatlaUI's convergence view.
+pub fn line_chart(title: &str, series: &[(usize, f64)], width: usize, height: usize) -> String {
+    if series.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let ys: Vec<f64> = series.iter().map(|(_, y)| *y).collect();
+    let ymin = ys.iter().cloned().fold(f64::MAX, f64::min);
+    let ymax = ys.iter().cloned().fold(f64::MIN, f64::max);
+    let span = (ymax - ymin).max(1e-9);
+    let width = width.max(8);
+    let height = height.max(4);
+
+    let mut grid = vec![vec![b' '; width]; height];
+    let n = series.len();
+    for (i, (_, y)) in series.iter().enumerate() {
+        let col = if n == 1 { 0 } else { i * (width - 1) / (n - 1) };
+        let row = ((ymax - y) / span * (height - 1) as f64).round() as usize;
+        grid[row.min(height - 1)][col] = b'*';
+    }
+    let mut out = format!("{title}\n");
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:9.1} |")
+        } else if r == height - 1 {
+            format!("{ymin:9.1} |")
+        } else {
+            format!("{:>9} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10}+{}\n{:>11}iter 1 .. {}\n",
+        "",
+        "-".repeat(width),
+        "",
+        series.last().unwrap().0
+    ));
+    out
+}
+
+/// ASCII heat map of a 2-parameter surface (the terminal rendering of
+/// the paper's Fig. 2 3-D surface). `rows`/`cols` are the axis values,
+/// `z[r][c]` the runtime.
+pub fn surface_heatmap(
+    title: &str,
+    row_name: &str,
+    rows: &[f64],
+    col_name: &str,
+    cols: &[f64],
+    z: &[Vec<f64>],
+) -> String {
+    const SHADES: &[u8] = b" .:-=+*#%@";
+    let mut zmin = f64::MAX;
+    let mut zmax = f64::MIN;
+    for r in z {
+        for &v in r {
+            zmin = zmin.min(v);
+            zmax = zmax.max(v);
+        }
+    }
+    let span = (zmax - zmin).max(1e-9);
+    let mut out = format!(
+        "{title}\nrows: {row_name} ({} values)  cols: {col_name} ({} values)\n\
+         shade: ' '(fast {zmin:.0}s) .. '@'(slow {zmax:.0}s)\n\n",
+        rows.len(),
+        cols.len()
+    );
+    for (ri, rv) in rows.iter().enumerate() {
+        out.push_str(&format!("{rv:8.0} |"));
+        for ci in 0..cols.len() {
+            let t = (z[ri][ci] - zmin) / span;
+            let idx = ((t * (SHADES.len() - 1) as f64).round() as usize).min(SHADES.len() - 1);
+            out.push(SHADES[idx] as char);
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9}+{}\n{:>10}{} from {:.0} to {:.0}\n",
+        "",
+        "-".repeat(cols.len()),
+        "",
+        col_name,
+        cols.first().unwrap_or(&0.0),
+        cols.last().unwrap_or(&0.0)
+    ));
+    out
+}
+
+/// Emit a gnuplot script regenerating Fig. 2 from its CSV.
+pub fn gnuplot_fig2(csv_path: &str, out_png: &str) -> String {
+    format!(
+        "# gnuplot script — paper Fig. 2 surface\n\
+         set datafile separator ','\n\
+         set term pngcairo size 900,700\n\
+         set output '{out_png}'\n\
+         set dgrid3d 16,16\n\
+         set hidden3d\n\
+         set xlabel 'mapreduce.job.reduces'\n\
+         set ylabel 'mapreduce.task.io.sort.mb'\n\
+         set zlabel 'running time (s)'\n\
+         splot '{csv_path}' every ::1 using 1:2:3 with lines title 'WordCount runtime'\n"
+    )
+}
+
+/// Emit a gnuplot script regenerating Fig. 3 from a tuning log CSV.
+pub fn gnuplot_fig3(csv_path: &str, out_png: &str) -> String {
+    format!(
+        "# gnuplot script — paper Fig. 3 convergence\n\
+         set datafile separator ','\n\
+         set term pngcairo size 900,500\n\
+         set output '{out_png}'\n\
+         set xlabel 'iteration'\n\
+         set ylabel 'running time (s)'\n\
+         plot '{csv_path}' every ::1 using 1:3 with linespoints title 'runtime', \\\n\
+              '{csv_path}' every ::1 using 1:4 with lines lw 2 title 'best so far'\n"
+    )
+}
+
+/// Render a tuning log CSV as the CatlaUI-style terminal chart.
+pub fn chart_from_tuning_log(csv: &Csv) -> Result<String, String> {
+    let iters = csv.col_f64("iter").ok_or("no iter column")?;
+    let runtime = csv.col_f64("runtime_s").ok_or("no runtime_s column")?;
+    let best = csv.col_f64("best_so_far").ok_or("no best_so_far column")?;
+    let raw: Vec<(usize, f64)> = iters
+        .iter()
+        .zip(&runtime)
+        .map(|(i, v)| (*i as usize, *v))
+        .collect();
+    let conv: Vec<(usize, f64)> = iters
+        .iter()
+        .zip(&best)
+        .map(|(i, v)| (*i as usize, *v))
+        .collect();
+    Ok(format!(
+        "{}\n{}",
+        line_chart("running time per iteration", &raw, 60, 12),
+        line_chart("best-so-far (convergence)", &conv, 60, 12)
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_all_points() {
+        let series: Vec<(usize, f64)> = (1..=20).map(|i| (i, 100.0 / i as f64)).collect();
+        let s = line_chart("t", &series, 40, 10);
+        assert!(s.contains('*'));
+        assert!(s.lines().count() >= 10);
+        // extremes labelled
+        assert!(s.contains("100.0"));
+        assert!(s.contains("5.0"));
+    }
+
+    #[test]
+    fn line_chart_empty_and_single() {
+        assert!(line_chart("t", &[], 40, 10).contains("no data"));
+        let s = line_chart("t", &[(1, 5.0)], 40, 10);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn heatmap_uses_full_shade_range() {
+        let rows = vec![1.0, 2.0];
+        let cols = vec![1.0, 2.0, 3.0];
+        let z = vec![vec![10.0, 20.0, 30.0], vec![40.0, 50.0, 60.0]];
+        let s = surface_heatmap("t", "r", &rows, "c", &cols, &z);
+        assert!(s.contains(' '), "fastest shade missing");
+        assert!(s.contains('@'), "slowest shade missing");
+    }
+
+    #[test]
+    fn gnuplot_scripts_reference_files() {
+        assert!(gnuplot_fig2("a.csv", "b.png").contains("a.csv"));
+        assert!(gnuplot_fig3("x.csv", "y.png").contains("best so far"));
+    }
+
+    #[test]
+    fn chart_from_log_round_trip() {
+        let csv = Csv::parse(
+            "iter,optimizer,runtime_s,best_so_far\n1,b,120,120\n2,b,100,100\n3,b,110,100\n",
+        )
+        .unwrap();
+        let s = chart_from_tuning_log(&csv).unwrap();
+        assert!(s.contains("convergence"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Workflow (job-DAG) execution — extension of the Project Runner for
+//! multi-stage pipelines: iterative PageRank, ETL chains, map-side-join
+//! preparation. `jobs.list` lines gain an optional `after=<name>[,<name>]`
+//! clause; jobs run as soon as all dependencies succeeded, respecting the
+//! cluster's virtual clock (a stage's input is its predecessors' output).
+//!
+//! ```text
+//! prep   grep     4096
+//! rank1  pagerank 2048 after=prep
+//! rank2  pagerank 2048 after=rank1
+//! merge  join     4096 after=rank1,rank2
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::catla::project::Project;
+use crate::catla::project_runner::{parse_job_line, GroupJob};
+use crate::hadoop::{JobSubmission, SimCluster};
+
+/// One node of the workflow DAG.
+#[derive(Clone, Debug)]
+pub struct WorkflowJob {
+    pub job: GroupJob,
+    pub after: Vec<String>,
+}
+
+/// Parse a `jobs.list` line with an optional trailing `after=` clause.
+pub fn parse_workflow_line(line: &str) -> Result<WorkflowJob, String> {
+    let (core, after) = match line.find("after=") {
+        Some(pos) => {
+            let (a, b) = line.split_at(pos);
+            let names = b["after=".len()..]
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            (a.trim(), names)
+        }
+        None => (line.trim(), Vec::new()),
+    };
+    Ok(WorkflowJob {
+        job: parse_job_line(core)?,
+        after,
+    })
+}
+
+/// Scheduled result of one workflow stage.
+#[derive(Clone, Debug)]
+pub struct StageResult {
+    pub name: String,
+    /// Virtual time the stage could start (all deps done).
+    pub start_s: f64,
+    /// Virtual completion time.
+    pub finish_s: f64,
+    pub runtime_s: f64,
+}
+
+/// Whole-workflow outcome.
+#[derive(Clone, Debug)]
+pub struct WorkflowOutcome {
+    pub stages: Vec<StageResult>,
+    /// End-to-end makespan (critical path through the DAG).
+    pub makespan_s: f64,
+}
+
+/// Validate the DAG: known dependencies, no duplicates, no cycles.
+pub fn validate(jobs: &[WorkflowJob]) -> Result<(), String> {
+    let names: BTreeSet<&str> = jobs.iter().map(|j| j.job.name.as_str()).collect();
+    if names.len() != jobs.len() {
+        return Err("duplicate job names in workflow".into());
+    }
+    for j in jobs {
+        for d in &j.after {
+            if !names.contains(d.as_str()) {
+                return Err(format!("{}: unknown dependency {d:?}", j.job.name));
+            }
+        }
+    }
+    // Kahn's algorithm for cycle detection
+    let mut indeg: BTreeMap<&str, usize> =
+        jobs.iter().map(|j| (j.job.name.as_str(), j.after.len())).collect();
+    let mut ready: Vec<&str> = indeg
+        .iter()
+        .filter(|(_, &d)| d == 0)
+        .map(|(&n, _)| n)
+        .collect();
+    let mut seen = 0;
+    while let Some(n) = ready.pop() {
+        seen += 1;
+        for j in jobs {
+            if j.after.iter().any(|a| a == n) {
+                let e = indeg.get_mut(j.job.name.as_str()).unwrap();
+                *e -= 1;
+                if *e == 0 {
+                    ready.push(&j.job.name);
+                }
+            }
+        }
+    }
+    if seen != jobs.len() {
+        return Err("workflow contains a dependency cycle".into());
+    }
+    Ok(())
+}
+
+/// Execute the workflow on the cluster. Stages whose dependencies are all
+/// met run "in parallel" in virtual time (the cluster model is exclusive
+/// per job, so parallel-ready stages at the same depth share their start
+/// time but serialize cluster occupancy — conservative and simple).
+pub fn run_workflow(
+    cluster: &mut SimCluster,
+    jobs: &[WorkflowJob],
+) -> Result<WorkflowOutcome, String> {
+    validate(jobs)?;
+    let mut done: BTreeMap<String, f64> = BTreeMap::new(); // name -> finish time
+    let mut stages = Vec::with_capacity(jobs.len());
+    let mut remaining: Vec<&WorkflowJob> = jobs.iter().collect();
+    let mut cluster_free_at = 0.0f64;
+
+    while !remaining.is_empty() {
+        // pick the first job whose deps are all done (stable order)
+        let pos = remaining
+            .iter()
+            .position(|j| j.after.iter().all(|d| done.contains_key(d)))
+            .ok_or("no runnable stage (cycle should have been caught)")?;
+        let wj = remaining.remove(pos);
+        let deps_done = wj
+            .after
+            .iter()
+            .map(|d| done[d])
+            .fold(0.0f64, f64::max);
+        let start = deps_done.max(cluster_free_at);
+        let result = cluster.run_job(&JobSubmission {
+            name: wj.job.name.clone(),
+            workload: wj.job.workload.clone(),
+            config: wj.job.config.clone(),
+        });
+        let finish = start + result.runtime_s;
+        cluster_free_at = finish;
+        done.insert(wj.job.name.clone(), finish);
+        stages.push(StageResult {
+            name: wj.job.name.clone(),
+            start_s: start,
+            finish_s: finish,
+            runtime_s: result.runtime_s,
+        });
+    }
+    let makespan_s = stages.iter().map(|s| s.finish_s).fold(0.0, f64::max);
+    Ok(WorkflowOutcome { stages, makespan_s })
+}
+
+/// Load a workflow from a project's `jobs.list`.
+pub fn from_project(project: &Project) -> Result<Vec<WorkflowJob>, String> {
+    if project.jobs.is_empty() {
+        return Err("project has no jobs.list".into());
+    }
+    project.jobs.iter().map(|l| parse_workflow_line(l)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hadoop::ClusterSpec;
+
+    fn wf(lines: &[&str]) -> Vec<WorkflowJob> {
+        lines.iter().map(|l| parse_workflow_line(l).unwrap()).collect()
+    }
+
+    #[test]
+    fn parse_with_and_without_after() {
+        let j = parse_workflow_line("prep grep 1024").unwrap();
+        assert!(j.after.is_empty());
+        let j = parse_workflow_line("rank pagerank 512 after=prep").unwrap();
+        assert_eq!(j.after, vec!["prep"]);
+        let j = parse_workflow_line(
+            "merge join 1024 conf.mapreduce.job.reduces=8 after=a,b",
+        )
+        .unwrap();
+        assert_eq!(j.after, vec!["a", "b"]);
+        assert_eq!(j.job.config.get(crate::config::params::P_REDUCES), 8.0);
+    }
+
+    #[test]
+    fn validate_catches_cycles_and_unknowns() {
+        let jobs = wf(&["a grep 64 after=b", "b grep 64 after=a"]);
+        assert!(validate(&jobs).unwrap_err().contains("cycle"));
+        let jobs = wf(&["a grep 64 after=ghost"]);
+        assert!(validate(&jobs).unwrap_err().contains("unknown dependency"));
+        let jobs = wf(&["a grep 64", "a grep 64"]);
+        assert!(validate(&jobs).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn stages_respect_dependencies() {
+        let jobs = wf(&[
+            "prep grep 1024",
+            "rank1 pagerank 512 after=prep",
+            "rank2 pagerank 512 after=rank1",
+            "merge join 1024 after=rank1,rank2",
+        ]);
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = run_workflow(&mut cluster, &jobs).unwrap();
+        assert_eq!(out.stages.len(), 4);
+        let at = |n: &str| out.stages.iter().find(|s| s.name == n).unwrap().clone();
+        assert!(at("rank1").start_s >= at("prep").finish_s - 1e-9);
+        assert!(at("rank2").start_s >= at("rank1").finish_s - 1e-9);
+        assert!(at("merge").start_s >= at("rank2").finish_s - 1e-9);
+        assert!((out.makespan_s - at("merge").finish_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn independent_stages_run_in_any_order_deterministically() {
+        let jobs = wf(&["a grep 512", "b grep 512", "c join 512 after=a,b"]);
+        let mut c1 = SimCluster::new(ClusterSpec::default());
+        let mut c2 = SimCluster::new(ClusterSpec::default());
+        let o1 = run_workflow(&mut c1, &jobs).unwrap();
+        let o2 = run_workflow(&mut c2, &jobs).unwrap();
+        assert_eq!(o1.makespan_s, o2.makespan_s);
+    }
+}

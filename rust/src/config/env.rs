@@ -1,0 +1,125 @@
+//! `HadoopEnv.txt` — the per-project cluster connection + environment file
+//! from the paper's Step 2 ("Change the master host's information defined
+//! in 'HadoopEnv.txt' ... according to the users' actual Hadoop cluster").
+//!
+//! Plain `key=value` lines, `#` comments. Against a real cluster these feed
+//! the SSH client; against the simulated cluster the `sim.*` keys describe
+//! the cluster to synthesize.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct HadoopEnv {
+    pub entries: BTreeMap<String, String>,
+}
+
+impl Default for HadoopEnv {
+    fn default() -> Self {
+        let mut entries = BTreeMap::new();
+        for (k, v) in [
+            ("master.host", "namenode.example.com"),
+            ("master.port", "22"),
+            ("master.user", "hadoop"),
+            ("hadoop.home", "/opt/hadoop-2.7.2"),
+            ("hdfs.workdir", "/user/hadoop/catla"),
+            ("yarn.log.aggregation", "true"),
+            // simulated-cluster description (see DESIGN.md substitution table)
+            ("sim.nodes", "16"),
+            ("sim.racks", "2"),
+            ("sim.mem.per.node.mb", "8192"),
+            ("sim.vcores.per.node", "8"),
+            ("sim.disk.mbps", "120"),
+            ("sim.net.mbps", "110"),
+            ("sim.noise.sigma", "0.12"),
+            ("sim.straggler.prob", "0.02"),
+            ("sim.failure.prob", "0.002"),
+            ("sim.seed", "42"),
+        ] {
+            entries.insert(k.to_string(), v.to_string());
+        }
+        Self { entries }
+    }
+}
+
+impl HadoopEnv {
+    pub fn parse(text: &str) -> Result<HadoopEnv, String> {
+        let mut entries = BTreeMap::new();
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("HadoopEnv.txt line {}: expected key=value", no + 1))?;
+            entries.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(HadoopEnv { entries })
+    }
+
+    pub fn load(path: &Path) -> Result<HadoopEnv, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_string())
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::from("# Catla cluster environment\n");
+        for (k, v) in &self.entries {
+            out.push_str(&format!("{k}={v}\n"));
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let env = HadoopEnv::default();
+        let back = HadoopEnv::parse(&env.to_string()).unwrap();
+        assert_eq!(back, env);
+    }
+
+    #[test]
+    fn parse_with_comments_and_blank_lines() {
+        let e = HadoopEnv::parse("# hi\n\nmaster.host = node1 \n sim.nodes=4\n").unwrap();
+        assert_eq!(e.get("master.host"), Some("node1"));
+        assert_eq!(e.get_u64("sim.nodes", 0), 4);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(HadoopEnv::parse("no-equals-sign").is_err());
+    }
+
+    #[test]
+    fn typed_getters_fall_back() {
+        let e = HadoopEnv::parse("a=xyz\n").unwrap();
+        assert_eq!(e.get_f64("a", 1.5), 1.5);
+        assert_eq!(e.get_f64("missing", 2.5), 2.5);
+    }
+}

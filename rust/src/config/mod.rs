@@ -1,0 +1,10 @@
+//! Configuration layer: Hadoop parameter metadata, the `HadoopEnv.txt`
+//! project environment file, and tuning parameter-spec files.
+
+pub mod env;
+pub mod params;
+pub mod spec;
+
+pub use env::HadoopEnv;
+pub use params::{HadoopConfig, ParamMeta, N_PARAMS, PARAMS};
+pub use spec::{ParamRange, TuningSpec};

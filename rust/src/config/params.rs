@@ -1,0 +1,197 @@
+//! Hadoop configuration-parameter metadata.
+//!
+//! This is the rust mirror of `python/compile/spec.py`: the parameter
+//! order, bounds and integer-ness MUST stay in sync — the AOT cost-model
+//! artifacts consume config vectors laid out exactly like this, and
+//! `rust/tests/runtime_integration.rs` cross-checks the two.
+
+/// Indices into a config vector. Keep in sync with python spec.py.
+pub const P_REDUCES: usize = 0;
+pub const P_IO_SORT_MB: usize = 1;
+pub const P_SORT_FACTOR: usize = 2;
+pub const P_SPILL_PERCENT: usize = 3;
+pub const P_PARALLEL_COPIES: usize = 4;
+pub const P_SLOWSTART: usize = 5;
+pub const P_MAP_MEM_MB: usize = 6;
+pub const P_RED_MEM_MB: usize = 7;
+pub const P_COMPRESS: usize = 8;
+pub const P_SPLIT_MB: usize = 9;
+pub const N_PARAMS: usize = 10;
+
+/// Static description of one tunable Hadoop parameter.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParamMeta {
+    pub index: usize,
+    /// Full Hadoop property name, e.g. `mapreduce.task.io.sort.mb`.
+    pub name: &'static str,
+    pub lo: f64,
+    pub hi: f64,
+    /// Integer-valued parameters are rounded before use.
+    pub integer: bool,
+    /// Hadoop 2.7.2 default value.
+    pub default: f64,
+}
+
+/// The parameter table, in config-vector order.
+pub const PARAMS: [ParamMeta; N_PARAMS] = [
+    ParamMeta { index: P_REDUCES, name: "mapreduce.job.reduces", lo: 1.0, hi: 64.0, integer: true, default: 1.0 },
+    ParamMeta { index: P_IO_SORT_MB, name: "mapreduce.task.io.sort.mb", lo: 16.0, hi: 2048.0, integer: true, default: 100.0 },
+    ParamMeta { index: P_SORT_FACTOR, name: "mapreduce.task.io.sort.factor", lo: 2.0, hi: 128.0, integer: true, default: 10.0 },
+    ParamMeta { index: P_SPILL_PERCENT, name: "mapreduce.map.sort.spill.percent", lo: 0.50, hi: 0.95, integer: false, default: 0.80 },
+    ParamMeta { index: P_PARALLEL_COPIES, name: "mapreduce.reduce.shuffle.parallelcopies", lo: 1.0, hi: 64.0, integer: true, default: 5.0 },
+    ParamMeta { index: P_SLOWSTART, name: "mapreduce.job.reduce.slowstart.completedmaps", lo: 0.05, hi: 1.0, integer: false, default: 0.05 },
+    ParamMeta { index: P_MAP_MEM_MB, name: "mapreduce.map.memory.mb", lo: 512.0, hi: 4096.0, integer: true, default: 1024.0 },
+    ParamMeta { index: P_RED_MEM_MB, name: "mapreduce.reduce.memory.mb", lo: 512.0, hi: 8192.0, integer: true, default: 1024.0 },
+    ParamMeta { index: P_COMPRESS, name: "mapreduce.map.output.compress", lo: 0.0, hi: 1.0, integer: true, default: 0.0 },
+    ParamMeta { index: P_SPLIT_MB, name: "mapreduce.input.fileinputformat.split.mb", lo: 32.0, hi: 512.0, integer: true, default: 128.0 },
+];
+
+/// Look up a parameter by its Hadoop property name.
+pub fn by_name(name: &str) -> Option<&'static ParamMeta> {
+    PARAMS.iter().find(|p| p.name == name)
+}
+
+/// A concrete Hadoop configuration: one value per tunable parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HadoopConfig {
+    pub values: [f64; N_PARAMS],
+}
+
+impl Default for HadoopConfig {
+    fn default() -> Self {
+        let mut values = [0.0; N_PARAMS];
+        for p in PARAMS.iter() {
+            values[p.index] = p.default;
+        }
+        Self { values }
+    }
+}
+
+impl HadoopConfig {
+    pub fn get(&self, index: usize) -> f64 {
+        self.values[index]
+    }
+
+    /// Set by index, clamping to bounds and rounding integer params.
+    pub fn set(&mut self, index: usize, value: f64) -> &mut Self {
+        let meta = &PARAMS[index];
+        let v = value.clamp(meta.lo, meta.hi);
+        self.values[index] = if meta.integer { v.round() } else { v };
+        self
+    }
+
+    pub fn set_by_name(&mut self, name: &str, value: f64) -> Result<&mut Self, String> {
+        let meta = by_name(name).ok_or_else(|| format!("unknown parameter {name:?}"))?;
+        Ok(self.set(meta.index, value))
+    }
+
+    /// All values within bounds and integer params integral?
+    pub fn validate(&self) -> Result<(), String> {
+        for p in PARAMS.iter() {
+            let v = self.values[p.index];
+            if !(p.lo..=p.hi).contains(&v) {
+                return Err(format!("{} = {v} outside [{}, {}]", p.name, p.lo, p.hi));
+            }
+            if p.integer && v.fract() != 0.0 {
+                return Err(format!("{} = {v} must be integral", p.name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Render as Hadoop `-D key=value` CLI arguments (what a real Catla
+    /// passes to `hadoop jar`).
+    pub fn to_d_args(&self) -> Vec<String> {
+        PARAMS
+            .iter()
+            .map(|p| {
+                let v = self.values[p.index];
+                if p.index == P_COMPRESS {
+                    format!("-D{}={}", p.name, v != 0.0)
+                } else if p.integer {
+                    format!("-D{}={}", p.name, v as i64)
+                } else {
+                    format!("-D{}={v}", p.name)
+                }
+            })
+            .collect()
+    }
+
+    /// Render as f32 feature row for the AOT cost model.
+    pub fn to_f32_row(&self) -> [f32; N_PARAMS] {
+        let mut row = [0f32; N_PARAMS];
+        for (i, v) in self.values.iter().enumerate() {
+            row[i] = *v as f32;
+        }
+        row
+    }
+
+    /// Compact human-readable summary used in history CSVs.
+    pub fn summary(&self) -> String {
+        PARAMS
+            .iter()
+            .map(|p| {
+                let short = p.name.rsplit('.').next().unwrap_or(p.name);
+                if p.integer {
+                    format!("{short}={}", self.values[p.index] as i64)
+                } else {
+                    format!("{short}={:.2}", self.values[p.index])
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        HadoopConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_clamps_and_rounds() {
+        let mut c = HadoopConfig::default();
+        c.set(P_REDUCES, 1000.0);
+        assert_eq!(c.get(P_REDUCES), 64.0);
+        c.set(P_IO_SORT_MB, 99.7);
+        assert_eq!(c.get(P_IO_SORT_MB), 100.0);
+        c.set(P_SPILL_PERCENT, 0.1);
+        assert_eq!(c.get(P_SPILL_PERCENT), 0.50);
+    }
+
+    #[test]
+    fn set_by_name_roundtrip() {
+        let mut c = HadoopConfig::default();
+        c.set_by_name("mapreduce.job.reduces", 8.0).unwrap();
+        assert_eq!(c.get(P_REDUCES), 8.0);
+        assert!(c.set_by_name("not.a.param", 1.0).is_err());
+    }
+
+    #[test]
+    fn d_args_format() {
+        let args = HadoopConfig::default().to_d_args();
+        assert!(args.contains(&"-Dmapreduce.task.io.sort.mb=100".to_string()));
+        assert!(args.contains(&"-Dmapreduce.map.output.compress=false".to_string()));
+    }
+
+    #[test]
+    fn bounds_match_python_spec() {
+        // spot-check the values mirrored from python/compile/spec.py
+        assert_eq!(PARAMS[P_REDUCES].lo, 1.0);
+        assert_eq!(PARAMS[P_REDUCES].hi, 64.0);
+        assert_eq!(PARAMS[P_IO_SORT_MB].lo, 16.0);
+        assert_eq!(PARAMS[P_IO_SORT_MB].hi, 2048.0);
+        assert_eq!(PARAMS[P_SPLIT_MB].hi, 512.0);
+    }
+
+    #[test]
+    fn validate_rejects_out_of_bounds() {
+        let mut c = HadoopConfig::default();
+        c.values[P_REDUCES] = 100.0; // bypass set()
+        assert!(c.validate().is_err());
+    }
+}

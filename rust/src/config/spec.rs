@@ -1,0 +1,217 @@
+//! Tuning parameter-specification files.
+//!
+//! The Optimizer Runner "creates a series of MapReduce jobs with different
+//! combinations of parameter values according to parameter configuration
+//! files" (paper §II.A). A spec file (`params.spec` in a tuning project)
+//! declares which Hadoop parameters to tune and over what ranges:
+//!
+//! ```text
+//! # name                          kind   lo    hi    [step]
+//! param mapreduce.job.reduces     int    2     32    step 2
+//! param mapreduce.task.io.sort.mb int    50    800   step 50
+//! param mapreduce.map.sort.spill.percent float 0.5 0.9
+//! ```
+
+use crate::config::params::{by_name, ParamMeta};
+use std::path::Path;
+
+/// One tunable dimension of a tuning project.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamRange {
+    pub meta: &'static ParamMeta,
+    pub lo: f64,
+    pub hi: f64,
+    /// Grid step for direct search; DFO treats the range continuously.
+    pub step: Option<f64>,
+}
+
+impl ParamRange {
+    /// Grid values for exhaustive search (inclusive of hi when it lands
+    /// on the grid).
+    pub fn grid(&self) -> Vec<f64> {
+        let step = self.step.unwrap_or_else(|| {
+            if self.meta.integer {
+                1.0f64.max(((self.hi - self.lo) / 8.0).round())
+            } else {
+                (self.hi - self.lo) / 8.0
+            }
+        });
+        let mut vals = Vec::new();
+        let mut v = self.lo;
+        while v <= self.hi + 1e-9 {
+            vals.push(if self.meta.integer { v.round() } else { v });
+            v += step;
+        }
+        vals
+    }
+}
+
+/// The tunable subspace for one tuning project.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TuningSpec {
+    pub ranges: Vec<ParamRange>,
+}
+
+impl TuningSpec {
+    pub fn dims(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Total number of grid points for exhaustive search.
+    pub fn grid_size(&self) -> usize {
+        self.ranges.iter().map(|r| r.grid().len()).product()
+    }
+
+    pub fn parse(text: &str) -> Result<TuningSpec, String> {
+        let mut ranges = Vec::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = |m: &str| format!("params.spec line {}: {m}", no + 1);
+            if toks[0] != "param" {
+                return Err(err("expected line to start with 'param'"));
+            }
+            if toks.len() < 5 {
+                return Err(err("expected: param <name> <int|float> <lo> <hi> [step <s>]"));
+            }
+            let meta = by_name(toks[1]).ok_or_else(|| err(&format!("unknown parameter {:?}", toks[1])))?;
+            let declared_int = match toks[2] {
+                "int" => true,
+                "float" => false,
+                k => return Err(err(&format!("kind must be int|float, got {k:?}"))),
+            };
+            if declared_int != meta.integer {
+                return Err(err(&format!(
+                    "{} is {} but declared {}",
+                    meta.name,
+                    if meta.integer { "int" } else { "float" },
+                    toks[2]
+                )));
+            }
+            let lo: f64 = toks[3].parse().map_err(|_| err("bad lo"))?;
+            let hi: f64 = toks[4].parse().map_err(|_| err("bad hi"))?;
+            if lo >= hi {
+                return Err(err("lo must be < hi"));
+            }
+            if lo < meta.lo || hi > meta.hi {
+                return Err(err(&format!(
+                    "range [{lo}, {hi}] outside parameter bounds [{}, {}]",
+                    meta.lo, meta.hi
+                )));
+            }
+            let step = match toks.get(5) {
+                None => None,
+                Some(&"step") => Some(
+                    toks.get(6)
+                        .ok_or_else(|| err("step needs a value"))?
+                        .parse::<f64>()
+                        .map_err(|_| err("bad step"))?,
+                ),
+                Some(t) => return Err(err(&format!("unexpected token {t:?}"))),
+            };
+            if let Some(s) = step {
+                if s <= 0.0 {
+                    return Err(err("step must be positive"));
+                }
+            }
+            ranges.push(ParamRange { meta, lo, hi, step });
+        }
+        if ranges.is_empty() {
+            return Err("params.spec declares no parameters".into());
+        }
+        Ok(TuningSpec { ranges })
+    }
+
+    pub fn load(path: &Path) -> Result<TuningSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::from("# Catla tuning parameter specification\n");
+        for r in &self.ranges {
+            let kind = if r.meta.integer { "int" } else { "float" };
+            out.push_str(&format!("param {} {kind} {} {}", r.meta.name, r.lo, r.hi));
+            if let Some(s) = r.step {
+                out.push_str(&format!(" step {s}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The paper's Fig.2 two-parameter spec.
+    pub fn fig2() -> TuningSpec {
+        Self::parse(
+            "param mapreduce.job.reduces int 2 32 step 2\n\
+             param mapreduce.task.io.sort.mb int 50 800 step 50\n",
+        )
+        .unwrap()
+    }
+
+    /// The four-parameter spec used in the Fig.3 BOBYQA demo.
+    pub fn fig3() -> TuningSpec {
+        Self::parse(
+            "param mapreduce.job.reduces int 1 64\n\
+             param mapreduce.task.io.sort.mb int 16 2048\n\
+             param mapreduce.task.io.sort.factor int 2 128\n\
+             param mapreduce.reduce.shuffle.parallelcopies int 1 64\n",
+        )
+        .unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let spec = TuningSpec::fig2();
+        let back = TuningSpec::parse(&spec.to_string()).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn fig2_grid_matches_paper_shape() {
+        let spec = TuningSpec::fig2();
+        assert_eq!(spec.dims(), 2);
+        let g0 = spec.ranges[0].grid();
+        let g1 = spec.ranges[1].grid();
+        assert_eq!(g0, (1..=16).map(|i| (i * 2) as f64).collect::<Vec<_>>());
+        assert_eq!(g1.len(), 16); // 50..800 step 50
+        assert_eq!(spec.grid_size(), 256);
+    }
+
+    #[test]
+    fn rejects_unknown_param() {
+        assert!(TuningSpec::parse("param not.a.param int 1 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_range() {
+        assert!(TuningSpec::parse("param mapreduce.job.reduces int 0 200\n").is_err());
+    }
+
+    #[test]
+    fn rejects_kind_mismatch() {
+        assert!(TuningSpec::parse("param mapreduce.job.reduces float 1 8\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(TuningSpec::parse("# nothing\n").is_err());
+    }
+
+    #[test]
+    fn default_grid_without_step() {
+        let spec = TuningSpec::parse("param mapreduce.job.reduces int 1 64\n").unwrap();
+        let g = spec.ranges[0].grid();
+        assert!(g.len() >= 8);
+        assert_eq!(g[0], 1.0);
+    }
+}

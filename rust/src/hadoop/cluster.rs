@@ -1,0 +1,230 @@
+//! The cluster boundary: an SSH-shaped job-submission API.
+//!
+//! A real Catla talks to the master host over SSH: upload jar, `hadoop
+//! jar ... -Dk=v`, poll, `yarn logs`, `hdfs dfs -get`. `Cluster` is that
+//! boundary as a trait; `SimCluster` is the simulated implementation
+//! (DESIGN.md substitution table row 1). A real SSH implementation could
+//! be dropped in without touching any Catla code.
+
+use std::collections::HashMap;
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::joblogs;
+use crate::hadoop::mapreduce::{simulate_job, JobResult};
+use crate::hadoop::ClusterSpec;
+use crate::workloads::WorkloadSpec;
+
+/// What Catla submits: "run this jar (workload) with this configuration".
+#[derive(Clone, Debug)]
+pub struct JobSubmission {
+    pub name: String,
+    pub workload: WorkloadSpec,
+    pub config: HadoopConfig,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    Running { progress: f64 },
+    Succeeded { runtime_s: f64 },
+    Failed { reason: String },
+}
+
+/// Downloaded artifacts for one finished job.
+#[derive(Clone, Debug)]
+pub struct JobArtifacts {
+    /// `history.json` — the job-history document.
+    pub history_json: String,
+    /// (filename, content) container logs.
+    pub container_logs: Vec<(String, String)>,
+    /// (filename, content) job output files (part-r-*).
+    pub outputs: Vec<(String, String)>,
+}
+
+/// The SSH-shaped cluster API.
+pub trait Cluster {
+    /// Submit a job; returns the cluster-assigned job id.
+    fn submit_job(&mut self, job: JobSubmission) -> Result<String, String>;
+    /// Poll job status (non-blocking).
+    fn poll(&mut self, job_id: &str) -> Result<JobStatus, String>;
+    /// Download history + logs + outputs after completion.
+    fn fetch_artifacts(&mut self, job_id: &str) -> Result<JobArtifacts, String>;
+    /// Human-readable description for logs/README.
+    fn describe(&self) -> String;
+}
+
+/// Simulated Hadoop 2.x cluster.
+///
+/// Jobs complete in *virtual* time immediately on submission; `poll`
+/// reveals completion after `polls_until_done` calls so the Task Runner's
+/// poll loop is genuinely exercised.
+pub struct SimCluster {
+    pub spec: ClusterSpec,
+    seed_counter: u64,
+    pub polls_until_done: u32,
+    jobs: HashMap<String, (JobResult, u32)>,
+    next_id: u64,
+}
+
+impl SimCluster {
+    pub fn new(spec: ClusterSpec) -> Self {
+        let seed = spec.seed;
+        Self {
+            spec,
+            seed_counter: seed,
+            polls_until_done: 2,
+            jobs: HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    /// Direct, synchronous evaluation used by optimizer hot loops and
+    /// benches (skips the poll dance, still fully deterministic).
+    pub fn run_job(&mut self, job: &JobSubmission) -> JobResult {
+        self.seed_counter = self.seed_counter.wrapping_add(1);
+        simulate_job(&self.spec, &job.workload, &job.config, self.seed_counter)
+    }
+
+    pub fn jobs_completed(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+impl Cluster for SimCluster {
+    fn submit_job(&mut self, job: JobSubmission) -> Result<String, String> {
+        job.config
+            .validate()
+            .map_err(|e| format!("cluster rejected configuration: {e}"))?;
+        job.workload.validate()?;
+        let result = self.run_job(&job);
+        let id = format!("job_{:013}_{:04}", 1_577_000_000 + self.next_id, self.next_id);
+        self.next_id += 1;
+        self.jobs.insert(id.clone(), (result, 0));
+        Ok(id)
+    }
+
+    fn poll(&mut self, job_id: &str) -> Result<JobStatus, String> {
+        let until = self.polls_until_done;
+        let (result, polls) = self
+            .jobs
+            .get_mut(job_id)
+            .ok_or_else(|| format!("unknown job {job_id}"))?;
+        *polls += 1;
+        if *polls >= until {
+            Ok(JobStatus::Succeeded {
+                runtime_s: result.runtime_s,
+            })
+        } else {
+            Ok(JobStatus::Running {
+                progress: (*polls as f64 / until as f64).min(0.99),
+            })
+        }
+    }
+
+    fn fetch_artifacts(&mut self, job_id: &str) -> Result<JobArtifacts, String> {
+        let (result, _) = self
+            .jobs
+            .get(job_id)
+            .ok_or_else(|| format!("unknown job {job_id}"))?;
+        let history_json = joblogs::to_history_json(job_id, result).to_string();
+        let container_logs = result
+            .tasks
+            .iter()
+            .map(|t| {
+                let kind = match t.kind {
+                    crate::hadoop::mapreduce::TaskKind::Map => "m",
+                    crate::hadoop::mapreduce::TaskKind::Reduce => "r",
+                };
+                (
+                    format!("container_{job_id}_{kind}_{:06}.log", t.id),
+                    joblogs::container_log(job_id, t),
+                )
+            })
+            .collect();
+        // synthesize a small part-r-00000 per reducer
+        let outputs = (0..result.counters.total_reduces.min(4))
+            .map(|r| {
+                (
+                    format!("part-r-{r:05}"),
+                    format!(
+                        "# simulated output of {} reducer {r}\nrecords\t{}\n",
+                        result.workload,
+                        (result.counters.hdfs_write_mb * 1024.0) as u64
+                    ),
+                )
+            })
+            .collect();
+        Ok(JobArtifacts {
+            history_json,
+            container_logs,
+            outputs,
+        })
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "SimCluster: {} nodes x ({} MB, {} vcores), {} racks, disk {} MB/s, net {} MB/s, noise σ={}",
+            self.spec.nodes,
+            self.spec.mem_per_node_mb,
+            self.spec.vcores_per_node,
+            self.spec.racks,
+            self.spec.disk_mbps,
+            self.spec.net_mbps,
+            self.spec.noise.sigma
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::wordcount;
+
+    fn submission() -> JobSubmission {
+        JobSubmission {
+            name: "wc".into(),
+            workload: wordcount(2048.0),
+            config: HadoopConfig::default(),
+        }
+    }
+
+    #[test]
+    fn submit_poll_fetch_lifecycle() {
+        let mut c = SimCluster::new(ClusterSpec::default());
+        let id = c.submit_job(submission()).unwrap();
+        assert!(matches!(c.poll(&id).unwrap(), JobStatus::Running { .. }));
+        let st = c.poll(&id).unwrap();
+        match st {
+            JobStatus::Succeeded { runtime_s } => assert!(runtime_s > 0.0),
+            other => panic!("expected success, got {other:?}"),
+        }
+        let art = c.fetch_artifacts(&id).unwrap();
+        assert!(art.history_json.contains("SUCCEEDED"));
+        assert!(!art.container_logs.is_empty());
+        assert!(!art.outputs.is_empty());
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let mut c = SimCluster::new(ClusterSpec::default());
+        let mut s = submission();
+        s.config.values[0] = 1e9; // bypass setters
+        assert!(c.submit_job(s).is_err());
+    }
+
+    #[test]
+    fn unknown_job_errors() {
+        let mut c = SimCluster::new(ClusterSpec::default());
+        assert!(c.poll("job_nope").is_err());
+        assert!(c.fetch_artifacts("job_nope").is_err());
+    }
+
+    #[test]
+    fn repeat_submissions_vary_by_seed() {
+        // the same configuration resubmitted gives a *different* noisy
+        // runtime — the exact phenomenon DFO must cope with
+        let mut c = SimCluster::new(ClusterSpec::default());
+        let a = c.run_job(&submission()).runtime_s;
+        let b = c.run_job(&submission()).runtime_s;
+        assert_ne!(a, b);
+    }
+}

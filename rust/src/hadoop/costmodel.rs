@@ -1,0 +1,353 @@
+//! Analytic MapReduce phase-cost model — the rust mirror of
+//! `python/compile/kernels/ref.py::phase_math`.
+//!
+//! Two consumers:
+//!   * the discrete-event simulator samples *per-task* durations from the
+//!     per-task components here (plus noise), and
+//!   * `predict_phases` gives the noiseless whole-job expectation, which
+//!     must track the AOT JAX artifact to float tolerance
+//!     (`rust/tests/runtime_integration.rs` asserts it).
+//!
+//! Keep formulas in lockstep with ref.py. Units: MB and seconds.
+
+use crate::config::params::*;
+use crate::hadoop::ClusterSpec;
+use crate::workloads::WorkloadSpec;
+
+pub const N_PHASES: usize = 8;
+pub const PH_READ: usize = 0;
+pub const PH_MAP_CPU: usize = 1;
+pub const PH_MAP_IO: usize = 2;
+pub const PH_SHUFFLE: usize = 3;
+pub const PH_RED_IO: usize = 4;
+pub const PH_RED_CPU: usize = 5;
+pub const PH_WRITE: usize = 6;
+pub const PH_OVERHEAD: usize = 7;
+
+pub const PHASE_NAMES: [&str; N_PHASES] = [
+    "read", "map_cpu", "map_io", "shuffle", "red_io", "red_cpu", "write", "overhead",
+];
+
+const EPS: f64 = 1e-6;
+
+/// Task-count / slot geometry for a (config, workload, cluster) triple.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobGeometry {
+    pub maps: u64,
+    pub reduces: u64,
+    pub map_slots: u64,
+    pub red_slots: u64,
+    pub map_waves: u64,
+    pub red_waves: u64,
+    pub mb_per_map: f64,
+}
+
+pub fn geometry(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) -> JobGeometry {
+    let input_mb = wl.input_mb.max(1.0);
+    let split_mb = cfg.get(P_SPLIT_MB).max(1.0);
+    let maps = (input_mb / split_mb).ceil().max(1.0);
+    let node_mem = (cl.mem_per_node_mb as f64).max(256.0);
+    let vcores = (cl.vcores_per_node as f64).max(1.0);
+    let nodes = (cl.nodes as f64).max(1.0);
+    let map_mem = cfg.get(P_MAP_MEM_MB).max(128.0);
+    let red_mem = cfg.get(P_RED_MEM_MB).max(128.0);
+    let map_slots = nodes * ((node_mem / map_mem).floor().min(vcores)).max(1.0);
+    let red_slots = nodes * ((node_mem / red_mem).floor().min(vcores)).max(1.0);
+    let reduces = cfg.get(P_REDUCES).max(1.0);
+    JobGeometry {
+        maps: maps as u64,
+        reduces: reduces as u64,
+        map_slots: map_slots as u64,
+        red_slots: red_slots as u64,
+        map_waves: (maps / map_slots).ceil() as u64,
+        red_waves: (reduces / red_slots).ceil() as u64,
+        mb_per_map: input_mb / maps,
+    }
+}
+
+/// Per-map-task cost components (noiseless, node-local read).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MapTaskCost {
+    pub t_read_local: f64,
+    pub t_read_remote: f64,
+    pub t_cpu: f64, // map fn + sort + compress
+    pub t_spill_io: f64,
+    pub t_merge_io: f64,
+    pub spills: u64,
+    /// Map output (logical MB) and on-disk/wire MB after compression.
+    pub map_out_mb: f64,
+    pub disk_out_mb: f64,
+}
+
+impl MapTaskCost {
+    /// Total duration with the given read-locality.
+    pub fn total(&self, local: bool) -> f64 {
+        let read = if local { self.t_read_local } else { self.t_read_remote };
+        read + self.t_cpu + self.t_spill_io + self.t_merge_io
+    }
+}
+
+pub fn map_task_cost(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) -> MapTaskCost {
+    let g = geometry(cfg, wl, cl);
+    let b = g.mb_per_map;
+    let disk = (cl.disk_mbps).max(EPS);
+    let compress = cfg.get(P_COMPRESS).clamp(0.0, 1.0);
+    let cpu_map = wl.cpu_per_mb_map;
+
+    // ref.py blends locality into one rate; the DES resolves locality per
+    // task, so expose both and let predict_phases() blend identically.
+    let t_read_local = b / disk;
+    let t_read_remote = b / (disk * 0.6);
+
+    let t_map_fn = b * cpu_map;
+    let map_out = b * wl.map_selectivity;
+    let disk_out = map_out * (1.0 - compress * (1.0 - wl.compress_ratio));
+
+    let buf = cfg.get(P_IO_SORT_MB).max(1.0) * cfg.get(P_SPILL_PERCENT).clamp(0.05, 1.0);
+    let spills = (map_out / buf.max(EPS)).ceil().max(1.0);
+    let buf_records = (map_out.min(buf) * 1024.0 / wl.record_kb.max(1e-4)).max(2.0);
+    let t_sort = map_out * cpu_map * 0.25 * buf_records.log2() / 20.0;
+    let t_compress = map_out * cpu_map * 0.30 * compress;
+
+    let t_spill_io = disk_out / disk;
+    let sort_factor = cfg.get(P_SORT_FACTOR).max(2.0);
+    let merge_passes = if spills > 1.0 {
+        (spills.ln() / sort_factor.ln()).ceil()
+    } else {
+        0.0
+    };
+    let t_merge_io = merge_passes * 2.0 * disk_out / disk;
+
+    MapTaskCost {
+        t_read_local,
+        t_read_remote,
+        t_cpu: t_map_fn + t_sort + t_compress,
+        t_spill_io,
+        t_merge_io,
+        spills: spills as u64,
+        map_out_mb: map_out,
+        disk_out_mb: disk_out,
+    }
+}
+
+/// Shuffle cost for one average reducer.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShuffleCost {
+    /// Copy seconds for the mean partition at the achievable rate.
+    pub t_copy: f64,
+    /// Mean shuffled MB per reducer (on-wire, possibly compressed).
+    pub per_red_mb: f64,
+    /// Mean logical (uncompressed) MB per reducer.
+    pub per_red_logical_mb: f64,
+}
+
+pub fn shuffle_cost(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) -> ShuffleCost {
+    let g = geometry(cfg, wl, cl);
+    let m = map_task_cost(cfg, wl, cl);
+    let net = cl.net_mbps.max(EPS);
+    let reduces = g.reduces as f64;
+    let total_shuffle = g.maps as f64 * m.disk_out_mb;
+    let per_red = total_shuffle / reduces;
+    let pcopies = cfg.get(P_PARALLEL_COPIES).max(1.0);
+    let copy_eff = net * (0.4 + 0.6 * pcopies.min(16.0) / 16.0);
+    let active_red = reduces.min(g.red_slots as f64);
+    let fair_share = net * cl.nodes as f64 / active_red.max(1.0);
+    let rate = copy_eff.min(fair_share);
+    ShuffleCost {
+        t_copy: per_red / rate.max(EPS),
+        per_red_mb: per_red,
+        per_red_logical_mb: g.maps as f64 * m.map_out_mb / reduces,
+    }
+}
+
+/// Per-reduce-task cost components (mean partition).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReduceTaskCost {
+    pub t_merge_io: f64,
+    pub t_cpu: f64, // reduce fn + decompress
+    pub t_write: f64,
+}
+
+impl ReduceTaskCost {
+    pub fn total(&self) -> f64 {
+        self.t_merge_io + self.t_cpu + self.t_write
+    }
+}
+
+pub fn reduce_task_cost(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) -> ReduceTaskCost {
+    let g = geometry(cfg, wl, cl);
+    let sh = shuffle_cost(cfg, wl, cl);
+    let disk = cl.disk_mbps.max(EPS);
+    let compress = cfg.get(P_COMPRESS).clamp(0.0, 1.0);
+    let sort_factor = cfg.get(P_SORT_FACTOR).max(2.0);
+
+    let t_decompress = sh.per_red_logical_mb * wl.cpu_per_mb_map * 0.10 * compress;
+    let merge_passes = (((g.maps as f64).max(2.0).ln() / sort_factor.ln()).ceil() - 1.0).max(0.0);
+    let in_memory = sh.per_red_mb <= 0.70 * cfg.get(P_RED_MEM_MB);
+    let t_merge_io = if in_memory {
+        0.0
+    } else {
+        merge_passes * 2.0 * sh.per_red_mb / disk
+    };
+    let t_red_fn = sh.per_red_logical_mb * wl.cpu_per_mb_red;
+    let out_mb = sh.per_red_logical_mb * wl.output_selectivity;
+    let t_write = out_mb * cl.replication.max(1) as f64 / disk;
+    ReduceTaskCost {
+        t_merge_io,
+        t_cpu: t_red_fn + t_decompress,
+        t_write,
+    }
+}
+
+/// Noiseless whole-job phase expectation — must match ref.py/the AOT
+/// artifact bit-for-float. Returns wave-multiplied channel seconds.
+pub fn predict_phases(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) -> [f64; N_PHASES] {
+    let g = geometry(cfg, wl, cl);
+    let m = map_task_cost(cfg, wl, cl);
+    let sh = shuffle_cost(cfg, wl, cl);
+    let r = reduce_task_cost(cfg, wl, cl);
+    let map_waves = g.map_waves as f64;
+    let red_waves = g.red_waves as f64;
+    let slowstart = cfg.get(P_SLOWSTART).clamp(0.0, 1.0);
+
+    // blended read rate, as in ref.py
+    let loc = cl.locality.clamp(0.0, 1.0);
+    let read_rate_blend = cl.disk_mbps.max(EPS) * (loc + (1.0 - loc) * 0.6);
+    let t_read = g.mb_per_map / read_rate_blend;
+
+    let map_phase = map_waves * (t_read + m.t_cpu + m.t_spill_io + m.t_merge_io);
+    let overlap = (1.0 - slowstart) * map_phase;
+    let shuffle_tail = (sh.t_copy - overlap).max(sh.t_copy * 0.05);
+    let squat = (1.0 - slowstart)
+        * 0.05
+        * map_phase
+        * (g.reduces as f64 / (g.red_slots as f64).max(1.0)).min(1.0);
+
+    [
+        map_waves * t_read,
+        map_waves * m.t_cpu,
+        map_waves * (m.t_spill_io + m.t_merge_io),
+        shuffle_tail + squat,
+        red_waves * r.t_merge_io,
+        red_waves * r.t_cpu,
+        red_waves * r.t_write,
+        cl.am_overhead_s + (map_waves + red_waves) * cl.task_overhead_s,
+    ]
+}
+
+/// Calibration matrix — mirror of spec.default_weights().
+pub fn default_weights() -> [[f64; N_PHASES]; N_PHASES] {
+    let mut w = [[0.0; N_PHASES]; N_PHASES];
+    for (i, row) in w.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    w[PH_MAP_CPU][PH_MAP_IO] = -0.08;
+    w[PH_RED_CPU][PH_RED_IO] = -0.05;
+    w
+}
+
+/// Noiseless runtime prediction: sum(phases @ W).
+pub fn predict_runtime(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) -> f64 {
+    let ph = predict_phases(cfg, wl, cl);
+    let w = default_weights();
+    let mut total = 0.0;
+    for (i, &p) in ph.iter().enumerate() {
+        for j in 0..N_PHASES {
+            total += p * w[i][j];
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::wordcount;
+
+    fn cl() -> ClusterSpec {
+        ClusterSpec::default()
+    }
+
+    #[test]
+    fn geometry_basics() {
+        let cfg = HadoopConfig::default();
+        let wl = wordcount(10240.0);
+        let g = geometry(&cfg, &wl, &cl());
+        assert_eq!(g.maps, 80); // 10240 / 128
+        assert_eq!(g.reduces, 1);
+        assert!(g.map_slots >= 16);
+        assert_eq!(g.map_waves, 1);
+    }
+
+    #[test]
+    fn bigger_sort_buffer_fewer_spills() {
+        let wl = wordcount(10240.0);
+        let mut lo = HadoopConfig::default();
+        lo.set(P_IO_SORT_MB, 16.0);
+        let mut hi = lo.clone();
+        hi.set(P_IO_SORT_MB, 2048.0);
+        let c_lo = map_task_cost(&lo, &wl, &cl());
+        let c_hi = map_task_cost(&hi, &wl, &cl());
+        assert!(c_hi.spills <= c_lo.spills);
+        assert!(c_hi.t_merge_io <= c_lo.t_merge_io);
+    }
+
+    #[test]
+    fn compression_shrinks_wire_bytes_adds_cpu() {
+        let wl = wordcount(10240.0);
+        let mut plain = HadoopConfig::default();
+        plain.set(P_COMPRESS, 0.0);
+        let mut comp = plain.clone();
+        comp.set(P_COMPRESS, 1.0);
+        let a = map_task_cost(&plain, &wl, &cl());
+        let b = map_task_cost(&comp, &wl, &cl());
+        assert!(b.disk_out_mb < a.disk_out_mb);
+        assert!(b.t_cpu > a.t_cpu);
+    }
+
+    #[test]
+    fn more_reducers_less_per_red() {
+        let wl = wordcount(10240.0);
+        let mut few = HadoopConfig::default();
+        few.set(P_REDUCES, 2.0);
+        let mut many = few.clone();
+        many.set(P_REDUCES, 32.0);
+        let a = shuffle_cost(&few, &wl, &cl());
+        let b = shuffle_cost(&many, &wl, &cl());
+        assert!(b.per_red_mb < a.per_red_mb);
+    }
+
+    #[test]
+    fn predict_runtime_positive_and_finite() {
+        let wl = wordcount(10240.0);
+        let cfg = HadoopConfig::default();
+        let rt = predict_runtime(&cfg, &wl, &cl());
+        assert!(rt.is_finite() && rt > 0.0, "rt = {rt}");
+    }
+
+    #[test]
+    fn wave_boundary_increases_runtime() {
+        // 4 nodes x 8 vcores -> 32 reduce slots; 33 reducers = 2 waves
+        let mut cl = ClusterSpec::default();
+        cl.nodes = 4;
+        let wl = wordcount(10240.0);
+        let mut c32 = HadoopConfig::default();
+        c32.set(P_REDUCES, 32.0);
+        c32.set(P_IO_SORT_MB, 256.0);
+        let mut c33 = c32.clone();
+        c33.set(P_REDUCES, 33.0);
+        assert!(predict_runtime(&c33, &wl, &cl) > predict_runtime(&c32, &wl, &cl));
+    }
+
+    #[test]
+    fn phase_channels_nonnegative() {
+        let wl = wordcount(4096.0);
+        for reduces in [1.0, 8.0, 64.0] {
+            let mut cfg = HadoopConfig::default();
+            cfg.set(P_REDUCES, reduces);
+            for (i, p) in predict_phases(&cfg, &wl, &cl()).iter().enumerate() {
+                assert!(*p >= 0.0, "phase {} negative: {p}", PHASE_NAMES[i]);
+            }
+        }
+    }
+}

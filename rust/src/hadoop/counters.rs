@@ -1,0 +1,91 @@
+//! Hadoop job counters, the metrics surface a real Catla scrapes from the
+//! job-history server after completion.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JobCounters {
+    pub total_maps: u64,
+    pub total_reduces: u64,
+    pub failed_task_attempts: u64,
+    pub speculative_attempts: u64,
+    pub spilled_records: u64,
+    pub map_input_mb: f64,
+    pub map_output_mb: f64,
+    pub shuffle_mb: f64,
+    pub hdfs_write_mb: f64,
+    pub file_write_mb: f64,
+    pub data_local_maps: u64,
+    pub rack_local_maps: u64,
+    pub off_rack_maps: u64,
+}
+
+impl JobCounters {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("TOTAL_LAUNCHED_MAPS", Json::from(self.total_maps))
+            .set("TOTAL_LAUNCHED_REDUCES", Json::from(self.total_reduces))
+            .set("NUM_FAILED_ATTEMPTS", Json::from(self.failed_task_attempts))
+            .set("NUM_SPECULATIVE_ATTEMPTS", Json::from(self.speculative_attempts))
+            .set("SPILLED_RECORDS", Json::from(self.spilled_records))
+            .set("MAP_INPUT_MB", Json::from(self.map_input_mb))
+            .set("MAP_OUTPUT_MB", Json::from(self.map_output_mb))
+            .set("REDUCE_SHUFFLE_MB", Json::from(self.shuffle_mb))
+            .set("HDFS_BYTES_WRITTEN_MB", Json::from(self.hdfs_write_mb))
+            .set("FILE_BYTES_WRITTEN_MB", Json::from(self.file_write_mb))
+            .set("DATA_LOCAL_MAPS", Json::from(self.data_local_maps))
+            .set("RACK_LOCAL_MAPS", Json::from(self.rack_local_maps))
+            .set("OTHER_LOCAL_MAPS", Json::from(self.off_rack_maps));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Option<JobCounters> {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        Some(JobCounters {
+            total_maps: f("TOTAL_LAUNCHED_MAPS")? as u64,
+            total_reduces: f("TOTAL_LAUNCHED_REDUCES")? as u64,
+            failed_task_attempts: f("NUM_FAILED_ATTEMPTS")? as u64,
+            speculative_attempts: f("NUM_SPECULATIVE_ATTEMPTS")? as u64,
+            spilled_records: f("SPILLED_RECORDS")? as u64,
+            map_input_mb: f("MAP_INPUT_MB")?,
+            map_output_mb: f("MAP_OUTPUT_MB")?,
+            shuffle_mb: f("REDUCE_SHUFFLE_MB")?,
+            hdfs_write_mb: f("HDFS_BYTES_WRITTEN_MB")?,
+            file_write_mb: f("FILE_BYTES_WRITTEN_MB")?,
+            data_local_maps: f("DATA_LOCAL_MAPS")? as u64,
+            rack_local_maps: f("RACK_LOCAL_MAPS")? as u64,
+            off_rack_maps: f("OTHER_LOCAL_MAPS")? as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let c = JobCounters {
+            total_maps: 80,
+            total_reduces: 8,
+            failed_task_attempts: 1,
+            speculative_attempts: 2,
+            spilled_records: 123456,
+            map_input_mb: 10240.0,
+            map_output_mb: 3072.0,
+            shuffle_mb: 1075.2,
+            hdfs_write_mb: 307.2,
+            file_write_mb: 3072.0,
+            data_local_maps: 70,
+            rack_local_maps: 8,
+            off_rack_maps: 2,
+        };
+        let back = JobCounters::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn missing_fields_reject() {
+        assert!(JobCounters::from_json(&Json::obj()).is_none());
+    }
+}

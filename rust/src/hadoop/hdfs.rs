@@ -1,0 +1,211 @@
+//! HDFS block placement with rack awareness.
+//!
+//! The simulator needs locality-accurate map scheduling: a map task reads
+//! its split from a node holding a replica at disk speed, from the same
+//! rack at a discount, or cross-rack at the remote rate. Placement follows
+//! the classic HDFS policy: first replica on a random node, second on a
+//! different rack, third on a different node of the second's rack.
+
+use crate::util::rng::Rng;
+
+/// One input split / block and the nodes holding its replicas.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    pub id: u64,
+    pub replicas: Vec<usize>, // node ids
+}
+
+/// Immutable cluster topology: node -> rack.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub racks: Vec<usize>, // racks[node] = rack id
+    pub n_racks: usize,
+}
+
+impl Topology {
+    /// Spread `nodes` round-robin over `n_racks` racks.
+    pub fn new(nodes: usize, n_racks: usize) -> Topology {
+        let n_racks = n_racks.max(1).min(nodes.max(1));
+        Topology {
+            racks: (0..nodes).map(|n| n % n_racks).collect(),
+            n_racks,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.racks.len()
+    }
+
+    pub fn same_rack(&self, a: usize, b: usize) -> bool {
+        self.racks[a] == self.racks[b]
+    }
+}
+
+/// Read-locality class of a (task node, block) pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Locality {
+    NodeLocal,
+    RackLocal,
+    OffRack,
+}
+
+impl Locality {
+    /// Effective read-rate multiplier vs. local disk.
+    pub fn rate_factor(self) -> f64 {
+        match self {
+            Locality::NodeLocal => 1.0,
+            Locality::RackLocal => 0.8,
+            Locality::OffRack => 0.6,
+        }
+    }
+}
+
+/// Place `n_blocks` blocks with `replication` replicas each.
+pub fn place_blocks(
+    topo: &Topology,
+    n_blocks: u64,
+    replication: usize,
+    rng: &mut Rng,
+) -> Vec<Block> {
+    let nodes = topo.nodes();
+    let replication = replication.max(1).min(nodes.max(1));
+    (0..n_blocks)
+        .map(|id| {
+            let mut replicas = Vec::with_capacity(replication);
+            // 1st replica: uniform random node
+            let first = rng.below(nodes);
+            replicas.push(first);
+            if replication >= 2 {
+                // 2nd: a node on a different rack if one exists.
+                // Rejection sampling (bounded), then deterministic scan —
+                // avoids building a candidate Vec per block (§Perf).
+                let mut second = None;
+                if topo.n_racks > 1 {
+                    for _ in 0..8 {
+                        let n = rng.below(nodes);
+                        if !topo.same_rack(n, first) {
+                            second = Some(n);
+                            break;
+                        }
+                    }
+                    if second.is_none() {
+                        second = (0..nodes).find(|&n| !topo.same_rack(n, first));
+                    }
+                }
+                let second = second.unwrap_or((first + 1) % nodes);
+                if !replicas.contains(&second) {
+                    replicas.push(second);
+                }
+            }
+            while replicas.len() < replication {
+                // 3rd+: same rack as the last replica, different node;
+                // fall back to any unused node
+                let anchor = *replicas.last().unwrap();
+                let mut pick = None;
+                for _ in 0..8 {
+                    let n = rng.below(nodes);
+                    if topo.same_rack(n, anchor) && !replicas.contains(&n) {
+                        pick = Some(n);
+                        break;
+                    }
+                }
+                if pick.is_none() {
+                    pick = (0..nodes)
+                        .find(|&n| topo.same_rack(n, anchor) && !replicas.contains(&n))
+                        .or_else(|| (0..nodes).find(|n| !replicas.contains(n)));
+                }
+                match pick {
+                    Some(n) => replicas.push(n),
+                    None => break,
+                }
+            }
+            Block { id, replicas }
+        })
+        .collect()
+}
+
+/// Locality of reading `block` from `node`.
+pub fn locality(topo: &Topology, block: &Block, node: usize) -> Locality {
+    if block.replicas.contains(&node) {
+        Locality::NodeLocal
+    } else if block.replicas.iter().any(|&r| topo.same_rack(r, node)) {
+        Locality::RackLocal
+    } else {
+        Locality::OffRack
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicas_are_distinct() {
+        let topo = Topology::new(16, 2);
+        let mut rng = Rng::new(1);
+        for b in place_blocks(&topo, 200, 3, &mut rng) {
+            let mut r = b.replicas.clone();
+            r.sort_unstable();
+            r.dedup();
+            assert_eq!(r.len(), b.replicas.len(), "dup replicas in {b:?}");
+            assert_eq!(b.replicas.len(), 3);
+        }
+    }
+
+    #[test]
+    fn second_replica_crosses_racks() {
+        let topo = Topology::new(16, 2);
+        let mut rng = Rng::new(2);
+        for b in place_blocks(&topo, 100, 3, &mut rng) {
+            assert!(
+                !topo.same_rack(b.replicas[0], b.replicas[1]),
+                "replicas 0/1 same rack: {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn replication_capped_by_cluster_size() {
+        let topo = Topology::new(2, 1);
+        let mut rng = Rng::new(3);
+        let blocks = place_blocks(&topo, 10, 3, &mut rng);
+        for b in blocks {
+            assert!(b.replicas.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn locality_classes() {
+        let topo = Topology::new(4, 2); // racks: 0,1,0,1
+        let block = Block { id: 0, replicas: vec![0] };
+        assert_eq!(locality(&topo, &block, 0), Locality::NodeLocal);
+        assert_eq!(locality(&topo, &block, 2), Locality::RackLocal); // rack 0
+        assert_eq!(locality(&topo, &block, 1), Locality::OffRack); // rack 1
+    }
+
+    #[test]
+    fn placement_roughly_balanced() {
+        let topo = Topology::new(8, 2);
+        let mut rng = Rng::new(4);
+        let blocks = place_blocks(&topo, 800, 3, &mut rng);
+        let mut counts = vec![0usize; 8];
+        for b in &blocks {
+            for &r in &b.replicas {
+                counts[r] += 1;
+            }
+        }
+        let mean = counts.iter().sum::<usize>() as f64 / 8.0;
+        for (n, c) in counts.iter().enumerate() {
+            assert!(
+                (*c as f64) > mean * 0.5 && (*c as f64) < mean * 1.5,
+                "node {n} has {c} replicas vs mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_factors_ordered() {
+        assert!(Locality::NodeLocal.rate_factor() > Locality::RackLocal.rate_factor());
+        assert!(Locality::RackLocal.rate_factor() > Locality::OffRack.rate_factor());
+    }
+}

@@ -1,0 +1,199 @@
+//! Job-history log generation and parsing.
+//!
+//! A real Catla downloads YARN job-history + aggregated container logs
+//! after completion and mines running times out of them. The simulator
+//! emits the same artifact shape (a JSON history document plus plain-text
+//! container logs) and `catla::metrics` parses it back — exercising the
+//! full download→parse→summarize pipeline the paper describes.
+
+use crate::hadoop::counters::JobCounters;
+use crate::hadoop::mapreduce::{JobResult, TaskKind, TaskRecord};
+use crate::util::json::{parse, Json};
+
+/// Render a `JobResult` as the JSON history document.
+pub fn to_history_json(job_id: &str, r: &JobResult) -> Json {
+    let mut tasks = Vec::with_capacity(r.tasks.len());
+    for t in &r.tasks {
+        let mut o = Json::obj();
+        o.set(
+            "type",
+            Json::from(match t.kind {
+                TaskKind::Map => "MAP",
+                TaskKind::Reduce => "REDUCE",
+            }),
+        )
+        .set("id", Json::from(t.id))
+        .set("node", Json::from(t.node))
+        .set("start", Json::from(t.start))
+        .set("finish", Json::from(t.finish))
+        .set("attempts", Json::from(t.attempts as u64))
+        .set("speculative", Json::from(t.speculative))
+        .set(
+            "locality",
+            match t.locality {
+                Some(l) => Json::from(format!("{l:?}")),
+                None => Json::Null,
+            },
+        );
+        tasks.push(o);
+    }
+    let mut j = Json::obj();
+    j.set("jobId", Json::from(job_id))
+        .set("workload", Json::from(r.workload.as_str()))
+        .set("state", Json::from("SUCCEEDED"))
+        .set("runtimeSeconds", Json::from(r.runtime_s))
+        .set("mapPhaseEndSeconds", Json::from(r.map_phase_end_s))
+        .set("seed", Json::from(r.seed))
+        .set("counters", r.counters.to_json())
+        .set(
+            "configuration",
+            config_json(&r.config),
+        )
+        .set("tasks", Json::Arr(tasks));
+    j
+}
+
+fn config_json(cfg: &crate::config::params::HadoopConfig) -> Json {
+    let mut o = Json::obj();
+    for p in crate::config::params::PARAMS.iter() {
+        o.set(p.name, Json::from(cfg.values[p.index]));
+    }
+    o
+}
+
+/// The subset of a history document Catla's metrics care about.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedHistory {
+    pub job_id: String,
+    pub workload: String,
+    pub runtime_s: f64,
+    pub map_phase_end_s: f64,
+    pub counters: JobCounters,
+    pub n_map_tasks: usize,
+    pub n_reduce_tasks: usize,
+    pub config: Vec<(String, f64)>,
+}
+
+/// Parse a history JSON document (as downloaded text).
+pub fn parse_history(text: &str) -> Result<ParsedHistory, String> {
+    let j = parse(text)?;
+    let s = |k: &str| -> Result<String, String> {
+        j.get(k)
+            .and_then(Json::as_str)
+            .map(|x| x.to_string())
+            .ok_or_else(|| format!("history missing {k}"))
+    };
+    let f = |k: &str| -> Result<f64, String> {
+        j.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("history missing {k}"))
+    };
+    let counters = j
+        .get("counters")
+        .and_then(JobCounters::from_json)
+        .ok_or("history missing counters")?;
+    let tasks = j.get("tasks").and_then(Json::as_arr).ok_or("missing tasks")?;
+    let n_map_tasks = tasks
+        .iter()
+        .filter(|t| t.get("type").and_then(Json::as_str) == Some("MAP"))
+        .count();
+    let n_reduce_tasks = tasks.len() - n_map_tasks;
+    let mut config = Vec::new();
+    if let Some(Json::Obj(m)) = j.get("configuration") {
+        for (k, v) in m {
+            if let Some(x) = v.as_f64() {
+                config.push((k.clone(), x));
+            }
+        }
+    }
+    Ok(ParsedHistory {
+        job_id: s("jobId")?,
+        workload: s("workload")?,
+        runtime_s: f("runtimeSeconds")?,
+        map_phase_end_s: f("mapPhaseEndSeconds")?,
+        counters,
+        n_map_tasks,
+        n_reduce_tasks,
+        config,
+    })
+}
+
+/// Synthesize an aggregated container log (what `yarn logs` returns).
+/// Plain text; the paper's log-aggregation tool re-collects these.
+pub fn container_log(job_id: &str, t: &TaskRecord) -> String {
+    let kind = match t.kind {
+        TaskKind::Map => "m",
+        TaskKind::Reduce => "r",
+    };
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Container: container_{job_id}_{kind}_{:06}\n",
+        t.id
+    ));
+    s.push_str(&format!(
+        "LogType:syslog\nLog Upload Time:{:.3}\n",
+        t.finish
+    ));
+    s.push_str(&format!(
+        "INFO [main] org.apache.hadoop.mapred.{}Task: start={:.3} finish={:.3} attempts={}\n",
+        if t.kind == TaskKind::Map { "Map" } else { "Reduce" },
+        t.start,
+        t.finish,
+        t.attempts
+    ));
+    if let Some(loc) = t.locality {
+        s.push_str(&format!("INFO [main] locality={loc:?}\n"));
+    }
+    if t.speculative {
+        s.push_str("INFO [main] speculative attempt won\n");
+    }
+    s.push_str("INFO [main] Task done.\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::hadoop::{simulate_job, ClusterSpec};
+    use crate::workloads::wordcount;
+
+    fn sample() -> JobResult {
+        simulate_job(
+            &ClusterSpec::default(),
+            &wordcount(2048.0),
+            &HadoopConfig::default(),
+            1,
+        )
+    }
+
+    #[test]
+    fn history_roundtrip() {
+        let r = sample();
+        let text = to_history_json("job_001", &r).to_string();
+        let p = parse_history(&text).unwrap();
+        assert_eq!(p.job_id, "job_001");
+        assert_eq!(p.workload, "wordcount");
+        assert!((p.runtime_s - r.runtime_s).abs() < 1e-9);
+        assert_eq!(p.counters, r.counters);
+        assert_eq!(p.n_map_tasks as u64, r.counters.total_maps);
+        assert!(!p.config.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_truncated() {
+        let r = sample();
+        let text = to_history_json("job_001", &r).to_string();
+        let cut = &text[..text.len() / 2];
+        assert!(parse_history(cut).is_err());
+    }
+
+    #[test]
+    fn container_log_mentions_times() {
+        let r = sample();
+        let log = container_log("job_001", &r.tasks[0]);
+        assert!(log.contains("start="));
+        assert!(log.contains("finish="));
+        assert!(log.contains("Task done."));
+    }
+}

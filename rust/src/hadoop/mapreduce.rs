@@ -1,0 +1,590 @@
+//! Discrete-event simulation of one MapReduce job on a YARN cluster.
+//!
+//! Models, per task: container allocation (shared map/reduce pools),
+//! HDFS read locality, spill/merge IO, shuffle with slowstart overlap,
+//! partition skew, per-task noise, stragglers, task failure + retry and
+//! speculative execution. The noiseless expectation of this engine is
+//! `costmodel::predict_phases`; `rust/tests/sim_vs_model.rs` keeps the
+//! two within tolerance.
+
+use crate::config::params::*;
+use crate::hadoop::costmodel::{self, N_PHASES};
+use crate::hadoop::counters::JobCounters;
+use crate::hadoop::events::EventQueue;
+use crate::hadoop::hdfs::{self, Block, Locality, Topology};
+use crate::hadoop::noise::partition_weights;
+use crate::hadoop::yarn::{Container, YarnState};
+use crate::hadoop::ClusterSpec;
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+/// Completed-task record for the job-history log.
+#[derive(Clone, Debug)]
+pub struct TaskRecord {
+    pub kind: TaskKind,
+    pub id: u64,
+    pub node: usize,
+    pub start: f64,
+    pub finish: f64,
+    pub attempts: u32,
+    pub speculative: bool,
+    pub locality: Option<Locality>,
+}
+
+/// Everything Catla's metrics parser wants to know about one run.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Wall-clock job running time in simulated seconds — THE tuning metric.
+    pub runtime_s: f64,
+    /// Time the last map task finished.
+    pub map_phase_end_s: f64,
+    pub tasks: Vec<TaskRecord>,
+    pub counters: JobCounters,
+    /// Task-second aggregates per analytic phase channel (diagnostics).
+    pub phase_task_seconds: [f64; N_PHASES],
+    pub workload: String,
+    pub config: HadoopConfig,
+    pub seed: u64,
+}
+
+enum Ev {
+    Start,
+    /// (task id, attempt epoch)
+    MapFinish(u64, u32),
+    MapFail(u64, u32),
+    ReduceFinish(u64),
+}
+
+struct MapTaskState {
+    block: usize,
+    attempts: u32,
+    epoch: u32,
+    done: bool,
+    start: f64,
+    /// (container, node, expected finish, speculative?) per live attempt
+    live: Vec<(Container, usize, f64, bool)>,
+    locality: Option<Locality>,
+}
+
+struct ReduceTaskState {
+    alloc_t: f64,
+    container: Option<Container>,
+    node: usize,
+    started: bool,
+    weight: f64,
+    mult: f64,
+}
+
+/// Simulate one job. Deterministic for a given (cluster, workload,
+/// config, seed) quadruple regardless of host threading.
+pub fn simulate_job(
+    cl: &ClusterSpec,
+    wl: &WorkloadSpec,
+    cfg: &HadoopConfig,
+    seed: u64,
+) -> JobResult {
+    let mut root = Rng::new(seed ^ 0xCA71A);
+    let topo = Topology::new(cl.nodes as usize, cl.racks as usize);
+    let geo = costmodel::geometry(cfg, wl, cl);
+    let map_cost = costmodel::map_task_cost(cfg, wl, cl);
+    let shuffle = costmodel::shuffle_cost(cfg, wl, cl);
+    let red_cost = costmodel::reduce_task_cost(cfg, wl, cl);
+
+    let maps = geo.maps as usize;
+    let reduces = geo.reduces as usize;
+    let blocks: Vec<Block> = hdfs::place_blocks(
+        &topo,
+        geo.maps,
+        cl.replication as usize,
+        &mut root.fork(1),
+    );
+    let node_factor = cl.noise.node_factors(&mut root.fork(2), topo.nodes());
+    let weights = partition_weights(&mut root.fork(3), reduces, wl.key_skew);
+    // per-block container preference: replica nodes, then same-rack nodes
+    let preferred_nodes: Vec<Vec<usize>> = blocks
+        .iter()
+        .map(|b| {
+            let mut p = b.replicas.clone();
+            p.extend(
+                (0..topo.nodes())
+                    .filter(|&n| !b.replicas.contains(&n)
+                        && b.replicas.iter().any(|&r| topo.same_rack(r, n))),
+            );
+            p
+        })
+        .collect();
+
+    let map_mem = cfg.get(P_MAP_MEM_MB);
+    let red_mem = cfg.get(P_RED_MEM_MB);
+    let slowstart = cfg.get(P_SLOWSTART).clamp(0.0, 1.0);
+    let slowstart_maps = ((slowstart * maps as f64).ceil() as usize).min(maps);
+
+    let mut yarn = YarnState::new(
+        topo.nodes(),
+        cl.mem_per_node_mb as f64,
+        cl.vcores_per_node as u32,
+    );
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut noise_rng = root.fork(4);
+
+    let mut map_states: Vec<MapTaskState> = (0..maps)
+        .map(|i| MapTaskState {
+            block: i,
+            attempts: 0,
+            epoch: 0,
+            done: false,
+            start: f64::NAN,
+            live: Vec::new(),
+            locality: None,
+        })
+        .collect();
+    let mut pending_maps: std::collections::VecDeque<u64> = (0..maps as u64).collect();
+    let mut red_states: Vec<ReduceTaskState> = (0..reduces)
+        .map(|_| ReduceTaskState {
+            alloc_t: f64::NAN,
+            container: None,
+            node: 0,
+            started: false,
+            weight: 1.0,
+            mult: 1.0,
+        })
+        .collect();
+    let mut pending_reds: std::collections::VecDeque<u64> = (0..reduces as u64).collect();
+    let mut fetching_reds: Vec<u64> = Vec::new();
+
+    let mut maps_done = 0usize;
+    let mut reds_done = 0usize;
+    let mut map_phase_end = 0.0f64;
+    let mut last_finish = 0.0f64;
+    let mut tasks: Vec<TaskRecord> = Vec::with_capacity(maps + reduces);
+    let mut counters = JobCounters {
+        total_maps: geo.maps,
+        total_reduces: geo.reduces,
+        map_input_mb: wl.input_mb,
+        map_output_mb: geo.maps as f64 * map_cost.map_out_mb,
+        shuffle_mb: geo.maps as f64 * map_cost.disk_out_mb,
+        spilled_records: 0,
+        ..JobCounters::default()
+    };
+    let mut completed_map_durs: Vec<f64> = Vec::with_capacity(maps);
+    let mut phase_secs = [0.0f64; N_PHASES];
+
+    // --- helpers as closures over the mutable state are painful in rust;
+    //     use a small macro instead ---------------------------------------
+    macro_rules! sample_map_attempt {
+        ($q:expr, $tid:expr, $spec:expr) => {{
+            let tid = $tid as usize;
+            let st = &mut map_states[tid];
+            // locality-aware container: prefer replica nodes, then rack
+            // (preference lists precomputed once per job — hot path is
+            // allocation-free, see EXPERIMENTS.md §Perf)
+            match yarn.allocate(map_mem, &preferred_nodes[st.block]) {
+                None => false,
+                Some(container) => {
+                    let node = container.node;
+                    let loc = hdfs::locality(&topo, &blocks[st.block], node);
+                    let mut rng = noise_rng.fork(($tid as u64) * 8 + st.attempts as u64);
+                    let mult = cl.noise.task_multiplier(&mut rng) * node_factor[node];
+                    let read = map_cost.t_read_local / loc.rate_factor();
+                    let dur = (read + map_cost.t_cpu + map_cost.t_spill_io
+                        + map_cost.t_merge_io)
+                        * mult
+                        + cl.task_overhead_s;
+                    st.attempts += 1;
+                    if !$spec {
+                        // epoch invalidates *replaced* attempts (failure
+                        // retries); a speculative copy RACES the original,
+                        // so both events stay valid and the first one wins
+                        st.epoch += 1;
+                    }
+                    if st.start.is_nan() {
+                        st.start = $q.now();
+                        st.locality = Some(loc);
+                    }
+                    let epoch = st.epoch;
+                    let failure = if !$spec && st.attempts < cl.noise.max_attempts {
+                        cl.noise.attempt_failure(&mut rng)
+                    } else {
+                        None
+                    };
+                    st.live.push((container, node, $q.now() + dur, $spec));
+                    match failure {
+                        Some(frac) => $q.schedule_in(dur * frac, Ev::MapFail($tid as u64, epoch)),
+                        None => $q.schedule_in(dur, Ev::MapFinish($tid as u64, epoch)),
+                    }
+                    true
+                }
+            }
+        }};
+    }
+
+    macro_rules! schedule_reduce_finish {
+        ($q:expr, $rid:expr, $last_map_t:expr) => {{
+            let rid = $rid as usize;
+            let rs = &mut red_states[rid];
+            if !rs.started {
+                rs.started = true;
+                let w = rs.weight;
+                let t_copy = shuffle.t_copy * w * rs.mult;
+                let fetch_done = ($last_map_t + 0.05 * t_copy).max(rs.alloc_t + t_copy);
+                let post = (red_cost.t_merge_io + red_cost.t_cpu + red_cost.t_write)
+                    * w
+                    * rs.mult
+                    + cl.task_overhead_s;
+                let finish = fetch_done + post;
+                $q.schedule(finish.max($q.now()), Ev::ReduceFinish(rid as u64));
+            }
+        }};
+    }
+
+    macro_rules! schedule_tasks {
+        ($q:expr) => {{
+            // maps first (FIFO with locality preference)
+            while let Some(&tid) = pending_maps.front() {
+                if sample_map_attempt!($q, tid, false) {
+                    pending_maps.pop_front();
+                } else {
+                    break; // no capacity anywhere
+                }
+            }
+            // reducers once slowstart reached
+            if maps_done >= slowstart_maps {
+                while let Some(&rid) = pending_reds.front() {
+                    match yarn.allocate(red_mem, &[]) {
+                        None => break,
+                        Some(container) => {
+                            pending_reds.pop_front();
+                            let rs = &mut red_states[rid as usize];
+                            rs.alloc_t = $q.now();
+                            rs.node = container.node;
+                            rs.container = Some(container);
+                            let mut rng = noise_rng.fork(1_000_000 + rid);
+                            rs.mult =
+                                cl.noise.task_multiplier(&mut rng) * node_factor[rs.node];
+                            rs.weight = weights[rid as usize];
+                            fetching_reds.push(rid);
+                            if maps_done == maps {
+                                schedule_reduce_finish!($q, rid, map_phase_end);
+                            }
+                        }
+                    }
+                }
+            }
+        }};
+    }
+
+    q.schedule(cl.am_overhead_s, Ev::Start);
+
+    while let Some((t, ev)) = q.pop() {
+        match ev {
+            Ev::Start => {
+                schedule_tasks!(q);
+            }
+            Ev::MapFail(tid, epoch) => {
+                let st = &mut map_states[tid as usize];
+                if st.done || epoch != st.epoch {
+                    continue;
+                }
+                counters.failed_task_attempts += 1;
+                // release this attempt's container, requeue the task
+                if let Some(pos) = st.live.iter().position(|(_, _, _, s)| !s) {
+                    let (c, _, _, _) = st.live.remove(pos);
+                    yarn.release(c);
+                }
+                pending_maps.push_back(tid);
+                schedule_tasks!(q);
+            }
+            Ev::MapFinish(tid, epoch) => {
+                let (was_done, spec_of_this) = {
+                    let st = &map_states[tid as usize];
+                    (
+                        st.done,
+                        st.live.iter().find(|(_, _, f, _)| (*f - t).abs() < 1e-9).map(|x| x.3),
+                    )
+                };
+                let st = &mut map_states[tid as usize];
+                if was_done {
+                    continue; // lost the speculation race; container already freed
+                }
+                if epoch != st.epoch && spec_of_this != Some(true) {
+                    continue; // stale attempt (superseded by retry)
+                }
+                st.done = true;
+                maps_done += 1;
+                map_phase_end = map_phase_end.max(t);
+                // free ALL live attempt containers (speculative copy is killed)
+                let lives = std::mem::take(&mut st.live);
+                let n_live = lives.len();
+                for (c, _, _, s) in lives {
+                    if s {
+                        counters.speculative_attempts += 1;
+                    }
+                    yarn.release(c);
+                }
+                let node = {
+                    // attribute to the node of the attempt that won
+                    st.locality.map(|_| 0).unwrap_or(0);
+                    0
+                };
+                let _ = node;
+                let loc = st.locality.unwrap_or(Locality::NodeLocal);
+                match loc {
+                    Locality::NodeLocal => counters.data_local_maps += 1,
+                    Locality::RackLocal => counters.rack_local_maps += 1,
+                    Locality::OffRack => counters.off_rack_maps += 1,
+                }
+                counters.spilled_records += map_cost.spills
+                    * ((map_cost.map_out_mb * 1024.0 / wl.record_kb.max(1e-4)) as u64
+                        / map_cost.spills.max(1));
+                counters.file_write_mb += map_cost.disk_out_mb;
+                let dur = t - st.start;
+                completed_map_durs.push(dur);
+                phase_secs[costmodel::PH_READ] += map_cost.t_read_local / loc.rate_factor();
+                phase_secs[costmodel::PH_MAP_CPU] += map_cost.t_cpu;
+                phase_secs[costmodel::PH_MAP_IO] += map_cost.t_spill_io + map_cost.t_merge_io;
+                tasks.push(TaskRecord {
+                    kind: TaskKind::Map,
+                    id: tid,
+                    node: 0,
+                    start: st.start,
+                    finish: t,
+                    attempts: st.attempts,
+                    speculative: n_live > 1,
+                    locality: Some(loc),
+                });
+                last_finish = last_finish.max(t);
+
+                // speculative execution: when the map phase is nearly done,
+                // duplicate the slowest stragglers
+                if cl.speculative && pending_maps.is_empty() && maps_done * 4 >= maps * 3 {
+                    let median = median_of(&completed_map_durs);
+                    // LATE-style: duplicate tasks whose *total* expected
+                    // duration is an outlier vs the completed median and
+                    // whose remaining work still makes a copy worthwhile
+                    let spec_candidates: Vec<u64> = map_states
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, s)| {
+                            !s.done
+                                && s.live.len() == 1
+                                && !s.live[0].3
+                                && s.live[0].2 - s.start > 1.5 * median
+                                && s.live[0].2 - t > 0.5 * median
+                        })
+                        .map(|(i, _)| i as u64)
+                        .collect();
+                    for stid in spec_candidates {
+                        sample_map_attempt!(q, stid, true);
+                    }
+                }
+                if maps_done == maps {
+                    // release reducers waiting on the last map
+                    let fetching = std::mem::take(&mut fetching_reds);
+                    for rid in fetching {
+                        schedule_reduce_finish!(q, rid, map_phase_end);
+                    }
+                }
+                schedule_tasks!(q);
+            }
+            Ev::ReduceFinish(rid) => {
+                let rs = &mut red_states[rid as usize];
+                if let Some(c) = rs.container.take() {
+                    yarn.release(c);
+                }
+                reds_done += 1;
+                let w = rs.weight;
+                phase_secs[costmodel::PH_SHUFFLE] += shuffle.t_copy * w;
+                phase_secs[costmodel::PH_RED_IO] += red_cost.t_merge_io * w;
+                phase_secs[costmodel::PH_RED_CPU] += red_cost.t_cpu * w;
+                phase_secs[costmodel::PH_WRITE] += red_cost.t_write * w;
+                counters.hdfs_write_mb +=
+                    shuffle.per_red_logical_mb * w * wl.output_selectivity;
+                tasks.push(TaskRecord {
+                    kind: TaskKind::Reduce,
+                    id: rid,
+                    node: rs.node,
+                    start: rs.alloc_t,
+                    finish: t,
+                    attempts: 1,
+                    speculative: false,
+                    locality: None,
+                });
+                last_finish = last_finish.max(t);
+                schedule_tasks!(q);
+            }
+        }
+        if maps_done == maps && reds_done == reduces && pending_maps.is_empty() {
+            break;
+        }
+    }
+    debug_assert!(yarn.check_invariants().is_ok());
+
+    phase_secs[costmodel::PH_OVERHEAD] =
+        cl.am_overhead_s + (maps + reduces) as f64 * cl.task_overhead_s;
+
+    JobResult {
+        runtime_s: last_finish + cl.am_overhead_s * 0.25, // AM teardown
+        map_phase_end_s: map_phase_end,
+        tasks,
+        counters,
+        phase_task_seconds: phase_secs,
+        workload: wl.name.clone(),
+        config: cfg.clone(),
+        seed,
+    }
+}
+
+fn median_of(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    v[v.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{terasort, wordcount};
+
+    fn run(cfg: &HadoopConfig, seed: u64) -> JobResult {
+        let cl = ClusterSpec::default();
+        simulate_job(&cl, &wordcount(10240.0), cfg, seed)
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let cfg = HadoopConfig::default();
+        let a = run(&cfg, 7);
+        let b = run(&cfg, 7);
+        assert_eq!(a.runtime_s, b.runtime_s);
+        assert_eq!(a.tasks.len(), b.tasks.len());
+    }
+
+    #[test]
+    fn different_seeds_jitter() {
+        let cfg = HadoopConfig::default();
+        let a = run(&cfg, 1);
+        let b = run(&cfg, 2);
+        assert_ne!(a.runtime_s, b.runtime_s);
+        // but not wildly: same config should stay within ~3x
+        let ratio = a.runtime_s / b.runtime_s;
+        assert!(ratio > 0.33 && ratio < 3.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn all_tasks_complete() {
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_REDUCES, 16.0);
+        let r = run(&cfg, 3);
+        let n_maps = r.tasks.iter().filter(|t| t.kind == TaskKind::Map).count();
+        let n_reds = r.tasks.iter().filter(|t| t.kind == TaskKind::Reduce).count();
+        assert_eq!(n_maps as u64, r.counters.total_maps);
+        assert_eq!(n_reds as u64, 16);
+    }
+
+    #[test]
+    fn task_times_ordered() {
+        let r = run(&HadoopConfig::default(), 4);
+        for t in &r.tasks {
+            assert!(t.finish > t.start, "{t:?}");
+            assert!(t.start >= 0.0);
+            assert!(t.finish <= r.runtime_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn locality_mostly_node_local() {
+        let r = run(&HadoopConfig::default(), 5);
+        let c = &r.counters;
+        let total = c.data_local_maps + c.rack_local_maps + c.off_rack_maps;
+        assert_eq!(total, c.total_maps);
+        assert!(
+            c.data_local_maps * 2 > total,
+            "node-local {} of {total}",
+            c.data_local_maps
+        );
+    }
+
+    #[test]
+    fn noiseless_sim_tracks_model() {
+        let mut cl = ClusterSpec::default();
+        cl.noise = crate::hadoop::noise::NoiseModel::noiseless();
+        cl.speculative = false;
+        let wl = wordcount(10240.0);
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_REDUCES, 8.0);
+        cfg.set(P_SLOWSTART, 0.95);
+        let sim = simulate_job(&cl, &wl, &cfg, 1);
+        let model = costmodel::predict_runtime(&cfg, &wl, &cl);
+        let ratio = sim.runtime_s / model;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "sim {} vs model {model} (ratio {ratio})",
+            sim.runtime_s
+        );
+    }
+
+    #[test]
+    fn terasort_slower_than_grep_same_input() {
+        let cl = ClusterSpec::default();
+        let cfg = HadoopConfig::default();
+        let t = simulate_job(&cl, &terasort(4096.0), &cfg, 9).runtime_s;
+        let g = simulate_job(&cl, &crate::workloads::grep(4096.0), &cfg, 9).runtime_s;
+        assert!(t > g, "terasort {t} <= grep {g}");
+    }
+
+    #[test]
+    fn speculation_recovers_straggler_time() {
+        // map-bound config + heavy stragglers: speculative copies must
+        // reduce the mean runtime (regression test for the epoch-race bug)
+        let wl = wordcount(10240.0);
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_REDUCES, 32.0);
+        cfg.set(P_IO_SORT_MB, 256.0);
+        let mean = |speculative: bool| -> f64 {
+            let cl = ClusterSpec {
+                speculative,
+                noise: crate::hadoop::noise::NoiseModel {
+                    straggler_prob: 0.2,
+                    ..Default::default()
+                },
+                ..ClusterSpec::default()
+            };
+            (0..30).map(|s| simulate_job(&cl, &wl, &cfg, s).runtime_s).sum::<f64>() / 30.0
+        };
+        let off = mean(false);
+        let on = mean(true);
+        assert!(on < off, "speculation did not help: on {on:.2} vs off {off:.2}");
+    }
+
+    #[test]
+    fn failures_increase_counter() {
+        let mut cl = ClusterSpec::default();
+        cl.noise.failure_prob = 0.2;
+        let r = simulate_job(&cl, &wordcount(10240.0), &HadoopConfig::default(), 11);
+        assert!(r.counters.failed_task_attempts > 0);
+    }
+
+    #[test]
+    fn more_reducers_speed_up_shuffle_heavy_job() {
+        let cl = ClusterSpec::default();
+        let wl = terasort(8192.0);
+        let mut few = HadoopConfig::default();
+        few.set(P_REDUCES, 1.0);
+        let mut many = few.clone();
+        many.set(P_REDUCES, 32.0);
+        // average over seeds to beat noise
+        let avg = |cfg: &HadoopConfig| -> f64 {
+            (0..5).map(|s| simulate_job(&cl, &wl, cfg, s).runtime_s).sum::<f64>() / 5.0
+        };
+        assert!(avg(&many) < avg(&few));
+    }
+}

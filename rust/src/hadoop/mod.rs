@@ -1,0 +1,146 @@
+//! The simulated Hadoop 2.x substrate (DESIGN.md §2, substitution row 1).
+//!
+//! Everything Catla needs from "a Hadoop cluster" lives here: HDFS block
+//! placement, YARN containers, the MapReduce discrete-event engine, the
+//! noise model, counters, job-history logs, and the SSH-shaped `Cluster`
+//! boundary.
+
+pub mod cluster;
+pub mod costmodel;
+pub mod counters;
+pub mod events;
+pub mod hdfs;
+pub mod joblogs;
+pub mod mapreduce;
+pub mod noise;
+pub mod trace;
+pub mod yarn;
+
+pub use cluster::{Cluster, JobArtifacts, JobStatus, JobSubmission, SimCluster};
+pub use mapreduce::{simulate_job, JobResult};
+pub use noise::NoiseModel;
+
+use crate::config::env::HadoopEnv;
+
+/// Static description of the simulated cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: u32,
+    pub racks: u32,
+    pub mem_per_node_mb: u32,
+    pub vcores_per_node: u32,
+    pub disk_mbps: f64,
+    pub net_mbps: f64,
+    /// HDFS replication of job output.
+    pub replication: u32,
+    /// Container launch + JVM start per task, seconds.
+    pub task_overhead_s: f64,
+    /// Job setup/teardown (ApplicationMaster), seconds.
+    pub am_overhead_s: f64,
+    /// Expected fraction of node-local map reads (analytic model only;
+    /// the DES resolves locality per task from actual placement).
+    pub locality: f64,
+    pub noise: NoiseModel,
+    /// Hadoop speculative execution (mapreduce.map.speculative).
+    pub speculative: bool,
+    /// Base seed; every submitted job gets a distinct derived seed.
+    pub seed: u64,
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self {
+            nodes: 16,
+            racks: 2,
+            mem_per_node_mb: 8192,
+            vcores_per_node: 8,
+            disk_mbps: 120.0,
+            net_mbps: 110.0,
+            replication: 3,
+            task_overhead_s: 1.2,
+            am_overhead_s: 8.0,
+            locality: 0.85,
+            noise: NoiseModel::default(),
+            speculative: true,
+            seed: 42,
+        }
+    }
+}
+
+impl ClusterSpec {
+    /// Build from a project's `HadoopEnv.txt` `sim.*` keys.
+    pub fn from_env(env: &HadoopEnv) -> ClusterSpec {
+        let d = ClusterSpec::default();
+        ClusterSpec {
+            nodes: env.get_u64("sim.nodes", d.nodes as u64) as u32,
+            racks: env.get_u64("sim.racks", d.racks as u64) as u32,
+            mem_per_node_mb: env.get_u64("sim.mem.per.node.mb", d.mem_per_node_mb as u64) as u32,
+            vcores_per_node: env.get_u64("sim.vcores.per.node", d.vcores_per_node as u64) as u32,
+            disk_mbps: env.get_f64("sim.disk.mbps", d.disk_mbps),
+            net_mbps: env.get_f64("sim.net.mbps", d.net_mbps),
+            replication: env.get_u64("sim.replication", d.replication as u64) as u32,
+            task_overhead_s: env.get_f64("sim.task.overhead.s", d.task_overhead_s),
+            am_overhead_s: env.get_f64("sim.am.overhead.s", d.am_overhead_s),
+            locality: env.get_f64("sim.locality", d.locality),
+            noise: NoiseModel {
+                sigma: env.get_f64("sim.noise.sigma", d.noise.sigma),
+                straggler_prob: env.get_f64("sim.straggler.prob", d.noise.straggler_prob),
+                failure_prob: env.get_f64("sim.failure.prob", d.noise.failure_prob),
+                ..d.noise
+            },
+            speculative: env.get("sim.speculative").map(|v| v == "true").unwrap_or(d.speculative),
+            seed: env.get_u64("sim.seed", d.seed),
+        }
+    }
+
+    /// The consts vector consumed by the AOT cost-model artifact —
+    /// layout mirrors python/compile/spec.py (C_* indices).
+    pub fn to_consts(&self, wl: &crate::workloads::WorkloadSpec) -> [f32; 16] {
+        [
+            wl.input_mb as f32,            // C_INPUT_MB
+            wl.map_selectivity as f32,     // C_MAP_SELECTIVITY
+            wl.cpu_per_mb_map as f32,      // C_CPU_PER_MB_MAP
+            wl.cpu_per_mb_red as f32,      // C_CPU_PER_MB_RED
+            self.nodes as f32,             // C_NODES
+            self.mem_per_node_mb as f32,   // C_MEM_PER_NODE_MB
+            self.vcores_per_node as f32,   // C_VCORES
+            self.disk_mbps as f32,         // C_DISK_MBS
+            self.net_mbps as f32,          // C_NET_MBS
+            wl.compress_ratio as f32,      // C_COMPRESS_RATIO
+            wl.output_selectivity as f32,  // C_OUTPUT_SELECTIVITY
+            self.replication as f32,       // C_REPLICATION
+            self.task_overhead_s as f32,   // C_TASK_OVERHEAD_S
+            self.am_overhead_s as f32,     // C_AM_OVERHEAD_S
+            wl.record_kb as f32,           // C_RECORD_KB
+            self.locality as f32,          // C_LOCALITY
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::wordcount;
+
+    #[test]
+    fn from_env_roundtrip() {
+        let mut env = HadoopEnv::default();
+        env.set("sim.nodes", "32");
+        env.set("sim.noise.sigma", "0.3");
+        let spec = ClusterSpec::from_env(&env);
+        assert_eq!(spec.nodes, 32);
+        assert_eq!(spec.noise.sigma, 0.3);
+        assert_eq!(spec.racks, 2); // default preserved
+    }
+
+    #[test]
+    fn consts_layout_matches_python_spec() {
+        let cl = ClusterSpec::default();
+        let wl = wordcount(10240.0);
+        let c = cl.to_consts(&wl);
+        assert_eq!(c[0], 10240.0); // C_INPUT_MB
+        assert_eq!(c[4], 16.0); // C_NODES
+        assert_eq!(c[11], 3.0); // C_REPLICATION
+        assert!((c[15] as f64 - 0.85).abs() < 1e-6); // C_LOCALITY
+    }
+}

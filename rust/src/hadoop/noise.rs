@@ -1,0 +1,172 @@
+//! Stochastic components of the cluster simulator.
+//!
+//! The paper motivates DFO precisely because "running time of MapReduce
+//! jobs [is noisy] due to dynamic and complicated context of Hadoop
+//! cluster" — the noise model is therefore load-bearing: per-task
+//! multiplicative lognormal jitter, per-node slowdown factors, rare
+//! stragglers, and task failures with retry.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NoiseModel {
+    /// Lognormal sigma of per-task jitter (0 disables noise entirely).
+    pub sigma: f64,
+    /// Lognormal sigma of the static per-node slowdown factor.
+    pub node_sigma: f64,
+    /// Probability a task becomes a straggler.
+    pub straggler_prob: f64,
+    /// Straggler duration multiplier range [lo, hi].
+    pub straggler_mult: (f64, f64),
+    /// Probability a task attempt fails midway and is retried.
+    pub failure_prob: f64,
+    /// Max attempts per task (mapreduce.map.maxattempts default 4).
+    pub max_attempts: u32,
+}
+
+impl Default for NoiseModel {
+    fn default() -> Self {
+        Self {
+            sigma: 0.12,
+            node_sigma: 0.05,
+            straggler_prob: 0.02,
+            straggler_mult: (2.0, 4.0),
+            failure_prob: 0.002,
+            max_attempts: 4,
+        }
+    }
+}
+
+impl NoiseModel {
+    /// A completely deterministic cluster (for model-vs-sim validation).
+    pub fn noiseless() -> Self {
+        Self {
+            sigma: 0.0,
+            node_sigma: 0.0,
+            straggler_prob: 0.0,
+            straggler_mult: (1.0, 1.0),
+            failure_prob: 0.0,
+            max_attempts: 1,
+        }
+    }
+
+    /// Sample the static slowdown factors for `n` nodes (mean ~1).
+    pub fn node_factors(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n)
+            .map(|_| {
+                if self.node_sigma == 0.0 {
+                    1.0
+                } else {
+                    rng.lognormal(-self.node_sigma * self.node_sigma / 2.0, self.node_sigma)
+                }
+            })
+            .collect()
+    }
+
+    /// Sample one task attempt's duration multiplier (jitter x straggler).
+    pub fn task_multiplier(&self, rng: &mut Rng) -> f64 {
+        let jitter = if self.sigma == 0.0 {
+            1.0
+        } else {
+            // mean-1 lognormal: mu = -sigma^2/2
+            rng.lognormal(-self.sigma * self.sigma / 2.0, self.sigma)
+        };
+        let straggle = if self.straggler_prob > 0.0 && rng.bernoulli(self.straggler_prob) {
+            rng.range_f64(self.straggler_mult.0, self.straggler_mult.1)
+        } else {
+            1.0
+        };
+        jitter * straggle
+    }
+
+    /// Does this attempt fail, and if so at what fraction of its duration?
+    pub fn attempt_failure(&self, rng: &mut Rng) -> Option<f64> {
+        if self.failure_prob > 0.0 && rng.bernoulli(self.failure_prob) {
+            Some(rng.range_f64(0.2, 0.8))
+        } else {
+            None
+        }
+    }
+}
+
+/// Reduce-partition skew weights: `reduces` weights with mean exactly 1,
+/// spread controlled by `key_skew` in [0,1]. Deterministic per seed.
+pub fn partition_weights(rng: &mut Rng, reduces: usize, key_skew: f64) -> Vec<f64> {
+    if reduces == 0 {
+        return Vec::new();
+    }
+    if key_skew <= 0.0 {
+        return vec![1.0; reduces];
+    }
+    let raw: Vec<f64> = (0..reduces)
+        .map(|_| (1.0 + key_skew * rng.normal().abs() * 1.2).max(0.1))
+        .collect();
+    let mean = raw.iter().sum::<f64>() / reduces as f64;
+    raw.into_iter().map(|w| w / mean).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_is_exactly_one() {
+        let nm = NoiseModel::noiseless();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(nm.task_multiplier(&mut rng), 1.0);
+            assert!(nm.attempt_failure(&mut rng).is_none());
+        }
+        assert!(nm.node_factors(&mut rng, 8).iter().all(|&f| f == 1.0));
+    }
+
+    #[test]
+    fn jitter_mean_near_one() {
+        let nm = NoiseModel { straggler_prob: 0.0, ..NoiseModel::default() };
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| nm.task_multiplier(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn stragglers_occur_at_configured_rate() {
+        let nm = NoiseModel {
+            sigma: 0.0,
+            straggler_prob: 0.1,
+            ..NoiseModel::default()
+        };
+        let mut rng = Rng::new(3);
+        let n = 50_000;
+        let count = (0..n).filter(|_| nm.task_multiplier(&mut rng) > 1.5).count();
+        let rate = count as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn partition_weights_mean_one_and_spread() {
+        let mut rng = Rng::new(4);
+        let w = partition_weights(&mut rng, 64, 0.7);
+        let mean = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-12);
+        let spread = w.iter().cloned().fold(f64::MIN, f64::max)
+            - w.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.1, "no skew spread: {spread}");
+        // uniform case
+        let u = partition_weights(&mut rng, 8, 0.0);
+        assert!(u.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn failures_at_configured_rate() {
+        let nm = NoiseModel {
+            failure_prob: 0.05,
+            ..NoiseModel::default()
+        };
+        let mut rng = Rng::new(5);
+        let n = 50_000;
+        let fails = (0..n).filter(|_| nm.attempt_failure(&mut rng).is_some()).count();
+        let rate = fails as f64 / n as f64;
+        assert!((rate - 0.05).abs() < 0.006, "rate {rate}");
+    }
+}

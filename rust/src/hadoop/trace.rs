@@ -1,0 +1,203 @@
+//! Workload traces: a day-in-the-life job stream for the cluster.
+//!
+//! The tuning system's real payoff is *tune once, run the trace faster*:
+//! a configuration chosen by the Optimizer Runner is applied to a whole
+//! arrival stream of heterogeneous jobs. The generator produces a
+//! Poisson-arrival trace over a mixed workload; the replayer runs it
+//! through the job simulator behind a FIFO queue (small shared clusters
+//! commonly run MapReduce jobs back to back) and reports makespan, waits
+//! and utilization.
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{simulate_job, ClusterSpec};
+use crate::util::rng::Rng;
+use crate::workloads::{self, WorkloadSpec};
+
+/// One trace entry.
+#[derive(Clone, Debug)]
+pub struct TraceJob {
+    pub arrival_s: f64,
+    pub workload: WorkloadSpec,
+}
+
+/// Mixed-workload trace generator.
+#[derive(Clone, Debug)]
+pub struct TraceGen {
+    /// Mean inter-arrival seconds (Poisson process).
+    pub mean_interarrival_s: f64,
+    /// (workload name, weight) mixture.
+    pub mix: Vec<(String, f64)>,
+    /// Log-normal input-size distribution (log-space mean of MB, sigma).
+    pub size_mu_mb: f64,
+    pub size_sigma: f64,
+}
+
+impl Default for TraceGen {
+    fn default() -> Self {
+        Self {
+            mean_interarrival_s: 120.0,
+            mix: vec![
+                ("wordcount".into(), 0.35),
+                ("grep".into(), 0.25),
+                ("terasort".into(), 0.15),
+                ("join".into(), 0.15),
+                ("pagerank".into(), 0.10),
+            ],
+            size_mu_mb: 2048.0,
+            size_sigma: 0.8,
+        }
+    }
+}
+
+impl TraceGen {
+    /// Generate `n` jobs (deterministic per seed).
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<TraceJob> {
+        let mut rng = Rng::new(seed);
+        let total_w: f64 = self.mix.iter().map(|(_, w)| w).sum();
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                // exponential inter-arrival
+                t += -self.mean_interarrival_s * (1.0 - rng.f64()).ln();
+                // weighted workload pick
+                let mut pick = rng.f64() * total_w;
+                let mut name = self.mix[0].0.as_str();
+                for (w_name, w) in &self.mix {
+                    if pick < *w {
+                        name = w_name;
+                        break;
+                    }
+                    pick -= w;
+                }
+                let size_mb = (self.size_mu_mb
+                    * rng.lognormal(-self.size_sigma * self.size_sigma / 2.0, self.size_sigma))
+                .clamp(64.0, 262_144.0);
+                TraceJob {
+                    arrival_s: t,
+                    workload: workloads::by_name(name, size_mb).expect("mix has known names"),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Replay report.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayReport {
+    pub jobs: usize,
+    /// Completion time of the last job.
+    pub makespan_s: f64,
+    /// Total job running time (cluster busy seconds).
+    pub busy_s: f64,
+    pub mean_wait_s: f64,
+    pub p95_wait_s: f64,
+    pub mean_runtime_s: f64,
+    /// busy / makespan.
+    pub utilization: f64,
+}
+
+/// Replay a trace through the cluster with one shared configuration,
+/// FIFO and exclusive (one job owns the cluster at a time).
+pub fn replay(
+    cl: &ClusterSpec,
+    trace: &[TraceJob],
+    cfg: &HadoopConfig,
+    seed: u64,
+) -> ReplayReport {
+    let mut clock: f64 = 0.0;
+    let mut waits = Vec::with_capacity(trace.len());
+    let mut runtimes = Vec::with_capacity(trace.len());
+    let mut busy = 0.0;
+    for (i, j) in trace.iter().enumerate() {
+        let start = clock.max(j.arrival_s);
+        let rt = simulate_job(cl, &j.workload, cfg, seed.wrapping_add(i as u64)).runtime_s;
+        waits.push(start - j.arrival_s);
+        runtimes.push(rt);
+        busy += rt;
+        clock = start + rt;
+    }
+    let n = trace.len().max(1);
+    let mut sorted_waits = waits.clone();
+    sorted_waits.sort_by(|a, b| a.total_cmp(b));
+    ReplayReport {
+        jobs: trace.len(),
+        makespan_s: clock,
+        busy_s: busy,
+        mean_wait_s: waits.iter().sum::<f64>() / n as f64,
+        p95_wait_s: sorted_waits
+            .get(((n as f64 * 0.95) as usize).min(n - 1))
+            .copied()
+            .unwrap_or(0.0),
+        mean_runtime_s: runtimes.iter().sum::<f64>() / n as f64,
+        utilization: if clock > 0.0 { busy / clock } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{P_IO_SORT_MB, P_REDUCES};
+
+    #[test]
+    fn generator_deterministic_and_sorted() {
+        let g = TraceGen::default();
+        let a = g.generate(50, 9);
+        let b = g.generate(50, 9);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.workload.name, y.workload.name);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "arrivals out of order");
+        }
+    }
+
+    #[test]
+    fn mixture_respects_weights_roughly() {
+        let g = TraceGen::default();
+        let trace = g.generate(2000, 3);
+        let wc = trace.iter().filter(|j| j.workload.name == "wordcount").count();
+        let frac = wc as f64 / 2000.0;
+        assert!((frac - 0.35).abs() < 0.05, "wordcount fraction {frac}");
+    }
+
+    #[test]
+    fn replay_accounting_consistent() {
+        let g = TraceGen {
+            mean_interarrival_s: 10.0, // heavy load -> queueing
+            ..TraceGen::default()
+        };
+        let trace = g.generate(30, 5);
+        let r = replay(&ClusterSpec::default(), &trace, &HadoopConfig::default(), 1);
+        assert_eq!(r.jobs, 30);
+        assert!(r.makespan_s >= r.busy_s, "makespan < busy time");
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0 + 1e-9);
+        assert!(r.p95_wait_s >= r.mean_wait_s * 0.5);
+        assert!(r.makespan_s >= trace.last().unwrap().arrival_s);
+    }
+
+    #[test]
+    fn tuned_config_improves_trace_makespan() {
+        // the headline story at trace scale: the Fig.2 "good corner"
+        // config beats defaults over a whole arrival stream
+        let g = TraceGen {
+            mean_interarrival_s: 5.0,
+            size_sigma: 0.3,
+            ..TraceGen::default()
+        };
+        let trace = g.generate(25, 11);
+        let cl = ClusterSpec::default();
+        let default = replay(&cl, &trace, &HadoopConfig::default(), 2);
+        let mut tuned_cfg = HadoopConfig::default();
+        tuned_cfg.set(P_REDUCES, 24.0);
+        tuned_cfg.set(P_IO_SORT_MB, 512.0);
+        let tuned = replay(&cl, &trace, &tuned_cfg, 2);
+        assert!(
+            tuned.makespan_s < default.makespan_s,
+            "tuned {:.0}s vs default {:.0}s",
+            tuned.makespan_s,
+            default.makespan_s
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! YARN-style container accounting.
+//!
+//! Each node exposes memory (MB) and vcores; a container consumes
+//! (mem, 1 vcore) until released. Map and reduce containers share the
+//! same pools, which is what produces the paper's "reducer slowstart
+//! squats on map containers" pathology.
+
+/// Mutable per-node resource state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeState {
+    pub mem_free_mb: f64,
+    pub vcores_free: u32,
+}
+
+#[derive(Clone, Debug)]
+pub struct YarnState {
+    pub nodes: Vec<NodeState>,
+}
+
+/// A granted container.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Container {
+    pub node: usize,
+    pub mem_mb: f64,
+}
+
+impl YarnState {
+    pub fn new(nodes: usize, mem_per_node_mb: f64, vcores_per_node: u32) -> Self {
+        Self {
+            nodes: (0..nodes)
+                .map(|_| NodeState {
+                    mem_free_mb: mem_per_node_mb,
+                    vcores_free: vcores_per_node,
+                })
+                .collect(),
+        }
+    }
+
+    /// Can `node` host a container of `mem_mb`?
+    pub fn fits(&self, node: usize, mem_mb: f64) -> bool {
+        let n = &self.nodes[node];
+        n.mem_free_mb + 1e-9 >= mem_mb && n.vcores_free >= 1
+    }
+
+    /// Allocate on a specific node. Panics if it does not fit (caller
+    /// must check `fits` — keeps the scheduler logic explicit).
+    pub fn allocate_on(&mut self, node: usize, mem_mb: f64) -> Container {
+        assert!(self.fits(node, mem_mb), "allocate_on({node}) without capacity");
+        let n = &mut self.nodes[node];
+        n.mem_free_mb -= mem_mb;
+        n.vcores_free -= 1;
+        Container { node, mem_mb }
+    }
+
+    /// Allocate anywhere, preferring the nodes in `preferred` order, then
+    /// the node with the most free memory (a crude capacity scheduler).
+    pub fn allocate(&mut self, mem_mb: f64, preferred: &[usize]) -> Option<Container> {
+        for &p in preferred {
+            if self.fits(p, mem_mb) {
+                return Some(self.allocate_on(p, mem_mb));
+            }
+        }
+        let best = (0..self.nodes.len())
+            .filter(|&n| self.fits(n, mem_mb))
+            .max_by(|&a, &b| {
+                self.nodes[a]
+                    .mem_free_mb
+                    .total_cmp(&self.nodes[b].mem_free_mb)
+            })?;
+        Some(self.allocate_on(best, mem_mb))
+    }
+
+    pub fn release(&mut self, c: Container) {
+        let n = &mut self.nodes[c.node];
+        n.mem_free_mb += c.mem_mb;
+        n.vcores_free += 1;
+    }
+
+    /// Total containers of `mem_mb` the cluster could host when idle.
+    pub fn capacity(&self, mem_mb: f64) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| ((n.mem_free_mb / mem_mb).floor() as usize).min(n.vcores_free as usize))
+            .sum()
+    }
+
+    /// Invariant check used by property tests: no negative resources.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.mem_free_mb < -1e-9 {
+                return Err(format!("node {i} mem_free {} < 0", n.mem_free_mb));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut y = YarnState::new(2, 4096.0, 4);
+        let c1 = y.allocate(1024.0, &[]).unwrap();
+        let c2 = y.allocate(1024.0, &[]).unwrap();
+        assert_ne!((c1.node, 0), (c2.node, 1)); // distinct or same — just sanity
+        y.release(c1);
+        y.release(c2);
+        assert_eq!(y.capacity(1024.0), 8);
+    }
+
+    #[test]
+    fn prefers_requested_node() {
+        let mut y = YarnState::new(4, 4096.0, 4);
+        let c = y.allocate(1024.0, &[2]).unwrap();
+        assert_eq!(c.node, 2);
+    }
+
+    #[test]
+    fn vcores_limit_containers() {
+        let mut y = YarnState::new(1, 100_000.0, 2);
+        assert!(y.allocate(512.0, &[]).is_some());
+        assert!(y.allocate(512.0, &[]).is_some());
+        assert!(y.allocate(512.0, &[]).is_none(), "vcores exhausted");
+    }
+
+    #[test]
+    fn memory_limits_containers() {
+        let mut y = YarnState::new(1, 2048.0, 8);
+        assert!(y.allocate(1024.0, &[]).is_some());
+        assert!(y.allocate(1024.0, &[]).is_some());
+        assert!(y.allocate(1024.0, &[]).is_none(), "memory exhausted");
+    }
+
+    #[test]
+    fn capacity_math() {
+        let y = YarnState::new(3, 8192.0, 8);
+        assert_eq!(y.capacity(1024.0), 24);
+        assert_eq!(y.capacity(4096.0), 6);
+        assert_eq!(y.capacity(8192.0), 3);
+    }
+
+    #[test]
+    fn invariants_hold_after_churn() {
+        let mut y = YarnState::new(4, 4096.0, 4);
+        let mut live = Vec::new();
+        for i in 0..100 {
+            if i % 3 == 0 && !live.is_empty() {
+                y.release(live.pop().unwrap());
+            } else if let Some(c) = y.allocate(700.0, &[]) {
+                live.push(c);
+            }
+            y.check_invariants().unwrap();
+        }
+    }
+}

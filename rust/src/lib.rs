@@ -1,0 +1,24 @@
+//! # Catla — MapReduce performance self-tuning
+//!
+//! A from-scratch reproduction of *"An Open-Source Project for MapReduce
+//! Performance Self-Tuning"* (Donghua Chen, 2019): the Catla self-tuning
+//! system — Task Runner, Project Runner and Optimizer Runner over
+//! direct-search and derivative-free optimization — built on a simulated
+//! Hadoop 2.x substrate, with batched configuration scoring AOT-compiled
+//! from JAX/Pallas and executed from rust via XLA PJRT.
+//!
+//! Layer map (DESIGN.md §3):
+//! * [`catla`] — the paper's system: runners, projects, history, metrics.
+//! * [`optim`] — grid/random/pattern searches and the BOBYQA-style DFO.
+//! * [`hadoop`] — the simulated cluster substrate (DES engine).
+//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//! * [`workloads`], [`config`], [`util`] — profiles, parameter metadata,
+//!   and the hand-rolled foundations the offline image requires.
+
+pub mod catla;
+pub mod config;
+pub mod hadoop;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,318 @@
+//! `catla` CLI — the rust analogue of the paper's
+//! `java -jar Catla.jar -tool task -dir task_wordcount` interface,
+//! plus the CatlaUI terminal charts.
+//!
+//! Tools:
+//!   template   create a task/project/tuning project folder from templates
+//!   task       run a single job (paper §II.B.2 Steps 1-5)
+//!   project    run a job group from jobs.list
+//!   tuning     run the Optimizer Runner on a tuning project
+//!   aggregate  re-aggregate logs after an interrupted run (§II.C.4)
+//!   visualize  terminal charts + gnuplot scripts from /history CSVs
+//!   describe   show the (simulated) cluster a project targets
+
+use std::path::{Path, PathBuf};
+
+use catla::catla::{
+    aggregate, create_template, visualize, History, OptimizerRunner, Project, ProjectKind,
+    ProjectRunner, TaskRunner,
+};
+use catla::hadoop::{Cluster, ClusterSpec, SimCluster};
+use catla::optim::surrogate::NativeScorer;
+use catla::runtime::{CostModelExec, Runtime};
+use catla::util::cli::Args;
+
+const USAGE: &str = "catla — MapReduce performance self-tuning (Chen 2019 reproduction)
+
+USAGE: catla <tool> [options]
+
+TOOLS
+  template  --dir <folder> [--kind task|project|tuning] [--workload wordcount]
+            [--input-mb 2048]         create a project folder from templates
+  task      --dir <folder>            submit one job, download results+logs
+  project   --dir <folder>            run every job in jobs.list
+  tuning    --dir <folder> [--prescreen native|pjrt|off]
+                                      run the Optimizer Runner
+  tuning-group --dir <folder>         tune ONE shared config for jobs.list
+  resume    --dir <folder> [--budget N]  continue an interrupted tuning run
+  replay    --dir <folder> [--jobs N]    replay an arrival trace (default vs tuned)
+  workflow  --dir <folder>            run jobs.list as a DAG (after= deps)
+  ui        --dir <folder>            terminal dashboard (CatlaUI view)
+  aggregate --dir <folder>            re-aggregate logs from /history
+  visualize --dir <folder> [--gnuplot]  charts from history CSVs
+  describe  --dir <folder>            show the cluster this project targets
+
+Optimizers (tuning.properties `optimizer=`): grid random latin coordinate
+hooke-jeeves nelder-mead annealing bobyqa";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn project_dir(args: &Args) -> Result<PathBuf, String> {
+    Ok(PathBuf::from(args.require("dir")?))
+}
+
+fn open_cluster(project: &Project) -> SimCluster {
+    SimCluster::new(ClusterSpec::from_env(&project.env))
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    match args.tool.as_str() {
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "template" => {
+            let dir = project_dir(args)?;
+            let kind = match args.opt_or("kind", "task").as_str() {
+                "task" => ProjectKind::Task,
+                "project" => ProjectKind::Project,
+                "tuning" => ProjectKind::Tuning,
+                k => return Err(format!("unknown kind {k:?}")),
+            };
+            let workload = args.opt_or("workload", "wordcount");
+            let input_mb: f64 = args.opt_parse_or("input-mb", 2048.0)?;
+            create_template(&dir, kind, &workload, input_mb)?;
+            println!("created {kind:?} project at {}", dir.display());
+            println!("next: catla task --dir {}", dir.display());
+            Ok(())
+        }
+        "task" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let mut cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            let mut runner = TaskRunner::new(&mut cluster);
+            let out = runner.run(&project)?;
+            println!(
+                "job {} finished: runtime {:.1}s (map phase {:.1}s), {} maps / {} reduces",
+                out.job_id,
+                out.metrics.runtime_s,
+                out.metrics.map_phase_s,
+                out.metrics.maps,
+                out.metrics.reduces
+            );
+            println!("results downloaded to {}", out.results_dir.display());
+            Ok(())
+        }
+        "project" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let mut cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            let out = ProjectRunner::new(&mut cluster).run(&project)?;
+            println!("{} jobs completed:", out.jobs.len());
+            for (name, m) in &out.jobs {
+                println!(
+                    "  {name:<24} {:>8.1}s  ({} maps, {} reduces)",
+                    m.runtime_s, m.maps, m.reduces
+                );
+            }
+            Ok(())
+        }
+        "tuning" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let mut cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            let prescreen = args.opt_or("prescreen", "off");
+            let out = match prescreen.as_str() {
+                "off" => OptimizerRunner::new(&mut cluster).run(&project)?,
+                "native" => {
+                    let mut scorer = NativeScorer {
+                        workload: project.workload()?,
+                        cluster: ClusterSpec::from_env(&project.env),
+                    };
+                    force_prescreen(&dir)?;
+                    let project = Project::load(&dir)?;
+                    OptimizerRunner::with_scorer(&mut cluster, &mut scorer).run(&project)?
+                }
+                "pjrt" => {
+                    let rt = Runtime::open_default()?;
+                    let mut scorer = CostModelExec::load(
+                        &rt,
+                        &project.workload()?,
+                        &ClusterSpec::from_env(&project.env),
+                    )?;
+                    force_prescreen(&dir)?;
+                    let project = Project::load(&dir)?;
+                    OptimizerRunner::with_scorer(&mut cluster, &mut scorer).run(&project)?
+                }
+                other => return Err(format!("unknown --prescreen {other:?}")),
+            };
+            println!(
+                "tuning finished: {} evaluations, best {:.1}s",
+                out.outcome.evals(),
+                out.outcome.best_value
+            );
+            println!("best configuration: {}", out.outcome.best_config.summary());
+            println!("log: {}", out.log_path.display());
+            // CatlaUI-style chart
+            let history = History::open(&dir).map_err(|e| e.to_string())?;
+            let csv = history.load_tuning_log()?;
+            println!("{}", visualize::chart_from_tuning_log(&csv)?);
+            Ok(())
+        }
+        "workflow" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let jobs = catla::catla::workflow::from_project(&project)?;
+            let mut cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            let out = catla::catla::workflow::run_workflow(&mut cluster, &jobs)?;
+            println!("{:<14} {:>10} {:>10} {:>10}", "stage", "start_s", "finish_s", "runtime_s");
+            for s in &out.stages {
+                println!(
+                    "{:<14} {:>10.1} {:>10.1} {:>10.1}",
+                    s.name, s.start_s, s.finish_s, s.runtime_s
+                );
+            }
+            println!("workflow makespan: {:.1}s", out.makespan_s);
+            Ok(())
+        }
+        "ui" => {
+            let dir = project_dir(args)?;
+            print!("{}", catla::catla::dashboard::render(&dir)?);
+            Ok(())
+        }
+        "tuning-group" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let mut cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            let out = catla::catla::multi_job::tune_group(&mut cluster, &project)?;
+            println!(
+                "group tuning finished ({}): {} evaluations, best aggregate {:.1}s",
+                out.optimizer,
+                out.evals(),
+                out.best_value
+            );
+            println!("shared configuration: {}", out.best_config.summary());
+            Ok(())
+        }
+        "resume" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let default_budget = project
+                .tuning
+                .as_ref()
+                .and_then(|t| t.get("budget"))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(60);
+            let budget: usize = args.opt_parse_or("budget", default_budget)?;
+            let mut cluster = open_cluster(&project);
+            let out = catla::catla::resume::resume_tuning(&mut cluster, &project, budget)?;
+            println!(
+                "resumed ({}): {} total evaluations, best {:.1}s",
+                out.optimizer,
+                out.evals(),
+                out.best_value
+            );
+            println!("best configuration: {}", out.best_config.summary());
+            Ok(())
+        }
+        "replay" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let n_jobs: usize = args.opt_parse_or("jobs", 100)?;
+            let cl = ClusterSpec::from_env(&project.env);
+            let gen = catla::hadoop::trace::TraceGen::default();
+            let trace = gen.generate(n_jobs, cl.seed);
+            // tuned config from the project's history (best summary row),
+            // else fall back to defaults-only replay
+            let tuned = History::open(&dir)
+                .ok()
+                .and_then(|h| h.load_tuning_log().ok())
+                .and_then(|csv| {
+                    let spec = project.spec.clone()?;
+                    let prior =
+                        catla::catla::resume::PriorRuns::from_log(&csv, &spec).ok()?;
+                    let (xs, _) = prior.best()?.clone();
+                    let mut cfg = project.base_config().ok()?;
+                    for (r, x) in spec.ranges.iter().zip(&xs) {
+                        cfg.set(r.meta.index, *x);
+                    }
+                    Some(cfg)
+                });
+            let before =
+                catla::hadoop::trace::replay(&cl, &trace, &catla::config::params::HadoopConfig::default(), 7);
+            println!(
+                "default: makespan {:.1}h, mean wait {:.0}s, utilization {:.2}",
+                before.makespan_s / 3600.0,
+                before.mean_wait_s,
+                before.utilization
+            );
+            match tuned {
+                Some(cfg) => {
+                    let after = catla::hadoop::trace::replay(&cl, &trace, &cfg, 7);
+                    println!(
+                        "tuned:   makespan {:.1}h, mean wait {:.0}s, utilization {:.2}  ({:.1}% makespan reduction)",
+                        after.makespan_s / 3600.0,
+                        after.mean_wait_s,
+                        after.utilization,
+                        (1.0 - after.makespan_s / before.makespan_s) * 100.0
+                    );
+                }
+                None => println!("(no tuning history found — run `catla tuning` first for the comparison)"),
+            }
+            Ok(())
+        }
+        "aggregate" => {
+            let dir = project_dir(args)?;
+            let report = aggregate::aggregate(&dir)?;
+            println!(
+                "re-aggregated: {} histories found, {} rows in jobs.csv, {} tuning rows repaired",
+                report.histories_found, report.jobs_csv_rows, report.tuning_rows_repaired
+            );
+            Ok(())
+        }
+        "visualize" => {
+            let dir = project_dir(args)?;
+            let history = History::open(&dir).map_err(|e| e.to_string())?;
+            let csv = history.load_tuning_log()?;
+            println!("{}", visualize::chart_from_tuning_log(&csv)?);
+            if args.has_flag("gnuplot") {
+                let script = visualize::gnuplot_fig3("history/tuning_log.csv", "fig3.png");
+                let path = dir.join("history").join("fig3.gnuplot");
+                std::fs::write(&path, script).map_err(|e| e.to_string())?;
+                println!("wrote {}", path.display());
+            }
+            Ok(())
+        }
+        "describe" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            let cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            println!("workload: {:?}", project.workload()?);
+            Ok(())
+        }
+        other => Err(format!("unknown tool {other:?}\n\n{USAGE}")),
+    }
+}
+
+/// Ensure tuning.properties has prescreen=auto (CLI override).
+fn force_prescreen(dir: &Path) -> Result<(), String> {
+    let path = dir.join("tuning.properties");
+    let mut text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+    if !text.contains("prescreen=") {
+        text.push_str("prescreen=auto\n");
+        std::fs::write(&path, text).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}

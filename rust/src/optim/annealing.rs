@@ -1,0 +1,150 @@
+//! Simulated annealing — a stochastic global-search baseline that, unlike
+//! the pattern searches, can escape the local basins the wave-boundary
+//! fluctuations of the cost surface create.
+
+use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::space::ParamSpace;
+use crate::optim::ObjectiveFn;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SimulatedAnnealing {
+    pub seed: u64,
+    /// Initial temperature as a fraction of the first sample's value.
+    pub t0_fraction: f64,
+    /// Geometric cooling rate per evaluation.
+    pub cooling: f64,
+    /// Initial proposal step (unit-cube units), shrinks with temperature.
+    pub step0: f64,
+}
+
+impl Default for SimulatedAnnealing {
+    fn default() -> Self {
+        Self {
+            seed: 17,
+            t0_fraction: 0.10,
+            cooling: 0.95,
+            step0: 0.25,
+        }
+    }
+}
+
+impl SimulatedAnnealing {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    pub fn run(
+        &self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> TuningOutcome {
+        let d = space.dims();
+        let mut rng = Rng::new(self.seed);
+        let mut rec = Recorder::new();
+        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
+            let cfg = space.decode(x);
+            let v = obj(&cfg);
+            rec.record(x.to_vec(), cfg, v);
+            v
+        };
+
+        let mut x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+        let mut fx = eval(&mut rec, &x);
+        let t0 = (fx * self.t0_fraction).max(1e-9);
+        let mut temp = t0;
+        let mut step = self.step0;
+        let mut since_improvement = 0usize;
+
+        while rec.evals() < max_evals {
+            // Gaussian proposal, clamped to the cube
+            let cand: Vec<f64> = x
+                .iter()
+                .map(|v| (v + rng.normal() * step).clamp(0.0, 1.0))
+                .collect();
+            let fc = eval(&mut rec, &cand);
+            let accept = fc < fx || {
+                let p = ((fx - fc) / temp).exp();
+                rng.bernoulli(p.min(1.0))
+            };
+            if accept {
+                if fc < fx {
+                    since_improvement = 0;
+                } else {
+                    since_improvement += 1;
+                }
+                x = cand;
+                fx = fc;
+            } else {
+                since_improvement += 1;
+            }
+            temp *= self.cooling;
+            step = (step * 0.995).max(0.01);
+            // reheating: stuck in a basin -> restart from a random point
+            if since_improvement >= 40 {
+                x = (0..d).map(|_| rng.f64()).collect();
+                fx = eval(&mut rec, &x);
+                temp = t0;
+                step = self.step0;
+                since_improvement = 0;
+            }
+        }
+        rec.finish("annealing")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::config::spec::TuningSpec;
+
+    fn space4() -> ParamSpace {
+        ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default())
+    }
+
+    #[test]
+    fn converges_on_bowl() {
+        let space = space4();
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            sp.encode(c).iter().map(|u| (u - 0.5).powi(2)).sum::<f64>() + 1.0
+        };
+        let out = SimulatedAnnealing::new(3).run(&space, &mut obj, 200);
+        assert!(out.best_value < 1.03, "SA stuck at {}", out.best_value);
+    }
+
+    #[test]
+    fn escapes_local_minimum() {
+        // two-basin function: local basin at 0.2 (value 1.0),
+        // global at 0.8 (value 0.5); start anywhere
+        let space = space4();
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            let u = sp.encode(c);
+            let d_local: f64 = u.iter().map(|v| (v - 0.2) * (v - 0.2)).sum();
+            let d_global: f64 = u.iter().map(|v| (v - 0.8) * (v - 0.8)).sum();
+            (1.0 + 4.0 * d_local).min(0.5 + 4.0 * d_global)
+        };
+        let out = SimulatedAnnealing::new(11).run(&space, &mut obj, 300);
+        assert!(
+            out.best_value < 0.8,
+            "did not find the global basin: {}",
+            out.best_value
+        );
+    }
+
+    #[test]
+    fn budget_exact_and_deterministic() {
+        let space = space4();
+        let mut obj = |c: &HadoopConfig| c.values.iter().sum::<f64>();
+        let a = SimulatedAnnealing::new(5).run(&space, &mut obj, 50);
+        let b = SimulatedAnnealing::new(5).run(&space, &mut obj, 50);
+        assert_eq!(a.evals(), 50);
+        assert_eq!(a.best_value, b.best_value);
+    }
+}

@@ -1,0 +1,184 @@
+//! Quadratic interpolation models with minimum-Frobenius-norm Hessians —
+//! the model machinery of Powell's BOBYQA family.
+//!
+//! Given m interpolation points and values, find q(x) = c + gᵀs + ½sᵀHs
+//! (s = x − center) that interpolates all points with the Hessian of
+//! minimum Frobenius norm. The KKT system of that variational problem is
+//!
+//!   [ A  P ] [λ]   [f]        A_ij = ½ (sᵢ·sⱼ)²
+//!   [ Pᵀ 0 ] [c,g] [0]        P row i = [1, sᵢᵀ]
+//!
+//! and H = Σ λᵢ sᵢ sᵢᵀ. We re-solve the dense system each iteration
+//! (m ≤ 2n+1, n ≤ 10 here ⇒ ≤ 32×32 — microseconds), trading Powell's
+//! incremental inverse updates for clarity; DESIGN.md records the
+//! divergence.
+
+use crate::util::linalg::{dot, Mat};
+
+#[derive(Clone, Debug)]
+pub struct QuadModel {
+    pub center: Vec<f64>,
+    pub c: f64,
+    pub g: Vec<f64>,
+    pub h: Mat,
+}
+
+impl QuadModel {
+    /// Evaluate the model at absolute coordinates `x`.
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        let s: Vec<f64> = x.iter().zip(&self.center).map(|(a, b)| a - b).collect();
+        self.eval_step(&s)
+    }
+
+    /// Evaluate at step `s` relative to the center.
+    pub fn eval_step(&self, s: &[f64]) -> f64 {
+        let hs = self.h.matvec(s);
+        self.c + dot(&self.g, s) + 0.5 * dot(s, &hs)
+    }
+
+    /// Model gradient at step `s`: g + H s.
+    pub fn grad_step(&self, s: &[f64]) -> Vec<f64> {
+        let mut hs = self.h.matvec(s);
+        for (hi, gi) in hs.iter_mut().zip(&self.g) {
+            *hi += gi;
+        }
+        hs
+    }
+}
+
+/// Fit the minimum-Frobenius-norm quadratic through `(points, values)`
+/// centered at `center`. Returns None when the interpolation system is
+/// singular (degenerate geometry) — callers must take a geometry step.
+pub fn fit_min_frobenius(
+    points: &[Vec<f64>],
+    values: &[f64],
+    center: &[f64],
+) -> Option<QuadModel> {
+    let m = points.len();
+    let n = center.len();
+    assert_eq!(values.len(), m);
+    if m < n + 2 {
+        return None; // not enough points for a linear model + curvature
+    }
+    let steps: Vec<Vec<f64>> = points
+        .iter()
+        .map(|p| p.iter().zip(center).map(|(a, b)| a - b).collect())
+        .collect();
+
+    let dim = m + n + 1;
+    let mut w = Mat::zeros(dim, dim);
+    for i in 0..m {
+        for j in 0..m {
+            let d = dot(&steps[i], &steps[j]);
+            w[(i, j)] = 0.5 * d * d;
+        }
+        w[(i, m)] = 1.0;
+        w[(m, i)] = 1.0;
+        for k in 0..n {
+            w[(i, m + 1 + k)] = steps[i][k];
+            w[(m + 1 + k, i)] = steps[i][k];
+        }
+    }
+    let mut rhs = vec![0.0; dim];
+    rhs[..m].copy_from_slice(values);
+
+    let sol = w.solve(&rhs)?;
+    let lambda = &sol[..m];
+    let c = sol[m];
+    let g = sol[m + 1..].to_vec();
+    let mut h = Mat::zeros(n, n);
+    for (l, s) in lambda.iter().zip(&steps) {
+        if *l == 0.0 {
+            continue;
+        }
+        for a in 0..n {
+            for b in 0..n {
+                h[(a, b)] += l * s[a] * s[b];
+            }
+        }
+    }
+    Some(QuadModel {
+        center: center.to_vec(),
+        c,
+        g,
+        h,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Build the standard 2n+1 design around `x0` with radius `delta`.
+    fn design(x0: &[f64], delta: f64) -> Vec<Vec<f64>> {
+        let n = x0.len();
+        let mut pts = vec![x0.to_vec()];
+        for i in 0..n {
+            let mut p = x0.to_vec();
+            p[i] += delta;
+            pts.push(p);
+            let mut q = x0.to_vec();
+            q[i] -= delta;
+            pts.push(q);
+        }
+        pts
+    }
+
+    #[test]
+    fn interpolates_exactly_at_points() {
+        let x0 = vec![0.4, 0.6, 0.5];
+        let pts = design(&x0, 0.1);
+        let f = |x: &[f64]| x[0] * x[0] + 2.0 * x[1] * x[2] + x[2];
+        let vals: Vec<f64> = pts.iter().map(|p| f(p)).collect();
+        let m = fit_min_frobenius(&pts, &vals, &x0).unwrap();
+        for (p, v) in pts.iter().zip(&vals) {
+            assert!((m.eval(p) - v).abs() < 1e-8, "{} vs {v}", m.eval(p));
+        }
+    }
+
+    #[test]
+    fn recovers_separable_quadratic_gradient() {
+        // f = Σ (x_i - 0.3)^2: at center x0 the model gradient should
+        // approximate 2(x0 - 0.3)
+        let x0 = vec![0.5, 0.7];
+        let pts = design(&x0, 0.05);
+        let f = |x: &[f64]| x.iter().map(|v| (v - 0.3) * (v - 0.3)).sum::<f64>();
+        let vals: Vec<f64> = pts.iter().map(|p| f(p)).collect();
+        let m = fit_min_frobenius(&pts, &vals, &x0).unwrap();
+        let g = m.grad_step(&vec![0.0; 2]);
+        assert!((g[0] - 0.4).abs() < 1e-6, "g0 {}", g[0]);
+        assert!((g[1] - 0.8).abs() < 1e-6, "g1 {}", g[1]);
+    }
+
+    #[test]
+    fn degenerate_geometry_returns_none() {
+        // all points on a line -> singular system
+        let pts: Vec<Vec<f64>> = (0..6).map(|i| vec![i as f64 * 0.1, 0.0]).collect();
+        let vals = vec![0.0; 6];
+        assert!(fit_min_frobenius(&pts, &vals, &[0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn too_few_points_returns_none() {
+        let pts = vec![vec![0.0, 0.0], vec![0.1, 0.0]];
+        assert!(fit_min_frobenius(&pts, &[1.0, 2.0], &[0.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn model_prediction_decent_off_points() {
+        let mut rng = Rng::new(5);
+        let x0 = vec![0.5; 4];
+        let pts = design(&x0, 0.15);
+        let f = |x: &[f64]| {
+            x.iter().enumerate().map(|(i, v)| (1.0 + i as f64) * (v - 0.4) * (v - 0.4)).sum::<f64>()
+        };
+        let vals: Vec<f64> = pts.iter().map(|p| f(p)).collect();
+        let m = fit_min_frobenius(&pts, &vals, &x0).unwrap();
+        for _ in 0..20 {
+            let x: Vec<f64> = x0.iter().map(|v| v + rng.range_f64(-0.1, 0.1)).collect();
+            let err = (m.eval(&x) - f(&x)).abs();
+            assert!(err < 0.05, "model err {err} at {x:?}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Box-constrained trust-region subproblem:
+//!
+//!   minimize q(s)  subject to  ‖s‖₂ ≤ Δ  and  lo ≤ s ≤ hi
+//!
+//! solved by projected gradient descent with backtracking from the Cauchy
+//! point — not Powell's TRSBOX, but the same contract: a feasible step
+//! with guaranteed model decrease. Dimensions here are ≤ 10, so a few
+//! dozen projected-gradient iterations reach the subproblem's practical
+//! optimum far faster than the cluster evaluation it precedes.
+
+use super::model::QuadModel;
+use crate::util::linalg::norm2;
+
+/// Project `s` onto { ‖s‖ ≤ delta } ∩ [lo, hi] (box first, then ball —
+/// iterating the pair twice is enough at these scales).
+fn project(s: &mut [f64], delta: f64, lo: &[f64], hi: &[f64]) {
+    for _ in 0..2 {
+        for i in 0..s.len() {
+            s[i] = s[i].clamp(lo[i], hi[i]);
+        }
+        let n = norm2(s);
+        if n > delta && n > 0.0 {
+            let k = delta / n;
+            for v in s.iter_mut() {
+                *v *= k;
+            }
+        }
+    }
+}
+
+/// Solve the subproblem; returns (step, predicted_reduction ≥ 0).
+pub fn solve(model: &QuadModel, delta: f64, lo: &[f64], hi: &[f64]) -> (Vec<f64>, f64) {
+    let n = model.g.len();
+    let q0 = model.eval_step(&vec![0.0; n]);
+    let mut s = vec![0.0; n];
+    let mut qs = q0;
+
+    // initial step size from gradient scale
+    let g0 = model.grad_step(&s);
+    let gnorm = norm2(&g0).max(1e-12);
+    let mut t = (delta / gnorm).min(1.0);
+
+    for _ in 0..60 {
+        let g = model.grad_step(&s);
+        if norm2(&g) < 1e-10 {
+            break;
+        }
+        // backtracking line search on the projected path
+        let mut improved = false;
+        let mut tt = t;
+        for _ in 0..20 {
+            let mut cand: Vec<f64> = s.iter().zip(&g).map(|(si, gi)| si - tt * gi).collect();
+            project(&mut cand, delta, lo, hi);
+            let qc = model.eval_step(&cand);
+            if qc < qs - 1e-15 {
+                s = cand;
+                qs = qc;
+                improved = true;
+                t = tt * 1.5; // be a bit more aggressive next iteration
+                break;
+            }
+            tt *= 0.5;
+        }
+        if !improved {
+            break;
+        }
+    }
+    (s, (q0 - qs).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::bobyqa::model::fit_min_frobenius;
+    use crate::util::linalg::norm2;
+
+    fn bowl_model(center: &[f64], target: &[f64], delta: f64) -> QuadModel {
+        let n = center.len();
+        let mut pts = vec![center.to_vec()];
+        for i in 0..n {
+            for d in [delta, -delta] {
+                let mut p = center.to_vec();
+                p[i] += d;
+                pts.push(p);
+            }
+        }
+        let f = |x: &[f64]| -> f64 {
+            x.iter().zip(target).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        let vals: Vec<f64> = pts.iter().map(|p| f(p)).collect();
+        fit_min_frobenius(&pts, &vals, center).unwrap()
+    }
+
+    #[test]
+    fn unconstrained_minimum_inside_region() {
+        let m = bowl_model(&[0.5, 0.5], &[0.55, 0.45], 0.1);
+        let (s, red) = solve(&m, 0.5, &[-0.5, -0.5], &[0.5, 0.5]);
+        assert!(red > 0.0);
+        assert!((s[0] - 0.05).abs() < 1e-3, "s {s:?}");
+        assert!((s[1] + 0.05).abs() < 1e-3, "s {s:?}");
+    }
+
+    #[test]
+    fn respects_trust_radius() {
+        let m = bowl_model(&[0.5, 0.5], &[5.0, 5.0], 0.1); // far-away target
+        let (s, red) = solve(&m, 0.2, &[-0.5, -0.5], &[0.5, 0.5]);
+        assert!(red > 0.0);
+        assert!(norm2(&s) <= 0.2 + 1e-9, "|s| = {}", norm2(&s));
+    }
+
+    #[test]
+    fn respects_box() {
+        let m = bowl_model(&[0.9, 0.9], &[2.0, 2.0], 0.05);
+        let lo = vec![-0.9, -0.9];
+        let hi = vec![0.1, 0.1]; // box: x <= 1.0
+        let (s, _) = solve(&m, 1.0, &lo, &hi);
+        assert!(s[0] <= 0.1 + 1e-9 && s[1] <= 0.1 + 1e-9, "s {s:?}");
+    }
+
+    #[test]
+    fn zero_gradient_returns_zero_step() {
+        let m = bowl_model(&[0.5, 0.5], &[0.5, 0.5], 0.1); // already optimal
+        let (s, red) = solve(&m, 0.3, &[-0.5, -0.5], &[0.5, 0.5]);
+        assert!(norm2(&s) < 1e-6, "s {s:?}");
+        assert!(red.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,71 @@
+//! Exhaustive (direct) search over the spec's parameter grid — the
+//! paper's "direct search" family: "the system tries all combinations of
+//! parameter values" (§II.C.2). Also the generator of Fig. 2 surfaces.
+
+use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::space::ParamSpace;
+use crate::optim::ObjectiveFn;
+
+#[derive(Clone, Debug, Default)]
+pub struct GridSearch;
+
+impl GridSearch {
+    /// Evaluate every grid point (the budget caps runaway grids).
+    pub fn run(
+        &self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> TuningOutcome {
+        let mut rec = Recorder::new();
+        for x in space.unit_grid() {
+            if rec.evals() >= max_evals {
+                break;
+            }
+            let cfg = space.decode(&x);
+            let v = obj(&cfg);
+            rec.record(x, cfg, v);
+        }
+        rec.finish("grid")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{HadoopConfig, P_IO_SORT_MB, P_REDUCES};
+    use crate::config::spec::TuningSpec;
+
+    #[test]
+    fn visits_every_grid_point_once() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut seen = std::collections::BTreeSet::new();
+        let mut obj = |c: &HadoopConfig| {
+            seen.insert((c.get(P_REDUCES) as i64, c.get(P_IO_SORT_MB) as i64));
+            1.0
+        };
+        let out = GridSearch.run(&space, &mut obj, usize::MAX);
+        assert_eq!(out.evals(), 256);
+        assert_eq!(seen.len(), 256, "grid points not distinct");
+    }
+
+    #[test]
+    fn finds_grid_optimum() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        // minimum at reduces=32, sort.mb=800 (paper's Fig.2 trend corner)
+        let mut obj = |c: &HadoopConfig| {
+            (32.0 - c.get(P_REDUCES)) + (800.0 - c.get(P_IO_SORT_MB)) / 100.0
+        };
+        let out = GridSearch.run(&space, &mut obj, usize::MAX);
+        assert_eq!(out.best_config.get(P_REDUCES), 32.0);
+        assert_eq!(out.best_config.get(P_IO_SORT_MB), 800.0);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut obj = |_: &HadoopConfig| 1.0;
+        let out = GridSearch.run(&space, &mut obj, 10);
+        assert_eq!(out.evals(), 10);
+    }
+}

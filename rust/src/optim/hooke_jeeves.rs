@@ -1,0 +1,146 @@
+//! Hooke–Jeeves pattern search: exploratory coordinate probes followed by
+//! an aggressive pattern (momentum) move through the improving direction.
+
+use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::space::ParamSpace;
+use crate::optim::ObjectiveFn;
+
+#[derive(Clone, Debug)]
+pub struct HookeJeeves {
+    pub init_step: f64,
+    pub start: Option<Vec<f64>>,
+}
+
+impl Default for HookeJeeves {
+    fn default() -> Self {
+        Self {
+            init_step: 0.25,
+            start: None,
+        }
+    }
+}
+
+impl HookeJeeves {
+    pub fn run(
+        &self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> TuningOutcome {
+        let d = space.dims();
+        let mut rec = Recorder::new();
+        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
+            let cfg = space.decode(x);
+            let v = obj(&cfg);
+            rec.record(x.to_vec(), cfg, v);
+            v
+        };
+
+        let mut base = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
+        let mut f_base = eval(&mut rec, &base);
+        let mut step = self.init_step;
+        let stop_step = space.min_steps().iter().cloned().fold(f64::MAX, f64::min) * 0.5;
+
+        // exploratory move around `from`, returns improved point + value
+        let explore = |rec: &mut Recorder,
+                       eval: &mut dyn FnMut(&mut Recorder, &[f64]) -> f64,
+                       from: &[f64],
+                       f_from: f64,
+                       step: f64,
+                       max_evals: usize|
+         -> (Vec<f64>, f64) {
+            let mut x = from.to_vec();
+            let mut fx = f_from;
+            for i in 0..x.len() {
+                if rec.evals() >= max_evals {
+                    break;
+                }
+                for dir in [1.0, -1.0] {
+                    let cand = (x[i] + dir * step).clamp(0.0, 1.0);
+                    if (cand - x[i]).abs() < 1e-12 {
+                        continue;
+                    }
+                    let mut xc = x.clone();
+                    xc[i] = cand;
+                    let v = eval(rec, &xc);
+                    if v < fx {
+                        x = xc;
+                        fx = v;
+                        break;
+                    }
+                    if rec.evals() >= max_evals {
+                        break;
+                    }
+                }
+            }
+            (x, fx)
+        };
+
+        while rec.evals() < max_evals && step > stop_step {
+            let (xe, fe) = explore(&mut rec, &mut eval, &base, f_base, step, max_evals);
+            if fe < f_base {
+                // pattern move: jump to 2*xe - base, then explore there
+                let pattern: Vec<f64> = xe
+                    .iter()
+                    .zip(&base)
+                    .map(|(a, b)| (2.0 * a - b).clamp(0.0, 1.0))
+                    .collect();
+                base = xe;
+                f_base = fe;
+                if rec.evals() >= max_evals {
+                    break;
+                }
+                let fp = eval(&mut rec, &pattern);
+                let (xp, fpe) =
+                    explore(&mut rec, &mut eval, &pattern, fp, step, max_evals);
+                if fpe < f_base {
+                    base = xp;
+                    f_base = fpe;
+                }
+            } else {
+                step *= 0.5;
+            }
+        }
+        rec.finish("hooke-jeeves")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::config::spec::TuningSpec;
+
+    #[test]
+    fn converges_on_shifted_bowl() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            sp.encode(c)
+                .iter()
+                .enumerate()
+                .map(|(i, u)| (u - 0.2 - 0.15 * i as f64).powi(2))
+                .sum()
+        };
+        let out = HookeJeeves::default().run(&space, &mut obj, 300);
+        assert!(out.best_value < 0.01, "HJ stuck at {}", out.best_value);
+    }
+
+    #[test]
+    fn beats_or_matches_its_start() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| sp.encode(c).iter().map(|u| (u - 0.9).powi(2)).sum();
+        let out = HookeJeeves::default().run(&space, &mut obj, 150);
+        let first = out.records.first().unwrap().value;
+        assert!(out.best_value <= first);
+    }
+
+    #[test]
+    fn budget_respected() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let mut obj = |_: &HadoopConfig| 1.0; // flat: worst case exploration
+        let out = HookeJeeves::default().run(&space, &mut obj, 23);
+        assert!(out.evals() <= 23);
+    }
+}

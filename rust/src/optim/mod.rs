@@ -1,0 +1,210 @@
+//! Search methods for the Optimizer Runner.
+//!
+//! Two families, exactly as the paper structures them (§II.C):
+//! * **direct search** — [`grid::GridSearch`] (exhaustive),
+//!   [`coordinate::CoordinateSearch`], [`hooke_jeeves::HookeJeeves`];
+//! * **DFO** — [`bobyqa::Bobyqa`] (trust-region quadratic interpolation),
+//!   [`nelder_mead::NelderMead`]; plus [`random::RandomSearch`] as the
+//!   no-structure baseline and [`surrogate::Prescreen`] for model-assisted
+//!   seeding through the AOT artifacts.
+//!
+//! All optimizers work on the unit cube via [`space::ParamSpace`] and an
+//! opaque objective `FnMut(&HadoopConfig) -> f64` (seconds of job running
+//! time — possibly noisy).
+
+pub mod annealing;
+pub mod bobyqa;
+pub mod coordinate;
+pub mod grid;
+pub mod hooke_jeeves;
+pub mod latin;
+pub mod nelder_mead;
+pub mod random;
+pub mod result;
+pub mod space;
+pub mod surrogate;
+
+pub use annealing::SimulatedAnnealing;
+pub use bobyqa::Bobyqa;
+pub use coordinate::CoordinateSearch;
+pub use grid::GridSearch;
+pub use hooke_jeeves::HookeJeeves;
+pub use latin::LatinHypercube;
+pub use nelder_mead::NelderMead;
+pub use random::RandomSearch;
+pub use result::{EvalRecord, TuningOutcome};
+pub use space::ParamSpace;
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{JobSubmission, SimCluster};
+use crate::workloads::WorkloadSpec;
+
+/// The black-box objective: a Hadoop configuration's measured job
+/// running time in seconds.
+pub type ObjectiveFn<'a> = dyn FnMut(&HadoopConfig) -> f64 + 'a;
+
+/// Every optimizer, behind one dispatchable handle (CLI / Optimizer
+/// Runner entry point).
+#[derive(Clone, Debug)]
+pub enum Method {
+    Grid,
+    Random { seed: u64 },
+    Latin { seed: u64 },
+    Coordinate,
+    HookeJeeves,
+    NelderMead,
+    Annealing { seed: u64 },
+    Bobyqa { seed: u64 },
+}
+
+impl Method {
+    /// Parse a CLI name: grid | random | coordinate | hooke-jeeves |
+    /// nelder-mead | bobyqa.
+    pub fn from_name(name: &str, seed: u64) -> Result<Method, String> {
+        Ok(match name {
+            "grid" | "exhaustive" => Method::Grid,
+            "random" => Method::Random { seed },
+            "latin" | "lhs" => Method::Latin { seed },
+            "coordinate" | "compass" => Method::Coordinate,
+            "hooke-jeeves" | "hj" => Method::HookeJeeves,
+            "nelder-mead" | "nm" => Method::NelderMead,
+            "annealing" | "sa" => Method::Annealing { seed },
+            "bobyqa" => Method::Bobyqa { seed },
+            other => {
+                return Err(format!(
+                    "unknown optimizer {other:?} (expected grid|random|latin|coordinate|hooke-jeeves|nelder-mead|annealing|bobyqa)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Grid => "grid",
+            Method::Random { .. } => "random",
+            Method::Latin { .. } => "latin",
+            Method::Coordinate => "coordinate",
+            Method::HookeJeeves => "hooke-jeeves",
+            Method::NelderMead => "nelder-mead",
+            Method::Annealing { .. } => "annealing",
+            Method::Bobyqa { .. } => "bobyqa",
+        }
+    }
+
+    /// Is this a direct-search method (vs DFO)?
+    pub fn is_direct_search(&self) -> bool {
+        matches!(self, Method::Grid | Method::Coordinate | Method::HookeJeeves)
+    }
+
+    pub fn run(
+        &self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> TuningOutcome {
+        match self {
+            Method::Grid => GridSearch.run(space, obj, max_evals),
+            Method::Random { seed } => RandomSearch::new(*seed).run(space, obj, max_evals),
+            Method::Latin { seed } => LatinHypercube::new(*seed).run(space, obj, max_evals),
+            Method::Coordinate => CoordinateSearch::default().run(space, obj, max_evals),
+            Method::HookeJeeves => HookeJeeves::default().run(space, obj, max_evals),
+            Method::NelderMead => NelderMead::default().run(space, obj, max_evals),
+            Method::Annealing { seed } => {
+                SimulatedAnnealing::new(*seed).run(space, obj, max_evals)
+            }
+            Method::Bobyqa { seed } => Bobyqa {
+                seed: *seed,
+                ..Bobyqa::default()
+            }
+            .run(space, obj, max_evals),
+        }
+    }
+}
+
+/// All method names, for sweeps and `--help`.
+pub const ALL_METHODS: [&str; 8] = [
+    "grid",
+    "random",
+    "latin",
+    "coordinate",
+    "hooke-jeeves",
+    "nelder-mead",
+    "annealing",
+    "bobyqa",
+];
+
+/// Objective closure that submits to a simulated cluster and averages
+/// `repeats` runs (repeats > 1 trades cluster time for noise reduction).
+pub fn cluster_objective<'a>(
+    cluster: &'a mut SimCluster,
+    workload: &'a WorkloadSpec,
+    repeats: usize,
+) -> impl FnMut(&HadoopConfig) -> f64 + 'a {
+    let repeats = repeats.max(1);
+    move |cfg: &HadoopConfig| {
+        let mut total = 0.0;
+        for _ in 0..repeats {
+            let job = JobSubmission {
+                name: format!("tune-{}", workload.name),
+                workload: workload.clone(),
+                config: cfg.clone(),
+            };
+            total += cluster.run_job(&job).runtime_s;
+        }
+        total / repeats as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::TuningSpec;
+    use crate::hadoop::ClusterSpec;
+    use crate::workloads::wordcount;
+
+    #[test]
+    fn method_names_roundtrip() {
+        for name in ALL_METHODS {
+            let m = Method::from_name(name, 1).unwrap();
+            assert_eq!(m.name(), name);
+        }
+        assert!(Method::from_name("gradient-descent", 1).is_err());
+    }
+
+    #[test]
+    fn family_classification() {
+        assert!(Method::Grid.is_direct_search());
+        assert!(Method::HookeJeeves.is_direct_search());
+        assert!(!Method::Bobyqa { seed: 1 }.is_direct_search());
+        assert!(!Method::NelderMead.is_direct_search());
+    }
+
+    #[test]
+    fn every_method_runs_against_the_cluster() {
+        let wl = wordcount(2048.0);
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        for name in ALL_METHODS {
+            let mut cluster = SimCluster::new(ClusterSpec::default());
+            let mut obj = cluster_objective(&mut cluster, &wl, 1);
+            let m = Method::from_name(name, 3).unwrap();
+            let out = m.run(&space, &mut obj, 12);
+            assert!(out.evals() <= 12, "{name} overspent");
+            assert!(out.best_value > 0.0, "{name} nonpositive runtime");
+            out.best_config.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn repeats_reduce_objective_variance() {
+        let wl = wordcount(2048.0);
+        let cfg = HadoopConfig::default();
+        let sample_var = |repeats: usize| -> f64 {
+            let mut cluster = SimCluster::new(ClusterSpec::default());
+            let mut obj = cluster_objective(&mut cluster, &wl, repeats);
+            let xs: Vec<f64> = (0..30).map(|_| obj(&cfg)).collect();
+            let m = xs.iter().sum::<f64>() / xs.len() as f64;
+            xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+        };
+        assert!(sample_var(4) < sample_var(1));
+    }
+}

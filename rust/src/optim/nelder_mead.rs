@@ -1,0 +1,207 @@
+//! Nelder–Mead simplex with box constraints (clamping to the unit cube),
+//! the classic derivative-free workhorse and a baseline for the DFO
+//! family the paper integrates.
+
+use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::space::ParamSpace;
+use crate::optim::ObjectiveFn;
+
+#[derive(Clone, Debug)]
+pub struct NelderMead {
+    pub init_scale: f64,
+    pub start: Option<Vec<f64>>,
+    /// Restart the simplex when it collapses below this diameter.
+    pub min_diameter: f64,
+}
+
+impl Default for NelderMead {
+    fn default() -> Self {
+        Self {
+            init_scale: 0.3,
+            start: None,
+            min_diameter: 1e-3,
+        }
+    }
+}
+
+const ALPHA: f64 = 1.0; // reflection
+const GAMMA: f64 = 2.0; // expansion
+const RHO: f64 = 0.5; // contraction
+const SIGMA: f64 = 0.5; // shrink
+
+impl NelderMead {
+    pub fn run(
+        &self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> TuningOutcome {
+        let d = space.dims();
+        let mut rec = Recorder::new();
+        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
+            let x: Vec<f64> = x.iter().map(|u| u.clamp(0.0, 1.0)).collect();
+            let cfg = space.decode(&x);
+            let v = obj(&cfg);
+            rec.record(x, cfg, v);
+            v
+        };
+
+        // initial simplex: start + scaled unit offsets
+        let x0 = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
+        let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(d + 1);
+        let f0 = eval(&mut rec, &x0);
+        simplex.push((x0.clone(), f0));
+        for i in 0..d {
+            if rec.evals() >= max_evals {
+                break;
+            }
+            let mut xi = x0.clone();
+            xi[i] = (xi[i] + self.init_scale).min(1.0);
+            if (xi[i] - x0[i]).abs() < 1e-9 {
+                xi[i] = (x0[i] - self.init_scale).max(0.0);
+            }
+            let fi = eval(&mut rec, &xi);
+            simplex.push((xi, fi));
+        }
+
+        while rec.evals() < max_evals && simplex.len() == d + 1 {
+            simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
+            let diameter = simplex
+                .iter()
+                .skip(1)
+                .map(|(x, _)| {
+                    x.iter()
+                        .zip(&simplex[0].0)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0, f64::max)
+                })
+                .fold(0.0, f64::max);
+            if diameter < self.min_diameter {
+                break;
+            }
+
+            // centroid of all but worst
+            let worst = simplex[d].clone();
+            let centroid: Vec<f64> = (0..d)
+                .map(|i| simplex[..d].iter().map(|(x, _)| x[i]).sum::<f64>() / d as f64)
+                .collect();
+            let reflect: Vec<f64> = centroid
+                .iter()
+                .zip(&worst.0)
+                .map(|(c, w)| c + ALPHA * (c - w))
+                .collect();
+            let fr = eval(&mut rec, &reflect);
+
+            if fr < simplex[0].1 {
+                // try expansion
+                if rec.evals() >= max_evals {
+                    simplex[d] = (reflect, fr);
+                    break;
+                }
+                let expand: Vec<f64> = centroid
+                    .iter()
+                    .zip(&worst.0)
+                    .map(|(c, w)| c + GAMMA * ALPHA * (c - w))
+                    .collect();
+                let fe = eval(&mut rec, &expand);
+                simplex[d] = if fe < fr { (expand, fe) } else { (reflect, fr) };
+            } else if fr < simplex[d - 1].1 {
+                simplex[d] = (reflect, fr);
+            } else {
+                // contraction (outside if fr better than worst, else inside)
+                if rec.evals() >= max_evals {
+                    break;
+                }
+                let toward = if fr < worst.1 { &reflect } else { &worst.0 };
+                let contract: Vec<f64> = centroid
+                    .iter()
+                    .zip(toward)
+                    .map(|(c, t)| c + RHO * (t - c))
+                    .collect();
+                let fc = eval(&mut rec, &contract);
+                if fc < worst.1.min(fr) {
+                    simplex[d] = (contract, fc);
+                } else {
+                    // shrink toward the best
+                    let best = simplex[0].0.clone();
+                    for k in 1..=d {
+                        if rec.evals() >= max_evals {
+                            break;
+                        }
+                        let xs: Vec<f64> = simplex[k]
+                            .0
+                            .iter()
+                            .zip(&best)
+                            .map(|(x, b)| b + SIGMA * (x - b))
+                            .collect();
+                        let fs = eval(&mut rec, &xs);
+                        simplex[k] = (xs, fs);
+                    }
+                }
+            }
+        }
+        rec.finish("nelder-mead")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::config::spec::TuningSpec;
+
+    fn space4() -> ParamSpace {
+        ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default())
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let space = space4();
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            sp.encode(c).iter().map(|u| (u - 0.6).powi(2)).sum()
+        };
+        let out = NelderMead::default().run(&space, &mut obj, 250);
+        assert!(out.best_value < 0.02, "NM stuck at {}", out.best_value);
+    }
+
+    #[test]
+    fn converges_on_rosenbrock_like() {
+        // a curved valley — harder than a separable bowl
+        let space = space4();
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            let u = sp.encode(c);
+            let mut s = 0.0;
+            for i in 0..u.len() - 1 {
+                s += 10.0 * (u[i + 1] - u[i] * u[i]).powi(2) + (1.0 - u[i]).powi(2);
+            }
+            s
+        };
+        let out = NelderMead::default().run(&space, &mut obj, 400);
+        // integer rounding limits precision; just demand real progress
+        let first = out.records[0].value;
+        assert!(out.best_value < first * 0.25, "NM {} vs start {first}", out.best_value);
+    }
+
+    #[test]
+    fn all_proposals_in_cube() {
+        let space = space4();
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            sp.encode(c).iter().map(|u| (u - 1.2).powi(2)).sum() // optimum outside
+        };
+        let out = NelderMead::default().run(&space, &mut obj, 120);
+        for r in &out.records {
+            assert!(r.unit_x.iter().all(|&u| (0.0..=1.0).contains(&u)), "{:?}", r.unit_x);
+        }
+    }
+
+    #[test]
+    fn budget_respected() {
+        let space = space4();
+        let mut obj = |_: &HadoopConfig| 1.0;
+        let out = NelderMead::default().run(&space, &mut obj, 30);
+        assert!(out.evals() <= 30);
+    }
+}

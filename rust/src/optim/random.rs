@@ -1,0 +1,67 @@
+//! Uniform random search — the standard no-structure baseline every
+//! optimizer comparison needs (ABL1).
+
+use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::space::ParamSpace;
+use crate::optim::ObjectiveFn;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandomSearch {
+    pub seed: u64,
+}
+
+impl RandomSearch {
+    pub fn new(seed: u64) -> Self {
+        Self { seed }
+    }
+
+    pub fn run(
+        &self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> TuningOutcome {
+        let mut rng = Rng::new(self.seed);
+        let d = space.dims();
+        let mut rec = Recorder::new();
+        for _ in 0..max_evals {
+            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+            let cfg = space.decode(&x);
+            let v = obj(&cfg);
+            rec.record(x, cfg, v);
+        }
+        rec.finish("random")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::HadoopConfig;
+    use crate::config::spec::TuningSpec;
+
+    #[test]
+    fn improves_with_budget_on_smooth_bowl() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let bowl = |space: &ParamSpace, c: &HadoopConfig| -> f64 {
+            space.encode(c).iter().map(|u| (u - 0.7).powi(2)).sum()
+        };
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| bowl(&sp, c);
+        let small = RandomSearch::new(1).run(&space, &mut obj, 5).best_value;
+        let large = RandomSearch::new(1).run(&space, &mut obj, 200).best_value;
+        assert!(large <= small);
+        assert!(large < 0.05, "200 random points should land near optimum: {large}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut obj = |c: &HadoopConfig| c.values.iter().sum::<f64>();
+        let a = RandomSearch::new(9).run(&space, &mut obj, 20);
+        let b = RandomSearch::new(9).run(&space, &mut obj, 20);
+        assert_eq!(a.best_value, b.best_value);
+        assert_eq!(a.records.len(), b.records.len());
+    }
+}

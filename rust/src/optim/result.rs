@@ -1,0 +1,142 @@
+//! Tuning-run bookkeeping: per-evaluation records, best-so-far tracking,
+//! and the outcome summary Catla's history/visualization layers consume.
+
+use crate::config::params::HadoopConfig;
+
+/// One cluster evaluation during a tuning run.
+#[derive(Clone, Debug)]
+pub struct EvalRecord {
+    /// 1-based evaluation index ("iteration" in the paper's Fig. 3).
+    pub iter: usize,
+    pub config: HadoopConfig,
+    /// Unit-cube coordinates the optimizer proposed.
+    pub unit_x: Vec<f64>,
+    /// Measured job running time, seconds.
+    pub value: f64,
+    /// min(value) over evaluations 1..=iter.
+    pub best_so_far: f64,
+}
+
+/// Result of a whole tuning run.
+#[derive(Clone, Debug)]
+pub struct TuningOutcome {
+    pub optimizer: String,
+    pub records: Vec<EvalRecord>,
+    pub best_config: HadoopConfig,
+    pub best_value: f64,
+}
+
+impl TuningOutcome {
+    pub fn evals(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Evaluations needed to first reach within `(1+tol)` of `target`
+    /// (e.g. the grid optimum) — the ABL1 comparison metric.
+    pub fn evals_to_within(&self, target: f64, tol: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.best_so_far <= target * (1.0 + tol))
+            .map(|r| r.iter)
+    }
+
+    /// (iteration, best_so_far) convergence series for Fig. 3.
+    pub fn convergence(&self) -> Vec<(usize, f64)> {
+        self.records.iter().map(|r| (r.iter, r.best_so_far)).collect()
+    }
+
+    /// (iteration, raw value) series — the paper plots raw running time
+    /// per iteration, fluctuations included.
+    pub fn raw_series(&self) -> Vec<(usize, f64)> {
+        self.records.iter().map(|r| (r.iter, r.value)).collect()
+    }
+}
+
+/// Incremental recorder used by every optimizer implementation.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    records: Vec<EvalRecord>,
+    best: Option<(HadoopConfig, f64)>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, unit_x: Vec<f64>, config: HadoopConfig, value: f64) {
+        let best_so_far = match &self.best {
+            Some((_, b)) => b.min(value),
+            None => value,
+        };
+        if self.best.as_ref().map(|(_, b)| value < *b).unwrap_or(true) {
+            self.best = Some((config.clone(), value));
+        }
+        self.records.push(EvalRecord {
+            iter: self.records.len() + 1,
+            config,
+            unit_x,
+            value,
+            best_so_far,
+        });
+    }
+
+    pub fn evals(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn best_value(&self) -> Option<f64> {
+        self.best.as_ref().map(|(_, v)| *v)
+    }
+
+    pub fn finish(self, optimizer: &str) -> TuningOutcome {
+        let (best_config, best_value) = self
+            .best
+            .expect("tuning run recorded no evaluations");
+        TuningOutcome {
+            optimizer: optimizer.to_string(),
+            records: self.records,
+            best_config,
+            best_value,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HadoopConfig {
+        HadoopConfig::default()
+    }
+
+    #[test]
+    fn best_so_far_monotone() {
+        let mut r = Recorder::new();
+        for v in [5.0, 3.0, 4.0, 2.0, 6.0] {
+            r.record(vec![0.5], cfg(), v);
+        }
+        let out = r.finish("test");
+        let bsf: Vec<f64> = out.records.iter().map(|x| x.best_so_far).collect();
+        assert_eq!(bsf, vec![5.0, 3.0, 3.0, 2.0, 2.0]);
+        assert_eq!(out.best_value, 2.0);
+    }
+
+    #[test]
+    fn evals_to_within() {
+        let mut r = Recorder::new();
+        for v in [10.0, 8.0, 5.5, 5.0] {
+            r.record(vec![0.0], cfg(), v);
+        }
+        let out = r.finish("test");
+        assert_eq!(out.evals_to_within(5.0, 0.10), Some(3)); // 5.5 <= 5.5
+        assert_eq!(out.evals_to_within(5.0, 0.0), Some(4));
+        assert_eq!(out.evals_to_within(1.0, 0.0), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "no evaluations")]
+    fn empty_run_panics() {
+        Recorder::new().finish("test");
+    }
+}

@@ -1,0 +1,170 @@
+//! Parameter-space geometry: the bridge between optimizer coordinates
+//! (the unit cube `[0,1]^d`) and concrete `HadoopConfig`s.
+//!
+//! Optimizers are generic over dimension and know nothing about Hadoop;
+//! `ParamSpace` owns scaling, integer rounding and clamping. Rounding
+//! happens at decode so DFO methods see a smooth box while the cluster
+//! only ever receives valid configurations.
+
+use crate::config::params::HadoopConfig;
+use crate::config::spec::TuningSpec;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpace {
+    pub spec: TuningSpec,
+    /// Values for parameters NOT being tuned.
+    pub base: HadoopConfig,
+}
+
+impl ParamSpace {
+    pub fn new(spec: TuningSpec, base: HadoopConfig) -> Self {
+        Self { spec, base }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.spec.dims()
+    }
+
+    /// Map a unit-cube point to a valid Hadoop configuration.
+    pub fn decode(&self, x: &[f64]) -> HadoopConfig {
+        assert_eq!(x.len(), self.dims(), "dimension mismatch");
+        let mut cfg = self.base.clone();
+        for (r, &u) in self.spec.ranges.iter().zip(x) {
+            let u = u.clamp(0.0, 1.0);
+            let v = r.lo + u * (r.hi - r.lo);
+            cfg.set(r.meta.index, v); // set() rounds integers + clamps
+        }
+        cfg
+    }
+
+    /// Map a configuration back to unit coordinates (for seeding).
+    pub fn encode(&self, cfg: &HadoopConfig) -> Vec<f64> {
+        self.spec
+            .ranges
+            .iter()
+            .map(|r| {
+                let v = cfg.get(r.meta.index);
+                ((v - r.lo) / (r.hi - r.lo)).clamp(0.0, 1.0)
+            })
+            .collect()
+    }
+
+    /// The unit-cube grid of an exhaustive search (cross product of the
+    /// per-parameter grids), in row-major order.
+    pub fn unit_grid(&self) -> Vec<Vec<f64>> {
+        let axes: Vec<Vec<f64>> = self
+            .spec
+            .ranges
+            .iter()
+            .map(|r| {
+                r.grid()
+                    .into_iter()
+                    .map(|v| ((v - r.lo) / (r.hi - r.lo)).clamp(0.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        let mut out: Vec<Vec<f64>> = vec![vec![]];
+        for axis in &axes {
+            let mut next = Vec::with_capacity(out.len() * axis.len());
+            for prefix in &out {
+                for &v in axis {
+                    let mut p = prefix.clone();
+                    p.push(v);
+                    next.push(p);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    /// Smallest meaningful unit-cube step per dimension (one integer tick
+    /// for integer params) — DFO stops refining below this resolution.
+    pub fn min_steps(&self) -> Vec<f64> {
+        self.spec
+            .ranges
+            .iter()
+            .map(|r| {
+                if r.meta.integer {
+                    (1.0 / (r.hi - r.lo)).min(0.5)
+                } else {
+                    1e-3
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{P_IO_SORT_MB, P_REDUCES};
+
+    fn space() -> ParamSpace {
+        ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default())
+    }
+
+    #[test]
+    fn decode_bounds() {
+        let s = space();
+        let lo = s.decode(&[0.0, 0.0]);
+        let hi = s.decode(&[1.0, 1.0]);
+        assert_eq!(lo.get(P_REDUCES), 2.0);
+        assert_eq!(lo.get(P_IO_SORT_MB), 50.0);
+        assert_eq!(hi.get(P_REDUCES), 32.0);
+        assert_eq!(hi.get(P_IO_SORT_MB), 800.0);
+    }
+
+    #[test]
+    fn decode_rounds_integers() {
+        let s = space();
+        let c = s.decode(&[0.5, 0.5]);
+        assert_eq!(c.get(P_REDUCES).fract(), 0.0);
+        assert_eq!(c.get(P_IO_SORT_MB).fract(), 0.0);
+    }
+
+    #[test]
+    fn decode_clamps_out_of_cube() {
+        let s = space();
+        let c = s.decode(&[-3.0, 7.0]);
+        assert_eq!(c.get(P_REDUCES), 2.0);
+        assert_eq!(c.get(P_IO_SORT_MB), 800.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = space();
+        for u in [[0.0, 1.0], [0.25, 0.75], [1.0, 0.0]] {
+            let cfg = s.decode(&u);
+            let back = s.decode(&s.encode(&cfg));
+            assert_eq!(back, cfg);
+        }
+    }
+
+    #[test]
+    fn untuned_params_keep_base_values() {
+        let mut base = HadoopConfig::default();
+        base.set_by_name("mapreduce.map.memory.mb", 2048.0).unwrap();
+        let s = ParamSpace::new(TuningSpec::fig2(), base);
+        let c = s.decode(&[0.5, 0.5]);
+        assert_eq!(c.get(crate::config::params::P_MAP_MEM_MB), 2048.0);
+    }
+
+    #[test]
+    fn unit_grid_is_cross_product() {
+        let s = space();
+        let g = s.unit_grid();
+        assert_eq!(g.len(), s.spec.grid_size());
+        assert_eq!(g.len(), 256);
+        // all points in the cube, first point is the origin corner
+        assert!(g.iter().all(|p| p.iter().all(|&v| (0.0..=1.0).contains(&v))));
+        assert_eq!(g[0], vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn min_steps_integer_resolution() {
+        let s = space();
+        let steps = s.min_steps();
+        assert!((steps[0] - 1.0 / 30.0).abs() < 1e-12); // reduces 2..32
+    }
+}

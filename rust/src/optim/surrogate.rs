@@ -1,0 +1,185 @@
+//! Surrogate prescreening: score thousands of candidate configurations
+//! with the *analytic* cost model before spending any cluster
+//! evaluations, then start the real optimizer from the best prediction.
+//!
+//! The scorer is a trait so the same code runs against the AOT-compiled
+//! JAX/Pallas artifact through PJRT (`runtime::CostModelExec`, the hot
+//! path) or against the native rust mirror (`NativeScorer`, always
+//! available). ABL2 in EXPERIMENTS.md measures what prescreening saves.
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{costmodel, ClusterSpec};
+use crate::optim::result::TuningOutcome;
+use crate::optim::space::ParamSpace;
+use crate::optim::{Bobyqa, ObjectiveFn};
+use crate::util::rng::Rng;
+use crate::workloads::WorkloadSpec;
+
+/// Anything that can batch-score configurations (lower = better).
+pub trait CandidateScorer {
+    fn score(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String>;
+    fn name(&self) -> &str;
+}
+
+/// Mutable references to scorers are scorers (lets callers lend a scorer
+/// to a `Prescreen` without giving up ownership).
+impl<T: CandidateScorer + ?Sized> CandidateScorer for &mut T {
+    fn score(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        (**self).score(cfgs)
+    }
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+}
+
+/// Pure-rust scorer using the analytic cost model directly.
+pub struct NativeScorer {
+    pub workload: WorkloadSpec,
+    pub cluster: ClusterSpec,
+}
+
+impl CandidateScorer for NativeScorer {
+    fn score(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        Ok(cfgs
+            .iter()
+            .map(|c| costmodel::predict_runtime(c, &self.workload, &self.cluster))
+            .collect())
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+/// Prescreening driver.
+pub struct Prescreen<S: CandidateScorer> {
+    pub scorer: S,
+    /// Number of model-scored candidates (cheap — no cluster time).
+    pub n_candidates: usize,
+    pub seed: u64,
+}
+
+impl<S: CandidateScorer> Prescreen<S> {
+    pub fn new(scorer: S) -> Self {
+        Self {
+            scorer,
+            n_candidates: 2048,
+            seed: 11,
+        }
+    }
+
+    /// Sample the unit cube, score through the surrogate, return the
+    /// best candidates' unit coordinates (best first).
+    pub fn top_starts(&mut self, space: &ParamSpace, k: usize) -> Result<Vec<Vec<f64>>, String> {
+        let mut rng = Rng::new(self.seed);
+        let d = space.dims();
+        let xs: Vec<Vec<f64>> = (0..self.n_candidates)
+            .map(|_| (0..d).map(|_| rng.f64()).collect())
+            .collect();
+        let cfgs: Vec<HadoopConfig> = xs.iter().map(|x| space.decode(x)).collect();
+        let scores = self.scorer.score(&cfgs)?;
+        if scores.len() != cfgs.len() {
+            return Err(format!(
+                "scorer returned {} scores for {} configs",
+                scores.len(),
+                cfgs.len()
+            ));
+        }
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+        Ok(idx.into_iter().take(k).map(|i| xs[i].clone()).collect())
+    }
+
+    /// Run BOBYQA seeded from the best surrogate prediction.
+    pub fn run_bobyqa(
+        &mut self,
+        space: &ParamSpace,
+        obj: &mut ObjectiveFn<'_>,
+        max_evals: usize,
+    ) -> Result<TuningOutcome, String> {
+        let starts = self.top_starts(space, 1)?;
+        let bob = Bobyqa {
+            start: Some(starts[0].clone()),
+            ..Bobyqa::default()
+        };
+        let mut out = bob.run(space, obj, max_evals);
+        out.optimizer = format!("bobyqa+prescreen({})", self.scorer.name());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::TuningSpec;
+    use crate::workloads::wordcount;
+
+    fn prescreen() -> Prescreen<NativeScorer> {
+        Prescreen::new(NativeScorer {
+            workload: wordcount(10240.0),
+            cluster: ClusterSpec::default(),
+        })
+    }
+
+    #[test]
+    fn top_starts_sorted_by_model_score() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut p = prescreen();
+        let starts = p.top_starts(&space, 5).unwrap();
+        assert_eq!(starts.len(), 5);
+        let mut scorer = NativeScorer {
+            workload: wordcount(10240.0),
+            cluster: ClusterSpec::default(),
+        };
+        let cfgs: Vec<HadoopConfig> = starts.iter().map(|x| space.decode(x)).collect();
+        let scores = scorer.score(&cfgs).unwrap();
+        for w in scores.windows(2) {
+            assert!(w[0] <= w[1] + 1e-9, "starts not sorted: {scores:?}");
+        }
+    }
+
+    #[test]
+    fn prescreen_start_beats_center_on_model() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut p = prescreen();
+        let start = p.top_starts(&space, 1).unwrap().remove(0);
+        let mut scorer = NativeScorer {
+            workload: wordcount(10240.0),
+            cluster: ClusterSpec::default(),
+        };
+        let s = scorer
+            .score(&[space.decode(&start), space.decode(&vec![0.5, 0.5])])
+            .unwrap();
+        assert!(s[0] <= s[1], "prescreened start {} vs center {}", s[0], s[1]);
+    }
+
+    #[test]
+    fn run_bobyqa_labels_optimizer() {
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut p = prescreen();
+        let sp = space.clone();
+        let mut obj = move |c: &HadoopConfig| -> f64 {
+            sp.encode(c).iter().map(|u| (u - 0.8).powi(2)).sum()
+        };
+        let out = p.run_bobyqa(&space, &mut obj, 30).unwrap();
+        assert!(out.optimizer.contains("prescreen"));
+        assert!(out.evals() <= 30);
+    }
+
+    #[test]
+    fn scorer_length_mismatch_detected() {
+        struct Bad;
+        impl CandidateScorer for Bad {
+            fn score(&mut self, _c: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+                Ok(vec![1.0])
+            }
+            fn name(&self) -> &str {
+                "bad"
+            }
+        }
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let mut p = Prescreen::new(Bad);
+        p.n_candidates = 8;
+        assert!(p.top_starts(&space, 1).is_err());
+    }
+}

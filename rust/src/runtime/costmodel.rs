@@ -1,0 +1,137 @@
+//! Typed wrapper over the AOT cost-model artifacts: batched
+//! `HadoopConfig -> predicted runtime (+ phase breakdown)` scoring.
+//!
+//! Two fixed-shape executables (N=128 and N=1024, from spec.AOT_BATCH_SIZES)
+//! are compiled once; arbitrary batch sizes are served by padding up to the
+//! smallest fitting artifact and chunking above the largest. Padding rows
+//! repeat the last config — results for them are sliced away.
+
+use crate::config::params::{HadoopConfig, N_PARAMS};
+use crate::hadoop::ClusterSpec;
+use crate::optim::surrogate::CandidateScorer;
+use crate::runtime::{execute_tuple, literal_f32, Runtime};
+use crate::workloads::WorkloadSpec;
+
+pub const N_PHASES: usize = 8;
+pub const N_CONSTS: usize = 16;
+/// Batch sizes baked into the artifacts (keep in sync with spec.py).
+pub const BATCH_SIZES: [usize; 2] = [128, 1024];
+
+pub struct CostModelExec {
+    exes: Vec<(usize, xla::PjRtLoadedExecutable)>, // (batch, exe), ascending
+    consts: [f32; N_CONSTS],
+    weights: [f32; N_PHASES * N_PHASES],
+    /// Executions performed (for perf accounting).
+    pub calls: u64,
+}
+
+/// Row-major default calibration matrix as f32 (mirror of spec.py).
+pub fn default_weights_f32() -> [f32; N_PHASES * N_PHASES] {
+    let w = crate::hadoop::costmodel::default_weights();
+    let mut out = [0f32; N_PHASES * N_PHASES];
+    for i in 0..N_PHASES {
+        for j in 0..N_PHASES {
+            out[i * N_PHASES + j] = w[i][j] as f32;
+        }
+    }
+    out
+}
+
+impl CostModelExec {
+    /// Compile the cost-model artifacts for a (workload, cluster) pair.
+    pub fn load(rt: &Runtime, wl: &WorkloadSpec, cl: &ClusterSpec) -> Result<Self, String> {
+        let mut exes = Vec::new();
+        for n in BATCH_SIZES {
+            let exe = rt.compile_artifact(&format!("costmodel_n{n}.hlo.txt"))?;
+            exes.push((n, exe));
+        }
+        Ok(Self {
+            exes,
+            consts: cl.to_consts(wl),
+            weights: default_weights_f32(),
+            calls: 0,
+        })
+    }
+
+    /// Re-target another workload/cluster without recompiling.
+    pub fn set_context(&mut self, wl: &WorkloadSpec, cl: &ClusterSpec) {
+        self.consts = cl.to_consts(wl);
+    }
+
+    /// Predict runtimes for arbitrary batch sizes. Returns seconds per
+    /// config, aligned with the input order.
+    pub fn predict(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f32>, String> {
+        Ok(self.predict_with_phases(cfgs)?.0)
+    }
+
+    /// Predict runtimes and the per-phase breakdown.
+    pub fn predict_with_phases(
+        &mut self,
+        cfgs: &[HadoopConfig],
+    ) -> Result<(Vec<f32>, Vec<[f32; N_PHASES]>), String> {
+        if cfgs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let mut runtimes = Vec::with_capacity(cfgs.len());
+        let mut phases = Vec::with_capacity(cfgs.len());
+        let max_batch = self.exes.last().unwrap().0;
+        for chunk in cfgs.chunks(max_batch) {
+            let (r, p) = self.predict_chunk(chunk)?;
+            runtimes.extend(r);
+            phases.extend(p);
+        }
+        Ok((runtimes, phases))
+    }
+
+    fn predict_chunk(
+        &mut self,
+        cfgs: &[HadoopConfig],
+    ) -> Result<(Vec<f32>, Vec<[f32; N_PHASES]>), String> {
+        let n = cfgs.len();
+        // smallest artifact that fits
+        let (batch, exe) = self
+            .exes
+            .iter()
+            .find(|(b, _)| *b >= n)
+            .ok_or_else(|| format!("chunk {n} exceeds max artifact batch"))?;
+        let batch = *batch;
+
+        let mut flat = Vec::with_capacity(batch * N_PARAMS);
+        for c in cfgs {
+            flat.extend_from_slice(&c.to_f32_row());
+        }
+        let last = cfgs[n - 1].to_f32_row();
+        for _ in n..batch {
+            flat.extend_from_slice(&last); // pad with the last row
+        }
+
+        let lit_cfg = literal_f32(&flat, &[batch as i64, N_PARAMS as i64])?;
+        let lit_consts = literal_f32(&self.consts, &[N_CONSTS as i64])?;
+        let lit_w = literal_f32(&self.weights, &[N_PHASES as i64, N_PHASES as i64])?;
+
+        let out = execute_tuple(exe, &[lit_cfg, lit_consts, lit_w])?;
+        self.calls += 1;
+        if out.len() != 2 {
+            return Err(format!("cost model returned {}-tuple, expected 2", out.len()));
+        }
+        let runtime: Vec<f32> = out[0].to_vec().map_err(|e| format!("runtime out: {e}"))?;
+        let ph_flat: Vec<f32> = out[1].to_vec().map_err(|e| format!("phases out: {e}"))?;
+        let mut phases = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = [0f32; N_PHASES];
+            row.copy_from_slice(&ph_flat[i * N_PHASES..(i + 1) * N_PHASES]);
+            phases.push(row);
+        }
+        Ok((runtime[..n].to_vec(), phases))
+    }
+}
+
+impl CandidateScorer for CostModelExec {
+    fn score(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        Ok(self.predict(cfgs)?.into_iter().map(|v| v as f64).collect())
+    }
+
+    fn name(&self) -> &str {
+        "pjrt-costmodel"
+    }
+}

@@ -1,0 +1,129 @@
+//! XLA PJRT runtime: load the AOT artifacts produced by
+//! `python/compile/aot.py` and execute them from the tuning hot path.
+//!
+//! The interchange format is HLO **text** (see DESIGN.md / aot.py — the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos). Each
+//! artifact is compiled exactly once per process; executions reuse the
+//! compiled `PjRtLoadedExecutable`, so the request path never touches
+//! Python, files, or the compiler.
+
+pub mod costmodel;
+pub mod quadratic;
+
+pub use costmodel::CostModelExec;
+pub use quadratic::QuadraticExec;
+
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT client + artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime, String> {
+        let artifacts_dir = artifacts_dir.into();
+        if !artifacts_dir.is_dir() {
+            return Err(format!(
+                "artifacts directory {} does not exist — run `make artifacts`",
+                artifacts_dir.display()
+            ));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            artifacts_dir,
+        })
+    }
+
+    /// Resolve the artifacts directory: `$CATLA_ARTIFACTS`, else
+    /// `./artifacts`, else `<crate root>/artifacts`.
+    pub fn default_artifacts_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("CATLA_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.is_dir() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Open the default runtime (most callers).
+    pub fn open_default() -> Result<Runtime, String> {
+        Self::new(Self::default_artifacts_dir())
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn compile_artifact(&self, file: &str) -> Result<xla::PjRtLoadedExecutable, String> {
+        let path = self.artifacts_dir.join(file);
+        compile_hlo_text(&self.client, &path)
+    }
+}
+
+/// Load HLO text from `path` and compile it on `client`.
+pub fn compile_hlo_text(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable, String> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| format!("compiling {}: {e}", path.display()))
+}
+
+/// Execute a compiled artifact on literal inputs and return the tuple
+/// elements (aot.py lowers with `return_tuple=True`).
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>, String> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| format!("execute: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| format!("to_literal: {e}"))?;
+    lit.to_tuple().map_err(|e| format!("to_tuple: {e}"))
+}
+
+/// Build an f32 literal of the given shape from row-major data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, String> {
+    let expect: i64 = dims.iter().product();
+    if expect != data.len() as i64 {
+        return Err(format!(
+            "shape {dims:?} wants {expect} elements, got {}",
+            data.len()
+        ));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| format!("reshape{dims:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        let err = match Runtime::new("/nonexistent/artifacts") {
+            Err(e) => e,
+            Ok(_) => panic!("expected error for missing dir"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn literal_shape_mismatch_detected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+    }
+
+    // Artifact-dependent tests live in rust/tests/runtime_integration.rs
+    // (they require `make artifacts` to have run).
+}

@@ -1,0 +1,78 @@
+//! Typed wrapper over the AOT batched-quadratic artifact: evaluate a
+//! DFO surrogate q(x) = c + g·x + ½xᵀHx over candidate batches on PJRT.
+//!
+//! The artifact has fixed shape (N=256 candidates, D=8 dims); smaller
+//! problems are zero-padded — provably neutral for a quadratic (see
+//! python/tests/test_kernel.py::test_zero_padding_is_neutral).
+
+use crate::runtime::{execute_tuple, literal_f32, Runtime};
+
+pub const QUAD_BATCH: usize = 256;
+pub const QUAD_DIM: usize = 8;
+
+pub struct QuadraticExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub calls: u64,
+}
+
+impl QuadraticExec {
+    pub fn load(rt: &Runtime) -> Result<Self, String> {
+        Ok(Self {
+            exe: rt.compile_artifact(&format!("quadratic_n{QUAD_BATCH}.hlo.txt"))?,
+            calls: 0,
+        })
+    }
+
+    /// Evaluate the quadratic at each row of `xs` (dim d ≤ QUAD_DIM).
+    /// `g` is length d, `h` row-major d×d, `c0` the constant term.
+    pub fn eval(
+        &mut self,
+        xs: &[Vec<f64>],
+        g: &[f64],
+        h: &[Vec<f64>],
+        c0: f64,
+    ) -> Result<Vec<f64>, String> {
+        let d = g.len();
+        if d > QUAD_DIM {
+            return Err(format!("dimension {d} exceeds artifact dim {QUAD_DIM}"));
+        }
+        if h.len() != d || h.iter().any(|r| r.len() != d) {
+            return Err("hessian shape mismatch".into());
+        }
+        let mut out = Vec::with_capacity(xs.len());
+        // pad g and h once
+        let mut gp = [0f32; QUAD_DIM];
+        for (i, v) in g.iter().enumerate() {
+            gp[i] = *v as f32;
+        }
+        let mut hp = [0f32; QUAD_DIM * QUAD_DIM];
+        for i in 0..d {
+            for j in 0..d {
+                hp[i * QUAD_DIM + j] = h[i][j] as f32;
+            }
+        }
+        for chunk in xs.chunks(QUAD_BATCH) {
+            let n = chunk.len();
+            let mut flat = vec![0f32; QUAD_BATCH * QUAD_DIM];
+            for (r, x) in chunk.iter().enumerate() {
+                if x.len() != d {
+                    return Err(format!("candidate {r} has dim {}, expected {d}", x.len()));
+                }
+                for (c, v) in x.iter().enumerate() {
+                    flat[r * QUAD_DIM + c] = *v as f32;
+                }
+            }
+            let lits = [
+                literal_f32(&flat, &[QUAD_BATCH as i64, QUAD_DIM as i64])?,
+                literal_f32(&gp, &[QUAD_DIM as i64])?,
+                literal_f32(&hp, &[QUAD_DIM as i64, QUAD_DIM as i64])?,
+                literal_f32(&[c0 as f32], &[1])?,
+            ];
+            let res = execute_tuple(&self.exe, &lits)?;
+            self.calls += 1;
+            let q: Vec<f32> = res[0].to_vec().map_err(|e| format!("quad out: {e}"))?;
+            out.extend(q[..n].iter().map(|v| *v as f64));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,186 @@
+//! Micro/meso benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is `harness = false` and drives this:
+//! warmup, fixed-duration sampling, and a stats row (mean/p50/p95/min) in
+//! a markdown table, plus free-form experiment output (the paper's
+//! figures are regenerated as CSV + ASCII charts by the bench mains).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub throughput: Option<(f64, &'static str)>, // items/sec, unit label
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Collects rows and prints a table at the end.
+pub struct Bench {
+    pub rows: Vec<BenchStats>,
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            rows: Vec::new(),
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(2),
+            min_samples: 10,
+            max_samples: 5_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // honor a quick mode for CI-ish runs
+        let mut b = Self::default();
+        if std::env::var("CATLA_BENCH_QUICK").is_ok() {
+            b.warmup = Duration::from_millis(50);
+            b.measure = Duration::from_millis(300);
+            b.min_samples = 3;
+        }
+        b
+    }
+
+    /// Time `f` repeatedly; `f` returns a value that is black-boxed.
+    pub fn run<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.measure || samples_ns.len() < self.min_samples)
+            && samples_ns.len() < self.max_samples
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p50_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
+            min_ns: samples_ns[0],
+            throughput: None,
+        };
+        self.rows.push(stats);
+        self.rows.last().unwrap()
+    }
+
+    /// Like `run`, attaching an items/second throughput computed from the
+    /// per-iteration item count.
+    pub fn run_throughput<R, F: FnMut() -> R>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        unit: &'static str,
+        f: F,
+    ) -> &BenchStats {
+        self.run(name, f);
+        let row = self.rows.last_mut().unwrap();
+        row.throughput = Some((items_per_iter / (row.mean_ns / 1e9), unit));
+        self.rows.last().unwrap()
+    }
+
+    pub fn print_table(&self, title: &str) {
+        println!("\n## {title}\n");
+        println!("| benchmark | samples | mean | p50 | p95 | min | throughput |");
+        println!("|---|---|---|---|---|---|---|");
+        for r in &self.rows {
+            let tp = r
+                .throughput
+                .map(|(v, u)| format!("{v:.1} {u}/s"))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "| {} | {} | {} | {} | {} | {} | {} |",
+                r.name,
+                r.samples,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p95_ns),
+                fmt_ns(r.min_ns),
+                tp
+            );
+        }
+        println!();
+    }
+}
+
+/// Opaque value sink, preventing the optimizer from deleting benchmarked
+/// work (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_samples: 3,
+            max_samples: 100,
+            rows: Vec::new(),
+        };
+        b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        let r = &b.rows[0];
+        assert!(r.samples >= 3);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(10),
+            min_samples: 3,
+            max_samples: 50,
+            rows: Vec::new(),
+        };
+        b.run_throughput("t", 100.0, "items", || 1 + 1);
+        assert!(b.rows[0].throughput.unwrap().0 > 0.0);
+    }
+}

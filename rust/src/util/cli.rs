@@ -1,0 +1,125 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `catla <tool> [--key value]... [--flag]... [positional]...`
+//! mirroring the paper's `java -jar Catla.jar -tool task -dir task_wordcount`
+//! invocation style (we accept both `-key v` and `--key v`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub tool: String,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--").or_else(|| a.strip_prefix('-')) {
+                if name.is_empty() {
+                    return Err("empty option name".into());
+                }
+                // value may be attached (--k=v) or the next token
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with('-') || n.parse::<f64>().is_ok())
+                    .unwrap_or(false)
+                {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.tool.is_empty() {
+                out.tool = a;
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("--{key}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, String> {
+        self.opt(key).ok_or_else(|| format!("missing required --{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn paper_style_invocation() {
+        let a = parse("task -dir task_wordcount");
+        assert_eq!(a.tool, "task");
+        assert_eq!(a.opt("dir"), Some("task_wordcount"));
+    }
+
+    #[test]
+    fn double_dash_and_equals() {
+        let a = parse("tuning --optimizer=bobyqa --budget 50");
+        assert_eq!(a.opt("optimizer"), Some("bobyqa"));
+        assert_eq!(a.opt_parse::<u32>("budget").unwrap(), Some(50));
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse("visualize --quiet --out x.csv");
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.opt("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("tuning --seed -5");
+        assert_eq!(a.opt("seed"), Some("-5"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse("task a b");
+        assert_eq!(a.positional, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn parse_errors_surface() {
+        let a = parse("tuning --budget notanumber");
+        assert!(a.opt_parse::<u32>("budget").is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! CSV writer/reader for Catla's `/history` summaries.
+//!
+//! The paper's workflow exports job metrics as `*.csv` for visualization
+//! in Minitab/MATLAB; we keep the format dumb and round-trippable.
+
+/// In-memory CSV table with a header row.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Convenience: push a row of display-able values.
+    pub fn push<T: std::fmt::Display>(&mut self, vals: &[T]) {
+        self.push_row(vals.iter().map(|v| v.to_string()).collect());
+    }
+
+    pub fn col_index(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Column as f64 (non-numeric cells become NaN).
+    pub fn col_f64(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.col_index(name)?;
+        Some(
+            self.rows
+                .iter()
+                .map(|r| r[i].parse::<f64>().unwrap_or(f64::NAN))
+                .collect(),
+        )
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&self.header, &mut out);
+        for r in &self.rows {
+            write_record(r, &mut out);
+        }
+        out
+    }
+
+    pub fn parse(input: &str) -> Result<Csv, String> {
+        let mut lines = input.lines();
+        let header = match lines.next() {
+            Some(l) => parse_record(l)?,
+            None => return Err("empty csv".into()),
+        };
+        let mut rows = Vec::new();
+        for (no, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let rec = parse_record(line)?;
+            if rec.len() != header.len() {
+                return Err(format!(
+                    "line {}: {} fields, expected {}",
+                    no + 2,
+                    rec.len(),
+                    header.len()
+                ));
+            }
+            rows.push(rec);
+        }
+        Ok(Csv { header, rows })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Csv, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Csv::parse(&text)
+    }
+}
+
+fn needs_quoting(field: &str) -> bool {
+    field.contains(',') || field.contains('"') || field.contains('\n')
+}
+
+fn write_record(fields: &[String], out: &mut String) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(f) {
+            out.push('"');
+            out.push_str(&f.replace('"', "\"\""));
+            out.push('"');
+        } else {
+            out.push_str(f);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_record(line: &str) -> Result<Vec<String>, String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        cur.push('"');
+                        chars.next();
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => cur.push(c),
+            }
+        } else {
+            match c {
+                ',' => {
+                    fields.push(std::mem::take(&mut cur));
+                }
+                '"' if cur.is_empty() => in_quotes = true,
+                c => cur.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quote".into());
+    }
+    fields.push(cur);
+    Ok(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut c = Csv::new(&["iter", "runtime_s", "config"]);
+        c.push(&["1", "120.5", "r=4"]);
+        c.push(&["2", "98.1", "r=8"]);
+        let back = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn roundtrip_quoted() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push_row(vec!["x,y".into(), "say \"hi\"".into()]);
+        let back = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(back.rows[0][0], "x,y");
+        assert_eq!(back.rows[0][1], "say \"hi\"");
+    }
+
+    #[test]
+    fn col_f64_extraction() {
+        let mut c = Csv::new(&["k", "v"]);
+        c.push(&["a", "1.5"]);
+        c.push(&["b", "2.5"]);
+        assert_eq!(c.col_f64("v").unwrap(), vec![1.5, 2.5]);
+        assert!(c.col_f64("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(Csv::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_checks_width() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push(&["only-one"]);
+    }
+}

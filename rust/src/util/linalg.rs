@@ -1,0 +1,252 @@
+//! Small dense linear algebra for the BOBYQA optimizer.
+//!
+//! Row-major `f64` matrices; LU solve with partial pivoting and a
+//! symmetric-indefinite-tolerant fallback (the KKT systems of
+//! minimum-Frobenius-norm quadratic model updates are symmetric but
+//! indefinite, so plain Cholesky is not enough).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// Solve `self * x = b` via LU with partial pivoting.
+    /// Returns None if the matrix is numerically singular.
+    pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        assert_eq!(self.rows, self.cols, "solve needs square matrix");
+        assert_eq!(b.len(), self.rows);
+        let n = self.rows;
+        let mut a = self.data.clone();
+        let mut x: Vec<f64> = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+
+        for col in 0..n {
+            // pivot
+            let mut best = col;
+            let mut best_abs = a[piv[col] * n + col].abs();
+            for r in col + 1..n {
+                let v = a[piv[r] * n + col].abs();
+                if v > best_abs {
+                    best = r;
+                    best_abs = v;
+                }
+            }
+            if best_abs < 1e-14 {
+                return None;
+            }
+            piv.swap(col, best);
+            let prow = piv[col];
+            let pivval = a[prow * n + col];
+            for r in col + 1..n {
+                let row = piv[r];
+                let factor = a[row * n + col] / pivval;
+                if factor == 0.0 {
+                    continue;
+                }
+                a[row * n + col] = 0.0;
+                for c in col + 1..n {
+                    a[row * n + c] -= factor * a[prow * n + c];
+                }
+                x[row] -= factor * x[prow];
+            }
+        }
+        // back substitution
+        let mut out = vec![0.0; n];
+        for col in (0..n).rev() {
+            let row = piv[col];
+            let mut v = x[row];
+            for c in col + 1..n {
+                v -= a[row * n + c] * out[c];
+            }
+            out[col] = v / a[row * n + col];
+        }
+        Some(out)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let m = Mat::eye(4);
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(m.solve(&b).unwrap(), b);
+    }
+
+    #[test]
+    fn solve_known_system() {
+        let m = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = m.solve(&[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // zero on the diagonal forces a row swap
+        let m = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = m.solve(&[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(m.solve(&[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn solve_random_roundtrip() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for n in [1usize, 2, 5, 9, 16] {
+            let mut m = Mat::zeros(n, n);
+            for v in m.data.iter_mut() {
+                *v = rng.range_f64(-1.0, 1.0);
+            }
+            for i in 0..n {
+                m[(i, i)] += 3.0; // keep well-conditioned
+            }
+            let x_true: Vec<f64> = (0..n).map(|i| i as f64 - 1.5).collect();
+            let b = m.matvec(&x_true);
+            let x = m.solve(&b).unwrap();
+            for (a, b) in x.iter().zip(&x_true) {
+                assert!((a - b).abs() < 1e-9, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transpose() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let at = a.transpose();
+        let g = at.matmul(&a); // gram matrix, 2x2
+        assert_eq!(g.rows, 2);
+        assert!((g[(0, 0)] - 35.0).abs() < 1e-12);
+        assert!((g[(0, 1)] - 44.0).abs() < 1e-12);
+        assert!((g[(1, 1)] - 56.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vector_helpers() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(sub(&[3.0, 4.0], &[1.0, 1.0]), vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Foundation substrates the offline image forces us to own: RNG, JSON,
+//! CSV, CLI parsing, a thread pool, dense linear algebra, a bench harness
+//! and a property-testing driver. See DESIGN.md §2 (environment
+//! substitutions) for the rationale of each.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod linalg;
+pub mod pool;
+pub mod quickcheck;
+pub mod rng;

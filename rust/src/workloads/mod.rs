@@ -1,0 +1,110 @@
+//! MapReduce workload models.
+//!
+//! Against a real cluster, Catla ships a user jar; here a workload is a
+//! resource profile — the quantities through which a job's jar actually
+//! influences running time (input volume, map selectivity, CPU cost per
+//! byte, record sizes, key skew). The five canonical Hadoop example jobs
+//! the paper's audience tunes are provided.
+
+pub mod suite;
+
+pub use suite::{grep, join, pagerank_iteration, terasort, wordcount};
+
+/// Resource profile of one MapReduce job binary + dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: String,
+    /// Total input size in MB.
+    pub input_mb: f64,
+    /// map output bytes / map input bytes (after combiner, if any).
+    pub map_selectivity: f64,
+    /// Seconds of map-function CPU per MB of input.
+    pub cpu_per_mb_map: f64,
+    /// Seconds of reduce-function CPU per MB of reduce input.
+    pub cpu_per_mb_red: f64,
+    /// Compressed size / raw size for map output (codec-dependent).
+    pub compress_ratio: f64,
+    /// reduce output bytes / reduce input bytes.
+    pub output_selectivity: f64,
+    /// Average record size in KB (drives sort-CPU estimates).
+    pub record_kb: f64,
+    /// Zipf-ish skew of reduce keys: 0 = uniform partitions,
+    /// 1 = heavily skewed (one hot reducer gets ~2x the mean).
+    pub key_skew: f64,
+}
+
+impl WorkloadSpec {
+    /// Scale the dataset, keeping per-byte characteristics.
+    pub fn with_input_mb(mut self, input_mb: f64) -> Self {
+        self.input_mb = input_mb;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.input_mb <= 0.0 {
+            return Err("input_mb must be positive".into());
+        }
+        for (name, v, lo, hi) in [
+            ("map_selectivity", self.map_selectivity, 0.0, 100.0),
+            ("cpu_per_mb_map", self.cpu_per_mb_map, 0.0, 10.0),
+            ("cpu_per_mb_red", self.cpu_per_mb_red, 0.0, 10.0),
+            ("compress_ratio", self.compress_ratio, 0.01, 1.0),
+            ("output_selectivity", self.output_selectivity, 0.0, 100.0),
+            ("record_kb", self.record_kb, 1e-4, 1e4),
+            ("key_skew", self.key_skew, 0.0, 1.0),
+        ] {
+            if !(lo..=hi).contains(&v) {
+                return Err(format!("{name} = {v} outside [{lo}, {hi}]"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Look up a built-in workload by name (used by project templates).
+pub fn by_name(name: &str, input_mb: f64) -> Option<WorkloadSpec> {
+    let w = match name {
+        "wordcount" => wordcount(input_mb),
+        "terasort" => terasort(input_mb),
+        "grep" => grep(input_mb),
+        "join" => join(input_mb),
+        "pagerank" => pagerank_iteration(input_mb),
+        _ => return None,
+    };
+    Some(w)
+}
+
+pub const BUILTIN_NAMES: [&str; 5] = ["wordcount", "terasort", "grep", "join", "pagerank"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_validate() {
+        for name in BUILTIN_NAMES {
+            let w = by_name(name, 1024.0).unwrap();
+            w.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(w.input_mb, 1024.0);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_none() {
+        assert!(by_name("sleepjob", 1.0).is_none());
+    }
+
+    #[test]
+    fn terasort_moves_everything() {
+        // terasort is the IO-bound extreme: selectivity 1.0, no combiner
+        let t = terasort(1024.0);
+        assert!((t.map_selectivity - 1.0).abs() < 1e-9);
+        assert!(t.output_selectivity >= 0.99);
+    }
+
+    #[test]
+    fn grep_is_map_side_selective() {
+        let g = grep(1024.0);
+        assert!(g.map_selectivity < 0.05);
+    }
+}

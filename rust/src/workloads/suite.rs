@@ -1,0 +1,86 @@
+//! The built-in workload profiles.
+//!
+//! Numbers are order-of-magnitude profiles of the stock Hadoop examples
+//! on 2010s-era cluster hardware; EXPERIMENTS.md only relies on their
+//! *relative* characteristics (CPU-bound vs shuffle-bound vs IO-bound).
+
+use super::WorkloadSpec;
+
+/// WordCount with combiner — the paper's experiment workload.
+/// CPU-ish maps, combiner shrinks shuffle to ~30%.
+pub fn wordcount(input_mb: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "wordcount".into(),
+        input_mb,
+        map_selectivity: 0.30,
+        cpu_per_mb_map: 0.012,
+        cpu_per_mb_red: 0.006,
+        compress_ratio: 0.35,
+        output_selectivity: 0.10,
+        record_kb: 0.05,
+        key_skew: 0.35, // natural-language word frequencies are skewed
+    }
+}
+
+/// TeraSort — pure shuffle/IO stress: every byte is mapped, shuffled,
+/// sorted and written back (replicated).
+pub fn terasort(input_mb: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "terasort".into(),
+        input_mb,
+        map_selectivity: 1.0,
+        cpu_per_mb_map: 0.002,
+        cpu_per_mb_red: 0.002,
+        compress_ratio: 0.85, // random keys compress poorly
+        output_selectivity: 1.0,
+        record_kb: 0.1,
+        key_skew: 0.0, // sampled partitioner balances ranges
+    }
+}
+
+/// Grep (distributed) — highly selective maps, negligible shuffle.
+pub fn grep(input_mb: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "grep".into(),
+        input_mb,
+        map_selectivity: 0.01,
+        cpu_per_mb_map: 0.008,
+        cpu_per_mb_red: 0.004,
+        compress_ratio: 0.40,
+        output_selectivity: 1.0,
+        record_kb: 0.2,
+        key_skew: 0.1,
+    }
+}
+
+/// Repartition join of two tables — shuffle-heavy with skewed keys
+/// (the MRTune-style stress case).
+pub fn join(input_mb: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "join".into(),
+        input_mb,
+        map_selectivity: 1.05, // tagging adds a little
+        cpu_per_mb_map: 0.005,
+        cpu_per_mb_red: 0.010,
+        compress_ratio: 0.55,
+        output_selectivity: 0.60,
+        record_kb: 0.5,
+        key_skew: 0.7,
+    }
+}
+
+/// One PageRank power iteration — moderate shuffle, CPU-lean,
+/// rank mass concentrated on high-degree vertices.
+pub fn pagerank_iteration(input_mb: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "pagerank".into(),
+        input_mb,
+        map_selectivity: 0.80,
+        cpu_per_mb_map: 0.006,
+        cpu_per_mb_red: 0.008,
+        compress_ratio: 0.45,
+        output_selectivity: 0.50,
+        record_kb: 0.03,
+        key_skew: 0.6,
+    }
+}

@@ -1,0 +1,139 @@
+//! CLI integration: drive the compiled `catla` binary the way the paper's
+//! §II.B.2 walkthrough drives `Catla.jar`, asserting on process output
+//! and the files it leaves behind.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn catla_bin() -> PathBuf {
+    // cargo puts integration-test binaries in target/<profile>/deps;
+    // the main binary lives one level up
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("catla")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("catla-cli-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(catla_bin())
+        .args(args)
+        .env("CATLA_ARTIFACTS", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .output()
+        .expect("failed to spawn catla binary — build it first");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn help_lists_all_tools() {
+    let (ok, stdout, _) = run(&["help"]);
+    assert!(ok);
+    for tool in ["template", "task", "project", "tuning", "aggregate", "visualize"] {
+        assert!(stdout.contains(tool), "help missing {tool}");
+    }
+}
+
+#[test]
+fn unknown_tool_fails_with_usage() {
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown tool"));
+}
+
+#[test]
+fn paper_walkthrough_steps_1_to_5() {
+    let dir = tmp("walkthrough");
+    let dir_s = dir.to_str().unwrap();
+
+    // Step 1+3: prepare the task-based project folder
+    let (ok, stdout, stderr) = run(&[
+        "template", "--dir", dir_s, "--workload", "wordcount", "--input-mb", "1024",
+    ]);
+    assert!(ok, "template failed: {stderr}");
+    assert!(stdout.contains("created"));
+    assert!(dir.join("HadoopEnv.txt").is_file(), "Step 2 file missing");
+
+    // Step 4: run the task tool
+    let (ok, stdout, stderr) = run(&["task", "--dir", dir_s]);
+    assert!(ok, "task failed: {stderr}");
+    assert!(stdout.contains("finished"), "no completion message: {stdout}");
+
+    // Step 5: downloaded_results appears with the analyzing results
+    assert!(dir.join("downloaded_results").is_dir());
+    let has_history = std::fs::read_dir(dir.join("downloaded_results"))
+        .unwrap()
+        .any(|e| {
+            e.unwrap()
+                .file_name()
+                .to_string_lossy()
+                .ends_with("history.json")
+        });
+    assert!(has_history, "no history.json downloaded");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tuning_tool_writes_log_and_chart() {
+    let dir = tmp("tuning");
+    let dir_s = dir.to_str().unwrap();
+    run(&["template", "--dir", dir_s, "--kind", "tuning", "--input-mb", "1024"]);
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=15\nrepeats=1\nseed=2\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["tuning", "--dir", dir_s]);
+    assert!(ok, "tuning failed: {stderr}");
+    assert!(stdout.contains("best configuration"));
+    assert!(stdout.contains("convergence"), "CatlaUI chart missing");
+    assert!(dir.join("history/tuning_log.csv").is_file());
+    assert!(dir.join("history/summary.csv").is_file());
+
+    // visualize re-renders from the log, --gnuplot drops a script
+    let (ok, stdout, _) = run(&["visualize", "--dir", dir_s, "--gnuplot"]);
+    assert!(ok);
+    assert!(stdout.contains("running time per iteration"));
+    assert!(dir.join("history/fig3.gnuplot").is_file());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn pjrt_prescreen_tuning_via_cli() {
+    // exercises the full three-layer stack from the CLI: artifacts must
+    // exist (make artifacts) for this to pass
+    let dir = tmp("pjrt");
+    let dir_s = dir.to_str().unwrap();
+    run(&["template", "--dir", dir_s, "--kind", "tuning", "--input-mb", "2048"]);
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=12\nrepeats=1\nseed=4\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["tuning", "--dir", dir_s, "--prescreen", "pjrt"]);
+    assert!(ok, "pjrt tuning failed: {stderr}");
+    assert!(stdout.contains("tuning finished"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn aggregate_tool_reports() {
+    let dir = tmp("agg");
+    let dir_s = dir.to_str().unwrap();
+    run(&["template", "--dir", dir_s, "--input-mb", "512"]);
+    run(&["task", "--dir", dir_s]);
+    let (ok, stdout, _) = run(&["aggregate", "--dir", dir_s]);
+    assert!(ok);
+    assert!(stdout.contains("1 histories found"), "{stdout}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,158 @@
+//! Edge-case hardening: degenerate clusters, extreme configurations and
+//! workloads must simulate sanely (finite, positive, accounted) rather
+//! than panic or hang.
+
+use catla::config::params::*;
+use catla::hadoop::noise::NoiseModel;
+use catla::hadoop::{simulate_job, Cluster, ClusterSpec, JobSubmission, SimCluster};
+use catla::workloads::{terasort, wordcount, WorkloadSpec};
+
+fn assert_sane(r: &catla::hadoop::JobResult, label: &str) {
+    assert!(r.runtime_s.is_finite() && r.runtime_s > 0.0, "{label}: runtime {}", r.runtime_s);
+    assert_eq!(
+        r.tasks.len() as u64,
+        r.counters.total_maps + r.counters.total_reduces,
+        "{label}: task accounting"
+    );
+    for t in &r.tasks {
+        assert!(t.finish > t.start, "{label}: inverted task times");
+    }
+}
+
+#[test]
+fn single_node_cluster() {
+    let cl = ClusterSpec {
+        nodes: 1,
+        racks: 1,
+        ..ClusterSpec::default()
+    };
+    let r = simulate_job(&cl, &wordcount(1024.0), &HadoopConfig::default(), 1);
+    assert_sane(&r, "single node");
+    // everything must be node-local on a 1-node cluster
+    assert_eq!(r.counters.data_local_maps, r.counters.total_maps);
+}
+
+#[test]
+fn tiny_input_single_split() {
+    let cl = ClusterSpec::default();
+    let r = simulate_job(&cl, &wordcount(16.0), &HadoopConfig::default(), 2);
+    assert_sane(&r, "tiny input");
+    assert_eq!(r.counters.total_maps, 1);
+}
+
+#[test]
+fn more_racks_than_meaningful() {
+    let cl = ClusterSpec {
+        nodes: 4,
+        racks: 64, // more racks than nodes: topology must clamp
+        ..ClusterSpec::default()
+    };
+    let r = simulate_job(&cl, &wordcount(512.0), &HadoopConfig::default(), 3);
+    assert_sane(&r, "many racks");
+}
+
+#[test]
+fn memory_starved_containers() {
+    // container memory barely fits: one container per node at a time
+    let cl = ClusterSpec {
+        mem_per_node_mb: 1024,
+        ..ClusterSpec::default()
+    };
+    let mut cfg = HadoopConfig::default();
+    cfg.set(P_MAP_MEM_MB, 1024.0);
+    cfg.set(P_RED_MEM_MB, 1024.0);
+    cfg.set(P_REDUCES, 32.0);
+    let r = simulate_job(&cl, &wordcount(10240.0), &cfg, 4);
+    assert_sane(&r, "memory starved");
+    // 80 maps over 16 single-container nodes = 5 waves: must be slower
+    // than the roomy default cluster
+    let roomy = simulate_job(&ClusterSpec::default(), &wordcount(10240.0), &cfg, 4);
+    assert!(r.runtime_s > roomy.runtime_s);
+}
+
+#[test]
+fn extreme_config_corners_all_simulate() {
+    let cl = ClusterSpec::default();
+    let wl = wordcount(2048.0);
+    for corner in 0..(1 << 4) {
+        let mut cfg = HadoopConfig::default();
+        for (bit, p) in [P_REDUCES, P_IO_SORT_MB, P_SORT_FACTOR, P_SPLIT_MB]
+            .iter()
+            .enumerate()
+        {
+            let meta = &PARAMS[*p];
+            cfg.set(*p, if corner & (1 << bit) != 0 { meta.hi } else { meta.lo });
+        }
+        let r = simulate_job(&cl, &wl, &cfg, corner as u64);
+        assert_sane(&r, &format!("corner {corner:04b}"));
+    }
+}
+
+#[test]
+fn pathological_workload_profiles() {
+    let cl = ClusterSpec::default();
+    // selectivity > 1 (join-like blowup), microscopic records, zero skew
+    let blowup = WorkloadSpec {
+        name: "blowup".into(),
+        input_mb: 1024.0,
+        map_selectivity: 50.0,
+        cpu_per_mb_map: 0.001,
+        cpu_per_mb_red: 0.001,
+        compress_ratio: 0.9,
+        output_selectivity: 10.0,
+        record_kb: 0.001,
+        key_skew: 0.0,
+    };
+    blowup.validate().unwrap();
+    let r = simulate_job(&cl, &blowup, &HadoopConfig::default(), 5);
+    assert_sane(&r, "blowup");
+    // a 50x shuffle blowup must dwarf the same-sized wordcount
+    let wc = simulate_job(&cl, &wordcount(1024.0), &HadoopConfig::default(), 5);
+    assert!(r.runtime_s > 3.0 * wc.runtime_s, "blowup {} vs wc {}", r.runtime_s, wc.runtime_s);
+}
+
+#[test]
+fn heavy_failures_still_terminate() {
+    let cl = ClusterSpec {
+        noise: NoiseModel {
+            failure_prob: 0.30, // 30% of attempts fail mid-flight
+            max_attempts: 4,
+            ..NoiseModel::default()
+        },
+        ..ClusterSpec::default()
+    };
+    let r = simulate_job(&cl, &terasort(2048.0), &HadoopConfig::default(), 6);
+    assert_sane(&r, "heavy failures");
+    assert!(r.counters.failed_task_attempts > 0);
+    // failures cost time vs the clean cluster
+    let clean = simulate_job(&ClusterSpec::default(), &terasort(2048.0), &HadoopConfig::default(), 6);
+    assert!(r.runtime_s > clean.runtime_s * 0.9);
+}
+
+#[test]
+fn submission_rejects_invalid_workload() {
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut wl = wordcount(1024.0);
+    wl.input_mb = -5.0;
+    let err = cluster
+        .submit_job(JobSubmission {
+            name: "bad".into(),
+            workload: wl,
+            config: HadoopConfig::default(),
+        })
+        .unwrap_err();
+    assert!(err.contains("input_mb"));
+}
+
+#[test]
+fn thousand_reducers_one_wave_cap() {
+    // reduces beyond slots: waves must grow, runtime must not explode to
+    // infinity and containers must all come back
+    let cl = ClusterSpec::default();
+    let mut cfg = HadoopConfig::default();
+    cfg.set(P_REDUCES, 64.0); // == param hi
+    cfg.set(P_RED_MEM_MB, 8192.0); // 1 reducer per node -> 4 waves
+    let r = simulate_job(&cl, &terasort(4096.0), &cfg, 7);
+    assert_sane(&r, "many reducers");
+    assert_eq!(r.counters.total_reduces, 64);
+}

@@ -1,0 +1,167 @@
+//! Whole-pipeline integration: template → task → project → tuning →
+//! interrupt → aggregate → visualize, on real temp directories, exactly
+//! as a user would drive the CLI.
+
+use std::path::PathBuf;
+
+use catla::catla::{
+    aggregate, create_template, visualize, History, OptimizerRunner, Project, ProjectKind,
+    ProjectRunner, TaskRunner,
+};
+use catla::config::params::HadoopConfig;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::surrogate::NativeScorer;
+use catla::workloads::wordcount;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("catla-e2e-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn full_task_pipeline_produces_paper_layout() {
+    let dir = tmp("task");
+    create_template(&dir, ProjectKind::Task, "wordcount", 2048.0).unwrap();
+    // paper Step 2: user edits HadoopEnv.txt for their cluster
+    let env_path = dir.join("HadoopEnv.txt");
+    let mut env_text = std::fs::read_to_string(&env_path).unwrap();
+    env_text = env_text.replace("sim.nodes=16", "sim.nodes=8");
+    std::fs::write(&env_path, env_text).unwrap();
+
+    let project = Project::load(&dir).unwrap();
+    let spec = ClusterSpec::from_env(&project.env);
+    assert_eq!(spec.nodes, 8, "HadoopEnv edit not honored");
+
+    let mut cluster = SimCluster::new(spec);
+    let out = TaskRunner::new(&mut cluster).run(&project).unwrap();
+
+    // paper Step 5 layout
+    assert!(dir.join("downloaded_results").is_dir());
+    assert!(dir.join("downloaded_results/logs").is_dir());
+    assert!(dir.join("history/jobs.csv").is_file());
+    assert!(out.metrics.runtime_s > 0.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tuning_interrupt_aggregate_resume_cycle() {
+    let dir = tmp("resume");
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 2048.0).unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=20\nrepeats=1\nseed=3\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+
+    // simulate an interruption corrupting the best_so_far column
+    let history = History::open(&dir).unwrap();
+    let log_path = history.dir.join("tuning_log.csv");
+    let text = std::fs::read_to_string(&log_path).unwrap();
+    let mut lines: Vec<String> = text.lines().map(|l| l.to_string()).collect();
+    let n = lines.len();
+    lines.truncate(n - 3); // lose the tail
+    // corrupt a best_so_far cell
+    if let Some(line) = lines.get_mut(2) {
+        let mut parts: Vec<&str> = line.split(',').collect();
+        parts[3] = "99999.000";
+        *line = parts.join(",");
+    }
+    std::fs::write(&log_path, lines.join("\n") + "\n").unwrap();
+
+    // aggregate repairs it
+    let report = aggregate::aggregate(&dir).unwrap();
+    assert!(report.tuning_rows_repaired >= 1);
+    let csv = history.load_tuning_log().unwrap();
+    let conv = History::convergence_from_log(&csv).unwrap();
+    for w in conv.windows(2) {
+        assert!(w[1].1 <= w[0].1 + 1e-9, "best_so_far not repaired");
+    }
+
+    // visualization renders from the repaired log
+    let chart = visualize::chart_from_tuning_log(&csv).unwrap();
+    assert!(chart.contains("convergence"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn project_group_then_aggregate_collects_all_jobs() {
+    let dir = tmp("group");
+    create_template(&dir, ProjectKind::Project, "terasort", 2048.0).unwrap();
+    let project = Project::load(&dir).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let out = ProjectRunner::new(&mut cluster).run(&project).unwrap();
+    assert_eq!(out.jobs.len(), 2);
+
+    // wipe jobs.csv, re-aggregate from downloaded artifacts alone
+    std::fs::remove_file(dir.join("history/jobs.csv")).unwrap();
+    let report = aggregate::aggregate(&dir).unwrap();
+    assert_eq!(report.histories_found, 2);
+    assert_eq!(report.jobs_csv_rows, 2);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn tuned_config_beats_hadoop_defaults() {
+    // the system's reason to exist: tuning must beat the default config
+    let dir = tmp("beats-default");
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 10240.0).unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=50\nrepeats=1\nseed=9\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+
+    // measure default vs tuned on fresh seeds, averaged
+    let wl = wordcount(10240.0);
+    let avg = |cluster: &mut SimCluster, cfg: &HadoopConfig| -> f64 {
+        (0..10)
+            .map(|_| {
+                cluster.run_job(&catla::hadoop::JobSubmission {
+                    name: "verify".into(),
+                    workload: wl.clone(),
+                    config: cfg.clone(),
+                })
+                .runtime_s
+            })
+            .sum::<f64>()
+            / 10.0
+    };
+    let default_rt = avg(&mut cluster, &HadoopConfig::default());
+    let tuned_rt = avg(&mut cluster, &out.outcome.best_config);
+    assert!(
+        tuned_rt < default_rt,
+        "tuned {tuned_rt:.1}s not better than default {default_rt:.1}s"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn prescreened_tuning_runs_and_logs() {
+    let dir = tmp("prescreen");
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 4096.0).unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=20\nrepeats=1\nseed=5\nprescreen=auto\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut scorer = NativeScorer {
+        workload: wordcount(4096.0),
+        cluster: ClusterSpec::default(),
+    };
+    let out = OptimizerRunner::with_scorer(&mut cluster, &mut scorer)
+        .run(&project)
+        .unwrap();
+    assert!(out.outcome.optimizer.contains("prescreen"));
+    let history = History::open(&dir).unwrap();
+    assert!(history.load_tuning_log().unwrap().rows.len() <= 20);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,272 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state) using the in-repo quickcheck driver (proptest is unavailable
+//! offline — see DESIGN.md §2).
+
+use catla::config::params::*;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::hdfs::{locality, place_blocks, Locality, Topology};
+use catla::hadoop::mapreduce::TaskKind;
+use catla::hadoop::{simulate_job, ClusterSpec};
+use catla::optim::{cluster_objective, Method, ParamSpace, ALL_METHODS};
+use catla::hadoop::SimCluster;
+use catla::util::json::{parse, Json};
+use catla::util::quickcheck::{forall_cfg, QcConfig};
+use catla::util::rng::Rng;
+use catla::workloads::wordcount;
+
+fn qc(cases: usize) -> QcConfig {
+    QcConfig {
+        cases,
+        ..QcConfig::default()
+    }
+}
+
+fn random_config(rng: &mut Rng) -> HadoopConfig {
+    let mut c = HadoopConfig::default();
+    for p in PARAMS.iter() {
+        c.set(p.index, rng.range_f64(p.lo, p.hi));
+    }
+    c
+}
+
+#[test]
+fn prop_simulation_completes_all_tasks_and_orders_times() {
+    forall_cfg(
+        "sim-task-accounting",
+        qc(24),
+        |rng| {
+            let cfg = random_config(rng);
+            let cl = ClusterSpec {
+                nodes: 2 + rng.below(16) as u32,
+                noise: catla::hadoop::noise::NoiseModel {
+                    failure_prob: rng.f64() * 0.05,
+                    ..Default::default()
+                },
+                ..ClusterSpec::default()
+            };
+            let input = 256.0 + rng.f64() * 8192.0;
+            let seed = rng.next_u64();
+            (cfg, cl, input, seed)
+        },
+        |(cfg, cl, input, seed)| {
+            let wl = wordcount(*input);
+            let r = simulate_job(cl, &wl, cfg, *seed);
+            let maps = r.tasks.iter().filter(|t| t.kind == TaskKind::Map).count() as u64;
+            let reds = r.tasks.iter().filter(|t| t.kind == TaskKind::Reduce).count() as u64;
+            if maps != r.counters.total_maps {
+                return Err(format!("maps {maps} != counter {}", r.counters.total_maps));
+            }
+            if reds != r.counters.total_reduces {
+                return Err(format!("reduces {reds} != counter {}", r.counters.total_reduces));
+            }
+            for t in &r.tasks {
+                if !(t.finish > t.start && t.start >= 0.0) {
+                    return Err(format!("bad task times {t:?}"));
+                }
+                if t.finish > r.runtime_s + 1e-6 {
+                    return Err(format!("task finishes after job end: {t:?}"));
+                }
+            }
+            if !r.runtime_s.is_finite() || r.runtime_s <= 0.0 {
+                return Err(format!("bad runtime {}", r.runtime_s));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_simulation_deterministic_under_seed() {
+    forall_cfg(
+        "sim-determinism",
+        qc(12),
+        |rng| (random_config(rng), rng.next_u64()),
+        |(cfg, seed)| {
+            let cl = ClusterSpec::default();
+            let wl = wordcount(4096.0);
+            let a = simulate_job(&cl, &wl, cfg, *seed);
+            let b = simulate_job(&cl, &wl, cfg, *seed);
+            if a.runtime_s != b.runtime_s {
+                return Err(format!("{} != {}", a.runtime_s, b.runtime_s));
+            }
+            if a.counters != b.counters {
+                return Err("counters differ".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_hdfs_placement_invariants() {
+    forall_cfg(
+        "hdfs-placement",
+        qc(32),
+        |rng| {
+            let nodes = 2 + rng.below(40);
+            let racks = 1 + rng.below(4);
+            let blocks = 1 + rng.below(300) as u64;
+            let repl = 1 + rng.below(4);
+            let seed = rng.next_u64();
+            (nodes, racks, blocks, repl, seed)
+        },
+        |&(nodes, racks, blocks, repl, seed)| {
+            let topo = Topology::new(nodes, racks);
+            let mut rng = Rng::new(seed);
+            let placed = place_blocks(&topo, blocks, repl, &mut rng);
+            if placed.len() != blocks as usize {
+                return Err("missing blocks".into());
+            }
+            for b in &placed {
+                let mut uniq = b.replicas.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                if uniq.len() != b.replicas.len() {
+                    return Err(format!("duplicate replicas {b:?}"));
+                }
+                if b.replicas.is_empty() || b.replicas.len() > repl.min(nodes) {
+                    return Err(format!("bad replica count {b:?}"));
+                }
+                if b.replicas.iter().any(|&n| n >= nodes) {
+                    return Err(format!("replica node out of range {b:?}"));
+                }
+                // locality must be NodeLocal from any replica holder
+                if locality(&topo, b, b.replicas[0]) != Locality::NodeLocal {
+                    return Err("replica holder not node-local".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_every_optimizer_stays_in_bounds_and_budget() {
+    forall_cfg(
+        "optimizer-bounds",
+        qc(18),
+        |rng| {
+            let method = ALL_METHODS[rng.below(ALL_METHODS.len())];
+            let budget = 5 + rng.below(40);
+            let seed = rng.next_u64();
+            (method.to_string(), budget, seed)
+        },
+        |(method, budget, seed)| {
+            let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+            let mut cluster = SimCluster::new(ClusterSpec::default());
+            let wl = wordcount(1024.0);
+            let mut obj = cluster_objective(&mut cluster, &wl, 1);
+            let m = Method::from_name(method, *seed).map_err(|e| e)?;
+            let out = m.run(&space, &mut obj, *budget);
+            if out.evals() > *budget {
+                return Err(format!("{method}: {} evals > budget {budget}", out.evals()));
+            }
+            if out.evals() == 0 {
+                return Err(format!("{method}: no evaluations"));
+            }
+            for r in &out.records {
+                if r.unit_x.iter().any(|u| !(0.0..=1.0).contains(u)) {
+                    return Err(format!("{method}: out-of-cube proposal {:?}", r.unit_x));
+                }
+                r.config.validate()?;
+            }
+            // best-so-far column is monotone
+            let mut prev = f64::INFINITY;
+            for r in &out.records {
+                if r.best_so_far > prev + 1e-12 {
+                    return Err(format!("{method}: best_so_far not monotone"));
+                }
+                prev = r.best_so_far;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_grid_enumerates_exact_cross_product() {
+    forall_cfg(
+        "grid-cross-product",
+        qc(16),
+        |rng| {
+            // random 2-param spec with random steps
+            let s1 = 1 + rng.below(8);
+            let s2 = 25 + rng.below(200);
+            (s1 as f64, s2 as f64)
+        },
+        |&(step1, step2)| {
+            let text = format!(
+                "param mapreduce.job.reduces int 2 32 step {step1}\n\
+                 param mapreduce.task.io.sort.mb int 50 800 step {step2}\n"
+            );
+            let spec = TuningSpec::parse(&text)?;
+            let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+            let grid = space.unit_grid();
+            if grid.len() != spec.grid_size() {
+                return Err(format!("grid {} != expected {}", grid.len(), spec.grid_size()));
+            }
+            // no duplicate decoded configs
+            let mut seen = std::collections::BTreeSet::new();
+            for x in &grid {
+                let c = space.decode(x);
+                let key = format!("{:?}", c.values);
+                if !seen.insert(key) {
+                    return Err("duplicate grid config".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_documents() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.f64() * 2000.0 - 1000.0).round() / 8.0),
+            3 => {
+                let strings = ["", "plain", "with \"quotes\"", "line\nbreak", "τab\tand λ"];
+                Json::Str(strings[rng.below(strings.len())].to_string())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), random_json(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    forall_cfg(
+        "json-roundtrip",
+        qc(200),
+        |rng| random_json(rng, 3),
+        |doc| {
+            let text = doc.to_string();
+            let back = parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            if &back != doc {
+                return Err(format!("roundtrip mismatch: {doc:?} -> {text} -> {back:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_paramspace_decode_always_valid() {
+    forall_cfg(
+        "decode-valid",
+        qc(100),
+        |rng| {
+            let d = TuningSpec::fig3().dims();
+            (0..d).map(|_| rng.f64() * 3.0 - 1.0).collect::<Vec<f64>>()
+        },
+        |x| {
+            let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+            space.decode(x).validate()
+        },
+    );
+}

@@ -1,0 +1,178 @@
+//! Cross-layer validation: the AOT JAX/Pallas artifacts executed through
+//! PJRT must agree with the native rust mirror of the cost model.
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use catla::config::params::{HadoopConfig, N_PARAMS, PARAMS};
+use catla::hadoop::{costmodel, ClusterSpec};
+use catla::optim::surrogate::CandidateScorer;
+use catla::runtime::{CostModelExec, QuadraticExec, Runtime};
+use catla::util::rng::Rng;
+use catla::workloads::{terasort, wordcount};
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` before cargo test")
+}
+
+fn random_configs(n: usize, seed: u64) -> Vec<HadoopConfig> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut c = HadoopConfig::default();
+            for p in PARAMS.iter() {
+                c.set(p.index, rng.range_f64(p.lo, p.hi));
+            }
+            c
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_costmodel_matches_native_mirror() {
+    let rt = runtime();
+    let wl = wordcount(10240.0);
+    let cl = ClusterSpec::default();
+    let mut exec = CostModelExec::load(&rt, &wl, &cl).unwrap();
+    let cfgs = random_configs(64, 1);
+    let got = exec.predict(&cfgs).unwrap();
+    for (cfg, pjrt) in cfgs.iter().zip(&got) {
+        let native = costmodel::predict_runtime(cfg, &wl, &cl);
+        let rel = ((*pjrt as f64) - native).abs() / native.max(1.0);
+        assert!(
+            rel < 1e-3,
+            "config {:?}: pjrt {} vs native {native} (rel {rel})",
+            cfg.summary(),
+            pjrt
+        );
+    }
+}
+
+#[test]
+fn pjrt_phases_match_native_phases() {
+    let rt = runtime();
+    let wl = terasort(4096.0);
+    let cl = ClusterSpec::default();
+    let mut exec = CostModelExec::load(&rt, &wl, &cl).unwrap();
+    let cfgs = random_configs(16, 2);
+    let (_, phases) = exec.predict_with_phases(&cfgs).unwrap();
+    for (cfg, ph) in cfgs.iter().zip(&phases) {
+        let native = costmodel::predict_phases(cfg, &wl, &cl);
+        for k in 0..costmodel::N_PHASES {
+            let diff = (ph[k] as f64 - native[k]).abs();
+            let tol = 1e-3 * native[k].abs().max(1.0);
+            assert!(
+                diff < tol,
+                "phase {} mismatch: {} vs {}",
+                costmodel::PHASE_NAMES[k],
+                ph[k],
+                native[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn batch_padding_and_chunking_are_transparent() {
+    let rt = runtime();
+    let wl = wordcount(2048.0);
+    let cl = ClusterSpec::default();
+    let mut exec = CostModelExec::load(&rt, &wl, &cl).unwrap();
+    // sizes below, at and above the artifact batch sizes
+    for n in [1usize, 7, 128, 129, 1024, 1500, 2100] {
+        let cfgs = random_configs(n, n as u64);
+        let got = exec.predict(&cfgs).unwrap();
+        assert_eq!(got.len(), n, "batch {n}: wrong output length");
+        // single-config predictions must equal batched ones
+        let solo = exec.predict(&cfgs[..1]).unwrap();
+        assert!(
+            (solo[0] - got[0]).abs() < 1e-4,
+            "batch {n}: solo {} vs batched {}",
+            solo[0],
+            got[0]
+        );
+    }
+}
+
+#[test]
+fn scorer_interface_works_through_pjrt() {
+    let rt = runtime();
+    let wl = wordcount(10240.0);
+    let cl = ClusterSpec::default();
+    let mut exec = CostModelExec::load(&rt, &wl, &cl).unwrap();
+    let cfgs = random_configs(10, 5);
+    let scores = exec.score(&cfgs).unwrap();
+    assert_eq!(scores.len(), 10);
+    assert!(scores.iter().all(|s| s.is_finite() && *s > 0.0));
+    assert_eq!(exec.name(), "pjrt-costmodel");
+}
+
+#[test]
+fn pjrt_quadratic_matches_direct_evaluation() {
+    let rt = runtime();
+    let mut quad = QuadraticExec::load(&rt).unwrap();
+    let mut rng = Rng::new(3);
+    for d in [2usize, 4, 8] {
+        let xs: Vec<Vec<f64>> = (0..33)
+            .map(|_| (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let g: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let mut h = vec![vec![0.0; d]; d];
+        for i in 0..d {
+            for j in 0..=i {
+                let v = rng.range_f64(-1.0, 1.0);
+                h[i][j] = v;
+                h[j][i] = v;
+            }
+        }
+        let c0 = rng.range_f64(-1.0, 1.0);
+        let got = quad.eval(&xs, &g, &h, c0).unwrap();
+        for (x, q) in xs.iter().zip(&got) {
+            let mut expect = c0;
+            for i in 0..d {
+                expect += g[i] * x[i];
+                for j in 0..d {
+                    expect += 0.5 * x[i] * h[i][j] * x[j];
+                }
+            }
+            assert!(
+                (q - expect).abs() < 1e-4,
+                "d={d}: pjrt {q} vs direct {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prescreen_through_pjrt_finds_good_starts() {
+    use catla::config::spec::TuningSpec;
+    use catla::optim::surrogate::Prescreen;
+    use catla::optim::ParamSpace;
+
+    let rt = runtime();
+    let wl = wordcount(10240.0);
+    let cl = ClusterSpec::default();
+    let exec = CostModelExec::load(&rt, &wl, &cl).unwrap();
+    let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+    let mut p = Prescreen::new(exec);
+    p.n_candidates = 512;
+    let starts = p.top_starts(&space, 3).unwrap();
+    assert_eq!(starts.len(), 3);
+    // the best PJRT-scored start must beat the default config on the
+    // native model too (the two models agree)
+    let best_cfg = space.decode(&starts[0]);
+    let best = costmodel::predict_runtime(&best_cfg, &wl, &cl);
+    let default = costmodel::predict_runtime(&HadoopConfig::default(), &wl, &cl);
+    assert!(
+        best < default,
+        "prescreened start {best} not better than default {default}"
+    );
+}
+
+#[test]
+fn config_row_layout_matches_param_table() {
+    // guard against silent reordering between PARAMS and to_f32_row
+    let mut c = HadoopConfig::default();
+    c.set_by_name("mapreduce.task.io.sort.mb", 256.0).unwrap();
+    let row = c.to_f32_row();
+    assert_eq!(row.len(), N_PARAMS);
+    assert_eq!(row[1], 256.0); // P_IO_SORT_MB == index 1 in spec.py
+}

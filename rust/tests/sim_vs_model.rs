@@ -1,0 +1,148 @@
+//! Simulator-vs-analytic-model agreement: the discrete-event engine's
+//! noiseless behaviour must track `costmodel::predict_runtime` across the
+//! configuration space, and its noisy behaviour must center on it.
+//! This is what makes surrogate prescreening (ABL2) legitimate.
+
+use catla::config::params::*;
+use catla::hadoop::noise::NoiseModel;
+use catla::hadoop::{costmodel, simulate_job, ClusterSpec};
+use catla::util::rng::Rng;
+use catla::workloads::{grep, join, terasort, wordcount, WorkloadSpec};
+
+fn noiseless_cluster() -> ClusterSpec {
+    ClusterSpec {
+        noise: NoiseModel::noiseless(),
+        speculative: false,
+        ..ClusterSpec::default()
+    }
+}
+
+fn random_config(rng: &mut Rng) -> HadoopConfig {
+    let mut c = HadoopConfig::default();
+    for p in PARAMS.iter() {
+        c.set(p.index, rng.range_f64(p.lo, p.hi));
+    }
+    // slowstart near 1 keeps the DES and the closed-form overlap model
+    // comparable (the analytic model's overlap term is an approximation)
+    c.set(P_SLOWSTART, rng.range_f64(0.8, 1.0));
+    c
+}
+
+#[test]
+fn noiseless_sim_within_band_of_model_across_space() {
+    let cl = noiseless_cluster();
+    let wl = wordcount(10240.0);
+    let mut rng = Rng::new(42);
+    let mut worst: f64 = 1.0;
+    for i in 0..40 {
+        let cfg = random_config(&mut rng);
+        let sim = simulate_job(&cl, &wl, &cfg, i).runtime_s;
+        let model = costmodel::predict_runtime(&cfg, &wl, &cl);
+        let ratio = sim / model;
+        worst = worst.max(ratio.max(1.0 / ratio));
+        assert!(
+            (0.4..2.5).contains(&ratio),
+            "cfg {}: sim {sim:.1} vs model {model:.1} (ratio {ratio:.2})",
+            cfg.summary()
+        );
+    }
+    assert!(worst < 2.5, "worst-case ratio {worst}");
+}
+
+#[test]
+fn model_ranks_configs_like_the_simulator() {
+    // Spearman-style check: for pairs with clearly different predicted
+    // runtimes, the simulator should agree on the ordering
+    let cl = noiseless_cluster();
+    let wl = terasort(8192.0);
+    let mut rng = Rng::new(7);
+    let mut agree = 0;
+    let mut total = 0;
+    let cfgs: Vec<HadoopConfig> = (0..20).map(|_| random_config(&mut rng)).collect();
+    for i in 0..cfgs.len() {
+        for j in i + 1..cfgs.len() {
+            let mi = costmodel::predict_runtime(&cfgs[i], &wl, &cl);
+            let mj = costmodel::predict_runtime(&cfgs[j], &wl, &cl);
+            if (mi - mj).abs() / mi.min(mj) < 0.30 {
+                continue; // too close to call
+            }
+            let si = simulate_job(&cl, &wl, &cfgs[i], 100 + i as u64).runtime_s;
+            let sj = simulate_job(&cl, &wl, &cfgs[j], 200 + j as u64).runtime_s;
+            total += 1;
+            if (mi < mj) == (si < sj) {
+                agree += 1;
+            }
+        }
+    }
+    assert!(total >= 20, "not enough decisive pairs ({total})");
+    let rate = agree as f64 / total as f64;
+    assert!(rate > 0.85, "rank agreement only {rate:.2} ({agree}/{total})");
+}
+
+#[test]
+fn noisy_sim_centers_on_noiseless_sim() {
+    let mut noisy = ClusterSpec::default();
+    noisy.noise.straggler_prob = 0.0; // stragglers skew the mean by design
+    noisy.noise.failure_prob = 0.0;
+    let clean = noiseless_cluster();
+    let wl = wordcount(4096.0);
+    let cfg = HadoopConfig::default();
+    let base = simulate_job(&clean, &wl, &cfg, 0).runtime_s;
+    let n = 60;
+    let mean: f64 = (0..n)
+        .map(|s| simulate_job(&noisy, &wl, &cfg, s).runtime_s)
+        .sum::<f64>()
+        / n as f64;
+    let rel = (mean - base).abs() / base;
+    assert!(rel < 0.12, "noisy mean {mean:.1} vs clean {base:.1} (rel {rel:.3})");
+}
+
+#[test]
+fn fig2_trends_hold_in_the_simulator() {
+    // the paper's observed trends must emerge from the DES, not just the
+    // closed-form model: larger reduces and larger io.sort.mb help
+    let cl = ClusterSpec::default();
+    let wl = wordcount(10240.0);
+    let avg = |cfg: &HadoopConfig| -> f64 {
+        (0..7)
+            .map(|s| simulate_job(&cl, &wl, cfg, s).runtime_s)
+            .sum::<f64>()
+            / 7.0
+    };
+    let mut corner_bad = HadoopConfig::default();
+    corner_bad.set(P_REDUCES, 2.0);
+    corner_bad.set(P_IO_SORT_MB, 50.0);
+    let mut corner_good = HadoopConfig::default();
+    corner_good.set(P_REDUCES, 32.0);
+    corner_good.set(P_IO_SORT_MB, 800.0);
+    let bad = avg(&corner_bad);
+    let good = avg(&corner_good);
+    assert!(
+        good < bad,
+        "Fig2 trend missing: good corner {good:.1}s vs bad corner {bad:.1}s"
+    );
+}
+
+#[test]
+fn every_workload_simulates_and_predicts() {
+    let cl = noiseless_cluster();
+    let wls: Vec<WorkloadSpec> = vec![
+        wordcount(2048.0),
+        terasort(2048.0),
+        grep(2048.0),
+        join(2048.0),
+        catla::workloads::pagerank_iteration(2048.0),
+    ];
+    for wl in wls {
+        let cfg = HadoopConfig::default();
+        let sim = simulate_job(&cl, &wl, &cfg, 1).runtime_s;
+        let model = costmodel::predict_runtime(&cfg, &wl, &cl);
+        assert!(sim > 0.0 && model > 0.0, "{}: sim {sim} model {model}", wl.name);
+        let ratio = sim / model;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "{}: sim {sim:.1} vs model {model:.1}",
+            wl.name
+        );
+    }
+}
