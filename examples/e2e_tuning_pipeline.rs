@@ -16,7 +16,7 @@ use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{Cluster, ClusterSpec, JobSubmission, SimCluster};
 use catla::optim::surrogate::Prescreen;
-use catla::optim::{cluster_objective, ParamSpace};
+use catla::optim::{ClusterObjective, ParamSpace};
 use catla::runtime::{CostModelExec, Runtime};
 use catla::workloads::wordcount;
 
@@ -41,7 +41,8 @@ fn main() -> Result<(), String> {
     let rt = Runtime::open_default()?;
     let mut scorer = CostModelExec::load(&rt, &workload, &cluster_spec)?;
     println!(
-        "[3] AOT artifacts loaded from {} (batched cost model on XLA PJRT, platform cpu)",
+        "[3] batched cost model ready ({} backend, artifacts dir {})",
+        rt.backend(),
         rt.artifacts_dir.display()
     );
 
@@ -53,7 +54,7 @@ fn main() -> Result<(), String> {
     let mut prescreen = Prescreen::new(&mut scorer);
     prescreen.n_candidates = 4096;
     let outcome = {
-        let mut obj = cluster_objective(&mut cluster, &workload, 1);
+        let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
         prescreen.run_bobyqa(&space, &mut obj, budget)?
     };
     println!(
@@ -101,8 +102,8 @@ fn main() -> Result<(), String> {
     );
     println!("best config           : {}", outcome.best_config.summary());
     println!(
-        "surrogate batches     : {} PJRT executions for {} scored candidates",
-        2, 4096
+        "surrogate batches     : {} batched executions for {} scored candidates",
+        scorer.calls, 4096
     );
 
     // ---- 6. logs + convergence chart (CatlaUI view) ----------------------

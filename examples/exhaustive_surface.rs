@@ -8,7 +8,7 @@ use catla::catla::visualize::{gnuplot_fig2, surface_heatmap};
 use catla::config::params::{HadoopConfig, P_IO_SORT_MB, P_REDUCES};
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
-use catla::optim::{cluster_objective, GridSearch, ParamSpace};
+use catla::optim::{ClusterObjective, Driver, GridSearch, ParamSpace};
 use catla::util::csv::Csv;
 use catla::workloads::wordcount;
 
@@ -31,8 +31,9 @@ fn main() -> Result<(), String> {
     );
 
     let outcome = {
-        let mut obj = cluster_objective(&mut cluster, &workload, 1);
-        GridSearch.run(&space, &mut obj, usize::MAX)
+        // the whole grid is ONE ask-batch, evaluated across the pool
+        let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+        Driver::new(usize::MAX).run(&mut GridSearch::new(), &space, &mut obj)?
     };
 
     // organize into the (reduces, sort.mb) matrix

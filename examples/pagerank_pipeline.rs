@@ -9,7 +9,7 @@ use catla::catla::workflow::{parse_workflow_line, run_workflow, WorkflowJob};
 use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
-use catla::optim::{Bobyqa, ParamSpace};
+use catla::optim::{Bobyqa, ClusterObjective, Driver, ParamSpace};
 use catla::workloads::pagerank_iteration;
 
 fn pipeline(iters: usize, cfg_args: &str) -> Vec<WorkflowJob> {
@@ -38,8 +38,10 @@ fn main() -> Result<(), String> {
     let wl = pagerank_iteration(2048.0);
     let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
     let outcome = {
-        let mut obj = catla::optim::cluster_objective(&mut cluster, &wl, 1);
-        Bobyqa::default().run(&space, &mut obj, 40)
+        let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+        Driver::new(40)
+            .run(&mut Bobyqa::default(), &space, &mut obj)
+            .expect("tuning run")
     };
     println!(
         "tuned shared config in {} evals: {}",

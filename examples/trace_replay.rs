@@ -9,7 +9,7 @@ use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::trace::{replay, TraceGen};
 use catla::hadoop::{ClusterSpec, SimCluster};
-use catla::optim::{cluster_objective, Bobyqa, ParamSpace};
+use catla::optim::{Bobyqa, ClusterObjective, Driver, ParamSpace};
 use catla::workloads::wordcount;
 
 fn main() {
@@ -35,8 +35,10 @@ fn main() {
     let wl = wordcount(2048.0);
     let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
     let outcome = {
-        let mut obj = cluster_objective(&mut cluster, &wl, 1);
-        Bobyqa::default().run(&space, &mut obj, 40)
+        let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+        Driver::new(40)
+            .run(&mut Bobyqa::default(), &space, &mut obj)
+            .expect("tuning run")
     };
     println!(
         "tuned on representative wordcount in {} evals -> {}",

@@ -4,11 +4,12 @@
 //!
 //! Run: `cargo run --release --example tune_wordcount [budget]`
 
-use catla::catla::visualize::line_chart;
 use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
+use catla::catla::visualize::line_chart;
 use catla::hadoop::{ClusterSpec, SimCluster};
-use catla::optim::{cluster_objective, Bobyqa, ParamSpace};
+use catla::optim::core::BatchObjective;
+use catla::optim::{Bobyqa, ClusterObjective, Driver, ParamSpace};
 use catla::workloads::wordcount;
 
 fn main() {
@@ -28,10 +29,12 @@ fn main() {
     }
 
     // default-config baseline (what a user who never tunes gets)
-    let mut obj = cluster_objective(&mut cluster, &workload, 1);
-    let default_runtime = obj(&HadoopConfig::default());
+    let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+    let default_runtime = obj.eval_batch(&[HadoopConfig::default()]).unwrap()[0];
 
-    let outcome = Bobyqa::default().run(&space, &mut obj, budget);
+    let outcome = Driver::new(budget)
+        .run(&mut Bobyqa::default(), &space, &mut obj)
+        .expect("tuning run");
     drop(obj);
 
     println!("\nbest configuration found ({} evals):", outcome.evals());

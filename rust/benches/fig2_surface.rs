@@ -11,7 +11,7 @@ use catla::catla::visualize::{gnuplot_fig2, surface_heatmap};
 use catla::config::params::{HadoopConfig, P_IO_SORT_MB, P_REDUCES};
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
-use catla::optim::{cluster_objective, GridSearch, ParamSpace};
+use catla::optim::{ClusterObjective, Driver, GridSearch, ParamSpace};
 use catla::util::bench::Bench;
 use catla::util::csv::Csv;
 use catla::workloads::wordcount;
@@ -27,11 +27,13 @@ fn main() {
         ClusterSpec::default().nodes
     );
 
-    // ---- the experiment -------------------------------------------------
+    // ---- the experiment: the whole grid is ONE ask-batch ---------------
     let mut cluster = SimCluster::new(ClusterSpec::default());
     let outcome = {
-        let mut obj = cluster_objective(&mut cluster, &workload, 1);
-        GridSearch.run(&space, &mut obj, usize::MAX)
+        let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+        Driver::new(usize::MAX)
+            .run(&mut GridSearch::new(), &space, &mut obj)
+            .expect("grid sweep")
     };
 
     let reduces_axis = spec.ranges[0].grid();
@@ -88,10 +90,13 @@ fn main() {
     // ---- timing ----------------------------------------------------------
     let mut bench = Bench::new();
     let sweep_cluster = std::cell::RefCell::new(SimCluster::new(ClusterSpec::default()));
-    bench.run_throughput("fig2 full 256-point sweep", 256.0, "jobs", || {
+    bench.run_throughput("fig2 full 256-point sweep (batched)", 256.0, "jobs", || {
         let mut c = sweep_cluster.borrow_mut();
-        let mut obj = cluster_objective(&mut c, &workload, 1);
-        GridSearch.run(&space, &mut obj, usize::MAX).best_value
+        let mut obj = ClusterObjective::new(&mut c, &workload, 1);
+        Driver::new(usize::MAX)
+            .run(&mut GridSearch::new(), &space, &mut obj)
+            .expect("grid sweep")
+            .best_value
     });
     bench.print_table("FIG2 harness timing");
     println!("wrote history/fig2_surface.csv + history/fig2.gnuplot");

@@ -11,7 +11,7 @@ use catla::catla::visualize::line_chart;
 use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
-use catla::optim::{cluster_objective, Method, ParamSpace, TuningOutcome};
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, TuningOutcome};
 use catla::util::bench::Bench;
 use catla::util::csv::Csv;
 use catla::workloads::wordcount;
@@ -27,8 +27,11 @@ fn run_method(method: &Method, seed: u64) -> TuningOutcome {
         seed,
         ..ClusterSpec::default()
     });
-    let mut obj = cluster_objective(&mut cluster, &workload, 1);
-    method.run(&space, &mut obj, BUDGET)
+    let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+    let mut opt = method.build();
+    Driver::new(BUDGET)
+        .run(opt.as_mut(), &space, &mut obj)
+        .expect("tuning run")
 }
 
 fn main() {

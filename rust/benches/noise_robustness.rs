@@ -12,7 +12,7 @@ use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::noise::NoiseModel;
 use catla::hadoop::{simulate_job, ClusterSpec, SimCluster};
-use catla::optim::{cluster_objective, Method, ParamSpace};
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace};
 use catla::util::csv::Csv;
 use catla::workloads::wordcount;
 
@@ -45,8 +45,11 @@ fn main() {
                 };
                 let mut cluster = SimCluster::new(cl);
                 let out = {
-                    let mut obj = cluster_objective(&mut cluster, &workload, 1);
-                    Method::from_name(m, seed).unwrap().run(&space, &mut obj, BUDGET)
+                    let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+                    let mut opt = Method::from_name(m, seed).unwrap().build();
+                    Driver::new(BUDGET)
+                        .run(opt.as_mut(), &space, &mut obj)
+                        .expect("tuning run")
                 };
                 // re-measure the chosen config on a clean cluster so the
                 // comparison is not polluted by lucky noise draws

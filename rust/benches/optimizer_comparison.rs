@@ -14,7 +14,7 @@ use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
 use catla::optim::surrogate::{NativeScorer, Prescreen};
-use catla::optim::{cluster_objective, GridSearch, Method, ParamSpace, ALL_METHODS};
+use catla::optim::{ClusterObjective, Driver, GridSearch, Method, ParamSpace, ALL_METHODS};
 use catla::runtime::{CostModelExec, Runtime};
 use catla::util::csv::Csv;
 use catla::workloads::wordcount;
@@ -27,11 +27,13 @@ fn main() {
     let spec = TuningSpec::fig2();
     let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
 
-    // ---- reference: the full-grid optimum (256 evals) -------------------
+    // ---- reference: the full-grid optimum (256 evals, one ask-batch) ----
     let grid_best = {
         let mut cluster = SimCluster::new(ClusterSpec::default());
-        let mut obj = cluster_objective(&mut cluster, &workload, 1);
-        GridSearch.run(&space, &mut obj, usize::MAX)
+        let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+        Driver::new(usize::MAX)
+            .run(&mut GridSearch::new(), &space, &mut obj)
+            .expect("grid sweep")
     };
     println!(
         "# ABL1/ABL2: budget {BUDGET} vs grid optimum {:.1}s (256 evals), {} seeds\n",
@@ -58,8 +60,11 @@ fn main() {
                 ..ClusterSpec::default()
             });
             let out = {
-                let mut obj = cluster_objective(&mut cluster, &workload, 1);
-                method.run(&space, &mut obj, BUDGET)
+                let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
+                let mut opt = method.build();
+                Driver::new(BUDGET)
+                    .run(opt.as_mut(), &space, &mut obj)
+                    .expect("tuning run")
             };
             let hit = out.evals_to_within(grid_best.best_value, 0.05);
             csv.push(&[
@@ -105,9 +110,14 @@ fn main() {
                 ..ClusterSpec::default()
             });
             let out = {
-                let mut obj = cluster_objective(&mut cluster, &workload, 1);
+                let mut obj = ClusterObjective::new(&mut cluster, &workload, 1);
                 match prescreen {
-                    None => Method::Bobyqa { seed }.run(&space, &mut obj, BUDGET),
+                    None => {
+                        let mut opt = Method::Bobyqa { seed }.build();
+                        Driver::new(BUDGET)
+                            .run(opt.as_mut(), &space, &mut obj)
+                            .expect("tuning run")
+                    }
                     Some("native") => {
                         let scorer = NativeScorer {
                             workload: workload.clone(),
@@ -117,8 +127,8 @@ fn main() {
                         p.seed = seed;
                         p.run_bobyqa(&space, &mut obj, BUDGET).unwrap()
                     }
-                    Some("pjrt") => {
-                        let rt = Runtime::open_default().expect("make artifacts first");
+                    Some("runtime") => {
+                        let rt = Runtime::open_default().expect("artifacts dir missing");
                         let scorer =
                             CostModelExec::load(&rt, &workload, &ClusterSpec::default()).unwrap();
                         let mut p = Prescreen::new(scorer);
@@ -157,10 +167,12 @@ fn main() {
 
     run_variant("bobyqa (no prescreen)", None);
     run_variant("bobyqa + native prescreen", Some("native"));
-    if Runtime::open_default().is_ok() {
-        run_variant("bobyqa + PJRT prescreen (L1/L2 artifacts)", Some("pjrt"));
-    } else {
-        println!("| bobyqa + PJRT prescreen | skipped (run `make artifacts`) | - |");
+    match Runtime::open_default() {
+        Ok(rt) => run_variant(
+            &format!("bobyqa + runtime prescreen ({} backend)", rt.backend()),
+            Some("runtime"),
+        ),
+        Err(_) => println!("| bobyqa + runtime prescreen | skipped (no artifacts dir) | - |"),
     }
 
     std::fs::create_dir_all("history").unwrap();

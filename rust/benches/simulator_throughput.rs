@@ -1,12 +1,18 @@
 //! PERF1a — cluster-simulator throughput: simulated jobs/second and
 //! task-throughput across cluster and input scales. The simulator is the
 //! tuning loop's inner cost, so this bounds end-to-end tuning speed.
+//! Also measures serial vs batched objective evaluation (the ask/tell
+//! Driver's eval path) and records it to `BENCH_optim_batch.json`.
 //!
 //! Run: `cargo bench --bench simulator_throughput`
 
 use catla::config::params::{HadoopConfig, P_REDUCES, P_SPLIT_MB};
 use catla::hadoop::{simulate_job, ClusterSpec, SimCluster, JobSubmission};
+use catla::optim::core::BatchObjective;
+use catla::optim::ClusterObjective;
 use catla::util::bench::Bench;
+use catla::util::json::Json;
+use catla::util::pool::default_threads;
 use catla::workloads::{terasort, wordcount};
 
 fn main() {
@@ -78,6 +84,63 @@ fn main() {
             })
             .runtime_s
         });
+    }
+
+    // serial vs batched ask-batch evaluation (the Driver's eval path)
+    {
+        let wl = wordcount(10_240.0);
+        let mut results = Vec::new();
+        for batch in [16usize, 64, 256] {
+            let cfgs: Vec<HadoopConfig> = (0..batch)
+                .map(|i| {
+                    let mut c = HadoopConfig::default();
+                    c.set(P_REDUCES, 2.0 + (i % 31) as f64);
+                    c
+                })
+                .collect();
+            let serial = bench
+                .run_throughput(
+                    &format!("objective eval serial, batch {batch}"),
+                    batch as f64,
+                    "configs",
+                    || {
+                        let mut cluster = SimCluster::new(ClusterSpec::default());
+                        ClusterObjective::new(&mut cluster, &wl, 1)
+                            .serial()
+                            .eval_batch(&cfgs)
+                            .unwrap()
+                            .len()
+                    },
+                )
+                .mean_secs();
+            let batched = bench
+                .run_throughput(
+                    &format!("objective eval batched, batch {batch}"),
+                    batch as f64,
+                    "configs",
+                    || {
+                        let mut cluster = SimCluster::new(ClusterSpec::default());
+                        ClusterObjective::new(&mut cluster, &wl, 1)
+                            .eval_batch(&cfgs)
+                            .unwrap()
+                            .len()
+                    },
+                )
+                .mean_secs();
+            let mut row = Json::obj();
+            row.set("batch", Json::Num(batch as f64));
+            row.set("serial_s", Json::Num(serial));
+            row.set("batched_s", Json::Num(batched));
+            row.set("speedup", Json::Num(serial / batched));
+            results.push(row);
+        }
+        let mut doc = Json::obj();
+        doc.set("bench", Json::Str("simulator_throughput/optim_batch".into()));
+        doc.set("threads", Json::Num(default_threads() as f64));
+        doc.set("workload", Json::Str("wordcount-10GiB".into()));
+        doc.set("results", Json::Arr(results));
+        std::fs::write("BENCH_optim_batch.json", doc.to_string() + "\n").unwrap();
+        println!("wrote BENCH_optim_batch.json");
     }
 
     bench.print_table("PERF1a — simulator throughput");

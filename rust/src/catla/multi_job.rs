@@ -8,6 +8,7 @@ use crate::catla::project::Project;
 use crate::catla::project_runner::{parse_job_line, GroupJob};
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{JobSubmission, SimCluster};
+use crate::optim::core::{Driver, FnObjective};
 use crate::optim::{Method, ParamSpace, TuningOutcome};
 
 /// How per-job runtimes combine into one objective value.
@@ -90,10 +91,10 @@ pub fn tune_group(
     };
 
     let space = ParamSpace::new(spec.clone(), project.base_config()?);
-    let method = Method::from_name(&optimizer, seed)?;
+    let mut opt = Method::from_name(&optimizer, seed)?.build();
     let mut outcome = {
-        let mut obj = group_objective(cluster, &jobs, metric);
-        method.run(&space, &mut obj, budget)
+        let mut obj = FnObjective(group_objective(cluster, &jobs, metric));
+        Driver::new(budget).run(opt.as_mut(), &space, &mut obj)?
     };
     outcome.optimizer = format!("{}[group-{:?}x{}]", outcome.optimizer, metric, jobs.len());
 

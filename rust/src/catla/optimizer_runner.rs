@@ -4,14 +4,17 @@
 //! running time after the tuning process is finished." (§II.A)
 //!
 //! Reads `params.spec` + `tuning.properties` from a tuning project,
-//! drives the chosen search method against the cluster, and records the
-//! per-iteration log + summary into `/history`.
+//! builds the chosen ask/tell method through the `Method` registry,
+//! drives it with the shared `optim::core::Driver` against the batched
+//! cluster objective, and records the per-iteration log + summary into
+//! `/history`.
 
 use crate::catla::history::History;
 use crate::catla::project::Project;
 use crate::hadoop::SimCluster;
+use crate::optim::core::{ClusterObjective, Driver, EarlyStop};
 use crate::optim::surrogate::{CandidateScorer, Prescreen};
-use crate::optim::{cluster_objective, Method, ParamSpace, TuningOutcome};
+use crate::optim::{EvalRecord, Method, ParamSpace, TuningOutcome};
 
 /// Parsed tuning settings (from `tuning.properties`).
 #[derive(Clone, Debug)]
@@ -22,6 +25,11 @@ pub struct TuningSettings {
     pub seed: u64,
     /// Prescreen cluster starts with the surrogate model ("auto" | "off").
     pub prescreen: bool,
+    /// Early stop after this many non-improving evaluations (0 = off;
+    /// `early.patience` in tuning.properties).
+    pub early_patience: usize,
+    /// Relative improvement threshold for early stopping (`early.tol`).
+    pub early_tol: f64,
 }
 
 impl TuningSettings {
@@ -31,6 +39,12 @@ impl TuningSettings {
             .as_ref()
             .ok_or("not a tuning project (missing tuning.properties)")?;
         let parse_usize = |k: &str, d: usize| -> Result<usize, String> {
+            match t.get(k) {
+                None => Ok(d),
+                Some(s) => s.parse().map_err(|_| format!("bad {k}={s:?}")),
+            }
+        };
+        let parse_f64 = |k: &str, d: f64| -> Result<f64, String> {
             match t.get(k) {
                 None => Ok(d),
                 Some(s) => s.parse().map_err(|_| format!("bad {k}={s:?}")),
@@ -46,7 +60,31 @@ impl TuningSettings {
                 .transpose()?
                 .unwrap_or(7),
             prescreen: t.get("prescreen").map(|v| v == "auto").unwrap_or(false),
+            early_patience: parse_usize("early.patience", 0)?,
+            early_tol: parse_f64("early.tol", 1e-3)?,
         })
+    }
+
+    /// Build the shared tuning loop these settings describe (budget,
+    /// early stopping, CATLA_TRACE observer) — also used by the
+    /// workflow tuner so every entry point honors the same properties.
+    pub fn driver<'a>(&self) -> Driver<'a> {
+        let mut driver = Driver::new(self.budget);
+        if self.early_patience > 0 {
+            driver = driver.early_stop(EarlyStop {
+                patience: self.early_patience,
+                min_rel: self.early_tol,
+            });
+        }
+        if std::env::var("CATLA_TRACE").is_ok() {
+            driver = driver.observe(|r: &EvalRecord| {
+                eprintln!(
+                    "eval {:>4}: {:8.1}s (best so far {:8.1}s)",
+                    r.iter, r.value, r.best_so_far
+                );
+            });
+        }
+        driver
     }
 }
 
@@ -91,16 +129,30 @@ impl<'a> OptimizerRunner<'a> {
         let space = ParamSpace::new(spec.clone(), base);
 
         let outcome = {
-            let mut obj = cluster_objective(self.cluster, &workload, settings.repeats);
+            let mut obj = ClusterObjective::new(self.cluster, &workload, settings.repeats);
+            let mut driver = settings.driver();
             if settings.prescreen {
                 let scorer = self
                     .scorer
                     .as_deref_mut()
                     .ok_or("prescreen=auto but no surrogate scorer attached")?;
-                run_prescreened(scorer, &settings, &space, &mut obj)?
+                match settings.optimizer.as_str() {
+                    // only DFO benefits from a seeded start; direct search
+                    // ignores prescreening
+                    "bobyqa" => {
+                        let mut p = Prescreen::new(scorer);
+                        p.seed = settings.seed;
+                        p.prime(&space)?;
+                        driver.run(&mut p, &space, &mut obj)?
+                    }
+                    other => {
+                        let mut opt = Method::from_name(other, settings.seed)?.build();
+                        driver.run(opt.as_mut(), &space, &mut obj)?
+                    }
+                }
             } else {
-                let method = Method::from_name(&settings.optimizer, settings.seed)?;
-                method.run(&space, &mut obj, settings.budget)
+                let mut opt = Method::from_name(&settings.optimizer, settings.seed)?.build();
+                driver.run(opt.as_mut(), &space, &mut obj)?
             }
         };
 
@@ -113,26 +165,6 @@ impl<'a> OptimizerRunner<'a> {
             cluster_evals,
             log_path,
         })
-    }
-}
-
-fn run_prescreened(
-    scorer: &mut dyn CandidateScorer,
-    settings: &TuningSettings,
-    space: &ParamSpace,
-    obj: &mut crate::optim::ObjectiveFn<'_>,
-) -> Result<TuningOutcome, String> {
-    // only DFO methods benefit from a seeded start; direct search ignores it
-    match settings.optimizer.as_str() {
-        "bobyqa" => {
-            let mut p = Prescreen::new(scorer);
-            p.seed = settings.seed;
-            p.run_bobyqa(space, obj, settings.budget)
-        }
-        other => {
-            let method = Method::from_name(other, settings.seed)?;
-            Ok(method.run(space, obj, settings.budget))
-        }
     }
 }
 
@@ -241,6 +273,27 @@ mod tests {
         let mut cluster = SimCluster::new(ClusterSpec::default());
         let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
         assert_eq!(out.outcome.evals(), 30);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn early_stop_settings_cap_the_run() {
+        let dir = make_tuning_project("earlystop", "random", 400);
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=400\nseed=5\nearly.patience=10\nearly.tol=0.01\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let settings = TuningSettings::from_project(&project).unwrap();
+        assert_eq!(settings.early_patience, 10);
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        assert!(
+            out.outcome.evals() < 400,
+            "early stop never fired: {} evals",
+            out.outcome.evals()
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

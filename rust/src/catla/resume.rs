@@ -1,19 +1,22 @@
 //! Resumable tuning (extension, DESIGN.md §7): continue an interrupted
 //! run from `history/tuning_log.csv` instead of restarting from scratch.
 //!
-//! * direct search (grid): already-evaluated grid points are skipped —
-//!   their logged values are replayed into the recorder, then the sweep
-//!   continues where it stopped.
-//! * DFO: the search state is not serialized; the resume strategy is to
-//!   restart the optimizer *seeded at the best logged configuration* with
-//!   the remaining budget (documented divergence from a full checkpoint).
+//! With the ask/tell core a checkpoint is just "replay the prior
+//! evaluations as `tell`s into a fresh optimizer" and keep driving
+//! (`Driver::run_with_history`):
+//! * grid: told points are skipped, the sweep continues where it stopped;
+//! * every sequential method (bobyqa, hooke-jeeves, …): the replay seeds
+//!   the restart at the best logged configuration with the remaining
+//!   budget — a documented divergence from a full internal-state
+//!   checkpoint, now uniform across all DFO methods.
 
 use crate::catla::history::History;
 use crate::catla::project::Project;
 use crate::config::spec::TuningSpec;
 use crate::hadoop::SimCluster;
-use crate::optim::result::Recorder;
-use crate::optim::{cluster_objective, Bobyqa, Method, ParamSpace, TuningOutcome};
+use crate::optim::core::{ClusterObjective, Driver};
+use crate::optim::result::EvalRecord;
+use crate::optim::{Method, ParamSpace, TuningOutcome};
 use crate::util::csv::Csv;
 
 /// Parsed prior evaluations from a tuning log.
@@ -51,10 +54,39 @@ impl PriorRuns {
             .iter()
             .min_by(|a, b| a.1.total_cmp(&b.1))
     }
+
+    /// Reconstruct replayable `EvalRecord`s against a parameter space.
+    pub fn to_records(&self, spec: &TuningSpec, space: &ParamSpace, project: &Project)
+        -> Result<Vec<EvalRecord>, String>
+    {
+        let base = project.base_config()?;
+        Ok(self
+            .evals
+            .iter()
+            .enumerate()
+            .map(|(i, (xs, v))| {
+                let mut cfg = base.clone();
+                for (r, x) in spec.ranges.iter().zip(xs) {
+                    cfg.set(r.meta.index, *x);
+                }
+                EvalRecord {
+                    iter: i + 1,
+                    unit_x: space.encode(&cfg),
+                    config: cfg,
+                    value: *v,
+                    best_so_far: 0.0, // recomputed on replay
+                }
+            })
+            .collect())
+    }
 }
 
 /// Resume a tuning project. `budget` is the TOTAL budget including prior
-/// evaluations; returns an outcome covering prior + new evaluations.
+/// evaluations; returns an outcome covering prior + new evaluations. A
+/// budget at or below the logged evaluation count means "exhausted":
+/// everything is replayed and nothing new runs — logged evaluations are
+/// never dropped (the tuning log is rewritten from the outcome, so
+/// truncating the replay would destroy history).
 pub fn resume_tuning(
     cluster: &mut SimCluster,
     project: &Project,
@@ -80,72 +112,21 @@ pub fn resume_tuning(
         .unwrap_or(7);
     let workload = project.workload()?;
     let space = ParamSpace::new(spec.clone(), project.base_config()?);
+    let records = prior.to_records(&spec, &space, project)?;
 
-    let remaining = budget.saturating_sub(prior.evals.len());
+    // replay the checkpoint into a fresh optimizer, then keep driving;
+    // the driver truncates replay to its budget, so clamp the total up
+    // to the log size — a too-small budget must not drop history
+    let total = budget.max(records.len());
+    let mut opt = Method::from_name(&optimizer, seed)?.build();
+    let mut obj = ClusterObjective::new(cluster, &workload, 1);
+    let mut outcome =
+        Driver::new(total).run_with_history(opt.as_mut(), &space, &mut obj, &records)?;
 
-    // replay prior evaluations into the recorder so the resumed outcome's
-    // convergence series covers the whole run
-    let mut rec = Recorder::new();
-    for (xs, v) in &prior.evals {
-        let mut cfg = project.base_config()?;
-        for (r, x) in spec.ranges.iter().zip(xs) {
-            cfg.set(r.meta.index, *x);
-        }
-        rec.record(space.encode(&cfg), cfg, *v);
-    }
-
-    let outcome = if remaining == 0 {
-        rec.finish(&format!("{optimizer}[resumed,exhausted]"))
-    } else if optimizer == "grid" {
-        // skip already-evaluated grid points, continue the sweep
-        let done: std::collections::BTreeSet<String> = prior
-            .evals
-            .iter()
-            .map(|(xs, _)| format!("{xs:?}"))
-            .collect();
-        let mut obj = cluster_objective(cluster, &workload, 1);
-        for x in space.unit_grid() {
-            if rec.evals() >= budget {
-                break;
-            }
-            let cfg = space.decode(&x);
-            let key = format!(
-                "{:?}",
-                spec.ranges
-                    .iter()
-                    .map(|r| cfg.get(r.meta.index))
-                    .collect::<Vec<f64>>()
-            );
-            if done.contains(&key) {
-                continue;
-            }
-            let v = obj(&cfg);
-            rec.record(x, cfg, v);
-        }
-        rec.finish("grid[resumed]")
+    outcome.optimizer = if records.len() >= budget {
+        format!("{optimizer}[resumed,exhausted]")
     } else {
-        // DFO: restart at the best prior point with the remaining budget
-        let start = prior.best().map(|(xs, _)| {
-            let mut cfg = project.base_config().unwrap();
-            for (r, x) in spec.ranges.iter().zip(xs) {
-                cfg.set(r.meta.index, *x);
-            }
-            space.encode(&cfg)
-        });
-        let mut obj = cluster_objective(cluster, &workload, 1);
-        let fresh = match optimizer.as_str() {
-            "bobyqa" => Bobyqa {
-                seed,
-                start,
-                ..Bobyqa::default()
-            }
-            .run(&space, &mut obj, remaining),
-            other => Method::from_name(other, seed)?.run(&space, &mut obj, remaining),
-        };
-        for r in &fresh.records {
-            rec.record(r.unit_x.clone(), r.config.clone(), r.value);
-        }
-        rec.finish(&format!("{optimizer}[resumed@{}]", prior.evals.len()))
+        format!("{optimizer}[resumed@{}]", records.len())
     };
 
     history.write_tuning_log(&spec, &outcome)?;
@@ -238,6 +219,24 @@ mod tests {
         let resumed = resume_tuning(&mut cluster, &project, 12).unwrap();
         assert_eq!(resumed.evals(), 12);
         assert_eq!(cluster.jobs_completed(), before, "exhausted resume ran jobs");
+        assert!(resumed.optimizer.contains("exhausted"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn smaller_budget_never_drops_logged_evaluations() {
+        // the outcome rewrites tuning_log.csv, so truncating the replay
+        // would permanently destroy history (and possibly the true best)
+        let dir = tuning_project("shrink", "bobyqa", 12);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let first = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        let logged = first.outcome.evals();
+        let resumed = resume_tuning(&mut cluster, &project, logged - 4).unwrap();
+        assert_eq!(resumed.evals(), logged, "resume dropped logged evaluations");
+        assert!(resumed.optimizer.contains("exhausted"));
+        // best can only match the full prior log (1e-3: log rounding)
+        assert!(resumed.best_value <= first.outcome.best_value + 1e-3);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

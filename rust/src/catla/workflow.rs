@@ -15,7 +15,11 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use crate::catla::project::Project;
 use crate::catla::project_runner::{parse_job_line, GroupJob};
+use crate::config::params::HadoopConfig;
+use crate::config::spec::TuningSpec;
 use crate::hadoop::{JobSubmission, SimCluster};
+use crate::optim::core::{Driver, FnObjective};
+use crate::optim::{Method, ParamSpace, TuningOutcome};
 
 /// One node of the workflow DAG.
 #[derive(Clone, Debug)]
@@ -157,6 +161,44 @@ pub fn from_project(project: &Project) -> Result<Vec<WorkflowJob>, String> {
     project.jobs.iter().map(|l| parse_workflow_line(l)).collect()
 }
 
+/// Tune ONE shared configuration for a whole workflow DAG: the objective
+/// is the end-to-end makespan of the pipeline with the candidate config
+/// applied to every stage. The caller supplies the `Driver` (budget,
+/// early stopping, observers) — `TuningSettings::driver()` builds one
+/// from `tuning.properties`.
+pub fn tune_workflow(
+    cluster: &mut SimCluster,
+    jobs: &[WorkflowJob],
+    spec: TuningSpec,
+    base: HadoopConfig,
+    method: &Method,
+    driver: &mut Driver,
+) -> Result<TuningOutcome, String> {
+    validate(jobs)?;
+    let space = ParamSpace::new(spec, base);
+    let mut opt = method.build();
+    let n_stages = jobs.len();
+    let mut outcome = {
+        let mut obj = FnObjective(|cfg: &HadoopConfig| -> f64 {
+            let tuned: Vec<WorkflowJob> = jobs
+                .iter()
+                .map(|j| {
+                    let mut j2 = j.clone();
+                    j2.job.config = cfg.clone();
+                    j2
+                })
+                .collect();
+            match run_workflow(cluster, &tuned) {
+                Ok(o) => o.makespan_s,
+                Err(_) => f64::INFINITY, // validated above; defensive
+            }
+        });
+        driver.run(opt.as_mut(), &space, &mut obj)?
+    };
+    outcome.optimizer = format!("{}[workflow x{n_stages}]", outcome.optimizer);
+    Ok(outcome)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +248,53 @@ mod tests {
         assert!(at("rank2").start_s >= at("rank1").finish_s - 1e-9);
         assert!(at("merge").start_s >= at("rank2").finish_s - 1e-9);
         assert!((out.makespan_s - at("merge").finish_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tune_workflow_beats_default_makespan() {
+        let jobs = wf(&[
+            "prep grep 1024",
+            "rank pagerank 512 after=prep",
+            "merge join 1024 after=rank",
+        ]);
+        let spec = crate::config::spec::TuningSpec::fig3();
+        let base = crate::config::params::HadoopConfig::default();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = tune_workflow(
+            &mut cluster,
+            &jobs,
+            spec,
+            base.clone(),
+            &crate::optim::Method::Bobyqa { seed: 3 },
+            &mut Driver::new(30),
+        )
+        .unwrap();
+        assert!(out.optimizer.contains("workflow x3"), "{}", out.optimizer);
+        assert!(out.evals() <= 30);
+        // averaged re-measurement: tuned shared config beats defaults
+        let avg = |cluster: &mut SimCluster, cfg: &crate::config::params::HadoopConfig| -> f64 {
+            (0..5)
+                .map(|_| {
+                    let tuned: Vec<WorkflowJob> = jobs
+                        .iter()
+                        .map(|j| {
+                            let mut j2 = j.clone();
+                            j2.job.config = cfg.clone();
+                            j2
+                        })
+                        .collect();
+                    run_workflow(cluster, &tuned).unwrap().makespan_s
+                })
+                .sum::<f64>()
+                / 5.0
+        };
+        let mut verify = SimCluster::new(ClusterSpec::default());
+        let tuned = avg(&mut verify, &out.best_config);
+        let default = avg(&mut verify, &base);
+        assert!(
+            tuned < default,
+            "workflow-tuned {tuned:.1}s vs default {default:.1}s"
+        );
     }
 
     #[test]

@@ -84,6 +84,16 @@ impl SimCluster {
         simulate_job(&self.spec, &job.workload, &job.config, self.seed_counter)
     }
 
+    /// Reserve `n` consecutive simulation seeds and return the first.
+    /// Batched evaluation (`optim::core::ClusterObjective`) uses this to
+    /// run a whole ask-batch in parallel while each job still gets the
+    /// exact seed serial submission would have given it.
+    pub fn reserve_seeds(&mut self, n: u64) -> u64 {
+        let first = self.seed_counter.wrapping_add(1);
+        self.seed_counter = self.seed_counter.wrapping_add(n);
+        first
+    }
+
     pub fn jobs_completed(&self) -> usize {
         self.jobs.len()
     }

@@ -5,13 +5,26 @@
 //! system — Task Runner, Project Runner and Optimizer Runner over
 //! direct-search and derivative-free optimization — built on a simulated
 //! Hadoop 2.x substrate, with batched configuration scoring AOT-compiled
-//! from JAX/Pallas and executed from rust via XLA PJRT.
+//! from JAX/Pallas and executed via XLA PJRT (`pjrt` feature) or its
+//! native f32 mirror (default).
 //!
 //! Layer map (DESIGN.md §3):
 //! * [`catla`] — the paper's system: runners, projects, history, metrics.
-//! * [`optim`] — grid/random/pattern searches and the BOBYQA-style DFO.
-//! * [`hadoop`] — the simulated cluster substrate (DES engine).
-//! * [`runtime`] — PJRT loader/executor for `artifacts/*.hlo.txt`.
+//!   Every tuning entry point (Optimizer Runner, multi-job group tuning,
+//!   workflow tuning, resume) drives search through the shared ask/tell
+//!   core below.
+//! * [`optim`] — the batched ask/tell optimizer core
+//!   ([`optim::core::Optimizer`] / [`optim::core::Driver`] /
+//!   [`optim::core::BatchObjective`]) and the eight methods behind it:
+//!   grid/random/latin (population methods, whole-budget ask-batches) and
+//!   coordinate/hooke-jeeves/nelder-mead/annealing/bobyqa (sequential,
+//!   singleton asks), plus surrogate prescreening.
+//! * [`hadoop`] — the simulated cluster substrate (DES engine). Batch
+//!   evaluation reserves simulation seeds up front, so parallel scoring
+//!   is byte-identical to serial submission.
+//! * [`runtime`] — batched cost-model executor: PJRT loader for
+//!   `artifacts/*.hlo.txt` with `--features pjrt`, native mirror
+//!   otherwise.
 //! * [`workloads`], [`config`], [`util`] — profiles, parameter metadata,
 //!   and the hand-rolled foundations the offline image requires.
 

@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 
 use catla::catla::{
     aggregate, create_template, visualize, History, OptimizerRunner, Project, ProjectKind,
-    ProjectRunner, TaskRunner,
+    ProjectRunner, TaskRunner, TuningSettings,
 };
 use catla::hadoop::{Cluster, ClusterSpec, SimCluster};
 use catla::optim::surrogate::NativeScorer;
@@ -36,7 +36,9 @@ TOOLS
   tuning-group --dir <folder>         tune ONE shared config for jobs.list
   resume    --dir <folder> [--budget N]  continue an interrupted tuning run
   replay    --dir <folder> [--jobs N]    replay an arrival trace (default vs tuned)
-  workflow  --dir <folder>            run jobs.list as a DAG (after= deps)
+  workflow  --dir <folder> [--tune]   run jobs.list as a DAG (after= deps);
+                                      --tune first finds one shared config
+                                      minimizing the DAG makespan
   ui        --dir <folder>            terminal dashboard (CatlaUI view)
   aggregate --dir <folder>            re-aggregate logs from /history
   visualize --dir <folder> [--gnuplot]  charts from history CSVs
@@ -171,9 +173,48 @@ fn run(args: &Args) -> Result<(), String> {
         "workflow" => {
             let dir = project_dir(args)?;
             let project = Project::load(&dir)?;
-            let jobs = catla::catla::workflow::from_project(&project)?;
+            let mut jobs = catla::catla::workflow::from_project(&project)?;
             let mut cluster = open_cluster(&project);
             println!("{}", cluster.describe());
+            if args.has_flag("tune") {
+                let spec = project
+                    .spec
+                    .clone()
+                    .ok_or("workflow --tune needs params.spec in the project")?;
+                // same validated parsing + Driver (early stopping, trace
+                // observer) as the `tuning` tool
+                let (method, mut driver) = match &project.tuning {
+                    Some(_) => {
+                        let settings = TuningSettings::from_project(&project)?;
+                        (
+                            catla::optim::Method::from_name(&settings.optimizer, settings.seed)?,
+                            settings.driver(),
+                        )
+                    }
+                    None => (
+                        catla::optim::Method::Bobyqa { seed: 7 },
+                        catla::optim::Driver::new(40),
+                    ),
+                };
+                let tuned = catla::catla::workflow::tune_workflow(
+                    &mut cluster,
+                    &jobs,
+                    spec,
+                    project.base_config()?,
+                    &method,
+                    &mut driver,
+                )?;
+                println!(
+                    "workflow tuning ({}): {} evaluations, best makespan {:.1}s",
+                    tuned.optimizer,
+                    tuned.evals(),
+                    tuned.best_value
+                );
+                println!("shared configuration: {}", tuned.best_config.summary());
+                for j in &mut jobs {
+                    j.job.config = tuned.best_config.clone();
+                }
+            }
             let out = catla::catla::workflow::run_workflow(&mut cluster, &jobs)?;
             println!("{:<14} {:>10} {:>10} {:>10}", "stage", "start_s", "finish_s", "runtime_s");
             for s in &out.stages {

@@ -1,10 +1,14 @@
 //! Simulated annealing — a stochastic global-search baseline that, unlike
 //! the pattern searches, can escape the local basins the wave-boundary
 //! fluctuations of the cost surface create.
+//!
+//! Ask/tell port: singleton asks; acceptance, cooling and reheating all
+//! happen in `tell`, consuming the RNG stream in exactly the order the
+//! old monolithic loop did — same seed, same trajectory.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -16,6 +20,33 @@ pub struct SimulatedAnnealing {
     pub cooling: f64,
     /// Initial proposal step (unit-cube units), shrinks with temperature.
     pub step0: f64,
+    /// Starting point (defaults to a seed-derived random draw; set by
+    /// checkpoint replay to the best prior point).
+    pub start: Option<Vec<f64>>,
+    st: Option<State>,
+    best: BestSeen,
+}
+
+#[derive(Clone, Debug)]
+struct State {
+    rng: Rng,
+    x: Vec<f64>,
+    fx: f64,
+    t0: f64,
+    temp: f64,
+    step: f64,
+    since_improvement: usize,
+    pending: Pending,
+    /// A reheat drew a fresh random `x` that still needs evaluating.
+    need_restart: bool,
+}
+
+#[derive(Clone, Debug)]
+enum Pending {
+    None,
+    /// First sample (also re-used after a reheat restart).
+    Restart,
+    Proposal(Vec<f64>),
 }
 
 impl Default for SimulatedAnnealing {
@@ -25,6 +56,9 @@ impl Default for SimulatedAnnealing {
             t0_fraction: 0.10,
             cooling: 0.95,
             step0: 0.25,
+            start: None,
+            st: None,
+            best: BestSeen::default(),
         }
     }
 }
@@ -36,64 +70,115 @@ impl SimulatedAnnealing {
             ..Self::default()
         }
     }
+}
 
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
+impl Optimizer for SimulatedAnnealing {
+    fn name(&self) -> &str {
+        "annealing"
+    }
+
+    fn ask(&mut self, space: &ParamSpace, _budget_left: usize) -> Vec<Candidate> {
         let d = space.dims();
-        let mut rng = Rng::new(self.seed);
-        let mut rec = Recorder::new();
-        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
-            let cfg = space.decode(x);
-            let v = obj(&cfg);
-            rec.record(x.to_vec(), cfg, v);
-            v
-        };
-
-        let mut x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
-        let mut fx = eval(&mut rec, &x);
-        let t0 = (fx * self.t0_fraction).max(1e-9);
-        let mut temp = t0;
-        let mut step = self.step0;
-        let mut since_improvement = 0usize;
-
-        while rec.evals() < max_evals {
-            // Gaussian proposal, clamped to the cube
-            let cand: Vec<f64> = x
-                .iter()
-                .map(|v| (v + rng.normal() * step).clamp(0.0, 1.0))
-                .collect();
-            let fc = eval(&mut rec, &cand);
-            let accept = fc < fx || {
-                let p = ((fx - fc) / temp).exp();
-                rng.bernoulli(p.min(1.0))
-            };
-            if accept {
-                if fc < fx {
-                    since_improvement = 0;
-                } else {
-                    since_improvement += 1;
-                }
-                x = cand;
-                fx = fc;
-            } else {
-                since_improvement += 1;
+        let st = match &mut self.st {
+            None => {
+                let mut rng = Rng::new(self.seed);
+                let x: Vec<f64> = self
+                    .start
+                    .clone()
+                    .unwrap_or_else(|| (0..d).map(|_| rng.f64()).collect());
+                self.st = Some(State {
+                    rng,
+                    x: x.clone(),
+                    fx: f64::INFINITY,
+                    t0: 0.0,
+                    temp: 0.0,
+                    step: self.step0,
+                    since_improvement: 0,
+                    pending: Pending::Restart,
+                    need_restart: false,
+                });
+                return vec![Candidate::new(x)];
             }
-            temp *= self.cooling;
-            step = (step * 0.995).max(0.01);
-            // reheating: stuck in a basin -> restart from a random point
-            if since_improvement >= 40 {
-                x = (0..d).map(|_| rng.f64()).collect();
-                fx = eval(&mut rec, &x);
-                temp = t0;
-                step = self.step0;
-                since_improvement = 0;
+            Some(st) => st,
+        };
+        if !matches!(st.pending, Pending::None) {
+            return Vec::new(); // tell pending
+        }
+        if st.need_restart {
+            // evaluate the reheat point before proposing again
+            st.need_restart = false;
+            st.pending = Pending::Restart;
+            return vec![Candidate::new(st.x.clone())];
+        }
+        // Gaussian proposal, clamped to the cube
+        let cand: Vec<f64> = st
+            .x
+            .iter()
+            .map(|v| (v + st.rng.normal() * st.step).clamp(0.0, 1.0))
+            .collect();
+        st.pending = Pending::Proposal(cand.clone());
+        vec![Candidate::new(cand)]
+    }
+
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+        let st = match &mut self.st {
+            // told before the first ask (resume replay): seed the start
+            None => {
+                if let Some((x, _)) = self.best.get() {
+                    self.start = Some(x);
+                }
+                return;
+            }
+            Some(st) => st,
+        };
+        for r in evals {
+            let v = r.value;
+            match std::mem::replace(&mut st.pending, Pending::None) {
+                Pending::None => {}
+                Pending::Restart => {
+                    st.fx = v;
+                    if st.t0 == 0.0 {
+                        // very first sample sets the temperature scale
+                        st.t0 = (v * self.t0_fraction).max(1e-9);
+                        st.temp = st.t0;
+                    }
+                }
+                Pending::Proposal(cand) => {
+                    let accept = v < st.fx || {
+                        let p = ((st.fx - v) / st.temp).exp();
+                        st.rng.bernoulli(p.min(1.0))
+                    };
+                    if accept {
+                        if v < st.fx {
+                            st.since_improvement = 0;
+                        } else {
+                            st.since_improvement += 1;
+                        }
+                        st.x = cand;
+                        st.fx = v;
+                    } else {
+                        st.since_improvement += 1;
+                    }
+                    st.temp *= self.cooling;
+                    st.step = (st.step * 0.995).max(0.01);
+                    // reheating: stuck in a basin -> restart from random
+                    if st.since_improvement >= 40 {
+                        let d = st.x.len();
+                        let x: Vec<f64> = (0..d).map(|_| st.rng.f64()).collect();
+                        st.x = x;
+                        st.temp = st.t0;
+                        st.step = self.step0;
+                        st.since_improvement = 0;
+                        st.need_restart = true;
+                    }
+                }
             }
         }
-        rec.finish("annealing")
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -102,6 +187,7 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
 
     fn space4() -> ParamSpace {
         ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default())
@@ -111,10 +197,12 @@ mod tests {
     fn converges_on_bowl() {
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c).iter().map(|u| (u - 0.5).powi(2)).sum::<f64>() + 1.0
-        };
-        let out = SimulatedAnnealing::new(3).run(&space, &mut obj, 200);
+        });
+        let out = Driver::new(200)
+            .run(&mut SimulatedAnnealing::new(3), &space, &mut obj)
+            .unwrap();
         assert!(out.best_value < 1.03, "SA stuck at {}", out.best_value);
     }
 
@@ -124,13 +212,15 @@ mod tests {
         // global at 0.8 (value 0.5); start anywhere
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             let u = sp.encode(c);
             let d_local: f64 = u.iter().map(|v| (v - 0.2) * (v - 0.2)).sum();
             let d_global: f64 = u.iter().map(|v| (v - 0.8) * (v - 0.8)).sum();
             (1.0 + 4.0 * d_local).min(0.5 + 4.0 * d_global)
-        };
-        let out = SimulatedAnnealing::new(11).run(&space, &mut obj, 300);
+        });
+        let out = Driver::new(300)
+            .run(&mut SimulatedAnnealing::new(11), &space, &mut obj)
+            .unwrap();
         assert!(
             out.best_value < 0.8,
             "did not find the global basin: {}",
@@ -141,9 +231,13 @@ mod tests {
     #[test]
     fn budget_exact_and_deterministic() {
         let space = space4();
-        let mut obj = |c: &HadoopConfig| c.values.iter().sum::<f64>();
-        let a = SimulatedAnnealing::new(5).run(&space, &mut obj, 50);
-        let b = SimulatedAnnealing::new(5).run(&space, &mut obj, 50);
+        let mut obj = FnObjective(|c: &HadoopConfig| c.values.iter().sum::<f64>());
+        let a = Driver::new(50)
+            .run(&mut SimulatedAnnealing::new(5), &space, &mut obj)
+            .unwrap();
+        let b = Driver::new(50)
+            .run(&mut SimulatedAnnealing::new(5), &space, &mut obj)
+            .unwrap();
         assert_eq!(a.evals(), 50);
         assert_eq!(a.best_value, b.best_value);
     }

@@ -10,13 +10,18 @@
 //! catalogued in DESIGN.md — behaviourally it retains the property the
 //! paper relies on: rapid convergence on noisy black-box objectives in
 //! few evaluations.
+//!
+//! Ask/tell port: the 2n+1 initial design is ONE ask-batch (its values do
+//! not influence its own construction, so batched evaluation is exact);
+//! every later ask is a singleton — trust-region or geometry-repair point
+//! — reproducing the old monolithic loop decision for decision.
 
 pub mod model;
 pub mod trust_region;
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
 use crate::util::linalg::norm2;
 use crate::util::rng::Rng;
 
@@ -29,6 +34,9 @@ pub struct Bobyqa {
     pub rho_end: f64,
     pub start: Option<Vec<f64>>,
     pub seed: u64,
+    label: Option<String>,
+    st: Option<State>,
+    best: BestSeen,
 }
 
 impl Default for Bobyqa {
@@ -38,127 +46,223 @@ impl Default for Bobyqa {
             rho_end: 5e-3,
             start: None,
             seed: 7,
+            label: None,
+            st: None,
+            best: BestSeen::default(),
         }
     }
 }
 
 impl Bobyqa {
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
+    pub fn new(seed: u64) -> Bobyqa {
+        Bobyqa {
+            seed,
+            ..Bobyqa::default()
+        }
+    }
+
+    pub fn with_start(mut self, start: Vec<f64>) -> Bobyqa {
+        self.start = Some(start);
+        self
+    }
+
+    /// Override the outcome label (e.g. `"bobyqa+prescreen(native)"`).
+    pub fn with_label(mut self, label: String) -> Bobyqa {
+        self.label = Some(label);
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+struct State {
+    rng: Rng,
+    delta: f64,
+    pts: Vec<Vec<f64>>,
+    vals: Vec<f64>,
+    pending: Pending,
+}
+
+#[derive(Clone, Debug)]
+enum Pending {
+    None,
+    /// The initial design: stays pending until the next `ask`, because a
+    /// driver with early stopping tells one ask-batch back in several
+    /// patience-sized chunks.
+    Init,
+    /// Trust-region step from incumbent `xb` (= pts[bi], value fb).
+    Trust {
+        bi: usize,
+        xb: Vec<f64>,
+        fb: f64,
+        pred: f64,
+    },
+    /// Geometry-repair point replacing pts[gi].
+    Geom { gi: usize },
+}
+
+fn best_idx(vals: &[f64]) -> usize {
+    vals.iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+impl Optimizer for Bobyqa {
+    fn name(&self) -> &str {
+        self.label.as_deref().unwrap_or("bobyqa")
+    }
+
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
         let n = space.dims();
-        let m = 2 * n + 1;
-        let mut rng = Rng::new(self.seed);
-        let mut rec = Recorder::new();
-        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
-            let x: Vec<f64> = x.iter().map(|u| u.clamp(0.0, 1.0)).collect();
-            let cfg = space.decode(&x);
-            let v = obj(&cfg);
-            rec.record(x, cfg, v);
-            v
-        };
-
-        let x0 = self.start.clone().unwrap_or_else(|| vec![0.5; n]);
-        let mut delta = self.rho_begin;
-
-        // ---- initial design: x0 ± delta e_i, clipped to the cube -------
-        let mut pts: Vec<Vec<f64>> = Vec::with_capacity(m);
-        let mut vals: Vec<f64> = Vec::with_capacity(m);
-        let mut push = |rec: &mut Recorder, pts: &mut Vec<Vec<f64>>, vals: &mut Vec<f64>, x: Vec<f64>| {
-            let v = eval(rec, &x);
-            pts.push(x);
-            vals.push(v);
-        };
-        push(&mut rec, &mut pts, &mut vals, x0.clone());
-        for i in 0..n {
-            if rec.evals() + 2 > max_evals {
-                break;
+        let st = match &mut self.st {
+            None => {
+                // ---- initial design: x0 ± delta e_i, clipped to the cube,
+                // truncated in (+,−) pairs exactly like the old budget check
+                let x0 = self.start.clone().unwrap_or_else(|| vec![0.5; n]);
+                let delta = self.rho_begin;
+                let mut batch: Vec<Vec<f64>> = vec![x0.clone()];
+                for i in 0..n {
+                    if batch.len() + 2 > budget_left {
+                        break;
+                    }
+                    let mut p = x0.clone();
+                    p[i] = (p[i] + delta).min(1.0);
+                    batch.push(p);
+                    let mut q = x0.clone();
+                    q[i] = (q[i] - delta).max(0.0);
+                    batch.push(q);
+                }
+                batch.truncate(budget_left.max(1));
+                self.st = Some(State {
+                    rng: Rng::new(self.seed),
+                    delta,
+                    pts: Vec::new(),
+                    vals: Vec::new(),
+                    pending: Pending::Init,
+                });
+                return batch.into_iter().map(Candidate::new).collect();
             }
-            let mut p = x0.clone();
-            p[i] = (p[i] + delta).min(1.0);
-            push(&mut rec, &mut pts, &mut vals, p);
-            let mut q = x0.clone();
-            q[i] = (q[i] - delta).max(0.0);
-            push(&mut rec, &mut pts, &mut vals, q);
+            Some(st) => st,
+        };
+        match st.pending {
+            Pending::None => {}
+            // every told-back chunk of the init batch has arrived by the
+            // driver contract (tell covers the whole batch before the
+            // next ask), so the design is complete now
+            Pending::Init => st.pending = Pending::None,
+            _ => return Vec::new(), // tell pending
+        }
+        if st.pts.is_empty() {
+            return Vec::new(); // init batch was fully truncated away
         }
 
-        let best_idx = |vals: &[f64]| -> usize {
-            vals.iter()
-                .enumerate()
-                .min_by(|a, b| a.1.total_cmp(b.1))
-                .map(|(i, _)| i)
-                .unwrap()
-        };
+        let bi = best_idx(&st.vals);
+        let xb = st.pts[bi].clone();
+        let fb = st.vals[bi];
 
-        while rec.evals() < max_evals {
-            let bi = best_idx(&vals);
-            let xb = pts[bi].clone();
-            let fb = vals[bi];
+        // fit the model centered on the incumbent, try a trust step
+        let model = model::fit_min_frobenius(&st.pts, &st.vals, &xb);
+        let step = model.as_ref().map(|md| {
+            let lo: Vec<f64> = xb.iter().map(|v| -v).collect();
+            let hi: Vec<f64> = xb.iter().map(|v| 1.0 - v).collect();
+            trust_region::solve(md, st.delta, &lo, &hi)
+        });
 
-            // fit model centered on the incumbent
-            let model = model::fit_min_frobenius(&pts, &vals, &xb);
-            let step = model.as_ref().map(|md| {
-                let lo: Vec<f64> = xb.iter().map(|v| -v).collect();
-                let hi: Vec<f64> = xb.iter().map(|v| 1.0 - v).collect();
-                trust_region::solve(md, delta, &lo, &hi)
-            });
-
-            let (s, pred) = match step {
-                Some((s, pred)) if pred > 1e-12 && norm2(&s) > 1e-9 => (s, pred),
-                _ => {
-                    // geometry step: replace the farthest point with a
-                    // random point in the current trust region
-                    let gi = farthest(&pts, &xb);
-                    let mut p: Vec<f64> = xb
-                        .iter()
-                        .map(|v| (v + rng.range_f64(-delta, delta)).clamp(0.0, 1.0))
-                        .collect();
-                    if p == xb {
-                        p[0] = (p[0] + delta * 0.5).min(1.0);
-                    }
-                    let v = eval(&mut rec, &p);
-                    pts[gi] = p;
-                    vals[gi] = v;
-                    delta = (delta * 0.7).max(self.rho_end * 0.5);
-                    if delta <= self.rho_end {
-                        delta = self.rho_begin * 0.5; // noisy-objective restart
-                    }
-                    continue;
+        match step {
+            Some((s, pred)) if pred > 1e-12 && norm2(&s) > 1e-9 => {
+                let xn: Vec<f64> = xb
+                    .iter()
+                    .zip(&s)
+                    .map(|(a, b)| (a + b).clamp(0.0, 1.0))
+                    .collect();
+                st.pending = Pending::Trust { bi, xb, fb, pred };
+                vec![Candidate::new(xn)]
+            }
+            _ => {
+                // geometry step: replace the farthest point with a random
+                // point in the current trust region
+                let gi = farthest(&st.pts, &xb);
+                let delta = st.delta;
+                let mut p: Vec<f64> = xb
+                    .iter()
+                    .map(|v| (v + st.rng.range_f64(-delta, delta)).clamp(0.0, 1.0))
+                    .collect();
+                if p == xb {
+                    p[0] = (p[0] + delta * 0.5).min(1.0);
                 }
-            };
+                st.pending = Pending::Geom { gi };
+                vec![Candidate::new(p)]
+            }
+        }
+    }
 
-            let xn: Vec<f64> = xb.iter().zip(&s).map(|(a, b)| (a + b).clamp(0.0, 1.0)).collect();
-            let fn_ = eval(&mut rec, &xn);
-            let rho = (fb - fn_) / pred;
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+        let st = match &mut self.st {
+            // told before the first ask (resume replay): seed the start
+            None => {
+                if let Some((x, _)) = self.best.get() {
+                    self.start = Some(x);
+                }
+                return;
+            }
+            Some(st) => st,
+        };
+        match std::mem::replace(&mut st.pending, Pending::None) {
+            Pending::None => {}
+            Pending::Init => {
+                for r in evals {
+                    st.pts.push(r.unit_x.clone());
+                    st.vals.push(r.value);
+                }
+                // keep absorbing: a chunking driver may tell the rest of
+                // the init batch in later calls
+                st.pending = Pending::Init;
+            }
+            Pending::Trust { bi, xb, fb, pred } => {
+                let r = &evals[0];
+                let fn_ = r.value;
+                let rho = (fb - fn_) / pred;
 
-            // replace the farthest point (never the incumbent unless the
-            // new point beats it)
-            let ri = {
-                let cand = farthest(&pts, &xb);
-                if cand == bi && fn_ > fb {
-                    second_farthest(&pts, &xb, bi)
+                // replace the farthest point (never the incumbent unless
+                // the new point beats it)
+                let ri = {
+                    let cand = farthest(&st.pts, &xb);
+                    if cand == bi && fn_ > fb {
+                        second_farthest(&st.pts, &xb, bi)
+                    } else {
+                        cand
+                    }
+                };
+                st.pts[ri] = r.unit_x.clone();
+                st.vals[ri] = fn_;
+
+                st.delta = if rho >= 0.7 {
+                    (st.delta * 2.0).min(0.5)
+                } else if rho >= 0.1 {
+                    st.delta
                 } else {
-                    cand
+                    st.delta * 0.5
+                };
+                if st.delta <= self.rho_end {
+                    st.delta = self.rho_begin * 0.5; // restart near incumbent
                 }
-            };
-            pts[ri] = xn;
-            vals[ri] = fn_;
-
-            delta = if rho >= 0.7 {
-                (delta * 2.0).min(0.5)
-            } else if rho >= 0.1 {
-                delta
-            } else {
-                delta * 0.5
-            };
-            if delta <= self.rho_end {
-                delta = self.rho_begin * 0.5; // restart radius near incumbent
+            }
+            Pending::Geom { gi } => {
+                let r = &evals[0];
+                st.pts[gi] = r.unit_x.clone();
+                st.vals[gi] = r.value;
+                st.delta = (st.delta * 0.7).max(self.rho_end * 0.5);
+                if st.delta <= self.rho_end {
+                    st.delta = self.rho_begin * 0.5; // noisy-objective restart
+                }
             }
         }
-        rec.finish("bobyqa")
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -188,6 +292,8 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
+    use crate::optim::random::RandomSearch;
     use crate::util::rng::Rng;
 
     fn space4() -> ParamSpace {
@@ -198,10 +304,12 @@ mod tests {
     fn converges_on_smooth_bowl() {
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c).iter().map(|u| (u - 0.62).powi(2)).sum()
-        };
-        let out = Bobyqa::default().run(&space, &mut obj, 80);
+        });
+        let out = Driver::new(80)
+            .run(&mut Bobyqa::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.best_value < 0.01, "bobyqa stuck at {}", out.best_value);
     }
 
@@ -211,11 +319,13 @@ mod tests {
         let space = space4();
         let sp = space.clone();
         let mut noise = Rng::new(3);
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             let clean: f64 = sp.encode(c).iter().map(|u| (u - 0.4).powi(2)).sum();
             (1.0 + clean) * noise.lognormal(0.0, 0.03)
-        };
-        let out = Bobyqa::default().run(&space, &mut obj, 120);
+        });
+        let out = Driver::new(120)
+            .run(&mut Bobyqa::default(), &space, &mut obj)
+            .unwrap();
         // best observed should be close to the noise floor around 1.0
         assert!(out.best_value < 1.06, "noisy bobyqa best {}", out.best_value);
     }
@@ -224,11 +334,17 @@ mod tests {
     fn handles_optimum_on_boundary() {
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c).iter().map(|u| (1.0 - u).powi(2)).sum()
-        };
-        let out = Bobyqa::default().run(&space, &mut obj, 100);
-        assert!(out.best_value < 0.02, "boundary optimum missed: {}", out.best_value);
+        });
+        let out = Driver::new(100)
+            .run(&mut Bobyqa::default(), &space, &mut obj)
+            .unwrap();
+        assert!(
+            out.best_value < 0.02,
+            "boundary optimum missed: {}",
+            out.best_value
+        );
         for r in &out.records {
             assert!(r.unit_x.iter().all(|&u| (0.0..=1.0).contains(&u)));
         }
@@ -240,21 +356,25 @@ mod tests {
         let sp = space.clone();
         let mk_obj = move || {
             let sp = sp.clone();
-            move |c: &HadoopConfig| -> f64 {
+            FnObjective(move |c: &HadoopConfig| -> f64 {
                 let u = sp.encode(c);
                 let mut s = 0.0;
                 for i in 0..u.len() {
                     s += (u[i] - 0.35).powi(2) * (1.0 + i as f64);
                 }
                 s
-            }
+            })
         };
         let budget = 60;
         let mut o1 = mk_obj();
-        let bq = Bobyqa::default().run(&space, &mut o1, budget).best_value;
+        let bq = Driver::new(budget)
+            .run(&mut Bobyqa::default(), &space, &mut o1)
+            .unwrap()
+            .best_value;
         let mut o2 = mk_obj();
-        let rnd = crate::optim::random::RandomSearch::new(1)
-            .run(&space, &mut o2, budget)
+        let rnd = Driver::new(budget)
+            .run(&mut RandomSearch::new(1), &space, &mut o2)
+            .unwrap()
             .best_value;
         assert!(bq <= rnd, "bobyqa {bq} worse than random {rnd}");
     }
@@ -262,9 +382,80 @@ mod tests {
     #[test]
     fn budget_respected_exactly() {
         let space = space4();
-        let mut obj = |_: &HadoopConfig| 1.0;
-        let out = Bobyqa::default().run(&space, &mut obj, 25);
+        let mut obj = FnObjective(|_: &HadoopConfig| 1.0);
+        let out = Driver::new(25)
+            .run(&mut Bobyqa::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.evals() <= 25);
         assert!(out.evals() >= 20, "should use most of the budget");
+    }
+
+    #[test]
+    fn init_design_is_one_batch_then_singletons() {
+        let space = space4();
+        let n = space.dims();
+        let mut bob = Bobyqa::default();
+        let init = bob.ask(&space, 100);
+        assert_eq!(init.len(), 2 * n + 1, "init design should be one batch");
+        let records: Vec<EvalRecord> = init
+            .iter()
+            .enumerate()
+            .map(|(i, c)| EvalRecord {
+                iter: i + 1,
+                config: space.decode(&c.unit_x),
+                unit_x: c.unit_x.clone(),
+                value: 1.0 + i as f64,
+                best_so_far: 1.0,
+            })
+            .collect();
+        bob.tell(&records);
+        for _ in 0..5 {
+            let b = bob.ask(&space, 100);
+            assert_eq!(b.len(), 1, "post-init asks must be singletons");
+            bob.tell(&[EvalRecord {
+                iter: 1,
+                config: space.decode(&b[0].unit_x),
+                unit_x: b[0].unit_x.clone(),
+                value: 2.0,
+                best_so_far: 1.0,
+            }]);
+        }
+    }
+
+    #[test]
+    fn init_design_survives_chunked_tells() {
+        // an early-stopping driver tells one ask-batch back in
+        // patience-sized chunks; every chunk must enter the design
+        let space = space4();
+        let mk_records = |init: &[Candidate]| -> Vec<EvalRecord> {
+            init.iter()
+                .enumerate()
+                .map(|(i, c)| EvalRecord {
+                    iter: i + 1,
+                    config: space.decode(&c.unit_x),
+                    unit_x: c.unit_x.clone(),
+                    value: 9.0 - i as f64 * 0.5,
+                    best_so_far: 9.0,
+                })
+                .collect()
+        };
+        let mut whole = Bobyqa::default();
+        let records = mk_records(&whole.ask(&space, 100));
+        whole.tell(&records);
+
+        let mut chunked = Bobyqa::default();
+        let records2 = mk_records(&chunked.ask(&space, 100));
+        for chunk in records2.chunks(2) {
+            chunked.tell(chunk);
+        }
+
+        // same design absorbed -> same deterministic next proposal
+        let a = whole.ask(&space, 100);
+        let b = chunked.ask(&space, 100);
+        assert_eq!(a.len(), 1);
+        assert_eq!(
+            a[0].unit_x, b[0].unit_x,
+            "chunked init tells diverged from one-batch tell"
+        );
     }
 }

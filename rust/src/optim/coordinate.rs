@@ -1,16 +1,35 @@
 //! Cyclic coordinate (compass) search: probe ± along one axis at a time,
 //! halving the step when a full sweep makes no progress. The simplest
 //! member of the direct-search family beyond exhaustive enumeration.
+//!
+//! Ask/tell port: a singleton-ask state machine over the shared
+//! [`Sweep`] probe sub-machine — one probe per ask, sweep bookkeeping
+//! and step halving advance between tells. Behaviour is identical to the
+//! old monolithic loop.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
+use crate::optim::sweep::Sweep;
 
 #[derive(Clone, Debug)]
 pub struct CoordinateSearch {
     pub init_step: f64,
     /// Starting point in the unit cube (defaults to the center).
     pub start: Option<Vec<f64>>,
+    st: Option<State>,
+    best: BestSeen,
+}
+
+#[derive(Clone, Debug)]
+struct State {
+    sweep: Sweep,
+    /// Value at the start of the current sweep (progress detection).
+    f_sweep_start: f64,
+    step: f64,
+    stop_step: f64,
+    await_init: bool,
+    done: bool,
 }
 
 impl Default for CoordinateSearch {
@@ -18,61 +37,90 @@ impl Default for CoordinateSearch {
         Self {
             init_step: 0.25,
             start: None,
+            st: None,
+            best: BestSeen::default(),
         }
     }
 }
 
 impl CoordinateSearch {
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
-        let d = space.dims();
-        let min_steps = space.min_steps();
-        let mut rec = Recorder::new();
-        let mut x = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
-        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
-            let cfg = space.decode(x);
-            let v = obj(&cfg);
-            rec.record(x.to_vec(), cfg, v);
-            v
-        };
-        let mut fx = eval(&mut rec, &x);
-        let mut step = self.init_step;
-        let stop_step = min_steps.iter().cloned().fold(f64::MAX, f64::min) * 0.5;
+    pub fn with_start(mut self, start: Vec<f64>) -> Self {
+        self.start = Some(start);
+        self
+    }
+}
 
-        while rec.evals() < max_evals && step > stop_step {
-            let mut improved = false;
-            for i in 0..d {
-                if rec.evals() >= max_evals {
-                    break;
-                }
-                for dir in [1.0, -1.0] {
-                    let cand = (x[i] + dir * step).clamp(0.0, 1.0);
-                    if (cand - x[i]).abs() < 1e-12 {
-                        continue;
-                    }
-                    let mut xc = x.clone();
-                    xc[i] = cand;
-                    let v = eval(&mut rec, &xc);
-                    if v < fx {
-                        x = xc;
-                        fx = v;
-                        improved = true;
-                        break; // greedy: keep moving this direction next sweep
-                    }
-                    if rec.evals() >= max_evals {
-                        break;
-                    }
-                }
+impl Optimizer for CoordinateSearch {
+    fn name(&self) -> &str {
+        "coordinate"
+    }
+
+    fn ask(&mut self, space: &ParamSpace, _budget_left: usize) -> Vec<Candidate> {
+        let d = space.dims();
+        let st = match &mut self.st {
+            None => {
+                let x = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
+                let stop_step =
+                    space.min_steps().iter().cloned().fold(f64::MAX, f64::min) * 0.5;
+                self.st = Some(State {
+                    sweep: Sweep::new(x.clone(), f64::INFINITY),
+                    f_sweep_start: f64::INFINITY,
+                    step: self.init_step,
+                    stop_step,
+                    await_init: true,
+                    done: false,
+                });
+                return vec![Candidate::new(x)];
             }
-            if !improved {
-                step *= 0.5;
+            Some(st) => st,
+        };
+        if st.done || st.await_init || st.sweep.awaiting() {
+            return Vec::new();
+        }
+        loop {
+            // the old `while` gate: refine only while the step is coarser
+            // than the spec's resolution
+            if st.step <= st.stop_step {
+                st.done = true;
+                return Vec::new();
+            }
+            if let Some(p) = st.sweep.next_probe(st.step) {
+                return vec![Candidate::new(p)];
+            }
+            // sweep complete: halve on failure, start the next sweep
+            if st.sweep.fx >= st.f_sweep_start {
+                st.step *= 0.5;
+            }
+            st.f_sweep_start = st.sweep.fx;
+            st.sweep.restart();
+        }
+    }
+
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+        let st = match &mut self.st {
+            // told before the first ask (resume replay): seed the start
+            None => {
+                if let Some((x, _)) = self.best.get() {
+                    self.start = Some(x);
+                }
+                return;
+            }
+            Some(st) => st,
+        };
+        for r in evals {
+            if st.await_init {
+                st.await_init = false;
+                st.sweep.fx = r.value;
+                st.f_sweep_start = r.value;
+            } else if st.sweep.awaiting() {
+                st.sweep.absorb(r.value);
             }
         }
-        rec.finish("coordinate")
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -81,16 +129,24 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
 
-    fn bowl_obj(space: ParamSpace, target: f64) -> impl FnMut(&HadoopConfig) -> f64 {
-        move |c: &HadoopConfig| space.encode(c).iter().map(|u| (u - target).powi(2)).sum()
+    fn bowl_obj(
+        space: ParamSpace,
+        target: f64,
+    ) -> FnObjective<impl FnMut(&HadoopConfig) -> f64> {
+        FnObjective(move |c: &HadoopConfig| {
+            space.encode(c).iter().map(|u| (u - target).powi(2)).sum()
+        })
     }
 
     #[test]
     fn converges_on_separable_bowl() {
         let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
         let mut obj = bowl_obj(space.clone(), 0.7);
-        let out = CoordinateSearch::default().run(&space, &mut obj, 300);
+        let out = Driver::new(300)
+            .run(&mut CoordinateSearch::default(), &space, &mut obj)
+            .unwrap();
         assert!(
             out.best_value < 0.01,
             "coordinate search stuck at {}",
@@ -102,7 +158,9 @@ mod tests {
     fn stays_in_unit_cube() {
         let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
         let mut obj = bowl_obj(space.clone(), 1.0); // optimum at the corner
-        let out = CoordinateSearch::default().run(&space, &mut obj, 200);
+        let out = Driver::new(200)
+            .run(&mut CoordinateSearch::default(), &space, &mut obj)
+            .unwrap();
         for r in &out.records {
             assert!(r.unit_x.iter().all(|&u| (0.0..=1.0).contains(&u)));
         }
@@ -114,7 +172,33 @@ mod tests {
     fn budget_respected() {
         let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
         let mut obj = bowl_obj(space.clone(), 0.3);
-        let out = CoordinateSearch::default().run(&space, &mut obj, 17);
+        let out = Driver::new(17)
+            .run(&mut CoordinateSearch::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.evals() <= 17);
+    }
+
+    #[test]
+    fn asks_singletons_and_converges_on_flat() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let mut cs = CoordinateSearch::default();
+        let mut n = 0usize;
+        loop {
+            let batch = cs.ask(&space, 1000);
+            if batch.is_empty() {
+                break;
+            }
+            assert_eq!(batch.len(), 1, "sequential method must ask singletons");
+            cs.tell(&[EvalRecord {
+                iter: n + 1,
+                config: space.decode(&batch[0].unit_x),
+                unit_x: batch[0].unit_x.clone(),
+                value: 1.0, // flat: every sweep fails, step halves to stop
+                best_so_far: 1.0,
+            }]);
+            n += 1;
+            assert!(n < 10_000, "coordinate search never converged on flat");
+        }
+        assert!(n > 0);
     }
 }

@@ -1,0 +1,561 @@
+//! The ask/tell optimizer core: every search method behind one batched
+//! protocol, driven by a shared [`Driver`].
+//!
+//! * [`Optimizer`] — `ask` proposes a batch of unit-cube candidates,
+//!   `tell` feeds the measured results back. Population methods (grid,
+//!   random, latin) ask in large batches; sequential methods (bobyqa,
+//!   hooke-jeeves, …) ask singletons and behave exactly like their old
+//!   monolithic loops.
+//! * [`BatchObjective`] — scores a whole ask-batch in one call.
+//!   [`ClusterObjective`] fans a batch out over the thread pool against
+//!   the simulated cluster (byte-identical to serial submission order:
+//!   simulation seeds are reserved up front), with `repeats`
+//!   noise-averaging folded in. [`ScorerObjective`] routes a batch
+//!   through a [`CandidateScorer`] — the AOT/Pallas batch scorer when
+//!   built with the `pjrt` feature.
+//! * [`Driver`] — owns the evaluation budget (an over-sized ask-batch is
+//!   truncated, never overspent), optional early stopping, per-eval
+//!   [`Observer`] hooks, and checkpoint replay
+//!   ([`Driver::run_with_history`] re-`tell`s prior evaluations into a
+//!   fresh optimizer).
+
+use std::sync::Arc;
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{simulate_job, SimCluster};
+use crate::optim::result::{EvalRecord, Recorder, TuningOutcome};
+use crate::optim::space::ParamSpace;
+use crate::optim::surrogate::CandidateScorer;
+use crate::util::pool::{default_threads, map_parallel};
+use crate::workloads::WorkloadSpec;
+
+/// One proposed configuration, in unit-cube coordinates.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub unit_x: Vec<f64>,
+}
+
+impl Candidate {
+    pub fn new(unit_x: Vec<f64>) -> Candidate {
+        Candidate { unit_x }
+    }
+}
+
+impl From<Vec<f64>> for Candidate {
+    fn from(unit_x: Vec<f64>) -> Candidate {
+        Candidate { unit_x }
+    }
+}
+
+/// The ask/tell protocol every search method implements.
+///
+/// Contract: the [`Driver`] alternates `ask` → evaluate → `tell`; every
+/// evaluated candidate from the last ask-batch is told back (in ask
+/// order) before the next `ask`. An empty ask-batch means the method has
+/// converged or exhausted its proposals. `tell` may also be called
+/// *before* the first `ask` to replay a checkpoint — methods use that to
+/// skip known points (grid) or seed their start at the best prior point.
+pub trait Optimizer {
+    /// Label recorded into [`TuningOutcome::optimizer`].
+    fn name(&self) -> &str;
+
+    /// Propose up to `budget_left` candidates (more are truncated by the
+    /// driver; fewer is fine).
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate>;
+
+    /// Absorb measured results, in the order they were asked.
+    fn tell(&mut self, evals: &[EvalRecord]);
+
+    /// The method's incumbent: best (unit coordinates, value) it has been
+    /// told so far.
+    fn best(&self) -> Option<(Vec<f64>, f64)>;
+}
+
+/// Track the best told point — the default [`Optimizer::best`] backing
+/// store shared by all method implementations.
+#[derive(Clone, Debug, Default)]
+pub struct BestSeen {
+    best: Option<(Vec<f64>, f64)>,
+}
+
+impl BestSeen {
+    pub fn update(&mut self, evals: &[EvalRecord]) {
+        for r in evals {
+            if self.best.as_ref().map(|(_, b)| r.value < *b).unwrap_or(true) {
+                self.best = Some((r.unit_x.clone(), r.value));
+            }
+        }
+    }
+
+    pub fn get(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.clone()
+    }
+}
+
+/// A batched black-box objective: score a whole ask-batch in one call.
+pub trait BatchObjective {
+    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String>;
+}
+
+/// Adapter for plain per-config closures (`FnMut(&HadoopConfig) -> f64`):
+/// the batch is scored serially, one config at a time.
+pub struct FnObjective<F>(pub F);
+
+impl<F: FnMut(&HadoopConfig) -> f64> BatchObjective for FnObjective<F> {
+    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        Ok(cfgs.iter().map(|c| (self.0)(c)).collect())
+    }
+}
+
+/// Batched objective against the simulated cluster.
+///
+/// Each candidate is measured `repeats` times and the runtimes averaged
+/// (repeats > 1 trades cluster time for noise reduction). Simulation
+/// seeds are reserved from the cluster up front in submission order, so
+/// the returned values are byte-identical whether the batch runs on one
+/// thread or many — determinism is independent of scheduling.
+pub struct ClusterObjective<'a> {
+    cluster: &'a mut SimCluster,
+    workload: WorkloadSpec,
+    repeats: usize,
+    threads: usize,
+}
+
+impl<'a> ClusterObjective<'a> {
+    pub fn new(
+        cluster: &'a mut SimCluster,
+        workload: &WorkloadSpec,
+        repeats: usize,
+    ) -> ClusterObjective<'a> {
+        ClusterObjective {
+            cluster,
+            workload: workload.clone(),
+            repeats: repeats.max(1),
+            threads: default_threads(),
+        }
+    }
+
+    /// Force one-at-a-time evaluation (baseline for the batch benches).
+    pub fn serial(mut self) -> ClusterObjective<'a> {
+        self.threads = 1;
+        self
+    }
+
+    /// Cap the worker count.
+    pub fn with_threads(mut self, threads: usize) -> ClusterObjective<'a> {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+impl BatchObjective for ClusterObjective<'_> {
+    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        if cfgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let repeats = self.repeats;
+        let runs = cfgs.len() * repeats;
+        let first_seed = self.cluster.reserve_seeds(runs as u64);
+        let spec = Arc::new(self.cluster.spec.clone());
+        let wl = Arc::new(self.workload.clone());
+        let items: Vec<(HadoopConfig, u64)> = cfgs
+            .iter()
+            .enumerate()
+            .flat_map(|(i, cfg)| {
+                (0..repeats)
+                    .map(move |r| (cfg.clone(), first_seed.wrapping_add((i * repeats + r) as u64)))
+            })
+            .collect();
+        let runtimes = map_parallel(items, self.threads.min(runs), move |(cfg, seed)| {
+            simulate_job(&spec, &wl, &cfg, seed).runtime_s
+        });
+        Ok(runtimes
+            .chunks(repeats)
+            .map(|c| c.iter().sum::<f64>() / repeats as f64)
+            .collect())
+    }
+}
+
+/// Batched objective through a surrogate [`CandidateScorer`] — the whole
+/// ask-batch goes to the (possibly AOT/Pallas-compiled) model in one
+/// call. Used for model-driven search and the batch benches.
+pub struct ScorerObjective<S: CandidateScorer> {
+    pub scorer: S,
+}
+
+impl<S: CandidateScorer> ScorerObjective<S> {
+    pub fn new(scorer: S) -> ScorerObjective<S> {
+        ScorerObjective { scorer }
+    }
+}
+
+impl<S: CandidateScorer> BatchObjective for ScorerObjective<S> {
+    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        let scores = self.scorer.score(cfgs)?;
+        if scores.len() != cfgs.len() {
+            return Err(format!(
+                "scorer {} returned {} scores for {} configs",
+                self.scorer.name(),
+                scores.len(),
+                cfgs.len()
+            ));
+        }
+        Ok(scores)
+    }
+}
+
+/// Per-evaluation hook (history streaming, dashboards, metrics).
+pub trait Observer {
+    fn on_eval(&mut self, rec: &EvalRecord);
+}
+
+impl<F: FnMut(&EvalRecord)> Observer for F {
+    fn on_eval(&mut self, rec: &EvalRecord) {
+        self(rec)
+    }
+}
+
+/// Convergence check: stop after `patience` consecutive evaluations in
+/// which the best value failed to improve by at least `min_rel`
+/// (relative).
+#[derive(Clone, Copy, Debug)]
+pub struct EarlyStop {
+    pub patience: usize,
+    pub min_rel: f64,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize) -> EarlyStop {
+        EarlyStop {
+            patience,
+            min_rel: 1e-3,
+        }
+    }
+}
+
+/// The shared tuning loop: owns the budget, evaluates ask-batches through
+/// a [`BatchObjective`], records every evaluation, fires observers, and
+/// tells results back to the optimizer.
+pub struct Driver<'a> {
+    pub budget: usize,
+    pub early_stop: Option<EarlyStop>,
+    observers: Vec<Box<dyn Observer + 'a>>,
+}
+
+impl<'a> Driver<'a> {
+    pub fn new(budget: usize) -> Driver<'a> {
+        Driver {
+            budget,
+            early_stop: None,
+            observers: Vec::new(),
+        }
+    }
+
+    pub fn early_stop(mut self, es: EarlyStop) -> Driver<'a> {
+        self.early_stop = if es.patience > 0 { Some(es) } else { None };
+        self
+    }
+
+    pub fn observe(mut self, ob: impl Observer + 'a) -> Driver<'a> {
+        self.observers.push(Box::new(ob));
+        self
+    }
+
+    /// Run a fresh tuning loop to budget exhaustion, optimizer
+    /// convergence (empty ask), or early stop.
+    pub fn run<O, B>(
+        &mut self,
+        opt: &mut O,
+        space: &ParamSpace,
+        obj: &mut B,
+    ) -> Result<TuningOutcome, String>
+    where
+        O: Optimizer + ?Sized,
+        B: BatchObjective + ?Sized,
+    {
+        self.run_with_history(opt, space, obj, &[])
+    }
+
+    /// Resume from a checkpoint: `prior` evaluations are replayed —
+    /// recorded into the outcome, counted against the (total) budget and
+    /// told to the fresh optimizer — then the loop continues normally.
+    /// No objective calls are spent on replayed evaluations.
+    pub fn run_with_history<O, B>(
+        &mut self,
+        opt: &mut O,
+        space: &ParamSpace,
+        obj: &mut B,
+        prior: &[EvalRecord],
+    ) -> Result<TuningOutcome, String>
+    where
+        O: Optimizer + ?Sized,
+        B: BatchObjective + ?Sized,
+    {
+        let mut rec = Recorder::new();
+        let mut stall = 0usize;
+        let mut best = f64::INFINITY;
+
+        if !prior.is_empty() {
+            let mut replayed = Vec::with_capacity(prior.len());
+            for p in prior.iter().take(self.budget) {
+                rec.record(p.unit_x.clone(), p.config.clone(), p.value);
+                let r = rec.last().expect("just recorded").clone();
+                best = best.min(r.value);
+                replayed.push(r);
+            }
+            opt.tell(&replayed);
+        }
+
+        // With early stopping armed, a full-budget ask-batch is EVALUATED
+        // in patience-sized chunks so the check can fire between chunks.
+        // The optimizer still sees the true remaining budget in `ask`
+        // (bobyqa's one-shot init design and latin's stratification need
+        // it); candidates past a triggered stop are simply never
+        // evaluated — and never told.
+        let chunk_size = self
+            .early_stop
+            .map(|es| es.patience.max(1))
+            .unwrap_or(usize::MAX);
+
+        'drive: while rec.evals() < self.budget {
+            let left = self.budget - rec.evals();
+            let mut batch = opt.ask(space, left);
+            if batch.is_empty() {
+                break; // converged / proposals exhausted
+            }
+            // Budget accounting: an over-sized ask-batch is truncated,
+            // never overspent. Everything evaluated below is also told.
+            batch.truncate(left);
+            let mut start = 0;
+            while start < batch.len() {
+                let end = start.saturating_add(chunk_size).min(batch.len());
+                let cands = &batch[start..end];
+                let cfgs: Vec<HadoopConfig> =
+                    cands.iter().map(|c| space.decode(&c.unit_x)).collect();
+                let vals = obj.eval_batch(&cfgs)?;
+                if vals.len() != cfgs.len() {
+                    return Err(format!(
+                        "objective returned {} values for a batch of {}",
+                        vals.len(),
+                        cfgs.len()
+                    ));
+                }
+                let mut told = Vec::with_capacity(vals.len());
+                for ((cand, cfg), v) in cands.iter().zip(cfgs).zip(vals) {
+                    rec.record(cand.unit_x.clone(), cfg, v);
+                    let r = rec.last().expect("just recorded").clone();
+                    for ob in &mut self.observers {
+                        ob.on_eval(&r);
+                    }
+                    if let Some(es) = self.early_stop {
+                        if r.value < best * (1.0 - es.min_rel) {
+                            stall = 0;
+                        } else {
+                            stall += 1;
+                        }
+                    }
+                    best = best.min(r.value);
+                    told.push(r);
+                }
+                // tell covers every evaluated candidate, even when the
+                // loop is about to stop
+                opt.tell(&told);
+                if let Some(es) = self.early_stop {
+                    if stall >= es.patience {
+                        break 'drive;
+                    }
+                }
+                start = end;
+            }
+        }
+
+        if rec.evals() == 0 {
+            return Err(format!(
+                "optimizer {} produced no evaluations (budget {})",
+                opt.name(),
+                self.budget
+            ));
+        }
+        Ok(rec.finish(opt.name()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::TuningSpec;
+    use crate::hadoop::ClusterSpec;
+    use crate::optim::Method;
+    use crate::workloads::wordcount;
+
+    fn space() -> ParamSpace {
+        ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default())
+    }
+
+    /// A pathological optimizer that always over-asks its budget.
+    struct OverAsker {
+        asked: usize,
+        told: usize,
+        best: BestSeen,
+    }
+
+    impl Optimizer for OverAsker {
+        fn name(&self) -> &str {
+            "over-asker"
+        }
+        fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
+            let d = space.dims();
+            let n = budget_left * 2 + 3; // deliberately over budget
+            self.asked += n;
+            (0..n)
+                .map(|i| Candidate::new(vec![(i % 10) as f64 / 10.0; d]))
+                .collect()
+        }
+        fn tell(&mut self, evals: &[EvalRecord]) {
+            self.told += evals.len();
+            self.best.update(evals);
+        }
+        fn best(&self) -> Option<(Vec<f64>, f64)> {
+            self.best.get()
+        }
+    }
+
+    #[test]
+    fn oversized_ask_batch_is_truncated_never_overspent() {
+        let sp = space();
+        let mut opt = OverAsker {
+            asked: 0,
+            told: 0,
+            best: BestSeen::default(),
+        };
+        let mut obj = FnObjective(|c: &HadoopConfig| c.values.iter().sum::<f64>());
+        let out = Driver::new(17).run(&mut opt, &sp, &mut obj).unwrap();
+        assert_eq!(out.evals(), 17, "budget overspent or undershot");
+        // tell was called for every evaluated candidate, and only those
+        assert_eq!(opt.told, 17);
+        assert!(opt.asked > 17);
+        assert!(opt.best().is_some());
+    }
+
+    #[test]
+    fn zero_budget_is_an_error_not_a_panic() {
+        let sp = space();
+        let mut opt = Method::Random { seed: 1 }.build();
+        let mut obj = FnObjective(|_: &HadoopConfig| 1.0);
+        assert!(Driver::new(0).run(opt.as_mut(), &sp, &mut obj).is_err());
+    }
+
+    #[test]
+    fn early_stop_halts_on_flat_objective() {
+        let sp = space();
+        let mut opt = Method::Random { seed: 3 }.build();
+        let mut obj = FnObjective(|_: &HadoopConfig| 42.0);
+        let out = Driver::new(500)
+            .early_stop(EarlyStop::new(10))
+            .run(opt.as_mut(), &sp, &mut obj)
+            .unwrap();
+        assert!(
+            out.evals() < 500,
+            "early stop never fired: {} evals",
+            out.evals()
+        );
+    }
+
+    #[test]
+    fn cluster_objective_batched_matches_serial_bitwise() {
+        let wl = wordcount(2048.0);
+        let sp = space();
+        let xs: Vec<Vec<f64>> = (0..12)
+            .map(|i| vec![i as f64 / 12.0; sp.dims()])
+            .collect();
+        let cfgs: Vec<HadoopConfig> = xs.iter().map(|x| sp.decode(x)).collect();
+
+        let mut c1 = SimCluster::new(ClusterSpec::default());
+        let serial = ClusterObjective::new(&mut c1, &wl, 2)
+            .serial()
+            .eval_batch(&cfgs)
+            .unwrap();
+        let mut c2 = SimCluster::new(ClusterSpec::default());
+        let parallel = ClusterObjective::new(&mut c2, &wl, 2)
+            .with_threads(8)
+            .eval_batch(&cfgs)
+            .unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.to_bits(), b.to_bits(), "batched eval not deterministic");
+        }
+    }
+
+    #[test]
+    fn cluster_objective_advances_cluster_seed_like_serial_submission() {
+        let wl = wordcount(1024.0);
+        let sp = space();
+        let cfgs: Vec<HadoopConfig> = (0..5).map(|_| sp.decode(&vec![0.5; sp.dims()])).collect();
+
+        // batch-eval then single job
+        let mut c1 = SimCluster::new(ClusterSpec::default());
+        ClusterObjective::new(&mut c1, &wl, 1).eval_batch(&cfgs).unwrap();
+        let a = ClusterObjective::new(&mut c1, &wl, 1)
+            .eval_batch(&cfgs[..1])
+            .unwrap()[0];
+
+        // five serial jobs then the same single job
+        let mut c2 = SimCluster::new(ClusterSpec::default());
+        for cfg in &cfgs {
+            ClusterObjective::new(&mut c2, &wl, 1)
+                .eval_batch(std::slice::from_ref(cfg))
+                .unwrap();
+        }
+        let b = ClusterObjective::new(&mut c2, &wl, 1)
+            .eval_batch(&cfgs[..1])
+            .unwrap()[0];
+        assert_eq!(a.to_bits(), b.to_bits(), "seed reservation out of sync");
+    }
+
+    #[test]
+    fn observers_see_every_eval_in_order() {
+        let sp = space();
+        let mut opt = Method::Latin { seed: 5 }.build();
+        let mut seen: Vec<usize> = Vec::new();
+        let mut obj = FnObjective(|c: &HadoopConfig| c.values.iter().sum::<f64>());
+        let out = Driver::new(20)
+            .observe(|r: &EvalRecord| seen.push(r.iter))
+            .run(opt.as_mut(), &sp, &mut obj)
+            .unwrap();
+        assert_eq!(seen, (1..=out.evals()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn replayed_history_counts_against_budget_and_is_not_reevaluated() {
+        let sp = space();
+        let calls = std::cell::Cell::new(0usize);
+        let prior: Vec<EvalRecord> = (0..6)
+            .map(|i| {
+                let x = vec![i as f64 / 6.0; sp.dims()];
+                EvalRecord {
+                    iter: i + 1,
+                    config: sp.decode(&x),
+                    unit_x: x,
+                    value: 100.0 - i as f64,
+                    best_so_far: 0.0, // recomputed on replay
+                }
+            })
+            .collect();
+        let mut opt = Method::Random { seed: 9 }.build();
+        let mut obj = FnObjective(|_: &HadoopConfig| {
+            calls.set(calls.get() + 1);
+            1.0
+        });
+        let out = Driver::new(10)
+            .run_with_history(opt.as_mut(), &sp, &mut obj, &prior)
+            .unwrap();
+        assert_eq!(out.evals(), 10);
+        assert_eq!(calls.get(), 4, "prior evaluations were re-run");
+        // best_so_far monotone across the replay/live boundary
+        let mut prev = f64::INFINITY;
+        for r in &out.records {
+            assert!(r.best_so_far <= prev + 1e-12);
+            prev = r.best_so_far;
+        }
+    }
+}

@@ -1,71 +1,150 @@
 //! Exhaustive (direct) search over the spec's parameter grid — the
 //! paper's "direct search" family: "the system tries all combinations of
 //! parameter values" (§II.C.2). Also the generator of Fig. 2 surfaces.
+//!
+//! Ask/tell port: the whole remaining grid is proposed as ONE batch (the
+//! driver truncates it to the budget), so a batched objective can score
+//! the sweep in a single call. Points told before the first ask (resume
+//! replay) are skipped — that is how an interrupted sweep continues.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use std::collections::BTreeSet;
+
+use crate::config::params::HadoopConfig;
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
 
 #[derive(Clone, Debug, Default)]
-pub struct GridSearch;
+pub struct GridSearch {
+    points: Option<Vec<Vec<f64>>>,
+    cursor: usize,
+    /// Decoded-config keys already evaluated (tell / resume replay).
+    done: BTreeSet<String>,
+    best: BestSeen,
+}
+
+fn config_key(cfg: &HadoopConfig) -> String {
+    format!("{:?}", cfg.values)
+}
 
 impl GridSearch {
-    /// Evaluate every grid point (the budget caps runaway grids).
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
-        let mut rec = Recorder::new();
-        for x in space.unit_grid() {
-            if rec.evals() >= max_evals {
-                break;
+    pub fn new() -> GridSearch {
+        GridSearch::default()
+    }
+}
+
+impl Optimizer for GridSearch {
+    fn name(&self) -> &str {
+        "grid"
+    }
+
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
+        let points = self
+            .points
+            .get_or_insert_with(|| space.unit_grid());
+        let mut batch = Vec::new();
+        while self.cursor < points.len() && batch.len() < budget_left {
+            let x = points[self.cursor].clone();
+            self.cursor += 1;
+            if self.done.contains(&config_key(&space.decode(&x))) {
+                continue; // evaluated before the interruption
             }
-            let cfg = space.decode(&x);
-            let v = obj(&cfg);
-            rec.record(x, cfg, v);
+            batch.push(Candidate::new(x));
         }
-        rec.finish("grid")
+        batch
+    }
+
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        for r in evals {
+            self.done.insert(config_key(&r.config));
+        }
+        self.best.update(evals);
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::params::{HadoopConfig, P_IO_SORT_MB, P_REDUCES};
+    use crate::config::params::{P_IO_SORT_MB, P_REDUCES};
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
+
+    fn space() -> ParamSpace {
+        ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default())
+    }
 
     #[test]
     fn visits_every_grid_point_once() {
-        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let space = space();
         let mut seen = std::collections::BTreeSet::new();
-        let mut obj = |c: &HadoopConfig| {
+        let mut obj = FnObjective(|c: &HadoopConfig| {
             seen.insert((c.get(P_REDUCES) as i64, c.get(P_IO_SORT_MB) as i64));
             1.0
-        };
-        let out = GridSearch.run(&space, &mut obj, usize::MAX);
+        });
+        let out = Driver::new(usize::MAX)
+            .run(&mut GridSearch::new(), &space, &mut obj)
+            .unwrap();
+        drop(obj);
         assert_eq!(out.evals(), 256);
         assert_eq!(seen.len(), 256, "grid points not distinct");
     }
 
     #[test]
     fn finds_grid_optimum() {
-        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let space = space();
         // minimum at reduces=32, sort.mb=800 (paper's Fig.2 trend corner)
-        let mut obj = |c: &HadoopConfig| {
+        let mut obj = FnObjective(|c: &HadoopConfig| {
             (32.0 - c.get(P_REDUCES)) + (800.0 - c.get(P_IO_SORT_MB)) / 100.0
-        };
-        let out = GridSearch.run(&space, &mut obj, usize::MAX);
+        });
+        let out = Driver::new(usize::MAX)
+            .run(&mut GridSearch::new(), &space, &mut obj)
+            .unwrap();
         assert_eq!(out.best_config.get(P_REDUCES), 32.0);
         assert_eq!(out.best_config.get(P_IO_SORT_MB), 800.0);
     }
 
     #[test]
     fn respects_budget() {
-        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
-        let mut obj = |_: &HadoopConfig| 1.0;
-        let out = GridSearch.run(&space, &mut obj, 10);
+        let space = space();
+        let mut obj = FnObjective(|_: &HadoopConfig| 1.0);
+        let out = Driver::new(10)
+            .run(&mut GridSearch::new(), &space, &mut obj)
+            .unwrap();
         assert_eq!(out.evals(), 10);
+    }
+
+    #[test]
+    fn asks_the_whole_remaining_grid_in_one_batch() {
+        let space = space();
+        let mut g = GridSearch::new();
+        let batch = g.ask(&space, usize::MAX);
+        assert_eq!(batch.len(), 256);
+        assert!(g.ask(&space, usize::MAX).is_empty(), "grid re-proposed points");
+    }
+
+    #[test]
+    fn told_points_are_skipped_on_resume() {
+        let space = space();
+        let grid = space.unit_grid();
+        // replay the first 10 points as prior history
+        let prior: Vec<EvalRecord> = grid[..10]
+            .iter()
+            .enumerate()
+            .map(|(i, x)| EvalRecord {
+                iter: i + 1,
+                config: space.decode(x),
+                unit_x: x.clone(),
+                value: 1.0,
+                best_so_far: 1.0,
+            })
+            .collect();
+        let mut g = GridSearch::new();
+        g.tell(&prior);
+        let batch = g.ask(&space, usize::MAX);
+        assert_eq!(batch.len(), 246, "prior points not skipped");
     }
 }

@@ -1,14 +1,22 @@
 //! Hooke–Jeeves pattern search: exploratory coordinate probes followed by
 //! an aggressive pattern (momentum) move through the improving direction.
+//!
+//! Ask/tell port: a singleton-ask state machine with three phases —
+//! exploratory sweep around the base, pattern-point evaluation,
+//! exploratory sweep around the pattern point — matching the old
+//! monolithic loop move for move.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
+use crate::optim::sweep::Sweep;
 
 #[derive(Clone, Debug)]
 pub struct HookeJeeves {
     pub init_step: f64,
     pub start: Option<Vec<f64>>,
+    st: Option<State>,
+    best: BestSeen,
 }
 
 impl Default for HookeJeeves {
@@ -16,92 +24,135 @@ impl Default for HookeJeeves {
         Self {
             init_step: 0.25,
             start: None,
+            st: None,
+            best: BestSeen::default(),
         }
     }
 }
 
 impl HookeJeeves {
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
+    pub fn with_start(mut self, start: Vec<f64>) -> Self {
+        self.start = Some(start);
+        self
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Phase {
+    AwaitInit,
+    ExploreBase(Sweep),
+    AwaitPattern(Vec<f64>),
+    ExplorePattern(Sweep),
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct State {
+    base: Vec<f64>,
+    f_base: f64,
+    step: f64,
+    stop_step: f64,
+    phase: Phase,
+}
+
+impl Optimizer for HookeJeeves {
+    fn name(&self) -> &str {
+        "hooke-jeeves"
+    }
+
+    fn ask(&mut self, space: &ParamSpace, _budget_left: usize) -> Vec<Candidate> {
         let d = space.dims();
-        let mut rec = Recorder::new();
-        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
-            let cfg = space.decode(x);
-            let v = obj(&cfg);
-            rec.record(x.to_vec(), cfg, v);
-            v
-        };
-
-        let mut base = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
-        let mut f_base = eval(&mut rec, &base);
-        let mut step = self.init_step;
-        let stop_step = space.min_steps().iter().cloned().fold(f64::MAX, f64::min) * 0.5;
-
-        // exploratory move around `from`, returns improved point + value
-        let explore = |rec: &mut Recorder,
-                       eval: &mut dyn FnMut(&mut Recorder, &[f64]) -> f64,
-                       from: &[f64],
-                       f_from: f64,
-                       step: f64,
-                       max_evals: usize|
-         -> (Vec<f64>, f64) {
-            let mut x = from.to_vec();
-            let mut fx = f_from;
-            for i in 0..x.len() {
-                if rec.evals() >= max_evals {
-                    break;
-                }
-                for dir in [1.0, -1.0] {
-                    let cand = (x[i] + dir * step).clamp(0.0, 1.0);
-                    if (cand - x[i]).abs() < 1e-12 {
-                        continue;
-                    }
-                    let mut xc = x.clone();
-                    xc[i] = cand;
-                    let v = eval(rec, &xc);
-                    if v < fx {
-                        x = xc;
-                        fx = v;
-                        break;
-                    }
-                    if rec.evals() >= max_evals {
-                        break;
-                    }
-                }
+        let st = match &mut self.st {
+            None => {
+                let base = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
+                let stop_step =
+                    space.min_steps().iter().cloned().fold(f64::MAX, f64::min) * 0.5;
+                self.st = Some(State {
+                    base: base.clone(),
+                    f_base: f64::INFINITY,
+                    step: self.init_step,
+                    stop_step,
+                    phase: Phase::AwaitInit,
+                });
+                return vec![Candidate::new(base)];
             }
-            (x, fx)
+            Some(st) => st,
         };
-
-        while rec.evals() < max_evals && step > stop_step {
-            let (xe, fe) = explore(&mut rec, &mut eval, &base, f_base, step, max_evals);
-            if fe < f_base {
-                // pattern move: jump to 2*xe - base, then explore there
-                let pattern: Vec<f64> = xe
-                    .iter()
-                    .zip(&base)
-                    .map(|(a, b)| (2.0 * a - b).clamp(0.0, 1.0))
-                    .collect();
-                base = xe;
-                f_base = fe;
-                if rec.evals() >= max_evals {
-                    break;
+        loop {
+            match &mut st.phase {
+                Phase::AwaitInit | Phase::AwaitPattern(_) => return Vec::new(), // tell pending
+                Phase::Done => return Vec::new(),
+                Phase::ExploreBase(ex) => {
+                    if let Some(p) = ex.next_probe(st.step) {
+                        return vec![Candidate::new(p)];
+                    }
+                    // sweep exhausted: pattern move or step halving
+                    let (xe, fe) = (ex.x.clone(), ex.fx);
+                    if fe < st.f_base {
+                        let pattern: Vec<f64> = xe
+                            .iter()
+                            .zip(&st.base)
+                            .map(|(a, b)| (2.0 * a - b).clamp(0.0, 1.0))
+                            .collect();
+                        st.base = xe;
+                        st.f_base = fe;
+                        st.phase = Phase::AwaitPattern(pattern.clone());
+                        return vec![Candidate::new(pattern)];
+                    }
+                    st.step *= 0.5;
+                    if st.step <= st.stop_step {
+                        st.phase = Phase::Done;
+                        return Vec::new();
+                    }
+                    st.phase =
+                        Phase::ExploreBase(Sweep::new(st.base.clone(), st.f_base));
                 }
-                let fp = eval(&mut rec, &pattern);
-                let (xp, fpe) =
-                    explore(&mut rec, &mut eval, &pattern, fp, step, max_evals);
-                if fpe < f_base {
-                    base = xp;
-                    f_base = fpe;
+                Phase::ExplorePattern(ex) => {
+                    if let Some(p) = ex.next_probe(st.step) {
+                        return vec![Candidate::new(p)];
+                    }
+                    if ex.fx < st.f_base {
+                        st.base = ex.x.clone();
+                        st.f_base = ex.fx;
+                    }
+                    st.phase =
+                        Phase::ExploreBase(Sweep::new(st.base.clone(), st.f_base));
                 }
-            } else {
-                step *= 0.5;
             }
         }
-        rec.finish("hooke-jeeves")
+    }
+
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+        let st = match &mut self.st {
+            // told before the first ask (resume replay): seed the start
+            None => {
+                if let Some((x, _)) = self.best.get() {
+                    self.start = Some(x);
+                }
+                return;
+            }
+            Some(st) => st,
+        };
+        for r in evals {
+            match &mut st.phase {
+                Phase::AwaitInit => {
+                    st.f_base = r.value;
+                    st.phase =
+                        Phase::ExploreBase(Sweep::new(st.base.clone(), st.f_base));
+                }
+                Phase::AwaitPattern(p) => {
+                    let p = p.clone();
+                    st.phase = Phase::ExplorePattern(Sweep::new(p, r.value));
+                }
+                Phase::ExploreBase(ex) | Phase::ExplorePattern(ex) => ex.absorb(r.value),
+                Phase::Done => {}
+            }
+        }
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -110,19 +161,22 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
 
     #[test]
     fn converges_on_shifted_bowl() {
         let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c)
                 .iter()
                 .enumerate()
                 .map(|(i, u)| (u - 0.2 - 0.15 * i as f64).powi(2))
                 .sum()
-        };
-        let out = HookeJeeves::default().run(&space, &mut obj, 300);
+        });
+        let out = Driver::new(300)
+            .run(&mut HookeJeeves::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.best_value < 0.01, "HJ stuck at {}", out.best_value);
     }
 
@@ -130,8 +184,12 @@ mod tests {
     fn beats_or_matches_its_start() {
         let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| sp.encode(c).iter().map(|u| (u - 0.9).powi(2)).sum();
-        let out = HookeJeeves::default().run(&space, &mut obj, 150);
+        let mut obj = FnObjective(move |c: &HadoopConfig| {
+            sp.encode(c).iter().map(|u| (u - 0.9).powi(2)).sum()
+        });
+        let out = Driver::new(150)
+            .run(&mut HookeJeeves::default(), &space, &mut obj)
+            .unwrap();
         let first = out.records.first().unwrap().value;
         assert!(out.best_value <= first);
     }
@@ -139,8 +197,34 @@ mod tests {
     #[test]
     fn budget_respected() {
         let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
-        let mut obj = |_: &HadoopConfig| 1.0; // flat: worst case exploration
-        let out = HookeJeeves::default().run(&space, &mut obj, 23);
+        let mut obj = FnObjective(|_: &HadoopConfig| 1.0); // flat: worst case
+        let out = Driver::new(23)
+            .run(&mut HookeJeeves::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.evals() <= 23);
+    }
+
+    #[test]
+    fn asks_singletons_until_convergence() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let mut hj = HookeJeeves::default();
+        let mut n = 0usize;
+        loop {
+            let batch = hj.ask(&space, 1000);
+            if batch.is_empty() {
+                break;
+            }
+            assert_eq!(batch.len(), 1);
+            hj.tell(&[EvalRecord {
+                iter: n + 1,
+                config: space.decode(&batch[0].unit_x),
+                unit_x: batch[0].unit_x.clone(),
+                value: 1.0, // flat objective: HJ must converge by halving
+                best_so_far: 1.0,
+            }]);
+            n += 1;
+            assert!(n < 10_000, "HJ never converged on a flat objective");
+        }
+        assert!(n > 0);
     }
 }

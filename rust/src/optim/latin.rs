@@ -1,55 +1,84 @@
 //! Latin hypercube sampling (LHS) — space-filling one-shot design, the
 //! standard initialization for surrogate-based tuners and a stronger
 //! budget-for-budget baseline than uniform random search.
+//!
+//! Ask/tell port: a one-shot design *is* one ask-batch — the first ask
+//! stratifies the remaining budget, later asks return nothing.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct LatinHypercube {
     pub seed: u64,
+    /// Ask round: 0 is the canonical design; later rounds (only reached
+    /// if a driver asks again after an incomplete evaluation) re-stratify
+    /// the remaining budget under a derived seed.
+    round: u64,
+    best: BestSeen,
 }
 
 impl LatinHypercube {
-    pub fn new(seed: u64) -> Self {
-        Self { seed }
+    pub fn new(seed: u64) -> LatinHypercube {
+        LatinHypercube {
+            seed,
+            round: 0,
+            best: BestSeen::default(),
+        }
     }
 
     /// Generate `n` LHS points in the unit cube of dimension `d`: each
     /// dimension is split into n strata, each stratum hit exactly once.
     pub fn points(&self, n: usize, d: usize) -> Vec<Vec<f64>> {
-        let mut rng = Rng::new(self.seed);
-        // per-dimension stratum permutations
-        let mut perms: Vec<Vec<usize>> = Vec::with_capacity(d);
-        for _ in 0..d {
-            let mut p: Vec<usize> = (0..n).collect();
-            rng.shuffle(&mut p);
-            perms.push(p);
+        points_seeded(self.seed, n, d)
+    }
+}
+
+fn points_seeded(seed: u64, n: usize, d: usize) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    // per-dimension stratum permutations
+    let mut perms: Vec<Vec<usize>> = Vec::with_capacity(d);
+    for _ in 0..d {
+        let mut p: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut p);
+        perms.push(p);
+    }
+    (0..n)
+        .map(|i| {
+            (0..d)
+                .map(|j| (perms[j][i] as f64 + rng.f64()) / n as f64)
+                .collect()
+        })
+        .collect()
+}
+
+impl Optimizer for LatinHypercube {
+    fn name(&self) -> &str {
+        "latin-hypercube"
+    }
+
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
+        if budget_left == 0 {
+            return Vec::new();
         }
-        (0..n)
-            .map(|i| {
-                (0..d)
-                    .map(|j| (perms[j][i] as f64 + rng.f64()) / n as f64)
-                    .collect()
-            })
+        let seed = self
+            .seed
+            .wrapping_add(self.round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.round += 1;
+        points_seeded(seed, budget_left, space.dims())
+            .into_iter()
+            .map(Candidate::new)
             .collect()
     }
 
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
-        let mut rec = Recorder::new();
-        for x in self.points(max_evals, space.dims()) {
-            let cfg = space.decode(&x);
-            let v = obj(&cfg);
-            rec.record(x, cfg, v);
-        }
-        rec.finish("latin-hypercube")
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -58,6 +87,7 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
 
     #[test]
     fn stratification_holds_per_dimension() {
@@ -107,11 +137,22 @@ mod tests {
     }
 
     #[test]
-    fn run_uses_exact_budget() {
+    fn run_uses_exact_budget_in_one_batch() {
         let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| sp.encode(c).iter().sum::<f64>();
-        let out = LatinHypercube::new(1).run(&space, &mut obj, 25);
+        let mut obj =
+            FnObjective(move |c: &HadoopConfig| sp.encode(c).iter().sum::<f64>());
+        let out = Driver::new(25)
+            .run(&mut LatinHypercube::new(1), &space, &mut obj)
+            .unwrap();
         assert_eq!(out.evals(), 25);
+        // round 0 is the canonical design; a follow-up ask (chunked
+        // early-stop runs) re-stratifies under a derived seed
+        let mut l = LatinHypercube::new(1);
+        let first = l.ask(&space, 25);
+        let second = l.ask(&space, 25);
+        assert_eq!(first.len(), 25);
+        assert_eq!(second.len(), 25);
+        assert_ne!(first[0].unit_x, second[0].unit_x);
     }
 }

@@ -1,20 +1,46 @@
-//! Search methods for the Optimizer Runner.
+//! Search methods for the Optimizer Runner, unified behind the batched
+//! **ask/tell** protocol in [`core`].
 //!
 //! Two families, exactly as the paper structures them (§II.C):
 //! * **direct search** — [`grid::GridSearch`] (exhaustive),
 //!   [`coordinate::CoordinateSearch`], [`hooke_jeeves::HookeJeeves`];
 //! * **DFO** — [`bobyqa::Bobyqa`] (trust-region quadratic interpolation),
-//!   [`nelder_mead::NelderMead`]; plus [`random::RandomSearch`] as the
-//!   no-structure baseline and [`surrogate::Prescreen`] for model-assisted
-//!   seeding through the AOT artifacts.
+//!   [`nelder_mead::NelderMead`]; plus [`random::RandomSearch`] and
+//!   [`latin::LatinHypercube`] as no-structure baselines,
+//!   [`annealing::SimulatedAnnealing`] for basin escape, and
+//!   [`surrogate::Prescreen`] for model-assisted seeding through the AOT
+//!   artifacts.
 //!
-//! All optimizers work on the unit cube via [`space::ParamSpace`] and an
-//! opaque objective `FnMut(&HadoopConfig) -> f64` (seconds of job running
-//! time — possibly noisy).
+//! Every method implements [`core::Optimizer`]: `ask` proposes a batch of
+//! unit-cube candidates ([`space::ParamSpace`] owns the decoding to valid
+//! `HadoopConfig`s), `tell` feeds measured runtimes back. Population
+//! methods (grid, random, latin) ask in large batches that a
+//! [`core::BatchObjective`] — the parallel [`core::ClusterObjective`] or
+//! the AOT/Pallas batch scorer — evaluates in one call; sequential
+//! methods (bobyqa, hooke-jeeves, nelder-mead, coordinate, annealing)
+//! ask singletons and behave exactly like their pre-port loops.
+//!
+//! Nobody calls a method's loop directly any more: the shared
+//! [`core::Driver`] owns the evaluation budget, early stopping, observer
+//! hooks and checkpoint replay. [`Method`] is the thin name→`Box<dyn
+//! Optimizer>` registry the CLI and the Catla runners dispatch through:
+//!
+//! ```
+//! use catla::config::params::HadoopConfig;
+//! use catla::config::spec::TuningSpec;
+//! use catla::optim::{Driver, FnObjective, Method, ParamSpace};
+//!
+//! let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+//! let mut opt = Method::from_name("bobyqa", 7).unwrap().build();
+//! let mut obj = FnObjective(|cfg: &HadoopConfig| cfg.values.iter().sum::<f64>());
+//! let outcome = Driver::new(40).run(opt.as_mut(), &space, &mut obj).unwrap();
+//! assert!(outcome.evals() <= 40);
+//! ```
 
 pub mod annealing;
 pub mod bobyqa;
 pub mod coordinate;
+pub mod core;
 pub mod grid;
 pub mod hooke_jeeves;
 pub mod latin;
@@ -23,10 +49,15 @@ pub mod random;
 pub mod result;
 pub mod space;
 pub mod surrogate;
+mod sweep;
 
 pub use annealing::SimulatedAnnealing;
 pub use bobyqa::Bobyqa;
 pub use coordinate::CoordinateSearch;
+pub use self::core::{
+    BatchObjective, Candidate, ClusterObjective, Driver, EarlyStop, FnObjective, Observer,
+    Optimizer, ScorerObjective,
+};
 pub use grid::GridSearch;
 pub use hooke_jeeves::HookeJeeves;
 pub use latin::LatinHypercube;
@@ -35,16 +66,9 @@ pub use random::RandomSearch;
 pub use result::{EvalRecord, TuningOutcome};
 pub use space::ParamSpace;
 
-use crate::config::params::HadoopConfig;
-use crate::hadoop::{JobSubmission, SimCluster};
-use crate::workloads::WorkloadSpec;
-
-/// The black-box objective: a Hadoop configuration's measured job
-/// running time in seconds.
-pub type ObjectiveFn<'a> = dyn FnMut(&HadoopConfig) -> f64 + 'a;
-
 /// Every optimizer, behind one dispatchable handle (CLI / Optimizer
-/// Runner entry point).
+/// Runner entry point). A thin factory: [`Method::build`] returns the
+/// ask/tell implementation to hand to a [`Driver`].
 #[derive(Clone, Debug)]
 pub enum Method {
     Grid,
@@ -58,8 +82,8 @@ pub enum Method {
 }
 
 impl Method {
-    /// Parse a CLI name: grid | random | coordinate | hooke-jeeves |
-    /// nelder-mead | bobyqa.
+    /// Parse a CLI name: grid | random | latin | coordinate | hooke-jeeves |
+    /// nelder-mead | annealing | bobyqa.
     pub fn from_name(name: &str, seed: u64) -> Result<Method, String> {
         Ok(match name {
             "grid" | "exhaustive" => Method::Grid,
@@ -96,27 +120,17 @@ impl Method {
         matches!(self, Method::Grid | Method::Coordinate | Method::HookeJeeves)
     }
 
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
+    /// Instantiate a fresh ask/tell optimizer for one tuning run.
+    pub fn build(&self) -> Box<dyn Optimizer> {
         match self {
-            Method::Grid => GridSearch.run(space, obj, max_evals),
-            Method::Random { seed } => RandomSearch::new(*seed).run(space, obj, max_evals),
-            Method::Latin { seed } => LatinHypercube::new(*seed).run(space, obj, max_evals),
-            Method::Coordinate => CoordinateSearch::default().run(space, obj, max_evals),
-            Method::HookeJeeves => HookeJeeves::default().run(space, obj, max_evals),
-            Method::NelderMead => NelderMead::default().run(space, obj, max_evals),
-            Method::Annealing { seed } => {
-                SimulatedAnnealing::new(*seed).run(space, obj, max_evals)
-            }
-            Method::Bobyqa { seed } => Bobyqa {
-                seed: *seed,
-                ..Bobyqa::default()
-            }
-            .run(space, obj, max_evals),
+            Method::Grid => Box::new(GridSearch::new()),
+            Method::Random { seed } => Box::new(RandomSearch::new(*seed)),
+            Method::Latin { seed } => Box::new(LatinHypercube::new(*seed)),
+            Method::Coordinate => Box::new(CoordinateSearch::default()),
+            Method::HookeJeeves => Box::new(HookeJeeves::default()),
+            Method::NelderMead => Box::new(NelderMead::default()),
+            Method::Annealing { seed } => Box::new(SimulatedAnnealing::new(*seed)),
+            Method::Bobyqa { seed } => Box::new(Bobyqa::new(*seed)),
         }
     }
 }
@@ -133,33 +147,12 @@ pub const ALL_METHODS: [&str; 8] = [
     "bobyqa",
 ];
 
-/// Objective closure that submits to a simulated cluster and averages
-/// `repeats` runs (repeats > 1 trades cluster time for noise reduction).
-pub fn cluster_objective<'a>(
-    cluster: &'a mut SimCluster,
-    workload: &'a WorkloadSpec,
-    repeats: usize,
-) -> impl FnMut(&HadoopConfig) -> f64 + 'a {
-    let repeats = repeats.max(1);
-    move |cfg: &HadoopConfig| {
-        let mut total = 0.0;
-        for _ in 0..repeats {
-            let job = JobSubmission {
-                name: format!("tune-{}", workload.name),
-                workload: workload.clone(),
-                config: cfg.clone(),
-            };
-            total += cluster.run_job(&job).runtime_s;
-        }
-        total / repeats as f64
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
-    use crate::hadoop::ClusterSpec;
+    use crate::hadoop::{ClusterSpec, SimCluster};
     use crate::workloads::wordcount;
 
     #[test]
@@ -185,9 +178,9 @@ mod tests {
         let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
         for name in ALL_METHODS {
             let mut cluster = SimCluster::new(ClusterSpec::default());
-            let mut obj = cluster_objective(&mut cluster, &wl, 1);
-            let m = Method::from_name(name, 3).unwrap();
-            let out = m.run(&space, &mut obj, 12);
+            let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+            let mut opt = Method::from_name(name, 3).unwrap().build();
+            let out = Driver::new(12).run(opt.as_mut(), &space, &mut obj).unwrap();
             assert!(out.evals() <= 12, "{name} overspent");
             assert!(out.best_value > 0.0, "{name} nonpositive runtime");
             out.best_config.validate().unwrap();
@@ -200,11 +193,27 @@ mod tests {
         let cfg = HadoopConfig::default();
         let sample_var = |repeats: usize| -> f64 {
             let mut cluster = SimCluster::new(ClusterSpec::default());
-            let mut obj = cluster_objective(&mut cluster, &wl, repeats);
-            let xs: Vec<f64> = (0..30).map(|_| obj(&cfg)).collect();
+            let mut obj = ClusterObjective::new(&mut cluster, &wl, repeats);
+            let xs: Vec<f64> = (0..30)
+                .map(|_| obj.eval_batch(std::slice::from_ref(&cfg)).unwrap()[0])
+                .collect();
             let m = xs.iter().sum::<f64>() / xs.len() as f64;
             xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
         };
         assert!(sample_var(4) < sample_var(1));
+    }
+
+    #[test]
+    fn optimizer_best_tracks_driver_best() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let sp = space.clone();
+        let mut obj = FnObjective(move |c: &HadoopConfig| {
+            sp.encode(c).iter().map(|u| (u - 0.3).powi(2)).sum()
+        });
+        let mut opt = Method::HookeJeeves.build();
+        let out = Driver::new(60).run(opt.as_mut(), &space, &mut obj).unwrap();
+        let (x, v) = opt.best().expect("optimizer tracked no best");
+        assert_eq!(v, out.best_value);
+        assert_eq!(x, out.records.iter().min_by(|a, b| a.value.total_cmp(&b.value)).unwrap().unit_x);
     }
 }

@@ -1,17 +1,25 @@
 //! Nelder–Mead simplex with box constraints (clamping to the unit cube),
 //! the classic derivative-free workhorse and a baseline for the DFO
 //! family the paper integrates.
+//!
+//! Ask/tell port: a singleton-ask state machine over the classic phases —
+//! initial simplex, reflect, expand, contract, shrink. The simplex keeps
+//! the *unclamped* vertices (as the old loop did); candidates handed to
+//! the driver are clamped to the cube, so every recorded point is
+//! feasible.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
 
 #[derive(Clone, Debug)]
 pub struct NelderMead {
     pub init_scale: f64,
     pub start: Option<Vec<f64>>,
-    /// Restart the simplex when it collapses below this diameter.
+    /// Stop when the simplex collapses below this diameter.
     pub min_diameter: f64,
+    st: Option<State>,
+    best: BestSeen,
 }
 
 impl Default for NelderMead {
@@ -20,7 +28,16 @@ impl Default for NelderMead {
             init_scale: 0.3,
             start: None,
             min_diameter: 1e-3,
+            st: None,
+            best: BestSeen::default(),
         }
+    }
+}
+
+impl NelderMead {
+    pub fn with_start(mut self, start: Vec<f64>) -> Self {
+        self.start = Some(start);
+        self
     }
 }
 
@@ -29,118 +46,246 @@ const GAMMA: f64 = 2.0; // expansion
 const RHO: f64 = 0.5; // contraction
 const SIGMA: f64 = 0.5; // shrink
 
-impl NelderMead {
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
+#[derive(Clone, Debug)]
+enum Phase {
+    /// Init vertex `k` computed, ready to be asked.
+    ProposeInit { k: usize, x: Vec<f64> },
+    /// Waiting for init vertex `k`'s value (the vertex is the pending vec).
+    AwaitInit { k: usize, x: Vec<f64> },
+    /// Ready to start an iteration: sort, converge-check, reflect.
+    IterStart,
+    AwaitReflect {
+        worst: (Vec<f64>, f64),
+        centroid: Vec<f64>,
+        reflect: Vec<f64>,
+    },
+    AwaitExpand {
+        reflect: (Vec<f64>, f64),
+        expand: Vec<f64>,
+    },
+    AwaitContract {
+        worst_f: f64,
+        reflect_f: f64,
+        contract: Vec<f64>,
+    },
+    /// Shrinking vertex `k` toward `best_x`; `pending` is the new vertex.
+    Shrink {
+        k: usize,
+        best_x: Vec<f64>,
+        pending: Option<Vec<f64>>,
+    },
+    Done,
+}
+
+#[derive(Clone, Debug)]
+struct State {
+    simplex: Vec<(Vec<f64>, f64)>,
+    phase: Phase,
+}
+
+fn clamped(x: &[f64]) -> Vec<f64> {
+    x.iter().map(|u| u.clamp(0.0, 1.0)).collect()
+}
+
+impl Optimizer for NelderMead {
+    fn name(&self) -> &str {
+        "nelder-mead"
+    }
+
+    fn ask(&mut self, space: &ParamSpace, _budget_left: usize) -> Vec<Candidate> {
         let d = space.dims();
-        let mut rec = Recorder::new();
-        let mut eval = |rec: &mut Recorder, x: &[f64]| -> f64 {
-            let x: Vec<f64> = x.iter().map(|u| u.clamp(0.0, 1.0)).collect();
-            let cfg = space.decode(&x);
-            let v = obj(&cfg);
-            rec.record(x, cfg, v);
-            v
+        let st = match &mut self.st {
+            None => {
+                let x0 = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
+                self.st = Some(State {
+                    simplex: Vec::with_capacity(d + 1),
+                    phase: Phase::AwaitInit { k: 0, x: x0.clone() },
+                });
+                return vec![Candidate::new(clamped(&x0))];
+            }
+            Some(st) => st,
         };
-
-        // initial simplex: start + scaled unit offsets
-        let x0 = self.start.clone().unwrap_or_else(|| vec![0.5; d]);
-        let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(d + 1);
-        let f0 = eval(&mut rec, &x0);
-        simplex.push((x0.clone(), f0));
-        for i in 0..d {
-            if rec.evals() >= max_evals {
-                break;
+        loop {
+            match &mut st.phase {
+                Phase::AwaitInit { .. }
+                | Phase::AwaitReflect { .. }
+                | Phase::AwaitExpand { .. }
+                | Phase::AwaitContract { .. } => return Vec::new(), // tell pending
+                Phase::Done => return Vec::new(),
+                Phase::ProposeInit { k, x } => {
+                    let (k, x) = (*k, x.clone());
+                    st.phase = Phase::AwaitInit { k, x: x.clone() };
+                    return vec![Candidate::new(clamped(&x))];
+                }
+                Phase::IterStart => {
+                    if st.simplex.len() != d + 1 {
+                        // defensive: init was interrupted
+                        st.phase = Phase::Done;
+                        return Vec::new();
+                    }
+                    st.simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
+                    let diameter = st
+                        .simplex
+                        .iter()
+                        .skip(1)
+                        .map(|(x, _)| {
+                            x.iter()
+                                .zip(&st.simplex[0].0)
+                                .map(|(a, b)| (a - b).abs())
+                                .fold(0.0, f64::max)
+                        })
+                        .fold(0.0, f64::max);
+                    if diameter < self.min_diameter {
+                        st.phase = Phase::Done;
+                        return Vec::new();
+                    }
+                    // centroid of all but the worst vertex
+                    let worst = st.simplex[d].clone();
+                    let centroid: Vec<f64> = (0..d)
+                        .map(|i| {
+                            st.simplex[..d].iter().map(|(x, _)| x[i]).sum::<f64>()
+                                / d as f64
+                        })
+                        .collect();
+                    let reflect: Vec<f64> = centroid
+                        .iter()
+                        .zip(&worst.0)
+                        .map(|(c, w)| c + ALPHA * (c - w))
+                        .collect();
+                    let probe = clamped(&reflect);
+                    st.phase = Phase::AwaitReflect {
+                        worst,
+                        centroid,
+                        reflect,
+                    };
+                    return vec![Candidate::new(probe)];
+                }
+                Phase::Shrink { k, best_x, pending } => {
+                    if *k > d {
+                        st.phase = Phase::IterStart;
+                        continue;
+                    }
+                    let xs: Vec<f64> = st.simplex[*k]
+                        .0
+                        .iter()
+                        .zip(best_x.iter())
+                        .map(|(x, b)| b + SIGMA * (x - b))
+                        .collect();
+                    *pending = Some(xs.clone());
+                    return vec![Candidate::new(clamped(&xs))];
+                }
             }
-            let mut xi = x0.clone();
-            xi[i] = (xi[i] + self.init_scale).min(1.0);
-            if (xi[i] - x0[i]).abs() < 1e-9 {
-                xi[i] = (x0[i] - self.init_scale).max(0.0);
-            }
-            let fi = eval(&mut rec, &xi);
-            simplex.push((xi, fi));
         }
+    }
 
-        while rec.evals() < max_evals && simplex.len() == d + 1 {
-            simplex.sort_by(|a, b| a.1.total_cmp(&b.1));
-            let diameter = simplex
-                .iter()
-                .skip(1)
-                .map(|(x, _)| {
-                    x.iter()
-                        .zip(&simplex[0].0)
-                        .map(|(a, b)| (a - b).abs())
-                        .fold(0.0, f64::max)
-                })
-                .fold(0.0, f64::max);
-            if diameter < self.min_diameter {
-                break;
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+        let st = match &mut self.st {
+            // told before the first ask (resume replay): seed the start
+            None => {
+                if let Some((x, _)) = self.best.get() {
+                    self.start = Some(x);
+                }
+                return;
             }
-
-            // centroid of all but worst
-            let worst = simplex[d].clone();
-            let centroid: Vec<f64> = (0..d)
-                .map(|i| simplex[..d].iter().map(|(x, _)| x[i]).sum::<f64>() / d as f64)
-                .collect();
-            let reflect: Vec<f64> = centroid
-                .iter()
-                .zip(&worst.0)
-                .map(|(c, w)| c + ALPHA * (c - w))
-                .collect();
-            let fr = eval(&mut rec, &reflect);
-
-            if fr < simplex[0].1 {
-                // try expansion
-                if rec.evals() >= max_evals {
-                    simplex[d] = (reflect, fr);
-                    break;
-                }
-                let expand: Vec<f64> = centroid
-                    .iter()
-                    .zip(&worst.0)
-                    .map(|(c, w)| c + GAMMA * ALPHA * (c - w))
-                    .collect();
-                let fe = eval(&mut rec, &expand);
-                simplex[d] = if fe < fr { (expand, fe) } else { (reflect, fr) };
-            } else if fr < simplex[d - 1].1 {
-                simplex[d] = (reflect, fr);
-            } else {
-                // contraction (outside if fr better than worst, else inside)
-                if rec.evals() >= max_evals {
-                    break;
-                }
-                let toward = if fr < worst.1 { &reflect } else { &worst.0 };
-                let contract: Vec<f64> = centroid
-                    .iter()
-                    .zip(toward)
-                    .map(|(c, t)| c + RHO * (t - c))
-                    .collect();
-                let fc = eval(&mut rec, &contract);
-                if fc < worst.1.min(fr) {
-                    simplex[d] = (contract, fc);
-                } else {
-                    // shrink toward the best
-                    let best = simplex[0].0.clone();
-                    for k in 1..=d {
-                        if rec.evals() >= max_evals {
-                            break;
+            Some(st) => st,
+        };
+        for r in evals {
+            let v = r.value;
+            match std::mem::replace(&mut st.phase, Phase::IterStart) {
+                Phase::AwaitInit { k, x } => {
+                    st.simplex.push((x.clone(), v));
+                    let dims = x.len();
+                    if k == dims {
+                        st.phase = Phase::IterStart;
+                    } else {
+                        // next offset vertex, exactly as the old init loop
+                        let x0 = &st.simplex[0].0;
+                        let mut xi = x0.clone();
+                        xi[k] = (xi[k] + self.init_scale).min(1.0);
+                        if (xi[k] - x0[k]).abs() < 1e-9 {
+                            xi[k] = (x0[k] - self.init_scale).max(0.0);
                         }
-                        let xs: Vec<f64> = simplex[k]
-                            .0
-                            .iter()
-                            .zip(&best)
-                            .map(|(x, b)| b + SIGMA * (x - b))
-                            .collect();
-                        let fs = eval(&mut rec, &xs);
-                        simplex[k] = (xs, fs);
+                        st.phase = Phase::ProposeInit { k: k + 1, x: xi };
                     }
                 }
+                Phase::ProposeInit { k, x } => {
+                    // defensive: an unsolicited tell — keep the proposal
+                    st.phase = Phase::ProposeInit { k, x };
+                }
+                Phase::AwaitReflect {
+                    worst,
+                    centroid,
+                    reflect,
+                } => {
+                    let fr = v;
+                    let dlen = st.simplex.len() - 1;
+                    if fr < st.simplex[0].1 {
+                        let expand: Vec<f64> = centroid
+                            .iter()
+                            .zip(&worst.0)
+                            .map(|(c, w)| c + GAMMA * ALPHA * (c - w))
+                            .collect();
+                        st.phase = Phase::AwaitExpand {
+                            reflect: (reflect, fr),
+                            expand,
+                        };
+                    } else if fr < st.simplex[dlen - 1].1 {
+                        st.simplex[dlen] = (reflect, fr);
+                        st.phase = Phase::IterStart;
+                    } else {
+                        // contraction (outside if fr beats the worst, else inside)
+                        let toward = if fr < worst.1 { &reflect } else { &worst.0 };
+                        let contract: Vec<f64> = centroid
+                            .iter()
+                            .zip(toward)
+                            .map(|(c, t)| c + RHO * (t - c))
+                            .collect();
+                        st.phase = Phase::AwaitContract {
+                            worst_f: worst.1,
+                            reflect_f: fr,
+                            contract,
+                        };
+                    }
+                }
+                Phase::AwaitExpand { reflect, expand } => {
+                    let dlen = st.simplex.len() - 1;
+                    st.simplex[dlen] = if v < reflect.1 { (expand, v) } else { reflect };
+                    st.phase = Phase::IterStart;
+                }
+                Phase::AwaitContract {
+                    worst_f,
+                    reflect_f,
+                    contract,
+                } => {
+                    let dlen = st.simplex.len() - 1;
+                    if v < worst_f.min(reflect_f) {
+                        st.simplex[dlen] = (contract, v);
+                        st.phase = Phase::IterStart;
+                    } else {
+                        st.phase = Phase::Shrink {
+                            k: 1,
+                            best_x: st.simplex[0].0.clone(),
+                            pending: None,
+                        };
+                    }
+                }
+                Phase::Shrink { k, best_x, pending } => {
+                    let xs = pending.expect("shrink tell without probe");
+                    st.simplex[k] = (xs, v);
+                    st.phase = Phase::Shrink {
+                        k: k + 1,
+                        best_x,
+                        pending: None,
+                    };
+                }
+                other @ (Phase::IterStart | Phase::Done) => st.phase = other,
             }
         }
-        rec.finish("nelder-mead")
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -149,6 +294,7 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
 
     fn space4() -> ParamSpace {
         ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default())
@@ -158,10 +304,12 @@ mod tests {
     fn converges_on_quadratic() {
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c).iter().map(|u| (u - 0.6).powi(2)).sum()
-        };
-        let out = NelderMead::default().run(&space, &mut obj, 250);
+        });
+        let out = Driver::new(250)
+            .run(&mut NelderMead::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.best_value < 0.02, "NM stuck at {}", out.best_value);
     }
 
@@ -170,38 +318,52 @@ mod tests {
         // a curved valley — harder than a separable bowl
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             let u = sp.encode(c);
             let mut s = 0.0;
             for i in 0..u.len() - 1 {
                 s += 10.0 * (u[i + 1] - u[i] * u[i]).powi(2) + (1.0 - u[i]).powi(2);
             }
             s
-        };
-        let out = NelderMead::default().run(&space, &mut obj, 400);
+        });
+        let out = Driver::new(400)
+            .run(&mut NelderMead::default(), &space, &mut obj)
+            .unwrap();
         // integer rounding limits precision; just demand real progress
         let first = out.records[0].value;
-        assert!(out.best_value < first * 0.25, "NM {} vs start {first}", out.best_value);
+        assert!(
+            out.best_value < first * 0.25,
+            "NM {} vs start {first}",
+            out.best_value
+        );
     }
 
     #[test]
     fn all_proposals_in_cube() {
         let space = space4();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c).iter().map(|u| (u - 1.2).powi(2)).sum() // optimum outside
-        };
-        let out = NelderMead::default().run(&space, &mut obj, 120);
+        });
+        let out = Driver::new(120)
+            .run(&mut NelderMead::default(), &space, &mut obj)
+            .unwrap();
         for r in &out.records {
-            assert!(r.unit_x.iter().all(|&u| (0.0..=1.0).contains(&u)), "{:?}", r.unit_x);
+            assert!(
+                r.unit_x.iter().all(|&u| (0.0..=1.0).contains(&u)),
+                "{:?}",
+                r.unit_x
+            );
         }
     }
 
     #[test]
     fn budget_respected() {
         let space = space4();
-        let mut obj = |_: &HadoopConfig| 1.0;
-        let out = NelderMead::default().run(&space, &mut obj, 30);
+        let mut obj = FnObjective(|_: &HadoopConfig| 1.0);
+        let out = Driver::new(30)
+            .run(&mut NelderMead::default(), &space, &mut obj)
+            .unwrap();
         assert!(out.evals() <= 30);
     }
 }

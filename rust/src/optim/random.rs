@@ -1,37 +1,53 @@
 //! Uniform random search — the standard no-structure baseline every
 //! optimizer comparison needs (ABL1).
+//!
+//! Ask/tell port: the whole remaining budget is proposed as one batch.
+//! The points come off one sequential RNG stream, so the proposal
+//! sequence (and therefore the outcome) is byte-identical to the old
+//! one-eval-per-iteration loop.
 
-use crate::optim::result::{Recorder, TuningOutcome};
+use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::result::EvalRecord;
 use crate::optim::space::ParamSpace;
-use crate::optim::ObjectiveFn;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct RandomSearch {
     pub seed: u64,
+    rng: Option<Rng>,
+    best: BestSeen,
 }
 
 impl RandomSearch {
-    pub fn new(seed: u64) -> Self {
-        Self { seed }
+    pub fn new(seed: u64) -> RandomSearch {
+        RandomSearch {
+            seed,
+            rng: None,
+            best: BestSeen::default(),
+        }
+    }
+}
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &str {
+        "random"
     }
 
-    pub fn run(
-        &self,
-        space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
-        max_evals: usize,
-    ) -> TuningOutcome {
-        let mut rng = Rng::new(self.seed);
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
+        let seed = self.seed;
+        let rng = self.rng.get_or_insert_with(|| Rng::new(seed));
         let d = space.dims();
-        let mut rec = Recorder::new();
-        for _ in 0..max_evals {
-            let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
-            let cfg = space.decode(&x);
-            let v = obj(&cfg);
-            rec.record(x, cfg, v);
-        }
-        rec.finish("random")
+        (0..budget_left)
+            .map(|_| Candidate::new((0..d).map(|_| rng.f64()).collect()))
+            .collect()
+    }
+
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.best.update(evals);
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.best.get()
     }
 }
 
@@ -40,17 +56,23 @@ mod tests {
     use super::*;
     use crate::config::params::HadoopConfig;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::{Driver, FnObjective};
 
     #[test]
     fn improves_with_budget_on_smooth_bowl() {
         let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
-        let bowl = |space: &ParamSpace, c: &HadoopConfig| -> f64 {
-            space.encode(c).iter().map(|u| (u - 0.7).powi(2)).sum()
-        };
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| bowl(&sp, c);
-        let small = RandomSearch::new(1).run(&space, &mut obj, 5).best_value;
-        let large = RandomSearch::new(1).run(&space, &mut obj, 200).best_value;
+        let mut obj = FnObjective(move |c: &HadoopConfig| {
+            sp.encode(c).iter().map(|u| (u - 0.7).powi(2)).sum()
+        });
+        let small = Driver::new(5)
+            .run(&mut RandomSearch::new(1), &space, &mut obj)
+            .unwrap()
+            .best_value;
+        let large = Driver::new(200)
+            .run(&mut RandomSearch::new(1), &space, &mut obj)
+            .unwrap()
+            .best_value;
         assert!(large <= small);
         assert!(large < 0.05, "200 random points should land near optimum: {large}");
     }
@@ -58,10 +80,21 @@ mod tests {
     #[test]
     fn deterministic_per_seed() {
         let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
-        let mut obj = |c: &HadoopConfig| c.values.iter().sum::<f64>();
-        let a = RandomSearch::new(9).run(&space, &mut obj, 20);
-        let b = RandomSearch::new(9).run(&space, &mut obj, 20);
+        let mut obj = FnObjective(|c: &HadoopConfig| c.values.iter().sum::<f64>());
+        let a = Driver::new(20)
+            .run(&mut RandomSearch::new(9), &space, &mut obj)
+            .unwrap();
+        let b = Driver::new(20)
+            .run(&mut RandomSearch::new(9), &space, &mut obj)
+            .unwrap();
         assert_eq!(a.best_value, b.best_value);
         assert_eq!(a.records.len(), b.records.len());
+    }
+
+    #[test]
+    fn asks_in_one_full_budget_batch() {
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let mut r = RandomSearch::new(4);
+        assert_eq!(r.ask(&space, 37).len(), 37);
     }
 }

@@ -85,6 +85,12 @@ impl Recorder {
         self.records.len()
     }
 
+    /// The most recently recorded evaluation (the `Driver` clones it for
+    /// observer hooks and `tell` batches).
+    pub fn last(&self) -> Option<&EvalRecord> {
+        self.records.last()
+    }
+
     pub fn best_value(&self) -> Option<f64> {
         self.best.as_ref().map(|(_, v)| *v)
     }

@@ -4,14 +4,18 @@
 //!
 //! The scorer is a trait so the same code runs against the AOT-compiled
 //! JAX/Pallas artifact through PJRT (`runtime::CostModelExec`, the hot
-//! path) or against the native rust mirror (`NativeScorer`, always
-//! available). ABL2 in EXPERIMENTS.md measures what prescreening saves.
+//! path when built with the `pjrt` feature) or against the native rust
+//! mirror (`NativeScorer`, always available). [`Prescreen`] implements
+//! [`Optimizer`]: its first ask primes a BOBYQA at the best surrogate
+//! prediction, so it plugs into the shared `Driver` like every other
+//! method. ABL2 in EXPERIMENTS.md measures what prescreening saves.
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{costmodel, ClusterSpec};
-use crate::optim::result::TuningOutcome;
+use crate::optim::core::{BatchObjective, Candidate, Driver, Optimizer};
+use crate::optim::result::{EvalRecord, TuningOutcome};
 use crate::optim::space::ParamSpace;
-use crate::optim::{Bobyqa, ObjectiveFn};
+use crate::optim::Bobyqa;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadSpec;
 
@@ -51,20 +55,29 @@ impl CandidateScorer for NativeScorer {
     }
 }
 
-/// Prescreening driver.
+/// Prescreening wrapper: surrogate-seeded BOBYQA behind the [`Optimizer`]
+/// trait. Scoring the candidate pool costs NO cluster evaluations — it
+/// happens inside the first `ask`.
 pub struct Prescreen<S: CandidateScorer> {
     pub scorer: S,
     /// Number of model-scored candidates (cheap — no cluster time).
     pub n_candidates: usize,
     pub seed: u64,
+    inner: Bobyqa,
+    primed: bool,
+    label: String,
 }
 
 impl<S: CandidateScorer> Prescreen<S> {
     pub fn new(scorer: S) -> Self {
+        let label = format!("bobyqa+prescreen({})", scorer.name());
         Self {
             scorer,
             n_candidates: 2048,
             seed: 11,
+            inner: Bobyqa::default(),
+            primed: false,
+            label,
         }
     }
 
@@ -90,21 +103,62 @@ impl<S: CandidateScorer> Prescreen<S> {
         Ok(idx.into_iter().take(k).map(|i| xs[i].clone()).collect())
     }
 
-    /// Run BOBYQA seeded from the best surrogate prediction.
-    pub fn run_bobyqa(
+    /// Seed the inner BOBYQA at the best surrogate prediction. Idempotent;
+    /// called implicitly by the first `ask`.
+    pub fn prime(&mut self, space: &ParamSpace) -> Result<(), String> {
+        if self.primed {
+            return Ok(());
+        }
+        let start = self
+            .top_starts(space, 1)?
+            .into_iter()
+            .next()
+            .ok_or("prescreen produced no candidates (n_candidates = 0?)")?;
+        self.inner = Bobyqa::default()
+            .with_start(start)
+            .with_label(self.label.clone());
+        self.primed = true;
+        Ok(())
+    }
+
+    /// Run surrogate-seeded BOBYQA through the shared `Driver`.
+    pub fn run_bobyqa<B: BatchObjective + ?Sized>(
         &mut self,
         space: &ParamSpace,
-        obj: &mut ObjectiveFn<'_>,
+        obj: &mut B,
         max_evals: usize,
     ) -> Result<TuningOutcome, String> {
-        let starts = self.top_starts(space, 1)?;
-        let bob = Bobyqa {
-            start: Some(starts[0].clone()),
-            ..Bobyqa::default()
-        };
-        let mut out = bob.run(space, obj, max_evals);
-        out.optimizer = format!("bobyqa+prescreen({})", self.scorer.name());
-        Ok(out)
+        self.prime(space)?;
+        Driver::new(max_evals).run(self, space, obj)
+    }
+}
+
+impl<S: CandidateScorer> Optimizer for Prescreen<S> {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
+        if !self.primed {
+            if let Err(e) = self.prime(space) {
+                // ask cannot return an error; carry the cause in the
+                // label so the driver's "produced no evaluations"
+                // message names it instead of hiding it
+                if !self.label.contains("prime failed") {
+                    self.label = format!("{} [prime failed: {e}]", self.label);
+                }
+                return Vec::new();
+            }
+        }
+        self.inner.ask(space, budget_left)
+    }
+
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.inner.tell(evals)
+    }
+
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        self.inner.best()
     }
 }
 
@@ -112,6 +166,7 @@ impl<S: CandidateScorer> Prescreen<S> {
 mod tests {
     use super::*;
     use crate::config::spec::TuningSpec;
+    use crate::optim::core::FnObjective;
     use crate::workloads::wordcount;
 
     fn prescreen() -> Prescreen<NativeScorer> {
@@ -158,9 +213,9 @@ mod tests {
         let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
         let mut p = prescreen();
         let sp = space.clone();
-        let mut obj = move |c: &HadoopConfig| -> f64 {
+        let mut obj = FnObjective(move |c: &HadoopConfig| -> f64 {
             sp.encode(c).iter().map(|u| (u - 0.8).powi(2)).sum()
-        };
+        });
         let out = p.run_bobyqa(&space, &mut obj, 30).unwrap();
         assert!(out.optimizer.contains("prescreen"));
         assert!(out.evals() <= 30);
@@ -181,5 +236,9 @@ mod tests {
         let mut p = Prescreen::new(Bad);
         p.n_candidates = 8;
         assert!(p.top_starts(&space, 1).is_err());
+        // and through the Optimizer trait: ask proposes nothing, and the
+        // label carries the cause into the driver's error message
+        assert!(p.ask(&space, 10).is_empty());
+        assert!(p.name().contains("prime failed"), "{}", p.name());
     }
 }

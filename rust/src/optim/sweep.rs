@@ -1,0 +1,113 @@
+//! The exploratory coordinate-sweep sub-machine shared by the
+//! direct-search methods: probe ±step along one dimension at a time,
+//! adopting strict improvements immediately (which ends that dimension's
+//! probes), flipping direction then advancing on failure. CoordinateSearch
+//! runs it sweep after sweep with step halving; Hooke–Jeeves runs one
+//! sweep per exploratory move.
+
+#[derive(Clone, Debug)]
+pub(crate) struct Sweep {
+    /// Current point (updated as improvements are adopted).
+    pub(crate) x: Vec<f64>,
+    /// Value at `x`.
+    pub(crate) fx: f64,
+    i: usize,
+    dir: usize, // 0 → +step, 1 → −step
+    pending: Option<Vec<f64>>,
+}
+
+impl Sweep {
+    pub(crate) fn new(x: Vec<f64>, fx: f64) -> Sweep {
+        Sweep {
+            x,
+            fx,
+            i: 0,
+            dir: 0,
+            pending: None,
+        }
+    }
+
+    /// Begin a fresh sweep from the current point.
+    pub(crate) fn restart(&mut self) {
+        self.i = 0;
+        self.dir = 0;
+        self.pending = None;
+    }
+
+    /// Next probe point, or None when the sweep is exhausted. Probes that
+    /// clamp back onto the current point are skipped.
+    pub(crate) fn next_probe(&mut self, step: f64) -> Option<Vec<f64>> {
+        let d = self.x.len();
+        while self.i < d {
+            while self.dir < 2 {
+                let sign = if self.dir == 0 { 1.0 } else { -1.0 };
+                let cand = (self.x[self.i] + sign * step).clamp(0.0, 1.0);
+                if (cand - self.x[self.i]).abs() < 1e-12 {
+                    self.dir += 1;
+                    continue;
+                }
+                let mut xc = self.x.clone();
+                xc[self.i] = cand;
+                self.pending = Some(xc.clone());
+                return Some(xc);
+            }
+            self.i += 1;
+            self.dir = 0;
+        }
+        None
+    }
+
+    /// Absorb the value of the last probe returned by [`Sweep::next_probe`].
+    pub(crate) fn absorb(&mut self, value: f64) {
+        let xc = self.pending.take().expect("absorb without probe");
+        if value < self.fx {
+            self.x = xc;
+            self.fx = value;
+            self.i += 1; // improvement ends this dimension's probes
+            self.dir = 0;
+        } else {
+            self.dir += 1;
+            if self.dir > 1 {
+                self.dir = 0;
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Is a probe outstanding (asked but not yet absorbed)?
+    pub(crate) fn awaiting(&self) -> bool {
+        self.pending.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improvement_moves_to_next_dimension_with_updated_point() {
+        let mut s = Sweep::new(vec![0.5, 0.5], 10.0);
+        let p1 = s.next_probe(0.25).unwrap();
+        assert_eq!(p1, vec![0.75, 0.5]);
+        s.absorb(9.0); // improvement: adopt, move to dim 1
+        let p2 = s.next_probe(0.25).unwrap();
+        assert_eq!(p2, vec![0.75, 0.75]);
+        s.absorb(9.5); // worse: flip direction on dim 1
+        let p3 = s.next_probe(0.25).unwrap();
+        assert_eq!(p3, vec![0.75, 0.25]);
+        s.absorb(9.5); // worse again: sweep exhausted
+        assert!(s.next_probe(0.25).is_none());
+        assert_eq!(s.x, vec![0.75, 0.5]);
+        assert_eq!(s.fx, 9.0);
+    }
+
+    #[test]
+    fn clamped_probes_are_skipped() {
+        let mut s = Sweep::new(vec![1.0], 5.0);
+        // +step clamps onto x → skipped; −step is the only probe
+        let p = s.next_probe(0.25).unwrap();
+        assert_eq!(p, vec![0.75]);
+        s.absorb(6.0);
+        assert!(s.next_probe(0.25).is_none());
+    }
+}

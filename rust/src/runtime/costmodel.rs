@@ -1,29 +1,23 @@
-//! Typed wrapper over the AOT cost-model artifacts: batched
-//! `HadoopConfig -> predicted runtime (+ phase breakdown)` scoring.
+//! Typed wrapper over the batched cost model: `HadoopConfig -> predicted
+//! runtime (+ phase breakdown)` scoring in f32.
 //!
-//! Two fixed-shape executables (N=128 and N=1024, from spec.AOT_BATCH_SIZES)
-//! are compiled once; arbitrary batch sizes are served by padding up to the
-//! smallest fitting artifact and chunking above the largest. Padding rows
-//! repeat the last config — results for them are sliced away.
+//! With the `pjrt` feature, two fixed-shape executables (N=128 and
+//! N=1024, from spec.AOT_BATCH_SIZES) are compiled once; arbitrary batch
+//! sizes are served by padding up to the smallest fitting artifact and
+//! chunking above the largest (padding rows repeat the last config and
+//! are sliced away). The default build computes the identical numbers
+//! from the native rust mirror of the model.
 
-use crate::config::params::{HadoopConfig, N_PARAMS};
+use crate::config::params::HadoopConfig;
 use crate::hadoop::ClusterSpec;
 use crate::optim::surrogate::CandidateScorer;
-use crate::runtime::{execute_tuple, literal_f32, Runtime};
+use crate::runtime::Runtime;
 use crate::workloads::WorkloadSpec;
 
 pub const N_PHASES: usize = 8;
 pub const N_CONSTS: usize = 16;
 /// Batch sizes baked into the artifacts (keep in sync with spec.py).
 pub const BATCH_SIZES: [usize; 2] = [128, 1024];
-
-pub struct CostModelExec {
-    exes: Vec<(usize, xla::PjRtLoadedExecutable)>, // (batch, exe), ascending
-    consts: [f32; N_CONSTS],
-    weights: [f32; N_PHASES * N_PHASES],
-    /// Executions performed (for perf accounting).
-    pub calls: u64,
-}
 
 /// Row-major default calibration matrix as f32 (mirror of spec.py).
 pub fn default_weights_f32() -> [f32; N_PHASES * N_PHASES] {
@@ -37,6 +31,16 @@ pub fn default_weights_f32() -> [f32; N_PHASES * N_PHASES] {
     out
 }
 
+#[cfg(feature = "pjrt")]
+pub struct CostModelExec {
+    exes: Vec<(usize, xla::PjRtLoadedExecutable)>, // (batch, exe), ascending
+    consts: [f32; N_CONSTS],
+    weights: [f32; N_PHASES * N_PHASES],
+    /// Executions performed (for perf accounting).
+    pub calls: u64,
+}
+
+#[cfg(feature = "pjrt")]
 impl CostModelExec {
     /// Compile the cost-model artifacts for a (workload, cluster) pair.
     pub fn load(rt: &Runtime, wl: &WorkloadSpec, cl: &ClusterSpec) -> Result<Self, String> {
@@ -87,6 +91,9 @@ impl CostModelExec {
         &mut self,
         cfgs: &[HadoopConfig],
     ) -> Result<(Vec<f32>, Vec<[f32; N_PHASES]>), String> {
+        use crate::config::params::N_PARAMS;
+        use crate::runtime::{execute_tuple, literal_f32};
+
         let n = cfgs.len();
         // smallest artifact that fits
         let (batch, exe) = self
@@ -126,12 +133,76 @@ impl CostModelExec {
     }
 }
 
+/// Native fallback: the rust mirror of the cost model, f32 like the
+/// artifacts. Same API, zero dependencies; batch sizes are unbounded.
+#[cfg(not(feature = "pjrt"))]
+pub struct CostModelExec {
+    wl: WorkloadSpec,
+    cl: ClusterSpec,
+    /// Batch evaluations performed (for perf accounting).
+    pub calls: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl CostModelExec {
+    /// Bind the cost model to a (workload, cluster) pair. The `Runtime`
+    /// is only consulted for its artifact directory (which must exist so
+    /// both backends share the same setup story).
+    pub fn load(_rt: &Runtime, wl: &WorkloadSpec, cl: &ClusterSpec) -> Result<Self, String> {
+        Ok(Self {
+            wl: wl.clone(),
+            cl: cl.clone(),
+            calls: 0,
+        })
+    }
+
+    /// Re-target another workload/cluster.
+    pub fn set_context(&mut self, wl: &WorkloadSpec, cl: &ClusterSpec) {
+        self.wl = wl.clone();
+        self.cl = cl.clone();
+    }
+
+    /// Predict runtimes for arbitrary batch sizes. Returns seconds per
+    /// config, aligned with the input order.
+    pub fn predict(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f32>, String> {
+        Ok(self.predict_with_phases(cfgs)?.0)
+    }
+
+    /// Predict runtimes and the per-phase breakdown.
+    pub fn predict_with_phases(
+        &mut self,
+        cfgs: &[HadoopConfig],
+    ) -> Result<(Vec<f32>, Vec<[f32; N_PHASES]>), String> {
+        use crate::hadoop::costmodel;
+        if cfgs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        self.calls += 1;
+        let mut runtimes = Vec::with_capacity(cfgs.len());
+        let mut phases = Vec::with_capacity(cfgs.len());
+        for c in cfgs {
+            runtimes.push(costmodel::predict_runtime(c, &self.wl, &self.cl) as f32);
+            let ph = costmodel::predict_phases(c, &self.wl, &self.cl);
+            let mut row = [0f32; N_PHASES];
+            for (k, v) in ph.iter().enumerate() {
+                row[k] = *v as f32;
+            }
+            phases.push(row);
+        }
+        Ok((runtimes, phases))
+    }
+}
+
 impl CandidateScorer for CostModelExec {
     fn score(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
         Ok(self.predict(cfgs)?.into_iter().map(|v| v as f64).collect())
     }
 
     fn name(&self) -> &str {
-        "pjrt-costmodel"
+        if cfg!(feature = "pjrt") {
+            "pjrt-costmodel"
+        } else {
+            "native-costmodel"
+        }
     }
 }

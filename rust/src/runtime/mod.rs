@@ -1,11 +1,17 @@
-//! XLA PJRT runtime: load the AOT artifacts produced by
-//! `python/compile/aot.py` and execute them from the tuning hot path.
+//! Batched config-scoring runtime behind one API, two backends:
 //!
-//! The interchange format is HLO **text** (see DESIGN.md / aot.py — the
-//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos). Each
-//! artifact is compiled exactly once per process; executions reuse the
-//! compiled `PjRtLoadedExecutable`, so the request path never touches
-//! Python, files, or the compiler.
+//! * **`pjrt` feature ON** — load the AOT artifacts produced by
+//!   `python/compile/aot.py` and execute them through XLA PJRT. The
+//!   interchange format is HLO **text** (see DESIGN.md / aot.py — the
+//!   crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos). Each
+//!   artifact is compiled exactly once per process; executions reuse the
+//!   compiled `PjRtLoadedExecutable`, so the request path never touches
+//!   Python, files, or the compiler. Requires vendoring the `xla` crate.
+//! * **default (native)** — the same `CostModelExec` / `QuadraticExec`
+//!   types computed by the rust mirror of the cost model, in f32 like the
+//!   artifacts, with zero external dependencies. The offline image builds
+//!   this; `rust/tests/runtime_integration.rs` pins the two backends to
+//!   each other.
 
 pub mod costmodel;
 pub mod quadratic;
@@ -13,16 +19,20 @@ pub mod quadratic;
 pub use costmodel::CostModelExec;
 pub use quadratic::QuadraticExec;
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
+use std::path::Path;
 
-/// Shared PJRT client + artifact directory.
+/// Shared runtime handle: artifact directory plus (with `pjrt`) the PJRT
+/// client the executables compile onto.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     pub client: xla::PjRtClient,
     pub artifacts_dir: PathBuf,
 }
 
 impl Runtime {
-    /// CPU PJRT client over the given artifacts directory.
+    /// Open a runtime over the given artifacts directory.
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Runtime, String> {
         let artifacts_dir = artifacts_dir.into();
         if !artifacts_dir.is_dir() {
@@ -31,11 +41,21 @@ impl Runtime {
                 artifacts_dir.display()
             ));
         }
+        Self::open_backend(artifacts_dir)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn open_backend(artifacts_dir: PathBuf) -> Result<Runtime, String> {
         let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
         Ok(Runtime {
             client,
             artifacts_dir,
         })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn open_backend(artifacts_dir: PathBuf) -> Result<Runtime, String> {
+        Ok(Runtime { artifacts_dir })
     }
 
     /// Resolve the artifacts directory: `$CATLA_ARTIFACTS`, else
@@ -56,7 +76,17 @@ impl Runtime {
         Self::new(Self::default_artifacts_dir())
     }
 
+    /// Which backend serves executions.
+    pub fn backend(&self) -> &'static str {
+        if cfg!(feature = "pjrt") {
+            "pjrt"
+        } else {
+            "native"
+        }
+    }
+
     /// Load + compile one HLO-text artifact.
+    #[cfg(feature = "pjrt")]
     pub fn compile_artifact(&self, file: &str) -> Result<xla::PjRtLoadedExecutable, String> {
         let path = self.artifacts_dir.join(file);
         compile_hlo_text(&self.client, &path)
@@ -64,6 +94,7 @@ impl Runtime {
 }
 
 /// Load HLO text from `path` and compile it on `client`.
+#[cfg(feature = "pjrt")]
 pub fn compile_hlo_text(
     client: &xla::PjRtClient,
     path: &Path,
@@ -78,6 +109,7 @@ pub fn compile_hlo_text(
 
 /// Execute a compiled artifact on literal inputs and return the tuple
 /// elements (aot.py lowers with `return_tuple=True`).
+#[cfg(feature = "pjrt")]
 pub fn execute_tuple(
     exe: &xla::PjRtLoadedExecutable,
     inputs: &[xla::Literal],
@@ -92,6 +124,7 @@ pub fn execute_tuple(
 }
 
 /// Build an f32 literal of the given shape from row-major data.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, String> {
     let expect: i64 = dims.iter().product();
     if expect != data.len() as i64 {
@@ -118,12 +151,12 @@ mod tests {
         assert!(err.contains("make artifacts"), "{err}");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_shape_mismatch_detected() {
         assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
         assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
     }
 
-    // Artifact-dependent tests live in rust/tests/runtime_integration.rs
-    // (they require `make artifacts` to have run).
+    // Backend-agreement tests live in rust/tests/runtime_integration.rs.
 }

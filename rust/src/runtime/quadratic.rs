@@ -1,20 +1,24 @@
-//! Typed wrapper over the AOT batched-quadratic artifact: evaluate a
-//! DFO surrogate q(x) = c + g·x + ½xᵀHx over candidate batches on PJRT.
+//! Typed wrapper over the batched-quadratic evaluator: q(x) = c + g·x +
+//! ½xᵀHx over candidate batches — the DFO surrogate's inner op.
 //!
-//! The artifact has fixed shape (N=256 candidates, D=8 dims); smaller
-//! problems are zero-padded — provably neutral for a quadratic (see
-//! python/tests/test_kernel.py::test_zero_padding_is_neutral).
+//! With the `pjrt` feature this executes the AOT artifact (fixed shape
+//! N=256 candidates, D=8 dims; smaller problems are zero-padded —
+//! provably neutral for a quadratic, see
+//! python/tests/test_kernel.py::test_zero_padding_is_neutral). The
+//! default build computes the same values natively in f32.
 
-use crate::runtime::{execute_tuple, literal_f32, Runtime};
+use crate::runtime::Runtime;
 
 pub const QUAD_BATCH: usize = 256;
 pub const QUAD_DIM: usize = 8;
 
+#[cfg(feature = "pjrt")]
 pub struct QuadraticExec {
     exe: xla::PjRtLoadedExecutable,
     pub calls: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl QuadraticExec {
     pub fn load(rt: &Runtime) -> Result<Self, String> {
         Ok(Self {
@@ -32,13 +36,10 @@ impl QuadraticExec {
         h: &[Vec<f64>],
         c0: f64,
     ) -> Result<Vec<f64>, String> {
+        use crate::runtime::{execute_tuple, literal_f32};
+
         let d = g.len();
-        if d > QUAD_DIM {
-            return Err(format!("dimension {d} exceeds artifact dim {QUAD_DIM}"));
-        }
-        if h.len() != d || h.iter().any(|r| r.len() != d) {
-            return Err("hessian shape mismatch".into());
-        }
+        check_shapes(xs, g, h)?;
         let mut out = Vec::with_capacity(xs.len());
         // pad g and h once
         let mut gp = [0f32; QUAD_DIM];
@@ -55,9 +56,6 @@ impl QuadraticExec {
             let n = chunk.len();
             let mut flat = vec![0f32; QUAD_BATCH * QUAD_DIM];
             for (r, x) in chunk.iter().enumerate() {
-                if x.len() != d {
-                    return Err(format!("candidate {r} has dim {}, expected {d}", x.len()));
-                }
                 for (c, v) in x.iter().enumerate() {
                     flat[r * QUAD_DIM + c] = *v as f32;
                 }
@@ -75,4 +73,63 @@ impl QuadraticExec {
         }
         Ok(out)
     }
+}
+
+/// Native fallback: the same batched quadratic computed in f32 directly.
+#[cfg(not(feature = "pjrt"))]
+pub struct QuadraticExec {
+    pub calls: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl QuadraticExec {
+    pub fn load(_rt: &Runtime) -> Result<Self, String> {
+        Ok(Self { calls: 0 })
+    }
+
+    /// Evaluate the quadratic at each row of `xs` (dim d ≤ QUAD_DIM).
+    /// `g` is length d, `h` row-major d×d, `c0` the constant term.
+    pub fn eval(
+        &mut self,
+        xs: &[Vec<f64>],
+        g: &[f64],
+        h: &[Vec<f64>],
+        c0: f64,
+    ) -> Result<Vec<f64>, String> {
+        let d = g.len();
+        check_shapes(xs, g, h)?;
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(QUAD_BATCH) {
+            self.calls += 1; // one "execution" per artifact-sized batch
+            for x in chunk {
+                // mirror the artifact's f32 arithmetic
+                let mut q = c0 as f32;
+                for i in 0..d {
+                    q += (g[i] as f32) * (x[i] as f32);
+                    for j in 0..d {
+                        q += 0.5 * (x[i] as f32) * (h[i][j] as f32) * (x[j] as f32);
+                    }
+                }
+                out.push(q as f64);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Shared input validation for both backends.
+fn check_shapes(xs: &[Vec<f64>], g: &[f64], h: &[Vec<f64>]) -> Result<(), String> {
+    let d = g.len();
+    if d > QUAD_DIM {
+        return Err(format!("dimension {d} exceeds artifact dim {QUAD_DIM}"));
+    }
+    if h.len() != d || h.iter().any(|r| r.len() != d) {
+        return Err("hessian shape mismatch".into());
+    }
+    for (r, x) in xs.iter().enumerate() {
+        if x.len() != d {
+            return Err(format!("candidate {r} has dim {}, expected {d}", x.len()));
+        }
+    }
+    Ok(())
 }

@@ -1,0 +1,261 @@
+//! Ask/tell architecture guarantees, across ALL eight methods:
+//! * determinism regression: same `Method` + seed + budget ⇒ byte-identical
+//!   `TuningOutcome` through the new `Driver`;
+//! * serial and batched objective evaluation produce identical outcomes;
+//! * budget accounting: over-sized ask-batches are truncated, never
+//!   overspent, and `tell` covers every evaluated candidate;
+//! * ask-batch shapes: population methods batch, sequential methods ask
+//!   singletons (bobyqa: one init batch, then singletons).
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::core::{BatchObjective, Candidate, Driver, FnObjective, Optimizer};
+use catla::optim::{
+    Bobyqa, ClusterObjective, EarlyStop, EvalRecord, Method, ParamSpace, TuningOutcome,
+    ALL_METHODS,
+};
+use catla::workloads::wordcount;
+
+const BUDGET: usize = 30;
+const SEED: u64 = 23;
+
+fn space() -> ParamSpace {
+    ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default())
+}
+
+fn drive(name: &str, serial: bool) -> TuningOutcome {
+    let wl = wordcount(2048.0);
+    let sp = space();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+    if serial {
+        obj = obj.serial();
+    }
+    let mut opt = Method::from_name(name, SEED).unwrap().build();
+    Driver::new(BUDGET)
+        .run(opt.as_mut(), &sp, &mut obj)
+        .unwrap()
+}
+
+/// Byte-exact fingerprint of an outcome (f64s via to_bits, so any drift
+/// in values, order or config decoding shows up).
+fn fingerprint(out: &TuningOutcome) -> String {
+    let mut s = format!("{}|{}|{:x}", out.optimizer, out.evals(), out.best_value.to_bits());
+    for r in &out.records {
+        s.push_str(&format!(
+            ";{}:{:x}:{:x}:{}",
+            r.iter,
+            r.value.to_bits(),
+            r.best_so_far.to_bits(),
+            r.unit_x
+                .iter()
+                .map(|u| format!("{:x}", u.to_bits()))
+                .collect::<Vec<_>>()
+                .join(","),
+        ));
+        s.push_str(&format!("{:?}", r.config.values));
+    }
+    s
+}
+
+#[test]
+fn determinism_same_method_seed_budget_is_byte_identical() {
+    for name in ALL_METHODS {
+        let a = drive(name, false);
+        let b = drive(name, false);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{name}: outcome not reproducible under a fixed seed"
+        );
+        assert!(a.evals() > 0 && a.evals() <= BUDGET, "{name}: bad eval count");
+    }
+}
+
+#[test]
+fn batched_and_serial_evaluation_agree_bitwise() {
+    for name in ALL_METHODS {
+        let serial = drive(name, true);
+        let batched = drive(name, false);
+        assert_eq!(
+            fingerprint(&serial),
+            fingerprint(&batched),
+            "{name}: batched objective evaluation changed the outcome"
+        );
+    }
+}
+
+#[test]
+fn population_methods_ask_one_big_batch_sequential_ask_singletons() {
+    let sp = space();
+    for name in ["grid", "random", "latin"] {
+        let mut opt = Method::from_name(name, SEED).unwrap().build();
+        let batch = opt.ask(&sp, BUDGET);
+        assert_eq!(batch.len(), BUDGET, "{name}: population method should batch");
+    }
+    for name in ["coordinate", "hooke-jeeves", "nelder-mead", "annealing"] {
+        let mut opt = Method::from_name(name, SEED).unwrap().build();
+        for step in 0..10 {
+            let batch = opt.ask(&sp, BUDGET);
+            assert_eq!(batch.len(), 1, "{name}: ask {step} not a singleton");
+            opt.tell(&[record(&sp, &batch[0], 10.0 - step as f64 * 0.1)]);
+        }
+    }
+    // bobyqa: one init-design batch, then singletons
+    let mut bob = Method::from_name("bobyqa", SEED).unwrap().build();
+    let init = bob.ask(&sp, BUDGET);
+    assert_eq!(init.len(), 2 * sp.dims() + 1, "bobyqa init design batches");
+    let records: Vec<EvalRecord> = init
+        .iter()
+        .enumerate()
+        .map(|(i, c)| record(&sp, c, 5.0 + i as f64))
+        .collect();
+    bob.tell(&records);
+    for step in 0..5 {
+        let batch = bob.ask(&sp, BUDGET);
+        assert_eq!(batch.len(), 1, "bobyqa ask {step} not a singleton");
+        bob.tell(&[record(&sp, &batch[0], 4.0)]);
+    }
+}
+
+fn record(sp: &ParamSpace, c: &Candidate, value: f64) -> EvalRecord {
+    EvalRecord {
+        iter: 1,
+        config: sp.decode(&c.unit_x),
+        unit_x: c.unit_x.clone(),
+        value,
+        best_so_far: value,
+    }
+}
+
+/// An optimizer that deliberately over-asks to probe driver accounting.
+struct Greedy {
+    factor: usize,
+    telled: Vec<usize>, // batch sizes seen by tell
+}
+
+impl Optimizer for Greedy {
+    fn name(&self) -> &str {
+        "greedy"
+    }
+    fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
+        let d = space.dims();
+        (0..budget_left * self.factor)
+            .map(|i| Candidate::new(vec![(i % 7) as f64 / 7.0; d]))
+            .collect()
+    }
+    fn tell(&mut self, evals: &[EvalRecord]) {
+        self.telled.push(evals.len());
+    }
+    fn best(&self) -> Option<(Vec<f64>, f64)> {
+        None
+    }
+}
+
+#[test]
+fn driver_truncates_oversized_batches_and_tells_everything_evaluated() {
+    let wl = wordcount(1024.0);
+    let sp = space();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+    let mut opt = Greedy {
+        factor: 3,
+        telled: Vec::new(),
+    };
+    let out = Driver::new(25).run(&mut opt, &sp, &mut obj).unwrap();
+    assert_eq!(out.evals(), 25, "budget overspent");
+    assert_eq!(
+        opt.telled.iter().sum::<usize>(),
+        25,
+        "tell did not cover every evaluated candidate"
+    );
+    // a single ask covered the whole budget: one truncated batch
+    assert_eq!(opt.telled, vec![25]);
+}
+
+#[test]
+fn driver_counts_objective_calls_not_asks() {
+    // the batched objective is called once per ask-batch, not per config
+    struct Counting<'a> {
+        inner: ClusterObjective<'a>,
+        calls: usize,
+    }
+    impl BatchObjective for Counting<'_> {
+        fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+            self.calls += 1;
+            self.inner.eval_batch(cfgs)
+        }
+    }
+    let wl = wordcount(1024.0);
+    let sp = space();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut obj = Counting {
+        inner: ClusterObjective::new(&mut cluster, &wl, 1),
+        calls: 0,
+    };
+    let mut opt = Method::from_name("random", SEED).unwrap().build();
+    let out = Driver::new(40).run(opt.as_mut(), &sp, &mut obj).unwrap();
+    assert_eq!(out.evals(), 40);
+    assert_eq!(obj.calls, 1, "population ask-batch split into many calls");
+}
+
+#[test]
+fn early_stop_chunking_does_not_change_bobyqa_trajectory() {
+    // with early stopping armed the driver tells ask-batches back in
+    // patience-sized chunks, splitting bobyqa's init design; the
+    // trajectory must match the unchunked run byte for byte
+    let sp = space();
+    let mk_obj = || {
+        let mut v = 1000.0;
+        // strictly improving, so the stop itself never fires
+        FnObjective(move |_: &HadoopConfig| {
+            v -= 10.0;
+            v
+        })
+    };
+    let mut o1 = mk_obj();
+    let plain = Driver::new(20)
+        .run(&mut Bobyqa::default(), &sp, &mut o1)
+        .unwrap();
+    let mut o2 = mk_obj();
+    let chunked = Driver::new(20)
+        .early_stop(EarlyStop::new(4))
+        .run(&mut Bobyqa::default(), &sp, &mut o2)
+        .unwrap();
+    assert_eq!(
+        fingerprint(&plain),
+        fingerprint(&chunked),
+        "patience-sized tell chunks changed the bobyqa trajectory"
+    );
+}
+
+#[test]
+fn resume_replay_then_continue_covers_total_budget() {
+    let wl = wordcount(1024.0);
+    let sp = space();
+
+    // phase 1: a 10-eval run
+    let first = {
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+        let mut opt = Method::from_name("bobyqa", SEED).unwrap().build();
+        Driver::new(10).run(opt.as_mut(), &sp, &mut obj).unwrap()
+    };
+
+    // phase 2: replay those 10 into a fresh optimizer, continue to 25
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+    let mut opt = Method::from_name("bobyqa", SEED).unwrap().build();
+    let resumed = Driver::new(25)
+        .run_with_history(opt.as_mut(), &sp, &mut obj, &first.records)
+        .unwrap();
+    assert_eq!(resumed.evals(), 25);
+    // the replayed prefix is identical to the original run
+    for (a, b) in first.records.iter().zip(&resumed.records) {
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(a.unit_x, b.unit_x);
+    }
+    // and the resumed best can only be >= as good
+    assert!(resumed.best_value <= first.best_value);
+}

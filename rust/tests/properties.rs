@@ -7,7 +7,7 @@ use catla::config::spec::TuningSpec;
 use catla::hadoop::hdfs::{locality, place_blocks, Locality, Topology};
 use catla::hadoop::mapreduce::TaskKind;
 use catla::hadoop::{simulate_job, ClusterSpec};
-use catla::optim::{cluster_objective, Method, ParamSpace, ALL_METHODS};
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, ALL_METHODS};
 use catla::hadoop::SimCluster;
 use catla::util::json::{parse, Json};
 use catla::util::quickcheck::{forall_cfg, QcConfig};
@@ -155,9 +155,9 @@ fn prop_every_optimizer_stays_in_bounds_and_budget() {
             let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
             let mut cluster = SimCluster::new(ClusterSpec::default());
             let wl = wordcount(1024.0);
-            let mut obj = cluster_objective(&mut cluster, &wl, 1);
-            let m = Method::from_name(method, *seed).map_err(|e| e)?;
-            let out = m.run(&space, &mut obj, *budget);
+            let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+            let mut opt = Method::from_name(method, *seed)?.build();
+            let out = Driver::new(*budget).run(opt.as_mut(), &space, &mut obj)?;
             if out.evals() > *budget {
                 return Err(format!("{method}: {} evals > budget {budget}", out.evals()));
             }

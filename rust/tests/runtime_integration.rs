@@ -1,6 +1,7 @@
-//! Cross-layer validation: the AOT JAX/Pallas artifacts executed through
-//! PJRT must agree with the native rust mirror of the cost model.
-//! Requires `make artifacts` (the Makefile test target guarantees it).
+//! Cross-layer validation: the batched runtime backend (the AOT
+//! JAX/Pallas artifacts through PJRT when built with `--features pjrt`,
+//! the f32 native mirror otherwise) must agree with the f64 analytic
+//! cost model. With `pjrt`, run `make artifacts` first.
 
 use catla::config::params::{HadoopConfig, N_PARAMS, PARAMS};
 use catla::hadoop::{costmodel, ClusterSpec};
@@ -102,7 +103,12 @@ fn scorer_interface_works_through_pjrt() {
     let scores = exec.score(&cfgs).unwrap();
     assert_eq!(scores.len(), 10);
     assert!(scores.iter().all(|s| s.is_finite() && *s > 0.0));
-    assert_eq!(exec.name(), "pjrt-costmodel");
+    let expect = if cfg!(feature = "pjrt") {
+        "pjrt-costmodel"
+    } else {
+        "native-costmodel"
+    };
+    assert_eq!(exec.name(), expect);
 }
 
 #[test]

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate: format check, clippy (-D warnings, the ask/tell core must stay
+# lint-clean), release build, test suite. fmt/clippy are skipped with a
+# notice when the toolchain component is not installed (offline images).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== fmt =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "rustfmt not installed — skipped"
+fi
+
+echo "== clippy (optim::core and the rest of the lib, -D warnings) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --lib --all-targets -- -D warnings
+else
+    echo "clippy not installed — skipped"
+fi
+
+echo "== build =="
+cargo build --release
+
+echo "== test =="
+cargo test -q
+
+echo "CI OK"
