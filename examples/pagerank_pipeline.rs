@@ -51,7 +51,7 @@ fn main() -> Result<(), String> {
     let cfg_args = TuningSpec::fig3()
         .ranges
         .iter()
-        .map(|r| format!("conf.{}={}", r.meta.name, outcome.best_config.get(r.meta.index)))
+        .map(|r| format!("conf.{}={}", r.name(), outcome.best_config.get(r.index)))
         .collect::<Vec<_>>()
         .join(" ");
 

@@ -25,7 +25,7 @@ fn main() {
 
     println!("tuning {} over {} parameters, budget {budget} evaluations:", workload.name, spec.dims());
     for r in &spec.ranges {
-        println!("  {:<48} [{}, {}]", r.meta.name, r.lo, r.hi);
+        println!("  {:<48} [{}, {}]", r.name(), r.lo, r.hi);
     }
 
     // default-config baseline (what a user who never tunes gets)
@@ -41,8 +41,8 @@ fn main() {
     for r in &spec.ranges {
         println!(
             "  {:<48} {}",
-            r.meta.name,
-            outcome.best_config.get(r.meta.index)
+            r.name(),
+            outcome.best_config.get(r.index)
         );
     }
     println!(

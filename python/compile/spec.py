@@ -8,6 +8,10 @@ Single source of truth (python side) for:
 
 The rust simulator (`rust/src/hadoop/costmodel.rs`) mirrors these indices
 and formulas; integration tests compare the two through the AOT artifacts.
+The rust parameter table lives in `rust/src/config/space.rs`
+(`builtin_defs()`): its first N_PARAMS rows are the stable AOT-artifact
+prefix in exactly this order — spec-declared extra parameters are
+appended after the prefix and never enter the artifact row.
 
 Units: **megabytes** and **seconds** everywhere (f32 stays well inside its
 7 significant digits for multi-TB inputs expressed in MB).

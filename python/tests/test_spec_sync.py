@@ -19,32 +19,45 @@ def read(rel):
 
 
 class TestParamTableSync:
+    """The builtin registry prefix in rust/src/config/space.rs
+    (`builtin_defs()`) is the AOT-artifact row layout; it must stay in
+    lockstep with spec.py's PARAM_NAMES / PARAM_LO / PARAM_HI."""
+
     def setup_method(self):
-        self.rust = read("rust/src/config/params.rs")
+        self.rust = read("rust/src/config/space.rs")
+        body = self.rust.split("pub fn builtin_defs")[1].split("\n}")[0]
+        # one constructor call per builtin row:
+        #   ParamDef::int("name", lo, hi, default)
+        #   ParamDef::float("name", lo, hi, default)
+        #   ParamDef::bool("name", default)
+        self.rows = re.findall(
+            r'ParamDef::(int|float|bool)\(\s*"([^"]+)"([^)]*)\)', body)
 
     def test_param_count_matches(self):
-        m = re.search(r"pub const N_PARAMS: usize = (\d+);", self.rust)
+        m = re.search(r"pub const N_AOT_PARAMS: usize = (\d+);", self.rust)
         assert int(m.group(1)) == S.N_PARAMS
+        assert len(self.rows) == S.N_PARAMS
+
+    def _bounds(self, kind, args):
+        if kind == "bool":
+            return 0.0, 1.0
+        nums = [float(x) for x in re.findall(r"[\d.]+", args)]
+        return nums[0], nums[1]
 
     def test_names_order_and_bounds_match(self):
-        rows = re.findall(
-            r'ParamMeta \{ index: (\w+), name: "([^"]+)", lo: ([\d.]+), '
-            r"hi: ([\d.]+), integer: (\w+)", self.rust)
-        assert len(rows) == S.N_PARAMS
-        for i, (_, name, lo, hi, _integer) in enumerate(rows):
+        for i, (kind, name, args) in enumerate(self.rows):
             assert name == S.PARAM_NAMES[i], f"param {i} name drift"
-            assert float(lo) == S.PARAM_LO[i], f"{name} lo drift"
-            assert float(hi) == S.PARAM_HI[i], f"{name} hi drift"
+            lo, hi = self._bounds(kind, args)
+            assert lo == S.PARAM_LO[i], f"{name} lo drift"
+            assert hi == S.PARAM_HI[i], f"{name} hi drift"
 
     def test_integerness_matches_test_generator(self):
-        rows = [m[4] for m in re.findall(
-            r'ParamMeta \{ index: (\w+), name: "([^"]+)", lo: ([\d.]+), '
-            r"hi: ([\d.]+), integer: (\w+)", self.rust)]
         int_idx = {S.P_REDUCES, S.P_IO_SORT_MB, S.P_SORT_FACTOR,
                    S.P_PARALLEL_COPIES, S.P_MAP_MEM_MB, S.P_RED_MEM_MB,
                    S.P_SPLIT_MB, S.P_COMPRESS}
-        for i, flag in enumerate(rows):
-            assert (flag == "true") == (i in int_idx), f"param {i} integer drift"
+        for i, (kind, name, _args) in enumerate(self.rows):
+            discrete = kind in ("int", "bool")
+            assert discrete == (i in int_idx), f"param {i} ({name}) integer drift"
 
 
 class TestConstsLayoutSync:

@@ -11,7 +11,8 @@
 //!
 //! Run: `cargo bench --bench runtime_batch_eval`
 
-use catla::config::params::{HadoopConfig, PARAMS};
+use catla::config::params::HadoopConfig;
+use catla::config::space::ParamRegistry;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{costmodel, ClusterSpec, SimCluster};
 use catla::optim::{ClusterObjective, Driver, Method, ParamSpace};
@@ -25,8 +26,8 @@ fn random_configs(n: usize, seed: u64) -> Vec<HadoopConfig> {
     (0..n)
         .map(|_| {
             let mut c = HadoopConfig::default();
-            for p in PARAMS.iter() {
-                c.set(p.index, rng.range_f64(p.lo, p.hi));
+            for (i, d) in ParamRegistry::builtin().defs().iter().enumerate() {
+                c.set(i, rng.range_f64(d.lo, d.hi));
             }
             c
         })

@@ -1,0 +1,77 @@
+//! PERF2 — parameter-space decode throughput: `ParamSpace::decode` is on
+//! every optimizer's hot path (each candidate crosses unit-cube →
+//! `HadoopConfig` exactly once), so its cost bounds ask-batch overhead.
+//! Measures legacy linear specs against the typed redesign's categorical
+//! + log + constraint specs and records results to
+//! `BENCH_space_decode.json` (CI asserts the file is regenerated).
+//!
+//! Run: `cargo bench --bench space_decode` (CATLA_BENCH_QUICK=1 to shorten)
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::optim::ParamSpace;
+use catla::util::bench::Bench;
+use catla::util::json::Json;
+use catla::util::rng::Rng;
+
+fn points(dims: usize, n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..dims).map(|_| rng.f64()).collect())
+        .collect()
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let specs: Vec<(&str, TuningSpec)> = vec![
+        ("fig2 2-param linear", TuningSpec::fig2()),
+        ("fig3 4-param linear", TuningSpec::fig3()),
+        (
+            "typed 4-param cat+log+constraint",
+            TuningSpec::parse(
+                "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+                 param mapreduce.task.io.sort.mb int 64 1024 log\n\
+                 param mapreduce.map.memory.mb int 512 4096 log\n\
+                 param mapreduce.map.output.compress bool\n\
+                 constraint io.sort.mb <= 0.7*map.memory.mb\n",
+            )
+            .unwrap(),
+        ),
+    ];
+
+    let mut results = Vec::new();
+    for (label, spec) in &specs {
+        let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+        let xs = points(space.dims(), 4096, 42);
+        let mut i = 0usize;
+        let mean_ns = bench
+            .run_throughput(&format!("decode {label}"), 1.0, "decodes", || {
+                i = (i + 1) % xs.len();
+                space.decode(&xs[i]).values.len()
+            })
+            .mean_ns;
+        let mut row = Json::obj();
+        row.set("spec", Json::Str(label.to_string()));
+        row.set("dims", Json::Num(space.dims() as f64));
+        row.set("constraints", Json::Num(spec.constraints.len() as f64));
+        row.set("mean_ns", Json::Num(mean_ns));
+        row.set("decodes_per_sec", Json::Num(1e9 / mean_ns));
+        results.push(row);
+
+        // encode/decode round-trip (resume replay's path)
+        let cfgs: Vec<HadoopConfig> = xs[..256].iter().map(|x| space.decode(x)).collect();
+        let mut j = 0usize;
+        bench.run_throughput(&format!("encode {label}"), 1.0, "encodes", || {
+            j = (j + 1) % cfgs.len();
+            space.encode(&cfgs[j]).len()
+        });
+    }
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("space_decode".into()));
+    doc.set("results", Json::Arr(results));
+    std::fs::write("BENCH_space_decode.json", doc.to_string() + "\n").unwrap();
+    println!("wrote BENCH_space_decode.json");
+
+    bench.print_table("PERF2 — ParamSpace decode/encode throughput");
+}

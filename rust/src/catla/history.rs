@@ -79,7 +79,7 @@ impl History {
             "best_so_far".to_string(),
         ];
         for r in &spec.ranges {
-            h.push(r.meta.name.to_string());
+            h.push(r.name().to_string());
         }
         h
     }
@@ -104,7 +104,7 @@ impl History {
                 format!("{:.3}", rec.best_so_far),
             ];
             for r in &spec.ranges {
-                row.push(format!("{}", rec.config.get(r.meta.index)));
+                row.push(format!("{}", rec.config.get(r.index)));
             }
             csv.push_row(row);
         }
@@ -125,7 +125,7 @@ impl History {
             "best_runtime_s".to_string(),
         ];
         for r in &spec.ranges {
-            header.push(format!("best.{}", r.meta.name));
+            header.push(format!("best.{}", r.name()));
         }
         let mut csv = if path.is_file() {
             Csv::load(&path)?
@@ -144,7 +144,7 @@ impl History {
             format!("{:.3}", outcome.best_value),
         ];
         for r in &spec.ranges {
-            row.push(format!("{}", outcome.best_config.get(r.meta.index)));
+            row.push(format!("{}", outcome.best_config.get(r.index)));
         }
         csv.push_row(row);
         csv.save(&path).map_err(|e| e.to_string())
@@ -184,7 +184,7 @@ mod tests {
         let mut rec = Recorder::new();
         for (i, v) in values.iter().enumerate() {
             let mut cfg = HadoopConfig::default();
-            cfg.set(spec.ranges[0].meta.index, 2.0 + i as f64 * 2.0);
+            cfg.set(spec.ranges[0].index, 2.0 + i as f64 * 2.0);
             rec.record(vec![0.5; spec.dims()], cfg, *v);
         }
         rec.finish("bobyqa")

@@ -54,13 +54,15 @@ impl Properties {
             None => self.entries.push((key.to_string(), value.to_string())),
         }
     }
+}
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
+/// Prints exactly what [`Properties::parse`] accepts.
+impl std::fmt::Display for Properties {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         for (k, v) in &self.entries {
-            s.push_str(&format!("{k}={v}\n"));
+            writeln!(f, "{k}={v}")?;
         }
-        s
+        Ok(())
     }
 }
 
@@ -160,13 +162,29 @@ impl Project {
             .ok_or_else(|| format!("unknown workload {name:?} (known: {:?})", workloads::BUILTIN_NAMES))
     }
 
-    /// Base Hadoop configuration: defaults + `conf.<param>=value` overrides.
+    /// Base Hadoop configuration: defaults + `conf.<param>=value`
+    /// overrides. Laid out on the spec's registry when the project has a
+    /// `params.spec` (so overrides can target spec-declared parameters);
+    /// categorical params accept their label as the value.
     pub fn base_config(&self) -> Result<HadoopConfig, String> {
-        let mut cfg = HadoopConfig::default();
+        let registry = match &self.spec {
+            Some(s) => s.registry.clone(),
+            None => crate::config::space::ParamRegistry::builtin(),
+        };
+        let mut cfg = HadoopConfig::for_registry(registry);
         for (k, v) in &self.job.entries {
             if let Some(param) = k.strip_prefix("conf.") {
-                let val: f64 = v.parse().map_err(|_| format!("bad value for {k}"))?;
-                cfg.set_by_name(param, val)?;
+                // ParamDef::parse_value is the inverse of format_value,
+                // so every value form the system prints can be fed back
+                // in: categorical labels, true/false for bools, numbers
+                let (index, val) = {
+                    let (i, d) = cfg.registry().resolve(param)?;
+                    let val = d
+                        .parse_value(v)
+                        .map_err(|e| format!("bad value for {k}: {e}"))?;
+                    (i, val)
+                };
+                cfg.set(index, val);
             }
         }
         Ok(cfg)
@@ -282,6 +300,36 @@ mod tests {
             p.base_config().unwrap().get(crate::config::params::P_REDUCES),
             12.0
         );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn conf_overrides_reach_spec_declared_params() {
+        let dir = tmp("conf-extra");
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 512.0).unwrap();
+        std::fs::write(
+            dir.join("params.spec"),
+            "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+             param x.shuffle.buffer.kb int 32 4096\n",
+        )
+        .unwrap();
+        let mut text = std::fs::read_to_string(dir.join("job.properties")).unwrap();
+        text.push_str(
+            "conf.x.shuffle.buffer.kb=256\nconf.mapreduce.map.output.compress.codec=snappy\n\
+             conf.mapreduce.map.output.compress=true\n",
+        );
+        std::fs::write(dir.join("job.properties"), text).unwrap();
+        let p = Project::load(&dir).unwrap();
+        let cfg = p.base_config().unwrap();
+        assert_eq!(cfg.get_by_name("x.shuffle.buffer.kb").unwrap(), 256.0);
+        // the printed form of a bool (-D...compress=true) feeds back in
+        assert!(cfg.get_bool(crate::config::params::P_COMPRESS));
+        let codec = cfg
+            .registry()
+            .index_of("mapreduce.map.output.compress.codec")
+            .unwrap();
+        assert_eq!(cfg.get_category(codec), Some("snappy"));
+        cfg.validate().unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -33,8 +33,8 @@ impl PriorRuns {
             .ranges
             .iter()
             .map(|r| {
-                csv.col_index(r.meta.name)
-                    .ok_or_else(|| format!("log missing column {}", r.meta.name))
+                csv.col_index(r.name())
+                    .ok_or_else(|| format!("log missing column {}", r.name()))
             })
             .collect::<Result<_, _>>()?;
         let mut evals = Vec::with_capacity(csv.rows.len());
@@ -56,19 +56,21 @@ impl PriorRuns {
     }
 
     /// Reconstruct replayable `EvalRecord`s against a parameter space.
-    pub fn to_records(&self, spec: &TuningSpec, space: &ParamSpace, project: &Project)
-        -> Result<Vec<EvalRecord>, String>
-    {
-        let base = project.base_config()?;
+    pub fn to_records(&self, space: &ParamSpace) -> Result<Vec<EvalRecord>, String> {
+        let base = space.base.clone();
         Ok(self
             .evals
             .iter()
             .enumerate()
             .map(|(i, (xs, v))| {
                 let mut cfg = base.clone();
-                for (r, x) in spec.ranges.iter().zip(xs) {
-                    cfg.set(r.meta.index, *x);
+                for (r, x) in space.spec.ranges.iter().zip(xs) {
+                    cfg.set(r.index, *x);
                 }
+                // same constraint repair as decode, so the rebuilt
+                // config is exactly the one that was evaluated (grid's
+                // resume dedup keys on it)
+                space.spec.repair(&mut cfg.values);
                 EvalRecord {
                     iter: i + 1,
                     unit_x: space.encode(&cfg),
@@ -112,7 +114,7 @@ pub fn resume_tuning(
         .unwrap_or(7);
     let workload = project.workload()?;
     let space = ParamSpace::new(spec.clone(), project.base_config()?);
-    let records = prior.to_records(&spec, &space, project)?;
+    let records = prior.to_records(&space)?;
 
     // replay the checkpoint into a fresh optimizer, then keep driving;
     // the driver truncates replay to its budget, so clamp the total up

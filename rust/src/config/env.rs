@@ -7,6 +7,7 @@
 //! the cluster to synthesize.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::Path;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -68,14 +69,6 @@ impl HadoopEnv {
         std::fs::write(path, self.to_string())
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::from("# Catla cluster environment\n");
-        for (k, v) in &self.entries {
-            out.push_str(&format!("{k}={v}\n"));
-        }
-        out
-    }
-
     pub fn get(&self, key: &str) -> Option<&str> {
         self.entries.get(key).map(|s| s.as_str())
     }
@@ -90,6 +83,18 @@ impl HadoopEnv {
 
     pub fn set(&mut self, key: &str, value: &str) {
         self.entries.insert(key.to_string(), value.to_string());
+    }
+}
+
+/// Prints exactly what [`HadoopEnv::parse`] accepts — parse → print →
+/// parse round-trips.
+impl fmt::Display for HadoopEnv {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "# Catla cluster environment")?;
+        for (k, v) in &self.entries {
+            writeln!(f, "{k}={v}")?;
+        }
+        Ok(())
     }
 }
 

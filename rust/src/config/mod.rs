@@ -1,10 +1,13 @@
-//! Configuration layer: Hadoop parameter metadata, the `HadoopEnv.txt`
-//! project environment file, and tuning parameter-spec files.
+//! Configuration layer: the typed parameter-space core (`space`), Hadoop
+//! configuration values over it (`params`), the `HadoopEnv.txt` project
+//! environment file, and tuning parameter-spec files.
 
 pub mod env;
 pub mod params;
+pub mod space;
 pub mod spec;
 
 pub use env::HadoopEnv;
-pub use params::{HadoopConfig, ParamMeta, N_PARAMS, PARAMS};
+pub use params::{HadoopConfig, N_AOT_PARAMS};
+pub use space::{Bound, Constraint, ParamDef, ParamKind, ParamRegistry, Transform};
 pub use spec::{ParamRange, TuningSpec};

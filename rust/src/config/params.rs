@@ -1,11 +1,21 @@
-//! Hadoop configuration-parameter metadata.
+//! Hadoop configuration values over a [`ParamRegistry`].
 //!
-//! This is the rust mirror of `python/compile/spec.py`: the parameter
-//! order, bounds and integer-ness MUST stay in sync — the AOT cost-model
-//! artifacts consume config vectors laid out exactly like this, and
-//! `rust/tests/runtime_integration.rs` cross-checks the two.
+//! [`HadoopConfig`] is a dynamic, registry-owned value vector: one `f64`
+//! slot per registered parameter, in registry order. The first
+//! [`N_AOT_PARAMS`] slots are the stable AOT-artifact prefix mirrored by
+//! `python/compile/spec.py` ([`HadoopConfig::to_f32_row`] exports exactly
+//! that prefix; `rust/tests/runtime_integration.rs` and
+//! `python/tests/test_spec_sync.py` cross-check the two sides).
+//! Parameters declared in `params.spec` beyond the prefix simply extend
+//! the vector — no rust change required.
 
-/// Indices into a config vector. Keep in sync with python spec.py.
+use std::sync::Arc;
+
+pub use crate::config::space::N_AOT_PARAMS;
+use crate::config::space::{ParamDef, ParamKind, ParamRegistry};
+
+/// Indices of the builtin parameters (the stable AOT prefix).
+/// Keep in sync with python spec.py.
 pub const P_REDUCES: usize = 0;
 pub const P_IO_SORT_MB: usize = 1;
 pub const P_SORT_FACTOR: usize = 2;
@@ -16,126 +26,191 @@ pub const P_MAP_MEM_MB: usize = 6;
 pub const P_RED_MEM_MB: usize = 7;
 pub const P_COMPRESS: usize = 8;
 pub const P_SPLIT_MB: usize = 9;
-pub const N_PARAMS: usize = 10;
 
-/// Static description of one tunable Hadoop parameter.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct ParamMeta {
-    pub index: usize,
-    /// Full Hadoop property name, e.g. `mapreduce.task.io.sort.mb`.
-    pub name: &'static str,
-    pub lo: f64,
-    pub hi: f64,
-    /// Integer-valued parameters are rounded before use.
-    pub integer: bool,
-    /// Hadoop 2.7.2 default value.
-    pub default: f64,
-}
-
-/// The parameter table, in config-vector order.
-pub const PARAMS: [ParamMeta; N_PARAMS] = [
-    ParamMeta { index: P_REDUCES, name: "mapreduce.job.reduces", lo: 1.0, hi: 64.0, integer: true, default: 1.0 },
-    ParamMeta { index: P_IO_SORT_MB, name: "mapreduce.task.io.sort.mb", lo: 16.0, hi: 2048.0, integer: true, default: 100.0 },
-    ParamMeta { index: P_SORT_FACTOR, name: "mapreduce.task.io.sort.factor", lo: 2.0, hi: 128.0, integer: true, default: 10.0 },
-    ParamMeta { index: P_SPILL_PERCENT, name: "mapreduce.map.sort.spill.percent", lo: 0.50, hi: 0.95, integer: false, default: 0.80 },
-    ParamMeta { index: P_PARALLEL_COPIES, name: "mapreduce.reduce.shuffle.parallelcopies", lo: 1.0, hi: 64.0, integer: true, default: 5.0 },
-    ParamMeta { index: P_SLOWSTART, name: "mapreduce.job.reduce.slowstart.completedmaps", lo: 0.05, hi: 1.0, integer: false, default: 0.05 },
-    ParamMeta { index: P_MAP_MEM_MB, name: "mapreduce.map.memory.mb", lo: 512.0, hi: 4096.0, integer: true, default: 1024.0 },
-    ParamMeta { index: P_RED_MEM_MB, name: "mapreduce.reduce.memory.mb", lo: 512.0, hi: 8192.0, integer: true, default: 1024.0 },
-    ParamMeta { index: P_COMPRESS, name: "mapreduce.map.output.compress", lo: 0.0, hi: 1.0, integer: true, default: 0.0 },
-    ParamMeta { index: P_SPLIT_MB, name: "mapreduce.input.fileinputformat.split.mb", lo: 32.0, hi: 512.0, integer: true, default: 128.0 },
-];
-
-/// Look up a parameter by its Hadoop property name.
-pub fn by_name(name: &str) -> Option<&'static ParamMeta> {
-    PARAMS.iter().find(|p| p.name == name)
-}
-
-/// A concrete Hadoop configuration: one value per tunable parameter.
-#[derive(Clone, Debug, PartialEq)]
+/// A concrete Hadoop configuration: one value per registered parameter,
+/// laid out in the order of the [`ParamRegistry`] it was built against.
+#[derive(Clone, Debug)]
 pub struct HadoopConfig {
-    pub values: [f64; N_PARAMS],
+    registry: Arc<ParamRegistry>,
+    /// Value vector in registry order (categorical params store the
+    /// 0-based category index). Public for tests and hot loops; use
+    /// [`HadoopConfig::set`] to keep values snapped and in bounds.
+    pub values: Vec<f64>,
 }
 
 impl Default for HadoopConfig {
     fn default() -> Self {
-        let mut values = [0.0; N_PARAMS];
-        for p in PARAMS.iter() {
-            values[p.index] = p.default;
-        }
-        Self { values }
+        Self::for_registry(ParamRegistry::builtin())
+    }
+}
+
+impl PartialEq for HadoopConfig {
+    fn eq(&self, other: &Self) -> bool {
+        self.values == other.values
+            && (Arc::ptr_eq(&self.registry, &other.registry) || self.registry == other.registry)
     }
 }
 
 impl HadoopConfig {
+    /// Defaults for every parameter in `registry`.
+    pub fn for_registry(registry: Arc<ParamRegistry>) -> HadoopConfig {
+        let values = registry.defs().iter().map(|d| d.default).collect();
+        HadoopConfig { registry, values }
+    }
+
+    /// The registry this config's value vector is laid out against.
+    pub fn registry(&self) -> &Arc<ParamRegistry> {
+        &self.registry
+    }
+
+    /// Definition of the parameter at `index`.
+    pub fn def(&self, index: usize) -> &ParamDef {
+        self.registry.get(index)
+    }
+
+    /// Number of parameters (value-vector length).
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Migrate onto another registry: parameters present in both keep
+    /// their (re-snapped) values, new parameters take their defaults.
+    /// Categorical values carry over by *label* (the stored index is
+    /// registry-specific); a label missing from the target's category
+    /// list falls back to the target's default.
+    pub fn rebased(&self, registry: &Arc<ParamRegistry>) -> HadoopConfig {
+        if Arc::ptr_eq(&self.registry, registry) {
+            return self.clone();
+        }
+        let mut out = HadoopConfig::for_registry(registry.clone());
+        for (i, d) in registry.defs().iter().enumerate() {
+            if let Some((j, src)) = self.registry.by_name(&d.name) {
+                out.values[i] = if matches!(d.kind, ParamKind::Categorical(_)) {
+                    src.category_name(self.values[j])
+                        .and_then(|label| d.category_index(label))
+                        .map(|idx| idx as f64)
+                        .unwrap_or(d.default)
+                } else {
+                    d.snap(self.values[j])
+                };
+            }
+        }
+        out
+    }
+
     pub fn get(&self, index: usize) -> f64 {
         self.values[index]
     }
 
-    /// Set by index, clamping to bounds and rounding integer params.
+    /// Set by index, clamping to bounds and snapping discrete kinds.
     pub fn set(&mut self, index: usize, value: f64) -> &mut Self {
-        let meta = &PARAMS[index];
-        let v = value.clamp(meta.lo, meta.hi);
-        self.values[index] = if meta.integer { v.round() } else { v };
+        self.values[index] = self.registry.get(index).snap(value);
         self
     }
 
-    pub fn set_by_name(&mut self, name: &str, value: f64) -> Result<&mut Self, String> {
-        let meta = by_name(name).ok_or_else(|| format!("unknown parameter {name:?}"))?;
-        Ok(self.set(meta.index, value))
+    /// Look up by full property name or unambiguous dotted suffix.
+    pub fn get_by_name(&self, name: &str) -> Result<f64, String> {
+        let (i, _) = self.registry.resolve(name)?;
+        Ok(self.values[i])
     }
 
-    /// All values within bounds and integer params integral?
+    pub fn set_by_name(&mut self, name: &str, value: f64) -> Result<&mut Self, String> {
+        let (i, _) = self.registry.resolve(name)?;
+        Ok(self.set(i, value))
+    }
+
+    // ---- typed accessors -------------------------------------------------
+
+    pub fn get_i64(&self, index: usize) -> i64 {
+        self.values[index].round() as i64
+    }
+
+    pub fn get_bool(&self, index: usize) -> bool {
+        self.values[index] != 0.0
+    }
+
+    /// Category label of a categorical parameter.
+    pub fn get_category(&self, index: usize) -> Option<&str> {
+        self.registry.get(index).category_name(self.values[index])
+    }
+
+    /// Set a categorical parameter by label.
+    pub fn set_category(&mut self, name: &str, label: &str) -> Result<&mut Self, String> {
+        let (i, d) = self.registry.resolve(name)?;
+        let idx = d.category_index(label).ok_or_else(|| {
+            format!(
+                "{}: unknown category {label:?} (known: {:?})",
+                d.name,
+                d.categories().unwrap_or(&[])
+            )
+        })?;
+        self.values[i] = idx as f64;
+        Ok(self)
+    }
+
+    // ---- validity / rendering -------------------------------------------
+
+    /// All values within bounds and discrete params integral?
     pub fn validate(&self) -> Result<(), String> {
-        for p in PARAMS.iter() {
-            let v = self.values[p.index];
-            if !(p.lo..=p.hi).contains(&v) {
-                return Err(format!("{} = {v} outside [{}, {}]", p.name, p.lo, p.hi));
+        if self.values.len() != self.registry.len() {
+            return Err(format!(
+                "config has {} values for {} registered parameters",
+                self.values.len(),
+                self.registry.len()
+            ));
+        }
+        for (d, &v) in self.registry.defs().iter().zip(&self.values) {
+            if !(d.lo..=d.hi).contains(&v) {
+                return Err(format!("{} = {v} outside [{}, {}]", d.name, d.lo, d.hi));
             }
-            if p.integer && v.fract() != 0.0 {
-                return Err(format!("{} = {v} must be integral", p.name));
+            if d.kind.is_discrete() && v.fract() != 0.0 {
+                return Err(format!("{} = {v} must be integral", d.name));
             }
         }
         Ok(())
     }
 
     /// Render as Hadoop `-D key=value` CLI arguments (what a real Catla
-    /// passes to `hadoop jar`).
+    /// passes to `hadoop jar`) — bools as `true`/`false`, categoricals
+    /// by label.
     pub fn to_d_args(&self) -> Vec<String> {
-        PARAMS
+        self.registry
+            .defs()
             .iter()
-            .map(|p| {
-                let v = self.values[p.index];
-                if p.index == P_COMPRESS {
-                    format!("-D{}={}", p.name, v != 0.0)
-                } else if p.integer {
-                    format!("-D{}={}", p.name, v as i64)
-                } else {
-                    format!("-D{}={v}", p.name)
-                }
-            })
+            .zip(&self.values)
+            .map(|(d, &v)| format!("-D{}={}", d.name, d.format_value(v)))
             .collect()
     }
 
-    /// Render as f32 feature row for the AOT cost model.
-    pub fn to_f32_row(&self) -> [f32; N_PARAMS] {
-        let mut row = [0f32; N_PARAMS];
-        for (i, v) in self.values.iter().enumerate() {
-            row[i] = *v as f32;
+    /// Render as the f32 feature row the AOT cost model consumes: the
+    /// stable builtin prefix, in registry order. Parameters beyond the
+    /// prefix are not part of the artifact contract and are excluded.
+    pub fn to_f32_row(&self) -> [f32; N_AOT_PARAMS] {
+        let mut row = [0f32; N_AOT_PARAMS];
+        for (r, v) in row.iter_mut().zip(&self.values) {
+            *r = *v as f32;
         }
         row
     }
 
-    /// Compact human-readable summary used in history CSVs.
+    /// Compact human-readable summary used in history CSVs and the CLI.
     pub fn summary(&self) -> String {
-        PARAMS
+        self.registry
+            .defs()
             .iter()
-            .map(|p| {
-                let short = p.name.rsplit('.').next().unwrap_or(p.name);
-                if p.integer {
-                    format!("{short}={}", self.values[p.index] as i64)
-                } else {
-                    format!("{short}={:.2}", self.values[p.index])
+            .zip(&self.values)
+            .map(|(d, &v)| {
+                let short = d.name.rsplit('.').next().unwrap_or(&d.name);
+                match &d.kind {
+                    ParamKind::Float => format!("{short}={v:.2}"),
+                    ParamKind::Categorical(_) => {
+                        format!("{short}={}", d.category_name(v).unwrap_or("?"))
+                    }
+                    _ => format!("{short}={}", v as i64),
                 }
             })
             .collect::<Vec<_>>()
@@ -146,6 +221,7 @@ impl HadoopConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::space::builtin_defs;
 
     #[test]
     fn defaults_validate() {
@@ -168,6 +244,9 @@ mod tests {
         let mut c = HadoopConfig::default();
         c.set_by_name("mapreduce.job.reduces", 8.0).unwrap();
         assert_eq!(c.get(P_REDUCES), 8.0);
+        // dotted-suffix resolution works too
+        c.set_by_name("io.sort.mb", 256.0).unwrap();
+        assert_eq!(c.get(P_IO_SORT_MB), 256.0);
         assert!(c.set_by_name("not.a.param", 1.0).is_err());
     }
 
@@ -181,11 +260,13 @@ mod tests {
     #[test]
     fn bounds_match_python_spec() {
         // spot-check the values mirrored from python/compile/spec.py
-        assert_eq!(PARAMS[P_REDUCES].lo, 1.0);
-        assert_eq!(PARAMS[P_REDUCES].hi, 64.0);
-        assert_eq!(PARAMS[P_IO_SORT_MB].lo, 16.0);
-        assert_eq!(PARAMS[P_IO_SORT_MB].hi, 2048.0);
-        assert_eq!(PARAMS[P_SPLIT_MB].hi, 512.0);
+        let defs = builtin_defs();
+        assert_eq!(defs[P_REDUCES].lo, 1.0);
+        assert_eq!(defs[P_REDUCES].hi, 64.0);
+        assert_eq!(defs[P_IO_SORT_MB].lo, 16.0);
+        assert_eq!(defs[P_IO_SORT_MB].hi, 2048.0);
+        assert_eq!(defs[P_SPLIT_MB].hi, 512.0);
+        assert_eq!(defs.len(), N_AOT_PARAMS);
     }
 
     #[test]
@@ -193,5 +274,78 @@ mod tests {
         let mut c = HadoopConfig::default();
         c.values[P_REDUCES] = 100.0; // bypass set()
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn extended_registry_configs() {
+        let reg = ParamRegistry::with_extras(vec![
+            ParamDef::cat(
+                "mapreduce.map.output.compress.codec",
+                &["none", "snappy", "lz4"],
+                "none",
+            ),
+            ParamDef::int("x.shuffle.buffer.kb", 32.0, 4096.0, 128.0).log(),
+        ])
+        .unwrap();
+        let mut c = HadoopConfig::for_registry(reg);
+        assert_eq!(c.len(), N_AOT_PARAMS + 2);
+        c.validate().unwrap();
+        c.set_category("mapreduce.map.output.compress.codec", "snappy")
+            .unwrap();
+        assert_eq!(c.get_category(N_AOT_PARAMS), Some("snappy"));
+        assert!(c.set_category("compress.codec", "gzip").is_err());
+        let args = c.to_d_args();
+        assert!(args.contains(&"-Dmapreduce.map.output.compress.codec=snappy".to_string()));
+        // the AOT row still covers exactly the builtin prefix
+        let row = c.to_f32_row();
+        assert_eq!(row.len(), N_AOT_PARAMS);
+        assert_eq!(row[P_IO_SORT_MB], 100.0);
+    }
+
+    #[test]
+    fn rebased_keeps_shared_values_and_defaults_new_ones() {
+        let mut base = HadoopConfig::default();
+        base.set(P_REDUCES, 16.0);
+        let reg = ParamRegistry::with_extras(vec![ParamDef::bool("x.jvm.reuse", true)]).unwrap();
+        let moved = base.rebased(&reg);
+        assert_eq!(moved.get(P_REDUCES), 16.0);
+        assert_eq!(moved.get(N_AOT_PARAMS), 1.0); // new param at its default
+        moved.validate().unwrap();
+        // rebasing onto the same registry is the identity
+        assert_eq!(base.rebased(base.registry()), base);
+    }
+
+    #[test]
+    fn rebased_maps_categoricals_by_label() {
+        let a = ParamRegistry::with_extras(vec![ParamDef::cat(
+            "x.codec",
+            &["none", "snappy", "lz4"],
+            "none",
+        )])
+        .unwrap();
+        let b = ParamRegistry::with_extras(vec![ParamDef::cat(
+            "x.codec",
+            &["lz4", "none"],
+            "none",
+        )])
+        .unwrap();
+        let mut cfg = HadoopConfig::for_registry(a);
+        cfg.set_category("x.codec", "lz4").unwrap();
+        let moved = cfg.rebased(&b);
+        // index 2 in A must become index 0 ("lz4") in B, not clamp to 1
+        assert_eq!(moved.get_category(N_AOT_PARAMS), Some("lz4"));
+        // a label missing from the target falls back to its default
+        cfg.set_category("x.codec", "snappy").unwrap();
+        assert_eq!(cfg.rebased(&b).get_category(N_AOT_PARAMS), Some("none"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let mut c = HadoopConfig::default();
+        c.set(P_COMPRESS, 1.0);
+        assert!(c.get_bool(P_COMPRESS));
+        assert_eq!(c.get_i64(P_REDUCES), 1);
+        assert_eq!(c.get_category(P_REDUCES), None); // not categorical
+        assert_eq!(c.get_by_name("map.memory.mb").unwrap(), 1024.0);
     }
 }

@@ -1,0 +1,631 @@
+//! The typed parameter-space core: what a tunable Hadoop parameter *is*.
+//!
+//! BestConfig-style tuners work on heterogeneous spaces — integer counts,
+//! continuous fractions, booleans, categorical choices (codec, scheduler)
+//! — and DFO methods want all of them behind one normalized unit-cube
+//! contract. This module owns the typed side of that contract:
+//!
+//! * [`ParamDef`] — one tunable parameter: [`ParamKind`] (int / float /
+//!   bool / categorical), inclusive value bounds, Hadoop default, and the
+//!   [`Transform`] (linear or log) its ranges default to.
+//! * [`ParamRegistry`] — the ordered parameter table. The first
+//!   [`N_AOT_PARAMS`] entries are the **stable AOT-artifact prefix**
+//!   mirrored by `python/compile/spec.py` (never reorder or renumber
+//!   them: the compiled cost-model artifacts consume config rows in
+//!   exactly this layout). New parameters declared in `params.spec`
+//!   files are appended after the prefix without touching rust code.
+//! * [`Constraint`] — a validity predicate `value[lhs] <= bound`
+//!   (`constraint io.sort.mb <= 0.7*map.memory.mb`), repaired at decode
+//!   so optimizers only ever see valid configurations.
+//!
+//! `optim::space::ParamSpace` builds on these to provide the *only*
+//! unit-cube ⇄ `HadoopConfig` path in the system.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+/// Width of the AOT cost-model feature row: the builtin-prefix length.
+/// Keep in sync with `N_PARAMS` in `python/compile/spec.py`.
+pub const N_AOT_PARAMS: usize = 10;
+
+/// Value type of one tunable parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamKind {
+    /// Integer-valued; snapped by rounding.
+    Int,
+    /// Continuous.
+    Float,
+    /// 0/1 valued; rendered as `false`/`true` in Hadoop `-D` args.
+    Bool,
+    /// One of a fixed set of choices; the config vector stores the
+    /// 0-based category index.
+    Categorical(Vec<String>),
+}
+
+impl ParamKind {
+    /// Discrete kinds are snapped to whole numbers at decode.
+    pub fn is_discrete(&self) -> bool {
+        !matches!(self, ParamKind::Float)
+    }
+
+    /// Spec-file keyword for this kind.
+    pub fn token(&self) -> &'static str {
+        match self {
+            ParamKind::Int => "int",
+            ParamKind::Float => "float",
+            ParamKind::Bool => "bool",
+            ParamKind::Categorical(_) => "cat",
+        }
+    }
+}
+
+/// Scale on which a range is traversed in unit space. Log-scaled ranges
+/// spend equal unit-cube distance per multiplicative step — the right
+/// geometry for memory sizes spanning orders of magnitude.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transform {
+    Linear,
+    Log,
+}
+
+impl Transform {
+    /// Map a unit coordinate onto `[lo, hi]`.
+    pub fn from_unit(self, u: f64, lo: f64, hi: f64) -> f64 {
+        match self {
+            Transform::Linear => lo + u * (hi - lo),
+            Transform::Log => (lo.ln() + u * (hi.ln() - lo.ln())).exp(),
+        }
+    }
+
+    /// Map a value in `[lo, hi]` back to a unit coordinate (clamped).
+    pub fn to_unit(self, v: f64, lo: f64, hi: f64) -> f64 {
+        let u = match self {
+            Transform::Linear => (v - lo) / (hi - lo),
+            Transform::Log => (v.ln() - lo.ln()) / (hi.ln() - lo.ln()),
+        };
+        u.clamp(0.0, 1.0)
+    }
+}
+
+/// Static description of one tunable Hadoop parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamDef {
+    /// Full Hadoop property name, e.g. `mapreduce.task.io.sort.mb`.
+    pub name: String,
+    pub kind: ParamKind,
+    /// Inclusive bounds in value space (categorical: `0 ..= n-1`).
+    pub lo: f64,
+    pub hi: f64,
+    /// Hadoop 2.7.2 default value (categorical: default index).
+    pub default: f64,
+    /// Scale hint: ranges over this parameter default to this transform.
+    pub transform: Transform,
+}
+
+impl ParamDef {
+    pub fn int(name: &str, lo: f64, hi: f64, default: f64) -> ParamDef {
+        ParamDef {
+            name: name.to_string(),
+            kind: ParamKind::Int,
+            lo,
+            hi,
+            default,
+            transform: Transform::Linear,
+        }
+    }
+
+    pub fn float(name: &str, lo: f64, hi: f64, default: f64) -> ParamDef {
+        ParamDef {
+            name: name.to_string(),
+            kind: ParamKind::Float,
+            lo,
+            hi,
+            default,
+            transform: Transform::Linear,
+        }
+    }
+
+    pub fn bool(name: &str, default: bool) -> ParamDef {
+        ParamDef {
+            name: name.to_string(),
+            kind: ParamKind::Bool,
+            lo: 0.0,
+            hi: 1.0,
+            default: if default { 1.0 } else { 0.0 },
+            transform: Transform::Linear,
+        }
+    }
+
+    pub fn cat(name: &str, categories: &[&str], default: &str) -> ParamDef {
+        let cats: Vec<String> = categories.iter().map(|c| c.to_string()).collect();
+        // an unknown default label yields -1, which bounds-validation
+        // rejects at registry construction instead of silently using
+        // the first category
+        let default_idx = cats
+            .iter()
+            .position(|c| c == default)
+            .map(|i| i as f64)
+            .unwrap_or(-1.0);
+        let hi = (cats.len().max(1) - 1) as f64;
+        ParamDef {
+            name: name.to_string(),
+            kind: ParamKind::Categorical(cats),
+            lo: 0.0,
+            hi,
+            default: default_idx,
+            transform: Transform::Linear,
+        }
+    }
+
+    /// Builder: switch the default transform to log scale.
+    pub fn log(mut self) -> ParamDef {
+        self.transform = Transform::Log;
+        self
+    }
+
+    /// Clamp to bounds and snap discrete kinds to whole numbers.
+    /// Idempotent: `snap(snap(v)) == snap(v)`.
+    pub fn snap(&self, v: f64) -> f64 {
+        let v = v.clamp(self.lo, self.hi);
+        if self.kind.is_discrete() {
+            v.round()
+        } else {
+            v
+        }
+    }
+
+    /// Largest valid value not exceeding `v` (used by constraint repair,
+    /// where rounding *up* could re-violate the bound).
+    pub fn snap_down(&self, v: f64) -> f64 {
+        let v = v.clamp(self.lo, self.hi);
+        if self.kind.is_discrete() {
+            v.floor().max(self.lo)
+        } else {
+            v
+        }
+    }
+
+    /// Categories of a categorical parameter.
+    pub fn categories(&self) -> Option<&[String]> {
+        match &self.kind {
+            ParamKind::Categorical(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Category label for a stored value (categorical params only).
+    /// Out-of-range values yield `None` — never a plausible wrong label.
+    pub fn category_name(&self, v: f64) -> Option<&str> {
+        let cats = self.categories()?;
+        let i = v.round();
+        if i < 0.0 || i >= cats.len() as f64 {
+            return None;
+        }
+        cats.get(i as usize).map(|s| s.as_str())
+    }
+
+    /// Index of a category label (categorical params only).
+    pub fn category_index(&self, label: &str) -> Option<usize> {
+        self.categories()?.iter().position(|c| c == label)
+    }
+
+    /// Parse the `-D`-argument payload form back into a stored value —
+    /// the inverse of [`ParamDef::format_value`], so everything the
+    /// system prints can be fed back in (`true`/`false` for bools,
+    /// labels for categoricals, numbers otherwise).
+    pub fn parse_value(&self, s: &str) -> Result<f64, String> {
+        match &self.kind {
+            ParamKind::Bool => match s {
+                "true" => Ok(1.0),
+                "false" => Ok(0.0),
+                other => other
+                    .parse()
+                    .map_err(|_| format!("{}: bad bool value {s:?}", self.name)),
+            },
+            ParamKind::Categorical(_) => {
+                self.category_index(s).map(|i| i as f64).ok_or_else(|| {
+                    format!(
+                        "{}: unknown category {s:?} (known: {:?})",
+                        self.name,
+                        self.categories().unwrap_or(&[])
+                    )
+                })
+            }
+            _ => s
+                .parse()
+                .map_err(|_| format!("{}: bad value {s:?}", self.name)),
+        }
+    }
+
+    /// Render a stored value as the Hadoop `-D` argument payload.
+    pub fn format_value(&self, v: f64) -> String {
+        match &self.kind {
+            ParamKind::Bool => format!("{}", v != 0.0),
+            ParamKind::Categorical(_) => self
+                .category_name(v)
+                .unwrap_or("<bad-category>")
+                .to_string(),
+            ParamKind::Int => format!("{}", v as i64),
+            ParamKind::Float => format!("{v}"),
+        }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if let ParamKind::Categorical(cats) = &self.kind {
+            if cats.len() < 2 {
+                return Err(format!("{}: categorical needs >= 2 categories", self.name));
+            }
+            let mut uniq = cats.clone();
+            uniq.sort();
+            uniq.dedup();
+            if uniq.len() != cats.len() {
+                return Err(format!("{}: duplicate categories", self.name));
+            }
+        }
+        if self.lo >= self.hi {
+            return Err(format!("{}: lo {} must be < hi {}", self.name, self.lo, self.hi));
+        }
+        if self.kind.is_discrete()
+            && (self.lo.fract() != 0.0 || self.hi.fract() != 0.0 || self.default.fract() != 0.0)
+        {
+            return Err(format!(
+                "{}: discrete parameter needs integral lo/hi/default (got [{}, {}] default {})",
+                self.name, self.lo, self.hi, self.default
+            ));
+        }
+        if self.transform == Transform::Log && self.lo <= 0.0 {
+            return Err(format!("{}: log transform needs lo > 0", self.name));
+        }
+        if !(self.lo..=self.hi).contains(&self.default) {
+            return Err(format!(
+                "{}: default {} outside [{}, {}]",
+                self.name, self.default, self.lo, self.hi
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The builtin parameter table, in config-vector order. The first
+/// [`N_AOT_PARAMS`] rows are the stable AOT-artifact prefix mirrored by
+/// `python/compile/spec.py` — `python/tests/test_spec_sync.py` parses
+/// this function's source, so keep one constructor call per line.
+pub fn builtin_defs() -> Vec<ParamDef> {
+    vec![
+        ParamDef::int("mapreduce.job.reduces", 1.0, 64.0, 1.0),
+        ParamDef::int("mapreduce.task.io.sort.mb", 16.0, 2048.0, 100.0),
+        ParamDef::int("mapreduce.task.io.sort.factor", 2.0, 128.0, 10.0),
+        ParamDef::float("mapreduce.map.sort.spill.percent", 0.50, 0.95, 0.80),
+        ParamDef::int("mapreduce.reduce.shuffle.parallelcopies", 1.0, 64.0, 5.0),
+        ParamDef::float("mapreduce.job.reduce.slowstart.completedmaps", 0.05, 1.0, 0.05),
+        ParamDef::int("mapreduce.map.memory.mb", 512.0, 4096.0, 1024.0),
+        ParamDef::int("mapreduce.reduce.memory.mb", 512.0, 8192.0, 1024.0),
+        ParamDef::bool("mapreduce.map.output.compress", false),
+        ParamDef::int("mapreduce.input.fileinputformat.split.mb", 32.0, 512.0, 128.0),
+    ]
+}
+
+/// Ordered parameter table: the builtin prefix (stable AOT layout) plus
+/// any parameters declared in spec files. Shared immutably via `Arc` —
+/// every `HadoopConfig` carries the registry its value vector is laid
+/// out against.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamRegistry {
+    defs: Vec<ParamDef>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl ParamRegistry {
+    fn from_defs(defs: Vec<ParamDef>) -> Result<ParamRegistry, String> {
+        let mut by_name = BTreeMap::new();
+        for (i, d) in defs.iter().enumerate() {
+            d.validate()?;
+            if by_name.insert(d.name.clone(), i).is_some() {
+                return Err(format!("duplicate parameter {:?}", d.name));
+            }
+        }
+        Ok(ParamRegistry { defs, by_name })
+    }
+
+    /// The builtin 10-parameter table (the stable AOT-artifact prefix).
+    pub fn builtin() -> Arc<ParamRegistry> {
+        static REG: OnceLock<Arc<ParamRegistry>> = OnceLock::new();
+        REG.get_or_init(|| {
+            Arc::new(ParamRegistry::from_defs(builtin_defs()).expect("builtin registry valid"))
+        })
+        .clone()
+    }
+
+    /// Builtin prefix plus extra declared parameters (spec files). With
+    /// no extras this is the shared builtin instance.
+    pub fn with_extras(extras: Vec<ParamDef>) -> Result<Arc<ParamRegistry>, String> {
+        if extras.is_empty() {
+            return Ok(Self::builtin());
+        }
+        let mut defs = builtin_defs();
+        defs.extend(extras);
+        Ok(Arc::new(Self::from_defs(defs)?))
+    }
+
+    pub fn len(&self) -> usize {
+        self.defs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.defs.is_empty()
+    }
+
+    pub fn defs(&self) -> &[ParamDef] {
+        &self.defs
+    }
+
+    pub fn get(&self, index: usize) -> &ParamDef {
+        &self.defs[index]
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<(usize, &ParamDef)> {
+        self.index_of(name).map(|i| (i, &self.defs[i]))
+    }
+
+    /// Resolve a full property name, or an unambiguous dotted suffix
+    /// (`io.sort.mb` → `mapreduce.task.io.sort.mb`).
+    pub fn resolve(&self, name: &str) -> Result<(usize, &ParamDef), String> {
+        if let Some(hit) = self.by_name(name) {
+            return Ok(hit);
+        }
+        let matches: Vec<usize> = self
+            .defs
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| is_dotted_suffix(&d.name, name))
+            .map(|(i, _)| i)
+            .collect();
+        match matches[..] {
+            [i] => Ok((i, &self.defs[i])),
+            [] => Err(format!("unknown parameter {name:?}")),
+            _ => Err(format!(
+                "ambiguous parameter suffix {name:?} (matches {})",
+                matches
+                    .iter()
+                    .map(|&i| self.defs[i].name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )),
+        }
+    }
+}
+
+/// Is `suffix` a strict dotted suffix of `full` (`io.sort.mb` of
+/// `mapreduce.task.io.sort.mb`)? The shared rule behind every
+/// short-name resolution (registry lookups, spec canonicalization).
+pub fn is_dotted_suffix(full: &str, suffix: &str) -> bool {
+    full.len() > suffix.len()
+        && full.ends_with(suffix)
+        && full.as_bytes()[full.len() - suffix.len() - 1] == b'.'
+}
+
+/// Right-hand side of a [`Constraint`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Bound {
+    /// `coef * value[index]`.
+    Scaled { coef: f64, index: usize },
+    /// A plain constant.
+    Const(f64),
+}
+
+/// A validity predicate `value[lhs] <= bound`, declared by a
+/// `constraint <param> <= [<coef>*]<param-or-const>` spec line.
+/// Indices are registry indices (the rhs parameter need not be tuned).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Constraint {
+    pub lhs: usize,
+    pub bound: Bound,
+}
+
+/// Slack tolerance when testing constraints (float-noise guard).
+const CONSTRAINT_EPS: f64 = 1e-9;
+
+impl Constraint {
+    pub fn bound_value(&self, values: &[f64]) -> f64 {
+        match self.bound {
+            Bound::Scaled { coef, index } => coef * values[index],
+            Bound::Const(c) => c,
+        }
+    }
+
+    pub fn satisfied(&self, values: &[f64]) -> bool {
+        values[self.lhs] <= self.bound_value(values) + CONSTRAINT_EPS
+    }
+
+    /// Repair in place: pull a violating lhs down to its bound, snapped
+    /// *downward* so discrete kinds cannot round back over the bound.
+    pub fn repair(&self, values: &mut [f64], defs: &[ParamDef]) {
+        let b = self.bound_value(values);
+        if values[self.lhs] > b + CONSTRAINT_EPS {
+            values[self.lhs] = defs[self.lhs].snap_down(b);
+        }
+    }
+
+    /// Render as a spec line body using full parameter names.
+    pub fn display(&self, registry: &ParamRegistry) -> String {
+        let lhs = &registry.get(self.lhs).name;
+        match self.bound {
+            Bound::Scaled { coef, index } if coef == 1.0 => {
+                format!("constraint {lhs} <= {}", registry.get(index).name)
+            }
+            Bound::Scaled { coef, index } => {
+                format!("constraint {lhs} <= {coef}*{}", registry.get(index).name)
+            }
+            Bound::Const(c) => format!("constraint {lhs} <= {c}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_is_shared_and_stable() {
+        let a = ParamRegistry::builtin();
+        let b = ParamRegistry::builtin();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), N_AOT_PARAMS);
+        assert_eq!(a.get(0).name, "mapreduce.job.reduces");
+        assert_eq!(a.get(8).kind, ParamKind::Bool);
+    }
+
+    #[test]
+    fn extras_append_after_the_aot_prefix() {
+        let reg = ParamRegistry::with_extras(vec![
+            ParamDef::cat("x.codec", &["none", "snappy", "lz4"], "none"),
+            ParamDef::int("x.mem.mb", 64.0, 8192.0, 256.0).log(),
+        ])
+        .unwrap();
+        assert_eq!(reg.len(), N_AOT_PARAMS + 2);
+        for (i, d) in builtin_defs().iter().enumerate() {
+            assert_eq!(&reg.get(i).name, &d.name, "builtin prefix reordered");
+        }
+        assert_eq!(reg.index_of("x.codec"), Some(N_AOT_PARAMS));
+        assert_eq!(reg.get(N_AOT_PARAMS + 1).transform, Transform::Log);
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_bad_defs() {
+        assert!(ParamRegistry::with_extras(vec![ParamDef::int(
+            "mapreduce.job.reduces",
+            1.0,
+            2.0,
+            1.0
+        )])
+        .is_err());
+        assert!(ParamRegistry::with_extras(vec![ParamDef::int("x", 5.0, 5.0, 5.0)]).is_err());
+        assert!(ParamRegistry::with_extras(vec![ParamDef::cat("x", &["only"], "only")]).is_err());
+        assert!(
+            ParamRegistry::with_extras(vec![ParamDef::float("x", 0.0, 1.0, 0.5).log()]).is_err()
+        );
+        // a typo'd default label must not silently fall back to index 0
+        assert!(ParamRegistry::with_extras(vec![ParamDef::cat(
+            "x",
+            &["none", "snappy"],
+            "snapy"
+        )])
+        .is_err());
+    }
+
+    #[test]
+    fn resolve_accepts_unique_dotted_suffixes() {
+        let reg = ParamRegistry::builtin();
+        let (i, d) = reg.resolve("io.sort.mb").unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(d.name, "mapreduce.task.io.sort.mb");
+        assert_eq!(reg.resolve("map.memory.mb").unwrap().0, 6);
+        // "mb" alone matches several params
+        assert!(reg.resolve("mb").unwrap_err().contains("ambiguous"));
+        assert!(reg.resolve("not.a.param").unwrap_err().contains("unknown"));
+        // a suffix must start at a dot boundary
+        assert!(reg.resolve("ask.io.sort.mb").is_err());
+    }
+
+    #[test]
+    fn transforms_are_inverse_pairs() {
+        for t in [Transform::Linear, Transform::Log] {
+            for u in [0.0, 0.25, 0.5, 1.0] {
+                let v = t.from_unit(u, 16.0, 2048.0);
+                assert!((t.to_unit(v, 16.0, 2048.0) - u).abs() < 1e-12, "{t:?} u={u}");
+            }
+        }
+        // log hits the geometric midpoint
+        let mid = Transform::Log.from_unit(0.5, 16.0, 1024.0);
+        assert!((mid - 128.0).abs() < 1e-9, "geometric midpoint {mid}");
+    }
+
+    #[test]
+    fn snap_and_snap_down() {
+        let d = ParamDef::int("x", 2.0, 10.0, 2.0);
+        assert_eq!(d.snap(7.6), 8.0);
+        assert_eq!(d.snap_down(7.6), 7.0);
+        assert_eq!(d.snap(100.0), 10.0);
+        assert_eq!(d.snap_down(-5.0), 2.0);
+        let f = ParamDef::float("y", 0.0, 1.0, 0.5);
+        assert_eq!(f.snap(0.33), 0.33);
+    }
+
+    #[test]
+    fn constraint_repair_keeps_discrete_under_bound() {
+        let reg = ParamRegistry::builtin();
+        let c = Constraint {
+            lhs: 1, // io.sort.mb
+            bound: Bound::Scaled { coef: 0.7, index: 6 }, // 0.7 * map.memory.mb
+        };
+        let mut values: Vec<f64> = builtin_defs().iter().map(|d| d.default).collect();
+        values[1] = 2000.0;
+        values[6] = 1024.0;
+        assert!(!c.satisfied(&values));
+        c.repair(&mut values, reg.defs());
+        assert!(c.satisfied(&values));
+        assert_eq!(values[1], (0.7f64 * 1024.0).floor());
+        // idempotent
+        let before = values.clone();
+        c.repair(&mut values, reg.defs());
+        assert_eq!(values, before);
+    }
+
+    #[test]
+    fn constraint_display_uses_full_names() {
+        let reg = ParamRegistry::builtin();
+        let c = Constraint {
+            lhs: 1,
+            bound: Bound::Scaled { coef: 0.7, index: 6 },
+        };
+        assert_eq!(
+            c.display(&reg),
+            "constraint mapreduce.task.io.sort.mb <= 0.7*mapreduce.map.memory.mb"
+        );
+        let k = Constraint {
+            lhs: 0,
+            bound: Bound::Const(32.0),
+        };
+        assert_eq!(k.display(&reg), "constraint mapreduce.job.reduces <= 32");
+    }
+
+    #[test]
+    fn format_value_by_kind() {
+        let b = ParamDef::bool("b", false);
+        assert_eq!(b.format_value(1.0), "true");
+        assert_eq!(b.format_value(0.0), "false");
+        let c = ParamDef::cat("c", &["none", "snappy"], "none");
+        assert_eq!(c.format_value(1.0), "snappy");
+        // out-of-range categorical values must not render as a plausible
+        // wrong label
+        assert_eq!(c.category_name(7.0), None);
+        assert_eq!(c.category_name(-5.0), None);
+        assert_eq!(c.format_value(7.0), "<bad-category>");
+        let i = ParamDef::int("i", 0.0, 10.0, 1.0);
+        assert_eq!(i.format_value(3.0), "3");
+    }
+
+    #[test]
+    fn parse_value_inverts_format_value() {
+        let defs = [
+            (ParamDef::bool("b", true), 0.0),
+            (ParamDef::bool("b", true), 1.0),
+            (ParamDef::cat("c", &["none", "snappy", "lz4"], "none"), 2.0),
+            (ParamDef::int("i", 0.0, 100.0, 1.0), 42.0),
+            (ParamDef::float("f", 0.0, 1.0, 0.5), 0.25),
+        ];
+        for (d, v) in defs {
+            let back = d.parse_value(&d.format_value(v)).unwrap();
+            assert_eq!(back, v, "{} round-trip", d.name);
+        }
+        let c = ParamDef::cat("c", &["1", "2", "4"], "1");
+        // numeric-looking labels parse as labels, not indices
+        assert_eq!(c.parse_value("2").unwrap(), 1.0);
+        assert!(c.parse_value("3").is_err());
+        assert!(ParamDef::bool("b", false).parse_value("maybe").is_err());
+    }
+}

@@ -3,53 +3,133 @@
 //! The Optimizer Runner "creates a series of MapReduce jobs with different
 //! combinations of parameter values according to parameter configuration
 //! files" (paper §II.A). A spec file (`params.spec` in a tuning project)
-//! declares which Hadoop parameters to tune and over what ranges:
+//! declares which Hadoop parameters to tune, over what ranges and scales,
+//! and which validity constraints candidate configurations must satisfy:
 //!
 //! ```text
-//! # name                          kind   lo    hi    [step]
-//! param mapreduce.job.reduces     int    2     32    step 2
-//! param mapreduce.task.io.sort.mb int    50    800   step 50
+//! # name                           kind   lo    hi   [step <s>] [log]
+//! param mapreduce.job.reduces      int    2     32   step 2
+//! param mapreduce.task.io.sort.mb  int    50    800  step 50
+//! param mapreduce.map.memory.mb    int    512   4096 log
 //! param mapreduce.map.sort.spill.percent float 0.5 0.9
+//! param mapreduce.map.output.compress    bool
+//! param mapreduce.map.output.compress.codec cat none,snappy,lz4
+//! constraint io.sort.mb <= 0.7*map.memory.mb
 //! ```
+//!
+//! Parameters unknown to the builtin registry are *declared into* the
+//! spec's [`ParamRegistry`] (appended after the stable AOT prefix), so
+//! new categorical or log-scaled knobs need no rust changes. Constraint
+//! names resolve by full property name or unambiguous dotted suffix.
 
-use crate::config::params::{by_name, ParamMeta};
+use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
+
+use crate::config::space::{
+    is_dotted_suffix, Bound, Constraint, ParamDef, ParamKind, ParamRegistry, Transform,
+};
 
 /// One tunable dimension of a tuning project.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ParamRange {
-    pub meta: &'static ParamMeta,
+    /// Index into the spec's [`ParamRegistry`] (== config-vector slot).
+    pub index: usize,
+    /// The registry definition this range tunes (cloned for access).
+    pub def: ParamDef,
     pub lo: f64,
     pub hi: f64,
     /// Grid step for direct search; DFO treats the range continuously.
     pub step: Option<f64>,
+    /// Scale for unit-cube traversal (defaults to the def's transform).
+    pub transform: Transform,
 }
 
 impl ParamRange {
-    /// Grid values for exhaustive search (inclusive of hi when it lands
-    /// on the grid).
+    pub fn name(&self) -> &str {
+        &self.def.name
+    }
+
+    /// Grid values for exhaustive search. Index-based stepping: no
+    /// float-accumulation drift, grid sizes are platform-stable, and the
+    /// `hi` endpoint is included *exactly* whenever `hi - lo` is a
+    /// multiple of the step. Bool/categorical ranges grid over every
+    /// category regardless of step.
     pub fn grid(&self) -> Vec<f64> {
+        if matches!(self.def.kind, ParamKind::Bool | ParamKind::Categorical(_)) {
+            return ((self.lo.round() as i64)..=(self.hi.round() as i64))
+                .map(|i| i as f64)
+                .collect();
+        }
+        // a log range with no explicit step grids geometrically (equal
+        // unit-cube spacing), matching the linear default's 9 points;
+        // an explicit step always means value-space stepping
+        if self.transform == Transform::Log && self.step.is_none() {
+            const N: usize = 8;
+            let mut vals: Vec<f64> = (0..=N)
+                .map(|i| {
+                    let v = match i {
+                        0 => self.lo, // exact endpoints
+                        N => self.hi,
+                        _ => Transform::Log.from_unit(i as f64 / N as f64, self.lo, self.hi),
+                    };
+                    if self.def.kind.is_discrete() {
+                        v.round()
+                    } else {
+                        v
+                    }
+                })
+                .collect();
+            vals.dedup(); // integer rounding can collide at the low end
+            return vals;
+        }
         let step = self.step.unwrap_or_else(|| {
-            if self.meta.integer {
+            if self.def.kind.is_discrete() {
                 1.0f64.max(((self.hi - self.lo) / 8.0).round())
             } else {
                 (self.hi - self.lo) / 8.0
             }
         });
-        let mut vals = Vec::new();
-        let mut v = self.lo;
-        while v <= self.hi + 1e-9 {
-            vals.push(if self.meta.integer { v.round() } else { v });
-            v += step;
-        }
+        let n = ((self.hi - self.lo) / step + 1e-9).floor() as usize;
+        let eps = 1e-9 * step.max(1.0);
+        let mut vals: Vec<f64> = (0..=n)
+            .map(|i| {
+                let v = self.lo + i as f64 * step;
+                let v = if i == n && (v - self.hi).abs() <= eps {
+                    self.hi // land on the endpoint exactly
+                } else {
+                    v
+                };
+                if self.def.kind.is_discrete() {
+                    v.round()
+                } else {
+                    v
+                }
+            })
+            .collect();
+        vals.dedup(); // sub-integer steps can round to the same value
         vals
     }
 }
 
-/// The tunable subspace for one tuning project.
-#[derive(Clone, Debug, Default, PartialEq)]
+/// The tunable subspace (+ constraints) for one tuning project.
+#[derive(Clone, Debug, PartialEq)]
 pub struct TuningSpec {
+    /// Builtin prefix + any parameters this spec declared.
+    pub registry: Arc<ParamRegistry>,
     pub ranges: Vec<ParamRange>,
+    /// Validity predicates over registry indices, applied at decode.
+    pub constraints: Vec<Constraint>,
+}
+
+impl Default for TuningSpec {
+    fn default() -> Self {
+        TuningSpec {
+            registry: ParamRegistry::builtin(),
+            ranges: Vec::new(),
+            constraints: Vec::new(),
+        }
+    }
 }
 
 impl TuningSpec {
@@ -62,86 +142,229 @@ impl TuningSpec {
         self.ranges.iter().map(|r| r.grid().len()).product()
     }
 
+    /// Enforce the constraint list on a full registry-order value vector
+    /// by pulling violating values down to their (snapped) bound.
+    /// Sweeps to a fixpoint: lowering one parameter can re-violate a
+    /// constraint whose bound it feeds (a <= b, b <= const). For acyclic
+    /// chains one sweep per constraint suffices; the sweep bound also
+    /// terminates degenerate cyclic/unsatisfiable systems. Every path
+    /// that materializes a config from tuned values must use this —
+    /// decode, resume replay, CLI log reconstruction — so they all
+    /// rebuild the exact configs that were evaluated.
+    pub fn repair(&self, values: &mut [f64]) {
+        let defs = self.registry.defs();
+        for _ in 0..self.constraints.len() {
+            let mut dirty = false;
+            for c in &self.constraints {
+                if !c.satisfied(values) {
+                    c.repair(values, defs);
+                    dirty = true;
+                }
+            }
+            if !dirty {
+                break;
+            }
+        }
+    }
+
     pub fn parse(text: &str) -> Result<TuningSpec, String> {
-        let mut ranges = Vec::new();
+        // Pass 1: split lines into param declarations and constraint
+        // lines; declare unknown params into the registry.
+        let mut param_lines = Vec::new();
+        let mut constraint_lines = Vec::new();
         for (no, raw) in text.lines().enumerate() {
             let line = raw.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             let toks: Vec<&str> = line.split_whitespace().collect();
-            let err = |m: &str| format!("params.spec line {}: {m}", no + 1);
-            if toks[0] != "param" {
-                return Err(err("expected line to start with 'param'"));
-            }
-            if toks.len() < 5 {
-                return Err(err("expected: param <name> <int|float> <lo> <hi> [step <s>]"));
-            }
-            let meta = by_name(toks[1]).ok_or_else(|| err(&format!("unknown parameter {:?}", toks[1])))?;
-            let declared_int = match toks[2] {
-                "int" => true,
-                "float" => false,
-                k => return Err(err(&format!("kind must be int|float, got {k:?}"))),
-            };
-            if declared_int != meta.integer {
-                return Err(err(&format!(
-                    "{} is {} but declared {}",
-                    meta.name,
-                    if meta.integer { "int" } else { "float" },
-                    toks[2]
-                )));
-            }
-            let lo: f64 = toks[3].parse().map_err(|_| err("bad lo"))?;
-            let hi: f64 = toks[4].parse().map_err(|_| err("bad hi"))?;
-            if lo >= hi {
-                return Err(err("lo must be < hi"));
-            }
-            if lo < meta.lo || hi > meta.hi {
-                return Err(err(&format!(
-                    "range [{lo}, {hi}] outside parameter bounds [{}, {}]",
-                    meta.lo, meta.hi
-                )));
-            }
-            let step = match toks.get(5) {
-                None => None,
-                Some(&"step") => Some(
-                    toks.get(6)
-                        .ok_or_else(|| err("step needs a value"))?
-                        .parse::<f64>()
-                        .map_err(|_| err("bad step"))?,
-                ),
-                Some(t) => return Err(err(&format!("unexpected token {t:?}"))),
-            };
-            if let Some(s) = step {
-                if s <= 0.0 {
-                    return Err(err("step must be positive"));
+            match toks[0] {
+                "param" => param_lines.push((no + 1, toks)),
+                "constraint" => constraint_lines.push((no + 1, toks)),
+                other => {
+                    return Err(format!(
+                        "params.spec line {}: expected 'param' or 'constraint', got {other:?}",
+                        no + 1
+                    ))
                 }
             }
-            ranges.push(ParamRange { meta, lo, hi, step });
+        }
+
+        let builtin = ParamRegistry::builtin();
+        let mut extras: Vec<ParamDef> = Vec::new();
+        let mut decls = Vec::with_capacity(param_lines.len());
+        for (no, toks) in &param_lines {
+            let mut decl = parse_param_line(*no, toks)?;
+            // Canonicalize: a declaration naming a known param (builtin
+            // OR an extra declared earlier in this file) by an
+            // unambiguous dotted suffix (`param io.sort.mb int ...`)
+            // refers to that param — the same resolution constraints use
+            // — rather than silently declaring a new no-op dimension.
+            if builtin.index_of(&decl.name).is_none()
+                && !extras.iter().any(|d| d.name == decl.name)
+            {
+                let full: Vec<&str> = builtin
+                    .defs()
+                    .iter()
+                    .map(|d| d.name.as_str())
+                    .chain(extras.iter().map(|d| d.name.as_str()))
+                    .filter(|full| is_dotted_suffix(full, &decl.name))
+                    .collect();
+                match full[..] {
+                    [hit] => decl.name = hit.to_string(),
+                    [] => {} // a genuinely new parameter
+                    _ => {
+                        return Err(format!(
+                            "params.spec line {no}: ambiguous parameter suffix {:?} (matches {})",
+                            decl.name,
+                            full.join(", ")
+                        ))
+                    }
+                }
+            }
+            let known_builtin = builtin.by_name(&decl.name).map(|(_, d)| d.clone());
+            let known_extra = extras.iter().find(|d| d.name == decl.name).cloned();
+            match known_builtin.or(known_extra) {
+                Some(def) => check_against_def(*no, &decl, &def)?,
+                None => extras.push(decl.to_def()),
+            }
+            decls.push((*no, decl));
+        }
+        let registry = ParamRegistry::with_extras(extras)?;
+        // Order-independent guard: no registered name may be a dotted
+        // suffix of another (a suffix line before its full-name line
+        // would otherwise register a phantom second parameter).
+        for d in registry.defs() {
+            if let Some(o) = registry
+                .defs()
+                .iter()
+                .find(|o| is_dotted_suffix(&o.name, &d.name))
+            {
+                return Err(format!(
+                    "params.spec: parameter {:?} is a dotted suffix of {:?} — use the full name",
+                    d.name, o.name
+                ));
+            }
+        }
+
+        // Pass 2: resolve ranges and constraints against the registry.
+        let mut ranges: Vec<ParamRange> = Vec::with_capacity(decls.len());
+        for (no, decl) in decls {
+            let err = |m: &str| format!("params.spec line {no}: {m}");
+            let (index, def) = registry
+                .by_name(&decl.name)
+                .ok_or_else(|| err("declared parameter missing from registry"))?;
+            if ranges.iter().any(|r| r.index == index) {
+                return Err(err(&format!("parameter {:?} declared twice", decl.name)));
+            }
+            let (lo, hi) = match &decl.kind {
+                ParamKind::Bool | ParamKind::Categorical(_) => (def.lo, def.hi),
+                _ => (decl.lo, decl.hi),
+            };
+            ranges.push(ParamRange {
+                index,
+                def: def.clone(),
+                lo,
+                hi,
+                step: decl.step,
+                transform: if decl.log { Transform::Log } else { def.transform },
+            });
         }
         if ranges.is_empty() {
             return Err("params.spec declares no parameters".into());
         }
-        Ok(TuningSpec { ranges })
+        for r in &ranges {
+            if r.transform == Transform::Log && r.lo <= 0.0 {
+                return Err(format!("{}: log scale needs lo > 0", r.name()));
+            }
+        }
+
+        let mut constraints = Vec::with_capacity(constraint_lines.len());
+        for (no, toks) in &constraint_lines {
+            constraints.push(parse_constraint_line(*no, toks, &registry)?);
+        }
+        // Reject cyclic constraint chains (a <= b, b <= a): repair's
+        // bounded sweep reaches a fixpoint only for acyclic systems, and
+        // a cycle is almost always a broken spec.
+        if has_constraint_cycle(&constraints) {
+            return Err("params.spec constraints form a cycle".into());
+        }
+        // Reject statically unsatisfiable constraints: if even the
+        // loosest achievable bound sits below the lhs's lower bound
+        // (its declared tuning range when tuned, its definition bounds
+        // otherwise), repair can never succeed and decode would silently
+        // violate the constraint — or drag the whole dimension below the
+        // user's declared range.
+        for c in &constraints {
+            let range_of = |idx: usize| ranges.iter().find(|r| r.index == idx);
+            let lhs_lo = range_of(c.lhs).map(|r| r.lo).unwrap_or(registry.get(c.lhs).lo);
+            let max_bound = match c.bound {
+                Bound::Const(k) => k,
+                Bound::Scaled { coef, index } => {
+                    if coef >= 0.0 {
+                        // rhs can reach at most its tuned-range hi (or
+                        // def hi when untuned: the base may sit anywhere)
+                        let rhs_hi =
+                            range_of(index).map(|r| r.hi).unwrap_or(registry.get(index).hi);
+                        coef * rhs_hi
+                    } else {
+                        // negative coef: loosest at the rhs minimum, and
+                        // repair of the rhs can reach its def lo
+                        coef * registry.get(index).lo
+                    }
+                }
+            };
+            if max_bound < lhs_lo {
+                return Err(format!(
+                    "params.spec: constraint on {} can never be satisfied \
+                     (bound at most {max_bound}, lower bound {lhs_lo})",
+                    registry.get(c.lhs).name
+                ));
+            }
+            // ...and repair must be able to succeed in the WORST case
+            // too: whatever the rhs ends up at, the bound must stay
+            // above the lhs's definition lo, or decode would silently
+            // return a config violating the declared constraint. The
+            // rhs floor is its tuned-range lo when it is tuned and
+            // never itself repaired; otherwise its definition lo (an
+            // untuned base value, or repair, can sit anywhere above it).
+            let min_bound = match c.bound {
+                Bound::Const(k) => k,
+                Bound::Scaled { coef, index } => {
+                    let d = registry.get(index);
+                    let rhs_repairable = constraints.iter().any(|o| o.lhs == index);
+                    let (floor, ceil) = match range_of(index) {
+                        Some(r) if !rhs_repairable => (r.lo, r.hi),
+                        _ => (d.lo, d.hi),
+                    };
+                    if coef >= 0.0 {
+                        coef * floor
+                    } else {
+                        coef * ceil
+                    }
+                }
+            };
+            if min_bound < registry.get(c.lhs).lo {
+                return Err(format!(
+                    "params.spec: constraint on {} cannot always be repaired \
+                     (worst-case bound {min_bound} below definition lower bound {})",
+                    registry.get(c.lhs).name,
+                    registry.get(c.lhs).lo
+                ));
+            }
+        }
+
+        Ok(TuningSpec {
+            registry,
+            ranges,
+            constraints,
+        })
     }
 
     pub fn load(path: &Path) -> Result<TuningSpec, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("reading {}: {e}", path.display()))?;
         Self::parse(&text)
-    }
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::from("# Catla tuning parameter specification\n");
-        for r in &self.ranges {
-            let kind = if r.meta.integer { "int" } else { "float" };
-            out.push_str(&format!("param {} {kind} {} {}", r.meta.name, r.lo, r.hi));
-            if let Some(s) = r.step {
-                out.push_str(&format!(" step {s}"));
-            }
-            out.push('\n');
-        }
-        out
     }
 
     /// The paper's Fig.2 two-parameter spec.
@@ -165,6 +388,248 @@ impl TuningSpec {
     }
 }
 
+/// Spec files print exactly what [`TuningSpec::parse`] accepts:
+/// parse → print → parse is the identity.
+impl fmt::Display for TuningSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "# Catla tuning parameter specification")?;
+        for r in &self.ranges {
+            match &r.def.kind {
+                ParamKind::Bool => writeln!(f, "param {} bool", r.name())?,
+                ParamKind::Categorical(cats) => {
+                    writeln!(f, "param {} cat {}", r.name(), cats.join(","))?
+                }
+                kind => {
+                    write!(f, "param {} {} {} {}", r.name(), kind.token(), r.lo, r.hi)?;
+                    if let Some(s) = r.step {
+                        write!(f, " step {s}")?;
+                    }
+                    if r.transform == Transform::Log {
+                        write!(f, " log")?;
+                    }
+                    writeln!(f)?;
+                }
+            }
+        }
+        for c in &self.constraints {
+            writeln!(f, "{}", c.display(&self.registry))?;
+        }
+        Ok(())
+    }
+}
+
+/// One parsed `param` line, before registry resolution.
+struct ParamDecl {
+    name: String,
+    kind: ParamKind,
+    lo: f64,
+    hi: f64,
+    step: Option<f64>,
+    log: bool,
+}
+
+impl ParamDecl {
+    /// Definition for a parameter this spec introduces: the declared
+    /// range *is* its bounds; numeric params default to their low end,
+    /// bools to false, categoricals to the first category.
+    fn to_def(&self) -> ParamDef {
+        let mut def = ParamDef {
+            name: self.name.clone(),
+            kind: self.kind.clone(),
+            lo: self.lo,
+            hi: self.hi,
+            default: self.lo,
+            transform: Transform::Linear,
+        };
+        if self.log {
+            def = def.log();
+        }
+        def
+    }
+}
+
+fn parse_param_line(no: usize, toks: &[&str]) -> Result<ParamDecl, String> {
+    let err = |m: &str| format!("params.spec line {no}: {m}");
+    if toks.len() < 3 {
+        return Err(err(
+            "expected: param <name> <int|float> <lo> <hi> [step <s>] [log] | param <name> bool | param <name> cat <a,b,...>",
+        ));
+    }
+    let name = toks[1].to_string();
+    match toks[2] {
+        "bool" => {
+            if toks.len() > 3 {
+                return Err(err(&format!("unexpected token {:?} after bool", toks[3])));
+            }
+            Ok(ParamDecl {
+                name,
+                kind: ParamKind::Bool,
+                lo: 0.0,
+                hi: 1.0,
+                step: None,
+                log: false,
+            })
+        }
+        "cat" => {
+            let cats: Vec<String> = toks
+                .get(3)
+                .ok_or_else(|| err("cat needs a comma-separated category list"))?
+                .split(',')
+                .map(|c| c.trim().to_string())
+                .filter(|c| !c.is_empty())
+                .collect();
+            if cats.len() < 2 {
+                return Err(err("cat needs >= 2 categories"));
+            }
+            if toks.len() > 4 {
+                return Err(err(&format!("unexpected token {:?} after categories", toks[4])));
+            }
+            let hi = (cats.len() - 1) as f64;
+            Ok(ParamDecl {
+                name,
+                kind: ParamKind::Categorical(cats),
+                lo: 0.0,
+                hi,
+                step: None,
+                log: false,
+            })
+        }
+        kind @ ("int" | "float") => {
+            if toks.len() < 5 {
+                return Err(err("expected: param <name> <int|float> <lo> <hi> [step <s>] [log]"));
+            }
+            let lo: f64 = toks[3].parse().map_err(|_| err("bad lo"))?;
+            let hi: f64 = toks[4].parse().map_err(|_| err("bad hi"))?;
+            if lo >= hi {
+                return Err(err("lo must be < hi"));
+            }
+            let mut step = None;
+            let mut log = false;
+            let mut i = 5;
+            while i < toks.len() {
+                match toks[i] {
+                    "step" => {
+                        let s: f64 = toks
+                            .get(i + 1)
+                            .ok_or_else(|| err("step needs a value"))?
+                            .parse()
+                            .map_err(|_| err("bad step"))?;
+                        if s <= 0.0 {
+                            return Err(err("step must be positive"));
+                        }
+                        step = Some(s);
+                        i += 2;
+                    }
+                    "log" => {
+                        log = true;
+                        i += 1;
+                    }
+                    t => return Err(err(&format!("unexpected token {t:?}"))),
+                }
+            }
+            if log && lo <= 0.0 {
+                return Err(err("log scale needs lo > 0"));
+            }
+            Ok(ParamDecl {
+                name,
+                kind: if kind == "int" { ParamKind::Int } else { ParamKind::Float },
+                lo,
+                hi,
+                step,
+                log,
+            })
+        }
+        k => Err(err(&format!("kind must be int|float|bool|cat, got {k:?}"))),
+    }
+}
+
+/// Validate a declaration against an already-known definition (builtin
+/// or declared earlier in the same file).
+fn check_against_def(no: usize, decl: &ParamDecl, def: &ParamDef) -> Result<(), String> {
+    let err = |m: &str| format!("params.spec line {no}: {m}");
+    let kinds_match = match (&decl.kind, &def.kind) {
+        (ParamKind::Categorical(a), ParamKind::Categorical(b)) => {
+            if a != b {
+                return Err(err(&format!(
+                    "{} categories {:?} do not match registered {:?}",
+                    def.name, a, b
+                )));
+            }
+            true
+        }
+        (a, b) => a == b,
+    };
+    if !kinds_match {
+        return Err(err(&format!(
+            "{} is {} but declared {}",
+            def.name,
+            def.kind.token(),
+            decl.kind.token()
+        )));
+    }
+    if matches!(decl.kind, ParamKind::Int | ParamKind::Float)
+        && (decl.lo < def.lo || decl.hi > def.hi)
+    {
+        return Err(err(&format!(
+            "range [{}, {}] outside parameter bounds [{}, {}]",
+            decl.lo, decl.hi, def.lo, def.hi
+        )));
+    }
+    Ok(())
+}
+
+/// Cycle check over the lhs→rhs dependency edges of scaled constraints:
+/// repeatedly trim edges whose target has no outgoing edge (such edges
+/// cannot be on a cycle); anything left implies a cycle.
+fn has_constraint_cycle(constraints: &[Constraint]) -> bool {
+    let mut edges: Vec<(usize, usize)> = constraints
+        .iter()
+        .filter_map(|c| match c.bound {
+            Bound::Scaled { index, .. } => Some((c.lhs, index)),
+            Bound::Const(_) => None,
+        })
+        .collect();
+    loop {
+        let sources: std::collections::BTreeSet<usize> =
+            edges.iter().map(|&(a, _)| a).collect();
+        let before = edges.len();
+        edges.retain(|&(_, b)| sources.contains(&b));
+        if edges.is_empty() {
+            return false;
+        }
+        if edges.len() == before {
+            return true;
+        }
+    }
+}
+
+fn parse_constraint_line(
+    no: usize,
+    toks: &[&str],
+    registry: &ParamRegistry,
+) -> Result<Constraint, String> {
+    let err = |m: &str| format!("params.spec line {no}: {m}");
+    if toks.len() != 4 || toks[2] != "<=" {
+        return Err(err("expected: constraint <param> <= [<coef>*]<param-or-const>"));
+    }
+    let (lhs, _) = registry.resolve(toks[1]).map_err(|e| err(&e))?;
+    let rhs = toks[3];
+    let bound = if let Ok(c) = rhs.parse::<f64>() {
+        Bound::Const(c)
+    } else if let Some((coef, name)) = rhs.split_once('*') {
+        let coef: f64 = coef.parse().map_err(|_| err("bad coefficient"))?;
+        let (index, _) = registry.resolve(name).map_err(|e| err(&e))?;
+        Bound::Scaled { coef, index }
+    } else {
+        let (index, _) = registry.resolve(rhs).map_err(|e| err(&e))?;
+        Bound::Scaled { coef: 1.0, index }
+    };
+    if matches!(bound, Bound::Scaled { index, .. } if index == lhs) {
+        return Err(err("constraint references the same parameter on both sides"));
+    }
+    Ok(Constraint { lhs, bound })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,6 +639,22 @@ mod tests {
         let spec = TuningSpec::fig2();
         let back = TuningSpec::parse(&spec.to_string()).unwrap();
         assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn rich_spec_roundtrip_exact() {
+        let text = "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+                    param mapreduce.task.io.sort.mb int 64 1024 step 64\n\
+                    param mapreduce.map.memory.mb int 512 4096 log\n\
+                    param mapreduce.map.output.compress bool\n\
+                    param mapreduce.map.sort.spill.percent float 0.5 0.9\n\
+                    constraint io.sort.mb <= 0.7*map.memory.mb\n";
+        let spec = TuningSpec::parse(text).unwrap();
+        let printed = spec.to_string();
+        let back = TuningSpec::parse(&printed).unwrap();
+        assert_eq!(back, spec);
+        // and printing is a fixed point
+        assert_eq!(back.to_string(), printed);
     }
 
     #[test]
@@ -188,8 +669,165 @@ mod tests {
     }
 
     #[test]
-    fn rejects_unknown_param() {
-        assert!(TuningSpec::parse("param not.a.param int 1 2\n").is_err());
+    fn grid_includes_hi_exactly_without_drift() {
+        // 0.1 steps accumulate error under `v += step`; index stepping
+        // must land on 0.9 exactly
+        let spec =
+            TuningSpec::parse("param mapreduce.map.sort.spill.percent float 0.5 0.9 step 0.1\n")
+                .unwrap();
+        let g = spec.ranges[0].grid();
+        assert_eq!(g.len(), 5);
+        assert_eq!(*g.last().unwrap(), 0.9);
+        assert_eq!(g[0], 0.5);
+    }
+
+    #[test]
+    fn declares_new_params_into_the_registry() {
+        let spec = TuningSpec::parse(
+            "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+             param x.shuffle.buffer.kb int 32 4096 log\n",
+        )
+        .unwrap();
+        assert_eq!(spec.registry.len(), crate::config::space::N_AOT_PARAMS + 2);
+        assert_eq!(spec.ranges[0].grid(), vec![0.0, 1.0, 2.0]);
+        assert_eq!(spec.ranges[1].transform, Transform::Log);
+        // builtin prefix untouched
+        assert_eq!(spec.registry.get(0).name, "mapreduce.job.reduces");
+    }
+
+    #[test]
+    fn constraint_lines_parse_with_suffix_names() {
+        let spec = TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024\n\
+             constraint io.sort.mb <= 0.7*map.memory.mb\n\
+             constraint reduces <= 48\n",
+        )
+        .unwrap();
+        assert_eq!(spec.constraints.len(), 2);
+        assert_eq!(spec.constraints[0].lhs, 1);
+        assert_eq!(
+            spec.constraints[0].bound,
+            Bound::Scaled { coef: 0.7, index: 6 }
+        );
+        assert_eq!(spec.constraints[1].bound, Bound::Const(48.0));
+    }
+
+    #[test]
+    fn suffix_declaration_refers_to_the_builtin_param() {
+        // `param io.sort.mb ...` must canonicalize to the builtin, not
+        // declare a new no-op dimension
+        let spec = TuningSpec::parse("param io.sort.mb int 64 1024\n").unwrap();
+        assert_eq!(spec.registry.len(), crate::config::space::N_AOT_PARAMS);
+        assert_eq!(spec.ranges[0].index, 1);
+        assert_eq!(spec.ranges[0].name(), "mapreduce.task.io.sort.mb");
+        // and kind/bounds checks still apply through the suffix
+        assert!(TuningSpec::parse("param io.sort.mb float 64 1024\n").is_err());
+    }
+
+    #[test]
+    fn suffix_redeclaration_of_an_extra_is_a_duplicate() {
+        // `buffer.kb` is a dotted suffix of the extra declared above it:
+        // it must canonicalize to the same param and be rejected as a
+        // duplicate, not silently become a second no-op dimension
+        assert!(TuningSpec::parse(
+            "param x.shuffle.buffer.kb int 32 4096\nparam buffer.kb int 32 4096\n"
+        )
+        .is_err());
+        // ...and in the reversed order too (order-independent guard)
+        assert!(TuningSpec::parse(
+            "param buffer.kb int 32 4096\nparam x.shuffle.buffer.kb int 32 4096\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_self_referential_constraint() {
+        assert!(TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024\n\
+             constraint io.sort.mb <= 0.5*io.sort.mb\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_ambiguous_suffix_declaration() {
+        // `memory.mb` suffixes both map.memory.mb and reduce.memory.mb:
+        // must error, not silently declare a new no-op dimension
+        let err = TuningSpec::parse("param memory.mb int 512 4096\n").unwrap_err();
+        assert!(err.contains("ambiguous"), "{err}");
+    }
+
+    #[test]
+    fn rejects_statically_unsatisfiable_constraint() {
+        // bound below the lhs param's lower bound can never hold
+        let err = TuningSpec::parse(
+            "param mapreduce.job.reduces int 1 64\nconstraint reduces <= 0.5\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("never be satisfied"), "{err}");
+    }
+
+    #[test]
+    fn rejects_constraint_that_repair_cannot_always_satisfy() {
+        // map.memory.mb can sit at its def lo 512, making the bound
+        // 25.6 — below x.knob's lower bound 100, so repair would fail
+        // silently at decode time
+        let err = TuningSpec::parse(
+            "param x.knob int 100 200\n\
+             constraint x.knob <= 0.05*map.memory.mb\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("cannot always be repaired"), "{err}");
+        // but a tuned rhs that repair can never lower uses its range lo:
+        // 0.05 * 2048 = 102.4 >= 100, so this spec is always satisfiable
+        TuningSpec::parse(
+            "param x.knob int 100 200\n\
+             param mapreduce.map.memory.mb int 2048 4096\n\
+             constraint x.knob <= 0.05*map.memory.mb\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn rejects_non_integral_bounds_on_int_declarations() {
+        // a new int param with fractional bounds would make even its
+        // default config fail validate()
+        assert!(TuningSpec::parse("param x.foo int 1.2 3.8\n").is_err());
+    }
+
+    #[test]
+    fn rejects_cyclic_constraints() {
+        let err = TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024\n\
+             constraint io.sort.mb <= 0.5*map.memory.mb\n\
+             constraint map.memory.mb <= 0.5*io.sort.mb\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn log_range_grids_geometrically_by_default() {
+        let spec = TuningSpec::parse("param mapreduce.task.io.sort.mb int 16 2048 log\n").unwrap();
+        let g = spec.ranges[0].grid();
+        assert_eq!(*g.first().unwrap(), 16.0);
+        assert_eq!(*g.last().unwrap(), 2048.0);
+        // geometric: the midpoint is sqrt(16*2048) ≈ 181, not 1032
+        let mid = g[g.len() / 2];
+        assert!((150.0..250.0).contains(&mid), "grid not geometric: {g:?}");
+        // an explicit step keeps value-space (linear) stepping
+        let lin =
+            TuningSpec::parse("param mapreduce.task.io.sort.mb int 16 2048 step 254 log\n")
+                .unwrap();
+        assert_eq!(lin.ranges[0].grid()[1], 270.0);
+    }
+
+    #[test]
+    fn rejects_unknown_constraint_param() {
+        assert!(TuningSpec::parse(
+            "param mapreduce.job.reduces int 1 64\nconstraint nope <= 3\n"
+        )
+        .is_err());
     }
 
     #[test]
@@ -200,11 +838,25 @@ mod tests {
     #[test]
     fn rejects_kind_mismatch() {
         assert!(TuningSpec::parse("param mapreduce.job.reduces float 1 8\n").is_err());
+        assert!(TuningSpec::parse("param mapreduce.job.reduces bool\n").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_declaration() {
+        assert!(TuningSpec::parse(
+            "param mapreduce.job.reduces int 1 64\nparam mapreduce.job.reduces int 2 32\n"
+        )
+        .is_err());
     }
 
     #[test]
     fn rejects_empty() {
         assert!(TuningSpec::parse("# nothing\n").is_err());
+    }
+
+    #[test]
+    fn rejects_log_with_nonpositive_lo() {
+        assert!(TuningSpec::parse("param x.scale float 0 1 log\n").is_err());
     }
 
     #[test]

@@ -22,6 +22,20 @@ pub struct JobSubmission {
     pub config: HadoopConfig,
 }
 
+impl JobSubmission {
+    /// The full command line a real Catla would run over SSH for this
+    /// submission — the decoded config's typed `-D` arguments (bools as
+    /// `true`/`false`, categoricals by label) between jar and job name.
+    pub fn command_line(&self) -> String {
+        format!(
+            "hadoop jar {}.jar {} {}",
+            self.workload.name,
+            self.config.to_d_args().join(" "),
+            self.name
+        )
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum JobStatus {
     Running { progress: f64 },
@@ -211,6 +225,16 @@ mod tests {
         assert!(art.history_json.contains("SUCCEEDED"));
         assert!(!art.container_logs.is_empty());
         assert!(!art.outputs.is_empty());
+    }
+
+    #[test]
+    fn command_line_renders_typed_d_args() {
+        let s = submission();
+        let cmd = s.command_line();
+        assert!(cmd.starts_with("hadoop jar wordcount.jar "));
+        assert!(cmd.contains("-Dmapreduce.map.output.compress=false"));
+        assert!(cmd.contains("-Dmapreduce.task.io.sort.mb=100"));
+        assert!(cmd.ends_with(" wc"));
     }
 
     #[test]

@@ -49,14 +49,29 @@ pub fn to_history_json(job_id: &str, r: &JobResult) -> Json {
             "configuration",
             config_json(&r.config),
         )
+        .set(
+            // the exact `-D` arguments a real Catla would pass to
+            // `hadoop jar` for this configuration (typed rendering:
+            // bools as true/false, categoricals by label)
+            "submitArgs",
+            Json::Arr(r.config.to_d_args().into_iter().map(Json::from).collect()),
+        )
         .set("tasks", Json::Arr(tasks));
     j
 }
 
 fn config_json(cfg: &crate::config::params::HadoopConfig) -> Json {
+    use crate::config::space::ParamKind;
     let mut o = Json::obj();
-    for p in crate::config::params::PARAMS.iter() {
-        o.set(p.name, Json::from(cfg.values[p.index]));
+    // typed rendering, consistent with submitArgs: a real job history
+    // stores property values, not registry-relative category indices
+    for (d, v) in cfg.registry().defs().iter().zip(&cfg.values) {
+        let value = match &d.kind {
+            ParamKind::Bool => Json::Bool(*v != 0.0),
+            ParamKind::Categorical(_) => Json::from(d.format_value(*v)),
+            _ => Json::from(*v),
+        };
+        o.set(&d.name, value);
     }
     o
 }
@@ -103,7 +118,11 @@ pub fn parse_history(text: &str) -> Result<ParsedHistory, String> {
         for (k, v) in m {
             if let Some(x) = v.as_f64() {
                 config.push((k.clone(), x));
+            } else if let Some(b) = v.as_bool() {
+                config.push((k.clone(), if b { 1.0 } else { 0.0 }));
             }
+            // categorical labels are strings: not representable as f64,
+            // consumers read them from submitArgs
         }
     }
     Ok(ParsedHistory {

@@ -284,10 +284,13 @@ fn run(args: &Args) -> Result<(), String> {
                     let prior =
                         catla::catla::resume::PriorRuns::from_log(&csv, &spec).ok()?;
                     let (xs, _) = prior.best()?.clone();
-                    let mut cfg = project.base_config().ok()?;
+                    // lay the base out on the spec's registry so ranges
+                    // over spec-declared params index correctly
+                    let mut cfg = project.base_config().ok()?.rebased(&spec.registry);
                     for (r, x) in spec.ranges.iter().zip(&xs) {
-                        cfg.set(r.meta.index, *x);
+                        cfg.set(r.index, *x);
                     }
+                    spec.repair(&mut cfg.values); // match decode exactly
                     Some(cfg)
                 });
             let before =

@@ -42,12 +42,23 @@ impl Optimizer for GridSearch {
         let points = self
             .points
             .get_or_insert_with(|| space.unit_grid());
+        // Decoded-config keys are only needed when distinct grid points
+        // can collapse to one config (constraint repair) or a resume
+        // replay marked points done — fresh unconstrained sweeps skip
+        // the per-point decode + key allocation entirely.
+        let need_keys = !self.done.is_empty() || !space.spec.constraints.is_empty();
         let mut batch = Vec::new();
+        let mut batch_keys = BTreeSet::new();
         while self.cursor < points.len() && batch.len() < budget_left {
             let x = points[self.cursor].clone();
             self.cursor += 1;
-            if self.done.contains(&config_key(&space.decode(&x))) {
-                continue; // evaluated before the interruption
+            if need_keys {
+                let key = config_key(&space.decode(&x));
+                if self.done.contains(&key) || !batch_keys.insert(key) {
+                    // evaluated before the interruption, or a duplicate
+                    // of a config already in this batch
+                    continue;
+                }
             }
             batch.push(Candidate::new(x));
         }
@@ -124,6 +135,30 @@ mod tests {
         let batch = g.ask(&space, usize::MAX);
         assert_eq!(batch.len(), 256);
         assert!(g.ask(&space, usize::MAX).is_empty(), "grid re-proposed points");
+    }
+
+    #[test]
+    fn constraint_collapsed_grid_points_are_deduped_within_a_batch() {
+        // distinct grid points that repair to the same config must not
+        // each spend an evaluation
+        let spec = crate::config::spec::TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024 log\n\
+             param mapreduce.map.memory.mb int 512 4096\n\
+             constraint io.sort.mb <= 0.7*map.memory.mb\n",
+        )
+        .unwrap();
+        let space = ParamSpace::new(spec, HadoopConfig::default());
+        let mut g = GridSearch::new();
+        let batch = g.ask(&space, usize::MAX);
+        let mut keys: Vec<String> = batch
+            .iter()
+            .map(|c| config_key(&space.decode(&c.unit_x)))
+            .collect();
+        let n = keys.len();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate decoded configs in one ask-batch");
+        assert!(n < space.unit_grid().len(), "constraint collapsed nothing?");
     }
 
     #[test]

@@ -2,22 +2,28 @@
 //! (the unit cube `[0,1]^d`) and concrete `HadoopConfig`s.
 //!
 //! Optimizers are generic over dimension and know nothing about Hadoop;
-//! `ParamSpace` owns scaling, integer rounding and clamping. Rounding
-//! happens at decode so DFO methods see a smooth box while the cluster
-//! only ever receives valid configurations.
+//! [`ParamSpace::decode`] / [`ParamSpace::encode`] are the **only** path
+//! between the two worlds. Decode applies each range's transform
+//! (linear or log), snaps discrete kinds (int / bool / categorical) and
+//! repairs constraint violations, so DFO methods see a smooth box while
+//! the cluster only ever receives valid configurations. Encode inverts
+//! the transforms (for seeding and checkpoint replay).
 
 use crate::config::params::HadoopConfig;
+use crate::config::space::Transform;
 use crate::config::spec::TuningSpec;
 
 #[derive(Clone, Debug)]
 pub struct ParamSpace {
     pub spec: TuningSpec,
-    /// Values for parameters NOT being tuned.
+    /// Values for parameters NOT being tuned (laid out on the spec's
+    /// registry — `new` rebases whatever base it is given).
     pub base: HadoopConfig,
 }
 
 impl ParamSpace {
     pub fn new(spec: TuningSpec, base: HadoopConfig) -> Self {
+        let base = base.rebased(&spec.registry);
         Self { spec, base }
     }
 
@@ -25,16 +31,37 @@ impl ParamSpace {
         self.spec.dims()
     }
 
-    /// Map a unit-cube point to a valid Hadoop configuration.
+    /// Map a unit-cube point to a valid Hadoop configuration: transform
+    /// per range, snap discrete kinds, then repair constraints (pulling
+    /// violating values down to their bound). Idempotent under
+    /// re-encoding: `decode(encode(decode(x))) == decode(x)` for
+    /// discrete kinds and within float tolerance for floats.
     pub fn decode(&self, x: &[f64]) -> HadoopConfig {
         assert_eq!(x.len(), self.dims(), "dimension mismatch");
         let mut cfg = self.base.clone();
         for (r, &u) in self.spec.ranges.iter().zip(x) {
             let u = u.clamp(0.0, 1.0);
-            let v = r.lo + u * (r.hi - r.lo);
-            cfg.set(r.meta.index, v); // set() rounds integers + clamps
+            let v = r.transform.from_unit(u, r.lo, r.hi);
+            cfg.set(r.index, v); // set() snaps discrete kinds + clamps
         }
+        self.spec.repair(&mut cfg.values);
         cfg
+    }
+
+    /// Does `cfg` satisfy every constraint of the spec? Configs laid out
+    /// against a different registry are rebased first (constraints index
+    /// the spec's registry).
+    pub fn is_feasible(&self, cfg: &HadoopConfig) -> bool {
+        let registry = &self.spec.registry;
+        if !std::sync::Arc::ptr_eq(cfg.registry(), registry) && cfg.registry() != registry {
+            let rebased = cfg.rebased(registry);
+            return self
+                .spec
+                .constraints
+                .iter()
+                .all(|c| c.satisfied(&rebased.values));
+        }
+        self.spec.constraints.iter().all(|c| c.satisfied(&cfg.values))
     }
 
     /// Map a configuration back to unit coordinates (for seeding).
@@ -42,10 +69,7 @@ impl ParamSpace {
         self.spec
             .ranges
             .iter()
-            .map(|r| {
-                let v = cfg.get(r.meta.index);
-                ((v - r.lo) / (r.hi - r.lo)).clamp(0.0, 1.0)
-            })
+            .map(|r| r.transform.to_unit(cfg.get(r.index), r.lo, r.hi))
             .collect()
     }
 
@@ -59,7 +83,7 @@ impl ParamSpace {
             .map(|r| {
                 r.grid()
                     .into_iter()
-                    .map(|v| ((v - r.lo) / (r.hi - r.lo)).clamp(0.0, 1.0))
+                    .map(|v| r.transform.to_unit(v, r.lo, r.hi))
                     .collect()
             })
             .collect();
@@ -78,15 +102,24 @@ impl ParamSpace {
         out
     }
 
-    /// Smallest meaningful unit-cube step per dimension (one integer tick
-    /// for integer params) — DFO stops refining below this resolution.
+    /// Smallest meaningful unit-cube step per dimension (one integer /
+    /// category tick for discrete params) — DFO stops refining below
+    /// this resolution. Under a log transform the tightest integer tick
+    /// sits at the high end of the range.
     pub fn min_steps(&self) -> Vec<f64> {
         self.spec
             .ranges
             .iter()
             .map(|r| {
-                if r.meta.integer {
-                    (1.0 / (r.hi - r.lo)).min(0.5)
+                if r.def.kind.is_discrete() {
+                    let tick = match r.transform {
+                        Transform::Linear => 1.0 / (r.hi - r.lo),
+                        Transform::Log => {
+                            (r.hi.ln() - (r.hi - 1.0).max(r.lo).ln())
+                                / (r.hi.ln() - r.lo.ln())
+                        }
+                    };
+                    tick.min(0.5)
                 } else {
                     1e-3
                 }
@@ -98,10 +131,23 @@ impl ParamSpace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::params::{P_IO_SORT_MB, P_REDUCES};
+    use crate::config::params::{P_IO_SORT_MB, P_MAP_MEM_MB, P_REDUCES};
 
     fn space() -> ParamSpace {
         ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default())
+    }
+
+    /// Categorical + log + constraint in one spec (the redesign's target
+    /// scenario).
+    fn rich_space() -> ParamSpace {
+        let spec = TuningSpec::parse(
+            "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+             param mapreduce.task.io.sort.mb int 64 1024 log\n\
+             param mapreduce.map.memory.mb int 512 4096\n\
+             constraint io.sort.mb <= 0.7*map.memory.mb\n",
+        )
+        .unwrap();
+        ParamSpace::new(spec, HadoopConfig::default())
     }
 
     #[test]
@@ -147,7 +193,7 @@ mod tests {
         base.set_by_name("mapreduce.map.memory.mb", 2048.0).unwrap();
         let s = ParamSpace::new(TuningSpec::fig2(), base);
         let c = s.decode(&[0.5, 0.5]);
-        assert_eq!(c.get(crate::config::params::P_MAP_MEM_MB), 2048.0);
+        assert_eq!(c.get(P_MAP_MEM_MB), 2048.0);
     }
 
     #[test]
@@ -166,5 +212,105 @@ mod tests {
         let s = space();
         let steps = s.min_steps();
         assert!((steps[0] - 1.0 / 30.0).abs() < 1e-12); // reduces 2..32
+    }
+
+    #[test]
+    fn min_steps_respects_log_transform() {
+        // one integer tick near hi=1024 under log is much finer in unit
+        // space than the linear 1/(hi-lo)
+        let s = rich_space();
+        let steps = s.min_steps();
+        let expect = (1024f64.ln() - 1023f64.ln()) / (1024f64.ln() - 64f64.ln());
+        assert!((steps[1] - expect).abs() < 1e-12, "got {}", steps[1]);
+        assert!(steps[1] < 1.0 / (1024.0 - 64.0), "log tick not finer than linear");
+    }
+
+    #[test]
+    fn log_transform_spends_unit_distance_geometrically() {
+        let s = rich_space();
+        // dim 1 is io.sort.mb over [64, 1024] log: the unit midpoint is
+        // the geometric mean 256, not the arithmetic 544
+        let c = s.decode(&[0.0, 0.5, 1.0]);
+        assert_eq!(c.get(P_IO_SORT_MB), 256.0);
+    }
+
+    #[test]
+    fn categorical_dims_snap_to_category_indices() {
+        let s = rich_space();
+        let codec_idx = s.spec.ranges[0].index;
+        for (u, want) in [(0.0, "none"), (0.49, "snappy"), (0.5, "snappy"), (1.0, "lz4")] {
+            let c = s.decode(&[u, 0.5, 0.5]);
+            assert_eq!(c.get_category(codec_idx), Some(want), "u={u}");
+            assert_eq!(c.get(codec_idx).fract(), 0.0);
+        }
+    }
+
+    #[test]
+    fn decode_repairs_constraint_violations() {
+        let s = rich_space();
+        // sort.mb at its top (1024) with map memory at its bottom (512):
+        // 1024 > 0.7*512, so decode must pull sort.mb down to floor(358.4)
+        let c = s.decode(&[0.0, 1.0, 0.0]);
+        assert!(s.is_feasible(&c), "decode left an infeasible config");
+        assert_eq!(c.get(P_IO_SORT_MB), (0.7f64 * 512.0).floor());
+        assert_eq!(c.get(P_MAP_MEM_MB), 512.0);
+        // decode is idempotent through encode even across a repair
+        let again = s.decode(&s.encode(&c));
+        assert_eq!(again, c);
+    }
+
+    #[test]
+    fn chained_constraints_repair_to_a_fixpoint() {
+        // a <= b and b <= const: repairing b can re-violate the first
+        // constraint, so decode must sweep until clean
+        let spec = TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 16 2048\n\
+             param mapreduce.map.memory.mb int 512 4096\n\
+             constraint io.sort.mb <= map.memory.mb\n\
+             constraint map.memory.mb <= 1024\n",
+        )
+        .unwrap();
+        let s = ParamSpace::new(spec, HadoopConfig::default());
+        // sort.mb -> 2048, memory -> 4096: pass 1 leaves sort.mb (ok vs
+        // 4096), lowers memory to 1024; a second sweep must pull sort.mb
+        // down too
+        let c = s.decode(&[1.0, 1.0]);
+        assert!(s.is_feasible(&c), "chained repair incomplete: {}", c.summary());
+        assert_eq!(c.get(P_MAP_MEM_MB), 1024.0);
+        assert!(c.get(P_IO_SORT_MB) <= 1024.0);
+    }
+
+    #[test]
+    fn is_feasible_rebases_foreign_registry_configs() {
+        // spec constrains a spec-declared extra param; a builtin-registry
+        // config must not panic on the out-of-range index
+        let spec = TuningSpec::parse(
+            "param x.shuffle.buffer.kb int 32 4096\n\
+             constraint x.shuffle.buffer.kb <= 1024\n",
+        )
+        .unwrap();
+        let s = ParamSpace::new(spec, HadoopConfig::default());
+        assert!(s.is_feasible(&HadoopConfig::default()));
+
+        // equal-length but DIFFERENT registry: slot 10 holds another
+        // spec's param (value 2000+); rebasing by name must prevent the
+        // constraint from reading the wrong slot
+        let other = TuningSpec::parse("param y.other.knob int 2000 6000\n").unwrap();
+        let foreign = HadoopConfig::for_registry(other.registry.clone());
+        assert_eq!(foreign.len(), s.spec.registry.len());
+        assert!(
+            s.is_feasible(&foreign),
+            "constraint read a foreign registry's slot positionally"
+        );
+    }
+
+    #[test]
+    fn every_grid_point_of_a_constrained_space_is_feasible() {
+        let s = rich_space();
+        for x in s.unit_grid() {
+            let c = s.decode(&x);
+            assert!(s.is_feasible(&c), "infeasible grid point {x:?}");
+            c.validate().unwrap();
+        }
     }
 }

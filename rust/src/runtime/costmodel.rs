@@ -91,7 +91,7 @@ impl CostModelExec {
         &mut self,
         cfgs: &[HadoopConfig],
     ) -> Result<(Vec<f32>, Vec<[f32; N_PHASES]>), String> {
-        use crate::config::params::N_PARAMS;
+        use crate::config::params::N_AOT_PARAMS;
         use crate::runtime::{execute_tuple, literal_f32};
 
         let n = cfgs.len();
@@ -103,7 +103,7 @@ impl CostModelExec {
             .ok_or_else(|| format!("chunk {n} exceeds max artifact batch"))?;
         let batch = *batch;
 
-        let mut flat = Vec::with_capacity(batch * N_PARAMS);
+        let mut flat = Vec::with_capacity(batch * N_AOT_PARAMS);
         for c in cfgs {
             flat.extend_from_slice(&c.to_f32_row());
         }
@@ -112,7 +112,7 @@ impl CostModelExec {
             flat.extend_from_slice(&last); // pad with the last row
         }
 
-        let lit_cfg = literal_f32(&flat, &[batch as i64, N_PARAMS as i64])?;
+        let lit_cfg = literal_f32(&flat, &[batch as i64, N_AOT_PARAMS as i64])?;
         let lit_consts = literal_f32(&self.consts, &[N_CONSTS as i64])?;
         let lit_w = literal_f32(&self.weights, &[N_PHASES as i64, N_PHASES as i64])?;
 

@@ -49,15 +49,6 @@ impl Csv {
         )
     }
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        write_record(&self.header, &mut out);
-        for r in &self.rows {
-            write_record(r, &mut out);
-        }
-        out
-    }
-
     pub fn parse(input: &str) -> Result<Csv, String> {
         let mut lines = input.lines();
         let header = match lines.next() {
@@ -93,6 +84,18 @@ impl Csv {
     pub fn load(path: &std::path::Path) -> Result<Csv, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Csv::parse(&text)
+    }
+}
+
+/// RFC-4180-ish rendering — `to_string()` comes from this impl.
+impl std::fmt::Display for Csv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        write_record(&self.header, &mut out);
+        for r in &self.rows {
+            write_record(r, &mut out);
+        }
+        f.write_str(&out)
     }
 }
 

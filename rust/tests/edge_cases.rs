@@ -80,8 +80,11 @@ fn extreme_config_corners_all_simulate() {
             .iter()
             .enumerate()
         {
-            let meta = &PARAMS[*p];
-            cfg.set(*p, if corner & (1 << bit) != 0 { meta.hi } else { meta.lo });
+            let (lo, hi) = {
+                let d = cfg.def(*p);
+                (d.lo, d.hi)
+            };
+            cfg.set(*p, if corner & (1 << bit) != 0 { hi } else { lo });
         }
         let r = simulate_job(&cl, &wl, &cfg, corner as u64);
         assert_sane(&r, &format!("corner {corner:04b}"));

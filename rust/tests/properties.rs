@@ -3,6 +3,7 @@
 //! offline — see DESIGN.md §2).
 
 use catla::config::params::*;
+use catla::config::space::{ParamKind, ParamRegistry};
 use catla::config::spec::TuningSpec;
 use catla::hadoop::hdfs::{locality, place_blocks, Locality, Topology};
 use catla::hadoop::mapreduce::TaskKind;
@@ -23,8 +24,8 @@ fn qc(cases: usize) -> QcConfig {
 
 fn random_config(rng: &mut Rng) -> HadoopConfig {
     let mut c = HadoopConfig::default();
-    for p in PARAMS.iter() {
-        c.set(p.index, rng.range_f64(p.lo, p.hi));
+    for (i, d) in ParamRegistry::builtin().defs().iter().enumerate() {
+        c.set(i, rng.range_f64(d.lo, d.hi));
     }
     c
 }
@@ -253,6 +254,162 @@ fn prop_json_roundtrip_arbitrary_documents() {
             Ok(())
         },
     );
+}
+
+/// Per-dimension config comparison: exact for discrete kinds, float
+/// tolerance for continuous ones.
+fn configs_agree(spec: &TuningSpec, a: &HadoopConfig, b: &HadoopConfig) -> Result<(), String> {
+    for (i, d) in spec.registry.defs().iter().enumerate() {
+        let (x, y) = (a.values[i], b.values[i]);
+        if d.kind.is_discrete() {
+            if x != y {
+                return Err(format!("{}: {x} != {y} (discrete drift)", d.name));
+            }
+        } else if (x - y).abs() > 1e-9 * x.abs().max(1.0) {
+            return Err(format!("{}: {x} vs {y} (float drift)", d.name));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_encode_decode_roundtrip_every_kind_and_transform() {
+    // every ParamKind x Transform combination in one space: int/linear,
+    // int/log, float/linear, float/log, bool, categorical
+    let spec = TuningSpec::parse(
+        "param mapreduce.job.reduces int 2 32\n\
+         param mapreduce.task.io.sort.mb int 64 1024 log\n\
+         param mapreduce.map.sort.spill.percent float 0.5 0.9\n\
+         param x.cost.factor float 0.1 10 log\n\
+         param mapreduce.map.output.compress bool\n\
+         param mapreduce.map.output.compress.codec cat none,snappy,lz4\n",
+    )
+    .unwrap();
+    let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+    let dims = space.dims();
+    forall_cfg(
+        "encode-decode-roundtrip",
+        qc(150),
+        |rng| {
+            // include points outside the cube: decode must clamp
+            (0..dims).map(|_| rng.f64() * 2.0 - 0.5).collect::<Vec<f64>>()
+        },
+        |x| {
+            let c1 = space.decode(x);
+            c1.validate()?;
+            let c2 = space.decode(&space.encode(&c1));
+            configs_agree(&spec, &c1, &c2)?;
+            // snapping idempotence: a further encode/decode is stable
+            let c3 = space.decode(&space.encode(&c2));
+            configs_agree(&spec, &c2, &c3)?;
+            // unit coordinates stay in the cube
+            if space.encode(&c1).iter().any(|u| !(0.0..=1.0).contains(u)) {
+                return Err("encode left the unit cube".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spec_parse_print_roundtrip() {
+    // random subsets of a declaration pool (every kind, steps, log,
+    // spec-declared extras) plus constraints: parse -> print -> parse is
+    // the identity and printing is a fixed point
+    let pool = [
+        "param mapreduce.job.reduces int 2 32 step 2",
+        "param mapreduce.task.io.sort.mb int 64 1024 log",
+        "param mapreduce.map.sort.spill.percent float 0.5 0.9 step 0.1",
+        "param mapreduce.map.output.compress bool",
+        "param mapreduce.map.output.compress.codec cat none,snappy,lz4",
+        "param x.shuffle.buffer.kb int 32 4096 step 512 log",
+        "param mapreduce.reduce.memory.mb int 1024 8192",
+    ];
+    let constraints = [
+        "constraint io.sort.mb <= 0.7*map.memory.mb",
+        "constraint mapreduce.job.reduces <= 48",
+        "constraint io.sort.mb <= reduce.memory.mb",
+    ];
+    forall_cfg(
+        "spec-roundtrip",
+        qc(60),
+        |rng| {
+            let mut text = String::new();
+            let mut any = false;
+            for line in pool {
+                if rng.bernoulli(0.6) {
+                    text.push_str(line);
+                    text.push('\n');
+                    any = true;
+                }
+            }
+            if !any {
+                text.push_str(pool[0]);
+                text.push('\n');
+            }
+            for line in constraints {
+                if rng.bernoulli(0.3) {
+                    text.push_str(line);
+                    text.push('\n');
+                }
+            }
+            text
+        },
+        |text| {
+            let spec = TuningSpec::parse(text)?;
+            let printed = spec.to_string();
+            let back = TuningSpec::parse(&printed)
+                .map_err(|e| format!("printed spec unparseable: {e}\n{printed}"))?;
+            if back != spec {
+                return Err(format!("roundtrip mismatch:\n{printed}"));
+            }
+            if back.to_string() != printed {
+                return Err("printing is not a fixed point".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn categorical_log_constraint_spec_tunes_end_to_end() {
+    // the redesign's acceptance scenario: a spec with a categorical
+    // codec, log-scaled memory params and a cross-parameter constraint
+    // drives grid AND bobyqa through the shared Driver against the
+    // simulated cluster
+    let text = "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+                param mapreduce.task.io.sort.mb int 64 1024 step 128 log\n\
+                param mapreduce.map.memory.mb int 512 4096 log\n\
+                constraint io.sort.mb <= 0.7*map.memory.mb\n";
+    let spec = TuningSpec::parse(text).unwrap();
+    let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+    let wl = wordcount(1024.0);
+    let codec_idx = spec.ranges[0].index;
+    assert!(matches!(
+        spec.registry.get(codec_idx).kind,
+        ParamKind::Categorical(_)
+    ));
+    for method in ["grid", "bobyqa"] {
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+        let mut opt = Method::from_name(method, 7).unwrap().build();
+        let out = Driver::new(40)
+            .run(opt.as_mut(), &space, &mut obj)
+            .unwrap_or_else(|e| panic!("{method}: {e}"));
+        assert!(out.evals() > 0 && out.evals() <= 40, "{method}");
+        for r in &out.records {
+            r.config.validate().unwrap_or_else(|e| panic!("{method}: {e}"));
+            assert!(
+                space.is_feasible(&r.config),
+                "{method} evaluated an infeasible config: {}",
+                r.config.summary()
+            );
+            let codec = r.config.get(codec_idx);
+            assert_eq!(codec.fract(), 0.0, "{method}: non-integral codec index");
+            assert!((0.0..=2.0).contains(&codec), "{method}: codec out of range");
+        }
+        out.best_config.validate().unwrap();
+    }
 }
 
 #[test]

@@ -3,7 +3,8 @@
 //! the f32 native mirror otherwise) must agree with the f64 analytic
 //! cost model. With `pjrt`, run `make artifacts` first.
 
-use catla::config::params::{HadoopConfig, N_PARAMS, PARAMS};
+use catla::config::params::{HadoopConfig, N_AOT_PARAMS};
+use catla::config::space::ParamRegistry;
 use catla::hadoop::{costmodel, ClusterSpec};
 use catla::optim::surrogate::CandidateScorer;
 use catla::runtime::{CostModelExec, QuadraticExec, Runtime};
@@ -19,8 +20,8 @@ fn random_configs(n: usize, seed: u64) -> Vec<HadoopConfig> {
     (0..n)
         .map(|_| {
             let mut c = HadoopConfig::default();
-            for p in PARAMS.iter() {
-                c.set(p.index, rng.range_f64(p.lo, p.hi));
+            for (i, d) in ParamRegistry::builtin().defs().iter().enumerate() {
+                c.set(i, rng.range_f64(d.lo, d.hi));
             }
             c
         })
@@ -175,10 +176,35 @@ fn prescreen_through_pjrt_finds_good_starts() {
 
 #[test]
 fn config_row_layout_matches_param_table() {
-    // guard against silent reordering between PARAMS and to_f32_row
+    // guard against silent reordering between the registry's builtin
+    // prefix and to_f32_row
     let mut c = HadoopConfig::default();
     c.set_by_name("mapreduce.task.io.sort.mb", 256.0).unwrap();
     let row = c.to_f32_row();
-    assert_eq!(row.len(), N_PARAMS);
+    assert_eq!(row.len(), N_AOT_PARAMS);
     assert_eq!(row[1], 256.0); // P_IO_SORT_MB == index 1 in spec.py
+}
+
+#[test]
+fn extended_registry_keeps_the_aot_prefix_stable() {
+    // a spec-declared extra param must not disturb the artifact row:
+    // to_f32_row exports exactly the builtin prefix, in prefix order
+    let spec = catla::config::spec::TuningSpec::parse(
+        "param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+         param mapreduce.task.io.sort.mb int 64 1024\n",
+    )
+    .unwrap();
+    let mut c = HadoopConfig::for_registry(spec.registry.clone());
+    c.set_by_name("mapreduce.task.io.sort.mb", 512.0).unwrap();
+    c.set_category("mapreduce.map.output.compress.codec", "lz4")
+        .unwrap();
+    let row = c.to_f32_row();
+    assert_eq!(row.len(), N_AOT_PARAMS);
+    assert_eq!(row[1], 512.0);
+    let plain = {
+        let mut p = HadoopConfig::default();
+        p.set_by_name("mapreduce.task.io.sort.mb", 512.0).unwrap();
+        p.to_f32_row()
+    };
+    assert_eq!(row, plain, "extra params leaked into the AOT row");
 }

@@ -19,8 +19,8 @@ fn noiseless_cluster() -> ClusterSpec {
 
 fn random_config(rng: &mut Rng) -> HadoopConfig {
     let mut c = HadoopConfig::default();
-    for p in PARAMS.iter() {
-        c.set(p.index, rng.range_f64(p.lo, p.hi));
+    for (i, d) in catla::config::space::ParamRegistry::builtin().defs().iter().enumerate() {
+        c.set(i, rng.range_f64(d.lo, d.hi));
     }
     // slowstart near 1 keeps the DES and the closed-form overlap model
     // comparable (the analytic model's overlap term is an approximation)
