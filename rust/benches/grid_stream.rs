@@ -1,0 +1,168 @@
+//! PERF — streaming grid enumeration over a >10^6-point constrained
+//! space: points/second off the lazy `GridCursor`, the O(dims) cursor
+//! memory vs what materializing the cross product would cost, a
+//! budget-capped constrained sweep through the `Driver` (the acceptance
+//! scenario: the grid is never materialized), and the striped-shard
+//! partition. Records `BENCH_grid_stream.json` for the CI bench smoke.
+//!
+//! Run: `cargo bench --bench grid_stream` (CATLA_BENCH_QUICK=1 shortens)
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::optim::core::{Driver, FnObjective};
+use catla::optim::{GridSearch, ParamSpace};
+use catla::util::bench::{black_box, Bench};
+use catla::util::json::Json;
+
+/// Peak resident set (VmHWM) in kB — the "did we materialize the grid"
+/// proxy. Linux-only; absent elsewhere.
+fn vm_hwm_kb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+fn main() {
+    // 64 × 128 × 127 = 1,040,384 grid points; the constraint (with map
+    // memory untuned at its 1024 MB default, the bound is 716.8 MB)
+    // collapses the io.sort.mb axis above the bound, so the streamed
+    // sweep exercises decode + repair + dedup, not just enumeration.
+    let spec = TuningSpec::parse(
+        "param mapreduce.job.reduces int 1 64 step 1\n\
+         param mapreduce.task.io.sort.mb int 16 2048 step 16\n\
+         param mapreduce.task.io.sort.factor int 2 128 step 1\n\
+         constraint io.sort.mb <= 0.7*map.memory.mb\n",
+    )
+    .expect("bench spec");
+    let space = ParamSpace::new(spec, HadoopConfig::default());
+    let total = space.grid_cursor().total_points();
+    let dims = space.dims();
+    assert!(total > 1_000_000, "bench space shrank: {total} points");
+
+    let quick = std::env::var("CATLA_BENCH_QUICK").is_ok();
+    let slice: u64 = if quick { 200_000 } else { total };
+    let hwm_before = vm_hwm_kb();
+    let mut bench = Bench::new();
+
+    // ---- raw enumeration throughput (iterator: one Vec per point) -----
+    let points_per_s = bench
+        .run_throughput(
+            &format!("stream {slice} of {total} grid points"),
+            slice as f64,
+            "points",
+            || {
+                let mut acc = 0.0f64;
+                for p in space.grid_cursor().take(slice as usize) {
+                    acc += p[dims - 1];
+                }
+                black_box(acc)
+            },
+        )
+        .throughput
+        .map(|(v, _)| v)
+        .unwrap_or(0.0);
+
+    // ---- allocation-free enumeration (point_into, one reused buffer) --
+    let points_per_s_noalloc = bench
+        .run_throughput(
+            &format!("stream {slice} points, reused buffer"),
+            slice as f64,
+            "points",
+            || {
+                let cursor = space.grid_cursor();
+                let mut buf = vec![0.0f64; dims];
+                let mut acc = 0.0f64;
+                for i in 0..slice {
+                    cursor.point_into(i, &mut buf);
+                    acc += buf[dims - 1];
+                }
+                black_box(acc)
+            },
+        )
+        .throughput
+        .map(|(v, _)| v)
+        .unwrap_or(0.0);
+
+    // ---- the acceptance scenario: a constrained sweep under a fixed ---
+    // ---- eval budget, grid never materialized ------------------------
+    let budget = 4096usize;
+    let sweep_s = {
+        let stats = bench.run_throughput(
+            &format!("constrained grid sweep, budget {budget} of {total}"),
+            budget as f64,
+            "evals",
+            || {
+                let mut obj = FnObjective(|c: &HadoopConfig| c.values.iter().sum::<f64>());
+                let out = Driver::new(budget)
+                    .run(&mut GridSearch::new(), &space, &mut obj)
+                    .expect("sweep");
+                assert_eq!(out.evals(), budget);
+                out.best_value
+            },
+        );
+        stats.mean_secs()
+    };
+
+    // ---- striped shards partition the grid ----------------------------
+    let shard_counts: Vec<u64> = (0..4)
+        .map(|k| space.grid_cursor().shard(k, 4).remaining())
+        .collect();
+    assert_eq!(
+        shard_counts.iter().sum::<u64>(),
+        total,
+        "4-way shards do not partition the grid"
+    );
+
+    let hwm_after = vm_hwm_kb();
+
+    // cursor state: the per-dimension axes plus three u64s — vs the
+    // Vec<Vec<f64>> the materialized cross product used to allocate
+    let axis_values: u64 = space
+        .spec
+        .ranges
+        .iter()
+        .map(|r| r.grid().len() as u64)
+        .sum();
+    let cursor_state_bytes = axis_values * 8 + 24 * dims as u64 + 24;
+    let materialized_bytes = total * (dims as u64 * 8 + 24);
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("grid_stream".into()));
+    doc.set("total_points", Json::Num(total as f64));
+    doc.set("dims", Json::Num(dims as f64));
+    doc.set("enumerated_points", Json::Num(slice as f64));
+    doc.set("points_per_s", Json::Num(points_per_s));
+    doc.set("points_per_s_alloc_free", Json::Num(points_per_s_noalloc));
+    doc.set("cursor_state_bytes", Json::Num(cursor_state_bytes as f64));
+    doc.set(
+        "materialized_bytes_estimate",
+        Json::Num(materialized_bytes as f64),
+    );
+    doc.set("sweep_budget", Json::Num(budget as f64));
+    doc.set("sweep_s", Json::Num(sweep_s));
+    doc.set(
+        "shard_counts",
+        Json::Arr(shard_counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+    );
+    doc.set(
+        "vm_hwm_kb_before",
+        hwm_before.map(Json::Num).unwrap_or(Json::Null),
+    );
+    doc.set(
+        "vm_hwm_kb_after",
+        hwm_after.map(Json::Num).unwrap_or(Json::Null),
+    );
+    std::fs::write("BENCH_grid_stream.json", doc.to_string() + "\n").unwrap();
+    println!("wrote BENCH_grid_stream.json");
+    println!(
+        "cursor state ~{cursor_state_bytes} B vs materialized ~{:.0} MiB ({}x)",
+        materialized_bytes as f64 / (1024.0 * 1024.0),
+        materialized_bytes / cursor_state_bytes.max(1)
+    );
+
+    bench.print_table("PERF — streaming grid enumeration");
+}

@@ -1,10 +1,15 @@
 //! PERF1a — cluster-simulator throughput: simulated jobs/second and
 //! task-throughput across cluster and input scales. The simulator is the
 //! tuning loop's inner cost, so this bounds end-to-end tuning speed.
-//! Also measures serial vs batched objective evaluation (the ask/tell
-//! Driver's eval path) and records it to `BENCH_optim_batch.json`.
+//! Also measures the `eval_batch` hot path three ways — serial, the
+//! legacy per-call pool-spawn pipeline (clone every config + Arc, spawn
+//! and join a fresh pool, full `simulate_job`), and the current
+//! persistent-pool zero-clone `simulate_runtime` pipeline — asserts the
+//! three agree bitwise, and records it to `BENCH_optim_batch.json`.
 //!
 //! Run: `cargo bench --bench simulator_throughput`
+
+use std::sync::Arc;
 
 use catla::config::params::{HadoopConfig, P_REDUCES, P_SPLIT_MB};
 use catla::hadoop::{simulate_job, ClusterSpec, SimCluster, JobSubmission};
@@ -12,8 +17,32 @@ use catla::optim::core::BatchObjective;
 use catla::optim::ClusterObjective;
 use catla::util::bench::Bench;
 use catla::util::json::Json;
-use catla::util::pool::default_threads;
-use catla::workloads::{terasort, wordcount};
+use catla::util::pool::{default_threads, map_parallel};
+use catla::workloads::{terasort, wordcount, WorkloadSpec};
+
+/// The pre-streaming `ClusterObjective::eval_batch`, reproduced as the
+/// baseline: per-item `HadoopConfig` clones, `Arc`-wrapped spec/workload
+/// clones, a thread pool spawned and joined per call, and the full
+/// record-materializing `simulate_job`.
+fn spawn_per_call_eval(
+    cluster: &mut SimCluster,
+    wl: &WorkloadSpec,
+    cfgs: &[HadoopConfig],
+) -> Vec<f64> {
+    let first_seed = cluster.reserve_seeds(cfgs.len() as u64);
+    let spec = Arc::new(cluster.spec.clone());
+    let wl = Arc::new(wl.clone());
+    let items: Vec<(HadoopConfig, u64)> = cfgs
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| (cfg.clone(), first_seed.wrapping_add(i as u64)))
+        .collect();
+    map_parallel(
+        items,
+        default_threads().min(cfgs.len()),
+        move |(cfg, seed)| simulate_job(&spec, &wl, &cfg, seed).runtime_s,
+    )
+}
 
 fn main() {
     let mut bench = Bench::new();
@@ -86,11 +115,14 @@ fn main() {
         });
     }
 
-    // serial vs batched ask-batch evaluation (the Driver's eval path)
+    // the Driver's eval path, three ways: serial baseline, the legacy
+    // per-call pool-spawn pipeline, and the persistent-pool zero-clone
+    // pipeline actually used — batch 1 is the sequential-DFO singleton
+    // case, where per-ask overhead dominates
     {
         let wl = wordcount(10_240.0);
         let mut results = Vec::new();
-        for batch in [16usize, 64, 256] {
+        for batch in [1usize, 16, 64, 256] {
             let cfgs: Vec<HadoopConfig> = (0..batch)
                 .map(|i| {
                     let mut c = HadoopConfig::default();
@@ -98,6 +130,22 @@ fn main() {
                     c
                 })
                 .collect();
+
+            // byte-identity first: the optimized pipeline must return the
+            // exact bits the legacy pipeline did
+            {
+                let mut c1 = SimCluster::new(ClusterSpec::default());
+                let legacy = spawn_per_call_eval(&mut c1, &wl, &cfgs);
+                let mut c2 = SimCluster::new(ClusterSpec::default());
+                let current = ClusterObjective::new(&mut c2, &wl, 1)
+                    .eval_batch(&cfgs)
+                    .unwrap();
+                assert_eq!(legacy.len(), current.len());
+                for (a, b) in legacy.iter().zip(&current) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "optimized eval_batch drifted");
+                }
+            }
+
             let serial = bench
                 .run_throughput(
                     &format!("objective eval serial, batch {batch}"),
@@ -113,25 +161,39 @@ fn main() {
                     },
                 )
                 .mean_secs();
-            let batched = bench
+            let spawn = bench
                 .run_throughput(
-                    &format!("objective eval batched, batch {batch}"),
+                    &format!("objective eval spawn-per-call (legacy), batch {batch}"),
                     batch as f64,
                     "configs",
                     || {
                         let mut cluster = SimCluster::new(ClusterSpec::default());
-                        ClusterObjective::new(&mut cluster, &wl, 1)
-                            .eval_batch(&cfgs)
-                            .unwrap()
-                            .len()
+                        spawn_per_call_eval(&mut cluster, &wl, &cfgs).len()
                     },
                 )
                 .mean_secs();
+            let batched = {
+                // steady state: ONE objective (and pool) across calls,
+                // exactly how a Driver-owned run evaluates its batches
+                let mut cluster = SimCluster::new(ClusterSpec::default());
+                let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+                bench
+                    .run_throughput(
+                        &format!("objective eval batched persistent-pool, batch {batch}"),
+                        batch as f64,
+                        "configs",
+                        || obj.eval_batch(&cfgs).unwrap().len(),
+                    )
+                    .mean_secs()
+            };
             let mut row = Json::obj();
             row.set("batch", Json::Num(batch as f64));
             row.set("serial_s", Json::Num(serial));
+            row.set("spawn_per_call_s", Json::Num(spawn));
             row.set("batched_s", Json::Num(batched));
             row.set("speedup", Json::Num(serial / batched));
+            row.set("speedup_vs_spawn", Json::Num(spawn / batched));
+            row.set("bitwise_identical", Json::Bool(true));
             results.push(row);
         }
         let mut doc = Json::obj();

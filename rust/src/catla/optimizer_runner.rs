@@ -12,7 +12,7 @@
 use crate::catla::history::History;
 use crate::catla::project::Project;
 use crate::hadoop::SimCluster;
-use crate::optim::core::{ClusterObjective, Driver, EarlyStop};
+use crate::optim::core::{ClusterObjective, Driver, EarlyStop, DEFAULT_BATCH_CHUNK};
 use crate::optim::surrogate::{CandidateScorer, Prescreen};
 use crate::optim::{EvalRecord, Method, ParamSpace, TuningOutcome};
 
@@ -30,6 +30,11 @@ pub struct TuningSettings {
     pub early_patience: usize,
     /// Relative improvement threshold for early stopping (`early.tol`).
     pub early_tol: f64,
+    /// Streaming chunk (`batch.chunk`): streaming methods (grid) propose
+    /// at most this many candidates per ask and the driver evaluates
+    /// ask-batches in slices of this size. Outcomes are byte-identical
+    /// under any chunk — this only bounds working memory.
+    pub batch_chunk: usize,
 }
 
 impl TuningSettings {
@@ -62,6 +67,7 @@ impl TuningSettings {
             prescreen: t.get("prescreen").map(|v| v == "auto").unwrap_or(false),
             early_patience: parse_usize("early.patience", 0)?,
             early_tol: parse_f64("early.tol", 1e-3)?,
+            batch_chunk: parse_usize("batch.chunk", DEFAULT_BATCH_CHUNK)?.max(1),
         })
     }
 
@@ -69,7 +75,7 @@ impl TuningSettings {
     /// early stopping, CATLA_TRACE observer) — also used by the
     /// workflow tuner so every entry point honors the same properties.
     pub fn driver<'a>(&self) -> Driver<'a> {
-        let mut driver = Driver::new(self.budget);
+        let mut driver = Driver::new(self.budget).chunk(self.batch_chunk);
         if self.early_patience > 0 {
             driver = driver.early_stop(EarlyStop {
                 patience: self.early_patience,

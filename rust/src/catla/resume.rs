@@ -11,6 +11,7 @@
 //!   checkpoint, now uniform across all DFO methods.
 
 use crate::catla::history::History;
+use crate::catla::optimizer_runner::TuningSettings;
 use crate::catla::project::Project;
 use crate::config::spec::TuningSpec;
 use crate::hadoop::SimCluster;
@@ -100,18 +101,11 @@ pub fn resume_tuning(
         Ok(csv) => PriorRuns::from_log(&csv, &spec)?,
         Err(_) => PriorRuns::default(),
     };
-    let optimizer = project
-        .tuning
-        .as_ref()
-        .and_then(|t| t.get("optimizer"))
-        .unwrap_or("bobyqa")
-        .to_string();
-    let seed: u64 = project
-        .tuning
-        .as_ref()
-        .and_then(|t| t.get("seed"))
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(7);
+    // one parser for tuning.properties everywhere: the resumed run
+    // honors the same optimizer/seed/batch.chunk as the original, and a
+    // malformed value errors here exactly like it does on a fresh run
+    let settings = TuningSettings::from_project(project)?;
+    let optimizer = settings.optimizer.clone();
     let workload = project.workload()?;
     let space = ParamSpace::new(spec.clone(), project.base_config()?);
     let records = prior.to_records(&space)?;
@@ -120,10 +114,11 @@ pub fn resume_tuning(
     // the driver truncates replay to its budget, so clamp the total up
     // to the log size — a too-small budget must not drop history
     let total = budget.max(records.len());
-    let mut opt = Method::from_name(&optimizer, seed)?.build();
+    let mut opt = Method::from_name(&optimizer, settings.seed)?.build();
     let mut obj = ClusterObjective::new(cluster, &workload, 1);
-    let mut outcome =
-        Driver::new(total).run_with_history(opt.as_mut(), &space, &mut obj, &records)?;
+    let mut outcome = Driver::new(total)
+        .chunk(settings.batch_chunk)
+        .run_with_history(opt.as_mut(), &space, &mut obj, &records)?;
 
     outcome.optimizer = if records.len() >= budget {
         format!("{optimizer}[resumed,exhausted]")

@@ -6,7 +6,7 @@
 //! (DESIGN.md substitution table row 1). A real SSH implementation could
 //! be dropped in without touching any Catla code.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::joblogs;
@@ -66,16 +66,30 @@ pub trait Cluster {
     fn describe(&self) -> String;
 }
 
+/// How many fetched job ids the cluster remembers: `poll` on a job whose
+/// artifacts were already downloaded errors with "already fetched"
+/// instead of the (misleading) "unknown job", without the retired list
+/// itself becoming a leak.
+const RETIRED_JOBS_KEPT: usize = 64;
+
 /// Simulated Hadoop 2.x cluster.
 ///
 /// Jobs complete in *virtual* time immediately on submission; `poll`
 /// reveals completion after `polls_until_done` calls so the Task Runner's
-/// poll loop is genuinely exercised.
+/// poll loop is genuinely exercised. The job table holds only in-flight
+/// results: `fetch_artifacts` EVICTS the entry it downloads (a tuning
+/// run submits thousands of jobs — an append-only table was an unbounded
+/// leak), keeping a small LRU of recently fetched ids for clean errors.
 pub struct SimCluster {
     pub spec: ClusterSpec,
     seed_counter: u64,
     pub polls_until_done: u32,
     jobs: HashMap<String, (JobResult, u32)>,
+    /// Recently fetched (evicted) job ids, oldest first, bounded by
+    /// [`RETIRED_JOBS_KEPT`].
+    retired: VecDeque<String>,
+    /// Monotone count of jobs ever submitted (survives eviction).
+    completed: usize,
     next_id: u64,
 }
 
@@ -87,6 +101,8 @@ impl SimCluster {
             seed_counter: seed,
             polls_until_done: 2,
             jobs: HashMap::new(),
+            retired: VecDeque::new(),
+            completed: 0,
             next_id: 1,
         }
     }
@@ -108,7 +124,15 @@ impl SimCluster {
         first
     }
 
+    /// Jobs ever submitted through the `Cluster` API (monotone — fetched
+    /// jobs are evicted from the table but still counted).
     pub fn jobs_completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Jobs whose results are still held (submitted, artifacts not yet
+    /// fetched) — the quantity the eviction policy bounds.
+    pub fn jobs_in_flight(&self) -> usize {
         self.jobs.len()
     }
 }
@@ -122,16 +146,22 @@ impl Cluster for SimCluster {
         let result = self.run_job(&job);
         let id = format!("job_{:013}_{:04}", 1_577_000_000 + self.next_id, self.next_id);
         self.next_id += 1;
+        self.completed += 1;
         self.jobs.insert(id.clone(), (result, 0));
         Ok(id)
     }
 
     fn poll(&mut self, job_id: &str) -> Result<JobStatus, String> {
         let until = self.polls_until_done;
-        let (result, polls) = self
-            .jobs
-            .get_mut(job_id)
-            .ok_or_else(|| format!("unknown job {job_id}"))?;
+        let (result, polls) = match self.jobs.get_mut(job_id) {
+            Some(entry) => entry,
+            None if self.retired.iter().any(|id| id == job_id) => {
+                return Err(format!(
+                    "job {job_id} already fetched (its result was released)"
+                ))
+            }
+            None => return Err(format!("unknown job {job_id}")),
+        };
         *polls += 1;
         if *polls >= until {
             Ok(JobStatus::Succeeded {
@@ -145,10 +175,23 @@ impl Cluster for SimCluster {
     }
 
     fn fetch_artifacts(&mut self, job_id: &str) -> Result<JobArtifacts, String> {
-        let (result, _) = self
-            .jobs
-            .get(job_id)
-            .ok_or_else(|| format!("unknown job {job_id}"))?;
+        // downloading retires the job: the result leaves the table (the
+        // table would otherwise grow for the whole tuning run) and the id
+        // moves onto the bounded retired list
+        let (result, _) = match self.jobs.remove(job_id) {
+            Some(entry) => entry,
+            None if self.retired.iter().any(|id| id == job_id) => {
+                return Err(format!(
+                    "job {job_id} already fetched (artifacts are downloaded once)"
+                ))
+            }
+            None => return Err(format!("unknown job {job_id}")),
+        };
+        self.retired.push_back(job_id.to_string());
+        while self.retired.len() > RETIRED_JOBS_KEPT {
+            self.retired.pop_front();
+        }
+        let result = &result;
         let history_json = joblogs::to_history_json(job_id, result).to_string();
         let container_logs = result
             .tasks
@@ -250,6 +293,39 @@ mod tests {
         let mut c = SimCluster::new(ClusterSpec::default());
         assert!(c.poll("job_nope").is_err());
         assert!(c.fetch_artifacts("job_nope").is_err());
+    }
+
+    #[test]
+    fn fetch_evicts_the_job_and_later_calls_error_cleanly() {
+        let mut c = SimCluster::new(ClusterSpec::default());
+        let id = c.submit_job(submission()).unwrap();
+        c.poll(&id).unwrap();
+        c.fetch_artifacts(&id).unwrap();
+        assert_eq!(c.jobs_in_flight(), 0, "fetched job not evicted");
+        assert_eq!(c.jobs_completed(), 1, "completed count must survive eviction");
+        // the id is retired, not forgotten: both calls mention the fetch
+        let e = c.poll(&id).unwrap_err();
+        assert!(e.contains("already fetched"), "poll error: {e}");
+        let e = c.fetch_artifacts(&id).unwrap_err();
+        assert!(e.contains("already fetched"), "fetch error: {e}");
+        // a genuinely unknown id still says so
+        assert!(c.poll("job_nope").unwrap_err().contains("unknown job"));
+    }
+
+    #[test]
+    fn job_table_stays_bounded_across_a_tuning_length_run() {
+        let mut c = SimCluster::new(ClusterSpec::default());
+        let n = super::RETIRED_JOBS_KEPT * 3;
+        for i in 0..n {
+            let id = c.submit_job(submission()).unwrap();
+            c.fetch_artifacts(&id).unwrap();
+            assert_eq!(c.jobs_in_flight(), 0);
+            assert!(
+                c.retired.len() <= super::RETIRED_JOBS_KEPT,
+                "retired list grew past its bound at job {i}"
+            );
+        }
+        assert_eq!(c.jobs_completed(), n);
     }
 
     #[test]

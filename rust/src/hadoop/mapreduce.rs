@@ -81,6 +81,17 @@ struct ReduceTaskState {
     mult: f64,
 }
 
+/// What [`simulate_core`] produced, before the (optional) packaging into
+/// a [`JobResult`]. With `RECORD = false` the `tasks`/`counters`/
+/// `phase_secs` fields stay empty/zero — only the timeline is computed.
+struct SimCore {
+    runtime_s: f64,
+    map_phase_end_s: f64,
+    tasks: Vec<TaskRecord>,
+    counters: JobCounters,
+    phase_secs: [f64; N_PHASES],
+}
+
 /// Simulate one job. Deterministic for a given (cluster, workload,
 /// config, seed) quadruple regardless of host threading.
 pub fn simulate_job(
@@ -89,6 +100,41 @@ pub fn simulate_job(
     cfg: &HadoopConfig,
     seed: u64,
 ) -> JobResult {
+    let core = simulate_core::<true>(cl, wl, cfg, seed);
+    JobResult {
+        runtime_s: core.runtime_s,
+        map_phase_end_s: core.map_phase_end_s,
+        tasks: core.tasks,
+        counters: core.counters,
+        phase_task_seconds: core.phase_secs,
+        workload: wl.name.clone(),
+        config: cfg.clone(),
+        seed,
+    }
+}
+
+/// Runtime-only fast path for optimizer hot loops: the same simulation
+/// as [`simulate_job`] — identical RNG stream, event schedule and
+/// scheduling decisions, so `runtime_s` is byte-identical — but skips
+/// materializing per-task records, counters, phase aggregates and the
+/// result struct (no config/workload clones). The batched
+/// `ClusterObjective` consumes only `runtime_s`, which makes this the
+/// innermost call of every tuning run; artifact-producing paths
+/// (submit/poll/fetch) keep the full [`simulate_job`].
+pub fn simulate_runtime(cl: &ClusterSpec, wl: &WorkloadSpec, cfg: &HadoopConfig, seed: u64) -> f64 {
+    simulate_core::<false>(cl, wl, cfg, seed).runtime_s
+}
+
+/// The discrete-event engine behind both entry points. `RECORD` gates
+/// every side channel (task records, counters, phase task-seconds) at
+/// compile time; nothing it gates feeds back into the timeline, so both
+/// instantiations walk the identical event sequence.
+fn simulate_core<const RECORD: bool>(
+    cl: &ClusterSpec,
+    wl: &WorkloadSpec,
+    cfg: &HadoopConfig,
+    seed: u64,
+) -> SimCore {
     let mut root = Rng::new(seed ^ 0xCA71A);
     let topo = Topology::new(cl.nodes as usize, cl.racks as usize);
     let geo = costmodel::geometry(cfg, wl, cl);
@@ -162,7 +208,11 @@ pub fn simulate_job(
     let mut reds_done = 0usize;
     let mut map_phase_end = 0.0f64;
     let mut last_finish = 0.0f64;
-    let mut tasks: Vec<TaskRecord> = Vec::with_capacity(maps + reduces);
+    let mut tasks: Vec<TaskRecord> = if RECORD {
+        Vec::with_capacity(maps + reduces)
+    } else {
+        Vec::new()
+    };
     let mut counters = JobCounters {
         total_maps: geo.maps,
         total_reduces: geo.reduces,
@@ -291,7 +341,9 @@ pub fn simulate_job(
                 if st.done || epoch != st.epoch {
                     continue;
                 }
-                counters.failed_task_attempts += 1;
+                if RECORD {
+                    counters.failed_task_attempts += 1;
+                }
                 // release this attempt's container, requeue the task
                 if let Some(pos) = st.live.iter().position(|(_, _, _, s)| !s) {
                     let (c, _, _, _) = st.live.remove(pos);
@@ -322,42 +374,39 @@ pub fn simulate_job(
                 let lives = std::mem::take(&mut st.live);
                 let n_live = lives.len();
                 for (c, _, _, s) in lives {
-                    if s {
+                    if RECORD && s {
                         counters.speculative_attempts += 1;
                     }
                     yarn.release(c);
                 }
-                let node = {
-                    // attribute to the node of the attempt that won
-                    st.locality.map(|_| 0).unwrap_or(0);
-                    0
-                };
-                let _ = node;
                 let loc = st.locality.unwrap_or(Locality::NodeLocal);
-                match loc {
-                    Locality::NodeLocal => counters.data_local_maps += 1,
-                    Locality::RackLocal => counters.rack_local_maps += 1,
-                    Locality::OffRack => counters.off_rack_maps += 1,
+                if RECORD {
+                    match loc {
+                        Locality::NodeLocal => counters.data_local_maps += 1,
+                        Locality::RackLocal => counters.rack_local_maps += 1,
+                        Locality::OffRack => counters.off_rack_maps += 1,
+                    }
+                    counters.spilled_records += map_cost.spills
+                        * ((map_cost.map_out_mb * 1024.0 / wl.record_kb.max(1e-4)) as u64
+                            / map_cost.spills.max(1));
+                    counters.file_write_mb += map_cost.disk_out_mb;
+                    phase_secs[costmodel::PH_READ] += map_cost.t_read_local / loc.rate_factor();
+                    phase_secs[costmodel::PH_MAP_CPU] += map_cost.t_cpu;
+                    phase_secs[costmodel::PH_MAP_IO] += map_cost.t_spill_io + map_cost.t_merge_io;
+                    tasks.push(TaskRecord {
+                        kind: TaskKind::Map,
+                        id: tid,
+                        node: 0,
+                        start: st.start,
+                        finish: t,
+                        attempts: st.attempts,
+                        speculative: n_live > 1,
+                        locality: Some(loc),
+                    });
                 }
-                counters.spilled_records += map_cost.spills
-                    * ((map_cost.map_out_mb * 1024.0 / wl.record_kb.max(1e-4)) as u64
-                        / map_cost.spills.max(1));
-                counters.file_write_mb += map_cost.disk_out_mb;
-                let dur = t - st.start;
-                completed_map_durs.push(dur);
-                phase_secs[costmodel::PH_READ] += map_cost.t_read_local / loc.rate_factor();
-                phase_secs[costmodel::PH_MAP_CPU] += map_cost.t_cpu;
-                phase_secs[costmodel::PH_MAP_IO] += map_cost.t_spill_io + map_cost.t_merge_io;
-                tasks.push(TaskRecord {
-                    kind: TaskKind::Map,
-                    id: tid,
-                    node: 0,
-                    start: st.start,
-                    finish: t,
-                    attempts: st.attempts,
-                    speculative: n_live > 1,
-                    locality: Some(loc),
-                });
+                // the duration feed stays on in both modes: speculation
+                // decisions below read the completed-duration median
+                completed_map_durs.push(t - st.start);
                 last_finish = last_finish.max(t);
 
                 // speculative execution: when the map phase is nearly done,
@@ -398,23 +447,25 @@ pub fn simulate_job(
                     yarn.release(c);
                 }
                 reds_done += 1;
-                let w = rs.weight;
-                phase_secs[costmodel::PH_SHUFFLE] += shuffle.t_copy * w;
-                phase_secs[costmodel::PH_RED_IO] += red_cost.t_merge_io * w;
-                phase_secs[costmodel::PH_RED_CPU] += red_cost.t_cpu * w;
-                phase_secs[costmodel::PH_WRITE] += red_cost.t_write * w;
-                counters.hdfs_write_mb +=
-                    shuffle.per_red_logical_mb * w * wl.output_selectivity;
-                tasks.push(TaskRecord {
-                    kind: TaskKind::Reduce,
-                    id: rid,
-                    node: rs.node,
-                    start: rs.alloc_t,
-                    finish: t,
-                    attempts: 1,
-                    speculative: false,
-                    locality: None,
-                });
+                if RECORD {
+                    let w = rs.weight;
+                    phase_secs[costmodel::PH_SHUFFLE] += shuffle.t_copy * w;
+                    phase_secs[costmodel::PH_RED_IO] += red_cost.t_merge_io * w;
+                    phase_secs[costmodel::PH_RED_CPU] += red_cost.t_cpu * w;
+                    phase_secs[costmodel::PH_WRITE] += red_cost.t_write * w;
+                    counters.hdfs_write_mb +=
+                        shuffle.per_red_logical_mb * w * wl.output_selectivity;
+                    tasks.push(TaskRecord {
+                        kind: TaskKind::Reduce,
+                        id: rid,
+                        node: rs.node,
+                        start: rs.alloc_t,
+                        finish: t,
+                        attempts: 1,
+                        speculative: false,
+                        locality: None,
+                    });
+                }
                 last_finish = last_finish.max(t);
                 schedule_tasks!(q);
             }
@@ -425,18 +476,17 @@ pub fn simulate_job(
     }
     debug_assert!(yarn.check_invariants().is_ok());
 
-    phase_secs[costmodel::PH_OVERHEAD] =
-        cl.am_overhead_s + (maps + reduces) as f64 * cl.task_overhead_s;
+    if RECORD {
+        phase_secs[costmodel::PH_OVERHEAD] =
+            cl.am_overhead_s + (maps + reduces) as f64 * cl.task_overhead_s;
+    }
 
-    JobResult {
+    SimCore {
         runtime_s: last_finish + cl.am_overhead_s * 0.25, // AM teardown
         map_phase_end_s: map_phase_end,
         tasks,
         counters,
-        phase_task_seconds: phase_secs,
-        workload: wl.name.clone(),
-        config: cfg.clone(),
-        seed,
+        phase_secs,
     }
 }
 
@@ -457,6 +507,34 @@ mod tests {
     fn run(cfg: &HadoopConfig, seed: u64) -> JobResult {
         let cl = ClusterSpec::default();
         simulate_job(&cl, &wordcount(10240.0), cfg, seed)
+    }
+
+    #[test]
+    fn runtime_fast_path_is_byte_identical_to_full_simulation() {
+        // the lean path must walk the exact same event timeline: same
+        // RNG stream, same scheduling, bit-equal runtime — across
+        // workloads, failure/straggler settings and many seeds
+        let mut noisy = ClusterSpec::default();
+        noisy.noise.failure_prob = 0.1;
+        noisy.noise.straggler_prob = 0.15;
+        let mut cfg = HadoopConfig::default();
+        cfg.set(P_REDUCES, 16.0);
+        cfg.set(P_SLOWSTART, 0.4);
+        for cl in [ClusterSpec::default(), noisy] {
+            for wl in [wordcount(6144.0), terasort(4096.0)] {
+                for seed in 0..12 {
+                    let full = simulate_job(&cl, &wl, &cfg, seed).runtime_s;
+                    let lean = simulate_runtime(&cl, &wl, &cfg, seed);
+                    assert_eq!(
+                        full.to_bits(),
+                        lean.to_bits(),
+                        "lean path diverged: {} vs {lean} (wl {}, seed {seed})",
+                        full,
+                        wl.name
+                    );
+                }
+            }
+        }
     }
 
     #[test]

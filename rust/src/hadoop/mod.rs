@@ -17,7 +17,7 @@ pub mod trace;
 pub mod yarn;
 
 pub use cluster::{Cluster, JobArtifacts, JobStatus, JobSubmission, SimCluster};
-pub use mapreduce::{simulate_job, JobResult};
+pub use mapreduce::{simulate_job, simulate_runtime, JobResult};
 pub use noise::NoiseModel;
 
 use crate::config::env::HadoopEnv;

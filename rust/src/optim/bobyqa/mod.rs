@@ -85,9 +85,9 @@ struct State {
 #[derive(Clone, Debug)]
 enum Pending {
     None,
-    /// The initial design: stays pending until the next `ask`, because a
-    /// driver with early stopping tells one ask-batch back in several
-    /// patience-sized chunks.
+    /// The initial design: stays pending until the next `ask`, because
+    /// the driver tells one ask-batch back in several `batch.chunk`-sized
+    /// slices.
     Init,
     /// Trust-region step from incumbent `xb` (= pts[bi], value fb).
     Trust {

@@ -2,10 +2,10 @@
 //! protocol, driven by a shared [`Driver`].
 //!
 //! * [`Optimizer`] — `ask` proposes a batch of unit-cube candidates,
-//!   `tell` feeds the measured results back. Population methods (grid,
-//!   random, latin) ask in large batches; sequential methods (bobyqa,
-//!   hooke-jeeves, …) ask singletons and behave exactly like their old
-//!   monolithic loops.
+//!   `tell` feeds the measured results back. Population methods (random,
+//!   latin) ask in large batches, grid streams chunk-bounded batches off
+//!   its cursor; sequential methods (bobyqa, hooke-jeeves, …) ask
+//!   singletons and behave exactly like their old monolithic loops.
 //! * [`BatchObjective`] — scores a whole ask-batch in one call.
 //!   [`ClusterObjective`] fans a batch out over the thread pool against
 //!   the simulated cluster (byte-identical to serial submission order:
@@ -18,32 +18,70 @@
 //!   [`Observer`] hooks, and checkpoint replay
 //!   ([`Driver::run_with_history`] re-`tell`s prior evaluations into a
 //!   fresh optimizer).
-
-use std::sync::Arc;
+//!
+//! # The chunked-ask protocol
+//!
+//! The driver carries a streaming chunk size (`batch.chunk` in
+//! `tuning.properties`, default [`DEFAULT_BATCH_CHUNK`]) with two roles:
+//!
+//! 1. Before the first `ask` it is handed to the optimizer through
+//!    [`Optimizer::set_chunk`]. Methods whose proposals form a stream
+//!    (grid) bound each ask-batch to it, so an exhaustive sweep over a
+//!    10^6-point space never materializes more than one chunk of
+//!    candidates. One-shot designs (latin's stratification, bobyqa's
+//!    init set) may ignore the hint — their batch *shape* is part of the
+//!    method.
+//! 2. Every ask-batch is **evaluated and told in chunk-sized slices**,
+//!    bounding the decoded-config buffer the same way. Early stopping is
+//!    decided per evaluation, never per slice, so it cannot observe the
+//!    slicing.
+//!
+//! Both roles only re-slice the identical candidate stream: for every
+//! method the evaluation order, seeds and records are byte-identical
+//! under any chunk size, with or without early stopping
+//! (regression-tested across all eight methods in
+//! `rust/tests/ask_tell.rs`).
 
 use crate::config::params::HadoopConfig;
-use crate::hadoop::{simulate_job, SimCluster};
+use crate::hadoop::{simulate_runtime, SimCluster};
 use crate::optim::result::{EvalRecord, Recorder, TuningOutcome};
 use crate::optim::space::ParamSpace;
 use crate::optim::surrogate::CandidateScorer;
-use crate::util::pool::{default_threads, map_parallel};
+use crate::util::pool::{default_threads, ThreadPool};
 use crate::workloads::WorkloadSpec;
+
+/// Default streaming chunk: ask-batches are proposed (by streaming
+/// methods) and evaluated in slices of at most this many candidates.
+pub const DEFAULT_BATCH_CHUNK: usize = 1024;
 
 /// One proposed configuration, in unit-cube coordinates.
 #[derive(Clone, Debug)]
 pub struct Candidate {
     pub unit_x: Vec<f64>,
+    /// Pre-decoded configuration, set when the proposing optimizer
+    /// already decoded the point (grid's constraint dedup does): the
+    /// driver consumes it instead of decoding a second time.
+    pub config: Option<HadoopConfig>,
 }
 
 impl Candidate {
     pub fn new(unit_x: Vec<f64>) -> Candidate {
-        Candidate { unit_x }
+        Candidate {
+            unit_x,
+            config: None,
+        }
+    }
+
+    /// Attach the decoded configuration (decode-once optimization).
+    pub fn with_config(mut self, config: HadoopConfig) -> Candidate {
+        self.config = Some(config);
+        self
     }
 }
 
 impl From<Vec<f64>> for Candidate {
     fn from(unit_x: Vec<f64>) -> Candidate {
-        Candidate { unit_x }
+        Candidate::new(unit_x)
     }
 }
 
@@ -62,6 +100,14 @@ pub trait Optimizer {
     /// Propose up to `budget_left` candidates (more are truncated by the
     /// driver; fewer is fine).
     fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate>;
+
+    /// Streaming hint, called once per run before the first `ask`:
+    /// propose at most `chunk` candidates per ask when the method's
+    /// proposals form a resumable stream (grid's cursor does). One-shot
+    /// designs whose batch shape is part of the method (latin, bobyqa's
+    /// init set) ignore it — the driver evaluates any batch in
+    /// chunk-sized slices regardless. Default: ignored.
+    fn set_chunk(&mut self, _chunk: usize) {}
 
     /// Absorb measured results, in the order they were asked.
     fn tell(&mut self, evals: &[EvalRecord]);
@@ -114,11 +160,22 @@ impl<F: FnMut(&HadoopConfig) -> f64> BatchObjective for FnObjective<F> {
 /// seeds are reserved from the cluster up front in submission order, so
 /// the returned values are byte-identical whether the batch runs on one
 /// thread or many — determinism is independent of scheduling.
+///
+/// The evaluation hot loop is allocation-free per run: workers borrow the
+/// configs in place through [`ThreadPool::scoped_run`] (no per-item
+/// `HadoopConfig`/`Arc` clones), simulate through the runtime-only
+/// [`simulate_runtime`] path (no task-record materialization), and the
+/// pool itself is created once and reused across every `eval_batch` of
+/// the run — sequential DFO methods ask thousands of singletons, so
+/// per-call thread spawning used to dominate.
 pub struct ClusterObjective<'a> {
     cluster: &'a mut SimCluster,
     workload: WorkloadSpec,
     repeats: usize,
     threads: usize,
+    /// Persistent worker pool, created lazily on the first batch that
+    /// wants parallelism and reused for the rest of the run.
+    pool: Option<ThreadPool>,
 }
 
 impl<'a> ClusterObjective<'a> {
@@ -132,18 +189,21 @@ impl<'a> ClusterObjective<'a> {
             workload: workload.clone(),
             repeats: repeats.max(1),
             threads: default_threads(),
+            pool: None,
         }
     }
 
     /// Force one-at-a-time evaluation (baseline for the batch benches).
     pub fn serial(mut self) -> ClusterObjective<'a> {
         self.threads = 1;
+        self.pool = None;
         self
     }
 
     /// Cap the worker count.
     pub fn with_threads(mut self, threads: usize) -> ClusterObjective<'a> {
         self.threads = threads.max(1);
+        self.pool = None;
         self
     }
 }
@@ -156,19 +216,20 @@ impl BatchObjective for ClusterObjective<'_> {
         let repeats = self.repeats;
         let runs = cfgs.len() * repeats;
         let first_seed = self.cluster.reserve_seeds(runs as u64);
-        let spec = Arc::new(self.cluster.spec.clone());
-        let wl = Arc::new(self.workload.clone());
-        let items: Vec<(HadoopConfig, u64)> = cfgs
-            .iter()
-            .enumerate()
-            .flat_map(|(i, cfg)| {
-                (0..repeats)
-                    .map(move |r| (cfg.clone(), first_seed.wrapping_add((i * repeats + r) as u64)))
-            })
-            .collect();
-        let runtimes = map_parallel(items, self.threads.min(runs), move |(cfg, seed)| {
-            simulate_job(&spec, &wl, &cfg, seed).runtime_s
-        });
+        let spec = &self.cluster.spec;
+        let wl = &self.workload;
+        let run_one = |i: usize| {
+            simulate_runtime(spec, wl, &cfgs[i / repeats], first_seed.wrapping_add(i as u64))
+        };
+        let workers = self.threads.min(runs);
+        let runtimes: Vec<f64> = if workers <= 1 {
+            (0..runs).map(run_one).collect()
+        } else {
+            let threads = self.threads;
+            self.pool
+                .get_or_insert_with(|| ThreadPool::new(threads))
+                .scoped_run(runs, workers, run_one)
+        };
         Ok(runtimes
             .chunks(repeats)
             .map(|c| c.iter().sum::<f64>() / repeats as f64)
@@ -215,9 +276,9 @@ impl<F: FnMut(&EvalRecord)> Observer for F {
     }
 }
 
-/// Convergence check: stop after `patience` consecutive evaluations in
-/// which the best value failed to improve by at least `min_rel`
-/// (relative).
+/// Convergence check: stop at the first evaluation that completes
+/// `patience` consecutive evaluations in which the best value failed to
+/// improve by at least `min_rel` (relative).
 #[derive(Clone, Copy, Debug)]
 pub struct EarlyStop {
     pub patience: usize,
@@ -239,6 +300,10 @@ impl EarlyStop {
 pub struct Driver<'a> {
     pub budget: usize,
     pub early_stop: Option<EarlyStop>,
+    /// Streaming chunk (`batch.chunk`): streaming optimizers bound each
+    /// ask to it, and every ask-batch is evaluated/told in slices of at
+    /// most this many candidates. See the module docs.
+    pub batch_chunk: usize,
     observers: Vec<Box<dyn Observer + 'a>>,
 }
 
@@ -247,8 +312,15 @@ impl<'a> Driver<'a> {
         Driver {
             budget,
             early_stop: None,
+            batch_chunk: DEFAULT_BATCH_CHUNK,
             observers: Vec::new(),
         }
+    }
+
+    /// Override the streaming chunk size (`batch.chunk`).
+    pub fn chunk(mut self, chunk: usize) -> Driver<'a> {
+        self.batch_chunk = chunk.max(1);
+        self
     }
 
     pub fn early_stop(mut self, es: EarlyStop) -> Driver<'a> {
@@ -295,6 +367,10 @@ impl<'a> Driver<'a> {
         let mut stall = 0usize;
         let mut best = f64::INFINITY;
 
+        // streaming hint: methods with resumable proposal streams bound
+        // their ask-batches to the chunk
+        opt.set_chunk(self.batch_chunk);
+
         if !prior.is_empty() {
             let mut replayed = Vec::with_capacity(prior.len());
             for p in prior.iter().take(self.budget) {
@@ -306,16 +382,22 @@ impl<'a> Driver<'a> {
             opt.tell(&replayed);
         }
 
-        // With early stopping armed, a full-budget ask-batch is EVALUATED
-        // in patience-sized chunks so the check can fire between chunks.
-        // The optimizer still sees the true remaining budget in `ask`
-        // (bobyqa's one-shot init design and latin's stratification need
-        // it); candidates past a triggered stop are simply never
-        // evaluated — and never told.
+        // Ask-batches are EVALUATED in `batch.chunk`-sized slices, which
+        // bounds the decoded-config buffer. The early-stop decision is
+        // made per evaluation (the run ends at exactly the first eval
+        // whose stall count reaches the patience), so the stopping point
+        // — and therefore the whole outcome — is independent of the
+        // slice size. The optimizer still sees the true remaining budget
+        // in `ask` (bobyqa's one-shot init design and latin's
+        // stratification need it); candidates past a triggered stop are
+        // never recorded or told (slice-mates already evaluated when the
+        // stop fires are discarded — shrinking the slice to the patience
+        // below bounds that waste without moving the stop).
         let chunk_size = self
             .early_stop
             .map(|es| es.patience.max(1))
-            .unwrap_or(usize::MAX);
+            .unwrap_or(usize::MAX)
+            .min(self.batch_chunk.max(1));
 
         'drive: while rec.evals() < self.budget {
             let left = self.budget - rec.evals();
@@ -324,14 +406,17 @@ impl<'a> Driver<'a> {
                 break; // converged / proposals exhausted
             }
             // Budget accounting: an over-sized ask-batch is truncated,
-            // never overspent. Everything evaluated below is also told.
+            // never overspent. Everything recorded below is also told.
             batch.truncate(left);
             let mut start = 0;
             while start < batch.len() {
                 let end = start.saturating_add(chunk_size).min(batch.len());
-                let cands = &batch[start..end];
-                let cfgs: Vec<HadoopConfig> =
-                    cands.iter().map(|c| space.decode(&c.unit_x)).collect();
+                // decode once per candidate: grid attaches the config it
+                // already decoded for dedup, everything else decodes here
+                let cfgs: Vec<HadoopConfig> = batch[start..end]
+                    .iter_mut()
+                    .map(|c| c.config.take().unwrap_or_else(|| space.decode(&c.unit_x)))
+                    .collect();
                 let vals = obj.eval_batch(&cfgs)?;
                 if vals.len() != cfgs.len() {
                     return Err(format!(
@@ -341,7 +426,8 @@ impl<'a> Driver<'a> {
                     ));
                 }
                 let mut told = Vec::with_capacity(vals.len());
-                for ((cand, cfg), v) in cands.iter().zip(cfgs).zip(vals) {
+                let mut stopped = false;
+                for ((cand, cfg), v) in batch[start..end].iter().zip(cfgs).zip(vals) {
                     rec.record(cand.unit_x.clone(), cfg, v);
                     let r = rec.last().expect("just recorded").clone();
                     for ob in &mut self.observers {
@@ -356,14 +442,22 @@ impl<'a> Driver<'a> {
                     }
                     best = best.min(r.value);
                     told.push(r);
+                    if let Some(es) = self.early_stop {
+                        if stall >= es.patience {
+                            // stop at exactly this eval — later
+                            // slice-mates stay unrecorded, so the
+                            // stopping point does not depend on how the
+                            // batch was sliced
+                            stopped = true;
+                            break;
+                        }
+                    }
                 }
-                // tell covers every evaluated candidate, even when the
+                // tell covers every recorded candidate, even when the
                 // loop is about to stop
                 opt.tell(&told);
-                if let Some(es) = self.early_stop {
-                    if stall >= es.patience {
-                        break 'drive;
-                    }
+                if stopped {
+                    break 'drive;
                 }
                 start = end;
             }

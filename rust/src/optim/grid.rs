@@ -2,34 +2,82 @@
 //! paper's "direct search" family: "the system tries all combinations of
 //! parameter values" (§II.C.2). Also the generator of Fig. 2 surfaces.
 //!
-//! Ask/tell port: the whole remaining grid is proposed as ONE batch (the
-//! driver truncates it to the budget), so a batched objective can score
-//! the sweep in a single call. Points told before the first ask (resume
-//! replay) are skipped — that is how an interrupted sweep continues.
+//! Streaming ask/tell: grid points come off a lazy [`GridCursor`]
+//! odometer, at most one `batch.chunk` (default
+//! [`DEFAULT_BATCH_CHUNK`]) per ask — a >10^6-point space sweeps in
+//! O(dims) enumeration memory instead of materializing the cross
+//! product. Points told before the first ask (resume replay) are skipped
+//! by bit-exact config key — that is how an interrupted sweep continues.
 
-use std::collections::BTreeSet;
+use std::collections::HashSet;
 
 use crate::config::params::HadoopConfig;
-use crate::optim::core::{BestSeen, Candidate, Optimizer};
+use crate::optim::core::{BestSeen, Candidate, Optimizer, DEFAULT_BATCH_CHUNK};
 use crate::optim::result::EvalRecord;
-use crate::optim::space::ParamSpace;
+use crate::optim::space::{GridCursor, ParamSpace};
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct GridSearch {
-    points: Option<Vec<Vec<f64>>>,
-    cursor: usize,
-    /// Decoded-config keys already evaluated (tell / resume replay).
-    done: BTreeSet<String>,
+    cursor: Option<GridCursor>,
+    /// Max points proposed per ask (the driver's `batch.chunk`).
+    chunk: usize,
+    /// Does this sweep dedup by decoded config? Latched at the first
+    /// ask: constraints can collapse distinct grid points onto one
+    /// config, and a tell arriving before the first ask (resume replay)
+    /// marks points done. Without either, the cursor is injective and
+    /// ALL key bookkeeping — per-point decode in ask, hashing, `done`
+    /// growth — is skipped for the whole sweep.
+    need_keys: Option<bool>,
+    /// Bit-exact keys of decoded configs already evaluated (tell /
+    /// resume replay). Stays empty when `need_keys` latches false.
+    done: HashSet<u64>,
     best: BestSeen,
 }
 
-fn config_key(cfg: &HadoopConfig) -> String {
-    format!("{:?}", cfg.values)
+impl Default for GridSearch {
+    fn default() -> GridSearch {
+        GridSearch::new()
+    }
+}
+
+/// Bit-exact dedup key: FNV-1a over the raw value bits of the decoded
+/// config. Replaces the old `format!("{:?}", values)` string keys — no
+/// formatting, no per-key heap string, and exact (two configs share a
+/// key iff every value is bit-identical, up to the ~2^-64 hash-collision
+/// odds a 64-bit key carries).
+fn config_key(cfg: &HadoopConfig) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for v in &cfg.values {
+        for b in v.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+    }
+    h
 }
 
 impl GridSearch {
     pub fn new() -> GridSearch {
-        GridSearch::default()
+        GridSearch {
+            cursor: None,
+            chunk: DEFAULT_BATCH_CHUNK,
+            need_keys: None,
+            done: HashSet::new(),
+            best: BestSeen::default(),
+        }
+    }
+
+    /// Bound the number of points proposed per ask when driving the
+    /// optimizer BY HAND (direct `ask` calls in tests/tools). A
+    /// [`Driver`](crate::optim::core::Driver) overrides this before its
+    /// first ask — it pushes its own `batch.chunk` through
+    /// [`Optimizer::set_chunk`] — so driver-run sweeps configure the
+    /// chunk on the driver (`Driver::chunk` / `batch.chunk` in
+    /// tuning.properties), not here.
+    pub fn with_chunk(mut self, chunk: usize) -> GridSearch {
+        self.chunk = chunk.max(1);
+        self
     }
 }
 
@@ -38,36 +86,51 @@ impl Optimizer for GridSearch {
         "grid"
     }
 
+    fn set_chunk(&mut self, chunk: usize) {
+        self.chunk = chunk.max(1);
+    }
+
     fn ask(&mut self, space: &ParamSpace, budget_left: usize) -> Vec<Candidate> {
-        let points = self
-            .points
-            .get_or_insert_with(|| space.unit_grid());
-        // Decoded-config keys are only needed when distinct grid points
-        // can collapse to one config (constraint repair) or a resume
-        // replay marked points done — fresh unconstrained sweeps skip
-        // the per-point decode + key allocation entirely.
-        let need_keys = !self.done.is_empty() || !space.spec.constraints.is_empty();
-        let mut batch = Vec::new();
-        let mut batch_keys = BTreeSet::new();
-        while self.cursor < points.len() && batch.len() < budget_left {
-            let x = points[self.cursor].clone();
-            self.cursor += 1;
+        // Latch the dedup mode on the first ask (see the field docs):
+        // fresh unconstrained sweeps skip the per-point decode entirely
+        // (the driver decodes instead). When a point IS decoded here,
+        // the candidate carries the config so nothing decodes twice.
+        let need_keys = *self
+            .need_keys
+            .get_or_insert(!self.done.is_empty() || !space.spec.constraints.is_empty());
+        let cursor = self.cursor.get_or_insert_with(|| space.grid_cursor());
+        let want = budget_left.min(self.chunk);
+        let mut batch = Vec::with_capacity(want.min(DEFAULT_BATCH_CHUNK));
+        let mut batch_keys = HashSet::new();
+        while batch.len() < want {
+            let x = match cursor.next() {
+                Some(x) => x,
+                None => break, // sweep complete
+            };
             if need_keys {
-                let key = config_key(&space.decode(&x));
+                let cfg = space.decode(&x);
+                let key = config_key(&cfg);
                 if self.done.contains(&key) || !batch_keys.insert(key) {
                     // evaluated before the interruption, or a duplicate
                     // of a config already in this batch
                     continue;
                 }
+                batch.push(Candidate::new(x).with_config(cfg));
+            } else {
+                batch.push(Candidate::new(x));
             }
-            batch.push(Candidate::new(x));
         }
         batch
     }
 
     fn tell(&mut self, evals: &[EvalRecord]) {
-        for r in evals {
-            self.done.insert(config_key(&r.config));
+        // keys are recorded before the first ask (this could be a resume
+        // replay) and for deduping sweeps; a latched-injective sweep
+        // skips the per-eval hash + set growth
+        if self.need_keys.unwrap_or(true) {
+            for r in evals {
+                self.done.insert(config_key(&r.config));
+            }
         }
         self.best.update(evals);
     }
@@ -129,12 +192,66 @@ mod tests {
     }
 
     #[test]
-    fn asks_the_whole_remaining_grid_in_one_batch() {
+    fn asks_stream_in_cursor_order_up_to_the_chunk() {
         let space = space();
+        // default chunk (1024) covers the whole 256-point grid in one ask
         let mut g = GridSearch::new();
         let batch = g.ask(&space, usize::MAX);
         assert_eq!(batch.len(), 256);
         assert!(g.ask(&space, usize::MAX).is_empty(), "grid re-proposed points");
+
+        // a smaller chunk streams the same points over several asks
+        let mut s = GridSearch::new().with_chunk(100);
+        let mut streamed: Vec<Vec<f64>> = Vec::new();
+        let mut sizes = Vec::new();
+        loop {
+            let b = s.ask(&space, usize::MAX);
+            if b.is_empty() {
+                break;
+            }
+            sizes.push(b.len());
+            streamed.extend(b.into_iter().map(|c| c.unit_x));
+        }
+        assert_eq!(sizes, vec![100, 100, 56]);
+        let whole: Vec<Vec<f64>> = batch.into_iter().map(|c| c.unit_x).collect();
+        assert_eq!(streamed, whole, "chunked stream diverged from one-shot ask");
+    }
+
+    #[test]
+    fn enumeration_memory_stays_bounded_on_huge_spaces() {
+        // ~5.2M-point space: the old materialized grid would allocate
+        // >300 MB here; the streaming ask must touch only one chunk
+        let spec = TuningSpec::parse(
+            "param mapreduce.job.reduces int 1 64 step 1\n\
+             param mapreduce.task.io.sort.mb int 16 2048 step 4\n\
+             param mapreduce.task.io.sort.factor int 2 128 step 1\n",
+        )
+        .unwrap();
+        let space = ParamSpace::new(spec, HadoopConfig::default());
+        assert!(space.grid_cursor().total_points() > 4_000_000);
+        let mut g = GridSearch::new();
+        let batch = g.ask(&space, usize::MAX);
+        assert_eq!(batch.len(), DEFAULT_BATCH_CHUNK);
+        // telling results back on an injective (unconstrained, fresh)
+        // sweep must not start key bookkeeping: later chunks stay
+        // decode-free and `done` stays empty for the whole sweep
+        let recs: Vec<EvalRecord> = batch
+            .iter()
+            .take(3)
+            .map(|c| EvalRecord {
+                iter: 1,
+                config: space.decode(&c.unit_x),
+                unit_x: c.unit_x.clone(),
+                value: 1.0,
+                best_so_far: 1.0,
+            })
+            .collect();
+        g.tell(&recs);
+        assert!(g.done.is_empty(), "injective sweep accumulated dedup keys");
+        // and the sweep continues exactly where it stopped
+        let again = g.ask(&space, usize::MAX);
+        assert_eq!(again.len(), DEFAULT_BATCH_CHUNK);
+        assert_ne!(batch[0].unit_x, again[0].unit_x);
     }
 
     #[test]
@@ -150,23 +267,26 @@ mod tests {
         let space = ParamSpace::new(spec, HadoopConfig::default());
         let mut g = GridSearch::new();
         let batch = g.ask(&space, usize::MAX);
-        let mut keys: Vec<String> = batch
+        let mut keys: Vec<u64> = batch
             .iter()
-            .map(|c| config_key(&space.decode(&c.unit_x)))
+            .map(|c| config_key(c.config.as_ref().expect("dedup decoded the config")))
             .collect();
         let n = keys.len();
-        keys.sort();
+        keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), n, "duplicate decoded configs in one ask-batch");
-        assert!(n < space.unit_grid().len(), "constraint collapsed nothing?");
+        assert!(
+            (n as u64) < space.grid_cursor().total_points(),
+            "constraint collapsed nothing?"
+        );
     }
 
     #[test]
     fn told_points_are_skipped_on_resume() {
         let space = space();
-        let grid = space.unit_grid();
+        let grid: Vec<Vec<f64>> = space.grid_cursor().take(10).collect();
         // replay the first 10 points as prior history
-        let prior: Vec<EvalRecord> = grid[..10]
+        let prior: Vec<EvalRecord> = grid
             .iter()
             .enumerate()
             .map(|(i, x)| EvalRecord {

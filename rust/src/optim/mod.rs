@@ -14,11 +14,14 @@
 //! Every method implements [`core::Optimizer`]: `ask` proposes a batch of
 //! unit-cube candidates ([`space::ParamSpace`] owns the decoding to valid
 //! `HadoopConfig`s), `tell` feeds measured runtimes back. Population
-//! methods (grid, random, latin) ask in large batches that a
+//! methods (random, latin) ask in large batches that a
 //! [`core::BatchObjective`] — the parallel [`core::ClusterObjective`] or
-//! the AOT/Pallas batch scorer — evaluates in one call; sequential
-//! methods (bobyqa, hooke-jeeves, nelder-mead, coordinate, annealing)
-//! ask singletons and behave exactly like their pre-port loops.
+//! the AOT/Pallas batch scorer — evaluates in one call; grid *streams*
+//! its exhaustive sweep in `batch.chunk`-sized asks off a lazy
+//! [`space::GridCursor`] (constant enumeration memory, >10^6-point
+//! spaces included); sequential methods (bobyqa, hooke-jeeves,
+//! nelder-mead, coordinate, annealing) ask singletons and behave exactly
+//! like their pre-port loops.
 //!
 //! Nobody calls a method's loop directly any more: the shared
 //! [`core::Driver`] owns the evaluation budget, early stopping, observer
@@ -56,7 +59,7 @@ pub use bobyqa::Bobyqa;
 pub use coordinate::CoordinateSearch;
 pub use self::core::{
     BatchObjective, Candidate, ClusterObjective, Driver, EarlyStop, FnObjective, Observer,
-    Optimizer, ScorerObjective,
+    Optimizer, ScorerObjective, DEFAULT_BATCH_CHUNK,
 };
 pub use grid::GridSearch;
 pub use hooke_jeeves::HookeJeeves;
@@ -64,7 +67,7 @@ pub use latin::LatinHypercube;
 pub use nelder_mead::NelderMead;
 pub use random::RandomSearch;
 pub use result::{EvalRecord, TuningOutcome};
-pub use space::ParamSpace;
+pub use space::{GridCursor, ParamSpace};
 
 /// Every optimizer, behind one dispatchable handle (CLI / Optimizer
 /// Runner entry point). A thin factory: [`Method::build`] returns the

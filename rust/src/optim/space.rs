@@ -73,33 +73,32 @@ impl ParamSpace {
             .collect()
     }
 
-    /// The unit-cube grid of an exhaustive search (cross product of the
-    /// per-parameter grids), in row-major order.
+    /// Streaming enumeration of the exhaustive-search grid (cross product
+    /// of the per-parameter grids), in row-major order — the last
+    /// dimension varies fastest. Cursor state is O(Σ axis lengths), never
+    /// the cross product, so >10^6-point spaces enumerate in constant
+    /// memory.
+    pub fn grid_cursor(&self) -> GridCursor {
+        GridCursor::new(
+            self.spec
+                .ranges
+                .iter()
+                .map(|r| {
+                    r.grid()
+                        .into_iter()
+                        .map(|v| r.transform.to_unit(v, r.lo, r.hi))
+                        .collect()
+                })
+                .collect(),
+        )
+    }
+
+    /// Materialized convenience wrapper over [`ParamSpace::grid_cursor`]
+    /// for tests and plotting of SMALL spaces. Allocates the whole cross
+    /// product — hot paths (grid search, benches) must stream the cursor
+    /// instead.
     pub fn unit_grid(&self) -> Vec<Vec<f64>> {
-        let axes: Vec<Vec<f64>> = self
-            .spec
-            .ranges
-            .iter()
-            .map(|r| {
-                r.grid()
-                    .into_iter()
-                    .map(|v| r.transform.to_unit(v, r.lo, r.hi))
-                    .collect()
-            })
-            .collect();
-        let mut out: Vec<Vec<f64>> = vec![vec![]];
-        for axis in &axes {
-            let mut next = Vec::with_capacity(out.len() * axis.len());
-            for prefix in &out {
-                for &v in axis {
-                    let mut p = prefix.clone();
-                    p.push(v);
-                    next.push(p);
-                }
-            }
-            out = next;
-        }
-        out
+        self.grid_cursor().collect()
     }
 
     /// Smallest meaningful unit-cube step per dimension (one integer /
@@ -125,6 +124,136 @@ impl ParamSpace {
                 }
             })
             .collect()
+    }
+}
+
+/// Lazy odometer over the exhaustive-search grid: a mixed-radix counter
+/// whose digit `i` indexes dimension `i`'s grid axis (row-major order,
+/// last digit fastest — exactly the order the old materialized
+/// `unit_grid` produced). State is the per-dimension axes plus three
+/// integers, so a 10^8-point cross product costs the same memory as a
+/// 10-point one.
+///
+/// Supports resumable sweeps ([`GridCursor::position`] /
+/// [`GridCursor::seek`], plus an O(1) [`Iterator::nth`]) and striped
+/// worker sharding ([`GridCursor::shard`]): shard `k` of `n` yields
+/// points `k, k+n, k+2n, …`, so the shard union is the full grid with no
+/// overlap and balanced sizes.
+#[derive(Clone, Debug)]
+pub struct GridCursor {
+    /// Per-dimension unit-cube axis values (the mixed-radix digit sets).
+    axes: Vec<Vec<f64>>,
+    /// Linear index of the next point to yield.
+    next: u64,
+    /// Exclusive end of the enumeration range.
+    end: u64,
+    /// Linear-index increment between yielded points (the shard count).
+    stride: u64,
+}
+
+impl GridCursor {
+    fn new(axes: Vec<Vec<f64>>) -> GridCursor {
+        let total = axes
+            .iter()
+            .fold(1u64, |t, a| t.saturating_mul(a.len() as u64));
+        GridCursor {
+            axes,
+            next: 0,
+            end: total,
+            stride: 1,
+        }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.axes.len()
+    }
+
+    /// Size of the full cross product (independent of cursor position or
+    /// sharding). Saturates at `u64::MAX` for absurd specs.
+    pub fn total_points(&self) -> u64 {
+        self.axes
+            .iter()
+            .fold(1u64, |t, a| t.saturating_mul(a.len() as u64))
+    }
+
+    /// Points this cursor will still yield.
+    pub fn remaining(&self) -> u64 {
+        if self.next >= self.end {
+            0
+        } else {
+            (self.end - self.next - 1) / self.stride + 1
+        }
+    }
+
+    /// Linear index of the next point — checkpoint this to resume a sweep.
+    pub fn position(&self) -> u64 {
+        self.next
+    }
+
+    /// Resume from a checkpointed [`GridCursor::position`]. For a sharded
+    /// cursor the position must lie on this shard's stripe (positions
+    /// returned by the same shard's `position` do).
+    pub fn seek(&mut self, position: u64) -> &mut GridCursor {
+        self.next = position.min(self.end);
+        self
+    }
+
+    /// Stripe this cursor's remaining range across `n` workers and return
+    /// shard `k`: it yields points `k, k+n, k+2n, …` of what `self` would
+    /// have yielded. Striping (not block splitting) keeps shards balanced
+    /// even when a budget truncates the sweep.
+    pub fn shard(&self, k: u64, n: u64) -> GridCursor {
+        assert!(n > 0 && k < n, "shard({k}, {n}): need 0 <= k < n");
+        GridCursor {
+            axes: self.axes.clone(),
+            next: self.next.saturating_add(k.saturating_mul(self.stride)),
+            end: self.end,
+            stride: self.stride.saturating_mul(n),
+        }
+    }
+
+    /// The grid point at linear index `i` (row-major decomposition).
+    pub fn point_at(&self, i: u64) -> Vec<f64> {
+        let mut p = vec![0.0; self.axes.len()];
+        self.point_into(i, &mut p);
+        p
+    }
+
+    /// Write the grid point at linear index `i` into `out` — the
+    /// allocation-free decode used by the streaming benches.
+    pub fn point_into(&self, mut i: u64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.axes.len(), "point_into dims mismatch");
+        for (slot, axis) in out.iter_mut().zip(&self.axes).rev() {
+            let len = axis.len() as u64;
+            *slot = axis[(i % len) as usize];
+            i /= len;
+        }
+    }
+}
+
+impl Iterator for GridCursor {
+    type Item = Vec<f64>;
+
+    fn next(&mut self) -> Option<Vec<f64>> {
+        if self.next >= self.end {
+            return None;
+        }
+        let p = self.point_at(self.next);
+        self.next = self.next.saturating_add(self.stride);
+        Some(p)
+    }
+
+    /// O(1) skip (the default would decode the skipped points).
+    fn nth(&mut self, n: usize) -> Option<Vec<f64>> {
+        self.next = self
+            .next
+            .saturating_add(self.stride.saturating_mul(n as u64));
+        self.next()
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let r = usize::try_from(self.remaining()).unwrap_or(usize::MAX);
+        (r, Some(r))
     }
 }
 
@@ -311,6 +440,98 @@ mod tests {
             let c = s.decode(&x);
             assert!(s.is_feasible(&c), "infeasible grid point {x:?}");
             c.validate().unwrap();
+        }
+    }
+
+    /// Naive materialized cross product (the pre-streaming algorithm) —
+    /// the reference the cursor must reproduce point for point.
+    fn naive_cross_product(s: &ParamSpace) -> Vec<Vec<f64>> {
+        let axes: Vec<Vec<f64>> = s
+            .spec
+            .ranges
+            .iter()
+            .map(|r| {
+                r.grid()
+                    .into_iter()
+                    .map(|v| r.transform.to_unit(v, r.lo, r.hi))
+                    .collect()
+            })
+            .collect();
+        let mut out: Vec<Vec<f64>> = vec![vec![]];
+        for axis in &axes {
+            let mut next = Vec::with_capacity(out.len() * axis.len());
+            for prefix in &out {
+                for &v in axis {
+                    let mut p = prefix.clone();
+                    p.push(v);
+                    next.push(p);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    #[test]
+    fn cursor_streams_the_exact_materialized_order() {
+        for s in [space(), rich_space()] {
+            let reference = naive_cross_product(&s);
+            let streamed: Vec<Vec<f64>> = s.grid_cursor().collect();
+            assert_eq!(streamed, reference, "cursor order diverged");
+            assert_eq!(s.grid_cursor().total_points(), reference.len() as u64);
+            // the convenience wrapper is the cursor, collected
+            assert_eq!(s.unit_grid(), streamed);
+        }
+    }
+
+    #[test]
+    fn cursor_nth_and_seek_resume_mid_sweep() {
+        let s = rich_space();
+        let full: Vec<Vec<f64>> = s.grid_cursor().collect();
+
+        // nth is an O(1) skip landing on the same point
+        let mut c = s.grid_cursor();
+        assert_eq!(c.nth(17).unwrap(), full[17]);
+        assert_eq!(c.next().unwrap(), full[18]);
+
+        // position/seek checkpointing: a fresh cursor seeked to a saved
+        // position continues exactly where the interrupted one stopped
+        let mut first = s.grid_cursor();
+        for _ in 0..10 {
+            first.next();
+        }
+        let checkpoint = first.position();
+        let mut resumed = s.grid_cursor();
+        resumed.seek(checkpoint);
+        let rest: Vec<Vec<f64>> = resumed.collect();
+        assert_eq!(rest, full[10..].to_vec());
+
+        // remaining() counts what is actually yielded
+        let mut c = s.grid_cursor();
+        assert_eq!(c.remaining(), full.len() as u64);
+        c.next();
+        assert_eq!(c.remaining(), full.len() as u64 - 1);
+    }
+
+    #[test]
+    fn shards_cover_the_grid_with_no_overlap() {
+        let s = space();
+        let full: Vec<Vec<f64>> = s.grid_cursor().collect();
+        let key = |p: &[f64]| -> Vec<u64> { p.iter().map(|v| v.to_bits()).collect() };
+        for n in [1u64, 3, 4, 7] {
+            let mut seen = std::collections::BTreeSet::new();
+            let mut count = 0u64;
+            for k in 0..n {
+                let shard = s.grid_cursor().shard(k, n);
+                let expect = (full.len() as u64 - k - 1) / n + 1;
+                assert_eq!(shard.remaining(), expect, "shard({k},{n}) size");
+                for p in shard {
+                    assert!(seen.insert(key(&p)), "shard overlap at {p:?} (n={n})");
+                    count += 1;
+                }
+            }
+            assert_eq!(count, full.len() as u64, "{n} shards did not cover the grid");
+            assert_eq!(seen.len() as u64, count);
         }
     }
 }

@@ -153,6 +153,10 @@ impl<S: CandidateScorer> Optimizer for Prescreen<S> {
         self.inner.ask(space, budget_left)
     }
 
+    fn set_chunk(&mut self, chunk: usize) {
+        self.inner.set_chunk(chunk)
+    }
+
     fn tell(&mut self, evals: &[EvalRecord]) {
         self.inner.tell(evals)
     }

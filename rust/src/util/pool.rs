@@ -1,14 +1,34 @@
 //! Fixed-size thread pool (tokio is unavailable offline).
 //!
 //! Catla's Project Runner and the benchmark harness evaluate independent
-//! cluster jobs concurrently; `map_parallel` preserves input order and
-//! propagates panics.
+//! cluster jobs concurrently; `map_parallel` spawns a throwaway pool,
+//! preserves input order and propagates panics. Hot loops that evaluate
+//! many batches (the ask/tell `ClusterObjective`) instead keep ONE
+//! [`ThreadPool`] alive and run each batch through
+//! [`ThreadPool::scoped_run`], which lets workers borrow the caller's
+//! state — no per-item clones, no per-call thread spawn/join.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Raw slot pointer that may cross into pool workers —
+/// [`ThreadPool::scoped_run`] guarantees disjoint writes and a bounded
+/// lifetime.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
 
 /// A simple work-stealing-free pool: one shared queue, N workers.
 pub struct ThreadPool {
@@ -50,6 +70,78 @@ impl ThreadPool {
             .expect("pool shut down")
             .send(Box::new(f))
             .expect("pool worker hung up");
+    }
+
+    /// Scoped parallel map over `0..n` on the pool's PERSISTENT workers:
+    /// returns `[f(0), …, f(n-1)]` in index order. Unlike
+    /// [`map_parallel`] this neither spawns threads nor requires
+    /// `'static` — `f` may borrow the caller's state, because the call
+    /// blocks until every worker task has finished, so no borrow
+    /// escapes. At most `max_workers` of the pool's workers participate;
+    /// indices are claimed from a shared atomic counter, so an uneven
+    /// per-index cost self-balances. Worker panics are re-raised here
+    /// (after all tasks have stopped touching the shared state).
+    pub fn scoped_run<R, F>(&self, n: usize, max_workers: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = self.size().min(max_workers.max(1)).min(n);
+        if workers == 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let next = AtomicUsize::new(0);
+        let (done_tx, done_rx) = mpsc::channel::<thread::Result<()>>();
+        let slots_ptr = SendPtr(slots.as_mut_ptr());
+        for _ in 0..workers {
+            let done_tx = done_tx.clone();
+            let f = &f;
+            let next = &next;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let v = f(i);
+                        // each index is claimed by exactly one worker via
+                        // `next`, so this write never aliases
+                        unsafe { *slots_ptr.0.add(i) = Some(v) };
+                    }
+                }));
+                let _ = done_tx.send(r);
+            });
+            // SAFETY (lifetime erasure): the pool's job type is
+            // `'static`, but every borrow the job holds outlives it —
+            // this function blocks on exactly `workers` completion
+            // messages below before reading `slots` or returning, so no
+            // job can run (or exist) past the borrowed scope.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            self.execute(job);
+        }
+        drop(done_tx);
+        let mut panic = None;
+        for _ in 0..workers {
+            match done_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(p)) => panic = Some(p),
+                // every job sends exactly one message (the send is
+                // outside catch_unwind's closure body but cannot panic)
+                Err(_) => unreachable!("scoped_run worker vanished"),
+            }
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("unclaimed scoped_run slot"))
+            .collect()
     }
 }
 
@@ -146,6 +238,51 @@ mod tests {
             }
             x
         });
+    }
+
+    #[test]
+    fn scoped_run_borrows_and_keeps_order() {
+        // f borrows a local — the whole point of the scoped variant
+        let inputs: Vec<u64> = (0..257).map(|i| i * 3).collect();
+        let pool = ThreadPool::new(8);
+        let out = pool.scoped_run(inputs.len(), 8, |i| inputs[i] + 1);
+        assert_eq!(out, inputs.iter().map(|x| x + 1).collect::<Vec<_>>());
+        // the SAME pool serves later batches (persistent workers)
+        let out2 = pool.scoped_run(10, 4, |i| inputs[i]);
+        assert_eq!(out2, inputs[..10].to_vec());
+        // empty + singleton fast paths
+        assert!(pool.scoped_run(0, 8, |i| inputs[i]).is_empty());
+        assert_eq!(pool.scoped_run(3, 1, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn scoped_run_is_concurrent() {
+        static PEAK: AtomicUsize = AtomicUsize::new(0);
+        static LIVE: AtomicUsize = AtomicUsize::new(0);
+        let pool = ThreadPool::new(8);
+        pool.scoped_run(16, 8, |_| {
+            let live = LIVE.fetch_add(1, Ordering::SeqCst) + 1;
+            PEAK.fetch_max(live, Ordering::SeqCst);
+            thread::sleep(std::time::Duration::from_millis(20));
+            LIVE.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(PEAK.load(Ordering::SeqCst) > 1, "no observed concurrency");
+    }
+
+    #[test]
+    fn scoped_run_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped_run(8, 4, |i| {
+                if i == 5 {
+                    panic!("scoped boom");
+                }
+                i
+            })
+        }));
+        assert!(r.is_err(), "worker panic not propagated");
+        // the workers caught the panic — the pool still works afterwards
+        assert_eq!(pool.scoped_run(4, 4, |i| i * 2), vec![0, 2, 4, 6]);
     }
 
     #[test]

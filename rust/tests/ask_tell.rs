@@ -5,7 +5,11 @@
 //! * budget accounting: over-sized ask-batches are truncated, never
 //!   overspent, and `tell` covers every evaluated candidate;
 //! * ask-batch shapes: population methods batch, sequential methods ask
-//!   singletons (bobyqa: one init batch, then singletons).
+//!   singletons (bobyqa: one init batch, then singletons);
+//! * streaming: the lazy `GridCursor` reproduces the materialized cross
+//!   product exactly, shards partition it, and `batch.chunk` (driver
+//!   eval slicing + grid ask streaming) never changes any method's
+//!   outcome byte.
 
 use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
@@ -25,6 +29,10 @@ fn space() -> ParamSpace {
 }
 
 fn drive(name: &str, serial: bool) -> TuningOutcome {
+    drive_chunked(name, serial, None)
+}
+
+fn drive_chunked(name: &str, serial: bool, chunk: Option<usize>) -> TuningOutcome {
     let wl = wordcount(2048.0);
     let sp = space();
     let mut cluster = SimCluster::new(ClusterSpec::default());
@@ -33,9 +41,11 @@ fn drive(name: &str, serial: bool) -> TuningOutcome {
         obj = obj.serial();
     }
     let mut opt = Method::from_name(name, SEED).unwrap().build();
-    Driver::new(BUDGET)
-        .run(opt.as_mut(), &sp, &mut obj)
-        .unwrap()
+    let mut driver = Driver::new(BUDGET);
+    if let Some(c) = chunk {
+        driver = driver.chunk(c);
+    }
+    driver.run(opt.as_mut(), &sp, &mut obj).unwrap()
 }
 
 /// Byte-exact fingerprint of an outcome (f64s via to_bits, so any drift
@@ -70,6 +80,87 @@ fn determinism_same_method_seed_budget_is_byte_identical() {
             "{name}: outcome not reproducible under a fixed seed"
         );
         assert!(a.evals() > 0 && a.evals() <= BUDGET, "{name}: bad eval count");
+    }
+}
+
+#[test]
+fn chunked_and_whole_batch_driving_agree_bitwise_for_all_methods() {
+    // batch.chunk re-slices the identical candidate stream: grid streams
+    // 7-point asks, population batches are evaluated/told in 7-point
+    // slices, bobyqa's 9-point init design is told in 7+2 — every
+    // outcome must stay byte-identical to the unchunked run
+    for name in ALL_METHODS {
+        let whole = drive_chunked(name, false, None);
+        let chunked = drive_chunked(name, false, Some(7));
+        assert_eq!(
+            fingerprint(&whole),
+            fingerprint(&chunked),
+            "{name}: batch.chunk changed the outcome"
+        );
+        // and a singleton chunk (the most aggressive slicing) too
+        let drip = drive_chunked(name, false, Some(1));
+        assert_eq!(
+            fingerprint(&whole),
+            fingerprint(&drip),
+            "{name}: batch.chunk=1 changed the outcome"
+        );
+    }
+}
+
+#[test]
+fn early_stop_fires_at_the_same_eval_under_any_chunk() {
+    // the stop decision is per evaluation, so the stopping point cannot
+    // depend on how ask-batches are sliced (or on grid's ask size)
+    let sp = space();
+    let run = |chunk: Option<usize>, method: &str| -> TuningOutcome {
+        let mut obj = FnObjective(|_: &HadoopConfig| 42.0); // flat: must stop
+        let mut opt = Method::from_name(method, SEED).unwrap().build();
+        let mut driver = Driver::new(200).early_stop(EarlyStop::new(5));
+        if let Some(c) = chunk {
+            driver = driver.chunk(c);
+        }
+        driver.run(opt.as_mut(), &sp, &mut obj).unwrap()
+    };
+    for method in ["random", "grid", "latin"] {
+        let whole = run(None, method);
+        assert!(whole.evals() < 200, "{method}: early stop never fired");
+        for chunk in [1usize, 3, 7] {
+            let sliced = run(Some(chunk), method);
+            assert_eq!(
+                fingerprint(&whole),
+                fingerprint(&sliced),
+                "{method}: chunk {chunk} moved the early stop"
+            );
+        }
+    }
+}
+
+#[test]
+fn streamed_grid_equals_materialized_grid_on_small_spaces() {
+    for spec in [TuningSpec::fig2(), TuningSpec::fig3()] {
+        let sp = ParamSpace::new(spec, HadoopConfig::default());
+        let materialized = sp.unit_grid();
+        let streamed: Vec<Vec<f64>> = sp.grid_cursor().collect();
+        assert_eq!(streamed, materialized);
+        assert_eq!(streamed.len() as u64, sp.grid_cursor().total_points());
+    }
+}
+
+#[test]
+fn grid_shards_union_to_the_full_grid_without_overlap() {
+    let sp = space();
+    let full: Vec<Vec<f64>> = sp.grid_cursor().collect();
+    for n in [2u64, 5] {
+        let mut by_index: Vec<Option<Vec<f64>>> = vec![None; full.len()];
+        for k in 0..n {
+            for (j, p) in sp.grid_cursor().shard(k, n).enumerate() {
+                let idx = (k + j as u64 * n) as usize; // stripe k, k+n, …
+                assert!(by_index[idx].is_none(), "shard overlap at index {idx}");
+                by_index[idx] = Some(p);
+            }
+        }
+        let union: Vec<Vec<f64>> = by_index.into_iter().map(|p| p.unwrap()).collect();
+        assert_eq!(union, full, "{n}-way shard union is not the grid");
     }
 }
 
@@ -202,8 +293,8 @@ fn driver_counts_objective_calls_not_asks() {
 
 #[test]
 fn early_stop_chunking_does_not_change_bobyqa_trajectory() {
-    // with early stopping armed the driver tells ask-batches back in
-    // patience-sized chunks, splitting bobyqa's init design; the
+    // with early stopping armed the driver evaluates and tells in
+    // patience-sized slices, splitting bobyqa's init design; the
     // trajectory must match the unchunked run byte for byte
     let sp = space();
     let mk_obj = || {
