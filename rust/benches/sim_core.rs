@@ -1,0 +1,189 @@
+//! PERF — the DES engine itself: simulated jobs/second across
+//! {wordcount, terasort, grep} × {small, large cluster}, measured
+//! through three engine paths that must agree bit-for-bit:
+//!
+//! * **arena**  — `simulate_runtime_in` with one reused [`SimArena`]
+//!   (reset-not-reallocate: the production hot path),
+//! * **fresh**  — `simulate_runtime`, same optimized engine but fresh
+//!   buffers every call (arena-off),
+//! * **baseline** — `simulate_runtime_baseline`, the pre-PR decision
+//!   structures (linear YARN scan, clone-and-sort straggler median,
+//!   full-state straggler scan, no saturation latch, fresh buffers).
+//!
+//! The headline metric is the **DFO-singleton** case: batch=1 evals
+//! through `ClusterObjective` — the shape every sequential method
+//! (bobyqa, hooke-jeeves, …) drives — arena engine vs the pre-PR
+//! baseline. Records `BENCH_sim_core.json`; the CI bench smoke
+//! regenerates it and fails if the arena-on DFO-singleton sims/s
+//! regresses more than 30% below the committed value.
+//!
+//! Run: `cargo bench --bench sim_core` (CATLA_BENCH_QUICK=1 shortens)
+
+use catla::config::params::{HadoopConfig, P_REDUCES};
+use catla::config::spec::TuningSpec;
+use catla::hadoop::mapreduce::simulate_runtime_baseline;
+use catla::hadoop::{
+    simulate_runtime, simulate_runtime_in, ClusterSpec, SimArena, SimCluster,
+};
+use catla::optim::core::BatchObjective;
+use catla::optim::{ClusterObjective, ParamSpace};
+use catla::util::bench::Bench;
+use catla::util::json::Json;
+use catla::workloads::{grep, terasort, wordcount, WorkloadSpec};
+
+fn throughput(stats: &catla::util::bench::BenchStats) -> f64 {
+    stats.throughput.map(|(v, _)| v).unwrap_or(0.0)
+}
+
+fn main() {
+    let quick = std::env::var("CATLA_BENCH_QUICK").is_ok();
+    let mut bench = Bench::new();
+
+    let small = ClusterSpec::default(); // 16 nodes x 2 racks
+    let large = ClusterSpec {
+        nodes: 64,
+        racks: 4,
+        ..ClusterSpec::default()
+    };
+    let mut cfg = HadoopConfig::default();
+    cfg.set(P_REDUCES, 16.0);
+
+    // one arena for the whole bench — exactly how a tuning run holds it
+    let mut arena = SimArena::new();
+    let mut cases = Json::obj();
+    let clusters: [(&str, &ClusterSpec); 2] = [("small16", &small), ("large64", &large)];
+    let input_mb = if quick { 1024.0 } else { 2048.0 };
+    for (cl_name, cl) in clusters {
+        let workloads: [WorkloadSpec; 3] =
+            [wordcount(input_mb), terasort(input_mb), grep(input_mb)];
+        for wl in workloads {
+            // ---- identity first: all three paths, bit-equal ------------
+            for seed in 0..8u64 {
+                let a = simulate_runtime_in(&mut arena, cl, &wl, &cfg, seed);
+                let f = simulate_runtime(cl, &wl, &cfg, seed);
+                let b = simulate_runtime_baseline(cl, &wl, &cfg, seed);
+                assert_eq!(
+                    a.to_bits(),
+                    f.to_bits(),
+                    "arena vs fresh diverged ({} on {cl_name}, seed {seed})",
+                    wl.name
+                );
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "optimized vs baseline engine diverged ({} on {cl_name}, seed {seed})",
+                    wl.name
+                );
+            }
+
+            // ---- throughput per path ----------------------------------
+            let mut seed = 1_000u64;
+            let arena_sims = throughput(bench.run_throughput(
+                &format!("{} on {cl_name}, arena engine", wl.name),
+                1.0,
+                "sims",
+                || {
+                    seed += 1;
+                    simulate_runtime_in(&mut arena, cl, &wl, &cfg, seed)
+                },
+            ));
+            let mut seed = 1_000u64;
+            let fresh_sims = throughput(bench.run_throughput(
+                &format!("{} on {cl_name}, fresh buffers", wl.name),
+                1.0,
+                "sims",
+                || {
+                    seed += 1;
+                    simulate_runtime(cl, &wl, &cfg, seed)
+                },
+            ));
+            let mut seed = 1_000u64;
+            let baseline_sims = throughput(bench.run_throughput(
+                &format!("{} on {cl_name}, pre-PR baseline", wl.name),
+                1.0,
+                "sims",
+                || {
+                    seed += 1;
+                    simulate_runtime_baseline(cl, &wl, &cfg, seed)
+                },
+            ));
+            let mut case = Json::obj();
+            case.set("arena_sims_per_s", Json::Num(arena_sims));
+            case.set("fresh_sims_per_s", Json::Num(fresh_sims));
+            case.set("baseline_sims_per_s", Json::Num(baseline_sims));
+            case.set(
+                "arena_speedup_vs_baseline",
+                Json::Num(if baseline_sims > 0.0 { arena_sims / baseline_sims } else { 0.0 }),
+            );
+            cases.set(&format!("{}@{cl_name}", wl.name), case);
+        }
+    }
+
+    // ---- the acceptance case: DFO-singleton (batch=1) evals ------------
+    // sequential methods ask one candidate at a time; each eval_batch of
+    // size 1 takes the serial path with the slot-0 arena
+    let wl = wordcount(input_mb);
+    let sp = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let points: Vec<HadoopConfig> = (0..16)
+        .map(|i| sp.decode(&vec![i as f64 / 16.0; sp.dims()]))
+        .collect();
+
+    let dfo_arena = {
+        let mut cluster = SimCluster::new(small.clone());
+        let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+        let mut k = 0usize;
+        throughput(bench.run_throughput(
+            "DFO singleton (batch=1), arena engine",
+            1.0,
+            "sims",
+            || {
+                k += 1;
+                obj.eval_batch(std::slice::from_ref(&points[k % points.len()]))
+                    .expect("eval")[0]
+            },
+        ))
+    };
+    let dfo_baseline = {
+        // the pre-PR singleton path: baseline engine, fresh buffers, one
+        // simulation per eval (seeds advanced the same way)
+        let mut cluster = SimCluster::new(small.clone());
+        let mut k = 0usize;
+        throughput(bench.run_throughput(
+            "DFO singleton (batch=1), pre-PR baseline engine",
+            1.0,
+            "sims",
+            || {
+                k += 1;
+                let seed = cluster.reserve_seeds(1);
+                simulate_runtime_baseline(
+                    &cluster.spec,
+                    &wl,
+                    &points[k % points.len()],
+                    seed,
+                )
+            },
+        ))
+    };
+    let speedup = if dfo_baseline > 0.0 { dfo_arena / dfo_baseline } else { 0.0 };
+
+    let mut dfo = Json::obj();
+    dfo.set("sims_per_s", Json::Num(dfo_arena));
+    dfo.set("pre_pr_baseline_sims_per_s", Json::Num(dfo_baseline));
+    dfo.set("speedup_vs_baseline", Json::Num(speedup));
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("sim_core".into()));
+    doc.set("quick", Json::from(quick));
+    doc.set("input_mb", Json::Num(input_mb));
+    doc.set("identity", Json::Str("bitwise-ok".into()));
+    doc.set("workloads", cases);
+    doc.set("dfo_singleton", dfo);
+    std::fs::write("BENCH_sim_core.json", doc.to_string() + "\n").unwrap();
+    println!("wrote BENCH_sim_core.json");
+    println!(
+        "DFO singleton: arena {dfo_arena:.0} sims/s vs pre-PR baseline {dfo_baseline:.0} sims/s \
+         ({speedup:.2}x)"
+    );
+
+    bench.print_table("PERF — simulator core (arena / fresh / pre-PR baseline)");
+}

@@ -113,13 +113,21 @@ impl ParamRange {
 }
 
 /// The tunable subspace (+ constraints) for one tuning project.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct TuningSpec {
     /// Builtin prefix + any parameters this spec declared.
     pub registry: Arc<ParamRegistry>,
     pub ranges: Vec<ParamRange>,
     /// Validity predicates over registry indices, applied at decode.
     pub constraints: Vec<Constraint>,
+    /// Non-fatal diagnostics collected while parsing — currently the
+    /// typo guard: a newly declared parameter whose name sits within
+    /// edit distance 2 of a builtin property name (e.g. `memory.mbb`)
+    /// is almost always a misspelling that would otherwise become a
+    /// silent no-op dimension. Declaring new knobs is the extensibility
+    /// feature, so these stay warnings (printed by the CLI), never
+    /// errors.
+    pub warnings: Vec<String>,
 }
 
 impl Default for TuningSpec {
@@ -128,7 +136,19 @@ impl Default for TuningSpec {
             registry: ParamRegistry::builtin(),
             ranges: Vec::new(),
             constraints: Vec::new(),
+            warnings: Vec::new(),
         }
+    }
+}
+
+/// Equality deliberately ignores `warnings`: they are parse diagnostics
+/// (carrying source line numbers that shift across print→parse — the
+/// printer adds a header line), not part of the spec's identity.
+impl PartialEq for TuningSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.registry == other.registry
+            && self.ranges == other.ranges
+            && self.constraints == other.constraints
     }
 }
 
@@ -192,6 +212,7 @@ impl TuningSpec {
 
         let builtin = ParamRegistry::builtin();
         let mut extras: Vec<ParamDef> = Vec::new();
+        let mut warnings: Vec<String> = Vec::new();
         let mut decls = Vec::with_capacity(param_lines.len());
         for (no, toks) in &param_lines {
             let mut decl = parse_param_line(*no, toks)?;
@@ -226,7 +247,23 @@ impl TuningSpec {
             let known_extra = extras.iter().find(|d| d.name == decl.name).cloned();
             match known_builtin.or(known_extra) {
                 Some(def) => check_against_def(*no, &decl, &def)?,
-                None => extras.push(decl.to_def()),
+                None => {
+                    // typo guard: a genuinely-new name sitting within
+                    // edit distance 2 of a builtin spelling is almost
+                    // certainly a misspelled builtin becoming a silent
+                    // no-op dimension — warn, don't reject (declaring
+                    // new knobs is the feature)
+                    if let Some((spelling, full)) = likely_builtin_typo(&decl.name, &builtin) {
+                        warnings.push(format!(
+                            "params.spec line {no}: parameter {:?} is within edit distance 2 \
+                             of builtin {full:?} (spelling {spelling:?}); it was declared as a \
+                             NEW tuning dimension with no effect on the simulator — if you \
+                             meant the builtin, fix the name",
+                            decl.name
+                        ));
+                    }
+                    extras.push(decl.to_def());
+                }
             }
             decls.push((*no, decl));
         }
@@ -358,6 +395,7 @@ impl TuningSpec {
             registry,
             ranges,
             constraints,
+            warnings,
         })
     }
 
@@ -578,6 +616,56 @@ fn check_against_def(no: usize, decl: &ParamDecl, def: &ParamDef) -> Result<(), 
     Ok(())
 }
 
+/// Typo guard: does `name` look like a misspelling of a builtin
+/// property? Candidate spellings per builtin are its full name and every
+/// dotted suffix distinctive enough to be a plausible shorthand (two or
+/// more segments, or a single segment of >= 6 chars like `reduces` —
+/// short fragments like `mb` would false-positive on every new knob).
+/// Distance 0 cannot reach this check: an exact full name or suffix is
+/// resolved (or rejected as ambiguous) by declaration canonicalization.
+/// Returns (matched spelling, builtin full name) for the closest hit
+/// within distance 2.
+fn likely_builtin_typo(name: &str, builtin: &ParamRegistry) -> Option<(String, String)> {
+    let mut best: Option<(usize, String, String)> = None;
+    for def in builtin.defs() {
+        let full = def.name.as_str();
+        let mut consider = |spelling: &str| {
+            if spelling.len().abs_diff(name.len()) > 2 {
+                return; // distance is at least the length gap
+            }
+            let d = edit_distance(name, spelling);
+            if (1..=2).contains(&d) && best.as_ref().map(|(b, _, _)| d < *b).unwrap_or(true) {
+                best = Some((d, spelling.to_string(), full.to_string()));
+            }
+        };
+        consider(full);
+        let mut rest = full;
+        while let Some(dot) = rest.find('.') {
+            rest = &rest[dot + 1..];
+            if rest.contains('.') || rest.len() >= 6 {
+                consider(rest);
+            }
+        }
+    }
+    best.map(|(_, spelling, full)| (spelling, full))
+}
+
+/// Levenshtein distance over bytes (property names are ASCII).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
 /// Cycle check over the lhs→rhs dependency edges of scaled constraints:
 /// repeatedly trim edges whose target has no outgoing edge (such edges
 /// cannot be on a cycle); anything left implies a cycle.
@@ -738,6 +826,62 @@ mod tests {
             "param buffer.kb int 32 4096\nparam x.shuffle.buffer.kb int 32 4096\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn warns_on_probable_typo_of_builtin() {
+        // the ROADMAP example: `memory.mbb` is a NON-suffix typo of
+        // `memory.mb` — it parses (new knobs are the feature) but must
+        // carry a warning naming the builtin it probably meant
+        let spec = TuningSpec::parse("param memory.mbb int 512 4096\n").unwrap();
+        assert_eq!(spec.warnings.len(), 1, "{:?}", spec.warnings);
+        assert!(spec.warnings[0].contains("\"memory.mbb\""), "{}", spec.warnings[0]);
+        assert!(
+            spec.warnings[0].contains("mapreduce.map.memory.mb"),
+            "{}",
+            spec.warnings[0]
+        );
+        // the dimension still exists — warned, not rejected
+        assert_eq!(spec.dims(), 1);
+
+        // a full-name typo (transposition) warns too
+        let spec = TuningSpec::parse("param mapreduce.job.reducse int 1 64\n").unwrap();
+        assert_eq!(spec.warnings.len(), 1, "{:?}", spec.warnings);
+        assert!(
+            spec.warnings[0].contains("mapreduce.job.reduces"),
+            "{}",
+            spec.warnings[0]
+        );
+    }
+
+    #[test]
+    fn intentional_new_knobs_stay_silent() {
+        // genuinely-new parameters and builtin declarations must NOT
+        // trip the typo guard
+        let spec = TuningSpec::parse(
+            "param x.shuffle.buffer.kb int 32 4096 log\n\
+             param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+             param y.other.knob float 0.1 0.9\n",
+        )
+        .unwrap();
+        assert!(spec.warnings.is_empty(), "{:?}", spec.warnings);
+        assert!(TuningSpec::fig3().warnings.is_empty());
+        // warnings are recomputed on a print→parse roundtrip (the line
+        // number shifts past the printed header, so equality ignores
+        // warnings — but the guard itself must re-fire)
+        let typo = TuningSpec::parse("param memory.mbb int 512 4096\n").unwrap();
+        let back = TuningSpec::parse(&typo.to_string()).unwrap();
+        assert_eq!(back, typo);
+        assert_eq!(back.warnings.len(), 1, "{:?}", back.warnings);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("memory.mb", "memory.mb"), 0);
+        assert_eq!(edit_distance("memory.mbb", "memory.mb"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("ab", ""), 2);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use std::collections::{HashMap, VecDeque};
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::joblogs;
-use crate::hadoop::mapreduce::{simulate_job, JobResult};
+use crate::hadoop::mapreduce::{simulate_job_in, JobResult, SimArena};
 use crate::hadoop::ClusterSpec;
 use crate::workloads::WorkloadSpec;
 
@@ -91,6 +91,8 @@ pub struct SimCluster {
     /// Monotone count of jobs ever submitted (survives eviction).
     completed: usize,
     next_id: u64,
+    /// Reusable engine workspace: submissions simulate in warm buffers.
+    arena: SimArena,
 }
 
 impl SimCluster {
@@ -104,14 +106,22 @@ impl SimCluster {
             retired: VecDeque::new(),
             completed: 0,
             next_id: 1,
+            arena: SimArena::new(),
         }
     }
 
     /// Direct, synchronous evaluation used by optimizer hot loops and
-    /// benches (skips the poll dance, still fully deterministic).
+    /// benches (skips the poll dance, still fully deterministic). Runs
+    /// in the cluster's own reused [`SimArena`].
     pub fn run_job(&mut self, job: &JobSubmission) -> JobResult {
         self.seed_counter = self.seed_counter.wrapping_add(1);
-        simulate_job(&self.spec, &job.workload, &job.config, self.seed_counter)
+        simulate_job_in(
+            &mut self.arena,
+            &self.spec,
+            &job.workload,
+            &job.config,
+            self.seed_counter,
+        )
     }
 
     /// Reserve `n` consecutive simulation seeds and return the first.

@@ -57,6 +57,37 @@ impl<E> EventQueue<E> {
         Self::default()
     }
 
+    /// A queue whose heap can hold `capacity` events before growing —
+    /// the simulator pre-sizes to its task count so the steady state
+    /// never reallocates.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(capacity),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    /// Grow the heap so it can hold at least `additional` more events
+    /// without reallocating.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
+    /// Events the heap can hold without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
+    /// Reset to a brand-new queue — clock back to 0, tie-break sequence
+    /// restarted — while KEEPING the heap's allocation. This is what
+    /// lets a simulation arena reuse one queue across runs.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
+    }
+
     /// Current simulated time (the timestamp of the last popped event).
     pub fn now(&self) -> f64 {
         self.now
@@ -141,5 +172,38 @@ mod tests {
         let mut q: EventQueue<()> = EventQueue::new();
         assert!(q.pop().is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_clock_and_sequence_but_keeps_capacity() {
+        let mut q = EventQueue::with_capacity(16);
+        let cap = q.capacity();
+        assert!(cap >= 16);
+        q.schedule(9.0, 1);
+        q.schedule(9.0, 2);
+        q.pop();
+        assert_eq!(q.now(), 9.0);
+
+        q.clear();
+        // the clock is back at 0: scheduling an "early" event is legal
+        // again (would have tripped the into-the-past debug_assert)
+        assert_eq!(q.now(), 0.0);
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), cap, "clear must keep the heap storage");
+        assert_eq!(q.seq, 0, "tie-break sequence must restart on clear");
+        q.schedule(1.0, 10);
+        q.schedule(1.0, 11);
+        q.schedule(1.0, 12);
+        // seq restarted from 0: ties break by post-clear insertion order
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec![10, 11, 12]);
+        assert_eq!(q.now(), 1.0);
+    }
+
+    #[test]
+    fn reserve_grows_capacity() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.reserve(100);
+        assert!(q.capacity() >= 100);
     }
 }

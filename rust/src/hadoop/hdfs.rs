@@ -25,11 +25,22 @@ pub struct Topology {
 impl Topology {
     /// Spread `nodes` round-robin over `n_racks` racks.
     pub fn new(nodes: usize, n_racks: usize) -> Topology {
+        let mut t = Topology {
+            racks: Vec::with_capacity(nodes),
+            n_racks: 0,
+        };
+        t.reset(nodes, n_racks);
+        t
+    }
+
+    /// Re-derive the node→rack map in place (same layout as
+    /// [`Topology::new`]), keeping the existing allocation — used by the
+    /// simulation arena to rebuild per-run state without reallocating.
+    pub fn reset(&mut self, nodes: usize, n_racks: usize) {
         let n_racks = n_racks.max(1).min(nodes.max(1));
-        Topology {
-            racks: (0..nodes).map(|n| n % n_racks).collect(),
-            n_racks,
-        }
+        self.racks.clear();
+        self.racks.extend((0..nodes).map(|n| n % n_racks));
+        self.n_racks = n_racks;
     }
 
     pub fn nodes(&self) -> usize {
@@ -67,61 +78,86 @@ pub fn place_blocks(
     replication: usize,
     rng: &mut Rng,
 ) -> Vec<Block> {
+    let mut out = Vec::new();
+    place_blocks_into(topo, n_blocks, replication, rng, &mut out);
+    out
+}
+
+/// [`place_blocks`] into a caller-owned buffer: the outer Vec AND each
+/// block's replica Vec are reused in place (same policy, same RNG draw
+/// sequence, bit-identical placements). The simulation arena calls this
+/// every run without allocating once warm.
+pub fn place_blocks_into(
+    topo: &Topology,
+    n_blocks: u64,
+    replication: usize,
+    rng: &mut Rng,
+    out: &mut Vec<Block>,
+) {
     let nodes = topo.nodes();
     let replication = replication.max(1).min(nodes.max(1));
-    (0..n_blocks)
-        .map(|id| {
-            let mut replicas = Vec::with_capacity(replication);
-            // 1st replica: uniform random node
-            let first = rng.below(nodes);
-            replicas.push(first);
-            if replication >= 2 {
-                // 2nd: a node on a different rack if one exists.
-                // Rejection sampling (bounded), then deterministic scan —
-                // avoids building a candidate Vec per block (§Perf).
-                let mut second = None;
-                if topo.n_racks > 1 {
-                    for _ in 0..8 {
-                        let n = rng.below(nodes);
-                        if !topo.same_rack(n, first) {
-                            second = Some(n);
-                            break;
-                        }
-                    }
-                    if second.is_none() {
-                        second = (0..nodes).find(|&n| !topo.same_rack(n, first));
-                    }
-                }
-                let second = second.unwrap_or((first + 1) % nodes);
-                if !replicas.contains(&second) {
-                    replicas.push(second);
-                }
-            }
-            while replicas.len() < replication {
-                // 3rd+: same rack as the last replica, different node;
-                // fall back to any unused node
-                let anchor = *replicas.last().unwrap();
-                let mut pick = None;
+    out.truncate(n_blocks as usize);
+    for id in 0..n_blocks {
+        // reuse the slot's replica storage when the slot exists
+        if (id as usize) < out.len() {
+            let b = &mut out[id as usize];
+            b.id = id;
+            b.replicas.clear();
+        } else {
+            out.push(Block {
+                id,
+                replicas: Vec::with_capacity(replication),
+            });
+        }
+        let replicas = &mut out[id as usize].replicas;
+        // 1st replica: uniform random node
+        let first = rng.below(nodes);
+        replicas.push(first);
+        if replication >= 2 {
+            // 2nd: a node on a different rack if one exists.
+            // Rejection sampling (bounded), then deterministic scan —
+            // avoids building a candidate Vec per block (§Perf).
+            let mut second = None;
+            if topo.n_racks > 1 {
                 for _ in 0..8 {
                     let n = rng.below(nodes);
-                    if topo.same_rack(n, anchor) && !replicas.contains(&n) {
-                        pick = Some(n);
+                    if !topo.same_rack(n, first) {
+                        second = Some(n);
                         break;
                     }
                 }
-                if pick.is_none() {
-                    pick = (0..nodes)
-                        .find(|&n| topo.same_rack(n, anchor) && !replicas.contains(&n))
-                        .or_else(|| (0..nodes).find(|n| !replicas.contains(n)));
-                }
-                match pick {
-                    Some(n) => replicas.push(n),
-                    None => break,
+                if second.is_none() {
+                    second = (0..nodes).find(|&n| !topo.same_rack(n, first));
                 }
             }
-            Block { id, replicas }
-        })
-        .collect()
+            let second = second.unwrap_or((first + 1) % nodes);
+            if !replicas.contains(&second) {
+                replicas.push(second);
+            }
+        }
+        while replicas.len() < replication {
+            // 3rd+: same rack as the last replica, different node;
+            // fall back to any unused node
+            let anchor = *replicas.last().unwrap();
+            let mut pick = None;
+            for _ in 0..8 {
+                let n = rng.below(nodes);
+                if topo.same_rack(n, anchor) && !replicas.contains(&n) {
+                    pick = Some(n);
+                    break;
+                }
+            }
+            if pick.is_none() {
+                pick = (0..nodes)
+                    .find(|&n| topo.same_rack(n, anchor) && !replicas.contains(&n))
+                    .or_else(|| (0..nodes).find(|n| !replicas.contains(n)));
+            }
+            match pick {
+                Some(n) => replicas.push(n),
+                None => break,
+            }
+        }
+    }
 }
 
 /// Locality of reading `block` from `node`.
@@ -201,6 +237,29 @@ mod tests {
                 "node {n} has {c} replicas vs mean {mean}"
             );
         }
+    }
+
+    #[test]
+    fn place_blocks_into_reuses_a_dirty_buffer_identically() {
+        let topo = Topology::new(16, 2);
+        let fresh = place_blocks(&topo, 50, 3, &mut Rng::new(9));
+        // dirty buffer from a BIGGER previous run, different topology
+        let mut buf = place_blocks(&Topology::new(7, 3), 200, 2, &mut Rng::new(1));
+        place_blocks_into(&topo, 50, 3, &mut Rng::new(9), &mut buf);
+        assert_eq!(buf, fresh, "reused placement diverged");
+        // and a smaller→bigger reuse too
+        let mut buf2 = place_blocks(&topo, 3, 3, &mut Rng::new(2));
+        place_blocks_into(&topo, 50, 3, &mut Rng::new(9), &mut buf2);
+        assert_eq!(buf2, fresh);
+    }
+
+    #[test]
+    fn topology_reset_matches_new() {
+        let mut t = Topology::new(31, 4);
+        t.reset(16, 2);
+        assert_eq!(t, Topology::new(16, 2));
+        t.reset(64, 5);
+        assert_eq!(t, Topology::new(64, 5));
     }
 
     #[test]

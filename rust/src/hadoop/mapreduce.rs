@@ -6,15 +6,49 @@
 //! speculative execution. The noiseless expectation of this engine is
 //! `costmodel::predict_phases`; `rust/tests/sim_vs_model.rs` keeps the
 //! two within tolerance.
+//!
+//! # The engine as the fast path
+//!
+//! Search-based tuners live or die by evaluations per second, and after
+//! the batch-eval work everything *around* the simulator is already
+//! allocation-free — so the engine itself is optimized three ways, with
+//! the hard rule that **no simulated timeline changes**: `runtime_s` is
+//! bit-identical for every (cluster, workload, config, seed).
+//!
+//! * [`SimArena`] owns every per-run buffer (task state, pending queues,
+//!   event-heap storage, block placements, preference lists, node
+//!   factors, partition weights, the completed-duration feed) and is
+//!   reset — never reallocated — between runs. One arena per pool worker
+//!   makes a 10^4-eval DFO run allocation-free inside the simulator.
+//! * The straggler median is an incremental two-heap [`RunningMedian`]
+//!   (the old `median_of` cloned and sorted the full duration vec on
+//!   every MapFinish in the speculation window — O(n² log n) over the
+//!   map phase) and straggler candidates come from a live not-done set
+//!   instead of a scan over all map states.
+//! * YARN allocation is served by `yarn.rs`'s lazy max-free-mem index,
+//!   and a saturation latch (keyed on [`YarnState`]'s release epoch)
+//!   stops `schedule_tasks!` from re-scanning a full cluster on every
+//!   event once allocation has failed and nothing was released.
+//!
+//! [`simulate_runtime_baseline`] keeps the pre-index engine (linear
+//! allocation scan, clone-and-sort median, full-state straggler scan,
+//! no latch) alive as the byte-identity oracle and the benchmark
+//! baseline; `runtime_fast_path_is_byte_identical_to_full_simulation`
+//! pins all paths to the same bits. Throughput numbers live in
+//! `EXPERIMENTS.md` §Perf (`cargo bench --bench sim_core`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::config::params::*;
 use crate::hadoop::costmodel::{self, N_PHASES};
 use crate::hadoop::counters::JobCounters;
 use crate::hadoop::events::EventQueue;
 use crate::hadoop::hdfs::{self, Block, Locality, Topology};
-use crate::hadoop::noise::partition_weights;
+use crate::hadoop::noise::partition_weights_into;
 use crate::hadoop::yarn::{Container, YarnState};
 use crate::hadoop::ClusterSpec;
+use crate::util::ord::TotalF64;
 use crate::util::rng::Rng;
 use crate::workloads::WorkloadSpec;
 
@@ -55,10 +89,24 @@ pub struct JobResult {
 
 enum Ev {
     Start,
-    /// (task id, attempt epoch)
-    MapFinish(u64, u32),
-    MapFail(u64, u32),
+    /// (task id, attempt epoch, attempt ordinal)
+    MapFinish(u64, u32, u32),
+    MapFail(u64, u32, u32),
     ReduceFinish(u64),
+}
+
+/// One live (scheduled, unresolved) map attempt.
+struct LiveAttempt {
+    /// 1-based ordinal of this attempt within its task. Carried in the
+    /// attempt's event payload so the handler identifies the finishing
+    /// attempt EXACTLY — the old code matched on float finish time
+    /// (`(f - t).abs() < 1e-9`) and could pick the wrong attempt if two
+    /// finished within a nanosecond of each other.
+    attempt: u32,
+    container: Container,
+    /// Expected finish time (the speculation heuristic reads it).
+    finish: f64,
+    speculative: bool,
 }
 
 struct MapTaskState {
@@ -67,8 +115,7 @@ struct MapTaskState {
     epoch: u32,
     done: bool,
     start: f64,
-    /// (container, node, expected finish, speculative?) per live attempt
-    live: Vec<(Container, usize, f64, bool)>,
+    live: Vec<LiveAttempt>,
     locality: Option<Locality>,
 }
 
@@ -79,6 +126,119 @@ struct ReduceTaskState {
     started: bool,
     weight: f64,
     mult: f64,
+}
+
+/// Incremental running median over the completed-map-duration stream.
+///
+/// Produces EXACTLY the statistic the clone-and-sort [`median_of`]
+/// produces — `sorted[len / 2]`, the upper median — in O(log n) per
+/// insert instead of O(n log n) per query: [`TotalF64`] keys equal under
+/// `total_cmp` are bit-identical, so any valid two-heap partition yields
+/// the sort-selected element. `lo` (a max-heap) holds the `floor(n/2)`
+/// smallest durations, `hi` (a min-heap) the rest, so the median is
+/// always `hi`'s minimum. Cleared-not-dropped between runs so the heap
+/// storage lives in the arena.
+#[derive(Clone, Debug, Default)]
+struct RunningMedian {
+    lo: BinaryHeap<TotalF64>,
+    hi: BinaryHeap<Reverse<TotalF64>>,
+}
+
+impl RunningMedian {
+    fn push(&mut self, x: f64) {
+        let x = TotalF64(x);
+        match self.hi.peek() {
+            Some(&Reverse(m)) if x < m => self.lo.push(x),
+            _ => self.hi.push(Reverse(x)),
+        }
+        // rebalance: hi holds ceil(n/2), lo holds floor(n/2)
+        if self.lo.len() > self.hi.len() {
+            let v = self.lo.pop().expect("lo nonempty");
+            self.hi.push(Reverse(v));
+        } else if self.hi.len() > self.lo.len() + 1 {
+            let Reverse(v) = self.hi.pop().expect("hi nonempty");
+            self.lo.push(v);
+        }
+    }
+
+    /// `sorted[len / 2]`, or 0.0 when empty — [`median_of`]'s contract.
+    fn median(&self) -> f64 {
+        self.hi.peek().map(|&Reverse(TotalF64(v))| v).unwrap_or(0.0)
+    }
+
+    fn clear(&mut self) {
+        self.lo.clear();
+        self.hi.clear();
+    }
+}
+
+/// Reusable per-run workspace for the discrete-event engine.
+///
+/// Owns every buffer a simulation needs and is reset in place at the
+/// start of each run — the buffers (including nested ones: block replica
+/// lists, per-block preference lists, per-task live-attempt lists, the
+/// event heap, the median heaps) keep their allocations, so steady-state
+/// simulation does not touch the allocator at all. One arena serves runs
+/// of ANY shape back to back: different workloads, cluster sizes and
+/// configs (see `dirty_arena_reuse_is_byte_identical`).
+///
+/// `ClusterObjective` threads one arena per pool worker through
+/// `ThreadPool::scoped_run_with`, which is what makes a long DFO run
+/// allocation-free inside the simulator.
+pub struct SimArena {
+    topo: Topology,
+    yarn: YarnState,
+    queue: EventQueue<Ev>,
+    blocks: Vec<Block>,
+    preferred_nodes: Vec<Vec<usize>>,
+    node_factor: Vec<f64>,
+    weights: Vec<f64>,
+    map_states: Vec<MapTaskState>,
+    red_states: Vec<ReduceTaskState>,
+    pending_maps: VecDeque<u64>,
+    pending_reds: VecDeque<u64>,
+    fetching_reds: Vec<u64>,
+    /// Straggler-candidate live set: map ids not yet known done,
+    /// ascending. Compacted lazily during speculation walks (indexed
+    /// engine only; the baseline scans all map states).
+    not_done: Vec<u64>,
+    /// Straggler candidates picked by the current event (scratch).
+    spec_buf: Vec<u64>,
+    /// Completed-duration feed, incremental (indexed engine)...
+    durs: RunningMedian,
+    /// ...or raw, for the baseline's clone-and-sort median.
+    durs_vec: Vec<f64>,
+}
+
+impl SimArena {
+    /// An empty arena; every buffer grows to its working size on the
+    /// first run and is reused from then on.
+    pub fn new() -> SimArena {
+        SimArena {
+            topo: Topology::new(0, 1),
+            yarn: YarnState::new(0, 0.0, 0),
+            queue: EventQueue::new(),
+            blocks: Vec::new(),
+            preferred_nodes: Vec::new(),
+            node_factor: Vec::new(),
+            weights: Vec::new(),
+            map_states: Vec::new(),
+            red_states: Vec::new(),
+            pending_maps: VecDeque::new(),
+            pending_reds: VecDeque::new(),
+            fetching_reds: Vec::new(),
+            not_done: Vec::new(),
+            spec_buf: Vec::new(),
+            durs: RunningMedian::default(),
+            durs_vec: Vec::new(),
+        }
+    }
+}
+
+impl Default for SimArena {
+    fn default() -> SimArena {
+        SimArena::new()
+    }
 }
 
 /// What [`simulate_core`] produced, before the (optional) packaging into
@@ -100,7 +260,19 @@ pub fn simulate_job(
     cfg: &HadoopConfig,
     seed: u64,
 ) -> JobResult {
-    let core = simulate_core::<true>(cl, wl, cfg, seed);
+    simulate_job_in(&mut SimArena::new(), cl, wl, cfg, seed)
+}
+
+/// [`simulate_job`] running inside a caller-owned [`SimArena`] — same
+/// result, but the engine's buffers are reused across calls.
+pub fn simulate_job_in(
+    arena: &mut SimArena,
+    cl: &ClusterSpec,
+    wl: &WorkloadSpec,
+    cfg: &HadoopConfig,
+    seed: u64,
+) -> JobResult {
+    let core = simulate_core::<true, true>(cl, wl, cfg, seed, arena);
     JobResult {
         runtime_s: core.runtime_s,
         map_phase_end_s: core.map_phase_end_s,
@@ -122,21 +294,54 @@ pub fn simulate_job(
 /// innermost call of every tuning run; artifact-producing paths
 /// (submit/poll/fetch) keep the full [`simulate_job`].
 pub fn simulate_runtime(cl: &ClusterSpec, wl: &WorkloadSpec, cfg: &HadoopConfig, seed: u64) -> f64 {
-    simulate_core::<false>(cl, wl, cfg, seed).runtime_s
+    simulate_core::<false, true>(cl, wl, cfg, seed, &mut SimArena::new()).runtime_s
 }
 
-/// The discrete-event engine behind both entry points. `RECORD` gates
-/// every side channel (task records, counters, phase task-seconds) at
-/// compile time; nothing it gates feeds back into the timeline, so both
-/// instantiations walk the identical event sequence.
-fn simulate_core<const RECORD: bool>(
+/// [`simulate_runtime`] inside a caller-owned [`SimArena`]: the steady
+/// state of this call allocates nothing — THE innermost call of every
+/// tuning run.
+pub fn simulate_runtime_in(
+    arena: &mut SimArena,
     cl: &ClusterSpec,
     wl: &WorkloadSpec,
     cfg: &HadoopConfig,
     seed: u64,
+) -> f64 {
+    simulate_core::<false, true>(cl, wl, cfg, seed, arena).runtime_s
+}
+
+/// The pre-index engine — linear YARN allocation scan, clone-and-sort
+/// straggler median, full-state straggler scan, no saturation latch,
+/// fresh buffers every call. Kept (hidden) as the byte-identity oracle
+/// for the optimized engine and as the honest "before" measurement in
+/// `benches/sim_core.rs`; not for production use.
+#[doc(hidden)]
+pub fn simulate_runtime_baseline(
+    cl: &ClusterSpec,
+    wl: &WorkloadSpec,
+    cfg: &HadoopConfig,
+    seed: u64,
+) -> f64 {
+    simulate_core::<false, false>(cl, wl, cfg, seed, &mut SimArena::new()).runtime_s
+}
+
+/// The discrete-event engine behind every entry point.
+///
+/// `RECORD` gates every side channel (task records, counters, phase
+/// task-seconds) at compile time. `INDEXED` selects the optimized
+/// decision structures (yarn allocation index + saturation latch,
+/// incremental median, not-done straggler set) vs the pre-index
+/// baseline. Neither flag feeds anything back into the timeline, so all
+/// four instantiations walk the identical event sequence — enforced by
+/// `runtime_fast_path_is_byte_identical_to_full_simulation`.
+fn simulate_core<const RECORD: bool, const INDEXED: bool>(
+    cl: &ClusterSpec,
+    wl: &WorkloadSpec,
+    cfg: &HadoopConfig,
+    seed: u64,
+    arena: &mut SimArena,
 ) -> SimCore {
     let mut root = Rng::new(seed ^ 0xCA71A);
-    let topo = Topology::new(cl.nodes as usize, cl.racks as usize);
     let geo = costmodel::geometry(cfg, wl, cl);
     let map_cost = costmodel::map_task_cost(cfg, wl, cl);
     let shuffle = costmodel::shuffle_cost(cfg, wl, cl);
@@ -144,65 +349,127 @@ fn simulate_core<const RECORD: bool>(
 
     let maps = geo.maps as usize;
     let reduces = geo.reduces as usize;
-    let blocks: Vec<Block> = hdfs::place_blocks(
-        &topo,
+
+    // ---- rebuild per-run state inside the arena (reset, don't alloc) --
+    arena.topo.reset(cl.nodes as usize, cl.racks as usize);
+    hdfs::place_blocks_into(
+        &arena.topo,
         geo.maps,
         cl.replication as usize,
         &mut root.fork(1),
+        &mut arena.blocks,
     );
-    let node_factor = cl.noise.node_factors(&mut root.fork(2), topo.nodes());
-    let weights = partition_weights(&mut root.fork(3), reduces, wl.key_skew);
-    // per-block container preference: replica nodes, then same-rack nodes
-    let preferred_nodes: Vec<Vec<usize>> = blocks
-        .iter()
-        .map(|b| {
-            let mut p = b.replicas.clone();
-            p.extend(
-                (0..topo.nodes())
-                    .filter(|&n| !b.replicas.contains(&n)
-                        && b.replicas.iter().any(|&r| topo.same_rack(r, n))),
-            );
-            p
-        })
-        .collect();
+    cl.noise
+        .node_factors_into(&mut root.fork(2), arena.topo.nodes(), &mut arena.node_factor);
+    partition_weights_into(&mut root.fork(3), reduces, wl.key_skew, &mut arena.weights);
+    // per-block container preference: replica nodes, then same-rack
+    // nodes (lists precomputed once per job, inner buffers reused — the
+    // event loop is allocation-free, see EXPERIMENTS.md §Perf)
+    arena.preferred_nodes.truncate(maps);
+    for i in 0..maps {
+        if i == arena.preferred_nodes.len() {
+            arena.preferred_nodes.push(Vec::new());
+        }
+        let b = &arena.blocks[i];
+        let p = &mut arena.preferred_nodes[i];
+        p.clear();
+        p.extend_from_slice(&b.replicas);
+        p.extend((0..arena.topo.nodes()).filter(|&n| {
+            !b.replicas.contains(&n) && b.replicas.iter().any(|&r| arena.topo.same_rack(r, n))
+        }));
+    }
 
     let map_mem = cfg.get(P_MAP_MEM_MB);
     let red_mem = cfg.get(P_RED_MEM_MB);
     let slowstart = cfg.get(P_SLOWSTART).clamp(0.0, 1.0);
     let slowstart_maps = ((slowstart * maps as f64).ceil() as usize).min(maps);
 
-    let mut yarn = YarnState::new(
-        topo.nodes(),
+    arena.yarn.reset(
+        arena.topo.nodes(),
         cl.mem_per_node_mb as f64,
         cl.vcores_per_node as u32,
     );
-    let mut q: EventQueue<Ev> = EventQueue::new();
+    if !INDEXED {
+        // honest baseline: the pre-index engine never maintained an
+        // allocation index, so its alloc/release must not pay for one
+        arena.yarn.disable_index();
+    }
+    arena.queue.clear();
+    arena.queue.reserve(maps + reduces); // pre-size to the task count
     let mut noise_rng = root.fork(4);
 
-    let mut map_states: Vec<MapTaskState> = (0..maps)
-        .map(|i| MapTaskState {
-            block: i,
-            attempts: 0,
-            epoch: 0,
-            done: false,
-            start: f64::NAN,
-            live: Vec::new(),
-            locality: None,
-        })
-        .collect();
-    let mut pending_maps: std::collections::VecDeque<u64> = (0..maps as u64).collect();
-    let mut red_states: Vec<ReduceTaskState> = (0..reduces)
-        .map(|_| ReduceTaskState {
+    arena.map_states.truncate(maps);
+    for i in 0..maps {
+        if i < arena.map_states.len() {
+            let st = &mut arena.map_states[i];
+            st.block = i;
+            st.attempts = 0;
+            st.epoch = 0;
+            st.done = false;
+            st.start = f64::NAN;
+            st.live.clear();
+            st.locality = None;
+        } else {
+            arena.map_states.push(MapTaskState {
+                block: i,
+                attempts: 0,
+                epoch: 0,
+                done: false,
+                start: f64::NAN,
+                live: Vec::new(),
+                locality: None,
+            });
+        }
+    }
+    arena.pending_maps.clear();
+    arena.pending_maps.extend(0..maps as u64);
+    arena.red_states.truncate(reduces);
+    for i in 0..reduces {
+        let fresh = ReduceTaskState {
             alloc_t: f64::NAN,
             container: None,
             node: 0,
             started: false,
             weight: 1.0,
             mult: 1.0,
-        })
-        .collect();
-    let mut pending_reds: std::collections::VecDeque<u64> = (0..reduces as u64).collect();
-    let mut fetching_reds: Vec<u64> = Vec::new();
+        };
+        if i < arena.red_states.len() {
+            arena.red_states[i] = fresh;
+        } else {
+            arena.red_states.push(fresh);
+        }
+    }
+    arena.pending_reds.clear();
+    arena.pending_reds.extend(0..reduces as u64);
+    arena.fetching_reds.clear();
+    arena.spec_buf.clear();
+    if INDEXED {
+        arena.not_done.clear();
+        arena.not_done.extend(0..maps as u64);
+        arena.durs.clear();
+    } else {
+        arena.durs_vec.clear();
+    }
+
+    // ---- the event loop proper, over disjoint arena fields ------------
+    let SimArena {
+        topo,
+        yarn,
+        queue: q,
+        blocks,
+        preferred_nodes,
+        node_factor,
+        weights,
+        map_states,
+        red_states,
+        pending_maps,
+        pending_reds,
+        fetching_reds,
+        not_done,
+        spec_buf,
+        durs,
+        durs_vec,
+    } = arena;
 
     let mut maps_done = 0usize;
     let mut reds_done = 0usize;
@@ -222,8 +489,13 @@ fn simulate_core<const RECORD: bool>(
         spilled_records: 0,
         ..JobCounters::default()
     };
-    let mut completed_map_durs: Vec<f64> = Vec::with_capacity(maps);
     let mut phase_secs = [0.0f64; N_PHASES];
+    // saturation latches: `Some(epoch)` = allocation of this pool's size
+    // failed at that release epoch; while the epoch is unchanged nothing
+    // was released, so the same allocation MUST still fail and the scan
+    // is skipped (cheap decisions only — the timeline cannot change)
+    let mut map_sat: Option<u64> = None;
+    let mut red_sat: Option<u64> = None;
 
     // --- helpers as closures over the mutable state are painful in rust;
     //     use a small macro instead ---------------------------------------
@@ -232,13 +504,16 @@ fn simulate_core<const RECORD: bool>(
             let tid = $tid as usize;
             let st = &mut map_states[tid];
             // locality-aware container: prefer replica nodes, then rack
-            // (preference lists precomputed once per job — hot path is
-            // allocation-free, see EXPERIMENTS.md §Perf)
-            match yarn.allocate(map_mem, &preferred_nodes[st.block]) {
+            let alloc = if INDEXED {
+                yarn.allocate(map_mem, &preferred_nodes[st.block])
+            } else {
+                yarn.allocate_linear(map_mem, &preferred_nodes[st.block])
+            };
+            match alloc {
                 None => false,
                 Some(container) => {
                     let node = container.node;
-                    let loc = hdfs::locality(&topo, &blocks[st.block], node);
+                    let loc = hdfs::locality(topo, &blocks[st.block], node);
                     let mut rng = noise_rng.fork(($tid as u64) * 8 + st.attempts as u64);
                     let mult = cl.noise.task_multiplier(&mut rng) * node_factor[node];
                     let read = map_cost.t_read_local / loc.rate_factor();
@@ -247,6 +522,7 @@ fn simulate_core<const RECORD: bool>(
                         * mult
                         + cl.task_overhead_s;
                     st.attempts += 1;
+                    let attempt = st.attempts; // 1-based ordinal, event payload
                     if !$spec {
                         // epoch invalidates *replaced* attempts (failure
                         // retries); a speculative copy RACES the original,
@@ -263,10 +539,17 @@ fn simulate_core<const RECORD: bool>(
                     } else {
                         None
                     };
-                    st.live.push((container, node, $q.now() + dur, $spec));
+                    st.live.push(LiveAttempt {
+                        attempt,
+                        container,
+                        finish: $q.now() + dur,
+                        speculative: $spec,
+                    });
                     match failure {
-                        Some(frac) => $q.schedule_in(dur * frac, Ev::MapFail($tid as u64, epoch)),
-                        None => $q.schedule_in(dur, Ev::MapFinish($tid as u64, epoch)),
+                        Some(frac) => {
+                            $q.schedule_in(dur * frac, Ev::MapFail($tid as u64, epoch, attempt))
+                        }
+                        None => $q.schedule_in(dur, Ev::MapFinish($tid as u64, epoch, attempt)),
                     }
                     true
                 }
@@ -295,19 +578,34 @@ fn simulate_core<const RECORD: bool>(
 
     macro_rules! schedule_tasks {
         ($q:expr) => {{
-            // maps first (FIFO with locality preference)
-            while let Some(&tid) = pending_maps.front() {
-                if sample_map_attempt!($q, tid, false) {
-                    pending_maps.pop_front();
-                } else {
-                    break; // no capacity anywhere
+            // maps first (FIFO with locality preference); while latched
+            // (a map allocation failed, nothing released since) the scan
+            // is provably futile and skipped
+            if !INDEXED || map_sat != Some(yarn.release_epoch()) {
+                while let Some(&tid) = pending_maps.front() {
+                    if sample_map_attempt!($q, tid, false) {
+                        pending_maps.pop_front();
+                    } else {
+                        map_sat = Some(yarn.release_epoch());
+                        break; // no capacity anywhere
+                    }
                 }
             }
             // reducers once slowstart reached
-            if maps_done >= slowstart_maps {
+            if maps_done >= slowstart_maps
+                && (!INDEXED || red_sat != Some(yarn.release_epoch()))
+            {
                 while let Some(&rid) = pending_reds.front() {
-                    match yarn.allocate(red_mem, &[]) {
-                        None => break,
+                    let alloc = if INDEXED {
+                        yarn.allocate(red_mem, &[])
+                    } else {
+                        yarn.allocate_linear(red_mem, &[])
+                    };
+                    match alloc {
+                        None => {
+                            red_sat = Some(yarn.release_epoch());
+                            break;
+                        }
                         Some(container) => {
                             pending_reds.pop_front();
                             let rs = &mut red_states[rid as usize];
@@ -336,7 +634,7 @@ fn simulate_core<const RECORD: bool>(
             Ev::Start => {
                 schedule_tasks!(q);
             }
-            Ev::MapFail(tid, epoch) => {
+            Ev::MapFail(tid, epoch, att) => {
                 let st = &mut map_states[tid as usize];
                 if st.done || epoch != st.epoch {
                     continue;
@@ -345,39 +643,34 @@ fn simulate_core<const RECORD: bool>(
                     counters.failed_task_attempts += 1;
                 }
                 // release this attempt's container, requeue the task
-                if let Some(pos) = st.live.iter().position(|(_, _, _, s)| !s) {
-                    let (c, _, _, _) = st.live.remove(pos);
-                    yarn.release(c);
+                if let Some(pos) = st.live.iter().position(|a| a.attempt == att) {
+                    let a = st.live.remove(pos);
+                    yarn.release(a.container);
                 }
                 pending_maps.push_back(tid);
                 schedule_tasks!(q);
             }
-            Ev::MapFinish(tid, epoch) => {
-                let (was_done, spec_of_this) = {
-                    let st = &map_states[tid as usize];
-                    (
-                        st.done,
-                        st.live.iter().find(|(_, _, f, _)| (*f - t).abs() < 1e-9).map(|x| x.3),
-                    )
-                };
+            Ev::MapFinish(tid, epoch, att) => {
                 let st = &mut map_states[tid as usize];
-                if was_done {
+                if st.done {
                     continue; // lost the speculation race; container already freed
                 }
+                // the event names its attempt — no float-time matching
+                let spec_of_this = st.live.iter().find(|a| a.attempt == att).map(|a| a.speculative);
                 if epoch != st.epoch && spec_of_this != Some(true) {
                     continue; // stale attempt (superseded by retry)
                 }
                 st.done = true;
                 maps_done += 1;
                 map_phase_end = map_phase_end.max(t);
-                // free ALL live attempt containers (speculative copy is killed)
-                let lives = std::mem::take(&mut st.live);
-                let n_live = lives.len();
-                for (c, _, _, s) in lives {
-                    if RECORD && s {
+                // free ALL live attempt containers (speculative copy is
+                // killed); drain keeps the list's storage in the arena
+                let n_live = st.live.len();
+                for a in st.live.drain(..) {
+                    if RECORD && a.speculative {
                         counters.speculative_attempts += 1;
                     }
-                    yarn.release(c);
+                    yarn.release(a.container);
                 }
                 let loc = st.locality.unwrap_or(Locality::NodeLocal);
                 if RECORD {
@@ -406,36 +699,63 @@ fn simulate_core<const RECORD: bool>(
                 }
                 // the duration feed stays on in both modes: speculation
                 // decisions below read the completed-duration median
-                completed_map_durs.push(t - st.start);
+                // (not_done is compacted lazily in the speculation walk —
+                // an eager sorted remove here would memmove O(maps) per
+                // completion, more than the scan it replaces)
+                if INDEXED {
+                    durs.push(t - st.start);
+                } else {
+                    durs_vec.push(t - st.start);
+                }
                 last_finish = last_finish.max(t);
 
                 // speculative execution: when the map phase is nearly done,
                 // duplicate the slowest stragglers
                 if cl.speculative && pending_maps.is_empty() && maps_done * 4 >= maps * 3 {
-                    let median = median_of(&completed_map_durs);
+                    let median = if INDEXED { durs.median() } else { median_of(durs_vec) };
                     // LATE-style: duplicate tasks whose *total* expected
                     // duration is an outlier vs the completed median and
                     // whose remaining work still makes a copy worthwhile
-                    let spec_candidates: Vec<u64> = map_states
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, s)| {
-                            !s.done
-                                && s.live.len() == 1
-                                && !s.live[0].3
-                                && s.live[0].2 - s.start > 1.5 * median
-                                && s.live[0].2 - t > 0.5 * median
-                        })
-                        .map(|(i, _)| i as u64)
-                        .collect();
-                    for stid in spec_candidates {
+                    let candidate = |s: &MapTaskState| {
+                        s.live.len() == 1
+                            && !s.live[0].speculative
+                            && s.live[0].finish - s.start > 1.5 * median
+                            && s.live[0].finish - t > 0.5 * median
+                    };
+                    spec_buf.clear();
+                    if INDEXED {
+                        // walk the not-done live set, compacting finished
+                        // tasks out as we go (retain keeps the ascending
+                        // order, so candidates come out exactly as the
+                        // full scan would emit them; done tasks have no
+                        // live attempt, so dropping them changes nothing)
+                        not_done.retain(|&i| {
+                            let s = &map_states[i as usize];
+                            if s.done {
+                                return false;
+                            }
+                            if candidate(s) {
+                                spec_buf.push(i);
+                            }
+                            true
+                        });
+                    } else {
+                        spec_buf.extend(
+                            map_states
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, s)| !s.done && candidate(s))
+                                .map(|(i, _)| i as u64),
+                        );
+                    }
+                    for &stid in spec_buf.iter() {
                         sample_map_attempt!(q, stid, true);
                     }
                 }
                 if maps_done == maps {
-                    // release reducers waiting on the last map
-                    let fetching = std::mem::take(&mut fetching_reds);
-                    for rid in fetching {
+                    // release reducers waiting on the last map; drain
+                    // keeps the buffer in the arena
+                    for rid in fetching_reds.drain(..) {
                         schedule_reduce_finish!(q, rid, map_phase_end);
                     }
                 }
@@ -490,6 +810,9 @@ fn simulate_core<const RECORD: bool>(
     }
 }
 
+/// The baseline's straggler median: clone, sort, take `v[len / 2]`.
+/// The optimized engine computes the same value incrementally through
+/// [`RunningMedian`]; this stays as its oracle (and the baseline path).
 fn median_of(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -502,7 +825,7 @@ fn median_of(xs: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::{terasort, wordcount};
+    use crate::workloads::{grep, terasort, wordcount};
 
     fn run(cfg: &HadoopConfig, seed: u64) -> JobResult {
         let cl = ClusterSpec::default();
@@ -511,20 +834,26 @@ mod tests {
 
     #[test]
     fn runtime_fast_path_is_byte_identical_to_full_simulation() {
-        // the lean path must walk the exact same event timeline: same
-        // RNG stream, same scheduling, bit-equal runtime — across
-        // workloads, failure/straggler settings and many seeds
+        // every engine variant must walk the exact same event timeline:
+        // same RNG stream, same scheduling, bit-equal runtime — across
+        // workloads, failure/straggler settings and many seeds. Covered
+        // paths: full simulate_job, lean simulate_runtime, the lean path
+        // in a REUSED arena (reset-not-reallocate), and the pre-index
+        // baseline engine (linear yarn scan + clone-and-sort median).
         let mut noisy = ClusterSpec::default();
         noisy.noise.failure_prob = 0.1;
         noisy.noise.straggler_prob = 0.15;
         let mut cfg = HadoopConfig::default();
         cfg.set(P_REDUCES, 16.0);
         cfg.set(P_SLOWSTART, 0.4);
+        let mut arena = SimArena::new();
         for cl in [ClusterSpec::default(), noisy] {
             for wl in [wordcount(6144.0), terasort(4096.0)] {
                 for seed in 0..12 {
                     let full = simulate_job(&cl, &wl, &cfg, seed).runtime_s;
                     let lean = simulate_runtime(&cl, &wl, &cfg, seed);
+                    let arena_lean = simulate_runtime_in(&mut arena, &cl, &wl, &cfg, seed);
+                    let baseline = simulate_runtime_baseline(&cl, &wl, &cfg, seed);
                     assert_eq!(
                         full.to_bits(),
                         lean.to_bits(),
@@ -532,9 +861,105 @@ mod tests {
                         full,
                         wl.name
                     );
+                    assert_eq!(
+                        full.to_bits(),
+                        arena_lean.to_bits(),
+                        "arena path diverged: {} vs {arena_lean} (wl {}, seed {seed})",
+                        full,
+                        wl.name
+                    );
+                    assert_eq!(
+                        full.to_bits(),
+                        baseline.to_bits(),
+                        "indexed engine diverged from the pre-index baseline: \
+                         {} vs {baseline} (wl {}, seed {seed})",
+                        full,
+                        wl.name
+                    );
                 }
             }
         }
+    }
+
+    #[test]
+    fn dirty_arena_reuse_is_byte_identical() {
+        // one arena driven through wildly different shapes back to back —
+        // big job, small job, different workload, different cluster size —
+        // must reproduce what a fresh arena computes, bit for bit, AND
+        // the full simulate_job record set
+        let small = ClusterSpec {
+            nodes: 4,
+            racks: 1,
+            ..ClusterSpec::default()
+        };
+        let big = ClusterSpec {
+            nodes: 48,
+            racks: 4,
+            ..ClusterSpec::default()
+        };
+        let mut cfg_a = HadoopConfig::default();
+        cfg_a.set(P_REDUCES, 24.0);
+        let cfg_b = HadoopConfig::default();
+        let runs: Vec<(&ClusterSpec, WorkloadSpec, &HadoopConfig, u64)> = vec![
+            (&big, terasort(8192.0), &cfg_a, 3),
+            (&small, wordcount(1024.0), &cfg_b, 4),
+            (&big, grep(4096.0), &cfg_b, 5),
+            (&small, terasort(2048.0), &cfg_a, 3), // same seed, new shape
+            (&big, terasort(8192.0), &cfg_a, 3),   // exact repeat of run 0
+        ];
+        let mut arena = SimArena::new();
+        for (i, (cl, wl, cfg, seed)) in runs.iter().enumerate() {
+            let dirty = simulate_runtime_in(&mut arena, cl, wl, cfg, *seed);
+            let fresh = simulate_runtime(cl, wl, cfg, *seed);
+            assert_eq!(
+                dirty.to_bits(),
+                fresh.to_bits(),
+                "dirty arena diverged on run {i}: {dirty} vs {fresh}"
+            );
+            // the record-producing path reuses the same arena too
+            let job_dirty = simulate_job_in(&mut arena, cl, wl, cfg, *seed);
+            let job_fresh = simulate_job(cl, wl, cfg, *seed);
+            assert_eq!(job_dirty.runtime_s.to_bits(), job_fresh.runtime_s.to_bits());
+            assert_eq!(job_dirty.tasks.len(), job_fresh.tasks.len());
+            assert_eq!(job_dirty.counters, job_fresh.counters);
+        }
+    }
+
+    #[test]
+    fn running_median_matches_sort_median_bitwise() {
+        // the incremental median must reproduce sorted[len/2] exactly,
+        // duplicates and all — across many random streams
+        let mut rng = crate::util::rng::Rng::new(0x4ED1A);
+        for _ in 0..200 {
+            let n = 1 + rng.below(120);
+            let mut rm = RunningMedian::default();
+            let mut xs: Vec<f64> = Vec::new();
+            for _ in 0..n {
+                // mix of continuous values and coarse duplicates
+                let x = if rng.bernoulli(0.3) {
+                    (rng.f64() * 8.0).round() * 0.5
+                } else {
+                    rng.f64() * 100.0
+                };
+                xs.push(x);
+                rm.push(x);
+                assert_eq!(
+                    rm.median().to_bits(),
+                    median_of(&xs).to_bits(),
+                    "median diverged at len {}",
+                    xs.len()
+                );
+            }
+        }
+        // empty contract matches median_of
+        assert_eq!(RunningMedian::default().median(), 0.0);
+        // clear() resets for reuse
+        let mut rm = RunningMedian::default();
+        rm.push(5.0);
+        rm.clear();
+        assert_eq!(rm.median(), 0.0);
+        rm.push(2.0);
+        assert_eq!(rm.median(), 2.0);
     }
 
     #[test]

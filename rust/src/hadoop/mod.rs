@@ -17,7 +17,9 @@ pub mod trace;
 pub mod yarn;
 
 pub use cluster::{Cluster, JobArtifacts, JobStatus, JobSubmission, SimCluster};
-pub use mapreduce::{simulate_job, simulate_runtime, JobResult};
+pub use mapreduce::{
+    simulate_job, simulate_job_in, simulate_runtime, simulate_runtime_in, JobResult, SimArena,
+};
 pub use noise::NoiseModel;
 
 use crate::config::env::HadoopEnv;

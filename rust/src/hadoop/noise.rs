@@ -52,15 +52,22 @@ impl NoiseModel {
 
     /// Sample the static slowdown factors for `n` nodes (mean ~1).
     pub fn node_factors(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
-        (0..n)
-            .map(|_| {
-                if self.node_sigma == 0.0 {
-                    1.0
-                } else {
-                    rng.lognormal(-self.node_sigma * self.node_sigma / 2.0, self.node_sigma)
-                }
-            })
-            .collect()
+        let mut out = Vec::new();
+        self.node_factors_into(rng, n, &mut out);
+        out
+    }
+
+    /// [`NoiseModel::node_factors`] into a reused buffer (identical RNG
+    /// draw sequence) — the simulation arena's allocation-free path.
+    pub fn node_factors_into(&self, rng: &mut Rng, n: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend((0..n).map(|_| {
+            if self.node_sigma == 0.0 {
+                1.0
+            } else {
+                rng.lognormal(-self.node_sigma * self.node_sigma / 2.0, self.node_sigma)
+            }
+        }));
     }
 
     /// Sample one task attempt's duration multiplier (jitter x straggler).
@@ -92,17 +99,28 @@ impl NoiseModel {
 /// Reduce-partition skew weights: `reduces` weights with mean exactly 1,
 /// spread controlled by `key_skew` in [0,1]. Deterministic per seed.
 pub fn partition_weights(rng: &mut Rng, reduces: usize, key_skew: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    partition_weights_into(rng, reduces, key_skew, &mut out);
+    out
+}
+
+/// [`partition_weights`] into a reused buffer (identical RNG draw
+/// sequence and normalization) — the simulation arena's allocation-free
+/// path.
+pub fn partition_weights_into(rng: &mut Rng, reduces: usize, key_skew: f64, out: &mut Vec<f64>) {
+    out.clear();
     if reduces == 0 {
-        return Vec::new();
+        return;
     }
     if key_skew <= 0.0 {
-        return vec![1.0; reduces];
+        out.resize(reduces, 1.0);
+        return;
     }
-    let raw: Vec<f64> = (0..reduces)
-        .map(|_| (1.0 + key_skew * rng.normal().abs() * 1.2).max(0.1))
-        .collect();
-    let mean = raw.iter().sum::<f64>() / reduces as f64;
-    raw.into_iter().map(|w| w / mean).collect()
+    out.extend((0..reduces).map(|_| (1.0 + key_skew * rng.normal().abs() * 1.2).max(0.1)));
+    let mean = out.iter().sum::<f64>() / reduces as f64;
+    for w in out.iter_mut() {
+        *w /= mean;
+    }
 }
 
 #[cfg(test)]
@@ -155,6 +173,31 @@ mod tests {
         // uniform case
         let u = partition_weights(&mut rng, 8, 0.0);
         assert!(u.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones_bitwise() {
+        let nm = NoiseModel::default();
+        let fresh_nf = nm.node_factors(&mut Rng::new(31), 16);
+        let mut buf = vec![9.9; 64]; // dirty, oversized
+        nm.node_factors_into(&mut Rng::new(31), 16, &mut buf);
+        assert_eq!(buf.len(), 16);
+        for (a, b) in fresh_nf.iter().zip(&buf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        let fresh_w = partition_weights(&mut Rng::new(32), 24, 0.6);
+        let mut wbuf = vec![0.0; 3]; // dirty, undersized
+        partition_weights_into(&mut Rng::new(32), 24, 0.6, &mut wbuf);
+        assert_eq!(wbuf.len(), 24);
+        for (a, b) in fresh_w.iter().zip(&wbuf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // zero-skew and zero-reduce edges
+        partition_weights_into(&mut Rng::new(33), 8, 0.0, &mut wbuf);
+        assert_eq!(wbuf, vec![1.0; 8]);
+        partition_weights_into(&mut Rng::new(33), 0, 0.5, &mut wbuf);
+        assert!(wbuf.is_empty());
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! and utilization.
 
 use crate::config::params::HadoopConfig;
-use crate::hadoop::{simulate_job, ClusterSpec};
+use crate::hadoop::{simulate_runtime_in, ClusterSpec, SimArena};
 use crate::util::rng::Rng;
 use crate::workloads::{self, WorkloadSpec};
 
@@ -108,9 +108,11 @@ pub fn replay(
     let mut waits = Vec::with_capacity(trace.len());
     let mut runtimes = Vec::with_capacity(trace.len());
     let mut busy = 0.0;
+    // the replay only reads runtimes: lean engine, one reused arena
+    let mut arena = SimArena::new();
     for (i, j) in trace.iter().enumerate() {
         let start = clock.max(j.arrival_s);
-        let rt = simulate_job(cl, &j.workload, cfg, seed.wrapping_add(i as u64)).runtime_s;
+        let rt = simulate_runtime_in(&mut arena, cl, &j.workload, cfg, seed.wrapping_add(i as u64));
         waits.push(start - j.arrival_s);
         runtimes.push(rt);
         busy += rt;

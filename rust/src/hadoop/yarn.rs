@@ -4,6 +4,29 @@
 //! (mem, 1 vcore) until released. Map and reduce containers share the
 //! same pools, which is what produces the paper's "reducer slowstart
 //! squats on map containers" pathology.
+//!
+//! # The allocation index
+//!
+//! `allocate`'s fallback ("node with the most free memory") used to be a
+//! linear scan over every node on every allocation — O(nodes) per event
+//! in the simulator's hottest loop. It is now served by a lazily-rebuilt
+//! max-heap over (free mem, node id): every state change pushes a fresh
+//! entry, stale entries (whose recorded mem no longer matches the node)
+//! are discarded when they surface, and the heap is rebuilt from scratch
+//! once garbage accumulates. The chosen node is IDENTICAL to the old
+//! linear `max_by` — including its tie-breaking (equal free mem → the
+//! highest node index, because `max_by` keeps the last maximum) — which
+//! [`YarnState::allocate_linear`] preserves verbatim as the equivalence
+//! oracle (see `indexed_allocate_matches_linear_oracle_under_churn`).
+//!
+//! `release_epoch` counts releases; the simulator's saturation latch
+//! uses it to skip re-scanning a cluster that cannot have gained
+//! capacity since an allocation last failed (capacity only ever grows
+//! on release).
+
+use std::collections::BinaryHeap;
+
+use crate::util::ord::TotalF64;
 
 /// Mutable per-node resource state.
 #[derive(Clone, Debug, PartialEq)]
@@ -12,9 +35,36 @@ pub struct NodeState {
     pub vcores_free: u32,
 }
 
+/// One (free mem, node) observation in the allocation index. Derived
+/// ordering is lexicographic: free mem first ([`TotalF64`]'s total
+/// order), then node id — so the max-heap surfaces exactly the node the
+/// linear `max_by` scan would have picked, ties included (last max =
+/// highest node id).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct MemEntry {
+    mem_free_mb: TotalF64,
+    node: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct YarnState {
     pub nodes: Vec<NodeState>,
+    /// Lazy max-(free mem, node) heap. Invariant: every node always has
+    /// at least one entry matching its CURRENT free mem (pushed by the
+    /// last state change); entries that no longer match are stale and
+    /// discarded when popped.
+    index: BinaryHeap<MemEntry>,
+    /// Valid-but-vcore-blocked entries set aside during one fallback
+    /// search, re-pushed before it returns (kept here to reuse storage).
+    side: Vec<MemEntry>,
+    /// Monotone count of releases — the only operation that can grow
+    /// capacity. See [`YarnState::release_epoch`].
+    epoch: u64,
+    /// When false ([`YarnState::disable_index`]), `allocate_on`/`release`
+    /// skip index maintenance entirely — the baseline engine's honest
+    /// pre-index cost profile. An indexed `allocate` self-heals by
+    /// rebuilding before its fallback search.
+    index_enabled: bool,
 }
 
 /// A granted container.
@@ -26,14 +76,74 @@ pub struct Container {
 
 impl YarnState {
     pub fn new(nodes: usize, mem_per_node_mb: f64, vcores_per_node: u32) -> Self {
-        Self {
-            nodes: (0..nodes)
-                .map(|_| NodeState {
-                    mem_free_mb: mem_per_node_mb,
-                    vcores_free: vcores_per_node,
-                })
-                .collect(),
+        let mut y = Self {
+            nodes: Vec::with_capacity(nodes),
+            index: BinaryHeap::with_capacity(nodes * 2),
+            side: Vec::new(),
+            epoch: 0,
+            index_enabled: true,
+        };
+        y.reset(nodes, mem_per_node_mb, vcores_per_node);
+        y
+    }
+
+    /// Re-initialize to a fresh idle cluster, KEEPING the node table and
+    /// index allocations — the simulation arena calls this between runs.
+    /// Re-enables the allocation index.
+    pub fn reset(&mut self, nodes: usize, mem_per_node_mb: f64, vcores_per_node: u32) {
+        self.nodes.clear();
+        self.nodes.extend((0..nodes).map(|_| NodeState {
+            mem_free_mb: mem_per_node_mb,
+            vcores_free: vcores_per_node,
+        }));
+        self.epoch = 0;
+        self.index_enabled = true;
+        self.rebuild_index();
+    }
+
+    /// Switch OFF allocation-index maintenance: from here on the state
+    /// mutates exactly like the pre-index implementation (no heap pushes
+    /// on alloc/release, no rebuilds), so `simulate_runtime_baseline`
+    /// measures an honest "before". A later indexed [`YarnState::allocate`]
+    /// self-heals by rebuilding the index from current state.
+    pub fn disable_index(&mut self) {
+        self.index_enabled = false;
+        self.index.clear();
+    }
+
+    /// Discard every stale entry: one fresh entry per node.
+    fn rebuild_index(&mut self) {
+        self.index.clear();
+        for (node, n) in self.nodes.iter().enumerate() {
+            self.index.push(MemEntry {
+                mem_free_mb: TotalF64(n.mem_free_mb),
+                node,
+            });
         }
+    }
+
+    /// Record `node`'s new free mem in the index; rebuild once the lazy
+    /// garbage outweighs the live entries.
+    fn index_touch(&mut self, node: usize) {
+        if !self.index_enabled {
+            return;
+        }
+        if self.index.len() >= 64.max(self.nodes.len() * 8) {
+            self.rebuild_index();
+        } else {
+            self.index.push(MemEntry {
+                mem_free_mb: TotalF64(self.nodes[node].mem_free_mb),
+                node,
+            });
+        }
+    }
+
+    /// Count of `release` calls so far. Allocation strictly shrinks free
+    /// resources, so if an allocation of some size failed and this value
+    /// has not changed, the same allocation must still fail — the
+    /// simulator's `schedule_tasks` latches on it instead of re-scanning.
+    pub fn release_epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Can `node` host a container of `mem_mb`?
@@ -46,15 +156,62 @@ impl YarnState {
     /// must check `fits` — keeps the scheduler logic explicit).
     pub fn allocate_on(&mut self, node: usize, mem_mb: f64) -> Container {
         assert!(self.fits(node, mem_mb), "allocate_on({node}) without capacity");
-        let n = &mut self.nodes[node];
-        n.mem_free_mb -= mem_mb;
-        n.vcores_free -= 1;
+        {
+            let n = &mut self.nodes[node];
+            n.mem_free_mb -= mem_mb;
+            n.vcores_free -= 1;
+        }
+        self.index_touch(node);
         Container { node, mem_mb }
     }
 
     /// Allocate anywhere, preferring the nodes in `preferred` order, then
     /// the node with the most free memory (a crude capacity scheduler).
+    /// The fallback walks the allocation index — O(log nodes) amortized —
+    /// and picks the exact node [`YarnState::allocate_linear`] would.
     pub fn allocate(&mut self, mem_mb: f64, preferred: &[usize]) -> Option<Container> {
+        for &p in preferred {
+            if self.fits(p, mem_mb) {
+                return Some(self.allocate_on(p, mem_mb));
+            }
+        }
+        if !self.index_enabled {
+            // self-heal after a disable_index() phase: one rebuild makes
+            // every node's current state observable again
+            self.index_enabled = true;
+            self.rebuild_index();
+        }
+        let mut pick = None;
+        while let Some(&top) = self.index.peek() {
+            let cur = self.nodes[top.node].mem_free_mb;
+            if top.mem_free_mb.0.to_bits() != cur.to_bits() {
+                self.index.pop(); // stale observation
+                continue;
+            }
+            if top.mem_free_mb.0 + 1e-9 < mem_mb {
+                break; // max valid free mem is below the request: no node fits
+            }
+            if self.nodes[top.node].vcores_free >= 1 {
+                pick = Some(top.node);
+                break;
+            }
+            // valid entry, but the node is out of vcores: set it aside so
+            // the search can continue, restore it afterwards (the entry
+            // stays the node's live observation)
+            let e = self.index.pop().expect("peeked entry");
+            self.side.push(e);
+        }
+        while let Some(e) = self.side.pop() {
+            self.index.push(e);
+        }
+        pick.map(|n| self.allocate_on(n, mem_mb))
+    }
+
+    /// The pre-index fallback scan, preserved verbatim: max free mem over
+    /// all fitting nodes, ties to the HIGHEST node id (`max_by` keeps the
+    /// last maximum). Kept as the byte-identity oracle for `allocate` and
+    /// as the baseline engine's allocator (`simulate_runtime_baseline`).
+    pub fn allocate_linear(&mut self, mem_mb: f64, preferred: &[usize]) -> Option<Container> {
         for &p in preferred {
             if self.fits(p, mem_mb) {
                 return Some(self.allocate_on(p, mem_mb));
@@ -71,9 +228,13 @@ impl YarnState {
     }
 
     pub fn release(&mut self, c: Container) {
-        let n = &mut self.nodes[c.node];
-        n.mem_free_mb += c.mem_mb;
-        n.vcores_free += 1;
+        {
+            let n = &mut self.nodes[c.node];
+            n.mem_free_mb += c.mem_mb;
+            n.vcores_free += 1;
+        }
+        self.epoch += 1;
+        self.index_touch(c.node);
     }
 
     /// Total containers of `mem_mb` the cluster could host when idle.
@@ -84,11 +245,21 @@ impl YarnState {
             .sum()
     }
 
-    /// Invariant check used by property tests: no negative resources.
+    /// Invariant check used by property tests: no negative resources,
+    /// and (while the index is enabled) every node still has a live
+    /// observation in the allocation index.
     pub fn check_invariants(&self) -> Result<(), String> {
         for (i, n) in self.nodes.iter().enumerate() {
             if n.mem_free_mb < -1e-9 {
                 return Err(format!("node {i} mem_free {} < 0", n.mem_free_mb));
+            }
+            if self.index_enabled
+                && !self
+                    .index
+                    .iter()
+                    .any(|e| e.node == i && e.mem_free_mb.0.to_bits() == n.mem_free_mb.to_bits())
+            {
+                return Err(format!("node {i} has no live index entry"));
             }
         }
         Ok(())
@@ -153,5 +324,111 @@ mod tests {
             }
             y.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn indexed_allocate_matches_linear_oracle_under_churn() {
+        // drive two identical clusters through a mixed request stream —
+        // varying sizes, preference lists, exhaustion, vcore starvation —
+        // and demand the SAME container from the indexed and linear paths
+        // at every step (tie-breaking included)
+        let mut rng = crate::util::rng::Rng::new(0xA110C);
+        for (nodes, mem, vcores) in [(1usize, 2048.0, 2u32), (5, 4096.0, 3), (16, 8192.0, 8)] {
+            let mut fast = YarnState::new(nodes, mem, vcores);
+            let mut slow = YarnState::new(nodes, mem, vcores);
+            let mut live: Vec<Container> = Vec::new();
+            for step in 0..2000 {
+                if rng.f64() < 0.55 || live.is_empty() {
+                    let req = [512.0, 700.0, 1024.0, 1536.0][rng.below(4)];
+                    let pref: Vec<usize> =
+                        (0..rng.below(3)).map(|_| rng.below(nodes)).collect();
+                    let a = fast.allocate(req, &pref);
+                    let b = slow.allocate_linear(req, &pref);
+                    assert_eq!(a, b, "divergence at step {step} ({nodes} nodes)");
+                    if let Some(c) = a {
+                        live.push(c);
+                    }
+                } else {
+                    let c = live.swap_remove(rng.below(live.len()));
+                    fast.release(c);
+                    slow.release(c);
+                }
+                fast.check_invariants().unwrap();
+                assert_eq!(fast.nodes, slow.nodes, "state drift at step {step}");
+            }
+            // the 2000-op churn on a small cluster forces many lazy
+            // rebuilds — the index must stay bounded
+            assert!(
+                fast.index.len() <= 64.max(nodes * 8),
+                "index grew unbounded: {}",
+                fast.index.len()
+            );
+        }
+    }
+
+    #[test]
+    fn release_epoch_counts_only_releases() {
+        let mut y = YarnState::new(2, 4096.0, 4);
+        assert_eq!(y.release_epoch(), 0);
+        let c1 = y.allocate(1024.0, &[]).unwrap();
+        let c2 = y.allocate(1024.0, &[]).unwrap();
+        assert_eq!(y.release_epoch(), 0, "allocation must not bump the epoch");
+        y.release(c1);
+        assert_eq!(y.release_epoch(), 1);
+        y.release(c2);
+        assert_eq!(y.release_epoch(), 2);
+    }
+
+    #[test]
+    fn reset_returns_to_idle_and_can_resize() {
+        let mut y = YarnState::new(4, 4096.0, 4);
+        let _ = y.allocate(1024.0, &[]).unwrap();
+        y.reset(2, 2048.0, 2);
+        assert_eq!(y.nodes.len(), 2);
+        assert_eq!(y.capacity(1024.0), 4);
+        assert_eq!(y.release_epoch(), 0);
+        y.check_invariants().unwrap();
+        // growing again also works
+        y.reset(8, 8192.0, 8);
+        assert_eq!(y.nodes.len(), 8);
+        y.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn disabled_index_self_heals_on_indexed_allocate() {
+        // the baseline engine runs with index maintenance off; if an
+        // indexed allocate later hits the same state it must rebuild and
+        // pick exactly what the linear scan would
+        let mut y = YarnState::new(4, 4096.0, 2);
+        y.disable_index();
+        let a = y.allocate_linear(1024.0, &[]).unwrap(); // raw, unobserved
+        let b = y.allocate(700.0, &[]).unwrap(); // self-heals first
+
+        let mut oracle = YarnState::new(4, 4096.0, 2);
+        oracle.allocate_linear(1024.0, &[]).unwrap();
+        let expect = oracle.allocate_linear(700.0, &[]).unwrap();
+        assert_eq!(b, expect, "self-healed index diverged from linear");
+        y.check_invariants().unwrap();
+        y.release(a);
+        y.release(b);
+        assert_eq!(y.capacity(4096.0), 4);
+    }
+
+    #[test]
+    fn vcore_starved_nodes_are_set_aside_not_lost() {
+        // both nodes out of vcores (node 1 with the most free mem sits on
+        // top of the heap): the fallback walks past BOTH, fails, and must
+        // leave every live observation in place for later allocations
+        let mut y = YarnState::new(2, 4096.0, 1);
+        let a0 = y.allocate_on(0, 2048.0); // node 0: 2048 MB free, 0 vcores
+        let a1 = y.allocate_on(1, 512.0); // node 1: 3584 MB free, 0 vcores
+        assert!(y.allocate(1024.0, &[]).is_none(), "all vcores busy");
+        y.check_invariants().unwrap(); // side-buffer entries restored
+        y.release(a1);
+        let c = y.allocate(1024.0, &[]).unwrap();
+        assert_eq!(c.node, 1, "node 1 must come back once its vcore frees");
+        y.release(a0);
+        y.release(c);
+        assert_eq!(y.capacity(4096.0), 2);
     }
 }

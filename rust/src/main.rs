@@ -73,6 +73,16 @@ fn open_cluster(project: &Project) -> SimCluster {
     SimCluster::new(ClusterSpec::from_env(&project.env))
 }
 
+/// Surface non-fatal spec diagnostics (the params.spec typo guard) on
+/// stderr before a tuning run starts.
+fn print_spec_warnings(project: &Project) {
+    if let Some(spec) = &project.spec {
+        for w in &spec.warnings {
+            eprintln!("warning: {w}");
+        }
+    }
+}
+
 fn run(args: &Args) -> Result<(), String> {
     match args.tool.as_str() {
         "" | "help" => {
@@ -130,6 +140,7 @@ fn run(args: &Args) -> Result<(), String> {
         "tuning" => {
             let dir = project_dir(args)?;
             let project = Project::load(&dir)?;
+            print_spec_warnings(&project);
             let mut cluster = open_cluster(&project);
             println!("{}", cluster.describe());
             let prescreen = args.opt_or("prescreen", "off");
@@ -173,6 +184,7 @@ fn run(args: &Args) -> Result<(), String> {
         "workflow" => {
             let dir = project_dir(args)?;
             let project = Project::load(&dir)?;
+            print_spec_warnings(&project);
             let mut jobs = catla::catla::workflow::from_project(&project)?;
             let mut cluster = open_cluster(&project);
             println!("{}", cluster.describe());
@@ -234,6 +246,7 @@ fn run(args: &Args) -> Result<(), String> {
         "tuning-group" => {
             let dir = project_dir(args)?;
             let project = Project::load(&dir)?;
+            print_spec_warnings(&project);
             let mut cluster = open_cluster(&project);
             println!("{}", cluster.describe());
             let out = catla::catla::multi_job::tune_group(&mut cluster, &project)?;
@@ -249,6 +262,7 @@ fn run(args: &Args) -> Result<(), String> {
         "resume" => {
             let dir = project_dir(args)?;
             let project = Project::load(&dir)?;
+            print_spec_warnings(&project);
             let default_budget = project
                 .tuning
                 .as_ref()

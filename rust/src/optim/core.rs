@@ -43,7 +43,7 @@
 //! `rust/tests/ask_tell.rs`).
 
 use crate::config::params::HadoopConfig;
-use crate::hadoop::{simulate_runtime, SimCluster};
+use crate::hadoop::{simulate_runtime, simulate_runtime_in, SimArena, SimCluster};
 use crate::optim::result::{EvalRecord, Recorder, TuningOutcome};
 use crate::optim::space::ParamSpace;
 use crate::optim::surrogate::CandidateScorer;
@@ -162,12 +162,15 @@ impl<F: FnMut(&HadoopConfig) -> f64> BatchObjective for FnObjective<F> {
 /// thread or many — determinism is independent of scheduling.
 ///
 /// The evaluation hot loop is allocation-free per run: workers borrow the
-/// configs in place through [`ThreadPool::scoped_run`] (no per-item
+/// configs in place through [`ThreadPool::scoped_run_with`] (no per-item
 /// `HadoopConfig`/`Arc` clones), simulate through the runtime-only
-/// [`simulate_runtime`] path (no task-record materialization), and the
-/// pool itself is created once and reused across every `eval_batch` of
-/// the run — sequential DFO methods ask thousands of singletons, so
-/// per-call thread spawning used to dominate.
+/// [`simulate_runtime_in`] path (no task-record materialization) inside a
+/// per-worker [`SimArena`] that is reset — not reallocated — between
+/// runs, and the pool itself is created once and reused across every
+/// `eval_batch` of the run. Sequential DFO methods ask thousands of
+/// singletons: those go through the serial path with the same warm
+/// arena (slot 0), so a 10^4-eval run does zero steady-state allocation
+/// inside the simulator.
 pub struct ClusterObjective<'a> {
     cluster: &'a mut SimCluster,
     workload: WorkloadSpec,
@@ -176,6 +179,13 @@ pub struct ClusterObjective<'a> {
     /// Persistent worker pool, created lazily on the first batch that
     /// wants parallelism and reused for the rest of the run.
     pool: Option<ThreadPool>,
+    /// Per-worker simulation arenas, grown lazily to the worker count
+    /// and reused for the whole run; slot 0 doubles as the serial-path
+    /// arena.
+    arenas: Vec<SimArena>,
+    /// When false, every run simulates in fresh buffers — the identity
+    /// baseline the arena path is regression-tested against.
+    reuse_arenas: bool,
 }
 
 impl<'a> ClusterObjective<'a> {
@@ -190,6 +200,8 @@ impl<'a> ClusterObjective<'a> {
             repeats: repeats.max(1),
             threads: default_threads(),
             pool: None,
+            arenas: Vec::new(),
+            reuse_arenas: true,
         }
     }
 
@@ -206,6 +218,16 @@ impl<'a> ClusterObjective<'a> {
         self.pool = None;
         self
     }
+
+    /// Disable arena reuse: every simulation allocates fresh buffers.
+    /// Byte-identical to the arena path (regression-tested across all
+    /// eight methods in `rust/tests/ask_tell.rs`) — kept for those tests
+    /// and the `sim_core` bench's arena-on/off comparison.
+    pub fn without_arena(mut self) -> ClusterObjective<'a> {
+        self.reuse_arenas = false;
+        self.arenas = Vec::new();
+        self
+    }
 }
 
 impl BatchObjective for ClusterObjective<'_> {
@@ -214,21 +236,33 @@ impl BatchObjective for ClusterObjective<'_> {
             return Ok(Vec::new());
         }
         let repeats = self.repeats;
+        let reuse = self.reuse_arenas;
         let runs = cfgs.len() * repeats;
         let first_seed = self.cluster.reserve_seeds(runs as u64);
         let spec = &self.cluster.spec;
         let wl = &self.workload;
-        let run_one = |i: usize| {
-            simulate_runtime(spec, wl, &cfgs[i / repeats], first_seed.wrapping_add(i as u64))
+        let run_one = |arena: &mut SimArena, i: usize| {
+            let cfg = &cfgs[i / repeats];
+            let seed = first_seed.wrapping_add(i as u64);
+            if reuse {
+                simulate_runtime_in(arena, spec, wl, cfg, seed)
+            } else {
+                simulate_runtime(spec, wl, cfg, seed)
+            }
         };
         let workers = self.threads.min(runs);
+        let arenas = &mut self.arenas;
         let runtimes: Vec<f64> = if workers <= 1 {
-            (0..runs).map(run_one).collect()
+            if arenas.is_empty() {
+                arenas.push(SimArena::new());
+            }
+            let arena = &mut arenas[0];
+            (0..runs).map(|i| run_one(&mut *arena, i)).collect()
         } else {
             let threads = self.threads;
             self.pool
                 .get_or_insert_with(|| ThreadPool::new(threads))
-                .scoped_run(runs, workers, run_one)
+                .scoped_run_with(runs, workers, arenas, SimArena::new, run_one)
         };
         Ok(runtimes
             .chunks(repeats)
@@ -577,6 +611,39 @@ mod tests {
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.to_bits(), b.to_bits(), "batched eval not deterministic");
+        }
+    }
+
+    #[test]
+    fn cluster_objective_arena_matches_fresh_allocation_bitwise() {
+        let wl = wordcount(2048.0);
+        let sp = space();
+        let cfgs: Vec<HadoopConfig> = (0..9)
+            .map(|i| sp.decode(&vec![i as f64 / 9.0; sp.dims()]))
+            .collect();
+
+        // batched: per-worker arenas vs fresh buffers every run
+        let mut c1 = SimCluster::new(ClusterSpec::default());
+        let arena = ClusterObjective::new(&mut c1, &wl, 2).eval_batch(&cfgs).unwrap();
+        let mut c2 = SimCluster::new(ClusterSpec::default());
+        let fresh = ClusterObjective::new(&mut c2, &wl, 2)
+            .without_arena()
+            .eval_batch(&cfgs)
+            .unwrap();
+        for (a, b) in arena.iter().zip(&fresh) {
+            assert_eq!(a.to_bits(), b.to_bits(), "arena reuse changed a runtime");
+        }
+
+        // DFO shape: a singleton-ask stream through ONE objective, the
+        // slot-0 arena getting dirtier every call
+        let mut c3 = SimCluster::new(ClusterSpec::default());
+        let mut warm = ClusterObjective::new(&mut c3, &wl, 2).serial();
+        let mut c4 = SimCluster::new(ClusterSpec::default());
+        let mut cold = ClusterObjective::new(&mut c4, &wl, 2).serial().without_arena();
+        for cfg in &cfgs {
+            let a = warm.eval_batch(std::slice::from_ref(cfg)).unwrap()[0];
+            let b = cold.eval_batch(std::slice::from_ref(cfg)).unwrap()[0];
+            assert_eq!(a.to_bits(), b.to_bits(), "singleton arena path diverged");
         }
     }
 

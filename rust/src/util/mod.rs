@@ -8,6 +8,7 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod linalg;
+pub mod ord;
 pub mod pool;
 pub mod quickcheck;
 pub mod rng;

@@ -1,0 +1,52 @@
+//! Total-order adapters for floats.
+
+use std::cmp::Ordering;
+
+/// `f64` ordered by IEEE-754 totalOrder ([`f64::total_cmp`]): a real
+/// `Ord` for heap/tree keys. Keys equal under this order are
+/// BIT-IDENTICAL (totalOrder distinguishes -0.0 from 0.0 and NaN
+/// payloads), which is what lets heap-based structures reproduce
+/// sort-based selections exactly — the simulator's running straggler
+/// median and the YARN allocation index both lean on that guarantee.
+#[derive(Clone, Copy, Debug)]
+pub struct TotalF64(pub f64);
+
+impl PartialEq for TotalF64 {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.total_cmp(&other.0) == Ordering::Equal
+    }
+}
+impl Eq for TotalF64 {}
+impl Ord for TotalF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+impl PartialOrd for TotalF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_order_sorts_like_total_cmp() {
+        let mut xs = [3.0, -0.0, 0.0, f64::NAN, -1.5, f64::INFINITY, 3.0];
+        let mut by_wrapper: Vec<TotalF64> = xs.iter().copied().map(TotalF64).collect();
+        by_wrapper.sort();
+        xs.sort_by(|a, b| a.total_cmp(b));
+        for (w, x) in by_wrapper.iter().zip(&xs) {
+            assert_eq!(w.0.to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn equality_means_bit_identity() {
+        assert_ne!(TotalF64(-0.0), TotalF64(0.0));
+        assert_eq!(TotalF64(2.5), TotalF64(2.5));
+        assert!(TotalF64(-0.0) < TotalF64(0.0));
+    }
+}

@@ -86,29 +86,63 @@ impl ThreadPool {
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
+        // Vec<()> is zero-sized storage — this adds no allocation
+        self.scoped_run_with(n, max_workers, &mut Vec::new(), || (), |_: &mut (), i| f(i))
+    }
+
+    /// [`ThreadPool::scoped_run`] with per-worker SCRATCH state: each
+    /// participating worker gets exclusive `&mut` access to one slot of
+    /// `scratch` for the whole call, and the slots live in the caller —
+    /// so expensive worker-local state (e.g. a simulation arena) is
+    /// created once (`init`, called only to grow `scratch` up to the
+    /// worker count) and reused across every subsequent call. Slot 0 is
+    /// also the slot the single-worker fast path uses, so serial and
+    /// parallel callers share warm state.
+    pub fn scoped_run_with<S, R, I, F>(
+        &self,
+        n: usize,
+        max_workers: usize,
+        scratch: &mut Vec<S>,
+        mut init: I,
+        f: F,
+    ) -> Vec<R>
+    where
+        S: Send,
+        R: Send,
+        I: FnMut() -> S,
+        F: Fn(&mut S, usize) -> R + Sync,
+    {
         if n == 0 {
             return Vec::new();
         }
         let workers = self.size().min(max_workers.max(1)).min(n);
+        while scratch.len() < workers {
+            scratch.push(init());
+        }
         if workers == 1 {
-            return (0..n).map(f).collect();
+            let s = &mut scratch[0];
+            return (0..n).map(|i| f(&mut *s, i)).collect();
         }
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let next = AtomicUsize::new(0);
         let (done_tx, done_rx) = mpsc::channel::<thread::Result<()>>();
         let slots_ptr = SendPtr(slots.as_mut_ptr());
-        for _ in 0..workers {
+        let scratch_ptr = SendPtr(scratch.as_mut_ptr());
+        for w in 0..workers {
             let done_tx = done_tx.clone();
             let f = &f;
             let next = &next;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // job w is spawned exactly once, so slot w is this
+                    // job's exclusive &mut for the whole call
+                    let s = unsafe { &mut *scratch_ptr.0.add(w) };
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        let v = f(i);
+                        let v = f(s, i);
                         // each index is claimed by exactly one worker via
                         // `next`, so this write never aliases
                         unsafe { *slots_ptr.0.add(i) = Some(v) };
@@ -119,8 +153,9 @@ impl ThreadPool {
             // SAFETY (lifetime erasure): the pool's job type is
             // `'static`, but every borrow the job holds outlives it —
             // this function blocks on exactly `workers` completion
-            // messages below before reading `slots` or returning, so no
-            // job can run (or exist) past the borrowed scope.
+            // messages below before reading `slots`/`scratch` or
+            // returning, so no job can run (or exist) past the borrowed
+            // scope.
             let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
             self.execute(job);
         }
@@ -283,6 +318,47 @@ mod tests {
         assert!(r.is_err(), "worker panic not propagated");
         // the workers caught the panic — the pool still works afterwards
         assert_eq!(pool.scoped_run(4, 4, |i| i * 2), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn scoped_run_with_threads_per_worker_scratch() {
+        let pool = ThreadPool::new(4);
+        let mut inits = 0usize;
+        let mut scratch: Vec<Vec<usize>> = Vec::new();
+        // each worker logs the indices it processed into ITS slot
+        let out = pool.scoped_run_with(
+            64,
+            4,
+            &mut scratch,
+            || {
+                inits += 1;
+                Vec::new()
+            },
+            |log: &mut Vec<usize>, i| {
+                log.push(i);
+                i * 2
+            },
+        );
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(inits, 4, "one scratch slot per participating worker");
+        assert_eq!(scratch.len(), 4);
+        // every index was processed by exactly one worker
+        let mut all: Vec<usize> = scratch.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
+
+        // a second call REUSES the scratch (init not called again) and
+        // keeps appending to the same worker-local state
+        let before: usize = scratch.iter().map(|s| s.len()).sum();
+        pool.scoped_run_with(10, 4, &mut scratch, || unreachable!("scratch is warm"), |log, i| {
+            log.push(i);
+        });
+        let after: usize = scratch.iter().map(|s| s.len()).sum();
+        assert_eq!(after, before + 10);
+
+        // the single-worker fast path shares slot 0
+        pool.scoped_run_with(3, 1, &mut scratch, Vec::new, |log, i| log.push(100 + i));
+        assert!(scratch[0].ends_with(&[100, 101, 102]));
     }
 
     #[test]

@@ -29,16 +29,28 @@ fn space() -> ParamSpace {
 }
 
 fn drive(name: &str, serial: bool) -> TuningOutcome {
-    drive_chunked(name, serial, None)
+    drive_custom(name, serial, None, false)
 }
 
 fn drive_chunked(name: &str, serial: bool, chunk: Option<usize>) -> TuningOutcome {
+    drive_custom(name, serial, chunk, false)
+}
+
+fn drive_custom(
+    name: &str,
+    serial: bool,
+    chunk: Option<usize>,
+    fresh_buffers: bool,
+) -> TuningOutcome {
     let wl = wordcount(2048.0);
     let sp = space();
     let mut cluster = SimCluster::new(ClusterSpec::default());
     let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
     if serial {
         obj = obj.serial();
+    }
+    if fresh_buffers {
+        obj = obj.without_arena();
     }
     let mut opt = Method::from_name(name, SEED).unwrap().build();
     let mut driver = Driver::new(BUDGET);
@@ -175,6 +187,74 @@ fn batched_and_serial_evaluation_agree_bitwise() {
             "{name}: batched objective evaluation changed the outcome"
         );
     }
+}
+
+#[test]
+fn arena_backed_and_fresh_allocation_objectives_agree_bitwise() {
+    // the default ClusterObjective reuses per-worker SimArenas across
+    // every eval of the run (reset-not-reallocate); the whole
+    // TuningOutcome — every value, unit point and decoded config —
+    // must match the fresh-buffers path byte for byte, for ALL eight
+    // methods, in both the parallel and the serial (DFO-singleton
+    // slot-0 arena) paths
+    for name in ALL_METHODS {
+        let arena = drive_custom(name, false, None, false);
+        let fresh = drive_custom(name, false, None, true);
+        assert_eq!(
+            fingerprint(&arena),
+            fingerprint(&fresh),
+            "{name}: arena reuse changed the outcome"
+        );
+        let arena_serial = drive_custom(name, true, None, false);
+        let fresh_serial = drive_custom(name, true, None, true);
+        assert_eq!(
+            fingerprint(&arena_serial),
+            fingerprint(&fresh_serial),
+            "{name}: serial arena reuse changed the outcome"
+        );
+    }
+}
+
+#[test]
+fn cluster_api_arena_stays_clean_across_mixed_workloads() {
+    // SimCluster simulates every submission inside ONE owned arena; a
+    // stream of different workload shapes through the Cluster API must
+    // produce exactly what isolated fresh clusters (same seeds) produce
+    use catla::hadoop::{Cluster, JobStatus, JobSubmission};
+    let submit = |c: &mut SimCluster, wl: catla::workloads::WorkloadSpec| -> f64 {
+        let id = c
+            .submit_job(JobSubmission {
+                name: "mix".into(),
+                workload: wl,
+                config: sp_cfg(),
+            })
+            .unwrap();
+        loop {
+            if let JobStatus::Succeeded { runtime_s } = c.poll(&id).unwrap() {
+                return runtime_s;
+            }
+        }
+    };
+    fn sp_cfg() -> catla::config::params::HadoopConfig {
+        catla::config::params::HadoopConfig::default()
+    }
+    let mut mixed = SimCluster::new(ClusterSpec::default());
+    let a = submit(&mut mixed, wordcount(4096.0));
+    let b = submit(&mut mixed, catla::workloads::terasort(1024.0));
+    let c = submit(&mut mixed, wordcount(4096.0));
+
+    // isolated reference clusters advanced to the same per-job seeds
+    let mut r1 = SimCluster::new(ClusterSpec::default());
+    let ra = submit(&mut r1, wordcount(4096.0));
+    let mut r2 = SimCluster::new(ClusterSpec::default());
+    r2.reserve_seeds(1);
+    let rb = submit(&mut r2, catla::workloads::terasort(1024.0));
+    let mut r3 = SimCluster::new(ClusterSpec::default());
+    r3.reserve_seeds(2);
+    let rc = submit(&mut r3, wordcount(4096.0));
+    assert_eq!(a.to_bits(), ra.to_bits(), "first job diverged");
+    assert_eq!(b.to_bits(), rb.to_bits(), "dirty-arena terasort diverged");
+    assert_eq!(c.to_bits(), rc.to_bits(), "re-dirtied wordcount diverged");
 }
 
 #[test]

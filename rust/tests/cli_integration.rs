@@ -109,6 +109,34 @@ fn tuning_tool_writes_log_and_chart() {
 }
 
 #[test]
+fn tuning_tool_prints_spec_typo_warning() {
+    let dir = tmp("typo");
+    let dir_s = dir.to_str().unwrap();
+    run(&["template", "--dir", dir_s, "--kind", "tuning", "--input-mb", "512"]);
+    // memory.mbb: edit distance 1 from the builtin's memory.mb suffix —
+    // the run proceeds (declaring new knobs is the feature) but the CLI
+    // must surface the typo guard's warning on stderr
+    std::fs::write(
+        dir.join("params.spec"),
+        "param mapreduce.job.reduces int 2 32\nparam memory.mbb int 512 4096\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=random\nbudget=6\nrepeats=1\nseed=3\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["tuning", "--dir", dir_s]);
+    assert!(ok, "tuning failed: {stderr}");
+    assert!(stdout.contains("tuning finished"));
+    assert!(
+        stderr.contains("memory.mbb") && stderr.contains("mapreduce.map.memory.mb"),
+        "typo warning missing from stderr: {stderr}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn pjrt_prescreen_tuning_via_cli() {
     // exercises the full three-layer stack from the CLI: artifacts must
     // exist (make artifacts) for this to pass
