@@ -90,7 +90,23 @@ impl History {
         spec: &TuningSpec,
         outcome: &TuningOutcome,
     ) -> Result<PathBuf, String> {
-        let path = self.dir.join(TUNING_CSV);
+        self.write_tuning_log_to(TUNING_CSV, spec, outcome)
+    }
+
+    /// Write a tuning log under a caller-chosen file name — sharded
+    /// sweeps (`catla sweep --shard k/n`) write one log per shard so
+    /// independent processes never clobber each other's history. Column
+    /// layout is identical to [`History::write_tuning_log`]; for scoped
+    /// merged spaces the per-workload dims appear as their
+    /// `<param>@<workload>` aliases, which is what lets resume-style
+    /// replay reconstruct the exact merged space from the log alone.
+    pub fn write_tuning_log_to(
+        &self,
+        file_name: &str,
+        spec: &TuningSpec,
+        outcome: &TuningOutcome,
+    ) -> Result<PathBuf, String> {
+        let path = self.dir.join(file_name);
         let header = Self::tuning_header(spec);
         let mut csv = Csv {
             header: header.clone(),

@@ -21,6 +21,6 @@ pub mod workflow;
 pub use history::History;
 pub use metrics::JobMetrics;
 pub use optimizer_runner::{OptimizerRunner, TuningSettings};
-pub use project::{create_template, Project, ProjectKind};
+pub use project::{create_scoped_template, create_template, Project, ProjectKind};
 pub use project_runner::ProjectRunner;
 pub use task_runner::TaskRunner;

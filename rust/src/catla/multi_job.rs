@@ -2,11 +2,18 @@
 //! configuration that minimizes the aggregate running time of a whole job
 //! group — the realistic shared-cluster scenario where `mapred-site.xml`
 //! is set once for a mixed workload, not per job.
+//!
+//! With `workload { ... }` blocks in `params.spec` the "one
+//! configuration" generalizes to one *merged-space point*: shared dims
+//! are still set once for every job, while each workload's scoped dims
+//! apply only to its own jobs ([`MergedSpace::job_config`] does the
+//! routing). Flat specs behave exactly as before.
 
 use crate::catla::history::History;
 use crate::catla::project::Project;
 use crate::catla::project_runner::{parse_job_line, GroupJob};
 use crate::config::params::HadoopConfig;
+use crate::config::scope::MergedSpace;
 use crate::hadoop::{JobSubmission, SimCluster};
 use crate::optim::core::{Driver, FnObjective};
 use crate::optim::{Method, ParamSpace, TuningOutcome};
@@ -37,11 +44,14 @@ impl GroupMetric {
     }
 }
 
-/// Objective over a job group: run every job with the candidate config.
+/// Objective over a job group: run every job with its projection of the
+/// candidate merged configuration (for flat specs the projection is the
+/// identity — every job gets the candidate itself, as before).
 pub fn group_objective<'a>(
     cluster: &'a mut SimCluster,
     jobs: &'a [GroupJob],
     metric: GroupMetric,
+    merged: &'a MergedSpace,
 ) -> impl FnMut(&HadoopConfig) -> f64 + 'a {
     move |cfg: &HadoopConfig| {
         let runtimes: Vec<f64> = jobs
@@ -51,7 +61,7 @@ pub fn group_objective<'a>(
                     .run_job(&JobSubmission {
                         name: j.name.clone(),
                         workload: j.workload.clone(),
-                        config: cfg.clone(),
+                        config: merged.job_config(cfg, &j.workload.name),
                     })
                     .runtime_s
             })
@@ -60,9 +70,12 @@ pub fn group_objective<'a>(
     }
 }
 
-/// Tune one shared configuration for a project's whole `jobs.list`.
-/// Requires both `jobs.list` and `params.spec` in the project folder;
-/// `tuning.properties` may set `group.metric=sum|max`.
+/// Tune one shared configuration (one merged-space point, for scoped
+/// specs) for a project's whole `jobs.list`. Requires both `jobs.list`
+/// and `params.spec` in the project folder; `tuning.properties` may set
+/// `group.metric=sum|max`. The tuning log / summary are written against
+/// the merged spec, so scoped dims appear as `<param>@<workload>`
+/// columns and resume-style reconstruction can rebuild the exact space.
 pub fn tune_group(
     cluster: &mut SimCluster,
     project: &Project,
@@ -70,8 +83,8 @@ pub fn tune_group(
     if project.jobs.is_empty() {
         return Err("multi-job tuning needs a jobs.list".into());
     }
-    let spec = project
-        .spec
+    let scoped = project
+        .scoped
         .clone()
         .ok_or("multi-job tuning needs params.spec")?;
     let jobs: Vec<GroupJob> = project
@@ -79,6 +92,8 @@ pub fn tune_group(
         .iter()
         .map(|l| parse_job_line(l))
         .collect::<Result<_, _>>()?;
+    let names: Vec<&str> = jobs.iter().map(|j| j.workload.name.as_str()).collect();
+    let merged = scoped.merge(&names)?;
 
     let (optimizer, budget, seed, metric) = match &project.tuning {
         Some(t) => (
@@ -90,17 +105,17 @@ pub fn tune_group(
         None => ("bobyqa".to_string(), 40, 7, GroupMetric::Sum),
     };
 
-    let space = ParamSpace::new(spec.clone(), project.base_config()?);
+    let space = ParamSpace::new(merged.spec.clone(), project.base_config()?);
     let mut opt = Method::from_name(&optimizer, seed)?.build();
     let mut outcome = {
-        let mut obj = FnObjective(group_objective(cluster, &jobs, metric));
+        let mut obj = FnObjective(group_objective(cluster, &jobs, metric, &merged));
         Driver::new(budget).run(opt.as_mut(), &space, &mut obj)?
     };
     outcome.optimizer = format!("{}[group-{:?}x{}]", outcome.optimizer, metric, jobs.len());
 
     let history = History::open(&project.dir).map_err(|e| e.to_string())?;
-    history.write_tuning_log(&spec, &outcome)?;
-    history.append_summary(&spec, &outcome)?;
+    history.write_tuning_log(&merged.spec, &outcome)?;
+    history.append_summary(&merged.spec, &outcome)?;
     Ok(outcome)
 }
 
@@ -154,9 +169,11 @@ mod tests {
             .iter()
             .map(|l| parse_job_line(l).unwrap())
             .collect();
+        let names: Vec<&str> = jobs.iter().map(|j| j.workload.name.as_str()).collect();
+        let merged = project.scoped.clone().unwrap().merge(&names).unwrap();
         let mut verify = SimCluster::new(ClusterSpec::default());
         let avg = |cluster: &mut SimCluster, cfg: &HadoopConfig| -> f64 {
-            let mut obj = group_objective(cluster, &jobs, GroupMetric::Sum);
+            let mut obj = group_objective(cluster, &jobs, GroupMetric::Sum, &merged);
             (0..5).map(|_| obj(cfg)).sum::<f64>() / 5.0
         };
         let tuned = avg(&mut verify, &out.best_config);
@@ -172,6 +189,48 @@ mod tests {
         let mut cluster = SimCluster::new(ClusterSpec::default());
         let out = tune_group(&mut cluster, &project).unwrap();
         assert!(out.optimizer.contains("group-Max"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scoped_group_tunes_the_merged_space_and_logs_alias_columns() {
+        let dir = tmp("scoped");
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+        std::fs::write(
+            dir.join("jobs.list"),
+            "wc wordcount 1024\nsort terasort 1024\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("params.spec"),
+            "param mapreduce.job.reduces int 2 32\n\
+             workload terasort {\n\
+               param mapreduce.reduce.shuffle.parallelcopies int 1 64\n\
+             }\n\
+             workload wordcount {\n\
+               param mapreduce.map.memory.mb int 512 4096\n\
+             }\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=8\nseed=5\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = tune_group(&mut cluster, &project).unwrap();
+        assert_eq!(out.best_config.len(), crate::config::params::N_AOT_PARAMS + 2);
+        let csv = crate::catla::history::History::open(&dir)
+            .unwrap()
+            .load_tuning_log()
+            .unwrap();
+        assert!(csv
+            .header
+            .contains(&"mapreduce.reduce.shuffle.parallelcopies@terasort".to_string()));
+        assert!(csv
+            .header
+            .contains(&"mapreduce.map.memory.mb@wordcount".to_string()));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

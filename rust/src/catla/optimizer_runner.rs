@@ -11,6 +11,8 @@
 
 use crate::catla::history::History;
 use crate::catla::project::Project;
+use crate::config::params::N_AOT_PARAMS;
+use crate::config::spec::TuningSpec;
 use crate::hadoop::SimCluster;
 use crate::optim::core::{ClusterObjective, Driver, EarlyStop, DEFAULT_BATCH_CHUNK};
 use crate::optim::surrogate::{CandidateScorer, Prescreen};
@@ -94,6 +96,18 @@ impl TuningSettings {
     }
 }
 
+/// Tuned parameters the analytic cost model is blind to: spec-declared
+/// dims beyond the stable [`N_AOT_PARAMS`]-slot AOT feature row
+/// (`HadoopConfig::to_f32_row` exports exactly the builtin prefix, so
+/// the surrogate's predictions cannot react to anything after it).
+pub fn cost_model_blind_params(spec: &TuningSpec) -> Vec<&str> {
+    spec.ranges
+        .iter()
+        .filter(|r| r.index >= N_AOT_PARAMS)
+        .map(|r| r.name())
+        .collect()
+}
+
 /// Outcome + where the logs went.
 #[derive(Debug)]
 pub struct TuningRunOutcome {
@@ -131,6 +145,26 @@ impl<'a> OptimizerRunner<'a> {
             .clone()
             .ok_or("tuning project missing params.spec")?;
         let workload = project.workload()?;
+        if spec.dims() == 0 {
+            return Err(format!(
+                "params.spec declares no parameters for workload {:?} \
+                 (only workload blocks for other suites)",
+                workload.name
+            ));
+        }
+        if settings.prescreen {
+            // satellite guard: the analytic model consumes only the AOT
+            // prefix — dims beyond it silently never move a prediction
+            let blind = cost_model_blind_params(&spec);
+            if !blind.is_empty() {
+                eprintln!(
+                    "note: cost-model prescreen ignores spec-declared parameter(s) {} — \
+                     beyond the {N_AOT_PARAMS}-slot AOT feature row, they never affect \
+                     surrogate predictions (see ROADMAP \"Cost-model coverage\")",
+                    blind.join(", ")
+                );
+            }
+        }
         let base = project.base_config()?;
         let space = ParamSpace::new(spec.clone(), base);
 
@@ -269,6 +303,21 @@ mod tests {
             .unwrap();
         assert!(out.outcome.optimizer.contains("prescreen"));
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cost_model_blind_params_names_exactly_the_post_prefix_dims() {
+        let spec = crate::config::spec::TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024\n\
+             param x.shuffle.buffer.kb int 32 4096\n\
+             param mapreduce.map.output.compress.codec cat none,snappy,lz4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cost_model_blind_params(&spec),
+            vec!["x.shuffle.buffer.kb", "mapreduce.map.output.compress.codec"]
+        );
+        assert!(cost_model_blind_params(&crate::config::spec::TuningSpec::fig3()).is_empty());
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 
 use crate::config::env::HadoopEnv;
 use crate::config::params::HadoopConfig;
+use crate::config::scope::ScopedSpec;
 use crate::config::spec::TuningSpec;
 use crate::workloads::{self, WorkloadSpec};
 
@@ -83,7 +84,14 @@ pub struct Project {
     pub job: Properties,
     /// `tuning.properties`, for tuning projects.
     pub tuning: Option<Properties>,
-    /// `params.spec`, for tuning projects.
+    /// `params.spec` as parsed: the shared (global) spec plus any
+    /// `workload <name> { ... }` blocks. Multi-job/workflow tuning
+    /// merges the blocks of the workloads it runs.
+    pub scoped: Option<ScopedSpec>,
+    /// The *effective* flat spec for this project's own job: the global
+    /// spec with the job's workload block applied over it (identical to
+    /// the file for flat specs). Single-job `tuning`/`resume` runs use
+    /// this.
     pub spec: Option<TuningSpec>,
     /// `jobs.list` lines, for project folders.
     pub jobs: Vec<String>,
@@ -117,11 +125,15 @@ impl Project {
         } else {
             None
         };
-        let spec = if spec_path.is_file() {
-            Some(TuningSpec::load(&spec_path)?)
+        let scoped = if spec_path.is_file() {
+            Some(ScopedSpec::load(&spec_path)?)
         } else {
             None
         };
+        let spec = scoped.as_ref().map(|s| match job.get("workload") {
+            Some(w) => s.scope(w).clone(),
+            None => s.global.clone(),
+        });
         if kind == ProjectKind::Tuning && spec.is_none() {
             return Err("tuning project missing params.spec".into());
         }
@@ -141,6 +153,7 @@ impl Project {
             env,
             job,
             tuning,
+            scoped,
             spec,
             jobs,
         })
@@ -245,6 +258,45 @@ pub fn create_template(
     Ok(())
 }
 
+/// Materialize a multi-workload tuning template: a `jobs.list` with one
+/// job per workload and a scoped `params.spec` assembled from the
+/// suites' attached tuning blocks (shuffle-heavy terasort gets codec +
+/// parallelcopies, CPU-bound wordcount memory + slowstart, …) — the
+/// starting point for `tuning-group` / `workflow --tune` over a merged
+/// space. CLI: `catla template --kind tuning --workloads a,b,...`.
+pub fn create_scoped_template(
+    dir: &Path,
+    workload_names: &[&str],
+    input_mb: f64,
+) -> Result<(), String> {
+    if workload_names.is_empty() {
+        return Err("scoped template needs at least one workload".into());
+    }
+    let workloads: Vec<WorkloadSpec> = workload_names
+        .iter()
+        .map(|w| {
+            workloads::by_name(w, input_mb).ok_or_else(|| format!("unknown workload {w:?}"))
+        })
+        .collect::<Result<_, _>>()?;
+    create_template(dir, ProjectKind::Tuning, &workloads[0].name, input_mb)?;
+    let refs: Vec<&WorkloadSpec> = workloads.iter().collect();
+    std::fs::write(
+        dir.join("params.spec"),
+        workloads::suggested_scoped_spec(&refs),
+    )
+    .map_err(|e| e.to_string())?;
+    let jobs: String = workloads
+        .iter()
+        .map(|w| format!("{0}-job {0} {input_mb}\n", w.name))
+        .collect();
+    std::fs::write(
+        dir.join("jobs.list"),
+        format!("# one job per line: <name> <workload> <input_mb> [conf.param=value ...]\n{jobs}"),
+    )
+    .map_err(|e| e.to_string())?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -330,6 +382,57 @@ mod tests {
             .unwrap();
         assert_eq!(cfg.get_category(codec), Some("snappy"));
         cfg.validate().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scoped_template_roundtrips_through_load() {
+        let dir = tmp("scoped");
+        create_scoped_template(&dir, &["terasort", "wordcount"], 2048.0).unwrap();
+        let p = Project::load(&dir).unwrap();
+        assert_eq!(p.kind, ProjectKind::Tuning);
+        assert_eq!(p.jobs.len(), 2);
+        let scoped = p.scoped.as_ref().unwrap();
+        assert_eq!(scoped.scopes.len(), 2);
+        // the project's own job is the first workload: its effective
+        // spec includes the terasort block
+        assert_eq!(p.workload().unwrap().name, "terasort");
+        let spec = p.spec.as_ref().unwrap();
+        assert!(spec
+            .ranges
+            .iter()
+            .any(|r| r.name() == "mapreduce.reduce.shuffle.parallelcopies"));
+        assert!(!spec
+            .ranges
+            .iter()
+            .any(|r| r.name() == "mapreduce.job.reduce.slowstart.completedmaps"));
+        assert!(create_scoped_template(&tmp("scoped-bad"), &["nope"], 64.0).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn effective_spec_follows_the_projects_workload_block() {
+        let dir = tmp("effective");
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 512.0).unwrap();
+        std::fs::write(
+            dir.join("params.spec"),
+            "param mapreduce.job.reduces int 2 32\n\
+             workload wordcount {\n\
+               param mapreduce.map.memory.mb int 512 4096\n\
+             }\n\
+             workload terasort {\n\
+               param mapreduce.map.output.compress bool\n\
+             }\n",
+        )
+        .unwrap();
+        let p = Project::load(&dir).unwrap();
+        let spec = p.spec.as_ref().unwrap();
+        assert_eq!(spec.dims(), 2); // shared reduces + wordcount's memory
+        assert!(spec.ranges.iter().any(|r| r.name() == "mapreduce.map.memory.mb"));
+        assert!(!spec
+            .ranges
+            .iter()
+            .any(|r| r.name() == "mapreduce.map.output.compress"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

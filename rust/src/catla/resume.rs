@@ -13,6 +13,7 @@
 use crate::catla::history::History;
 use crate::catla::optimizer_runner::TuningSettings;
 use crate::catla::project::Project;
+use crate::config::params::HadoopConfig;
 use crate::config::spec::TuningSpec;
 use crate::hadoop::SimCluster;
 use crate::optim::core::{ClusterObjective, Driver};
@@ -84,6 +85,79 @@ impl PriorRuns {
     }
 }
 
+/// The spec whose ranges match a stored tuning log's columns: the
+/// project's effective flat spec for single-job `tuning` runs, or the
+/// merged scoped space (re-merged from `jobs.list` workloads) for
+/// `tuning-group` / `workflow --tune` runs — scoped dims are recorded in
+/// the log as `<param>@<workload>` columns, so the column set itself
+/// identifies which space produced the log.
+fn logged_space_spec(project: &Project, csv: &Csv) -> Result<TuningSpec, String> {
+    // exact match against the log's parameter columns, not a subset
+    // check: a merged log's shared columns would otherwise let the flat
+    // global spec shadow the merged space and silently drop every tuned
+    // `@workload` dim from the reconstruction
+    let fixed = ["iter", "optimizer", "runtime_s", "best_so_far"];
+    let param_cols = csv
+        .header
+        .iter()
+        .filter(|h| !fixed.contains(&h.as_str()))
+        .count();
+    let covers = |spec: &TuningSpec| {
+        spec.ranges.len() == param_cols
+            && spec
+                .ranges
+                .iter()
+                .all(|r| csv.col_index(r.name()).is_some())
+    };
+    if let Some(spec) = &project.spec {
+        if spec.dims() > 0 && covers(spec) {
+            return Ok(spec.clone());
+        }
+    }
+    if let (Some(scoped), false) = (&project.scoped, project.jobs.is_empty()) {
+        // workflow syntax (trailing `after=` clauses) is a superset of
+        // the plain jobs.list grammar, so it parses both kinds of lines
+        let names: Vec<String> = project
+            .jobs
+            .iter()
+            .filter_map(|l| crate::catla::workflow::parse_workflow_line(l).ok())
+            .map(|j| j.job.workload.name)
+            .collect();
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let merged = scoped.merge(&refs)?;
+        if covers(&merged.spec) {
+            return Ok(merged.spec);
+        }
+    }
+    Err("tuning log columns match neither this project's spec nor its merged workflow space"
+        .into())
+}
+
+/// Reconstruct the best evaluated configuration recorded in a project's
+/// tuning log, against the exact space the run tuned (flat or merged —
+/// see [`logged_space_spec`]) with the same decode-time constraint
+/// repair, so the rebuilt config is byte-identical to the one the run
+/// evaluated. `Ok(None)` when the project has no usable log.
+pub fn best_logged_config(project: &Project) -> Result<Option<HadoopConfig>, String> {
+    let Ok(history) = History::open(&project.dir) else {
+        return Ok(None);
+    };
+    let Ok(csv) = history.load_tuning_log() else {
+        return Ok(None);
+    };
+    let spec = logged_space_spec(project, &csv)?;
+    let space = ParamSpace::new(spec.clone(), project.base_config()?);
+    let prior = PriorRuns::from_log(&csv, &spec)?;
+    Ok(prior.best().map(|(xs, _)| {
+        let mut cfg = space.base.clone();
+        for (r, x) in spec.ranges.iter().zip(xs) {
+            cfg.set(r.index, *x);
+        }
+        spec.repair(&mut cfg.values); // match decode exactly
+        cfg
+    }))
+}
+
 /// Resume a tuning project. `budget` is the TOTAL budget including prior
 /// evaluations; returns an outcome covering prior + new evaluations. A
 /// budget at or below the logged evaluation count means "exhausted":
@@ -96,6 +170,12 @@ pub fn resume_tuning(
     budget: usize,
 ) -> Result<TuningOutcome, String> {
     let spec = project.spec.clone().ok_or("not a tuning project")?;
+    if spec.dims() == 0 {
+        return Err(format!(
+            "params.spec declares no parameters for workload {:?}",
+            project.workload()?.name
+        ));
+    }
     let history = History::open(&project.dir).map_err(|e| e.to_string())?;
     let prior = match history.load_tuning_log() {
         Ok(csv) => PriorRuns::from_log(&csv, &spec)?,
@@ -204,6 +284,22 @@ mod tests {
         // tuning log stores runtimes rounded to 3 decimals)
         assert!(resumed.best_value <= first.outcome.best_value + 1e-3);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn best_logged_config_rebuilds_the_runs_best_byte_for_byte() {
+        let dir = tuning_project("bestlog", "bobyqa", 14);
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let first = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        let rebuilt = best_logged_config(&project).unwrap().expect("log exists");
+        assert_eq!(rebuilt, first.outcome.best_config);
+        // a project without history reconstructs nothing
+        let bare = tuning_project("bestlog-bare", "bobyqa", 5);
+        let rebuilt = best_logged_config(&Project::load(&bare).unwrap()).unwrap();
+        assert!(rebuilt.is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&bare).unwrap();
     }
 
     #[test]

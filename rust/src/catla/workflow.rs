@@ -16,7 +16,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use crate::catla::project::Project;
 use crate::catla::project_runner::{parse_job_line, GroupJob};
 use crate::config::params::HadoopConfig;
-use crate::config::spec::TuningSpec;
+use crate::config::scope::{MergedSpace, ScopedSpec};
 use crate::hadoop::{JobSubmission, SimCluster};
 use crate::optim::core::{Driver, FnObjective};
 use crate::optim::{Method, ParamSpace, TuningOutcome};
@@ -161,21 +161,28 @@ pub fn from_project(project: &Project) -> Result<Vec<WorkflowJob>, String> {
     project.jobs.iter().map(|l| parse_workflow_line(l)).collect()
 }
 
-/// Tune ONE shared configuration for a whole workflow DAG: the objective
-/// is the end-to-end makespan of the pipeline with the candidate config
-/// applied to every stage. The caller supplies the `Driver` (budget,
+/// Tune a whole workflow DAG over the merged scoped space: the objective
+/// is the end-to-end makespan of the pipeline with each stage running
+/// its own projection of the candidate point — shared dims reach every
+/// stage, `workload { ... }` dims only the stages of their workload.
+/// For a flat spec this is exactly the old "one shared configuration"
+/// behavior, bit for bit. The caller supplies the `Driver` (budget,
 /// early stopping, observers) — `TuningSettings::driver()` builds one
-/// from `tuning.properties`.
+/// from `tuning.properties`. Returns the outcome together with the
+/// [`MergedSpace`] so callers can project the best point onto each job
+/// and record the merged tuning log.
 pub fn tune_workflow(
     cluster: &mut SimCluster,
     jobs: &[WorkflowJob],
-    spec: TuningSpec,
+    scoped: &ScopedSpec,
     base: HadoopConfig,
     method: &Method,
     driver: &mut Driver,
-) -> Result<TuningOutcome, String> {
+) -> Result<(TuningOutcome, MergedSpace), String> {
     validate(jobs)?;
-    let space = ParamSpace::new(spec, base);
+    let names: Vec<&str> = jobs.iter().map(|j| j.job.workload.name.as_str()).collect();
+    let merged = scoped.merge(&names)?;
+    let space = ParamSpace::new(merged.spec.clone(), base);
     let mut opt = method.build();
     let n_stages = jobs.len();
     let mut outcome = {
@@ -184,7 +191,7 @@ pub fn tune_workflow(
                 .iter()
                 .map(|j| {
                     let mut j2 = j.clone();
-                    j2.job.config = cfg.clone();
+                    j2.job.config = merged.job_config(cfg, &j.job.workload.name);
                     j2
                 })
                 .collect();
@@ -196,7 +203,7 @@ pub fn tune_workflow(
         driver.run(opt.as_mut(), &space, &mut obj)?
     };
     outcome.optimizer = format!("{}[workflow x{n_stages}]", outcome.optimizer);
-    Ok(outcome)
+    Ok((outcome, merged))
 }
 
 #[cfg(test)]
@@ -257,13 +264,13 @@ mod tests {
             "rank pagerank 512 after=prep",
             "merge join 1024 after=rank",
         ]);
-        let spec = crate::config::spec::TuningSpec::fig3();
+        let spec = ScopedSpec::flat(crate::config::spec::TuningSpec::fig3());
         let base = crate::config::params::HadoopConfig::default();
         let mut cluster = SimCluster::new(ClusterSpec::default());
-        let out = tune_workflow(
+        let (out, _merged) = tune_workflow(
             &mut cluster,
             &jobs,
-            spec,
+            &spec,
             base.clone(),
             &crate::optim::Method::Bobyqa { seed: 3 },
             &mut Driver::new(30),
@@ -295,6 +302,53 @@ mod tests {
             tuned < default,
             "workflow-tuned {tuned:.1}s vs default {default:.1}s"
         );
+    }
+
+    #[test]
+    fn flat_spec_workflow_tuning_is_bit_identical_to_the_legacy_shared_config_loop() {
+        // a flat (blockless) spec must tune exactly like the pre-scoping
+        // system: same merged space (the spec itself), same per-stage
+        // configs (the decoded candidate, verbatim), same RNG draws
+        let jobs = wf(&["prep grep 512", "rank pagerank 512 after=prep"]);
+        let spec = crate::config::spec::TuningSpec::fig2();
+        let base = crate::config::params::HadoopConfig::default();
+        let method = crate::optim::Method::Annealing { seed: 11 };
+
+        let mut c1 = SimCluster::new(ClusterSpec::default());
+        let (new_path, _) = tune_workflow(
+            &mut c1,
+            &jobs,
+            &ScopedSpec::flat(spec.clone()),
+            base.clone(),
+            &method,
+            &mut Driver::new(15),
+        )
+        .unwrap();
+
+        // the legacy loop, inlined: candidate config cloned into every stage
+        let mut c2 = SimCluster::new(ClusterSpec::default());
+        let space = ParamSpace::new(spec, base);
+        let mut opt = method.build();
+        let legacy = {
+            let mut obj = FnObjective(|cfg: &crate::config::params::HadoopConfig| -> f64 {
+                let tuned: Vec<WorkflowJob> = jobs
+                    .iter()
+                    .map(|j| {
+                        let mut j2 = j.clone();
+                        j2.job.config = cfg.clone();
+                        j2
+                    })
+                    .collect();
+                run_workflow(&mut c2, &tuned).unwrap().makespan_s
+            });
+            Driver::new(15).run(opt.as_mut(), &space, &mut obj).unwrap()
+        };
+        assert_eq!(new_path.evals(), legacy.evals());
+        for (a, b) in new_path.records.iter().zip(&legacy.records) {
+            assert_eq!(a.value.to_bits(), b.value.to_bits(), "flat workflow tuning diverged");
+            assert_eq!(a.config, b.config);
+        }
+        assert_eq!(new_path.best_config, legacy.best_config);
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! Configuration layer: the typed parameter-space core (`space`), Hadoop
 //! configuration values over it (`params`), the `HadoopEnv.txt` project
-//! environment file, and tuning parameter-spec files.
+//! environment file, tuning parameter-spec files (`spec`), and scoped
+//! per-workload spaces merged through one typed layer (`scope`).
 
 pub mod env;
 pub mod params;
+pub mod scope;
 pub mod space;
 pub mod spec;
 
 pub use env::HadoopEnv;
 pub use params::{HadoopConfig, N_AOT_PARAMS};
+pub use scope::{DimRoute, MergedSpace, ScopedSpec, WorkloadScope};
 pub use space::{Bound, Constraint, ParamDef, ParamKind, ParamRegistry, Transform};
 pub use spec::{ParamRange, TuningSpec};

@@ -1,0 +1,848 @@
+//! Scoped parameter spaces: per-workload tuning specs merged through one
+//! typed layer.
+//!
+//! The paper's Catla workflow tunes *suites* of heterogeneous MapReduce
+//! jobs; a shuffle-heavy terasort and a CPU-bound wordcount should not be
+//! forced to share identical knobs and bounds. A `params.spec` may now
+//! contain `workload <name> { ... }` blocks:
+//!
+//! ```text
+//! # shared (global) block — tuned once, applied to every job
+//! param mapreduce.job.reduces int 2 32
+//!
+//! workload terasort {
+//!   param mapreduce.map.output.compress bool
+//!   param mapreduce.reduce.shuffle.parallelcopies int 1 64
+//! }
+//! workload wordcount {
+//!   param mapreduce.map.memory.mb int 512 4096 log
+//!   param mapreduce.job.reduce.slowstart.completedmaps float 0.05 1.0
+//! }
+//! ```
+//!
+//! * [`ScopedSpec`] — parse result: the global (shared) [`TuningSpec`]
+//!   plus one effective spec per workload block (global lines with the
+//!   block's param lines overriding or extending them). A file with no
+//!   blocks is a *flat* spec and behaves bit-identically to the
+//!   pre-scoping system everywhere.
+//! * [`ScopedSpec::scope`] — the effective flat spec for one workload
+//!   (what single-job `tuning`/`resume` runs use).
+//! * [`ScopedSpec::merge`] — the typed merge for multi-job/workflow
+//!   tuning: ONE [`TuningSpec`] whose ranges are the shared dims plus one
+//!   *aliased* dim per (workload, scoped param) (`<param>@<workload>`),
+//!   so every ask/tell optimizer sees a single unit cube, unmodified.
+//!   Per-workload constraints are remapped onto merged indices (a shared
+//!   dim constrained by two workloads must satisfy both). Two blocks
+//!   declaring the same NEW parameter with conflicting definitions are a
+//!   hard error naming both blocks.
+//! * [`MergedSpace::job_config`] — the projection: decode the merged
+//!   unit cube once, then route shared dims to every job and scoped dims
+//!   to their owner, yielding each job's own `HadoopConfig` (laid out on
+//!   that workload's registry — a job's `-D` args never mention another
+//!   workload's private knobs).
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::config::params::HadoopConfig;
+use crate::config::space::{Bound, Constraint, ParamRegistry, N_AOT_PARAMS};
+use crate::config::spec::{has_constraint_cycle, ParamRange, TuningSpec};
+
+/// One `workload <name> { ... }` block, resolved to its effective spec.
+#[derive(Clone, Debug)]
+pub struct WorkloadScope {
+    /// Workload name the block scopes to (matches `jobs.list` /
+    /// `job.properties` workload names; any name is accepted — blocks
+    /// for suites a project never runs are simply unused).
+    pub workload: String,
+    /// The effective flat spec: global lines with this block's param
+    /// lines overriding (same canonical name) or extending them, plus
+    /// both sections' constraints.
+    pub spec: TuningSpec,
+    /// Canonical full names of the params this block declares, in block
+    /// order — the *scoped* dims; every other range in `spec` is shared
+    /// with the global block.
+    pub owned: Vec<String>,
+}
+
+/// A parsed `params.spec` with optional per-workload blocks.
+#[derive(Clone, Debug)]
+pub struct ScopedSpec {
+    /// The shared (top-level) spec. May have zero ranges when every
+    /// tunable lives in a workload block.
+    pub global: TuningSpec,
+    /// One entry per `workload { ... }` block, in file order.
+    pub scopes: Vec<WorkloadScope>,
+    /// Aggregated non-fatal diagnostics (the typo guard), deduplicated
+    /// across the global section and every block's effective re-parse.
+    pub warnings: Vec<String>,
+}
+
+impl ScopedSpec {
+    /// Wrap a flat spec (no workload blocks). Everything downstream
+    /// treats this exactly like the pre-scoping system.
+    pub fn flat(spec: TuningSpec) -> ScopedSpec {
+        ScopedSpec {
+            warnings: spec.warnings.clone(),
+            global: spec,
+            scopes: Vec::new(),
+        }
+    }
+
+    /// Does this spec scope anything? Flat specs short-circuit every
+    /// merge/projection path to the legacy behavior.
+    pub fn is_flat(&self) -> bool {
+        self.scopes.is_empty()
+    }
+
+    /// The effective flat spec for one workload: its block applied over
+    /// the global section, or the global spec when it has no block.
+    pub fn scope(&self, workload: &str) -> &TuningSpec {
+        self.scopes
+            .iter()
+            .find(|s| s.workload == workload)
+            .map(|s| &s.spec)
+            .unwrap_or(&self.global)
+    }
+
+    pub fn load(path: &Path) -> Result<ScopedSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse a spec file with optional `workload <name> { ... }` blocks.
+    /// Block syntax: the opening line is exactly `workload <name> {`,
+    /// the closing line exactly `}`; blocks cannot nest.
+    pub fn parse(text: &str) -> Result<ScopedSpec, String> {
+        let mut global_lines: Vec<(usize, &str)> = Vec::new();
+        // (opening line number, workload name, body lines)
+        let mut blocks: Vec<(usize, String, Vec<(usize, &str)>)> = Vec::new();
+        let mut open: Option<usize> = None;
+        for (i, raw) in text.lines().enumerate() {
+            let no = i + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            match toks[0] {
+                "workload" => {
+                    if open.is_some() {
+                        return Err(format!(
+                            "params.spec line {no}: workload blocks cannot nest"
+                        ));
+                    }
+                    if toks.len() != 3 || toks[2] != "{" {
+                        return Err(format!(
+                            "params.spec line {no}: expected `workload <name> {{`"
+                        ));
+                    }
+                    let name = toks[1].to_string();
+                    if blocks.iter().any(|(_, n, _)| *n == name) {
+                        return Err(format!(
+                            "params.spec line {no}: duplicate workload block {name:?}"
+                        ));
+                    }
+                    blocks.push((no, name, Vec::new()));
+                    open = Some(blocks.len() - 1);
+                }
+                "}" => {
+                    if toks.len() != 1 {
+                        return Err(format!(
+                            "params.spec line {no}: unexpected tokens after `}}`"
+                        ));
+                    }
+                    if open.take().is_none() {
+                        return Err(format!(
+                            "params.spec line {no}: `}}` without an open workload block"
+                        ));
+                    }
+                }
+                _ => match open {
+                    Some(b) => blocks[b].2.push((no, line)),
+                    None => global_lines.push((no, line)),
+                },
+            }
+        }
+        if let Some(b) = open {
+            return Err(format!(
+                "params.spec: workload block {:?} (line {}) is never closed",
+                blocks[b].1, blocks[b].0
+            ));
+        }
+
+        // The global section may be empty only when blocks carry the dims.
+        let global = TuningSpec::parse_numbered(&global_lines, !blocks.is_empty())?;
+        let mut warnings: Vec<String> = global.warnings.clone();
+
+        let mut scopes = Vec::with_capacity(blocks.len());
+        for (_, name, body) in &blocks {
+            // Canonical names of the block's param declarations, for
+            // override matching (mirrors parse's suffix canonicalization
+            // against the global registry).
+            let mut declared: Vec<String> = Vec::new();
+            for (no, l) in body {
+                let toks: Vec<&str> = l.split_whitespace().collect();
+                if toks[0] == "param" {
+                    let n = toks.get(1).ok_or_else(|| {
+                        format!("params.spec line {no}: param needs a name")
+                    })?;
+                    declared.push(canonical_name(n, &global));
+                }
+            }
+            // Effective line set: global lines minus overridden param
+            // lines, then the block's lines. Ranges come out in that
+            // order (kept globals first, then the block's own).
+            let mut eff: Vec<(usize, &str)> = Vec::new();
+            let mut kept_globals = 0usize;
+            for (no, l) in &global_lines {
+                let toks: Vec<&str> = l.split_whitespace().collect();
+                if toks[0] == "param" {
+                    if declared.contains(&canonical_name(toks[1], &global)) {
+                        continue; // the block overrides this param
+                    }
+                    kept_globals += 1;
+                }
+                eff.push((*no, *l));
+            }
+            eff.extend(body.iter().copied());
+            let spec = TuningSpec::parse_numbered(&eff, true).map_err(|e| {
+                format!("workload block {name:?}: {e}")
+            })?;
+            for w in &spec.warnings {
+                if !warnings.contains(w) {
+                    warnings.push(w.clone());
+                }
+            }
+            // Owned = the ranges contributed by the block (post-parse
+            // canonical names, in block order).
+            let owned: Vec<String> = spec.ranges[kept_globals..]
+                .iter()
+                .map(|r| r.name().to_string())
+                .collect();
+            scopes.push(WorkloadScope {
+                workload: name.clone(),
+                spec,
+                owned,
+            });
+        }
+
+        Ok(ScopedSpec {
+            global,
+            scopes,
+            warnings,
+        })
+    }
+
+    /// Merge the scopes of the given workloads (deduplicated, first-use
+    /// order) into one typed space for multi-job/workflow tuning. For a
+    /// flat spec this returns the global spec unchanged (same registry
+    /// `Arc`, identity routes) — the legacy path, bit for bit.
+    pub fn merge(&self, workloads: &[&str]) -> Result<MergedSpace, String> {
+        let mut names: Vec<String> = Vec::new();
+        for w in workloads {
+            if !names.iter().any(|n| n == w) {
+                names.push(w.to_string());
+            }
+        }
+        if names.is_empty() {
+            return Err("merge needs at least one workload".into());
+        }
+        if self.is_flat() {
+            if self.global.dims() == 0 {
+                return Err("params.spec declares no parameters".into());
+            }
+            let routes = self
+                .global
+                .ranges
+                .iter()
+                .map(|r| DimRoute {
+                    workload: None,
+                    param: r.name().to_string(),
+                })
+                .collect();
+            return Ok(MergedSpace {
+                spec: self.global.clone(),
+                routes,
+                scopes: names
+                    .iter()
+                    .map(|n| (n.clone(), self.global.clone(), BTreeSet::new()))
+                    .collect(),
+                workloads: names,
+                global: self.global.clone(),
+            });
+        }
+
+        // Per selected workload: effective spec + owned-name set.
+        let selected: Vec<(String, TuningSpec, Vec<String>)> = names
+            .iter()
+            .map(|n| match self.scopes.iter().find(|s| s.workload == *n) {
+                Some(s) => (n.clone(), s.spec.clone(), s.owned.clone()),
+                None => (n.clone(), self.global.clone(), Vec::new()),
+            })
+            .collect();
+
+        // Conflict check: the same NEW parameter declared in two blocks
+        // must mean the same thing (builtin/global params always agree —
+        // their definition is the shared one; only the declared RANGES
+        // differ per block, which is the point of scoping).
+        for i in 0..selected.len() {
+            for j in i + 1..selected.len() {
+                let (wa, sa, oa) = &selected[i];
+                let (wb, sb, ob) = &selected[j];
+                for p in oa.iter().filter(|p| ob.contains(p)) {
+                    let da = sa.registry.by_name(p).map(|(_, d)| d.clone());
+                    let db = sb.registry.by_name(p).map(|(_, d)| d.clone());
+                    if let (Some(da), Some(db)) = (da, db) {
+                        if da != db {
+                            return Err(format!(
+                                "workload blocks {wa:?} and {wb:?} declare parameter {p:?} \
+                                 with conflicting definitions ({} [{}, {}] vs {} [{}, {}]) — \
+                                 make the declarations identical or rename one knob",
+                                da.kind.token(),
+                                da.lo,
+                                da.hi,
+                                db.kind.token(),
+                                db.lo,
+                                db.hi
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Shared dims: global ranges that at least one selected workload
+        // still consumes (a param overridden by EVERY selected block
+        // would route nowhere and is dropped).
+        let kept: Vec<&ParamRange> = self
+            .global
+            .ranges
+            .iter()
+            .filter(|r| {
+                selected
+                    .iter()
+                    .any(|(_, _, owned)| !owned.iter().any(|o| o == r.name()))
+            })
+            .collect();
+
+        // Merged registry: builtin prefix + global extras + one aliased
+        // def per (workload, scoped param).
+        let mut extras: Vec<crate::config::space::ParamDef> =
+            self.global.registry.defs()[N_AOT_PARAMS..].to_vec();
+        // (workload, original range, alias name)
+        let mut alias_protos: Vec<(String, ParamRange, String)> = Vec::new();
+        for (wl, spec, owned) in &selected {
+            for p in owned {
+                let def = spec
+                    .registry
+                    .by_name(p)
+                    .map(|(_, d)| d.clone())
+                    .ok_or_else(|| format!("workload {wl:?}: owned param {p:?} missing"))?;
+                let range = spec
+                    .ranges
+                    .iter()
+                    .find(|r| r.name() == p)
+                    .cloned()
+                    .ok_or_else(|| format!("workload {wl:?}: owned param {p:?} untuned"))?;
+                let alias = format!("{p}@{wl}");
+                let mut adef = def;
+                adef.name = alias.clone();
+                extras.push(adef);
+                alias_protos.push((wl.clone(), range, alias));
+            }
+        }
+        let registry = ParamRegistry::with_extras(extras)?;
+
+        let mut ranges: Vec<ParamRange> = Vec::new();
+        let mut routes: Vec<DimRoute> = Vec::new();
+        for r in kept {
+            let (index, def) = registry
+                .by_name(r.name())
+                .ok_or_else(|| format!("merged registry missing shared param {:?}", r.name()))?;
+            ranges.push(ParamRange {
+                index,
+                def: def.clone(),
+                lo: r.lo,
+                hi: r.hi,
+                step: r.step,
+                transform: r.transform,
+            });
+            routes.push(DimRoute {
+                workload: None,
+                param: r.name().to_string(),
+            });
+        }
+        for (wl, orig, alias) in &alias_protos {
+            let (index, def) = registry
+                .by_name(alias)
+                .ok_or_else(|| format!("merged registry missing alias {alias:?}"))?;
+            ranges.push(ParamRange {
+                index,
+                def: def.clone(),
+                lo: orig.lo,
+                hi: orig.hi,
+                step: orig.step,
+                transform: orig.transform,
+            });
+            routes.push(DimRoute {
+                workload: Some(wl.clone()),
+                param: orig.name().to_string(),
+            });
+        }
+        if ranges.is_empty() {
+            return Err(format!(
+                "params.spec declares no parameters for workloads {names:?}"
+            ));
+        }
+
+        // Per-workload constraints, remapped onto merged indices: a param
+        // the workload scopes maps to its alias, everything else to the
+        // shared slot. The union is deduplicated; individually-acyclic
+        // scopes can still combine into a cross-scope cycle — reject it.
+        let mut constraints: Vec<Constraint> = Vec::new();
+        for (wl, spec, owned) in &selected {
+            let map_idx = |i: usize| -> Result<usize, String> {
+                let name = &spec.registry.get(i).name;
+                let target = if owned.iter().any(|o| o == name) {
+                    format!("{name}@{wl}")
+                } else {
+                    name.clone()
+                };
+                registry
+                    .index_of(&target)
+                    .ok_or_else(|| format!("merged registry missing {target:?}"))
+            };
+            for c in &spec.constraints {
+                let mc = Constraint {
+                    lhs: map_idx(c.lhs)?,
+                    bound: match c.bound {
+                        Bound::Const(k) => Bound::Const(k),
+                        Bound::Scaled { coef, index } => Bound::Scaled {
+                            coef,
+                            index: map_idx(index)?,
+                        },
+                    },
+                };
+                if !constraints.contains(&mc) {
+                    constraints.push(mc);
+                }
+            }
+        }
+        if has_constraint_cycle(&constraints) {
+            return Err("merged workload constraints form a cycle".into());
+        }
+
+        let spec = TuningSpec {
+            registry,
+            ranges,
+            constraints,
+            warnings: Vec::new(),
+        };
+        let scopes = selected
+            .into_iter()
+            .map(|(n, s, o)| (n, s, o.into_iter().collect::<BTreeSet<String>>()))
+            .collect();
+        Ok(MergedSpace {
+            spec,
+            routes,
+            scopes,
+            workloads: names,
+            global: self.global.clone(),
+        })
+    }
+}
+
+/// Canonical full name of a param declaration, for override matching:
+/// full/suffix resolution against the global registry, the raw name for
+/// genuinely new knobs (ambiguity surfaces as an error when the block's
+/// effective spec is parsed).
+fn canonical_name(name: &str, global: &TuningSpec) -> String {
+    global
+        .registry
+        .resolve(name)
+        .map(|(_, d)| d.name.clone())
+        .unwrap_or_else(|_| name.to_string())
+}
+
+/// Where one merged-space dimension routes at projection time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DimRoute {
+    /// `None` = shared: the value reaches every job whose workload does
+    /// not scope this parameter itself; `Some(w)` = owned by workload w.
+    pub workload: Option<String>,
+    /// Full underlying parameter name (unaliased).
+    pub param: String,
+}
+
+/// The result of [`ScopedSpec::merge`]: one flat [`TuningSpec`] every
+/// optimizer can drive (shared dims + `<param>@<workload>` aliases),
+/// plus the routing needed to project a merged configuration down to
+/// each job's own `HadoopConfig`.
+#[derive(Clone, Debug)]
+pub struct MergedSpace {
+    /// The spec the optimizer sees — hand `ParamSpace::new(spec, base)`
+    /// to any method; decode/repair, grid streaming, resume replay and
+    /// history columns all work on it unchanged.
+    pub spec: TuningSpec,
+    /// Parallel to `spec.ranges`.
+    pub routes: Vec<DimRoute>,
+    /// Selected workload names, deduplicated, in first-use order.
+    pub workloads: Vec<String>,
+    /// (workload, effective spec, owned names) per selected workload —
+    /// the projection targets.
+    scopes: Vec<(String, TuningSpec, BTreeSet<String>)>,
+    /// Fallback projection target for workloads outside the selection.
+    global: TuningSpec,
+}
+
+impl MergedSpace {
+    /// Dimensions of the merged unit cube.
+    pub fn dims(&self) -> usize {
+        self.spec.ranges.len()
+    }
+
+    /// The effective spec a given workload's jobs decode against.
+    pub fn scope_spec(&self, workload: &str) -> &TuningSpec {
+        self.scopes
+            .iter()
+            .find(|(n, _, _)| n == workload)
+            .map(|(_, s, _)| s)
+            .unwrap_or(&self.global)
+    }
+
+    /// Project a decoded merged configuration down to one job's own
+    /// `HadoopConfig`: shared dims reach every job (unless the job's
+    /// workload overrides the param), scoped dims reach only their
+    /// owner. The result is laid out on the workload's effective
+    /// registry and re-repaired against its constraints, so a job's
+    /// rendered `-D` args contain exactly its shared + scoped params.
+    /// For a flat spec this is the identity (bit for bit).
+    pub fn job_config(&self, merged: &HadoopConfig, workload: &str) -> HadoopConfig {
+        let (spec, owned) = self
+            .scopes
+            .iter()
+            .find(|(n, _, _)| n == workload)
+            .map(|(_, s, o)| (s, Some(o)))
+            .unwrap_or((&self.global, None));
+        // Rebasing copies every same-named value (untuned base values and
+        // shared dims); aliased slots don't exist in the target registry
+        // and are routed explicitly below.
+        let mut out = merged.rebased(&spec.registry);
+        for (r, route) in self.spec.ranges.iter().zip(&self.routes) {
+            let applies = match &route.workload {
+                Some(w) => w == workload,
+                // a shared dim is masked for workloads that override it
+                None => !owned.map(|o| o.contains(&route.param)).unwrap_or(false),
+            };
+            if !applies {
+                continue;
+            }
+            if let Some((i, _)) = spec.registry.by_name(&route.param) {
+                out.set(i, merged.get(r.index));
+            }
+        }
+        spec.repair(&mut out.values);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::space::{ParamKind, Transform};
+
+    const TWO_JOB: &str = "param mapreduce.job.reduces int 2 32\n\
+         workload terasort {\n\
+           param mapreduce.map.output.compress bool\n\
+           param mapreduce.reduce.shuffle.parallelcopies int 1 64\n\
+         }\n\
+         workload wordcount {\n\
+           param mapreduce.map.memory.mb int 512 4096 log\n\
+           param mapreduce.job.reduce.slowstart.completedmaps float 0.05 1.0\n\
+         }\n";
+
+    #[test]
+    fn flat_files_stay_flat() {
+        let s = ScopedSpec::parse(TuningSpec::fig2().to_string().as_str()).unwrap();
+        assert!(s.is_flat());
+        assert_eq!(s.global, TuningSpec::fig2());
+        assert_eq!(s.scope("terasort"), &s.global);
+        let merged = s.merge(&["terasort", "wordcount"]).unwrap();
+        assert_eq!(merged.spec, s.global);
+        assert!(merged.routes.iter().all(|r| r.workload.is_none()));
+    }
+
+    #[test]
+    fn blocks_extend_the_global_section() {
+        let s = ScopedSpec::parse(TWO_JOB).unwrap();
+        assert_eq!(s.scopes.len(), 2);
+        let ts = s.scope("terasort");
+        assert_eq!(ts.dims(), 3); // shared reduces + 2 scoped
+        assert_eq!(ts.ranges[0].name(), "mapreduce.job.reduces");
+        assert_eq!(
+            s.scopes[0].owned,
+            vec![
+                "mapreduce.map.output.compress".to_string(),
+                "mapreduce.reduce.shuffle.parallelcopies".to_string()
+            ]
+        );
+        // a workload with no block sees the global spec
+        assert_eq!(s.scope("grep"), &s.global);
+    }
+
+    #[test]
+    fn block_overrides_replace_the_global_range() {
+        let s = ScopedSpec::parse(
+            "param mapreduce.task.io.sort.mb int 50 800\n\
+             workload terasort {\n\
+               param io.sort.mb int 100 400\n\
+             }\n",
+        )
+        .unwrap();
+        let ts = s.scope("terasort");
+        assert_eq!(ts.dims(), 1, "override duplicated the dim");
+        let r = &ts.ranges[0];
+        assert_eq!(r.name(), "mapreduce.task.io.sort.mb");
+        assert_eq!((r.lo, r.hi), (100.0, 400.0));
+        assert_eq!(s.scopes[0].owned, vec!["mapreduce.task.io.sort.mb"]);
+        // global untouched
+        assert_eq!(s.global.ranges[0].hi, 800.0);
+    }
+
+    #[test]
+    fn merge_builds_shared_plus_aliased_dims() {
+        let s = ScopedSpec::parse(TWO_JOB).unwrap();
+        let m = s.merge(&["terasort", "wordcount"]).unwrap();
+        assert_eq!(m.dims(), 5);
+        let names: Vec<&str> = m.spec.ranges.iter().map(|r| r.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "mapreduce.job.reduces",
+                "mapreduce.map.output.compress@terasort",
+                "mapreduce.reduce.shuffle.parallelcopies@terasort",
+                "mapreduce.map.memory.mb@wordcount",
+                "mapreduce.job.reduce.slowstart.completedmaps@wordcount",
+            ]
+        );
+        assert_eq!(m.routes[0].workload, None);
+        assert_eq!(m.routes[3].workload.as_deref(), Some("wordcount"));
+        // alias dims keep kind + transform
+        assert_eq!(m.spec.ranges[1].def.kind, ParamKind::Bool);
+        assert_eq!(m.spec.ranges[3].transform, Transform::Log);
+        // builtin prefix untouched in the merged registry
+        assert_eq!(m.spec.registry.get(0).name, "mapreduce.job.reduces");
+    }
+
+    #[test]
+    fn projection_routes_shared_to_all_and_scoped_to_owner() {
+        let s = ScopedSpec::parse(TWO_JOB).unwrap();
+        let m = s.merge(&["terasort", "wordcount"]).unwrap();
+        let space = crate::optim::ParamSpace::new(m.spec.clone(), HadoopConfig::default());
+        let cfg = space.decode(&[1.0, 1.0, 1.0, 1.0, 1.0]);
+        let ts = m.job_config(&cfg, "terasort");
+        let wc = m.job_config(&cfg, "wordcount");
+        use crate::config::params::*;
+        // shared dim reaches both
+        assert_eq!(ts.get(P_REDUCES), 32.0);
+        assert_eq!(wc.get(P_REDUCES), 32.0);
+        // terasort's scoped dims reach only terasort
+        assert!(ts.get_bool(P_COMPRESS));
+        assert_eq!(ts.get(P_PARALLEL_COPIES), 64.0);
+        assert!(!wc.get_bool(P_COMPRESS), "scoped dim leaked to wordcount");
+        assert_eq!(wc.get(P_PARALLEL_COPIES), 5.0); // Hadoop default
+        // wordcount's scoped dims reach only wordcount
+        assert_eq!(wc.get(P_MAP_MEM_MB), 4096.0);
+        assert_eq!(wc.get(P_SLOWSTART), 1.0);
+        assert_eq!(ts.get(P_MAP_MEM_MB), 1024.0); // default
+        assert_eq!(ts.get(P_SLOWSTART), 0.05); // default
+        ts.validate().unwrap();
+        wc.validate().unwrap();
+        // an unselected workload gets the shared dims only
+        let other = m.job_config(&cfg, "grep");
+        assert_eq!(other.get(P_REDUCES), 32.0);
+        assert!(!other.get_bool(P_COMPRESS));
+    }
+
+    #[test]
+    fn fully_overridden_shared_dim_is_dropped() {
+        let s = ScopedSpec::parse(
+            "param mapreduce.task.io.sort.mb int 50 800\n\
+             workload terasort { param io.sort.mb int 100 400 }\n",
+        );
+        // `{` must end the workload line, body on its own lines — the
+        // single-line form is a syntax error (kept strict)
+        assert!(s.is_err());
+        let s = ScopedSpec::parse(
+            "param mapreduce.task.io.sort.mb int 50 800\n\
+             workload terasort {\n param io.sort.mb int 100 400\n }\n",
+        )
+        .unwrap();
+        let m = s.merge(&["terasort"]).unwrap();
+        // the only selected workload overrides the only shared dim: the
+        // shared slot routes nowhere and must not burn a dimension
+        assert_eq!(m.dims(), 1);
+        assert_eq!(m.spec.ranges[0].name(), "mapreduce.task.io.sort.mb@terasort");
+    }
+
+    #[test]
+    fn conflicting_new_param_declarations_error_naming_both_blocks() {
+        let err = ScopedSpec::parse(
+            "workload terasort {\n param x.knob int 1 10\n }\n\
+             workload wordcount {\n param x.knob int 5 20\n }\n",
+        )
+        .unwrap()
+        .merge(&["terasort", "wordcount"])
+        .unwrap_err();
+        assert!(err.contains("terasort"), "{err}");
+        assert!(err.contains("wordcount"), "{err}");
+        assert!(err.contains("x.knob"), "{err}");
+        // identical declarations are fine — each workload gets its alias
+        let m = ScopedSpec::parse(
+            "workload terasort {\n param x.knob int 1 10\n }\n\
+             workload wordcount {\n param x.knob int 1 10\n }\n",
+        )
+        .unwrap()
+        .merge(&["terasort", "wordcount"])
+        .unwrap();
+        assert_eq!(m.dims(), 2);
+    }
+
+    #[test]
+    fn scoped_constraints_remap_onto_merged_indices() {
+        let s = ScopedSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024\n\
+             workload wordcount {\n\
+               param mapreduce.map.memory.mb int 512 4096\n\
+               constraint io.sort.mb <= 0.7*map.memory.mb\n\
+             }\n",
+        )
+        .unwrap();
+        let m = s.merge(&["wordcount", "terasort"]).unwrap();
+        assert_eq!(m.dims(), 2);
+        assert_eq!(m.spec.constraints.len(), 1);
+        let c = &m.spec.constraints[0];
+        // lhs = shared io.sort.mb slot, rhs = wordcount's alias
+        assert_eq!(m.spec.registry.get(c.lhs).name, "mapreduce.task.io.sort.mb");
+        match c.bound {
+            Bound::Scaled { coef, index } => {
+                assert_eq!(coef, 0.7);
+                assert_eq!(
+                    m.spec.registry.get(index).name,
+                    "mapreduce.map.memory.mb@wordcount"
+                );
+            }
+            b => panic!("unexpected bound {b:?}"),
+        }
+        // decode repairs through the remapped constraint: sort.mb at its
+        // top with wordcount memory at its bottom must be pulled down
+        let space = crate::optim::ParamSpace::new(m.spec.clone(), HadoopConfig::default());
+        let cfg = space.decode(&[1.0, 0.0]);
+        assert!(space.is_feasible(&cfg));
+        let wc = m.job_config(&cfg, "wordcount");
+        assert!(
+            wc.get(crate::config::params::P_IO_SORT_MB)
+                <= 0.7 * wc.get(crate::config::params::P_MAP_MEM_MB) + 1e-9
+        );
+    }
+
+    #[test]
+    fn cross_scope_constraint_cycles_are_rejected_at_merge() {
+        // each block alone is acyclic; the union over the two shared
+        // params is a cycle
+        let s = ScopedSpec::parse(
+            "param mapreduce.task.io.sort.mb int 64 1024\n\
+             param mapreduce.map.memory.mb int 512 4096\n\
+             workload terasort {\n\
+               constraint io.sort.mb <= 0.5*map.memory.mb\n\
+             }\n\
+             workload wordcount {\n\
+               constraint map.memory.mb <= 16*io.sort.mb\n\
+             }\n",
+        )
+        .unwrap();
+        let err = s.merge(&["terasort", "wordcount"]).unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+        // one scope at a time is fine
+        s.merge(&["terasort"]).unwrap();
+        s.merge(&["wordcount"]).unwrap();
+    }
+
+    #[test]
+    fn empty_workload_block_degrades_to_the_flat_space() {
+        let s = ScopedSpec::parse(
+            "param mapreduce.job.reduces int 2 32\n\
+             workload terasort {\n\
+             }\n",
+        )
+        .unwrap();
+        assert_eq!(s.scope("terasort"), &s.global);
+        assert!(s.scopes[0].owned.is_empty());
+        let m = s.merge(&["terasort"]).unwrap();
+        assert_eq!(m.spec, s.global);
+        let space = crate::optim::ParamSpace::new(m.spec.clone(), HadoopConfig::default());
+        let cfg = space.decode(&[0.5]);
+        assert_eq!(m.job_config(&cfg, "terasort"), cfg);
+    }
+
+    #[test]
+    fn scoped_typo_still_warns() {
+        // the typo guard fires inside a workload block exactly like it
+        // does at top level
+        let s = ScopedSpec::parse(
+            "param mapreduce.job.reduces int 2 32\n\
+             workload terasort {\n\
+               param memory.mbb int 512 4096\n\
+             }\n",
+        )
+        .unwrap();
+        assert_eq!(s.warnings.len(), 1, "{:?}", s.warnings);
+        assert!(s.warnings[0].contains("memory.mbb"), "{}", s.warnings[0]);
+        assert!(
+            s.warnings[0].contains("mapreduce.map.memory.mb"),
+            "{}",
+            s.warnings[0]
+        );
+    }
+
+    #[test]
+    fn block_syntax_errors_name_the_line() {
+        assert!(ScopedSpec::parse("workload t\n").is_err());
+        assert!(ScopedSpec::parse("workload t {\n").unwrap_err().contains("never closed"));
+        assert!(ScopedSpec::parse("}\n").is_err());
+        assert!(ScopedSpec::parse(
+            "workload a {\n workload b {\n }\n }\n"
+        )
+        .is_err());
+        assert!(ScopedSpec::parse(
+            "workload a {\n }\n workload a {\n }\n"
+        )
+        .unwrap_err()
+        .contains("duplicate"));
+    }
+
+    #[test]
+    fn merge_of_unknown_only_workloads_uses_global() {
+        let s = ScopedSpec::parse(TWO_JOB).unwrap();
+        let m = s.merge(&["grep", "join"]).unwrap();
+        // no selected workload has a block: merged = shared dims only
+        assert_eq!(m.dims(), 1);
+        assert_eq!(m.spec.ranges[0].name(), "mapreduce.job.reduces");
+    }
+
+    #[test]
+    fn spec_with_only_blocks_parses() {
+        let s = ScopedSpec::parse(
+            "workload terasort {\n param mapreduce.map.output.compress bool\n }\n",
+        )
+        .unwrap();
+        assert_eq!(s.global.dims(), 0);
+        assert_eq!(s.scope("terasort").dims(), 1);
+        let m = s.merge(&["terasort"]).unwrap();
+        assert_eq!(m.dims(), 1);
+        // a selection with no tunables anywhere is an error
+        assert!(s.merge(&["grep"]).is_err());
+    }
+}

@@ -21,6 +21,13 @@
 //! spec's [`ParamRegistry`] (appended after the stable AOT prefix), so
 //! new categorical or log-scaled knobs need no rust changes. Constraint
 //! names resolve by full property name or unambiguous dotted suffix.
+//!
+//! Spec files may additionally contain `workload <name> { ... }` blocks
+//! scoping param/constraint lines to one workload suite — those are
+//! handled one layer up by [`crate::config::scope::ScopedSpec`], which
+//! reassembles global + block line sets and feeds each through
+//! [`TuningSpec::parse_numbered`] here. A file with no blocks is a flat
+//! spec, parsed exactly as before.
 
 use std::fmt;
 use std::path::Path;
@@ -188,23 +195,40 @@ impl TuningSpec {
     }
 
     pub fn parse(text: &str) -> Result<TuningSpec, String> {
+        let lines: Vec<(usize, &str)> = text
+            .lines()
+            .enumerate()
+            .map(|(i, l)| (i + 1, l))
+            .collect();
+        Self::parse_numbered(&lines, false)
+    }
+
+    /// Parse pre-split `(line_number, text)` pairs — the scoped-spec
+    /// parser (`config::scope`) reassembles global + workload-block line
+    /// sets and feeds them through this with their ORIGINAL line numbers,
+    /// so every diagnostic points at the real source line. `allow_empty`
+    /// permits a spec with zero tunable ranges (a global section that
+    /// only exists to be extended by workload blocks).
+    pub(crate) fn parse_numbered(
+        lines: &[(usize, &str)],
+        allow_empty: bool,
+    ) -> Result<TuningSpec, String> {
         // Pass 1: split lines into param declarations and constraint
         // lines; declare unknown params into the registry.
         let mut param_lines = Vec::new();
         let mut constraint_lines = Vec::new();
-        for (no, raw) in text.lines().enumerate() {
+        for (no, raw) in lines {
             let line = raw.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             let toks: Vec<&str> = line.split_whitespace().collect();
             match toks[0] {
-                "param" => param_lines.push((no + 1, toks)),
-                "constraint" => constraint_lines.push((no + 1, toks)),
+                "param" => param_lines.push((*no, toks)),
+                "constraint" => constraint_lines.push((*no, toks)),
                 other => {
                     return Err(format!(
-                        "params.spec line {}: expected 'param' or 'constraint', got {other:?}",
-                        no + 1
+                        "params.spec line {no}: expected 'param' or 'constraint', got {other:?}",
                     ))
                 }
             }
@@ -307,7 +331,7 @@ impl TuningSpec {
                 transform: if decl.log { Transform::Log } else { def.transform },
             });
         }
-        if ranges.is_empty() {
+        if ranges.is_empty() && !allow_empty {
             return Err("params.spec declares no parameters".into());
         }
         for r in &ranges {
@@ -668,8 +692,10 @@ fn edit_distance(a: &str, b: &str) -> usize {
 
 /// Cycle check over the lhs→rhs dependency edges of scaled constraints:
 /// repeatedly trim edges whose target has no outgoing edge (such edges
-/// cannot be on a cycle); anything left implies a cycle.
-fn has_constraint_cycle(constraints: &[Constraint]) -> bool {
+/// cannot be on a cycle); anything left implies a cycle. Also used by
+/// `config::scope` on the union of per-workload constraint sets, where
+/// individually-acyclic scopes can combine into a cross-scope cycle.
+pub(crate) fn has_constraint_cycle(constraints: &[Constraint]) -> bool {
     let mut edges: Vec<(usize, usize)> = constraints
         .iter()
         .filter_map(|c| match c.bound {

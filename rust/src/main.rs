@@ -14,8 +14,8 @@
 use std::path::{Path, PathBuf};
 
 use catla::catla::{
-    aggregate, create_template, visualize, History, OptimizerRunner, Project, ProjectKind,
-    ProjectRunner, TaskRunner, TuningSettings,
+    aggregate, create_scoped_template, create_template, visualize, History, OptimizerRunner,
+    Project, ProjectKind, ProjectRunner, TaskRunner, TuningSettings,
 };
 use catla::hadoop::{Cluster, ClusterSpec, SimCluster};
 use catla::optim::surrogate::NativeScorer;
@@ -28,17 +28,26 @@ USAGE: catla <tool> [options]
 
 TOOLS
   template  --dir <folder> [--kind task|project|tuning] [--workload wordcount]
-            [--input-mb 2048]         create a project folder from templates
+            [--workloads a,b,...] [--input-mb 2048]
+                                      create a project folder from templates;
+                                      --workloads writes a scoped tuning
+                                      template (jobs.list + per-workload
+                                      `workload { ... }` spec blocks)
   task      --dir <folder>            submit one job, download results+logs
   project   --dir <folder>            run every job in jobs.list
   tuning    --dir <folder> [--prescreen native|pjrt|off]
                                       run the Optimizer Runner
-  tuning-group --dir <folder>         tune ONE shared config for jobs.list
+  tuning-group --dir <folder>         tune ONE merged config for jobs.list
+                                      (workload blocks scope dims per job)
+  sweep     --dir <folder> [--shard k/n] [--budget N]
+                                      exhaustive grid sweep; --shard stripes
+                                      the grid so n independent processes
+                                      partition the sweep exactly
   resume    --dir <folder> [--budget N]  continue an interrupted tuning run
   replay    --dir <folder> [--jobs N]    replay an arrival trace (default vs tuned)
   workflow  --dir <folder> [--tune]   run jobs.list as a DAG (after= deps);
-                                      --tune first finds one shared config
-                                      minimizing the DAG makespan
+                                      --tune first tunes the merged scoped
+                                      space minimizing the DAG makespan
   ui        --dir <folder>            terminal dashboard (CatlaUI view)
   aggregate --dir <folder>            re-aggregate logs from /history
   visualize --dir <folder> [--gnuplot]  charts from history CSVs
@@ -73,14 +82,27 @@ fn open_cluster(project: &Project) -> SimCluster {
     SimCluster::new(ClusterSpec::from_env(&project.env))
 }
 
-/// Surface non-fatal spec diagnostics (the params.spec typo guard) on
+/// Surface non-fatal spec diagnostics (the params.spec typo guard,
+/// aggregated across the global section and every workload block) on
 /// stderr before a tuning run starts.
 fn print_spec_warnings(project: &Project) {
-    if let Some(spec) = &project.spec {
-        for w in &spec.warnings {
+    if let Some(scoped) = &project.scoped {
+        for w in &scoped.warnings {
             eprintln!("warning: {w}");
         }
     }
+}
+
+/// Parse a `--shard k/n` value.
+fn parse_shard(s: &str) -> Result<(u64, u64), String> {
+    let err = || format!("--shard {s:?}: expected k/n with 0 <= k < n (e.g. 0/4)");
+    let (k, n) = s.split_once('/').ok_or_else(err)?;
+    let k: u64 = k.trim().parse().map_err(|_| err())?;
+    let n: u64 = n.trim().parse().map_err(|_| err())?;
+    if n == 0 || k >= n {
+        return Err(err());
+    }
+    Ok((k, n))
 }
 
 fn run(args: &Args) -> Result<(), String> {
@@ -91,6 +113,18 @@ fn run(args: &Args) -> Result<(), String> {
         }
         "template" => {
             let dir = project_dir(args)?;
+            let input_mb: f64 = args.opt_parse_or("input-mb", 2048.0)?;
+            if let Some(list) = args.opt("workloads") {
+                // scoped multi-workload tuning template: jobs.list + a
+                // params.spec with per-workload blocks from the suites'
+                // attached tuning specs
+                let names: Vec<&str> =
+                    list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+                create_scoped_template(&dir, &names, input_mb)?;
+                println!("created scoped Tuning project at {}", dir.display());
+                println!("next: catla workflow --dir {} --tune", dir.display());
+                return Ok(());
+            }
             let kind = match args.opt_or("kind", "task").as_str() {
                 "task" => ProjectKind::Task,
                 "project" => ProjectKind::Project,
@@ -98,10 +132,55 @@ fn run(args: &Args) -> Result<(), String> {
                 k => return Err(format!("unknown kind {k:?}")),
             };
             let workload = args.opt_or("workload", "wordcount");
-            let input_mb: f64 = args.opt_parse_or("input-mb", 2048.0)?;
             create_template(&dir, kind, &workload, input_mb)?;
             println!("created {kind:?} project at {}", dir.display());
             println!("next: catla task --dir {}", dir.display());
+            Ok(())
+        }
+        "sweep" => {
+            let dir = project_dir(args)?;
+            let project = Project::load(&dir)?;
+            print_spec_warnings(&project);
+            let spec = project
+                .spec
+                .clone()
+                .ok_or("sweep needs params.spec in the project")?;
+            if spec.dims() == 0 {
+                return Err(format!(
+                    "params.spec declares no parameters for workload {:?}",
+                    project.workload()?.name
+                ));
+            }
+            let (k, n) = match args.opt("shard") {
+                Some(s) => parse_shard(s)?,
+                None => (0, 1),
+            };
+            let budget: usize = args.opt_parse_or("budget", usize::MAX)?;
+            let workload = project.workload()?;
+            let mut cluster = open_cluster(&project);
+            println!("{}", cluster.describe());
+            let space = catla::optim::ParamSpace::new(spec.clone(), project.base_config()?);
+            let total = space.grid_cursor().total_points();
+            let mut opt = catla::optim::GridSearch::new().sharded(k, n);
+            let mut outcome = {
+                let mut obj = catla::optim::ClusterObjective::new(&mut cluster, &workload, 1);
+                catla::optim::Driver::new(budget).run(&mut opt, &space, &mut obj)?
+            };
+            outcome.optimizer = format!("grid[shard {k}/{n}]");
+            let history = History::open(&dir).map_err(|e| e.to_string())?;
+            let log_name = if n == 1 {
+                "tuning_log.csv".to_string()
+            } else {
+                format!("tuning_log.shard{k}of{n}.csv")
+            };
+            let log_path = history.write_tuning_log_to(&log_name, &spec, &outcome)?;
+            println!(
+                "sweep shard {k}/{n}: {} of {total} grid points evaluated, best {:.1}s",
+                outcome.evals(),
+                outcome.best_value
+            );
+            println!("best configuration: {}", outcome.best_config.summary());
+            println!("log: {}", log_path.display());
             Ok(())
         }
         "task" => {
@@ -189,8 +268,8 @@ fn run(args: &Args) -> Result<(), String> {
             let mut cluster = open_cluster(&project);
             println!("{}", cluster.describe());
             if args.has_flag("tune") {
-                let spec = project
-                    .spec
+                let scoped = project
+                    .scoped
                     .clone()
                     .ok_or("workflow --tune needs params.spec in the project")?;
                 // same validated parsing + Driver (early stopping, trace
@@ -208,10 +287,10 @@ fn run(args: &Args) -> Result<(), String> {
                         catla::optim::Driver::new(40),
                     ),
                 };
-                let tuned = catla::catla::workflow::tune_workflow(
+                let (tuned, merged) = catla::catla::workflow::tune_workflow(
                     &mut cluster,
                     &jobs,
-                    spec,
+                    &scoped,
                     project.base_config()?,
                     &method,
                     &mut driver,
@@ -222,9 +301,22 @@ fn run(args: &Args) -> Result<(), String> {
                     tuned.evals(),
                     tuned.best_value
                 );
-                println!("shared configuration: {}", tuned.best_config.summary());
+                println!("merged configuration: {}", tuned.best_config.summary());
+                // the merged log records scoped dims as <param>@<workload>
+                // columns, so `replay`/resume reconstruction can rebuild
+                // this exact space later
+                let history = History::open(&dir).map_err(|e| e.to_string())?;
+                let log_path = history.write_tuning_log(&merged.spec, &tuned)?;
+                println!("log: {}", log_path.display());
                 for j in &mut jobs {
-                    j.job.config = tuned.best_config.clone();
+                    j.job.config = merged.job_config(&tuned.best_config, &j.job.workload.name);
+                }
+                // per-job projections only differ on scoped specs
+                if merged.spec.ranges.iter().any(|r| r.name().contains('@')) {
+                    println!("per-job configurations:");
+                    for j in &jobs {
+                        println!("  {:<14} {}", j.job.name, j.job.config.summary());
+                    }
                 }
             }
             let out = catla::catla::workflow::run_workflow(&mut cluster, &jobs)?;
@@ -288,25 +380,12 @@ fn run(args: &Args) -> Result<(), String> {
             let cl = ClusterSpec::from_env(&project.env);
             let gen = catla::hadoop::trace::TraceGen::default();
             let trace = gen.generate(n_jobs, cl.seed);
-            // tuned config from the project's history (best summary row),
-            // else fall back to defaults-only replay
-            let tuned = History::open(&dir)
+            // tuned config from the project's history (best logged row,
+            // rebuilt against the exact space that produced the log —
+            // flat or merged), else fall back to defaults-only replay
+            let tuned = catla::catla::resume::best_logged_config(&project)
                 .ok()
-                .and_then(|h| h.load_tuning_log().ok())
-                .and_then(|csv| {
-                    let spec = project.spec.clone()?;
-                    let prior =
-                        catla::catla::resume::PriorRuns::from_log(&csv, &spec).ok()?;
-                    let (xs, _) = prior.best()?.clone();
-                    // lay the base out on the spec's registry so ranges
-                    // over spec-declared params index correctly
-                    let mut cfg = project.base_config().ok()?.rebased(&spec.registry);
-                    for (r, x) in spec.ranges.iter().zip(&xs) {
-                        cfg.set(r.index, *x);
-                    }
-                    spec.repair(&mut cfg.values); // match decode exactly
-                    Some(cfg)
-                });
+                .flatten();
             let before =
                 catla::hadoop::trace::replay(&cl, &trace, &catla::config::params::HadoopConfig::default(), 7);
             println!(

@@ -21,6 +21,10 @@ pub struct GridSearch {
     cursor: Option<GridCursor>,
     /// Max points proposed per ask (the driver's `batch.chunk`).
     chunk: usize,
+    /// Sweep only stripe `k` of `n` ([`GridCursor::shard`]): shard
+    /// unions partition the full grid exactly, so independent processes
+    /// (`catla sweep --shard k/n`) can split an exhaustive sweep.
+    shard: Option<(u64, u64)>,
     /// Does this sweep dedup by decoded config? Latched at the first
     /// ask: constraints can collapse distinct grid points onto one
     /// config, and a tell arriving before the first ask (resume replay)
@@ -62,10 +66,20 @@ impl GridSearch {
         GridSearch {
             cursor: None,
             chunk: DEFAULT_BATCH_CHUNK,
+            shard: None,
             need_keys: None,
             done: HashSet::new(),
             best: BestSeen::default(),
         }
+    }
+
+    /// Restrict this sweep to stripe `k` of `n` of the grid (points
+    /// `k, k+n, k+2n, …` in cursor order). Shards partition the grid
+    /// exactly — run one process per shard to split an exhaustive sweep.
+    pub fn sharded(mut self, k: u64, n: u64) -> GridSearch {
+        assert!(n > 0 && k < n, "sharded({k}, {n}): need 0 <= k < n");
+        self.shard = Some((k, n));
+        self
     }
 
     /// Bound the number of points proposed per ask when driving the
@@ -98,7 +112,11 @@ impl Optimizer for GridSearch {
         let need_keys = *self
             .need_keys
             .get_or_insert(!self.done.is_empty() || !space.spec.constraints.is_empty());
-        let cursor = self.cursor.get_or_insert_with(|| space.grid_cursor());
+        let shard = self.shard;
+        let cursor = self.cursor.get_or_insert_with(|| match shard {
+            Some((k, n)) => space.grid_cursor().shard(k, n),
+            None => space.grid_cursor(),
+        });
         let want = budget_left.min(self.chunk);
         let mut batch = Vec::with_capacity(want.min(DEFAULT_BATCH_CHUNK));
         let mut batch_keys = HashSet::new();
@@ -279,6 +297,26 @@ mod tests {
             (n as u64) < space.grid_cursor().total_points(),
             "constraint collapsed nothing?"
         );
+    }
+
+    #[test]
+    fn sharded_searches_partition_the_grid() {
+        let space = space();
+        let n = 3u64;
+        let mut seen: Vec<(i64, i64)> = Vec::new();
+        for k in 0..n {
+            let mut obj = FnObjective(|c: &HadoopConfig| {
+                seen.push((c.get(P_REDUCES) as i64, c.get(P_IO_SORT_MB) as i64));
+                1.0
+            });
+            let out = Driver::new(usize::MAX)
+                .run(&mut GridSearch::new().sharded(k, n), &space, &mut obj)
+                .unwrap();
+            assert!(out.evals() > 0);
+        }
+        assert_eq!(seen.len(), 256, "shards did not cover the grid");
+        let distinct: std::collections::BTreeSet<_> = seen.iter().collect();
+        assert_eq!(distinct.len(), 256, "shards overlapped");
     }
 
     #[test]

@@ -4,10 +4,19 @@
 //!
 //! Ask/tell port: a one-shot design *is* one ask-batch — the first ask
 //! stratifies the remaining budget, later asks return nothing.
+//!
+//! Constraint-aware sampling: on a constrained space, design points
+//! whose unrepaired decode violates a `Constraint` are replaced by
+//! uniform rejection draws (up to [`INIT_REJECTION_TRIES`] each, the
+//! original stratified point kept as the snap-down-repair fallback).
+//! Feasible design points keep their strata, so the design stays
+//! space-filling where the feasible region allows it, and probability
+//! mass stops piling onto the constraint boundary. Constraint-free
+//! specs consume the RNG exactly as before (byte-identical designs).
 
 use crate::optim::core::{BestSeen, Candidate, Optimizer};
 use crate::optim::result::EvalRecord;
-use crate::optim::space::ParamSpace;
+use crate::optim::space::{ParamSpace, INIT_REJECTION_TRIES};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -37,7 +46,10 @@ impl LatinHypercube {
 }
 
 fn points_seeded(seed: u64, n: usize, d: usize) -> Vec<Vec<f64>> {
-    let mut rng = Rng::new(seed);
+    points_with(&mut Rng::new(seed), n, d)
+}
+
+fn points_with(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f64>> {
     // per-dimension stratum permutations
     let mut perms: Vec<Vec<usize>> = Vec::with_capacity(d);
     for _ in 0..d {
@@ -67,10 +79,27 @@ impl Optimizer for LatinHypercube {
             .seed
             .wrapping_add(self.round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         self.round += 1;
-        points_seeded(seed, budget_left, space.dims())
-            .into_iter()
-            .map(Candidate::new)
-            .collect()
+        let d = space.dims();
+        let mut rng = Rng::new(seed);
+        let mut pts = points_with(&mut rng, budget_left, d);
+        if !space.spec.constraints.is_empty() {
+            // replace infeasible design points by feasible uniform draws
+            // (the stratified original stays as the repair fallback)
+            let mut scratch = space.base.clone();
+            for p in pts.iter_mut() {
+                if space.unit_feasible(p, &mut scratch) {
+                    continue;
+                }
+                for _ in 0..INIT_REJECTION_TRIES {
+                    let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                    if space.unit_feasible(&x, &mut scratch) {
+                        *p = x;
+                        break;
+                    }
+                }
+            }
+        }
+        pts.into_iter().map(Candidate::new).collect()
     }
 
     fn tell(&mut self, evals: &[EvalRecord]) {
@@ -154,5 +183,48 @@ mod tests {
         assert_eq!(first.len(), 25);
         assert_eq!(second.len(), 25);
         assert_ne!(first[0].unit_x, second[0].unit_x);
+    }
+
+    #[test]
+    fn unconstrained_ask_is_the_canonical_design() {
+        // no constraints -> ask proposes exactly points_seeded(seed)
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let batch = LatinHypercube::new(6).ask(&space, 17);
+        let reference = points_seeded(6, 17, space.dims());
+        for (c, r) in batch.iter().zip(&reference) {
+            assert_eq!(&c.unit_x, r);
+        }
+    }
+
+    #[test]
+    fn constrained_design_rejects_into_the_feasible_region() {
+        let spec = TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 16 2048\n\
+             param mapreduce.map.memory.mb int 512 4096\n\
+             constraint io.sort.mb <= 0.25*map.memory.mb\n",
+        )
+        .unwrap();
+        let space = ParamSpace::new(spec, HadoopConfig::default());
+        let a = LatinHypercube::new(9).ask(&space, 48);
+        let b = LatinHypercube::new(9).ask(&space, 48);
+        let mut scratch = space.base.clone();
+        let mut feasible = 0usize;
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.unit_x, y.unit_x, "constrained design not deterministic");
+            if space.unit_feasible(&x.unit_x, &mut scratch) {
+                feasible += 1;
+            }
+        }
+        // the raw stratified design lands infeasible ~72% of the time on
+        // this spec; rejection must make feasible draws the rule
+        assert!(feasible >= 44, "only {feasible}/48 design points feasible");
+        // feasible stratified points keep their strata: points that were
+        // feasible in the canonical design appear unchanged
+        let canonical = points_seeded(9, 48, space.dims());
+        for (c, orig) in a.iter().zip(&canonical) {
+            if space.unit_feasible(orig, &mut scratch) {
+                assert_eq!(&c.unit_x, orig, "feasible design point was perturbed");
+            }
+        }
     }
 }

@@ -5,10 +5,19 @@
 //! The points come off one sequential RNG stream, so the proposal
 //! sequence (and therefore the outcome) is byte-identical to the old
 //! one-eval-per-iteration loop.
+//!
+//! Constraint-aware sampling: on a constrained space each point is drawn
+//! by rejection against the spec's `Constraint` predicates — an
+//! infeasible draw is redrawn up to [`INIT_REJECTION_TRIES`] times, then
+//! the original draw is kept and decode's snap-down repair takes over.
+//! Uniform-on-the-feasible-region instead of "uniform then project",
+//! which piled probability mass onto the constraint boundary.
+//! Constraint-free specs consume the RNG stream exactly as before
+//! (byte-identical proposals).
 
 use crate::optim::core::{BestSeen, Candidate, Optimizer};
 use crate::optim::result::EvalRecord;
-use crate::optim::space::ParamSpace;
+use crate::optim::space::{ParamSpace, INIT_REJECTION_TRIES};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -37,8 +46,28 @@ impl Optimizer for RandomSearch {
         let seed = self.seed;
         let rng = self.rng.get_or_insert_with(|| Rng::new(seed));
         let d = space.dims();
+        if space.spec.constraints.is_empty() {
+            return (0..budget_left)
+                .map(|_| Candidate::new((0..d).map(|_| rng.f64()).collect()))
+                .collect();
+        }
+        // rejection against the feasible region; the first draw is the
+        // fallback so pathologically thin regions still sample
+        let mut scratch = space.base.clone();
         (0..budget_left)
-            .map(|_| Candidate::new((0..d).map(|_| rng.f64()).collect()))
+            .map(|_| {
+                let first: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                if space.unit_feasible(&first, &mut scratch) {
+                    return Candidate::new(first);
+                }
+                for _ in 0..INIT_REJECTION_TRIES {
+                    let x: Vec<f64> = (0..d).map(|_| rng.f64()).collect();
+                    if space.unit_feasible(&x, &mut scratch) {
+                        return Candidate::new(x);
+                    }
+                }
+                Candidate::new(first)
+            })
             .collect()
     }
 
@@ -96,5 +125,78 @@ mod tests {
         let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
         let mut r = RandomSearch::new(4);
         assert_eq!(r.ask(&space, 37).len(), 37);
+    }
+
+    #[test]
+    fn unconstrained_sampling_is_the_plain_rng_stream() {
+        // no constraints -> the ask must consume the RNG exactly as the
+        // pre-rejection code did (one f64 per dimension per point)
+        let space = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+        let batch = RandomSearch::new(11).ask(&space, 9);
+        let mut rng = Rng::new(11);
+        for c in &batch {
+            for &v in &c.unit_x {
+                assert_eq!(v.to_bits(), rng.f64().to_bits());
+            }
+        }
+    }
+
+    fn constrained_space() -> ParamSpace {
+        // the bound 0.25*memory cuts deep into sort.mb's range, so a
+        // large fraction of the unit cube is infeasible pre-repair
+        let spec = TuningSpec::parse(
+            "param mapreduce.task.io.sort.mb int 16 2048\n\
+             param mapreduce.map.memory.mb int 512 4096\n\
+             constraint io.sort.mb <= 0.25*map.memory.mb\n",
+        )
+        .unwrap();
+        ParamSpace::new(spec, HadoopConfig::default())
+    }
+
+    #[test]
+    fn constrained_sampling_is_deterministic_and_mostly_feasible() {
+        let space = constrained_space();
+        let a = RandomSearch::new(7).ask(&space, 64);
+        let b = RandomSearch::new(7).ask(&space, 64);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.unit_x, y.unit_x, "rejection sampling not deterministic");
+        }
+        let mut scratch = space.base.clone();
+        let feasible = a
+            .iter()
+            .filter(|c| space.unit_feasible(&c.unit_x, &mut scratch))
+            .count();
+        assert!(feasible >= 60, "only {feasible}/64 draws feasible pre-repair");
+    }
+
+    #[test]
+    fn rejection_takes_mass_off_the_constraint_boundary() {
+        let space = constrained_space();
+        let n = 200;
+        // legacy behavior: decode the raw stream and count configs that
+        // repair snapped exactly onto the bound
+        let on_boundary = |xs: &[Vec<f64>]| -> usize {
+            xs.iter()
+                .filter(|x| {
+                    let cfg = space.decode(x);
+                    let bound = space.spec.constraints[0].bound_value(&cfg.values);
+                    cfg.values[space.spec.ranges[0].index] == bound.floor()
+                })
+                .count()
+        };
+        let mut rng = Rng::new(3);
+        let legacy: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..space.dims()).map(|_| rng.f64()).collect())
+            .collect();
+        let rejection: Vec<Vec<f64>> = RandomSearch::new(3)
+            .ask(&space, n)
+            .into_iter()
+            .map(|c| c.unit_x)
+            .collect();
+        let (legacy_hits, rejection_hits) = (on_boundary(&legacy), on_boundary(&rejection));
+        assert!(
+            rejection_hits * 4 <= legacy_hits,
+            "boundary mass not reduced: legacy {legacy_hits}/{n}, rejection {rejection_hits}/{n}"
+        );
     }
 }

@@ -13,6 +13,12 @@ use crate::config::params::HadoopConfig;
 use crate::config::space::Transform;
 use crate::config::spec::TuningSpec;
 
+/// Redraws a constraint-aware init sampler spends per point before
+/// falling back to its original draw (whose violation the decode-time
+/// snap-down repair then fixes) — bounds worst-case work on specs whose
+/// feasible region is a sliver of the unit cube.
+pub const INIT_REJECTION_TRIES: usize = 32;
+
 #[derive(Clone, Debug)]
 pub struct ParamSpace {
     pub spec: TuningSpec,
@@ -46,6 +52,32 @@ impl ParamSpace {
         }
         self.spec.repair(&mut cfg.values);
         cfg
+    }
+
+    /// Decode `x` into `scratch` WITHOUT constraint repair: apply each
+    /// range's transform and snap discrete kinds only. This is the probe
+    /// behind constraint-aware init sampling — rejection wants to know
+    /// whether the *unrepaired* point lands in the feasible region
+    /// (repaired decode trivially always does). `scratch` must be a
+    /// clone of this space's `base`.
+    pub fn decode_raw_into(&self, x: &[f64], scratch: &mut HadoopConfig) {
+        debug_assert_eq!(x.len(), self.dims(), "dimension mismatch");
+        scratch.values.copy_from_slice(&self.base.values);
+        for (r, &u) in self.spec.ranges.iter().zip(x) {
+            let u = u.clamp(0.0, 1.0);
+            scratch.set(r.index, r.transform.from_unit(u, r.lo, r.hi));
+        }
+    }
+
+    /// Does the unrepaired decode of `x` satisfy every constraint?
+    /// (Always true for constraint-free specs.) Used by the rejection
+    /// samplers in `optim::random` / `optim::latin`.
+    pub fn unit_feasible(&self, x: &[f64], scratch: &mut HadoopConfig) -> bool {
+        self.decode_raw_into(x, scratch);
+        self.spec
+            .constraints
+            .iter()
+            .all(|c| c.satisfied(&scratch.values))
     }
 
     /// Does `cfg` satisfy every constraint of the spec? Configs laid out
@@ -431,6 +463,24 @@ mod tests {
             s.is_feasible(&foreign),
             "constraint read a foreign registry's slot positionally"
         );
+    }
+
+    #[test]
+    fn unit_feasible_probes_the_unrepaired_decode() {
+        let s = rich_space();
+        let mut scratch = s.base.clone();
+        // sort.mb at its top with map memory at its bottom violates the
+        // constraint BEFORE repair — decode() would silently fix it
+        assert!(!s.unit_feasible(&[0.0, 1.0, 0.0], &mut scratch));
+        assert!(s.unit_feasible(&[0.0, 0.0, 1.0], &mut scratch));
+        // constraint-free specs are always feasible
+        let flat = space();
+        let mut scratch = flat.base.clone();
+        assert!(flat.unit_feasible(&[1.0, 1.0], &mut scratch));
+        // the probe agrees with is_feasible on the raw decode
+        let mut raw = s.base.clone();
+        s.decode_raw_into(&[0.0, 1.0, 0.0], &mut raw);
+        assert!(!s.is_feasible(&raw));
     }
 
     #[test]

@@ -14,6 +14,14 @@ pub use suite::{grep, join, pagerank_iteration, terasort, wordcount};
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkloadSpec {
     pub name: String,
+    /// Suggested per-workload tuning block: the `param`/`constraint`
+    /// lines worth scoping to this suite in a `workload <name> { ... }`
+    /// block of `params.spec` (shuffle-heavy suites tune codec +
+    /// parallelcopies, CPU-bound suites memory + slowstart, …).
+    /// Rendered by [`suggested_scoped_spec`] / `catla template
+    /// --workloads`; never applied implicitly — explicit blocks in the
+    /// project's spec are the only thing tuning runs read.
+    pub tuning_spec: Option<&'static str>,
     /// Total input size in MB.
     pub input_mb: f64,
     /// map output bytes / map input bytes (after combiner, if any).
@@ -76,6 +84,33 @@ pub fn by_name(name: &str, input_mb: f64) -> Option<WorkloadSpec> {
 
 pub const BUILTIN_NAMES: [&str; 5] = ["wordcount", "terasort", "grep", "join", "pagerank"];
 
+/// Render a scoped `params.spec` for a suite of workloads: a small
+/// shared block plus each workload's suggested `workload { ... }` block
+/// (suites without an attachment contribute no block and tune the
+/// shared dims only). The output parses with
+/// [`crate::config::scope::ScopedSpec::parse`].
+pub fn suggested_scoped_spec(workloads: &[&WorkloadSpec]) -> String {
+    let mut out = String::from(
+        "# Catla scoped tuning specification\n\
+         # shared block: tuned once, applied to every job\n\
+         param mapreduce.job.reduces int 1 64\n",
+    );
+    for w in workloads {
+        let Some(block) = w.tuning_spec else { continue };
+        out.push_str(&format!("\nworkload {} {{\n", w.name));
+        for line in block.lines() {
+            let line = line.trim();
+            if !line.is_empty() {
+                out.push_str("  ");
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out.push_str("}\n");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +127,35 @@ mod tests {
     #[test]
     fn unknown_name_is_none() {
         assert!(by_name("sleepjob", 1.0).is_none());
+    }
+
+    #[test]
+    fn suite_tuning_attachments_parse_standalone_and_merged() {
+        use crate::config::scope::ScopedSpec;
+        use crate::config::spec::TuningSpec;
+        // every attached block is a valid flat spec fragment...
+        for name in BUILTIN_NAMES {
+            let w = by_name(name, 1024.0).unwrap();
+            let block = w.tuning_spec.unwrap_or_else(|| panic!("{name}: no attachment"));
+            let spec = TuningSpec::parse(block).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(spec.dims() >= 1, "{name}: empty attachment");
+            assert!(spec.warnings.is_empty(), "{name}: {:?}", spec.warnings);
+        }
+        // ...and the rendered suite file parses as a scoped spec whose
+        // blocks own exactly their attached params
+        let all: Vec<WorkloadSpec> = BUILTIN_NAMES
+            .iter()
+            .map(|n| by_name(n, 1024.0).unwrap())
+            .collect();
+        let refs: Vec<&WorkloadSpec> = all.iter().collect();
+        let text = suggested_scoped_spec(&refs);
+        let scoped = ScopedSpec::parse(&text).unwrap();
+        assert_eq!(scoped.scopes.len(), 5);
+        assert!(scoped.warnings.is_empty(), "{:?}", scoped.warnings);
+        let names: Vec<&str> = BUILTIN_NAMES.to_vec();
+        let merged = scoped.merge(&names).unwrap();
+        // shared reduces + every block's scoped dims
+        assert!(merged.dims() > scoped.global.dims());
     }
 
     #[test]

@@ -11,6 +11,11 @@ use super::WorkloadSpec;
 pub fn wordcount(input_mb: f64) -> WorkloadSpec {
     WorkloadSpec {
         name: "wordcount".into(),
+        tuning_spec: Some(
+            "# CPU-bound with a combiner: task memory + reduce overlap matter most\n\
+             param mapreduce.map.memory.mb int 512 4096 log\n\
+             param mapreduce.job.reduce.slowstart.completedmaps float 0.05 1.0",
+        ),
         input_mb,
         map_selectivity: 0.30,
         cpu_per_mb_map: 0.012,
@@ -27,6 +32,11 @@ pub fn wordcount(input_mb: f64) -> WorkloadSpec {
 pub fn terasort(input_mb: f64) -> WorkloadSpec {
     WorkloadSpec {
         name: "terasort".into(),
+        tuning_spec: Some(
+            "# pure shuffle/IO stress: wire bytes + copy parallelism matter most\n\
+             param mapreduce.map.output.compress bool\n\
+             param mapreduce.reduce.shuffle.parallelcopies int 1 64",
+        ),
         input_mb,
         map_selectivity: 1.0,
         cpu_per_mb_map: 0.002,
@@ -42,6 +52,10 @@ pub fn terasort(input_mb: f64) -> WorkloadSpec {
 pub fn grep(input_mb: f64) -> WorkloadSpec {
     WorkloadSpec {
         name: "grep".into(),
+        tuning_spec: Some(
+            "# map-side selective scan: split geometry dominates\n\
+             param mapreduce.input.fileinputformat.split.mb int 32 512",
+        ),
         input_mb,
         map_selectivity: 0.01,
         cpu_per_mb_map: 0.008,
@@ -58,6 +72,11 @@ pub fn grep(input_mb: f64) -> WorkloadSpec {
 pub fn join(input_mb: f64) -> WorkloadSpec {
     WorkloadSpec {
         name: "join".into(),
+        tuning_spec: Some(
+            "# skewed shuffle: reducer memory + copy parallelism matter most\n\
+             param mapreduce.reduce.memory.mb int 512 8192 log\n\
+             param mapreduce.reduce.shuffle.parallelcopies int 1 64",
+        ),
         input_mb,
         map_selectivity: 1.05, // tagging adds a little
         cpu_per_mb_map: 0.005,
@@ -74,6 +93,11 @@ pub fn join(input_mb: f64) -> WorkloadSpec {
 pub fn pagerank_iteration(input_mb: f64) -> WorkloadSpec {
     WorkloadSpec {
         name: "pagerank".into(),
+        tuning_spec: Some(
+            "# many tiny records: sort buffer geometry dominates map cost\n\
+             param mapreduce.task.io.sort.mb int 16 2048 log\n\
+             param mapreduce.map.sort.spill.percent float 0.5 0.95",
+        ),
         input_mb,
         map_selectivity: 0.80,
         cpu_per_mb_map: 0.006,

@@ -155,6 +155,64 @@ fn pjrt_prescreen_tuning_via_cli() {
 }
 
 #[test]
+fn sharded_sweep_partitions_the_grid_across_processes() {
+    let dir = tmp("sweep");
+    let dir_s = dir.to_str().unwrap();
+    run(&["template", "--dir", dir_s, "--kind", "tuning", "--input-mb", "512"]);
+    // 4 x 4 = 16 grid points
+    std::fs::write(
+        dir.join("params.spec"),
+        "param mapreduce.job.reduces int 2 8 step 2\n\
+         param mapreduce.task.io.sort.mb int 100 400 step 100\n",
+    )
+    .unwrap();
+    let mut rows = 0usize;
+    for k in 0..2 {
+        let shard = format!("{k}/2");
+        let (ok, stdout, stderr) = run(&["sweep", "--dir", dir_s, "--shard", &shard]);
+        assert!(ok, "sweep shard {k} failed: {stderr}");
+        assert!(stdout.contains("of 16 grid points"), "{stdout}");
+        let log = dir.join(format!("history/tuning_log.shard{k}of2.csv"));
+        assert!(log.is_file(), "missing {}", log.display());
+        let text = std::fs::read_to_string(&log).unwrap();
+        rows += text.lines().count() - 1; // minus header
+    }
+    assert_eq!(rows, 16, "shards did not partition the sweep");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn scoped_workflow_tune_renders_per_job_configs() {
+    let dir = tmp("scoped-wf");
+    let dir_s = dir.to_str().unwrap();
+    let (ok, _, stderr) = run(&[
+        "template",
+        "--dir",
+        dir_s,
+        "--workloads",
+        "terasort,wordcount",
+        "--input-mb",
+        "512",
+    ]);
+    assert!(ok, "scoped template failed: {stderr}");
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=random\nbudget=6\nrepeats=1\nseed=2\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) = run(&["workflow", "--dir", dir_s, "--tune"]);
+    assert!(ok, "scoped workflow --tune failed: {stderr}");
+    assert!(stdout.contains("per-job configurations"), "{stdout}");
+    assert!(stdout.contains("workflow makespan"), "{stdout}");
+    // merged log records scoped dims as <param>@<workload> columns
+    let log = std::fs::read_to_string(dir.join("history/tuning_log.csv")).unwrap();
+    let header = log.lines().next().unwrap();
+    assert!(header.contains("@terasort"), "{header}");
+    assert!(header.contains("@wordcount"), "{header}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn aggregate_tool_reports() {
     let dir = tmp("agg");
     let dir_s = dir.to_str().unwrap();

@@ -97,6 +97,7 @@ fn pathological_workload_profiles() {
     // selectivity > 1 (join-like blowup), microscopic records, zero skew
     let blowup = WorkloadSpec {
         name: "blowup".into(),
+        tuning_spec: None,
         input_mb: 1024.0,
         map_selectivity: 50.0,
         cpu_per_mb_map: 0.001,

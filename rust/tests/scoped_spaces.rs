@@ -1,0 +1,226 @@
+//! Scoped parameter spaces, end to end: the ISSUE-5 acceptance scenario
+//! (a two-workload workflow tuned over a merged space, per-job `-D`
+//! rendering, byte-identical resume reconstruction) plus the flat-spec
+//! bit-identity guarantee across all eight ask/tell methods.
+
+use catla::catla::resume::best_logged_config;
+use catla::catla::workflow::{self, WorkflowJob};
+use catla::catla::{create_template, History, Project, ProjectKind, TuningSettings};
+use catla::config::params::HadoopConfig;
+use catla::config::scope::ScopedSpec;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, JobSubmission, SimCluster};
+use catla::optim::core::ClusterObjective;
+use catla::optim::{Driver, Method, ParamSpace, TuningOutcome, ALL_METHODS};
+use catla::workloads::wordcount;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("catla-scoped-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+const ACCEPTANCE_SPEC: &str = "param mapreduce.job.reduces int 2 32\n\
+     workload terasort {\n\
+       param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+       param mapreduce.reduce.shuffle.parallelcopies int 4 64\n\
+     }\n\
+     workload wordcount {\n\
+       param mapreduce.map.memory.mb int 512 4096\n\
+       param mapreduce.job.reduce.slowstart.completedmaps float 0.05 0.95\n\
+     }\n";
+
+/// The acceptance criterion: a two-workload workflow tune (terasort:
+/// codec + parallelcopies; wordcount: memory + slowstart) runs end to
+/// end, each job's rendered `-D` args contain only its scoped + shared
+/// params, and replaying the written log reconstructs the identical
+/// best configuration.
+#[test]
+fn two_workload_workflow_tunes_renders_and_replays() {
+    let dir = tmp("acceptance");
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(dir.join("params.spec"), ACCEPTANCE_SPEC).unwrap();
+    std::fs::write(
+        dir.join("jobs.list"),
+        "sort terasort 1024\nwc wordcount 1024 after=sort\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=20\nrepeats=1\nseed=3\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    let scoped = project.scoped.clone().unwrap();
+    assert!(scoped.warnings.is_empty(), "{:?}", scoped.warnings);
+    let jobs: Vec<WorkflowJob> = workflow::from_project(&project).unwrap();
+
+    let settings = TuningSettings::from_project(&project).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let (outcome, merged) = workflow::tune_workflow(
+        &mut cluster,
+        &jobs,
+        &scoped,
+        project.base_config().unwrap(),
+        &Method::from_name(&settings.optimizer, settings.seed).unwrap(),
+        &mut settings.driver(),
+    )
+    .unwrap();
+    assert_eq!(merged.dims(), 5, "shared reduces + 2 + 2 scoped dims");
+    assert!(outcome.evals() <= 20);
+    assert!(outcome.optimizer.contains("workflow x2"), "{}", outcome.optimizer);
+
+    // ---- per-job -D rendering from the projections -------------------
+    let best = &outcome.best_config;
+    let sort_cfg = merged.job_config(best, "terasort");
+    let wc_cfg = merged.job_config(best, "wordcount");
+    let cmd = |name: &str, wl: &str, cfg: &HadoopConfig| {
+        JobSubmission {
+            name: name.into(),
+            workload: catla::workloads::by_name(wl, 1024.0).unwrap(),
+            config: cfg.clone(),
+        }
+        .command_line()
+    };
+    let sort_cmd = cmd("sort", "terasort", &sort_cfg);
+    let wc_cmd = cmd("wc", "wordcount", &wc_cfg);
+    // terasort renders its scoped codec + parallelcopies...
+    assert!(
+        sort_cmd.contains("-Dmapreduce.map.output.compress.codec="),
+        "{sort_cmd}"
+    );
+    // ...wordcount's -D args never mention terasort's private knob
+    assert!(!wc_cmd.contains("codec"), "scoped param leaked: {wc_cmd}");
+    // both carry the SAME shared reduces value, taken from the merged best
+    let reduces = best.get_by_name("mapreduce.job.reduces").unwrap();
+    let tag = format!("-Dmapreduce.job.reduces={}", reduces as i64);
+    assert!(sort_cmd.contains(&tag), "{sort_cmd}");
+    assert!(wc_cmd.contains(&tag), "{wc_cmd}");
+    // scoped values route to their owner
+    assert_eq!(
+        sort_cfg.get_by_name("parallelcopies").unwrap(),
+        best.get_by_name("mapreduce.reduce.shuffle.parallelcopies@terasort")
+            .unwrap()
+    );
+    assert_eq!(
+        wc_cfg.get_by_name("map.memory.mb").unwrap(),
+        best.get_by_name("mapreduce.map.memory.mb@wordcount").unwrap()
+    );
+    // ...and not to the other job: wordcount keeps the Hadoop default
+    assert_eq!(wc_cfg.get_by_name("parallelcopies").unwrap(), 5.0);
+    sort_cfg.validate().unwrap();
+    wc_cfg.validate().unwrap();
+
+    // ---- resume replay reconstructs the identical best config --------
+    let history = History::open(&dir).unwrap();
+    history.write_tuning_log(&merged.spec, &outcome).unwrap();
+    let reloaded = Project::load(&dir).unwrap();
+    let rebuilt = best_logged_config(&reloaded)
+        .unwrap()
+        .expect("merged log written");
+    assert_eq!(
+        rebuilt, *best,
+        "resume replay did not reconstruct the merged best config"
+    );
+    // the projections of the rebuilt point are the exact per-job configs
+    assert_eq!(merged.job_config(&rebuilt, "terasort"), sort_cfg);
+    assert_eq!(merged.job_config(&rebuilt, "wordcount"), wc_cfg);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A merged log must win the reconstruction even when the project's own
+/// job workload has no block — its flat effective spec covers a strict
+/// SUBSET of the merged log's columns, and a subset-based spec match
+/// would silently drop every tuned `@workload` dim.
+#[test]
+fn merged_log_is_not_shadowed_by_a_blockless_project_workload() {
+    let dir = tmp("shadow");
+    create_template(&dir, ProjectKind::Tuning, "grep", 1024.0).unwrap();
+    std::fs::write(dir.join("params.spec"), ACCEPTANCE_SPEC).unwrap();
+    std::fs::write(
+        dir.join("jobs.list"),
+        "sort terasort 1024\nwc wordcount 1024\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=random\nbudget=6\nseed=4\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    // grep has no block: the project's effective spec is the 1-dim
+    // shared space, a strict subset of the merged log's columns
+    assert_eq!(project.spec.as_ref().unwrap().dims(), 1);
+    let scoped = project.scoped.clone().unwrap();
+    let jobs = workflow::from_project(&project).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let (outcome, merged) = workflow::tune_workflow(
+        &mut cluster,
+        &jobs,
+        &scoped,
+        project.base_config().unwrap(),
+        &Method::Random { seed: 4 },
+        &mut Driver::new(6),
+    )
+    .unwrap();
+    History::open(&dir)
+        .unwrap()
+        .write_tuning_log(&merged.spec, &outcome)
+        .unwrap();
+    let rebuilt = best_logged_config(&Project::load(&dir).unwrap())
+        .unwrap()
+        .expect("merged log written");
+    assert_eq!(
+        rebuilt, outcome.best_config,
+        "flat project spec shadowed the merged tuning log"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn fingerprint(out: &TuningOutcome) -> String {
+    use std::fmt::Write;
+    let mut s = String::new();
+    for r in &out.records {
+        write!(s, "{:x};", r.value.to_bits()).unwrap();
+        for v in &r.config.values {
+            write!(s, "{:x},", v.to_bits()).unwrap();
+        }
+        s.push('|');
+    }
+    write!(s, "best={:x}", out.best_value.to_bits()).unwrap();
+    s
+}
+
+/// Legacy guarantee: a flat (blockless) spec driven through the merge
+/// layer decodes bit-identically for every one of the eight methods —
+/// the merge is a pure superset, not a behavior change.
+#[test]
+fn flat_specs_drive_all_eight_methods_bit_identically_through_the_merge() {
+    let wl = wordcount(512.0);
+    let flat = TuningSpec::fig2();
+    let scoped = ScopedSpec::flat(flat.clone());
+    let merged = scoped.merge(&["wordcount"]).unwrap();
+    assert_eq!(merged.spec, flat, "flat merge changed the spec");
+
+    for name in ALL_METHODS {
+        let drive = |spec: &TuningSpec| -> TuningOutcome {
+            let mut cluster = SimCluster::new(ClusterSpec::default());
+            let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+            let space = ParamSpace::new(spec.clone(), HadoopConfig::default());
+            let mut opt = Method::from_name(name, 17).unwrap().build();
+            Driver::new(12).run(opt.as_mut(), &space, &mut obj).unwrap()
+        };
+        let direct = drive(&flat);
+        let through_merge = drive(&merged.spec);
+        assert_eq!(
+            fingerprint(&direct),
+            fingerprint(&through_merge),
+            "{name}: flat spec diverged through the merge layer"
+        );
+        // projection is the identity on every evaluated config
+        for r in &through_merge.records {
+            assert_eq!(merged.job_config(&r.config, "wordcount"), r.config, "{name}");
+        }
+    }
+}
