@@ -1,0 +1,227 @@
+//! PERF — tuning-as-a-service: ~1000 interleaved sessions multiplexed
+//! over one dispatcher (shared thread pool + global memo-cache).
+//! Measures sessions/s, memo-cache hit rate, and p50/p99 ask-to-tell
+//! latency (one dispatcher step = ask → evaluate → tell for every
+//! session it admits), asserts bounded memory via VmHWM, and re-asserts
+//! the hard correctness bar in-run: every session's outcome fingerprint
+//! is byte-identical to the same spec run standalone through
+//! `Driver::run`. Records `BENCH_serve.json` for the CI bench smoke.
+//!
+//! Session population: `GROUPS` distinct (cluster seed, workload input)
+//! tuning problems, ~100 sessions each — the realistic serve shape where
+//! many users tune the same few workloads, so most evaluations are
+//! cache-served and only one session per group per step actually
+//! touches the DES.
+//!
+//! Run: `cargo bench --bench serve` (CATLA_BENCH_QUICK=1 shortens)
+
+use std::time::Instant;
+
+use catla::catla::TuningSettings;
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::core::DEFAULT_BATCH_CHUNK;
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, TuningOutcome};
+use catla::serve::{Dispatcher, ServeSession, DEFAULT_CACHE_ENTRIES};
+use catla::util::json::Json;
+use catla::util::pool::default_threads;
+use catla::workloads::{wordcount, WorkloadSpec};
+
+const METHOD: &str = "coordinate";
+const BUDGET: usize = 8;
+const SEED: u64 = 23;
+const GROUPS: usize = 10;
+
+/// Peak resident set (VmHWM) in kB. Linux-only; absent elsewhere.
+fn vm_hwm_kb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().ok();
+        }
+    }
+    None
+}
+
+/// The g-th distinct tuning problem: its own cluster seed stream and
+/// workload size, so groups never share cache entries.
+fn group_specs(g: usize) -> (ClusterSpec, WorkloadSpec) {
+    let cluster = ClusterSpec {
+        seed: 42 + g as u64,
+        ..ClusterSpec::default()
+    };
+    (cluster, wordcount(1024.0 + 256.0 * g as f64))
+}
+
+fn settings() -> TuningSettings {
+    TuningSettings {
+        optimizer: METHOD.to_string(),
+        budget: BUDGET,
+        repeats: 1,
+        seed: SEED,
+        prescreen: false,
+        early_patience: 0,
+        early_tol: 1e-3,
+        batch_chunk: DEFAULT_BATCH_CHUNK,
+        cache_entries: None,
+    }
+}
+
+/// Byte-exact outcome fingerprint (same idiom as rust/tests/serve.rs).
+fn fingerprint(out: &TuningOutcome) -> String {
+    let mut s = format!("{}|{}|{:x}", out.optimizer, out.evals(), out.best_value.to_bits());
+    for r in &out.records {
+        s.push_str(&format!(
+            ";{}:{:x}:{:x}:{}",
+            r.iter,
+            r.value.to_bits(),
+            r.best_so_far.to_bits(),
+            r.unit_x
+                .iter()
+                .map(|u| format!("{:x}", u.to_bits()))
+                .collect::<Vec<_>>()
+                .join(","),
+        ));
+        s.push_str(&format!("{:?}", r.config.values));
+    }
+    s
+}
+
+fn main() {
+    let quick = std::env::var("CATLA_BENCH_QUICK").is_ok();
+    let n_sessions: usize = if quick { 200 } else { 1000 };
+
+    // standalone references, one per distinct tuning problem
+    let refs: Vec<String> = (0..GROUPS)
+        .map(|g| {
+            let (cl, wl) = group_specs(g);
+            let sp = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+            let mut cluster = SimCluster::new(cl);
+            let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+            let mut opt = Method::from_name(METHOD, SEED).unwrap().build();
+            fingerprint(&Driver::new(BUDGET).run(opt.as_mut(), &sp, &mut obj).unwrap())
+        })
+        .collect();
+
+    let hwm_before = vm_hwm_kb();
+
+    let mut sessions: Vec<ServeSession> = (0..n_sessions)
+        .map(|i| {
+            let (cl, wl) = group_specs(i % GROUPS);
+            ServeSession::new(
+                &format!("s{i}"),
+                TuningSpec::fig3(),
+                HadoopConfig::default(),
+                cl,
+                wl,
+                &settings(),
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let threads = default_threads();
+    let mut d = Dispatcher::new(threads, DEFAULT_CACHE_ENTRIES);
+    let queue_cap = d.queue_cap();
+
+    let t0 = Instant::now();
+    let mut step_ms: Vec<f64> = Vec::new();
+    let mut simulated = 0usize;
+    loop {
+        let s0 = Instant::now();
+        let r = d.step(&mut sessions).expect("dispatcher step");
+        if r.runs == 0 {
+            break;
+        }
+        step_ms.push(s0.elapsed().as_secs_f64() * 1e3);
+        simulated += r.simulated;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let hwm_after = vm_hwm_kb();
+
+    // hard bar: every session byte-identical to its standalone run,
+    // regardless of interleaving and cache serving
+    for (i, s) in sessions.iter().enumerate() {
+        let out = s.outcome().expect("session finished without evaluations");
+        assert!(out.evals() > 0, "session {} evaluated nothing", s.id);
+        assert_eq!(
+            fingerprint(&out),
+            refs[i % GROUPS],
+            "session {} diverged from standalone Driver::run",
+            s.id
+        );
+    }
+    let stats = d.cache_stats();
+    assert!(stats.hits > 0, "memo-cache never hit across identical sessions");
+
+    // bounded memory: arenas are sized to the pool and the queue is
+    // capped, so a thousand sessions must not blow the heap up
+    let growth_mb = match (hwm_before, hwm_after) {
+        (Some(b), Some(a)) => {
+            let g = (a - b) / 1024.0;
+            assert!(g < 512.0, "serve run grew VmHWM by {g:.0} MiB — memory not bounded");
+            Some(g)
+        }
+        _ => None,
+    };
+
+    step_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let pct = |q: f64| step_ms[((step_ms.len() as f64 - 1.0) * q) as usize];
+    let sessions_per_s = n_sessions as f64 / wall_s;
+
+    println!(
+        "{n_sessions} sessions ({GROUPS} distinct problems, budget {BUDGET}, {METHOD}): \
+         {wall_s:.2}s wall, {sessions_per_s:.0} sessions/s over {threads} workers"
+    );
+    println!(
+        "cache: {} hits / {} misses / {} evictions / {} deduped (hit rate {:.3}); {} DES runs",
+        stats.hits,
+        stats.misses,
+        stats.evictions,
+        d.deduped(),
+        stats.hit_rate(),
+        simulated
+    );
+    println!(
+        "ask-to-tell step latency: p50 {:.2}ms, p99 {:.2}ms over {} steps",
+        pct(0.5),
+        pct(0.99),
+        step_ms.len()
+    );
+    if let Some(g) = growth_mb {
+        println!("VmHWM growth {g:.1} MiB (bound 512 MiB)");
+    }
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("serve".into()));
+    doc.set("quick", Json::Bool(quick));
+    doc.set("sessions", Json::Num(n_sessions as f64));
+    doc.set("groups", Json::Num(GROUPS as f64));
+    doc.set("budget", Json::Num(BUDGET as f64));
+    doc.set("method", Json::Str(METHOD.into()));
+    doc.set("threads", Json::Num(threads as f64));
+    doc.set("queue_cap", Json::Num(queue_cap as f64));
+    doc.set("steps", Json::Num(step_ms.len() as f64));
+    doc.set("wall_s", Json::Num(wall_s));
+    doc.set("sessions_per_s", Json::Num(sessions_per_s));
+    doc.set("des_runs", Json::Num(simulated as f64));
+    doc.set("cache_hits", Json::Num(stats.hits as f64));
+    doc.set("cache_misses", Json::Num(stats.misses as f64));
+    doc.set("cache_evictions", Json::Num(stats.evictions as f64));
+    doc.set("cache_deduped", Json::Num(d.deduped() as f64));
+    doc.set("cache_hit_rate", Json::Num(stats.hit_rate()));
+    doc.set("p50_ask_to_tell_ms", Json::Num(pct(0.5)));
+    doc.set("p99_ask_to_tell_ms", Json::Num(pct(0.99)));
+    doc.set(
+        "vm_hwm_kb_before",
+        hwm_before.map(Json::Num).unwrap_or(Json::Null),
+    );
+    doc.set(
+        "vm_hwm_kb_after",
+        hwm_after.map(Json::Num).unwrap_or(Json::Null),
+    );
+    doc.set("fingerprints_match", Json::Bool(true));
+    std::fs::write("BENCH_serve.json", doc.to_string() + "\n").unwrap();
+    println!("wrote BENCH_serve.json");
+}

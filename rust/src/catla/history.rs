@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 
 use crate::catla::metrics::JobMetrics;
 use crate::config::spec::TuningSpec;
-use crate::optim::result::TuningOutcome;
+use crate::optim::result::{EvalRecord, TuningOutcome};
 use crate::util::csv::Csv;
 
 pub const JOBS_CSV: &str = "jobs.csv";
@@ -106,16 +106,31 @@ impl History {
         spec: &TuningSpec,
         outcome: &TuningOutcome,
     ) -> Result<PathBuf, String> {
+        self.write_tuning_records_to(file_name, spec, &outcome.optimizer, &outcome.records)
+    }
+
+    /// Write a tuning log from bare records, before a [`TuningOutcome`]
+    /// exists — the serve daemon checkpoints every in-flight session this
+    /// way after each completed slice, so a killed daemon resumes through
+    /// the normal replay machinery. Row/column layout is byte-identical
+    /// to [`History::write_tuning_log_to`] on the finished outcome.
+    pub fn write_tuning_records_to(
+        &self,
+        file_name: &str,
+        spec: &TuningSpec,
+        optimizer: &str,
+        records: &[EvalRecord],
+    ) -> Result<PathBuf, String> {
         let path = self.dir.join(file_name);
         let header = Self::tuning_header(spec);
         let mut csv = Csv {
             header: header.clone(),
             rows: Vec::new(),
         };
-        for rec in &outcome.records {
+        for rec in records {
             let mut row = vec![
                 rec.iter.to_string(),
-                outcome.optimizer.clone(),
+                optimizer.to_string(),
                 format!("{:.3}", rec.value),
                 format!("{:.3}", rec.best_so_far),
             ];

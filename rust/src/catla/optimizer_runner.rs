@@ -37,6 +37,10 @@ pub struct TuningSettings {
     /// ask-batches in slices of this size. Outcomes are byte-identical
     /// under any chunk — this only bounds working memory.
     pub batch_chunk: usize,
+    /// LRU cap this project requests for the serve daemon's global
+    /// simulation memo-cache (`serve.cache_entries`). `None` leaves the
+    /// daemon's current cap alone; ignored outside `catla serve`.
+    pub cache_entries: Option<usize>,
 }
 
 impl TuningSettings {
@@ -70,6 +74,13 @@ impl TuningSettings {
             early_patience: parse_usize("early.patience", 0)?,
             early_tol: parse_f64("early.tol", 1e-3)?,
             batch_chunk: parse_usize("batch.chunk", DEFAULT_BATCH_CHUNK)?.max(1),
+            cache_entries: t
+                .get("serve.cache_entries")
+                .map(|s| {
+                    s.parse()
+                        .map_err(|_| format!("bad serve.cache_entries={s:?}"))
+                })
+                .transpose()?,
         })
     }
 

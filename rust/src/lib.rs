@@ -25,6 +25,10 @@
 //! * [`runtime`] — batched cost-model executor: PJRT loader for
 //!   `artifacts/*.hlo.txt` with `--features pjrt`, native mirror
 //!   otherwise.
+//! * [`serve`] — tuning-as-a-service: a daemon multiplexing many
+//!   concurrent sessions (each a [`serve::session::ServeSession`] in
+//!   ask/tell form) over one persistent thread pool, with a global
+//!   LRU memo-cache over simulation fingerprints.
 //! * [`workloads`], [`config`], [`util`] — profiles, parameter metadata,
 //!   and the hand-rolled foundations the offline image requires.
 
@@ -33,5 +37,6 @@ pub mod config;
 pub mod hadoop;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 pub mod workloads;

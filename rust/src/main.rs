@@ -52,6 +52,13 @@ TOOLS
   aggregate --dir <folder>            re-aggregate logs from /history
   visualize --dir <folder> [--gnuplot]  charts from history CSVs
   describe  --dir <folder>            show the cluster this project targets
+  serve     [--threads N] [--cache-entries N] [--queue N]
+                                      tuning-as-a-service daemon: multiplex
+                                      many tuning sessions over one shared
+                                      simulator pool + global memo-cache
+                                      (line protocol on stdin/stdout:
+                                      open/step/run/ask/tell/status/close/
+                                      stats/shutdown)
 
 Optimizers (tuning.properties `optimizer=`): grid random latin coordinate
 hooke-jeeves nelder-mead annealing bobyqa";
@@ -430,6 +437,23 @@ fn run(args: &Args) -> Result<(), String> {
                 println!("wrote {}", path.display());
             }
             Ok(())
+        }
+        "serve" => {
+            let threads: usize =
+                args.opt_parse_or("threads", catla::util::pool::default_threads())?;
+            let cache_entries: usize =
+                args.opt_parse_or("cache-entries", catla::serve::DEFAULT_CACHE_ENTRIES)?;
+            let queue: usize = args.opt_parse_or("queue", catla::serve::DEFAULT_QUEUE_CAP)?;
+            let dispatcher =
+                catla::serve::Dispatcher::new(threads, cache_entries).with_queue_cap(queue);
+            let mut daemon = catla::serve::Daemon::new(dispatcher);
+            eprintln!(
+                "catla serve: {threads} workers, cache cap {cache_entries}, queue cap {queue}; \
+                 line protocol on stdin/stdout (shutdown or EOF to stop)"
+            );
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            daemon.serve(stdin.lock(), stdout.lock())
         }
         "describe" => {
             let dir = project_dir(args)?;

@@ -18,6 +18,10 @@
 //!   [`Observer`] hooks, and checkpoint replay
 //!   ([`Driver::run_with_history`] re-`tell`s prior evaluations into a
 //!   fresh optimizer).
+//! * [`DriverSession`] — the same loop inverted into a non-blocking
+//!   `next_slice`/`tell_values` stepper, so the serve daemon can
+//!   interleave many concurrent sessions over one pool; `Driver` itself
+//!   runs on top of it, so the two cannot drift apart.
 //!
 //! # The chunked-ask protocol
 //!
@@ -328,6 +332,246 @@ impl EarlyStop {
     }
 }
 
+/// An evaluated-slice in flight: the decoded configs of
+/// `batch[from..from + cfgs.len()]`, waiting for their measured values.
+struct PendingSlice {
+    from: usize,
+    cfgs: Vec<HadoopConfig>,
+}
+
+/// The [`Driver`] loop, inverted into a non-blocking ask/tell stepper so
+/// one caller can interleave many tuning sessions (the serve daemon
+/// multiplexes hundreds of these over one thread pool).
+///
+/// Protocol: [`DriverSession::next_slice`] hands out the next chunk of
+/// decoded configs to evaluate (or `None` when the run is over);
+/// [`DriverSession::tell_values`] feeds the measured values back,
+/// records them, fires observers and tells the optimizer. The stepper
+/// body is the exact `Driver::run_with_history` loop — same budget
+/// truncation, chunk slicing, early-stop-per-eval and replay semantics —
+/// so a session stepped to completion produces a [`TuningOutcome`]
+/// byte-identical to `Driver::run` on the same inputs, regardless of how
+/// its steps interleave with other sessions (regression-tested in
+/// `rust/tests/serve.rs` across all eight methods).
+pub struct DriverSession {
+    budget: usize,
+    early_stop: Option<EarlyStop>,
+    batch_chunk: usize,
+    chunk_size: usize,
+    rec: Recorder,
+    stall: usize,
+    best: f64,
+    batch: Vec<Candidate>,
+    start: usize,
+    pending: Option<PendingSlice>,
+    primed: bool,
+    done: bool,
+}
+
+impl DriverSession {
+    pub fn new(budget: usize, early_stop: Option<EarlyStop>, batch_chunk: usize) -> DriverSession {
+        let early_stop = early_stop.filter(|es| es.patience > 0);
+        // Evaluate in `batch.chunk`-sized slices; with early stopping the
+        // slice shrinks to the patience, bounding the evals discarded
+        // when a stop fires mid-slice (see the Driver loop docs).
+        let chunk_size = early_stop
+            .map(|es| es.patience.max(1))
+            .unwrap_or(usize::MAX)
+            .min(batch_chunk.max(1));
+        DriverSession {
+            budget,
+            early_stop,
+            batch_chunk: batch_chunk.max(1),
+            chunk_size,
+            rec: Recorder::new(),
+            stall: 0,
+            best: f64::INFINITY,
+            batch: Vec::new(),
+            start: 0,
+            pending: None,
+            primed: false,
+            done: false,
+        }
+    }
+
+    /// One-time streaming hint, fired before the first `ask` or replay
+    /// `tell` — exactly once per session, however the session is driven.
+    fn prime<O: Optimizer + ?Sized>(&mut self, opt: &mut O) {
+        if !self.primed {
+            self.primed = true;
+            opt.set_chunk(self.batch_chunk);
+        }
+    }
+
+    /// Replay checkpointed evaluations: recorded into the outcome,
+    /// counted against the (total) budget, told to the fresh optimizer.
+    /// Call before the first [`DriverSession::next_slice`].
+    pub fn replay<O: Optimizer + ?Sized>(&mut self, opt: &mut O, prior: &[EvalRecord]) {
+        self.prime(opt);
+        if prior.is_empty() {
+            return;
+        }
+        let mut replayed = Vec::with_capacity(prior.len());
+        for p in prior.iter().take(self.budget) {
+            self.rec.record(p.unit_x.clone(), p.config.clone(), p.value);
+            let r = self.rec.last().expect("just recorded").clone();
+            self.best = self.best.min(r.value);
+            replayed.push(r);
+        }
+        opt.tell(&replayed);
+    }
+
+    /// The next slice of configs to evaluate, decoded once per candidate.
+    /// Returns `None` when the run is over (budget exhausted, optimizer
+    /// converged on an empty ask, or early-stopped). Idempotent while a
+    /// slice is outstanding: calling again before
+    /// [`DriverSession::tell_values`] returns the same slice.
+    pub fn next_slice<O: Optimizer + ?Sized>(
+        &mut self,
+        opt: &mut O,
+        space: &ParamSpace,
+    ) -> Option<&[HadoopConfig]> {
+        if self.pending.is_some() {
+            return self.pending.as_ref().map(|p| p.cfgs.as_slice());
+        }
+        if self.done {
+            return None;
+        }
+        self.prime(opt);
+        if self.start >= self.batch.len() {
+            if self.rec.evals() >= self.budget {
+                self.done = true;
+                return None;
+            }
+            let left = self.budget - self.rec.evals();
+            let mut batch = opt.ask(space, left);
+            if batch.is_empty() {
+                self.done = true; // converged / proposals exhausted
+                return None;
+            }
+            // Budget accounting: an over-sized ask-batch is truncated,
+            // never overspent. Everything recorded is also told.
+            batch.truncate(left);
+            self.batch = batch;
+            self.start = 0;
+        }
+        let from = self.start;
+        let end = from.saturating_add(self.chunk_size).min(self.batch.len());
+        // decode once per candidate: grid attaches the config it already
+        // decoded for dedup, everything else decodes here
+        let cfgs: Vec<HadoopConfig> = self.batch[from..end]
+            .iter_mut()
+            .map(|c| c.config.take().unwrap_or_else(|| space.decode(&c.unit_x)))
+            .collect();
+        self.pending = Some(PendingSlice { from, cfgs });
+        self.pending.as_ref().map(|p| p.cfgs.as_slice())
+    }
+
+    /// Feed back the measured values for the outstanding slice, in slice
+    /// order: record each evaluation, fire observers, update early-stop
+    /// state, and tell the optimizer.
+    pub fn tell_values<O: Optimizer + ?Sized>(
+        &mut self,
+        opt: &mut O,
+        vals: &[f64],
+        observers: &mut [Box<dyn Observer + '_>],
+    ) -> Result<(), String> {
+        let PendingSlice { from, cfgs } = self
+            .pending
+            .take()
+            .ok_or_else(|| "tell_values without an outstanding candidate slice".to_string())?;
+        if vals.len() != cfgs.len() {
+            return Err(format!(
+                "objective returned {} values for a batch of {}",
+                vals.len(),
+                cfgs.len()
+            ));
+        }
+        let end = from + cfgs.len();
+        let mut told = Vec::with_capacity(vals.len());
+        let mut stopped = false;
+        for ((cand, cfg), v) in self.batch[from..end].iter().zip(cfgs).zip(vals.iter().copied()) {
+            self.rec.record(cand.unit_x.clone(), cfg, v);
+            let r = self.rec.last().expect("just recorded").clone();
+            for ob in observers.iter_mut() {
+                ob.on_eval(&r);
+            }
+            if let Some(es) = self.early_stop {
+                if r.value < self.best * (1.0 - es.min_rel) {
+                    self.stall = 0;
+                } else {
+                    self.stall += 1;
+                }
+            }
+            self.best = self.best.min(r.value);
+            told.push(r);
+            if let Some(es) = self.early_stop {
+                if self.stall >= es.patience {
+                    // stop at exactly this eval — later slice-mates stay
+                    // unrecorded, so the stopping point does not depend
+                    // on how the batch was sliced
+                    stopped = true;
+                    break;
+                }
+            }
+        }
+        // tell covers every recorded candidate, even when the run is
+        // about to stop
+        opt.tell(&told);
+        if stopped {
+            self.done = true;
+        } else {
+            self.start = end;
+            if self.start >= self.batch.len() {
+                self.batch.clear();
+                self.start = 0;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn evals(&self) -> usize {
+        self.rec.evals()
+    }
+
+    /// Everything recorded so far, in evaluation order (for incremental
+    /// checkpointing mid-run).
+    pub fn records(&self) -> &[EvalRecord] {
+        self.rec.records()
+    }
+
+    pub fn best_value(&self) -> Option<f64> {
+        self.rec.best_value()
+    }
+
+    /// True once [`DriverSession::next_slice`] has returned `None` (and
+    /// will keep returning `None`).
+    pub fn is_done(&self) -> bool {
+        self.done && self.pending.is_none()
+    }
+
+    /// Snapshot the outcome without consuming the session.
+    pub fn outcome(&self, optimizer: &str) -> Result<TuningOutcome, String> {
+        if self.rec.evals() == 0 {
+            return Err(format!(
+                "optimizer {} produced no evaluations (budget {})",
+                optimizer, self.budget
+            ));
+        }
+        Ok(self.rec.clone().finish(optimizer))
+    }
+
+    pub fn into_outcome(self, optimizer: &str) -> Result<TuningOutcome, String> {
+        if self.rec.evals() == 0 {
+            return Err(format!(
+                "optimizer {} produced no evaluations (budget {})",
+                optimizer, self.budget
+            ));
+        }
+        Ok(self.rec.finish(optimizer))
+    }
+}
+
 /// The shared tuning loop: owns the budget, evaluates ask-batches through
 /// a [`BatchObjective`], records every evaluation, fires observers, and
 /// tells results back to the optimizer.
@@ -386,6 +630,22 @@ impl<'a> Driver<'a> {
     /// recorded into the outcome, counted against the (total) budget and
     /// told to the fresh optimizer — then the loop continues normally.
     /// No objective calls are spent on replayed evaluations.
+    ///
+    /// The loop body lives in [`DriverSession`] (the serve daemon steps
+    /// the same machine non-blockingly); this method just drives it to
+    /// completion against one [`BatchObjective`]:
+    ///
+    /// Ask-batches are EVALUATED in `batch.chunk`-sized slices, which
+    /// bounds the decoded-config buffer. The early-stop decision is
+    /// made per evaluation (the run ends at exactly the first eval
+    /// whose stall count reaches the patience), so the stopping point
+    /// — and therefore the whole outcome — is independent of the
+    /// slice size. The optimizer still sees the true remaining budget
+    /// in `ask` (bobyqa's one-shot init design and latin's
+    /// stratification need it); candidates past a triggered stop are
+    /// never recorded or told (slice-mates already evaluated when the
+    /// stop fires are discarded — the session shrinks the slice to the
+    /// patience, bounding that waste without moving the stop).
     pub fn run_with_history<O, B>(
         &mut self,
         opt: &mut O,
@@ -397,114 +657,16 @@ impl<'a> Driver<'a> {
         O: Optimizer + ?Sized,
         B: BatchObjective + ?Sized,
     {
-        let mut rec = Recorder::new();
-        let mut stall = 0usize;
-        let mut best = f64::INFINITY;
-
-        // streaming hint: methods with resumable proposal streams bound
-        // their ask-batches to the chunk
-        opt.set_chunk(self.batch_chunk);
-
-        if !prior.is_empty() {
-            let mut replayed = Vec::with_capacity(prior.len());
-            for p in prior.iter().take(self.budget) {
-                rec.record(p.unit_x.clone(), p.config.clone(), p.value);
-                let r = rec.last().expect("just recorded").clone();
-                best = best.min(r.value);
-                replayed.push(r);
-            }
-            opt.tell(&replayed);
+        let mut session = DriverSession::new(self.budget, self.early_stop, self.batch_chunk);
+        session.replay(opt, prior);
+        loop {
+            let vals = match session.next_slice(opt, space) {
+                None => break,
+                Some(cfgs) => obj.eval_batch(cfgs)?,
+            };
+            session.tell_values(opt, &vals, &mut self.observers)?;
         }
-
-        // Ask-batches are EVALUATED in `batch.chunk`-sized slices, which
-        // bounds the decoded-config buffer. The early-stop decision is
-        // made per evaluation (the run ends at exactly the first eval
-        // whose stall count reaches the patience), so the stopping point
-        // — and therefore the whole outcome — is independent of the
-        // slice size. The optimizer still sees the true remaining budget
-        // in `ask` (bobyqa's one-shot init design and latin's
-        // stratification need it); candidates past a triggered stop are
-        // never recorded or told (slice-mates already evaluated when the
-        // stop fires are discarded — shrinking the slice to the patience
-        // below bounds that waste without moving the stop).
-        let chunk_size = self
-            .early_stop
-            .map(|es| es.patience.max(1))
-            .unwrap_or(usize::MAX)
-            .min(self.batch_chunk.max(1));
-
-        'drive: while rec.evals() < self.budget {
-            let left = self.budget - rec.evals();
-            let mut batch = opt.ask(space, left);
-            if batch.is_empty() {
-                break; // converged / proposals exhausted
-            }
-            // Budget accounting: an over-sized ask-batch is truncated,
-            // never overspent. Everything recorded below is also told.
-            batch.truncate(left);
-            let mut start = 0;
-            while start < batch.len() {
-                let end = start.saturating_add(chunk_size).min(batch.len());
-                // decode once per candidate: grid attaches the config it
-                // already decoded for dedup, everything else decodes here
-                let cfgs: Vec<HadoopConfig> = batch[start..end]
-                    .iter_mut()
-                    .map(|c| c.config.take().unwrap_or_else(|| space.decode(&c.unit_x)))
-                    .collect();
-                let vals = obj.eval_batch(&cfgs)?;
-                if vals.len() != cfgs.len() {
-                    return Err(format!(
-                        "objective returned {} values for a batch of {}",
-                        vals.len(),
-                        cfgs.len()
-                    ));
-                }
-                let mut told = Vec::with_capacity(vals.len());
-                let mut stopped = false;
-                for ((cand, cfg), v) in batch[start..end].iter().zip(cfgs).zip(vals) {
-                    rec.record(cand.unit_x.clone(), cfg, v);
-                    let r = rec.last().expect("just recorded").clone();
-                    for ob in &mut self.observers {
-                        ob.on_eval(&r);
-                    }
-                    if let Some(es) = self.early_stop {
-                        if r.value < best * (1.0 - es.min_rel) {
-                            stall = 0;
-                        } else {
-                            stall += 1;
-                        }
-                    }
-                    best = best.min(r.value);
-                    told.push(r);
-                    if let Some(es) = self.early_stop {
-                        if stall >= es.patience {
-                            // stop at exactly this eval — later
-                            // slice-mates stay unrecorded, so the
-                            // stopping point does not depend on how the
-                            // batch was sliced
-                            stopped = true;
-                            break;
-                        }
-                    }
-                }
-                // tell covers every recorded candidate, even when the
-                // loop is about to stop
-                opt.tell(&told);
-                if stopped {
-                    break 'drive;
-                }
-                start = end;
-            }
-        }
-
-        if rec.evals() == 0 {
-            return Err(format!(
-                "optimizer {} produced no evaluations (budget {})",
-                opt.name(),
-                self.budget
-            ));
-        }
-        Ok(rec.finish(opt.name()))
+        session.into_outcome(opt.name())
     }
 }
 

@@ -15,6 +15,7 @@ use crate::config::params::HadoopConfig;
 use crate::optim::core::{BestSeen, Candidate, Optimizer, DEFAULT_BATCH_CHUNK};
 use crate::optim::result::EvalRecord;
 use crate::optim::space::{GridCursor, ParamSpace};
+use crate::util::fingerprint::config_value_key;
 
 #[derive(Clone, Debug)]
 pub struct GridSearch {
@@ -45,20 +46,13 @@ impl Default for GridSearch {
 }
 
 /// Bit-exact dedup key: FNV-1a over the raw value bits of the decoded
-/// config. Replaces the old `format!("{:?}", values)` string keys — no
-/// formatting, no per-key heap string, and exact (two configs share a
-/// key iff every value is bit-identical, up to the ~2^-64 hash-collision
-/// odds a 64-bit key carries).
+/// config ([`config_value_key`], shared with the serve daemon's
+/// simulation memo-cache). Replaces the old `format!("{:?}", values)`
+/// string keys — no formatting, no per-key heap string, and exact (two
+/// configs share a key iff every value is bit-identical, up to the
+/// ~2^-64 hash-collision odds a 64-bit key carries).
 fn config_key(cfg: &HadoopConfig) -> u64 {
-    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-    const PRIME: u64 = 0x0000_0100_0000_01b3;
-    let mut h = OFFSET;
-    for v in &cfg.values {
-        for b in v.to_bits().to_le_bytes() {
-            h = (h ^ b as u64).wrapping_mul(PRIME);
-        }
-    }
-    h
+    config_value_key(&cfg.values)
 }
 
 impl GridSearch {

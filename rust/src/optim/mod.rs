@@ -58,8 +58,8 @@ pub use annealing::SimulatedAnnealing;
 pub use bobyqa::Bobyqa;
 pub use coordinate::CoordinateSearch;
 pub use self::core::{
-    BatchObjective, Candidate, ClusterObjective, Driver, EarlyStop, FnObjective, Observer,
-    Optimizer, ScorerObjective, DEFAULT_BATCH_CHUNK,
+    BatchObjective, Candidate, ClusterObjective, Driver, DriverSession, EarlyStop, FnObjective,
+    Observer, Optimizer, ScorerObjective, DEFAULT_BATCH_CHUNK,
 };
 pub use grid::GridSearch;
 pub use hooke_jeeves::HookeJeeves;

@@ -85,6 +85,12 @@ impl Recorder {
         self.records.len()
     }
 
+    /// Everything recorded so far, in evaluation order — the serve
+    /// daemon's incremental checkpointing reads this mid-run.
+    pub fn records(&self) -> &[EvalRecord] {
+        &self.records
+    }
+
     /// The most recently recorded evaluation (the `Driver` clones it for
     /// observer hooks and `tell` batches).
     pub fn last(&self) -> Option<&EvalRecord> {

@@ -1,0 +1,267 @@
+//! Global simulation memo-cache: fingerprint → runtime, LRU-bounded.
+//!
+//! `simulate_runtime` is a pure function of the bit-exact
+//! (cluster, workload, config-values, seed) tuple, and
+//! [`crate::util::fingerprint::eval_fingerprint`] hashes exactly that
+//! tuple — so a hit returns the identical `f64` the DES would have
+//! produced, and serving it changes nothing about a session's outcome
+//! (the serve determinism tests pin this byte-for-byte). The cache is
+//! shared across every session of the daemon: two users tuning the same
+//! workload on the same cluster spec re-evaluate nothing.
+//!
+//! Bounded by an entry cap (`serve.cache_entries` in tuning.properties,
+//! default [`DEFAULT_CACHE_ENTRIES`]) with least-recently-used eviction,
+//! and instrumented with hit/miss/eviction counters so the daemon's
+//! stats line and `BENCH_serve.json`'s hit-rate column are measured, not
+//! inferred.
+
+use std::collections::HashMap;
+
+/// Default LRU cap — generous: an entry is 40 bytes of links + key +
+/// value plus map overhead, so the default tops out around a few MiB.
+pub const DEFAULT_CACHE_ENTRIES: usize = 65_536;
+
+const NIL: usize = usize::MAX;
+
+struct Entry {
+    key: u64,
+    value: f64,
+    prev: usize,
+    next: usize,
+}
+
+/// Monotone cache counters (never reset by evictions or cap changes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Hits over lookups, 0.0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Index-linked LRU map over 64-bit fingerprints: `get` promotes to the
+/// front, `insert` evicts the tail at capacity. No per-entry boxing —
+/// entries live in one `Vec` and the recency list is a pair of indices.
+pub struct MemoCache {
+    map: HashMap<u64, usize>,
+    entries: Vec<Entry>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    cap: usize,
+    stats: CacheStats,
+}
+
+impl MemoCache {
+    pub fn new(cap: usize) -> MemoCache {
+        MemoCache {
+            map: HashMap::new(),
+            entries: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            cap: cap.max(1),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Re-bound the cache (a session's `serve.cache_entries`, applied at
+    /// open — last opened wins). Shrinking evicts LRU entries down to
+    /// the new cap immediately.
+    pub fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.max(1);
+        while self.map.len() > self.cap {
+            self.evict_tail();
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.entries[i].prev, self.entries[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.entries[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.entries[next].prev = prev;
+        }
+    }
+
+    fn link_front(&mut self, i: usize) {
+        self.entries[i].prev = NIL;
+        self.entries[i].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn evict_tail(&mut self) {
+        let t = self.tail;
+        debug_assert_ne!(t, NIL, "evict on empty cache");
+        self.unlink(t);
+        self.map.remove(&self.entries[t].key);
+        self.free.push(t);
+        self.stats.evictions += 1;
+    }
+
+    /// Look up a fingerprint; a hit promotes the entry to
+    /// most-recently-used and counts toward `stats().hits`.
+    pub fn get(&mut self, key: u64) -> Option<f64> {
+        match self.map.get(&key).copied() {
+            Some(i) => {
+                self.stats.hits += 1;
+                if self.head != i {
+                    self.unlink(i);
+                    self.link_front(i);
+                }
+                Some(self.entries[i].value)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a fingerprint → runtime entry, evicting the
+    /// least-recently-used entry when at capacity.
+    pub fn insert(&mut self, key: u64, value: f64) {
+        if let Some(&i) = self.map.get(&key) {
+            self.entries[i].value = value;
+            if self.head != i {
+                self.unlink(i);
+                self.link_front(i);
+            }
+            return;
+        }
+        if self.map.len() >= self.cap {
+            self.evict_tail();
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.entries[i] = Entry {
+                    key,
+                    value,
+                    prev: NIL,
+                    next: NIL,
+                };
+                i
+            }
+            None => {
+                self.entries.push(Entry {
+                    key,
+                    value,
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.entries.len() - 1
+            }
+        };
+        self.link_front(i);
+        self.map.insert(key, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_counters_are_measured() {
+        let mut c = MemoCache::new(8);
+        assert_eq!(c.get(1), None);
+        c.insert(1, 10.0);
+        assert_eq!(c.get(1), Some(10.0));
+        assert_eq!(c.get(2), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_at_cap() {
+        let mut c = MemoCache::new(3);
+        c.insert(1, 1.0);
+        c.insert(2, 2.0);
+        c.insert(3, 3.0);
+        // touch 1 so 2 becomes the LRU
+        assert_eq!(c.get(1), Some(1.0));
+        c.insert(4, 4.0);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(2), None, "LRU entry 2 should have been evicted");
+        assert_eq!(c.get(1), Some(1.0));
+        assert_eq!(c.get(3), Some(3.0));
+        assert_eq!(c.get(4), Some(4.0));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn shrinking_the_cap_evicts_down() {
+        let mut c = MemoCache::new(16);
+        for k in 0..10u64 {
+            c.insert(k, k as f64);
+        }
+        c.set_cap(4);
+        assert_eq!(c.len(), 4);
+        // the four most recently inserted survive
+        for k in 6..10u64 {
+            assert_eq!(c.get(k), Some(k as f64), "key {k} missing after shrink");
+        }
+        assert_eq!(c.stats().evictions, 6);
+        // slots are recycled: lots of churn never grows the arena past cap
+        for k in 100..200u64 {
+            c.insert(k, 0.0);
+        }
+        assert!(c.entries.len() <= 16, "entry arena grew past the original cap");
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let mut c = MemoCache::new(0);
+        c.insert(1, 1.0);
+        c.insert(2, 2.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(2), Some(2.0));
+    }
+
+    #[test]
+    fn bit_exact_values_roundtrip() {
+        let mut c = MemoCache::new(4);
+        let v = f64::from_bits(0x3ff0_0000_0000_0001); // 1.0 + 1 ulp
+        c.insert(9, v);
+        assert_eq!(c.get(9).unwrap().to_bits(), v.to_bits());
+    }
+}

@@ -1,0 +1,221 @@
+//! The daemon's evaluation engine: a bounded global work-queue drained
+//! through ONE persistent [`ThreadPool`] and the global [`MemoCache`].
+//!
+//! One [`Dispatcher::step`] is the daemon's heartbeat: collect the next
+//! job slice from every ready session round-robin (up to the queue
+//! bound), resolve each job against the memo-cache, simulate only the
+//! unique misses in parallel (per-worker [`SimArena`] scratch through
+//! [`ThreadPool::scoped_run_slots`] — the arena pool is sized ONCE at
+//! construction, which is what bounds the daemon's memory for its whole
+//! lifetime), then deliver every session's runtimes in job order.
+//!
+//! Delivery order per session is always the session's own ask order, and
+//! cached values are bit-identical to freshly simulated ones (the DES is
+//! a pure function of the fingerprinted inputs) — so interleaving and
+//! cache hits are invisible to any single session's outcome.
+
+use std::collections::HashMap;
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::{simulate_runtime_in, ClusterSpec, SimArena};
+use crate::serve::cache::{CacheStats, MemoCache};
+use crate::serve::session::{EvalJob, ServeSession};
+use crate::util::pool::ThreadPool;
+use crate::workloads::WorkloadSpec;
+
+/// Default bound on runs collected per step. A soft bound: a session's
+/// slice is taken whole, so one step may overshoot by at most one
+/// slice.
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+
+/// What one [`Dispatcher::step`] did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReport {
+    /// Simulation runs delivered this step (cache hits included).
+    pub runs: usize,
+    /// Runs actually simulated (unique cache misses).
+    pub simulated: usize,
+    /// Sessions whose slice completed this step.
+    pub sessions: usize,
+}
+
+pub struct Dispatcher {
+    pool: ThreadPool,
+    /// Per-worker simulation arenas, sized once to the pool — the
+    /// daemon's simulation memory never grows with session count.
+    arenas: Vec<SimArena>,
+    pub cache: MemoCache,
+    queue_cap: usize,
+    /// Round-robin start position, so a full queue never starves the
+    /// sessions at the back of the registry.
+    cursor: usize,
+    /// Intra-step duplicate jobs served off a miss computed in the same
+    /// step (counted separately from cache hits).
+    deduped: u64,
+}
+
+impl Dispatcher {
+    pub fn new(threads: usize, cache_entries: usize) -> Dispatcher {
+        let pool = ThreadPool::new(threads);
+        let arenas = (0..pool.size()).map(|_| SimArena::new()).collect();
+        Dispatcher {
+            pool,
+            arenas,
+            cache: MemoCache::new(cache_entries),
+            queue_cap: DEFAULT_QUEUE_CAP,
+            cursor: 0,
+            deduped: 0,
+        }
+    }
+
+    pub fn with_queue_cap(mut self, cap: usize) -> Dispatcher {
+        self.queue_cap = cap.max(1);
+        self
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
+    }
+
+    pub fn deduped(&self) -> u64 {
+        self.deduped
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// One round: ask ready sessions for jobs (bounded, round-robin),
+    /// serve cache hits, simulate unique misses in parallel, deliver
+    /// results in each session's ask order.
+    pub fn step(&mut self, sessions: &mut [ServeSession]) -> Result<StepReport, String> {
+        let n = sessions.len();
+        if n == 0 {
+            return Ok(StepReport::default());
+        }
+
+        // collect: whole slices, soft-bounded by queue_cap
+        let mut queue: Vec<(usize, Vec<EvalJob>)> = Vec::new();
+        let mut queued = 0usize;
+        let mut examined = 0usize;
+        for k in 0..n {
+            if queued >= self.queue_cap {
+                break;
+            }
+            let s = (self.cursor + k) % n;
+            examined = k + 1;
+            let jobs = sessions[s].next_jobs();
+            if jobs.is_empty() {
+                continue;
+            }
+            queued += jobs.len();
+            queue.push((s, jobs));
+        }
+        self.cursor = (self.cursor + examined) % n;
+        if queue.is_empty() {
+            return Ok(StepReport::default());
+        }
+
+        // resolve: cache hit, intra-step duplicate, or unique miss
+        enum Resolved {
+            Val(f64),
+            Miss(usize),
+        }
+        let mut miss_of: HashMap<u64, usize> = HashMap::new();
+        let mut misses: Vec<(usize, usize)> = Vec::new(); // (queue idx, job idx)
+        let mut resolved: Vec<Vec<Resolved>> = Vec::with_capacity(queue.len());
+        for (qi, (_, jobs)) in queue.iter().enumerate() {
+            let mut row = Vec::with_capacity(jobs.len());
+            for (j, job) in jobs.iter().enumerate() {
+                row.push(if let Some(v) = self.cache.get(job.key) {
+                    Resolved::Val(v)
+                } else if let Some(&u) = miss_of.get(&job.key) {
+                    self.deduped += 1;
+                    Resolved::Miss(u)
+                } else {
+                    let u = misses.len();
+                    miss_of.insert(job.key, u);
+                    misses.push((qi, j));
+                    Resolved::Miss(u)
+                });
+            }
+            resolved.push(row);
+        }
+
+        // simulate the unique misses over the once-sized arena pool.
+        // Sessions hold a `Box<dyn Optimizer>` and so aren't `Sync`;
+        // the parallel closure only needs the pure simulation inputs,
+        // so collect those (all plain shared-read data) up front.
+        let simulated = misses.len();
+        let inputs: Vec<(&ClusterSpec, &WorkloadSpec, &HadoopConfig, u64)> = misses
+            .iter()
+            .map(|&(qi, j)| {
+                let (s, jobs) = &queue[qi];
+                let sess = &sessions[*s];
+                let job = &jobs[j];
+                (&sess.cluster, &sess.workload, &job.cfg, job.seed)
+            })
+            .collect();
+        let results: Vec<f64> = {
+            let inputs = &inputs;
+            self.pool.scoped_run_slots(simulated, &mut self.arenas, |arena, u| {
+                let (cl, wl, cfg, seed) = inputs[u];
+                simulate_runtime_in(arena, cl, wl, cfg, seed)
+            })
+        };
+        drop(inputs);
+        for (u, &v) in results.iter().enumerate() {
+            let (qi, j) = misses[u];
+            self.cache.insert(queue[qi].1[j].key, v);
+        }
+
+        // deliver, per session in its ask order
+        for (qi, (s, jobs)) in queue.iter().enumerate() {
+            let runtimes: Vec<f64> = (0..jobs.len())
+                .map(|j| match resolved[qi][j] {
+                    Resolved::Val(v) => v,
+                    Resolved::Miss(u) => results[u],
+                })
+                .collect();
+            sessions[*s].complete(&runtimes)?;
+        }
+        Ok(StepReport {
+            runs: queued,
+            simulated,
+            sessions: queue.len(),
+        })
+    }
+
+    /// Step until every session's candidate stream is exhausted.
+    /// Sessions driven by external `ask`/`tell` clients are skipped (a
+    /// slice they hold stays outstanding). Returns the number of steps.
+    pub fn run_all(&mut self, sessions: &mut [ServeSession]) -> Result<usize, String> {
+        let mut steps = 0usize;
+        loop {
+            let r = self.step(sessions)?;
+            if r.runs == 0 {
+                return Ok(steps);
+            }
+            steps += 1;
+        }
+    }
+
+    /// The daemon's periodic stderr stats line — every counter is
+    /// measured, not inferred.
+    pub fn stats_line(&self, sessions: &[ServeSession]) -> String {
+        let live = sessions.iter().filter(|s| !s.is_done()).count();
+        let s = self.cache.stats();
+        format!(
+            "serve: sessions={} live={} cache[entries={} cap={} hits={} misses={} evictions={} deduped={} hit_rate={:.3}]",
+            sessions.len(),
+            live,
+            self.cache.len(),
+            self.cache.cap(),
+            s.hits,
+            s.misses,
+            s.evictions,
+            self.deduped,
+            s.hit_rate(),
+        )
+    }
+}

@@ -1,0 +1,35 @@
+//! Tuning-as-a-service: a long-running daemon multiplexing many
+//! concurrent tuning sessions over one persistent [`ThreadPool`].
+//!
+//! Where `catla tune` is one process per tuning run, `catla serve` keeps
+//! the simulator hot and lets any number of users (or one user's batch
+//! of projects) tune concurrently:
+//!
+//! * [`session`] — one project's optimizer + `DriverSession` in ask/tell
+//!   form, with its own deterministic seed stream and checkpoint log;
+//! * [`dispatcher`] — the bounded global work-queue: collects job slices
+//!   round-robin, resolves them against the memo-cache, simulates unique
+//!   misses on the shared pool (per-worker arenas sized once), delivers
+//!   results in ask order;
+//! * [`cache`] — the global simulation memo-cache, keyed by the
+//!   bit-exact (cluster, workload, config-values, seed) fingerprint and
+//!   LRU-bounded;
+//! * [`protocol`] — the `open`/`ask`/`tell`/`step`/`run`/`close` line
+//!   protocol behind `catla serve`.
+//!
+//! The whole subsystem is pinned to one invariant (`rust/tests/serve.rs`):
+//! a session's evaluation sequence and `TuningOutcome` are byte-identical
+//! to the same spec run standalone through `Driver::run`, no matter how
+//! sessions interleave or how many evaluations the cache serves.
+//!
+//! [`ThreadPool`]: crate::util::pool::ThreadPool
+
+pub mod cache;
+pub mod dispatcher;
+pub mod protocol;
+pub mod session;
+
+pub use cache::{CacheStats, MemoCache, DEFAULT_CACHE_ENTRIES};
+pub use dispatcher::{Dispatcher, StepReport, DEFAULT_QUEUE_CAP};
+pub use protocol::Daemon;
+pub use session::{EvalJob, ServeSession};

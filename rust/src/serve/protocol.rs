@@ -1,0 +1,266 @@
+//! Line-protocol frontend for the serve daemon: one command per line on
+//! the reader, one `ok`/`err` reply (plus any `warning`/`candidate`
+//! payload lines) per command on the writer.
+//!
+//! Commands (tokens are whitespace-separated; `#` starts a comment):
+//!
+//! ```text
+//! open <id> <project-dir>     load/resume a tuning project as session <id>
+//! step [<id>]                 one dispatcher round (all sessions, or one)
+//! run [<id>]                  step until the candidate stream drains
+//! ask <id>                    next configs for an EXTERNAL client to measure
+//! tell <id> <v1> <v2> ...     externally measured values for the last ask
+//! status <id>                 evals / best / done for one session
+//! close <id>                  finalize: write log + summary, report best
+//! stats                       global cache + session counters
+//! shutdown                    reply ok and stop serving (EOF does the same)
+//! ```
+//!
+//! Replies are single lines: `ok <cmd> key=value ...`, `err <message>`,
+//! `warning <id> <text>` (spec typo-guard diagnostics, emitted exactly
+//! once per loaded session, at `open`), and `candidate <id> <i> <values>`
+//! (the `ask` payload). A recoverable command error answers `err` and
+//! keeps serving; only I/O failure on the stream aborts the daemon.
+//!
+//! When several sessions open the SAME project directory, the first gets
+//! the default `tuning_log.csv` and later ones get `tuning_log.<id>.csv`
+//! — concurrent users of one project never clobber each other's
+//! checkpoint, and a re-opened id resumes from its own log.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::catla::history::TUNING_CSV;
+use crate::serve::dispatcher::Dispatcher;
+use crate::serve::session::ServeSession;
+
+pub struct Daemon {
+    sessions: Vec<ServeSession>,
+    pub dispatcher: Dispatcher,
+    /// Commands handled since the last stderr stats line.
+    since_stats: usize,
+}
+
+/// Print the stats line to stderr every this many commands (and always
+/// at shutdown).
+const STATS_EVERY: usize = 32;
+
+impl Daemon {
+    pub fn new(dispatcher: Dispatcher) -> Daemon {
+        Daemon {
+            sessions: Vec::new(),
+            dispatcher,
+            since_stats: 0,
+        }
+    }
+
+    pub fn sessions(&self) -> &[ServeSession] {
+        &self.sessions
+    }
+
+    fn find(&self, id: &str) -> Result<usize, String> {
+        self.sessions
+            .iter()
+            .position(|s| s.id == id)
+            .ok_or_else(|| format!("no session {id:?} (open it first)"))
+    }
+
+    /// Register a project-backed session. Routes the checkpoint log so
+    /// sessions sharing a directory never collide, applies the project's
+    /// `serve.cache_entries` request (last opened wins), and returns the
+    /// registry index.
+    pub fn open_session(&mut self, id: &str, dir: &Path) -> Result<usize, String> {
+        if self.sessions.iter().any(|s| s.id == id) {
+            return Err(format!("session {id:?} already open"));
+        }
+        let shared_dir = self.sessions.iter().any(|s| s.dir() == Some(dir));
+        let log_name = if shared_dir {
+            format!("tuning_log.{id}.csv")
+        } else {
+            TUNING_CSV.to_string()
+        };
+        let sess = ServeSession::open(dir, id, &log_name)?;
+        if let Some(cap) = sess.cache_entries {
+            self.dispatcher.cache.set_cap(cap);
+        }
+        self.sessions.push(sess);
+        Ok(self.sessions.len() - 1)
+    }
+
+    /// Serve the line protocol until `shutdown` or EOF. Only stream I/O
+    /// failure is fatal; command errors answer `err ...` and continue.
+    pub fn serve(&mut self, reader: impl BufRead, mut writer: impl Write) -> Result<(), String> {
+        for line in reader.lines() {
+            let line = line.map_err(|e| format!("serve: read failed: {e}"))?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts[0] == "shutdown" {
+                writeln!(writer, "ok shutdown").map_err(|e| e.to_string())?;
+                break;
+            }
+            match self.command(&parts, &mut writer) {
+                Ok(ok_line) => {
+                    writeln!(writer, "ok {ok_line}").map_err(|e| e.to_string())?
+                }
+                Err(CommandError::Recoverable(msg)) => {
+                    writeln!(writer, "err {msg}").map_err(|e| e.to_string())?
+                }
+                Err(CommandError::Io(e)) => return Err(e),
+            }
+            writer.flush().map_err(|e| e.to_string())?;
+            self.since_stats += 1;
+            if self.since_stats >= STATS_EVERY {
+                self.eprint_stats();
+            }
+        }
+        writer.flush().map_err(|e| e.to_string())?;
+        self.eprint_stats();
+        Ok(())
+    }
+
+    fn eprint_stats(&mut self) {
+        eprintln!("{}", self.dispatcher.stats_line(&self.sessions));
+        self.since_stats = 0;
+    }
+
+    /// Handle one command; returns the tail of the `ok` reply line.
+    /// Payload lines (`warning`, `candidate`) are written here, before
+    /// the `ok`.
+    fn command(&mut self, parts: &[&str], writer: &mut impl Write) -> Result<String, CommandError> {
+        let arg = |i: usize, what: &str| -> Result<&str, CommandError> {
+            parts
+                .get(i)
+                .copied()
+                .ok_or_else(|| CommandError::Recoverable(format!("{} needs {what}", parts[0])))
+        };
+        match parts[0] {
+            "open" => {
+                let id = arg(1, "an id")?.to_string();
+                let dir = arg(2, "a project dir")?;
+                let idx = self.open_session(&id, Path::new(dir))?;
+                let sess = &self.sessions[idx];
+                for w in sess.warnings() {
+                    writeln!(writer, "warning {id} {w}").map_err(CommandError::io)?;
+                }
+                Ok(format!(
+                    "open {id} label={} evals={} log={}",
+                    sess.label(),
+                    sess.evals(),
+                    sess.log_name()
+                ))
+            }
+            "step" => {
+                let r = match parts.get(1) {
+                    Some(id) => {
+                        let i = self.find(id)?;
+                        self.dispatcher.step(&mut self.sessions[i..i + 1])?
+                    }
+                    None => self.dispatcher.step(&mut self.sessions)?,
+                };
+                Ok(format!(
+                    "step runs={} simulated={} sessions={}",
+                    r.runs, r.simulated, r.sessions
+                ))
+            }
+            "run" => {
+                let steps = match parts.get(1) {
+                    Some(id) => {
+                        let i = self.find(id)?;
+                        self.dispatcher.run_all(&mut self.sessions[i..i + 1])?
+                    }
+                    None => self.dispatcher.run_all(&mut self.sessions)?,
+                };
+                Ok(format!("run steps={steps}"))
+            }
+            "ask" => {
+                let id = arg(1, "an id")?.to_string();
+                let i = self.find(&id)?;
+                let cfgs = self.sessions[i].ask_configs();
+                for (k, cfg) in cfgs.iter().enumerate() {
+                    let vals: Vec<String> = cfg.values.iter().map(|v| v.to_string()).collect();
+                    writeln!(writer, "candidate {id} {k} {}", vals.join(" "))
+                        .map_err(CommandError::io)?;
+                }
+                Ok(format!("ask {id} n={}", cfgs.len()))
+            }
+            "tell" => {
+                let id = arg(1, "an id")?.to_string();
+                let i = self.find(&id)?;
+                let vals = parts[2..]
+                    .iter()
+                    .map(|t| {
+                        t.parse::<f64>()
+                            .map_err(|_| format!("tell {id}: bad value {t:?}"))
+                    })
+                    .collect::<Result<Vec<f64>, String>>()?;
+                self.sessions[i].tell_external(&vals)?;
+                Ok(format!("tell {id} evals={}", self.sessions[i].evals()))
+            }
+            "status" => {
+                let id = arg(1, "an id")?;
+                let i = self.find(id)?;
+                let sess = &self.sessions[i];
+                let best = sess
+                    .best_value()
+                    .map(|b| format!("{b:.3}"))
+                    .unwrap_or_else(|| "none".to_string());
+                Ok(format!(
+                    "status {id} evals={} best={best} done={}",
+                    sess.evals(),
+                    sess.is_done()
+                ))
+            }
+            "close" => {
+                let id = arg(1, "an id")?;
+                let i = self.find(id)?;
+                let outcome = self.sessions[i].finalize()?;
+                Ok(format!(
+                    "close {id} optimizer={} evals={} best={:.3}",
+                    outcome.optimizer,
+                    outcome.evals(),
+                    outcome.best_value
+                ))
+            }
+            "stats" => {
+                let live = self.sessions.iter().filter(|s| !s.is_done()).count();
+                let s = self.dispatcher.cache_stats();
+                Ok(format!(
+                    "stats sessions={} live={} entries={} cap={} hits={} misses={} evictions={} deduped={}",
+                    self.sessions.len(),
+                    live,
+                    self.dispatcher.cache.len(),
+                    self.dispatcher.cache.cap(),
+                    s.hits,
+                    s.misses,
+                    s.evictions,
+                    self.dispatcher.deduped()
+                ))
+            }
+            other => Err(CommandError::Recoverable(format!(
+                "unknown command {other:?} (open/step/run/ask/tell/status/close/stats/shutdown)"
+            ))),
+        }
+    }
+}
+
+/// Command errors split by what they mean for the serve loop: bad input
+/// answers `err ...` and keeps serving, stream I/O failure aborts.
+enum CommandError {
+    Recoverable(String),
+    Io(String),
+}
+
+impl CommandError {
+    fn io(e: std::io::Error) -> CommandError {
+        CommandError::Io(format!("serve: write failed: {e}"))
+    }
+}
+
+impl From<String> for CommandError {
+    fn from(msg: String) -> CommandError {
+        CommandError::Recoverable(msg)
+    }
+}

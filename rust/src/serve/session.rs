@@ -1,0 +1,368 @@
+//! One tuning session inside the serve daemon: a project's optimizer +
+//! [`DriverSession`] in ask/tell form, plus the session's own simulation
+//! seed stream.
+//!
+//! The hard correctness bar (pinned in `rust/tests/serve.rs`): a
+//! session's evaluation sequence and final `TuningOutcome` are
+//! byte-identical to the same spec run standalone through
+//! `Driver::run` + `ClusterObjective`, regardless of how its steps
+//! interleave with other sessions or how many evaluations the global
+//! memo-cache serves. Three things make that hold:
+//!
+//! 1. the slice stream comes from the same [`DriverSession`] machine the
+//!    standalone driver runs on;
+//! 2. [`ServeSession::next_jobs`] reserves simulation seeds with the
+//!    exact `SimCluster::reserve_seeds` arithmetic (counter starts at
+//!    the cluster spec's seed, first = counter+1, advance by
+//!    `cfgs × repeats`), so job *i* of a slice gets the seed serial
+//!    submission would have given it;
+//! 3. [`ServeSession::complete`] folds repeats into per-config means
+//!    with the exact `ClusterObjective` expression.
+//!
+//! Sessions checkpoint their records to a per-session tuning log after
+//! every completed slice and resume through the existing replay
+//! machinery (`PriorRuns` → `DriverSession::replay`), so a killed daemon
+//! loses at most the in-flight slice.
+
+use std::path::{Path, PathBuf};
+
+use crate::catla::history::History;
+use crate::catla::optimizer_runner::TuningSettings;
+use crate::catla::project::Project;
+use crate::catla::resume::PriorRuns;
+use crate::config::params::HadoopConfig;
+use crate::config::spec::TuningSpec;
+use crate::hadoop::ClusterSpec;
+use crate::optim::core::{DriverSession, EarlyStop};
+use crate::optim::{EvalRecord, Method, Optimizer, ParamSpace, TuningOutcome};
+use crate::util::csv::Csv;
+use crate::util::fingerprint::eval_fingerprint;
+use crate::workloads::WorkloadSpec;
+
+/// One simulation run a session wants evaluated: the memo-cache key, the
+/// decoded config and the reserved seed. The owning session's cluster
+/// and workload specs complete the simulation inputs.
+pub struct EvalJob {
+    pub key: u64,
+    pub cfg: HadoopConfig,
+    pub seed: u64,
+}
+
+/// What kind of evaluation the outstanding slice is waiting on.
+enum Flight {
+    /// Simulator jobs dispatched through the daemon (`runs` runtimes
+    /// expected: one per config × repeat).
+    Sim { runs: usize },
+    /// Externally measured values (`ask`/`tell` protocol lines): one
+    /// value per config, no simulator seeds consumed.
+    External,
+}
+
+pub struct ServeSession {
+    pub id: String,
+    dir: Option<PathBuf>,
+    log_name: String,
+    spec: TuningSpec,
+    space: ParamSpace,
+    opt: Box<dyn Optimizer>,
+    driver: DriverSession,
+    pub cluster: ClusterSpec,
+    pub workload: WorkloadSpec,
+    repeats: usize,
+    seed_counter: u64,
+    /// Optimizer label recorded into logs and the outcome — the bare
+    /// method name for fresh sessions (matching standalone `Driver::run`
+    /// byte-for-byte), the `[resumed@n]` form for resumed ones.
+    label: String,
+    /// Spec typo-guard diagnostics, captured ONCE at session creation.
+    /// Emission is the daemon's job (also once, at `open`) — replay,
+    /// ask and step paths never re-surface them.
+    warnings: Vec<String>,
+    /// The project's `serve.cache_entries` request, if any.
+    pub cache_entries: Option<usize>,
+    in_flight: Option<Flight>,
+    finalized: bool,
+}
+
+impl ServeSession {
+    /// Build a session from parts, without touching the filesystem (no
+    /// checkpointing) — the serve bench drives a thousand of these.
+    pub fn new(
+        id: &str,
+        spec: TuningSpec,
+        base: HadoopConfig,
+        cluster: ClusterSpec,
+        workload: WorkloadSpec,
+        settings: &TuningSettings,
+    ) -> Result<ServeSession, String> {
+        Self::with_prior(id, spec, base, cluster, workload, settings, &[])
+    }
+
+    /// [`ServeSession::new`] resuming from replayed prior evaluations.
+    /// The budget covers prior + new evaluations and is clamped up to
+    /// the prior count, exactly like `resume_tuning` — logged
+    /// evaluations are never dropped.
+    pub fn with_prior(
+        id: &str,
+        spec: TuningSpec,
+        base: HadoopConfig,
+        cluster: ClusterSpec,
+        workload: WorkloadSpec,
+        settings: &TuningSettings,
+        prior: &[EvalRecord],
+    ) -> Result<ServeSession, String> {
+        if settings.prescreen {
+            return Err("serve sessions do not support prescreen=auto (no surrogate scorer)".into());
+        }
+        if spec.dims() == 0 {
+            return Err(format!(
+                "params.spec declares no parameters for workload {:?}",
+                workload.name
+            ));
+        }
+        // dedupe at the session-creation boundary: however many parse
+        // paths contributed diagnostics, each distinct warning is held
+        // (and later emitted) once per loaded session
+        let mut warnings: Vec<String> = Vec::new();
+        for w in &spec.warnings {
+            if !warnings.contains(w) {
+                warnings.push(w.clone());
+            }
+        }
+        let mut opt = Method::from_name(&settings.optimizer, settings.seed)?.build();
+        let base_label = opt.name().to_string();
+        let label = if prior.is_empty() {
+            base_label
+        } else if prior.len() >= settings.budget {
+            format!("{base_label}[resumed,exhausted]")
+        } else {
+            format!("{base_label}[resumed@{}]", prior.len())
+        };
+        let early = if settings.early_patience > 0 {
+            Some(EarlyStop {
+                patience: settings.early_patience,
+                min_rel: settings.early_tol,
+            })
+        } else {
+            None
+        };
+        let budget = settings.budget.max(prior.len());
+        let mut driver = DriverSession::new(budget, early, settings.batch_chunk);
+        driver.replay(opt.as_mut(), prior);
+        let seed_counter = cluster.seed;
+        Ok(ServeSession {
+            id: id.to_string(),
+            dir: None,
+            log_name: crate::catla::history::TUNING_CSV.to_string(),
+            space: ParamSpace::new(spec.clone(), base),
+            spec,
+            opt,
+            driver,
+            cluster,
+            workload,
+            repeats: settings.repeats.max(1),
+            seed_counter,
+            label,
+            warnings,
+            cache_entries: settings.cache_entries,
+            in_flight: None,
+            finalized: false,
+        })
+    }
+
+    /// Open a session over a tuning project directory, checkpointing to
+    /// `history/<log_name>` and resuming from it when it already exists.
+    pub fn open(dir: &Path, id: &str, log_name: &str) -> Result<ServeSession, String> {
+        let project = Project::load(dir)?;
+        let settings = TuningSettings::from_project(&project)?;
+        let spec = project
+            .spec
+            .clone()
+            .ok_or("not a tuning project (missing params.spec)")?;
+        let base = project.base_config()?;
+        let cluster = ClusterSpec::from_env(&project.env);
+        let workload = project.workload()?;
+        // the scoped aggregate carries the per-block diagnostics the
+        // flat spec may not; prefer it when present (same source the
+        // CLI's print_spec_warnings uses)
+        let scoped_warnings = project
+            .scoped
+            .as_ref()
+            .map(|s| s.warnings.clone())
+            .unwrap_or_default();
+        let log_path = dir.join("history").join(log_name);
+        let prior = if log_path.is_file() {
+            let csv = Csv::load(&log_path)?;
+            let space = ParamSpace::new(spec.clone(), base.clone());
+            PriorRuns::from_log(&csv, &spec)?.to_records(&space)?
+        } else {
+            Vec::new()
+        };
+        let mut sess =
+            Self::with_prior(id, spec, base, cluster, workload, &settings, &prior)?;
+        if !scoped_warnings.is_empty() {
+            let mut warnings: Vec<String> = Vec::new();
+            for w in scoped_warnings {
+                if !warnings.contains(&w) {
+                    warnings.push(w);
+                }
+            }
+            sess.warnings = warnings;
+        }
+        sess.dir = Some(dir.to_path_buf());
+        sess.log_name = log_name.to_string();
+        Ok(sess)
+    }
+
+    /// Spec diagnostics to surface once per loaded session.
+    pub fn warnings(&self) -> &[String] {
+        &self.warnings
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn log_name(&self) -> &str {
+        &self.log_name
+    }
+
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    pub fn evals(&self) -> usize {
+        self.driver.evals()
+    }
+
+    pub fn best_value(&self) -> Option<f64> {
+        self.driver.best_value()
+    }
+
+    /// The run is over and nothing is in flight. Note this only flips
+    /// after a `next_jobs`/`ask_configs` call observed the end of the
+    /// candidate stream.
+    pub fn is_done(&self) -> bool {
+        self.finalized || (self.driver.is_done() && self.in_flight.is_none())
+    }
+
+    /// The next slice of simulation jobs this session wants evaluated,
+    /// with seeds reserved exactly like serial submission. Empty while a
+    /// slice is outstanding, or once the run is over.
+    pub fn next_jobs(&mut self) -> Vec<EvalJob> {
+        if self.in_flight.is_some() || self.finalized {
+            return Vec::new();
+        }
+        let cfgs: Vec<HadoopConfig> = match self.driver.next_slice(self.opt.as_mut(), &self.space)
+        {
+            Some(s) => s.to_vec(),
+            None => return Vec::new(),
+        };
+        let runs = cfgs.len() * self.repeats;
+        // SimCluster::reserve_seeds, verbatim: first = counter+1, then
+        // advance by the run count
+        let first = self.seed_counter.wrapping_add(1);
+        self.seed_counter = self.seed_counter.wrapping_add(runs as u64);
+        let jobs = (0..runs)
+            .map(|i| {
+                let cfg = &cfgs[i / self.repeats];
+                let seed = first.wrapping_add(i as u64);
+                EvalJob {
+                    key: eval_fingerprint(&self.cluster, &self.workload, cfg, seed),
+                    cfg: cfg.clone(),
+                    seed,
+                }
+            })
+            .collect();
+        self.in_flight = Some(Flight::Sim { runs });
+        jobs
+    }
+
+    /// Deliver the runtimes for the outstanding [`ServeSession::next_jobs`]
+    /// slice (in job order), fold repeats into per-config means exactly
+    /// like `ClusterObjective`, tell the optimizer, and checkpoint.
+    pub fn complete(&mut self, runtimes: &[f64]) -> Result<(), String> {
+        match self.in_flight.take() {
+            Some(Flight::Sim { runs }) => {
+                if runtimes.len() != runs {
+                    return Err(format!(
+                        "session {}: {} runtimes delivered for {} dispatched runs",
+                        self.id,
+                        runtimes.len(),
+                        runs
+                    ));
+                }
+                let vals: Vec<f64> = runtimes
+                    .chunks(self.repeats)
+                    .map(|c| c.iter().sum::<f64>() / self.repeats as f64)
+                    .collect();
+                self.driver.tell_values(self.opt.as_mut(), &vals, &mut [])?;
+                self.checkpoint()
+            }
+            other => {
+                self.in_flight = other;
+                Err(format!("session {}: complete without dispatched jobs", self.id))
+            }
+        }
+    }
+
+    /// Manual ask (protocol `ask` line): the next slice of decoded
+    /// configs for an external client to measure. No simulator seeds are
+    /// consumed — a session driven this way is measured outside the DES,
+    /// so the standalone-simulation byte-identity bar does not apply.
+    pub fn ask_configs(&mut self) -> Vec<HadoopConfig> {
+        if self.in_flight.is_some() || self.finalized {
+            return Vec::new();
+        }
+        let cfgs = match self.driver.next_slice(self.opt.as_mut(), &self.space) {
+            Some(s) => s.to_vec(),
+            None => return Vec::new(),
+        };
+        self.in_flight = Some(Flight::External);
+        cfgs
+    }
+
+    /// Manual tell (protocol `tell` line): one externally measured value
+    /// per config of the outstanding `ask` slice.
+    pub fn tell_external(&mut self, vals: &[f64]) -> Result<(), String> {
+        match self.in_flight.take() {
+            Some(Flight::External) => {
+                self.driver.tell_values(self.opt.as_mut(), vals, &mut [])?;
+                self.checkpoint()
+            }
+            other => {
+                self.in_flight = other;
+                Err(format!("session {}: tell without an outstanding ask", self.id))
+            }
+        }
+    }
+
+    /// Write the running records to the session's tuning log (no-op for
+    /// filesystem-less sessions).
+    fn checkpoint(&self) -> Result<(), String> {
+        let Some(dir) = &self.dir else {
+            return Ok(());
+        };
+        let history = History::open(dir).map_err(|e| e.to_string())?;
+        history.write_tuning_records_to(&self.log_name, &self.spec, &self.label, self.driver.records())?;
+        Ok(())
+    }
+
+    /// Snapshot the outcome so far (errors if nothing was evaluated).
+    pub fn outcome(&self) -> Result<TuningOutcome, String> {
+        self.driver.outcome(&self.label)
+    }
+
+    /// Finalize: write the tuning log and summary row (project-backed
+    /// sessions), mark the session closed, and return the outcome.
+    pub fn finalize(&mut self) -> Result<TuningOutcome, String> {
+        let outcome = self.driver.outcome(&self.label)?;
+        if let Some(dir) = &self.dir {
+            let history = History::open(dir).map_err(|e| e.to_string())?;
+            history.write_tuning_log_to(&self.log_name, &self.spec, &outcome)?;
+            history.append_summary(&self.spec, &outcome)?;
+        }
+        self.finalized = true;
+        Ok(outcome)
+    }
+}

@@ -1,0 +1,263 @@
+//! Bit-exact FNV-1a fingerprints shared by grid dedup and the serve
+//! daemon's simulation memo-cache.
+//!
+//! One hashing discipline everywhere: every `f64` is hashed by its raw
+//! IEEE-754 bits (`to_bits`, little-endian bytes), so two values share a
+//! fingerprint iff they are bit-identical — `0.0` and `-0.0` differ, any
+//! two NaN payloads differ, and no formatting or rounding is involved.
+//! [`config_value_key`] is byte-for-byte the key `GridSearch` has always
+//! computed for its constraint dedup (extracted here so the memo-cache
+//! reuses the same hashing); [`eval_fingerprint`] extends it over the
+//! full simulation input — cluster spec, noise model, workload profile,
+//! decoded config values and seed — which is exactly the argument tuple
+//! of the pure `simulate_runtime`, making a fingerprint hit sufficient
+//! for serving the cached runtime without touching the DES.
+//!
+//! All keys are 64-bit, so distinct inputs collide with ~2^-64 odds —
+//! the same accepted risk the grid dedup key carries.
+
+use crate::config::params::HadoopConfig;
+use crate::hadoop::ClusterSpec;
+use crate::workloads::WorkloadSpec;
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Fnv1a {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> &mut Fnv1a {
+        self.write(&v.to_le_bytes())
+    }
+
+    /// Hash the raw IEEE-754 bits (bit-exact: -0.0 != 0.0, NaN payloads
+    /// distinct).
+    pub fn write_f64_bits(&mut self, v: f64) -> &mut Fnv1a {
+        self.write(&v.to_bits().to_le_bytes())
+    }
+
+    /// Hash a string with a terminator byte, so `("ab", "c")` and
+    /// `("a", "bc")` never collide by concatenation.
+    pub fn write_str(&mut self, s: &str) -> &mut Fnv1a {
+        self.write(s.as_bytes()).write(&[0xff])
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Bit-exact dedup key over a decoded config's value bits — the exact
+/// key `GridSearch` computes for constraint-collapsed grid points and
+/// resume replay (two configs share a key iff every value is
+/// bit-identical).
+pub fn config_value_key(values: &[f64]) -> u64 {
+    let mut h = Fnv1a::new();
+    for v in values {
+        h.write_f64_bits(*v);
+    }
+    h.finish()
+}
+
+/// [`config_value_key`] plus registry identity: the parameter names are
+/// hashed before the value bits, so two configs laid out on different
+/// registries (e.g. a spec-declared extra dimension) never share a
+/// fingerprint even when their value vectors coincide.
+pub fn config_fingerprint(cfg: &HadoopConfig) -> u64 {
+    let mut h = Fnv1a::new();
+    for d in cfg.registry().defs() {
+        h.write_str(&d.name);
+    }
+    for v in &cfg.values {
+        h.write_f64_bits(*v);
+    }
+    h.finish()
+}
+
+fn write_cluster(h: &mut Fnv1a, cl: &ClusterSpec) {
+    h.write_u64(cl.nodes as u64)
+        .write_u64(cl.racks as u64)
+        .write_u64(cl.mem_per_node_mb as u64)
+        .write_u64(cl.vcores_per_node as u64)
+        .write_f64_bits(cl.disk_mbps)
+        .write_f64_bits(cl.net_mbps)
+        .write_u64(cl.replication as u64)
+        .write_f64_bits(cl.task_overhead_s)
+        .write_f64_bits(cl.am_overhead_s)
+        .write_f64_bits(cl.locality)
+        .write_f64_bits(cl.noise.sigma)
+        .write_f64_bits(cl.noise.node_sigma)
+        .write_f64_bits(cl.noise.straggler_prob)
+        .write_f64_bits(cl.noise.straggler_mult.0)
+        .write_f64_bits(cl.noise.straggler_mult.1)
+        .write_f64_bits(cl.noise.failure_prob)
+        .write_u64(cl.noise.max_attempts as u64)
+        .write_u64(cl.speculative as u64);
+    // cl.seed is deliberately NOT hashed: the per-run simulation seed is
+    // a separate fingerprint component (eval_fingerprint's `seed`), and
+    // two clusters differing only in base seed produce identical runs
+    // when handed the same per-run seed.
+}
+
+fn write_workload(h: &mut Fnv1a, wl: &WorkloadSpec) {
+    h.write_str(&wl.name)
+        .write_f64_bits(wl.input_mb)
+        .write_f64_bits(wl.map_selectivity)
+        .write_f64_bits(wl.cpu_per_mb_map)
+        .write_f64_bits(wl.cpu_per_mb_red)
+        .write_f64_bits(wl.compress_ratio)
+        .write_f64_bits(wl.output_selectivity)
+        .write_f64_bits(wl.record_kb)
+        .write_f64_bits(wl.key_skew);
+}
+
+/// Fingerprint of one simulation run: the bit-exact
+/// (cluster, workload, config-values, seed) tuple —
+/// `simulate_runtime(spec, wl, cfg, seed)` is a pure function of exactly
+/// these inputs, so equal fingerprints (collision odds aside) mean
+/// equal runtimes and a memo-cache hit is sound.
+pub fn eval_fingerprint(cl: &ClusterSpec, wl: &WorkloadSpec, cfg: &HadoopConfig, seed: u64) -> u64 {
+    let mut h = Fnv1a::new();
+    write_cluster(&mut h, cl);
+    write_workload(&mut h, wl);
+    for d in cfg.registry().defs() {
+        h.write_str(&d.name);
+    }
+    for v in &cfg.values {
+        h.write_f64_bits(*v);
+    }
+    h.write_u64(seed);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::wordcount;
+
+    #[test]
+    fn config_value_key_matches_the_historical_grid_key() {
+        // the inlined original: FNV-1a over value bits, le bytes
+        fn original(values: &[f64]) -> u64 {
+            let mut h = FNV_OFFSET;
+            for v in values {
+                for b in v.to_bits().to_le_bytes() {
+                    h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+                }
+            }
+            h
+        }
+        for vals in [
+            vec![],
+            vec![0.0],
+            vec![1.5, -3.25, 1e300],
+            vec![f64::NAN, f64::INFINITY, -0.0],
+        ] {
+            assert_eq!(config_value_key(&vals), original(&vals));
+        }
+    }
+
+    #[test]
+    fn keys_are_stable_across_runs() {
+        // pinned values: any change to the hashing discipline (order,
+        // byte layout, constants) is a cache/dedup-breaking change and
+        // must show up here
+        assert_eq!(config_value_key(&[]), FNV_OFFSET);
+        assert_eq!(config_value_key(&[0.0]), 0xa8c7_f832_281a_39c5);
+        assert_eq!(
+            config_value_key(&[1.0, 2.0]),
+            {
+                let mut h = Fnv1a::new();
+                h.write_u64(1.0f64.to_bits()).write_u64(2.0f64.to_bits());
+                h.finish()
+            },
+            "f64 bit hashing must equal hashing the bits as u64 le bytes"
+        );
+        let k1 = config_value_key(&[4.0, 256.0, 0.66]);
+        let k2 = config_value_key(&[4.0, 256.0, 0.66]);
+        assert_eq!(k1, k2);
+    }
+
+    #[test]
+    fn edge_values_stay_distinct() {
+        // -0.0 vs 0.0: equal as f64, different bits, different keys
+        assert_ne!(config_value_key(&[0.0]), config_value_key(&[-0.0]));
+        // NaN vs any number, and NaN payloads
+        assert_ne!(config_value_key(&[f64::NAN]), config_value_key(&[0.0]));
+        let quiet = f64::NAN;
+        let payload = f64::from_bits(quiet.to_bits() ^ 1);
+        assert!(payload.is_nan());
+        assert_ne!(
+            config_value_key(&[quiet]),
+            config_value_key(&[payload]),
+            "distinct NaN payloads must not share a key"
+        );
+        // order matters
+        assert_ne!(config_value_key(&[1.0, 2.0]), config_value_key(&[2.0, 1.0]));
+    }
+
+    #[test]
+    fn config_fingerprint_separates_registries() {
+        let base = HadoopConfig::default();
+        let spec = crate::config::spec::TuningSpec::parse(
+            "param x.shuffle.buffer.kb int 32 4096\n",
+        )
+        .unwrap();
+        let extra = HadoopConfig::for_registry(spec.registry.clone());
+        // same leading value bits, different registries
+        assert_ne!(config_fingerprint(&base), config_fingerprint(&extra));
+        // and stable for equal configs
+        assert_eq!(config_fingerprint(&base), config_fingerprint(&HadoopConfig::default()));
+    }
+
+    #[test]
+    fn eval_fingerprint_tracks_every_component() {
+        let cl = ClusterSpec::default();
+        let wl = wordcount(2048.0);
+        let cfg = HadoopConfig::default();
+        let k = eval_fingerprint(&cl, &wl, &cfg, 7);
+        assert_eq!(k, eval_fingerprint(&cl, &wl, &cfg, 7), "not deterministic");
+
+        // seed
+        assert_ne!(k, eval_fingerprint(&cl, &wl, &cfg, 8));
+        // workload
+        assert_ne!(k, eval_fingerprint(&cl, &wl.clone().with_input_mb(1024.0), &cfg, 7));
+        // cluster (noise matters: differing sigma can never share a hit)
+        let mut noisy = cl.clone();
+        noisy.noise.sigma += 0.01;
+        assert_ne!(k, eval_fingerprint(&noisy, &wl, &cfg, 7));
+        // config values
+        let mut cfg2 = cfg.clone();
+        cfg2.set(crate::config::params::P_REDUCES, 3.0);
+        assert_ne!(k, eval_fingerprint(&cl, &wl, &cfg2, 7));
+
+        // the cluster BASE seed is not part of the key: per-run seeds
+        // are, so two projects that differ only in sim.seed
+        // still share cache entries for the same per-run seed (two
+        // daemons' projects differing only in sim.seed still dedup)
+        let mut reseeded = cl.clone();
+        reseeded.seed = 12345;
+        assert_eq!(k, eval_fingerprint(&reseeded, &wl, &cfg, 7));
+    }
+}

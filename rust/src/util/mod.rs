@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod csv;
+pub mod fingerprint;
 pub mod json;
 pub mod linalg;
 pub mod ord;

@@ -119,10 +119,34 @@ impl ThreadPool {
         while scratch.len() < workers {
             scratch.push(init());
         }
+        self.scoped_run_slots(n, &mut scratch[..workers], f)
+    }
+
+    /// The slot-level core of [`ThreadPool::scoped_run_with`]: run
+    /// `0..n` over at most `slots.len()` of the pool's workers, each
+    /// participating worker holding exclusive `&mut` access to its slot
+    /// for the whole call. The caller owns the slots outright (a plain
+    /// `&mut [S]`, no grow-on-demand) — which is what lets long-lived
+    /// owners like the serve dispatcher size their arena pool ONCE and
+    /// bound memory for the daemon's lifetime, instead of letting every
+    /// call site grow a `Vec`. Worker count = `size().min(slots.len())
+    /// .min(n)`; one worker runs serially on slot 0.
+    pub fn scoped_run_slots<S, R, F>(&self, n: usize, slots: &mut [S], f: F) -> Vec<R>
+    where
+        S: Send,
+        R: Send,
+        F: Fn(&mut S, usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        assert!(!slots.is_empty(), "scoped_run_slots needs at least one scratch slot");
+        let workers = self.size().min(slots.len()).min(n);
         if workers == 1 {
-            let s = &mut scratch[0];
+            let s = &mut slots[0];
             return (0..n).map(|i| f(&mut *s, i)).collect();
         }
+        let scratch = slots;
         let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
         let next = AtomicUsize::new(0);
         let (done_tx, done_rx) = mpsc::channel::<thread::Result<()>>();
@@ -359,6 +383,39 @@ mod tests {
         // the single-worker fast path shares slot 0
         pool.scoped_run_with(3, 1, &mut scratch, Vec::new, |log, i| log.push(100 + i));
         assert!(scratch[0].ends_with(&[100, 101, 102]));
+    }
+
+    #[test]
+    fn scoped_run_slots_respects_caller_sized_slots() {
+        let pool = ThreadPool::new(8);
+        // the caller sizes the slot pool once; worker count is capped by it
+        let mut slots: Vec<Vec<usize>> = vec![Vec::new(); 3];
+        let out = pool.scoped_run_slots(32, &mut slots, |log, i| {
+            log.push(i);
+            i + 1
+        });
+        assert_eq!(out, (1..=32).collect::<Vec<_>>());
+        assert_eq!(slots.len(), 3, "slot pool must not grow");
+        let mut all: Vec<usize> = slots.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..32).collect::<Vec<_>>());
+
+        // single slot → serial path on slot 0
+        let mut one = vec![0usize];
+        let out = pool.scoped_run_slots(4, &mut one, |acc, i| {
+            *acc += i;
+            i
+        });
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(one[0], 6, "slot 0 accumulated 0+1+2+3");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one scratch slot")]
+    fn scoped_run_slots_rejects_empty_slot_pool() {
+        let pool = ThreadPool::new(2);
+        let mut slots: Vec<()> = Vec::new();
+        pool.scoped_run_slots(1, &mut slots, |_, i| i);
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! Serve-subsystem guarantees, pinned byte-for-byte:
+//! * the hard bar: a session's eval sequence and `TuningOutcome` are
+//!   byte-identical to the same spec run standalone through
+//!   `Driver::run` + `ClusterObjective`, for ALL eight methods, whether
+//!   sessions interleave or the memo-cache serves every evaluation;
+//! * a second identical session is 100% cache hits (zero new misses)
+//!   and still lands on the identical outcome;
+//! * project-backed sessions write tuning logs byte-identical to the
+//!   standalone `OptimizerRunner`'s, cache-served or not;
+//! * spec typo-guard warnings are emitted exactly once per loaded
+//!   session (at `open`), never again on step/run/ask paths;
+//! * a killed daemon resumes from its per-slice checkpoint through the
+//!   normal replay machinery;
+//! * the bounded work-queue starves no session, and the external
+//!   `ask`/`tell` protocol path drives a session to completion.
+
+use std::io::Cursor;
+use std::path::PathBuf;
+
+use catla::catla::{create_template, OptimizerRunner, Project, ProjectKind, TuningSettings};
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::core::DEFAULT_BATCH_CHUNK;
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, TuningOutcome, ALL_METHODS};
+use catla::serve::{Daemon, Dispatcher, ServeSession};
+use catla::workloads::wordcount;
+
+const BUDGET: usize = 18;
+const SEED: u64 = 23;
+
+fn settings(optimizer: &str, repeats: usize) -> TuningSettings {
+    TuningSettings {
+        optimizer: optimizer.to_string(),
+        budget: BUDGET,
+        repeats,
+        seed: SEED,
+        prescreen: false,
+        early_patience: 0,
+        early_tol: 1e-3,
+        batch_chunk: DEFAULT_BATCH_CHUNK,
+        cache_entries: None,
+    }
+}
+
+fn session(id: &str, optimizer: &str, repeats: usize) -> ServeSession {
+    ServeSession::new(
+        id,
+        TuningSpec::fig3(),
+        HadoopConfig::default(),
+        ClusterSpec::default(),
+        wordcount(2048.0),
+        &settings(optimizer, repeats),
+    )
+    .unwrap()
+}
+
+/// The reference every session must reproduce: the same spec through the
+/// standalone driver against the batched cluster objective.
+fn standalone(optimizer: &str, repeats: usize) -> TuningOutcome {
+    let wl = wordcount(2048.0);
+    let sp = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut obj = ClusterObjective::new(&mut cluster, &wl, repeats);
+    let mut opt = Method::from_name(optimizer, SEED).unwrap().build();
+    Driver::new(BUDGET).run(opt.as_mut(), &sp, &mut obj).unwrap()
+}
+
+/// Byte-exact fingerprint of an outcome (f64s via to_bits, so any drift
+/// in values, order or config decoding shows up).
+fn fingerprint(out: &TuningOutcome) -> String {
+    let mut s = format!("{}|{}|{:x}", out.optimizer, out.evals(), out.best_value.to_bits());
+    for r in &out.records {
+        s.push_str(&format!(
+            ";{}:{:x}:{:x}:{}",
+            r.iter,
+            r.value.to_bits(),
+            r.best_so_far.to_bits(),
+            r.unit_x
+                .iter()
+                .map(|u| format!("{:x}", u.to_bits()))
+                .collect::<Vec<_>>()
+                .join(","),
+        ));
+        s.push_str(&format!("{:?}", r.config.values));
+    }
+    s
+}
+
+#[test]
+fn interleaved_sessions_match_standalone_driver_for_all_methods() {
+    for name in ALL_METHODS {
+        let reference = fingerprint(&standalone(name, 1));
+        let mut sessions = vec![session("a", name, 1), session("b", name, 1)];
+        let mut d = Dispatcher::new(2, 1 << 14);
+        d.run_all(&mut sessions).unwrap();
+        for s in &sessions {
+            assert_eq!(
+                fingerprint(&s.outcome().unwrap()),
+                reference,
+                "{name}: interleaved session {} diverged from standalone Driver::run",
+                s.id
+            );
+        }
+    }
+}
+
+#[test]
+fn cache_served_session_is_all_hits_and_byte_identical() {
+    for name in ALL_METHODS {
+        let reference = fingerprint(&standalone(name, 1));
+        let mut d = Dispatcher::new(2, 1 << 14);
+        let mut sessions = vec![session("a", name, 1)];
+        d.run_all(&mut sessions).unwrap();
+        let after_a = d.cache_stats();
+
+        // session B over the same spec: every evaluation must come out
+        // of the memo-cache (zero new misses) and the outcome must not
+        // move a byte
+        sessions.push(session("b", name, 1));
+        d.run_all(&mut sessions).unwrap();
+        let after_b = d.cache_stats();
+        let evals = sessions[1].evals() as u64;
+        assert!(evals > 0, "{name}: session B evaluated nothing");
+        assert_eq!(
+            after_b.misses, after_a.misses,
+            "{name}: session B missed the cache"
+        );
+        assert_eq!(
+            after_b.hits - after_a.hits,
+            evals,
+            "{name}: session B's evals were not all served from cache"
+        );
+        for s in &sessions {
+            assert_eq!(
+                fingerprint(&s.outcome().unwrap()),
+                reference,
+                "{name}: session {} diverged (cache hits changed the outcome?)",
+                s.id
+            );
+        }
+    }
+}
+
+#[test]
+fn repeats_fold_matches_cluster_objective() {
+    // repeats > 1: each config is simulated `repeats` times on distinct
+    // reserved seeds and folded into a mean — the serve fold must be the
+    // exact ClusterObjective expression
+    let reference = fingerprint(&standalone("bobyqa", 2));
+    let mut sessions = vec![session("a", "bobyqa", 2), session("b", "bobyqa", 2)];
+    let mut d = Dispatcher::new(3, 1 << 14);
+    d.run_all(&mut sessions).unwrap();
+    for s in &sessions {
+        assert_eq!(
+            fingerprint(&s.outcome().unwrap()),
+            reference,
+            "session {}: repeats fold diverged from standalone",
+            s.id
+        );
+    }
+}
+
+#[test]
+fn queue_cap_bounds_a_step_and_starves_no_session() {
+    let mut sessions: Vec<ServeSession> =
+        (0..6).map(|i| session(&format!("s{i}"), "random", 1)).collect();
+    let mut d = Dispatcher::new(2, 1 << 14).with_queue_cap(1);
+    let r = d.step(&mut sessions).unwrap();
+    assert_eq!(r.sessions, 1, "cap 1 should admit exactly one session's slice");
+    d.run_all(&mut sessions).unwrap();
+    for s in &sessions {
+        assert_eq!(s.evals(), BUDGET, "session {} starved behind the queue cap", s.id);
+    }
+}
+
+// ---- project-backed daemon tests -----------------------------------
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("catla-serve-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tuning_project(name: &str, properties: &str) -> PathBuf {
+    let dir = tmp(name);
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(dir.join("tuning.properties"), properties).unwrap();
+    dir
+}
+
+const SMALL: &str = "optimizer=bobyqa\nbudget=12\nrepeats=1\nseed=7\n";
+
+fn serve_script(daemon: &mut Daemon, script: String) -> String {
+    let mut out = Vec::new();
+    daemon.serve(Cursor::new(script), &mut out).unwrap();
+    String::from_utf8(out).unwrap()
+}
+
+#[test]
+fn project_logs_are_byte_identical_across_serve_and_standalone() {
+    let dir_a = tuning_project("log-a", SMALL);
+    let dir_b = tuning_project("log-b", SMALL);
+    let dir_c = tuning_project("log-c", SMALL);
+
+    // standalone reference: the OptimizerRunner writes dir_c's log
+    let project = Project::load(&dir_c).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::from_env(&project.env));
+    OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+
+    // daemon: run A fully, then B — identical project, so B must be
+    // 100% cache hits — then close both
+    let mut daemon = Daemon::new(Dispatcher::new(2, 1 << 12));
+    let reply = serve_script(
+        &mut daemon,
+        format!(
+            "open a {a}\nrun a\nstats\nopen b {b}\nrun b\nstats\nclose a\nclose b\nshutdown\n",
+            a = dir_a.display(),
+            b = dir_b.display()
+        ),
+    );
+    assert_eq!(
+        reply.lines().filter(|l| l.starts_with("ok close")).count(),
+        2,
+        "close failed:\n{reply}"
+    );
+    let stats: Vec<&str> = reply.lines().filter(|l| l.starts_with("ok stats")).collect();
+    assert_eq!(stats.len(), 2, "missing stats replies:\n{reply}");
+    let field = |line: &str, key: &str| -> u64 {
+        line.split_whitespace()
+            .find_map(|t| t.strip_prefix(&format!("{key}=")))
+            .unwrap_or_else(|| panic!("no {key}= in {line:?}"))
+            .parse()
+            .unwrap()
+    };
+    assert_eq!(
+        field(stats[0], "misses"),
+        field(stats[1], "misses"),
+        "session B missed the cache:\n{reply}"
+    );
+    assert!(
+        field(stats[1], "hits") > field(stats[0], "hits"),
+        "session B registered no cache hits:\n{reply}"
+    );
+
+    let log = |d: &PathBuf| std::fs::read(d.join("history").join("tuning_log.csv")).unwrap();
+    assert_eq!(
+        log(&dir_a),
+        log(&dir_c),
+        "serve session A's tuning log differs from the standalone OptimizerRunner's"
+    );
+    assert_eq!(
+        log(&dir_b),
+        log(&dir_c),
+        "cache-served session B's tuning log differs from the standalone run's"
+    );
+    for d in [dir_a, dir_b, dir_c] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn spec_typo_warning_is_emitted_once_per_session() {
+    let dir = tuning_project("warn", SMALL);
+    let spec_path = dir.join("params.spec");
+    let mut spec = std::fs::read_to_string(&spec_path).unwrap();
+    spec.push_str("param memory.mbb int 512 4096\n");
+    std::fs::write(&spec_path, spec).unwrap();
+
+    let mut daemon = Daemon::new(Dispatcher::new(2, 1 << 12));
+    let reply = serve_script(
+        &mut daemon,
+        format!(
+            "open s {d}\nstep s\nstep s\nrun s\nstatus s\nclose s\nshutdown\n",
+            d = dir.display()
+        ),
+    );
+    let warnings: Vec<&str> = reply.lines().filter(|l| l.starts_with("warning ")).collect();
+    assert_eq!(
+        warnings.len(),
+        1,
+        "typo-guard warning must surface exactly once per loaded session:\n{reply}"
+    );
+    assert!(
+        warnings[0].contains("memory.mbb"),
+        "wrong warning surfaced: {}",
+        warnings[0]
+    );
+    assert!(
+        reply.lines().any(|l| l.starts_with("ok close s")),
+        "session did not close cleanly:\n{reply}"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn killed_daemon_resumes_from_checkpoint() {
+    let dir = tuning_project("resume", SMALL);
+    {
+        let mut sessions = vec![ServeSession::open(&dir, "s", "tuning_log.csv").unwrap()];
+        let mut d = Dispatcher::new(2, 1 << 12);
+        for _ in 0..3 {
+            d.step(&mut sessions).unwrap();
+        }
+        assert!(sessions[0].evals() > 0, "no slices completed before the crash");
+        assert!(!sessions[0].is_done(), "budget too small to interrupt mid-run");
+        // dropped without finalize: the "crash" loses only in-flight work
+    }
+    let mut sessions = vec![ServeSession::open(&dir, "s", "tuning_log.csv").unwrap()];
+    let prior = sessions[0].evals();
+    assert!(prior > 0, "checkpoint log was not replayed");
+    assert!(
+        sessions[0].label().contains("resumed"),
+        "resumed session not labeled as such: {}",
+        sessions[0].label()
+    );
+    let mut d = Dispatcher::new(2, 1 << 12);
+    d.run_all(&mut sessions).unwrap();
+    let out = sessions[0].finalize().unwrap();
+    assert_eq!(out.evals(), 12, "resume did not complete the original budget");
+    let summary = std::fs::read_to_string(dir.join("history").join("summary.csv")).unwrap();
+    assert!(summary.lines().count() >= 2, "summary row missing after finalize");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn external_ask_tell_protocol_drives_a_session() {
+    // a session measured by an external client: random with budget 4
+    // asks its whole design up front, the client tells 4 values
+    let dir = tuning_project("external", "optimizer=random\nbudget=4\nrepeats=1\nseed=7\n");
+    let mut daemon = Daemon::new(Dispatcher::new(2, 1 << 12));
+    let reply = serve_script(
+        &mut daemon,
+        format!(
+            "open s {d}\nask s\ntell s 40 30 20 10\nstatus s\nask s\nstatus s\nclose s\nshutdown\n",
+            d = dir.display()
+        ),
+    );
+    let candidates = reply.lines().filter(|l| l.starts_with("candidate s ")).count();
+    assert_eq!(candidates, 4, "expected the whole random design:\n{reply}");
+    assert!(
+        reply.contains("ok tell s evals=4"),
+        "tell did not record 4 evals:\n{reply}"
+    );
+    assert!(
+        reply.contains("ok ask s n=0"),
+        "second ask should find the stream exhausted:\n{reply}"
+    );
+    assert!(
+        reply.lines().any(|l| l.starts_with("ok status s") && l.contains("done=true")),
+        "session never reported done:\n{reply}"
+    );
+    assert!(
+        reply.lines().any(|l| l.starts_with("ok close s") && l.contains("best=10.000")),
+        "close did not report the told best:\n{reply}"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Serve daemon smoke: open N tuning sessions against a debug
+# `catla serve`, drive them to completion over the line protocol, and
+# assert a clean drain + shutdown — every session opens, reports
+# done=true, closes with a best value, its history logs exist, the
+# daemon answers no `err` lines and exits 0 on `shutdown`.
+#
+# Usage: scripts/serve_smoke.sh   (N=16 scripts/serve_smoke.sh for more)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+N="${N:-8}"
+work="$(mktemp -d)"
+trap 'rm -rf "$work"' EXIT
+
+cargo build --quiet --bin catla
+
+for i in $(seq 1 "$N"); do
+  dir="$work/proj$i"
+  ./target/debug/catla template --dir "$dir" --kind tuning --workload wordcount --input-mb 512 >/dev/null
+  # small budget so the smoke stays fast
+  printf 'optimizer=bobyqa\nbudget=6\nrepeats=1\nseed=7\n' > "$dir/tuning.properties"
+done
+
+{
+  for i in $(seq 1 "$N"); do echo "open s$i $work/proj$i"; done
+  echo "run"
+  for i in $(seq 1 "$N"); do echo "status s$i"; done
+  echo "stats"
+  for i in $(seq 1 "$N"); do echo "close s$i"; done
+  echo "shutdown"
+} > "$work/script.txt"
+
+out="$work/out.txt"
+./target/debug/catla serve --threads 2 < "$work/script.txt" > "$out"
+
+opens=$(grep -c '^ok open ' "$out" || true)
+closes=$(grep -c '^ok close ' "$out" || true)
+drained=$(grep -c '^ok status .* done=true' "$out" || true)
+[ "$opens" -eq "$N" ] || { echo "expected $N 'ok open' lines, got $opens"; cat "$out"; exit 1; }
+[ "$drained" -eq "$N" ] || { echo "expected $N drained sessions, got $drained"; cat "$out"; exit 1; }
+[ "$closes" -eq "$N" ] || { echo "expected $N 'ok close' lines, got $closes"; cat "$out"; exit 1; }
+grep -q '^ok shutdown$' "$out" || { echo "no clean shutdown reply"; cat "$out"; exit 1; }
+if grep -q '^err ' "$out"; then echo "daemon reported errors:"; grep '^err ' "$out"; exit 1; fi
+
+for i in $(seq 1 "$N"); do
+  [ -s "$work/proj$i/history/tuning_log.csv" ] || { echo "proj$i: tuning log missing"; exit 1; }
+  [ -s "$work/proj$i/history/summary.csv" ] || { echo "proj$i: summary row missing"; exit 1; }
+done
+
+echo "serve smoke ok: $N sessions opened, drained, closed; clean shutdown"
