@@ -95,6 +95,8 @@ impl TuningSettings {
                 min_rel: self.early_tol,
             });
         }
+        // detlint: allow(ambient-entropy) -- opt-in stderr trace observer;
+        // attaches a printer only, never alters tuning decisions
         if std::env::var("CATLA_TRACE").is_ok() {
             driver = driver.observe(|r: &EvalRecord| {
                 eprintln!(

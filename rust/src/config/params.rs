@@ -129,6 +129,7 @@ impl HadoopConfig {
         self.values[index].round() as i64
     }
 
+    #[allow(clippy::float_cmp)] // bools are stored as exactly 0.0/1.0 by construction
     pub fn get_bool(&self, index: usize) -> bool {
         self.values[index] != 0.0
     }
@@ -155,6 +156,7 @@ impl HadoopConfig {
     // ---- validity / rendering -------------------------------------------
 
     /// All values within bounds and discrete params integral?
+    #[allow(clippy::float_cmp)] // fract() != 0.0 is the exact integrality check for discrete params
     pub fn validate(&self) -> Result<(), String> {
         if self.values.len() != self.registry.len() {
             return Err(format!(

@@ -238,6 +238,7 @@ impl ParamDef {
     }
 
     /// Render a stored value as the Hadoop `-D` argument payload.
+    #[allow(clippy::float_cmp)] // bools are stored as exactly 0.0/1.0 by construction
     pub fn format_value(&self, v: f64) -> String {
         match &self.kind {
             ParamKind::Bool => format!("{}", v != 0.0),
@@ -250,6 +251,7 @@ impl ParamDef {
         }
     }
 
+    #[allow(clippy::float_cmp)] // fract() != 0.0 is the exact integrality check for discrete params
     fn validate(&self) -> Result<(), String> {
         if let ParamKind::Categorical(cats) = &self.kind {
             if cats.len() < 2 {
@@ -451,6 +453,7 @@ impl Constraint {
     }
 
     /// Render as a spec line body using full parameter names.
+    #[allow(clippy::float_cmp)] // coef == 1.0 only elides the parsed-back-exactly "1*" prefix
     pub fn display(&self, registry: &ParamRegistry) -> String {
         let lhs = &registry.get(self.lhs).name;
         match self.bound {

@@ -6,7 +6,7 @@
 //! (DESIGN.md substitution table row 1). A real SSH implementation could
 //! be dropped in without touching any Catla code.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::joblogs;
@@ -84,7 +84,10 @@ pub struct SimCluster {
     pub spec: ClusterSpec,
     seed_counter: u64,
     pub polls_until_done: u32,
-    jobs: HashMap<String, (JobResult, u32)>,
+    /// In-flight job table. Ordered map (detlint `hash-collections`):
+    /// keyed access only, and job ids are assigned in submission order,
+    /// so any future iteration is submission-ordered too.
+    jobs: BTreeMap<String, (JobResult, u32)>,
     /// Recently fetched (evicted) job ids, oldest first, bounded by
     /// [`RETIRED_JOBS_KEPT`].
     retired: VecDeque<String>,
@@ -102,7 +105,7 @@ impl SimCluster {
             spec,
             seed_counter: seed,
             polls_until_done: 2,
-            jobs: HashMap::new(),
+            jobs: BTreeMap::new(),
             retired: VecDeque::new(),
             completed: 0,
             next_id: 1,

@@ -60,6 +60,7 @@ pub fn to_history_json(job_id: &str, r: &JobResult) -> Json {
     j
 }
 
+#[allow(clippy::float_cmp)] // bools are stored as exactly 0.0/1.0 by construction
 fn config_json(cfg: &crate::config::params::HadoopConfig) -> Json {
     use crate::config::space::ParamKind;
     let mut o = Json::obj();

@@ -59,6 +59,7 @@ impl NoiseModel {
 
     /// [`NoiseModel::node_factors`] into a reused buffer (identical RNG
     /// draw sequence) — the simulation arena's allocation-free path.
+    #[allow(clippy::float_cmp)] // sigma == 0.0 is the exact noise-off switch; it must not draw from the RNG
     pub fn node_factors_into(&self, rng: &mut Rng, n: usize, out: &mut Vec<f64>) {
         out.clear();
         out.extend((0..n).map(|_| {
@@ -71,6 +72,7 @@ impl NoiseModel {
     }
 
     /// Sample one task attempt's duration multiplier (jitter x straggler).
+    #[allow(clippy::float_cmp)] // sigma == 0.0 is the exact noise-off switch; it must not draw from the RNG
     pub fn task_multiplier(&self, rng: &mut Rng) -> f64 {
         let jitter = if self.sigma == 0.0 {
             1.0

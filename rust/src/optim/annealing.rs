@@ -120,6 +120,7 @@ impl Optimizer for SimulatedAnnealing {
         vec![Candidate::new(cand)]
     }
 
+    #[allow(clippy::float_cmp)] // t0 == 0.0 is the exact not-yet-set sentinel, never computed
     fn tell(&mut self, evals: &[EvalRecord]) {
         self.best.update(evals);
         let st = match &mut self.st {

@@ -49,6 +49,7 @@ impl QuadModel {
 /// Fit the minimum-Frobenius-norm quadratic through `(points, values)`
 /// centered at `center`. Returns None when the interpolation system is
 /// singular (degenerate geometry) — callers must take a geometry step.
+#[allow(clippy::float_cmp)] // exact-zero Lagrange multipliers skip a rank-1 update, no tolerance wanted
 pub fn fit_min_frobenius(
     points: &[Vec<f64>],
     values: &[f64],

@@ -9,7 +9,7 @@
 //! product. Points told before the first ask (resume replay) are skipped
 //! by bit-exact config key — that is how an interrupted sweep continues.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 
 use crate::config::params::HadoopConfig;
 use crate::optim::core::{BestSeen, Candidate, Optimizer, DEFAULT_BATCH_CHUNK};
@@ -35,7 +35,10 @@ pub struct GridSearch {
     need_keys: Option<bool>,
     /// Bit-exact keys of decoded configs already evaluated (tell /
     /// resume replay). Stays empty when `need_keys` latches false.
-    done: HashSet<u64>,
+    /// Ordered set (detlint `hash-collections`): membership-only here,
+    /// but hash-iteration order must never be one accident away from an
+    /// eval sequence.
+    done: BTreeSet<u64>,
     best: BestSeen,
 }
 
@@ -62,7 +65,7 @@ impl GridSearch {
             chunk: DEFAULT_BATCH_CHUNK,
             shard: None,
             need_keys: None,
-            done: HashSet::new(),
+            done: BTreeSet::new(),
             best: BestSeen::default(),
         }
     }
@@ -113,7 +116,7 @@ impl Optimizer for GridSearch {
         });
         let want = budget_left.min(self.chunk);
         let mut batch = Vec::with_capacity(want.min(DEFAULT_BATCH_CHUNK));
-        let mut batch_keys = HashSet::new();
+        let mut batch_keys = BTreeSet::new();
         while batch.len() < want {
             let x = match cursor.next() {
                 Some(x) => x,

@@ -61,6 +61,8 @@ impl Runtime {
     /// Resolve the artifacts directory: `$CATLA_ARTIFACTS`, else
     /// `./artifacts`, else `<crate root>/artifacts`.
     pub fn default_artifacts_dir() -> PathBuf {
+        // detlint: allow(ambient-entropy) -- artifact-directory discovery
+        // at open; not on any simulation or tuning-decision path
         if let Ok(d) = std::env::var("CATLA_ARTIFACTS") {
             return PathBuf::from(d);
         }

@@ -15,7 +15,7 @@
 //! stats line and `BENCH_serve.json`'s hit-rate column are measured, not
 //! inferred.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Default LRU cap — generous: an entry is 40 bytes of links + key +
 /// value plus map overhead, so the default tops out around a few MiB.
@@ -54,7 +54,11 @@ impl CacheStats {
 /// front, `insert` evicts the tail at capacity. No per-entry boxing —
 /// entries live in one `Vec` and the recency list is a pair of indices.
 pub struct MemoCache {
-    map: HashMap<u64, usize>,
+    /// Fingerprint → entry index. Ordered map (detlint
+    /// `hash-collections`): only keyed lookups today, and the recency
+    /// list — not map order — defines eviction, but the ordered map
+    /// keeps any future iteration deterministic by construction.
+    map: BTreeMap<u64, usize>,
     entries: Vec<Entry>,
     free: Vec<usize>,
     head: usize,
@@ -66,7 +70,7 @@ pub struct MemoCache {
 impl MemoCache {
     pub fn new(cap: usize) -> MemoCache {
         MemoCache {
-            map: HashMap::new(),
+            map: BTreeMap::new(),
             entries: Vec::new(),
             free: Vec::new(),
             head: NIL,

@@ -14,7 +14,7 @@
 //! a pure function of the fingerprinted inputs) — so interleaving and
 //! cache hits are invisible to any single session's outcome.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{simulate_runtime_in, ClusterSpec, SimArena};
@@ -121,7 +121,10 @@ impl Dispatcher {
             Val(f64),
             Miss(usize),
         }
-        let mut miss_of: HashMap<u64, usize> = HashMap::new();
+        // Ordered map (detlint `hash-collections`): keyed lookups only,
+        // but miss indices feed the parallel simulation order — keep any
+        // future iteration deterministic by construction.
+        let mut miss_of: BTreeMap<u64, usize> = BTreeMap::new();
         let mut misses: Vec<(usize, usize)> = Vec::new(); // (queue idx, job idx)
         let mut resolved: Vec<Vec<Resolved>> = Vec::with_capacity(queue.len());
         for (qi, (_, jobs)) in queue.iter().enumerate() {

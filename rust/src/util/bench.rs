@@ -86,7 +86,7 @@ impl Bench {
             black_box(f());
             samples_ns.push(t0.elapsed().as_nanos() as f64);
         }
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_ns.sort_by(|a, b| a.total_cmp(b));
         let n = samples_ns.len();
         let stats = BenchStats {
             name: name.to_string(),

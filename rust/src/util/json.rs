@@ -82,6 +82,7 @@ impl Json {
         }
     }
 
+    #[allow(clippy::float_cmp)] // fract() == 0.0 is the exact integer-rendering test JSON needs
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

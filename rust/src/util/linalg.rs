@@ -61,6 +61,7 @@ impl Mat {
         t
     }
 
+    #[allow(clippy::float_cmp)] // exact-zero skip is a fast path; any other value must multiply
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows);
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -80,6 +81,7 @@ impl Mat {
 
     /// Solve `self * x = b` via LU with partial pivoting.
     /// Returns None if the matrix is numerically singular.
+    #[allow(clippy::float_cmp)] // exact-zero elimination factor skips a row op; tolerance handled by the pivot test
     pub fn solve(&self, b: &[f64]) -> Option<Vec<f64>> {
         assert_eq!(self.rows, self.cols, "solve needs square matrix");
         assert_eq!(b.len(), self.rows);

@@ -20,6 +20,12 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// lifetime.
 struct SendPtr<T>(*mut T);
 
+// SAFETY: a SendPtr only ever wraps the base of a caller-owned buffer
+// handed to `scoped_run_slots`, which (a) hands each worker a disjoint
+// element range (slot `w` / indices claimed through one atomic counter),
+// and (b) blocks until every worker is done before the borrow it erased
+// ends — so sending the pointer to a worker never creates an aliased or
+// dangling access. `T: Send` carries the payload's own thread-safety.
 unsafe impl<T: Send> Send for SendPtr<T> {}
 
 impl<T> Clone for SendPtr<T> {
@@ -158,8 +164,11 @@ impl ThreadPool {
             let next = &next;
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    // job w is spawned exactly once, so slot w is this
-                    // job's exclusive &mut for the whole call
+                    // SAFETY: job w is spawned exactly once and
+                    // `w < workers <= scratch.len()`, so slot w is this
+                    // job's exclusive &mut for the whole call; the call
+                    // blocks below until every job is done, so the slot
+                    // outlives this reference.
                     let s = unsafe { &mut *scratch_ptr.0.add(w) };
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
@@ -167,8 +176,11 @@ impl ThreadPool {
                             break;
                         }
                         let v = f(s, i);
-                        // each index is claimed by exactly one worker via
-                        // `next`, so this write never aliases
+                        // SAFETY: each index `i < n` is claimed by
+                        // exactly one worker via the shared `next`
+                        // counter, so this write targets a distinct
+                        // element of the n-long results buffer and never
+                        // aliases; the buffer outlives the blocking call.
                         unsafe { *slots_ptr.0.add(i) = Some(v) };
                     }
                 }));
@@ -276,6 +288,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock sleeps observe nothing under Miri's scheduler
     fn runs_concurrently() {
         static PEAK: AtomicUsize = AtomicUsize::new(0);
         static LIVE: AtomicUsize = AtomicUsize::new(0);
@@ -315,6 +328,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // wall-clock sleeps observe nothing under Miri's scheduler
     fn scoped_run_is_concurrent() {
         static PEAK: AtomicUsize = AtomicUsize::new(0);
         static LIVE: AtomicUsize = AtomicUsize::new(0);
@@ -408,6 +422,35 @@ mod tests {
         });
         assert_eq!(out, vec![0, 1, 2, 3]);
         assert_eq!(one[0], 6, "slot 0 accumulated 0+1+2+3");
+    }
+
+    #[test]
+    fn concurrent_scoped_runs_on_disjoint_slot_ranges_are_race_free() {
+        // Two scoped_run_slots calls racing on the SAME pool, each given
+        // a disjoint half of one caller-owned slot buffer. Miri (and
+        // TSan, in the scheduled CI job) verify the SendPtr argument:
+        // disjoint slot ranges from distinct calls never alias.
+        let pool = ThreadPool::new(4);
+        let mut slots: Vec<u64> = vec![0; 4];
+        let (lo, hi) = slots.split_at_mut(2);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let out = pool.scoped_run_slots(8, lo, |acc, i| {
+                    *acc += 1;
+                    i as u64
+                });
+                assert_eq!(out, (0..8).collect::<Vec<u64>>());
+            });
+            s.spawn(|| {
+                let out = pool.scoped_run_slots(8, hi, |acc, i| {
+                    *acc += 1;
+                    2 * i as u64
+                });
+                assert_eq!(out, (0..8).map(|i| 2 * i).collect::<Vec<u64>>());
+            });
+        });
+        // every one of the 16 indices incremented exactly one slot
+        assert_eq!(slots.iter().sum::<u64>(), 16);
     }
 
     #[test]

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
 # CI gate: format check, clippy (-D warnings, the ask/tell core must stay
-# lint-clean), release build, test suite. fmt/clippy are skipped with a
-# notice when the toolchain component is not installed (offline images).
+# lint-clean), a pinned clippy-pedantic subset, the detlint
+# determinism-and-unsafety gate (with its fixture self-test), release
+# build, test suite, and a dependency-advisory audit. fmt/clippy/audit
+# are skipped with a notice when the toolchain component is not
+# installed (offline images); detlint always runs — it is part of this
+# workspace and needs only cargo.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,14 +19,44 @@ fi
 echo "== clippy (optim::core and the rest of the lib, -D warnings) =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --lib --all-targets -- -D warnings
+    cargo clippy -p detlint --all-targets -- -D warnings
+    # pinned pedantic subset over the production lib: exact float
+    # comparison, hash-mutable map keys, and double-lookup map inserts
+    # are determinism/correctness hazards here, not style
+    cargo clippy --lib -- \
+        -D clippy::float_cmp \
+        -D clippy::mutable_key_type \
+        -D clippy::map_entry
 else
     echo "clippy not installed — skipped"
 fi
+
+echo "== detlint (determinism & unsafety gate) =="
+cargo build --release -p detlint
+./target/release/detlint rust/src
+# self-test: the clean corpus must pass and every seeded violation must
+# fail the gate — proof in every CI run that the gate can still fire
+./target/release/detlint tools/detlint/fixtures/clean
+if ./target/release/detlint tools/detlint/fixtures/violations >/dev/null 2>&1; then
+    echo "detlint self-test FAILED: seeded violations passed the gate"
+    exit 1
+fi
+cargo test -q -p detlint
 
 echo "== build =="
 cargo build --release
 
 echo "== test =="
 cargo test -q
+
+echo "== audit (dependency advisories) =="
+if cargo audit --version >/dev/null 2>&1; then
+    # the workspace is dependency-free, so this is a tripwire for any
+    # future dependency rather than a live surface today
+    [ -f Cargo.lock ] || cargo generate-lockfile
+    cargo audit
+else
+    echo "cargo-audit not installed — skipped"
+fi
 
 echo "CI OK"

@@ -1,0 +1,20 @@
+//! Good case for the `#[cfg(test)]` exemption: test scaffolding may use
+//! temp dirs and env reads without tripping `ambient-entropy`, because
+//! nothing under `cfg(test)` ships in the production binary.
+
+pub fn parse(line: &str) -> Option<(String, String)> {
+    let (k, v) = line.split_once('=')?;
+    Some((k.trim().to_string(), v.trim().to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse;
+
+    #[test]
+    fn parses_and_uses_a_temp_dir() {
+        let dir = std::env::temp_dir();
+        assert!(!dir.as_os_str().is_empty());
+        assert_eq!(parse("a = b").unwrap().0, "a");
+    }
+}

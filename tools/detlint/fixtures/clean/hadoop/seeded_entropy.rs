@@ -1,0 +1,21 @@
+//! Good case for `ambient-entropy`: all randomness flows from an
+//! explicit caller-provided seed, all time is simulated virtual time.
+
+pub struct SeededNoise {
+    state: u64,
+}
+
+impl SeededNoise {
+    pub fn new(seed: u64) -> SeededNoise {
+        SeededNoise {
+            state: seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1,
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state ^= self.state << 13;
+        self.state ^= self.state >> 7;
+        self.state ^= self.state << 17;
+        self.state
+    }
+}

@@ -1,0 +1,8 @@
+//! Good case for the `ambient-entropy` exemption: the CLI entry point
+//! owns argv, the environment, and the wall clock.
+
+fn main() {
+    let started = std::time::Instant::now();
+    let args: Vec<String> = std::env::args().collect();
+    println!("{} args in {:?}", args.len(), started.elapsed());
+}

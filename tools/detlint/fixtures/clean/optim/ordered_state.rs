@@ -1,0 +1,26 @@
+//! Good case for `hash-collections`: ordered structures by default, and
+//! the one hash-keyed map carries a reasoned allow.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+// detlint: allow(hash-collections) -- interner is lookup-only; nothing
+// ever iterates it, so hash order cannot leak into eval sequences
+use std::collections::HashMap;
+
+pub struct OrderedState {
+    pub visited: BTreeSet<u64>,
+    pub scores: BTreeMap<u64, f64>,
+    interned: HashMap<String, u32>, // detlint: allow(hash-collections) -- lookup-only interner
+}
+
+impl OrderedState {
+    pub fn record(&mut self, key: u64, score: f64) {
+        self.visited.insert(key);
+        self.scores.insert(key, score);
+    }
+
+    pub fn intern(&mut self, name: &str) -> u32 {
+        let next = self.interned.len() as u32;
+        *self.interned.entry(name.to_string()).or_insert(next)
+    }
+}

@@ -1,0 +1,6 @@
+//! Good case for `allow-reason`: the attribute carries a written reason.
+
+#[allow(dead_code)] // exercised only through the line-protocol tests
+fn drain_token(buf: &str) -> &str {
+    buf.trim()
+}

@@ -1,0 +1,17 @@
+//! Good case for `safety-comment`: every unsafe site states its
+//! aliasing/lifetime argument.
+
+pub struct RawSlot(*mut f64);
+
+// SAFETY: a RawSlot is only ever handed to one worker at a time, and the
+// constructor guarantees the pointee outlives every send.
+unsafe impl Send for RawSlot {}
+
+pub fn read(slot: &RawSlot) -> f64 {
+    // SAFETY: the pointer is valid and exclusively owned for this call.
+    unsafe { *slot.0 }
+}
+
+pub fn write(slot: &mut RawSlot, v: f64) {
+    unsafe { *slot.0 = v } // SAFETY: &mut receiver gives exclusive access
+}

@@ -1,0 +1,7 @@
+//! Good case for `float-ord`: floats are ordered through `total_cmp`,
+//! which is a total order (NaN sorts deterministically).
+
+pub fn median(samples: &mut [f64]) -> f64 {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    samples[samples.len() / 2]
+}

@@ -1,0 +1,12 @@
+//! Bad case for `safety-comment`: unsafe without a stated
+//! aliasing/lifetime argument.
+
+pub struct Raw(*mut u8);
+
+//~v safety-comment
+unsafe impl Send for Raw {}
+
+pub fn read(r: &Raw) -> u8 {
+    //~v safety-comment
+    unsafe { *r.0 }
+}

@@ -1,0 +1,14 @@
+//! Bad case for `ambient-entropy`: wall clock and ambient reads in
+//! production simulator code.
+
+pub fn stamp() -> u128 {
+    //~v ambient-entropy
+    let t = std::time::Instant::now();
+    //~v ambient-entropy
+    let _epoch = std::time::SystemTime::now();
+    //~v ambient-entropy
+    let tweak = std::env::var("CATLA_TWEAK").unwrap_or_default();
+    //~v ambient-entropy
+    let r: u64 = rand::thread_rng().gen();
+    t.elapsed().as_nanos() + tweak.len() as u128 + u128::from(r)
+}

@@ -1,0 +1,6 @@
+//! Bad case for `allow-reason`: a bare `#[allow(..)]` in a
+//! determinism-critical tree.
+
+//~v allow-reason
+#[allow(dead_code)]
+fn helper() {}

@@ -1,0 +1,14 @@
+//! Bad case for `hash-collections`: hash-keyed state in a
+//! determinism-critical tree. Iteration order is per-process random.
+
+//~v hash-collections
+use std::collections::HashMap;
+//~v hash-collections
+use std::collections::HashSet;
+
+pub struct HashState {
+    //~v hash-collections
+    pub done: HashSet<u64>,
+    //~v hash-collections
+    pub scores: HashMap<u64, f64>,
+}

@@ -1,0 +1,10 @@
+//! Bad case for allow-comment suppression: the allow names the rule but
+//! omits the mandatory `-- <reason>` tail, so the finding survives (with
+//! the dedicated missing-reason message).
+
+//~v hash-collections
+use std::collections::HashMap; // detlint: allow(hash-collections)
+
+pub fn size_of_index(ix: &std::collections::BTreeMap<String, usize>) -> usize {
+    ix.len()
+}

@@ -1,0 +1,8 @@
+//! Bad case for `float-ord`: a partial order over floats — panics on
+//! NaN and under-orders.
+
+pub fn best(xs: &mut [(f64, u32)]) -> u32 {
+    //~v float-ord
+    xs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    xs[0].1
+}

@@ -1,0 +1,374 @@
+#!/usr/bin/env python3
+"""Python mirror of the detlint pass — `tools/detlint/src/lib.rs` is
+authoritative. This mirror exists so rule changes can be validated on
+hosts without a Rust toolchain:
+
+    python3 tools/detlint/pylint_mirror.py rust/src      # lint a tree
+    python3 tools/detlint/pylint_mirror.py --check-fixtures
+
+`--check-fixtures` replays the same marker-parity contract as
+`tests/fixtures.rs`: every `violations/` fixture must be flagged exactly
+at its `//~v <rule>` markers (which sit on the line ABOVE the violation)
+and every `clean/` fixture must pass. Keep the two implementations in
+lock-step; the fixture corpus is the shared contract.
+"""
+
+import os
+import sys
+
+RULES = [
+    "hash-collections",
+    "ambient-entropy",
+    "float-ord",
+    "safety-comment",
+    "allow-reason",
+]
+CRITICAL_TREES = ("hadoop/", "optim/", "serve/", "config/")
+ENTROPY_EXEMPT = ("util/bench.rs", "main.rs")
+ENTROPY_TOKENS = [
+    "Instant::now",
+    "SystemTime",
+    "thread_rng",
+    "std::env::",
+    "env::var",
+    "env::vars",
+    "env::var_os",
+    "env::args",
+    "env::temp_dir",
+    "env::current_dir",
+]
+
+
+def is_ident(c):
+    return c.isascii() and (c.isalnum() or c == "_")
+
+
+def raw_string_open(s, i):
+    j = i
+    if s[j] == "b":
+        j += 1
+    if j >= len(s) or s[j] != "r":
+        return None
+    j += 1
+    hashes = 0
+    while j < len(s) and s[j] == "#":
+        hashes += 1
+        j += 1
+    if j < len(s) and s[j] == '"':
+        return (hashes, j + 1 - i)
+    return None
+
+
+def char_literal_at(s, i):
+    if i + 1 >= len(s):
+        return False
+    if s[i + 1] == "\\":
+        return True
+    return i + 2 < len(s) and s[i + 2] == "'"
+
+
+def skip_char_literal(s, i):
+    j = i + 1
+    if j < len(s) and s[j] == "\\":
+        j += 2  # backslash + the escaped character (possibly ' itself)
+        while j < len(s) and s[j] != "'":
+            j += 1
+        return j + 1
+    return i + 3
+
+
+def split_source(src):
+    """Per-line (code, comment) pairs with string/char contents blanked."""
+    lines = []
+    code, comment = [], []
+    mode = "code"
+    depth = 0
+    hashes = 0
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            lines.append(("".join(code), "".join(comment)))
+            code, comment = [], []
+            i += 1
+            continue
+        if mode == "code":
+            if c == "/" and src[i + 1 : i + 2] == "/":
+                j = i + 2
+                while j < n and src[j] != "\n":
+                    comment.append(src[j])
+                    j += 1
+                comment.append(" ")
+                i = j
+            elif c == "/" and src[i + 1 : i + 2] == "*":
+                mode, depth = "block", 1
+                i += 2
+            elif c == '"':
+                code.append('"')
+                mode = "str"
+                i += 1
+            elif c in "rb" and not (i > 0 and is_ident(src[i - 1])):
+                opened = raw_string_open(src, i)
+                if opened is not None:
+                    hashes, skip = opened
+                    code.append('r"')
+                    mode = "rawstr"
+                    i += skip
+                elif c == "b" and src[i + 1 : i + 2] == '"':
+                    code.append('b"')
+                    mode = "str"
+                    i += 2
+                elif c == "b" and src[i + 1 : i + 2] == "'":
+                    code.append("b''")
+                    i = skip_char_literal(src, i + 1)
+                else:
+                    code.append(c)
+                    i += 1
+            elif c == "'":
+                if char_literal_at(src, i):
+                    code.append("''")
+                    i = skip_char_literal(src, i)
+                else:
+                    code.append("'")  # a lifetime tick
+                    i += 1
+            else:
+                code.append(c)
+                i += 1
+        elif mode == "block":
+            if c == "/" and src[i + 1 : i + 2] == "*":
+                depth += 1
+                i += 2
+            elif c == "*" and src[i + 1 : i + 2] == "/":
+                depth -= 1
+                if depth == 0:
+                    mode = "code"
+                i += 2
+            else:
+                comment.append(c)
+                i += 1
+        elif mode == "str":
+            if c == "\\":
+                # keep a backslash-newline un-consumed: line accounting
+                i += 1 if src[i + 1 : i + 2] == "\n" else 2
+            elif c == '"':
+                code.append('"')
+                mode = "code"
+                i += 1
+            else:
+                i += 1
+        else:  # rawstr
+            if c == '"' and all(
+                i + k < n and src[i + k] == "#" for k in range(1, hashes + 1)
+            ):
+                code.append('"')
+                mode = "code"
+                i += 1 + hashes
+            else:
+                i += 1
+    if code or comment:
+        lines.append(("".join(code), "".join(comment)))
+    return lines
+
+
+def test_mask(lines):
+    mask = [False] * len(lines)
+    i = 0
+    while i < len(lines):
+        if "#[cfg(test)]" not in lines[i][0]:
+            i += 1
+            continue
+        depth, opened = 0, False
+        j = i
+        while j < len(lines):
+            mask[j] = True
+            stop = False
+            for c in lines[j][0]:
+                if c == "{":
+                    depth += 1
+                    opened = True
+                elif c == "}":
+                    depth -= 1
+                    if opened and depth <= 0:
+                        stop = True
+                elif c == ";" and not opened:
+                    stop = True
+            if stop:
+                break
+            j += 1
+        i = j + 1
+    return mask
+
+
+def has_token(s, pat):
+    first = is_ident(pat[0])
+    last = is_ident(pat[-1])
+    start = 0
+    while True:
+        at = s.find(pat, start)
+        if at < 0:
+            return False
+        end = at + len(pat)
+        before = not first or at == 0 or not is_ident(s[at - 1])
+        after = not last or end >= len(s) or not is_ident(s[end])
+        if before and after:
+            return True
+        start = at + 1
+
+
+def parse_allows(comment):
+    out = []
+    opener = "detlint: allow("
+    start = 0
+    while True:
+        at = comment.find(opener, start)
+        if at < 0:
+            return out
+        body_start = at + len(opener)
+        close = comment.find(")", body_start)
+        if close < 0:
+            return out
+        rules = [r.strip() for r in comment[body_start:close].split(",")]
+        tail = comment[close + 1 :].lstrip()
+        has_reason = tail.startswith("--") and tail[2:].strip() != ""
+        out.append((rules, has_reason))
+        start = close
+
+
+def suppression(lines, idx, rule):
+    best = "no"
+    k = idx
+    while True:
+        for rules, has_reason in parse_allows(lines[k][1]):
+            if rule in rules:
+                if has_reason:
+                    return "yes"
+                best = "missing"
+        if k == 0:
+            break
+        pcode, pcomment = lines[k - 1]
+        if pcode.strip() or not pcomment.strip():
+            break
+        k -= 1
+    return best
+
+
+def safety_documented(lines, idx):
+    if "SAFETY" in lines[idx][1]:
+        return True
+    k = idx
+    while k > 0:
+        pcode, pcomment = lines[k - 1]
+        if pcode.strip() or not pcomment.strip():
+            return False
+        if "SAFETY" in pcomment:
+            return True
+        k -= 1
+    return False
+
+
+def lint_file(rel, src):
+    rel = rel.replace("\\", "/")
+    lines = split_source(src)
+    tests = test_mask(lines)
+    critical = any(rel.startswith(t) for t in CRITICAL_TREES)
+    entropy_exempt = rel in ENTROPY_EXEMPT
+    findings = []
+    for idx, (code, comment) in enumerate(lines):
+        if not code.strip():
+            continue
+        hits = []
+        if critical and (has_token(code, "HashMap") or has_token(code, "HashSet")):
+            hits.append("hash-collections")
+        if not entropy_exempt and not tests[idx]:
+            if any(has_token(code, p) for p in ENTROPY_TOKENS):
+                hits.append("ambient-entropy")
+        if ".partial_cmp" in code:
+            hits.append("float-ord")
+        if has_token(code, "unsafe") and not safety_documented(lines, idx):
+            hits.append("safety-comment")
+        if critical and ("#[allow" in code or "#![allow" in code):
+            if "reason" not in code and not comment.strip():
+                hits.append("allow-reason")
+        for rule in hits:
+            s = suppression(lines, idx, rule)
+            if s == "yes":
+                continue
+            suffix = " (suppression without a reason)" if s == "missing" else ""
+            findings.append((idx + 1, rule, suffix))
+    return findings
+
+
+def rust_files(root):
+    out = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for f in sorted(filenames):
+            if f.endswith(".rs"):
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def lint_root(root):
+    findings = []
+    is_dir = os.path.isdir(root)
+    files = rust_files(root) if is_dir else [root]
+    for path in files:
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        rel = os.path.relpath(path, root) if is_dir else os.path.basename(path)
+        for line, rule, suffix in lint_file(rel, src):
+            findings.append((path, line, rule, suffix))
+    return len(files), findings
+
+
+def check_fixtures(base):
+    ok = True
+    vroot = os.path.join(base, "fixtures", "violations")
+    for path in rust_files(vroot):
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        rel = os.path.relpath(path, vroot)
+        expected = set()
+        for i, raw in enumerate(src.splitlines()):
+            t = raw.strip()
+            if t.startswith("//~v "):
+                for r in t[len("//~v ") :].split(","):
+                    expected.add((i + 2, r.strip()))
+        got = {(line, rule) for line, rule, _ in lint_file(rel, src)}
+        if got != expected:
+            ok = False
+            print(f"MISMATCH {rel}: got {sorted(got)} expected {sorted(expected)}")
+    croot = os.path.join(base, "fixtures", "clean")
+    for path in rust_files(croot):
+        with open(path, encoding="utf-8") as fh:
+            src = fh.read()
+        rel = os.path.relpath(path, croot)
+        got = lint_file(rel, src)
+        if got:
+            ok = False
+            print(f"CLEAN FIXTURE FLAGGED {rel}: {got}")
+    print("fixture parity:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+def main(argv):
+    if argv and argv[0] == "--check-fixtures":
+        return check_fixtures(os.path.dirname(os.path.abspath(__file__)))
+    roots = argv or ["rust/src"]
+    total_files, all_findings = 0, []
+    for root in roots:
+        files, findings = lint_root(root)
+        total_files += files
+        all_findings.extend(findings)
+    all_findings.sort()
+    for path, line, rule, suffix in all_findings:
+        print(f"{path}:{line}: detlint({rule}){suffix}")
+    print(
+        f"detlint-mirror: {total_files} file(s), {len(all_findings)} finding(s)",
+        file=sys.stderr,
+    )
+    return 1 if all_findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,710 @@
+//! detlint — the determinism-and-unsafety static-analysis gate.
+//!
+//! Catla's value over prior tuners is a *transparent, trustworthy*
+//! implementation: optimizer comparisons are meaningful only because
+//! eval sequences, tuning logs and `TuningOutcome`s replay
+//! bit-identically under a fixed seed. The byte-identity test suites pin
+//! that contract dynamically — but only for the interleavings someone
+//! wrote down. This crate enforces the contract's *preconditions*
+//! statically over `rust/src/**`, as hard CI errors with `file:line`
+//! diagnostics:
+//!
+//! - `hash-collections` — no `HashMap`/`HashSet` in the four
+//!   determinism-critical trees (`hadoop/`, `optim/`, `serve/`,
+//!   `config/`): hash-iteration order is randomized per process and
+//!   leaks into eval sequences the moment anything iterates.
+//! - `ambient-entropy` — no wall clock or ambient entropy
+//!   (`Instant::now`, `SystemTime`, `thread_rng`, `std::env` reads)
+//!   outside `util/bench.rs` and `main.rs`. `#[cfg(test)]` items are
+//!   exempt: test scaffolding may use temp dirs and env overrides
+//!   without perturbing production behavior.
+//! - `float-ord` — no `.partial_cmp(..)` on floats (`sort_by` closures,
+//!   `.unwrap()` chains panic on NaN and under-order): route through
+//!   `f64::total_cmp` / `util::ord::TotalF64`.
+//! - `safety-comment` — every `unsafe` block, impl and fn carries a
+//!   `// SAFETY:` comment stating the aliasing/lifetime argument.
+//! - `allow-reason` — no `#[allow(..)]` without a written reason in the
+//!   four determinism-critical trees.
+//!
+//! Suppression: append `// detlint: allow(<rule>) -- <reason>` on the
+//! offending line, or on a comment line directly above it. The reason
+//! after `--` is mandatory — an allow without one still fails the gate.
+//!
+//! No `syn`, no dependencies: the workspace is dependency-free by design
+//! (offline image), so the analysis is a small hand-rolled lexer
+//! (comments, strings, char literals vs lifetimes, raw strings) plus
+//! whole-token rules over the comment-stripped source. A Python mirror
+//! of the same pass (`pylint_mirror.py`, same directory) exists so rule
+//! changes can be validated on hosts without a Rust toolchain;
+//! `src/lib.rs` is authoritative.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Every rule the gate knows, with a one-line summary (`--list-rules`).
+pub const RULES: &[(&str, &str)] = &[
+    ("hash-collections", "no HashMap/HashSet in hadoop/, optim/, serve/, config/"),
+    ("ambient-entropy", "no wall clock or ambient entropy outside util/bench.rs and main.rs"),
+    ("float-ord", "no .partial_cmp on floats — use total_cmp / util::ord::TotalF64"),
+    ("safety-comment", "every unsafe block/impl/fn carries a // SAFETY: comment"),
+    ("allow-reason", "no #[allow(..)] without a reason in the determinism-critical trees"),
+];
+
+/// Module trees (paths relative to the scan root) where
+/// `hash-collections` and `allow-reason` apply.
+const CRITICAL_TREES: &[&str] = &["hadoop/", "optim/", "serve/", "config/"];
+
+/// Files exempt from `ambient-entropy`: the bench harness owns the wall
+/// clock, the CLI entry owns argv/env.
+const ENTROPY_EXEMPT: &[&str] = &["util/bench.rs", "main.rs"];
+
+/// Whole-token patterns the `ambient-entropy` rule bans.
+const ENTROPY_TOKENS: &[&str] = &[
+    "Instant::now",
+    "SystemTime",
+    "thread_rng",
+    "std::env::",
+    "env::var",
+    "env::vars",
+    "env::var_os",
+    "env::args",
+    "env::temp_dir",
+    "env::current_dir",
+];
+
+/// One diagnostic: a rule violated at `file:line`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: detlint({}): {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// What [`lint_root`] scanned and found.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+}
+
+/// One logical source line: executable code with comment text split off
+/// and string/char-literal *contents* blanked (delimiters kept), so rule
+/// patterns can never match inside comments or literals.
+#[derive(Clone, Debug, Default)]
+pub struct SourceLine {
+    pub code: String,
+    pub comment: String,
+}
+
+enum Mode {
+    Code,
+    Block(usize),
+    Str,
+    RawStr(usize),
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// Returns `(hash_count, chars_consumed)` when `r"`, `r#"`, `br#"`, …
+/// opens a raw string at `i`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j >= chars.len() || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < chars.len() && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < chars.len() && chars[j] == '"' {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string delimited by `hashes` hashes?
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| i + k < chars.len() && chars[i + k] == '#')
+}
+
+/// Distinguish a char literal (`'x'`, `'\n'`, `'\u{1F600}'`) from a
+/// lifetime (`'a`, `'static`) at the `'` at `i`.
+fn char_literal_at(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Index just past the closing quote of the char literal opening at `i`.
+fn skip_char_literal(chars: &[char], i: usize) -> usize {
+    let mut j = i + 1;
+    if chars.get(j) == Some(&'\\') {
+        j += 2; // backslash + the escaped character (possibly `'` itself)
+        while j < chars.len() && chars[j] != '\'' {
+            j += 1; // multi-char escape bodies: \u{..}, \x41
+        }
+        j + 1
+    } else {
+        i + 3
+    }
+}
+
+/// Split source into per-line (code, comment) pairs. Handles line and
+/// nested block comments, normal/byte/raw strings (multi-line included),
+/// and char literals vs lifetimes. Line numbers are preserved exactly.
+pub fn split_source(src: &str) -> Vec<SourceLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut cur = SourceLine::default();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\n' {
+                        cur.comment.push(chars[j]);
+                        j += 1;
+                    }
+                    cur.comment.push(' ');
+                    i = j;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((hashes, skip)) = raw_string_open(&chars, i) {
+                        cur.code.push_str("r\"");
+                        mode = Mode::RawStr(hashes);
+                        i += skip;
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                        cur.code.push_str("b\"");
+                        mode = Mode::Str;
+                        i += 2;
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'\'') {
+                        cur.code.push_str("b''");
+                        i = skip_char_literal(&chars, i + 1);
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if char_literal_at(&chars, i) {
+                        cur.code.push_str("''");
+                        i = skip_char_literal(&chars, i);
+                    } else {
+                        // a lifetime tick — keep it, scanning continues
+                        cur.code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Block(depth) => {
+                if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::Block(depth - 1) };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // keep a `\` before a newline un-consumed so line
+                    // accounting stays exact (string continuations)
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Lines belonging to `#[cfg(test)]`-gated items: from the attribute to
+/// the close of the item's brace block (or its `;` for braceless items).
+pub fn test_mask(lines: &[SourceLine]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            mask[j] = true;
+            let mut stop = false;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if opened && depth <= 0 {
+                            stop = true;
+                        }
+                    }
+                    ';' if !opened => stop = true,
+                    _ => {}
+                }
+            }
+            if stop {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// `pat` occurs in `s` as a whole token: where the pattern starts or
+/// ends with an identifier character, it must not extend into a longer
+/// identifier on that side (so `Instant::now` never matches inside
+/// `Instantiate`, but `std::env::` may be followed by a name).
+pub fn has_token(s: &str, pat: &str) -> bool {
+    let bytes = s.as_bytes();
+    let pb = pat.as_bytes();
+    let first_ident = is_ident_byte(pb[0]);
+    let last_ident = is_ident_byte(pb[pb.len() - 1]);
+    let mut from = 0;
+    while let Some(off) = s[from..].find(pat) {
+        let at = from + off;
+        let end = at + pat.len();
+        let before = !first_ident || at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after = !last_ident || end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before && after {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+struct Allow {
+    rules: Vec<String>,
+    has_reason: bool,
+}
+
+/// Parse every `detlint: allow(<rules>) -- <reason>` in a comment.
+fn parse_allows(comment: &str) -> Vec<Allow> {
+    const OPEN: &str = "detlint: allow(";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(off) = comment[from..].find(OPEN) {
+        let start = from + off + OPEN.len();
+        let rest = &comment[start..];
+        let close = match rest.find(')') {
+            Some(c) => c,
+            None => break,
+        };
+        let rules = rest[..close].split(',').map(|r| r.trim().to_string()).collect();
+        let tail = rest[close + 1..].trim_start();
+        let has_reason = tail.strip_prefix("--").is_some_and(|r| !r.trim().is_empty());
+        out.push(Allow { rules, has_reason });
+        from = start + close;
+    }
+    out
+}
+
+enum Suppress {
+    No,
+    Yes,
+    MissingReason,
+}
+
+/// Is the finding for `rule` at line `idx` suppressed by an allow
+/// comment on the line itself or the comment block directly above?
+fn suppression(lines: &[SourceLine], idx: usize, rule: &str) -> Suppress {
+    let mut best = Suppress::No;
+    let mut k = idx;
+    loop {
+        for a in parse_allows(&lines[k].comment) {
+            if a.rules.iter().any(|r| r == rule) {
+                if a.has_reason {
+                    return Suppress::Yes;
+                }
+                best = Suppress::MissingReason;
+            }
+        }
+        if k == 0 {
+            break;
+        }
+        let prev = &lines[k - 1];
+        if !prev.code.trim().is_empty() || prev.comment.trim().is_empty() {
+            break;
+        }
+        k -= 1;
+    }
+    best
+}
+
+/// Does the `unsafe` at line `idx` carry a SAFETY comment — trailing on
+/// the line, or anywhere in the contiguous comment block directly above?
+fn safety_documented(lines: &[SourceLine], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY") {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        let prev = &lines[k - 1];
+        if !prev.code.trim().is_empty() || prev.comment.trim().is_empty() {
+            return false;
+        }
+        if prev.comment.contains("SAFETY") {
+            return true;
+        }
+        k -= 1;
+    }
+    false
+}
+
+/// Does a `#[allow(..)]` line carry a reason (trailing comment or an
+/// in-attribute `reason = ".."`)?
+fn allow_attr_justified(line: &SourceLine) -> bool {
+    line.code.contains("reason") || !line.comment.trim().is_empty()
+}
+
+/// Lint one file. `rel_path` is the path relative to the scan root —
+/// tree-scoped rules (`hash-collections`, `allow-reason`) and file
+/// exemptions (`ambient-entropy`) key off it.
+pub fn lint_file(rel_path: &str, src: &str, enabled: &BTreeSet<&'static str>) -> Vec<Finding> {
+    let rel = rel_path.replace('\\', "/");
+    let lines = split_source(src);
+    let tests = test_mask(&lines);
+    let critical = CRITICAL_TREES.iter().any(|t| rel.starts_with(t));
+    let entropy_exempt = ENTROPY_EXEMPT.iter().any(|f| rel == *f);
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        let mut hits: Vec<(&'static str, String)> = Vec::new();
+        if enabled.contains("hash-collections") && critical {
+            for ty in ["HashMap", "HashSet"] {
+                if has_token(code, ty) {
+                    hits.push((
+                        "hash-collections",
+                        format!(
+                            "`{ty}` in a determinism-critical tree: hash-iteration order is \
+                             per-process random — use BTreeMap/BTreeSet or an index-linked \
+                             structure"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+        if enabled.contains("ambient-entropy") && !entropy_exempt && !tests[idx] {
+            for pat in ENTROPY_TOKENS {
+                if has_token(code, pat) {
+                    hits.push((
+                        "ambient-entropy",
+                        format!(
+                            "`{pat}`: wall clock / ambient entropy is banned outside \
+                             util/bench.rs and main.rs — thread explicit seeds or \
+                             configuration through instead"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
+        if enabled.contains("float-ord") && code.contains(".partial_cmp") {
+            hits.push((
+                "float-ord",
+                "`.partial_cmp(..)` panics on NaN and under-orders floats: route through \
+                 f64::total_cmp or util::ord::TotalF64"
+                    .to_string(),
+            ));
+        }
+        if enabled.contains("safety-comment")
+            && has_token(code, "unsafe")
+            && !safety_documented(&lines, idx)
+        {
+            hits.push((
+                "safety-comment",
+                "`unsafe` without a `// SAFETY:` comment stating the aliasing/lifetime argument"
+                    .to_string(),
+            ));
+        }
+        if enabled.contains("allow-reason")
+            && critical
+            && (code.contains("#[allow") || code.contains("#![allow"))
+            && !allow_attr_justified(line)
+        {
+            hits.push((
+                "allow-reason",
+                "#[allow(..)] without a reason: append `// <why>` on the line (or use \
+                 `reason = \"..\"`)"
+                    .to_string(),
+            ));
+        }
+        for (rule, message) in hits {
+            match suppression(&lines, idx, rule) {
+                Suppress::Yes => {}
+                Suppress::MissingReason => out.push(Finding {
+                    file: rel.clone(),
+                    line: idx + 1,
+                    rule,
+                    message: format!(
+                        "suppression without a reason — write `// detlint: allow({rule}) -- <why>`"
+                    ),
+                }),
+                Suppress::No => out.push(Finding { file: rel.clone(), line: idx + 1, rule, message }),
+            }
+        }
+    }
+    out
+}
+
+/// All `.rs` files under `root`, sorted for deterministic diagnostics.
+pub fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        for entry in fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                collect(&path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    collect(root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+/// Lint a scan root (a directory tree, or a single file for spot
+/// checks). Findings report root-joined paths; rule scoping uses paths
+/// relative to `root`.
+pub fn lint_root(root: &Path, enabled: &BTreeSet<&'static str>) -> io::Result<LintReport> {
+    let files = if root.is_file() { vec![root.to_path_buf()] } else { rust_files(root)? };
+    let mut report = LintReport { files: files.len(), findings: Vec::new() };
+    for path in &files {
+        let src = fs::read_to_string(path)?;
+        let rel = match path.strip_prefix(root) {
+            Ok(r) if !r.as_os_str().is_empty() => r.to_string_lossy().into_owned(),
+            _ => path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        };
+        for mut f in lint_file(&rel, &src, enabled) {
+            f.file = path.to_string_lossy().into_owned();
+            report.findings.push(f);
+        }
+    }
+    Ok(report)
+}
+
+/// Every rule, enabled.
+pub fn all_rules() -> BTreeSet<&'static str> {
+    RULES.iter().map(|(n, _)| *n).collect()
+}
+
+/// Resolve a comma-separated rule list against [`RULES`].
+pub fn select_rules(list: &str) -> Result<BTreeSet<&'static str>, String> {
+    let mut out = BTreeSet::new();
+    for name in list.split(',') {
+        let name = name.trim();
+        match RULES.iter().find(|(n, _)| *n == name) {
+            Some((n, _)) => {
+                out.insert(*n);
+            }
+            None => return Err(format!("unknown rule `{name}` (see --list-rules)")),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, src: &str) -> Vec<Finding> {
+        lint_file(rel, src, &all_rules())
+    }
+
+    fn rules_at(findings: &[Finding]) -> Vec<(usize, &'static str)> {
+        findings.iter().map(|f| (f.line, f.rule)).collect()
+    }
+
+    #[test]
+    fn lexer_splits_comments_strings_and_lifetimes() {
+        let src = "let a = \"HashMap // not a comment\"; // trailing HashMap\n\
+                   let b: Vec<'a> = v; let c = 'x'; let d = '\\'';\n\
+                   /* block HashMap\n spans lines */ let e = r#\"raw \" HashSet\"#;\n";
+        let lines = split_source(src);
+        assert_eq!(lines.len(), 4);
+        assert!(!lines[0].code.contains("HashMap"), "string content leaked into code");
+        assert!(lines[0].comment.contains("HashMap"), "line comment lost");
+        assert!(lines[1].code.contains("Vec<'a>"), "lifetime mangled: {}", lines[1].code);
+        assert!(!lines[1].code.contains('x'), "char literal content leaked");
+        assert!(lines[2].comment.contains("block HashMap"));
+        assert!(lines[3].comment.contains("spans lines"));
+        assert!(!lines[3].code.contains("HashSet"), "raw string content leaked");
+        assert!(lines[3].code.contains("let e"));
+    }
+
+    #[test]
+    fn lexer_handles_nested_block_comments() {
+        let lines = split_source("/* outer /* inner */ still comment */ let x = 1;\n");
+        assert!(lines[0].code.contains("let x = 1"));
+        assert!(lines[0].comment.contains("inner"));
+    }
+
+    #[test]
+    fn hash_collections_only_in_critical_trees() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_at(&lint("optim/x.rs", src)), vec![(1, "hash-collections")]);
+        assert_eq!(rules_at(&lint("serve/x.rs", src)), vec![(1, "hash-collections")]);
+        assert!(lint("util/x.rs", src).is_empty(), "util/ is not a scoped tree");
+        assert!(lint("optim/x.rs", "let m = BTreeMap::new();\n").is_empty());
+    }
+
+    #[test]
+    fn token_boundaries_do_not_false_positive() {
+        assert!(lint("optim/x.rs", "struct MyHashMapLike;\n").is_empty());
+        assert!(lint("catla/x.rs", "/// Instantiate a fresh optimizer.\nfn f() {}\n").is_empty());
+        assert!(!lint("catla/x.rs", "let t = Instant::now();\n").is_empty());
+    }
+
+    #[test]
+    fn ambient_entropy_exemptions() {
+        let src = "let t = Instant::now();\nlet v = std::env::var(\"X\");\n";
+        assert_eq!(lint("util/bench.rs", src).len(), 0);
+        assert_eq!(lint("main.rs", src).len(), 0);
+        assert_eq!(lint("hadoop/x.rs", src).len(), 2);
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt_from_entropy() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { let d = std::env::temp_dir(); }\n\
+                   }\n";
+        assert!(lint("catla/x.rs", src).is_empty());
+        let braceless = "#[cfg(test)]\nuse foo::bar;\nlet t = Instant::now();\n";
+        assert_eq!(rules_at(&lint("catla/x.rs", braceless)), vec![(3, "ambient-entropy")]);
+    }
+
+    #[test]
+    fn float_ord_flags_partial_cmp_calls_not_definitions() {
+        let bad = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(rules_at(&lint("util/x.rs", bad)), vec![(1, "float-ord")]);
+        let def = "fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+                   Some(self.cmp(other))\n}\n";
+        assert!(lint("util/x.rs", def).is_empty());
+        assert!(lint("util/x.rs", "v.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
+    }
+
+    #[test]
+    fn safety_comments_satisfy_the_unsafe_rule() {
+        let bad = "let x = unsafe { *p };\n";
+        assert_eq!(rules_at(&lint("util/x.rs", bad)), vec![(1, "safety-comment")]);
+        let above = "// SAFETY: p is valid for the whole call\nlet x = unsafe { *p };\n";
+        assert!(lint("util/x.rs", above).is_empty());
+        let trailing = "let x = unsafe { *p }; // SAFETY: exclusive owner\n";
+        assert!(lint("util/x.rs", trailing).is_empty());
+        let gap = "// SAFETY: stale\nfn f() {}\nlet x = unsafe { *p };\n";
+        assert_eq!(rules_at(&lint("util/x.rs", gap)), vec![(3, "safety-comment")]);
+    }
+
+    #[test]
+    fn allow_attrs_need_reasons_in_critical_trees() {
+        let bare = "#[allow(dead_code)]\nfn f() {}\n";
+        assert_eq!(rules_at(&lint("config/x.rs", bare)), vec![(1, "allow-reason")]);
+        assert!(lint("catla/x.rs", bare).is_empty(), "catla/ is not a scoped tree");
+        let justified = "#[allow(dead_code)] // exercised via the line protocol\nfn f() {}\n";
+        assert!(lint("config/x.rs", justified).is_empty());
+    }
+
+    #[test]
+    fn allow_comments_suppress_with_a_reason_only() {
+        let with = "use std::collections::HashMap; // detlint: allow(hash-collections) -- \
+                    never iterated, keyed lookups only\n";
+        assert!(lint("serve/x.rs", with).is_empty());
+        let above = "// detlint: allow(hash-collections) -- never iterated\n\
+                     use std::collections::HashMap;\n";
+        assert!(lint("serve/x.rs", above).is_empty());
+        let without = "use std::collections::HashMap; // detlint: allow(hash-collections)\n";
+        let f = lint("serve/x.rs", without);
+        assert_eq!(rules_at(&f), vec![(1, "hash-collections")]);
+        assert!(f[0].message.contains("without a reason"), "{}", f[0].message);
+        let wrong_rule = "use std::collections::HashMap; // detlint: allow(float-ord) -- no\n";
+        assert_eq!(rules_at(&lint("serve/x.rs", wrong_rule)), vec![(1, "hash-collections")]);
+    }
+
+    #[test]
+    fn select_rules_round_trips_and_rejects_unknown() {
+        let sel = select_rules("float-ord, safety-comment").unwrap();
+        assert_eq!(sel.len(), 2);
+        assert!(select_rules("no-such-rule").is_err());
+        assert_eq!(all_rules().len(), RULES.len());
+    }
+}

@@ -1,0 +1,85 @@
+//! CLI for the detlint gate. Exit status: 0 clean, 1 findings, 2 usage.
+//!
+//! ```text
+//! detlint [--rules <r1,r2,..>] [--list-rules] [ROOT ...]
+//! ```
+//!
+//! Each ROOT is a directory tree (or single file) scanned for `*.rs`;
+//! the default is `rust/src`. Rule scoping (critical trees, entropy
+//! exemptions) keys off paths relative to each ROOT, which is why CI
+//! invokes it as `detlint rust/src` from the repo root.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn usage() {
+    eprintln!("usage: detlint [--rules <r1,r2,..>] [--list-rules] [ROOT ...]");
+    eprintln!("       default ROOT: rust/src");
+}
+
+fn main() -> ExitCode {
+    let mut enabled = detlint::all_rules();
+    let mut roots: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--help" | "-h" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            "--list-rules" => {
+                for (name, summary) in detlint::RULES {
+                    println!("{name:17} {summary}");
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--rules" => {
+                let Some(list) = args.next() else {
+                    eprintln!("detlint: --rules needs a comma-separated rule list");
+                    return ExitCode::from(2);
+                };
+                match detlint::select_rules(&list) {
+                    Ok(sel) => enabled = sel,
+                    Err(e) => {
+                        eprintln!("detlint: {e}");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            other if other.starts_with('-') => {
+                eprintln!("detlint: unknown flag `{other}`");
+                usage();
+                return ExitCode::from(2);
+            }
+            other => roots.push(other.to_string()),
+        }
+    }
+    if roots.is_empty() {
+        roots.push("rust/src".to_string());
+    }
+
+    let mut files = 0usize;
+    let mut findings = Vec::new();
+    for root in &roots {
+        match detlint::lint_root(Path::new(root), &enabled) {
+            Ok(report) => {
+                files += report.files;
+                findings.extend(report.findings);
+            }
+            Err(e) => {
+                eprintln!("detlint: {root}: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    for f in &findings {
+        println!("{f}");
+    }
+    eprintln!("detlint: {} file(s) scanned, {} finding(s)", files, findings.len());
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

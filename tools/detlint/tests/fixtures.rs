@@ -1,0 +1,83 @@
+//! Fixture-corpus self-test: every `violations/` fixture is flagged at
+//! exactly the lines its `//~v <rule>` markers predict (markers sit on
+//! the line ABOVE the violation), every `clean/` fixture passes, and the
+//! allow-without-reason case fails with the dedicated message.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn fixtures(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(sub)
+}
+
+/// `(line, rule)` pairs predicted by the `//~v` markers in `src`.
+fn expectations(src: &str) -> BTreeSet<(usize, String)> {
+    let mut out = BTreeSet::new();
+    for (idx, line) in src.lines().enumerate() {
+        if let Some(rules) = line.trim().strip_prefix("//~v ") {
+            for rule in rules.split(',') {
+                out.insert((idx + 2, rule.trim().to_string()));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn violation_fixtures_are_flagged_at_expected_lines() {
+    let root = fixtures("violations");
+    let files = detlint::rust_files(&root).expect("walk violations/");
+    assert!(!files.is_empty(), "violations/ fixture corpus is missing");
+    let mut covered: BTreeSet<String> = BTreeSet::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path).unwrap();
+        let rel = path.strip_prefix(&root).unwrap().to_string_lossy().into_owned();
+        let expected = expectations(&src);
+        assert!(!expected.is_empty(), "{rel}: violation fixture without //~v markers");
+        let got: BTreeSet<(usize, String)> = detlint::lint_file(&rel, &src, &detlint::all_rules())
+            .into_iter()
+            .map(|f| (f.line, f.rule.to_string()))
+            .collect();
+        assert_eq!(got, expected, "{rel}: findings do not match the //~v markers");
+        covered.extend(expected.into_iter().map(|(_, rule)| rule));
+    }
+    let all: BTreeSet<String> = detlint::RULES.iter().map(|(n, _)| n.to_string()).collect();
+    assert_eq!(covered, all, "violations/ must cover every rule");
+}
+
+#[test]
+fn clean_fixtures_pass() {
+    let root = fixtures("clean");
+    let files = detlint::rust_files(&root).expect("walk clean/");
+    assert!(!files.is_empty(), "clean/ fixture corpus is missing");
+    for path in &files {
+        let src = std::fs::read_to_string(path).unwrap();
+        let rel = path.strip_prefix(&root).unwrap().to_string_lossy().into_owned();
+        let findings = detlint::lint_file(&rel, &src, &detlint::all_rules());
+        assert!(findings.is_empty(), "{rel}: clean fixture flagged: {findings:?}");
+    }
+}
+
+#[test]
+fn allow_without_reason_still_fails() {
+    let path = fixtures("violations").join("serve").join("allow_no_reason.rs");
+    let src = std::fs::read_to_string(&path).unwrap();
+    let findings = detlint::lint_file("serve/allow_no_reason.rs", &src, &detlint::all_rules());
+    assert_eq!(findings.len(), 1, "exactly the unreasoned allow should survive: {findings:?}");
+    assert_eq!(findings[0].rule, "hash-collections");
+    assert!(
+        findings[0].message.contains("without a reason"),
+        "missing-reason message expected, got: {}",
+        findings[0].message
+    );
+}
+
+#[test]
+fn rule_toggling_scopes_the_scan() {
+    let path = fixtures("violations").join("hadoop").join("wall_clock.rs");
+    let src = std::fs::read_to_string(&path).unwrap();
+    let only_floats = detlint::select_rules("float-ord").unwrap();
+    assert!(detlint::lint_file("hadoop/wall_clock.rs", &src, &only_floats).is_empty());
+    let only_entropy = detlint::select_rules("ambient-entropy").unwrap();
+    assert_eq!(detlint::lint_file("hadoop/wall_clock.rs", &src, &only_entropy).len(), 4);
+}
