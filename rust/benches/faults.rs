@@ -1,0 +1,170 @@
+//! PERF + ABL — deterministic fault injection:
+//!
+//! * **identity first** (in-bench asserts): a disabled fault model
+//!   (mttf 0, whatever the other knobs) is bit-identical to the default
+//!   spec, and an enabled seeded schedule replays bit-identically;
+//! * **throughput**: sims/s with faults off vs on (mttf 400s on the
+//!   default 16-node cluster) — what the NodeDown/NodeUp machinery and
+//!   lost-shuffle re-execution cost the DES hot path;
+//! * **ranking**: extending the `noise_robustness` pattern, how each
+//!   optimizer family degrades as the node-failure rate grows — each
+//!   method tunes on a flaky cluster and its chosen config is re-measured
+//!   on a clean noiseless one, so lucky fault draws can't flatter a
+//!   method.
+//!
+//! Records `BENCH_faults.json` for the CI bench smoke.
+//!
+//! Run: `cargo bench --bench faults` (CATLA_BENCH_QUICK=1 shortens)
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::noise::NoiseModel;
+use catla::hadoop::{simulate_runtime_in, ClusterSpec, FaultModel, SimArena, SimCluster};
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace};
+use catla::util::bench::Bench;
+use catla::util::json::Json;
+use catla::workloads::wordcount;
+
+fn flaky(mttf_s: f64, seed: u64) -> ClusterSpec {
+    ClusterSpec {
+        seed,
+        fault: FaultModel {
+            mttf_s,
+            recovery_s: 60.0,
+            max_concurrent: 2,
+        },
+        ..ClusterSpec::default()
+    }
+}
+
+fn throughput(stats: &catla::util::bench::BenchStats) -> f64 {
+    stats.throughput.map(|(v, _)| v).unwrap_or(0.0)
+}
+
+fn main() {
+    let quick = std::env::var("CATLA_BENCH_QUICK").is_ok();
+    let mut bench = Bench::new();
+    let input_mb = if quick { 1024.0 } else { 2048.0 };
+    let wl = wordcount(input_mb);
+    let cfg = HadoopConfig::default();
+    let mut arena = SimArena::new();
+
+    // ---- identity first --------------------------------------------------
+    let off_spec = ClusterSpec {
+        fault: FaultModel {
+            mttf_s: 0.0,
+            recovery_s: 7.0,
+            max_concurrent: 5,
+        },
+        ..ClusterSpec::default()
+    };
+    for seed in 0..8u64 {
+        let a = simulate_runtime_in(&mut arena, &ClusterSpec::default(), &wl, &cfg, seed);
+        let b = simulate_runtime_in(&mut arena, &off_spec, &wl, &cfg, seed);
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "disabled fault model drifted the timeline (seed {seed})"
+        );
+        let f1 = simulate_runtime_in(&mut arena, &flaky(400.0, 42), &wl, &cfg, seed);
+        let f2 = simulate_runtime_in(&mut arena, &flaky(400.0, 42), &wl, &cfg, seed);
+        assert_eq!(
+            f1.to_bits(),
+            f2.to_bits(),
+            "seeded fault schedule did not replay bit-identically (seed {seed})"
+        );
+    }
+
+    // ---- throughput: faults off vs on ------------------------------------
+    let clean = ClusterSpec::default();
+    let on_spec = flaky(400.0, 42);
+    let mut seed = 1_000u64;
+    let off_sims = throughput(bench.run_throughput(
+        "wordcount, faults off (default spec, no injection)",
+        1.0,
+        "sims",
+        || {
+            seed += 1;
+            simulate_runtime_in(&mut arena, &clean, &wl, &cfg, seed)
+        },
+    ));
+    let mut seed = 1_000u64;
+    let on_sims = throughput(bench.run_throughput(
+        "wordcount, faults on (mttf 400s, recovery 60s)",
+        1.0,
+        "sims",
+        || {
+            seed += 1;
+            simulate_runtime_in(&mut arena, &on_spec, &wl, &cfg, seed)
+        },
+    ));
+    let overhead = if on_sims > 0.0 { off_sims / on_sims } else { 0.0 };
+
+    // ---- ranking under increasing node-failure rate ----------------------
+    let budget = if quick { 12 } else { 25 };
+    let seeds: &[u64] = if quick { &[5, 19] } else { &[5, 19, 33] };
+    let methods = ["bobyqa", "hooke-jeeves", "random"];
+    let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+    println!(
+        "# optimizer ranking vs node-failure rate (budget {budget}, {} seeds)\n",
+        seeds.len()
+    );
+    println!("| mttf_s | {} |", methods.join(" | "));
+    println!("|{}|", "---|".repeat(methods.len() + 1));
+    let mut ranking = Json::obj();
+    for mttf in [0.0, 600.0, 300.0, 150.0] {
+        let mut row = format!("| {mttf:.0} ");
+        let mut by_method = Json::obj();
+        for m in methods {
+            let mut bests = Vec::new();
+            for &seed in seeds {
+                let mut cluster = SimCluster::new(flaky(mttf, seed));
+                let out = {
+                    let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+                    let mut opt = Method::from_name(m, seed).unwrap().build();
+                    Driver::new(budget)
+                        .run(opt.as_mut(), &space, &mut obj)
+                        .expect("tuning run")
+                };
+                // re-measure the chosen config on a clean, noiseless,
+                // fault-free cluster: the score is the config's true
+                // quality, not the fault draws it happened to see
+                let mut verify = SimCluster::new(ClusterSpec {
+                    seed: seed + 999,
+                    noise: NoiseModel::noiseless(),
+                    speculative: false,
+                    ..ClusterSpec::default()
+                });
+                let truth = verify
+                    .run_job(&catla::hadoop::JobSubmission {
+                        name: "verify".into(),
+                        workload: wl.clone(),
+                        config: out.best_config.clone(),
+                    })
+                    .runtime_s;
+                bests.push(truth);
+            }
+            let mean = bests.iter().sum::<f64>() / bests.len() as f64;
+            by_method.set(m, Json::Num(mean));
+            row.push_str(&format!("| {mean:.1} "));
+        }
+        ranking.set(&format!("mttf{mttf:.0}"), by_method);
+        println!("{row}|");
+    }
+    println!("\n(cells: clean-cluster runtime of the config each optimizer picked under that failure rate — lower is better)");
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("faults".into()));
+    doc.set("quick", Json::from(quick));
+    doc.set("input_mb", Json::Num(input_mb));
+    doc.set("identity", Json::Str("bitwise-ok".into()));
+    doc.set("sims_per_s_faults_off", Json::Num(off_sims));
+    doc.set("sims_per_s_faults_on", Json::Num(on_sims));
+    doc.set("fault_overhead_x", Json::Num(overhead));
+    doc.set("ranking_clean_runtime_s", ranking);
+    std::fs::write("BENCH_faults.json", doc.to_string() + "\n").unwrap();
+    println!("\nwrote BENCH_faults.json");
+    println!("faults off {off_sims:.0} sims/s, on {on_sims:.0} sims/s ({overhead:.2}x overhead)");
+
+    bench.print_table("PERF — fault injection (off / on, identity-checked)");
+}

@@ -65,6 +65,8 @@ fn settings() -> TuningSettings {
         early_tol: 1e-3,
         batch_chunk: DEFAULT_BATCH_CHUNK,
         cache_entries: None,
+        retry_max: 2,
+        retry_backoff_ms: 0,
     }
 }
 

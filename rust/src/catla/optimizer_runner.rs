@@ -41,6 +41,15 @@ pub struct TuningSettings {
     /// simulation memo-cache (`serve.cache_entries`). `None` leaves the
     /// daemon's current cap alone; ignored outside `catla serve`.
     pub cache_entries: Option<usize>,
+    /// Retry budget for transient evaluation failures in the serve
+    /// daemon (`serve.retry.max`): a panicking evaluation is re-run up
+    /// to this many times before the owning session moves to its
+    /// `Failed` terminal state. Ignored outside `catla serve`.
+    pub retry_max: usize,
+    /// Base backoff between serve retries in milliseconds
+    /// (`serve.retry.backoff_ms`), scaled linearly by retry number —
+    /// bounded and deterministic. 0 (the default) retries immediately.
+    pub retry_backoff_ms: u64,
 }
 
 impl TuningSettings {
@@ -81,6 +90,8 @@ impl TuningSettings {
                         .map_err(|_| format!("bad serve.cache_entries={s:?}"))
                 })
                 .transpose()?,
+            retry_max: parse_usize("serve.retry.max", 2)?,
+            retry_backoff_ms: parse_usize("serve.retry.backoff_ms", 0)? as u64,
         })
     }
 
@@ -341,6 +352,25 @@ mod tests {
         let mut cluster = SimCluster::new(ClusterSpec::default());
         let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
         assert_eq!(out.outcome.evals(), 30);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn serve_retry_settings_parse_with_defaults() {
+        let dir = make_tuning_project("retry", "random", 4);
+        let project = Project::load(&dir).unwrap();
+        let s = TuningSettings::from_project(&project).unwrap();
+        assert_eq!(s.retry_max, 2, "default serve.retry.max");
+        assert_eq!(s.retry_backoff_ms, 0, "default serve.retry.backoff_ms");
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=4\nserve.retry.max=5\nserve.retry.backoff_ms=7\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let s = TuningSettings::from_project(&project).unwrap();
+        assert_eq!(s.retry_max, 5);
+        assert_eq!(s.retry_backoff_ms, 7);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

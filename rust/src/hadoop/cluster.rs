@@ -177,6 +177,11 @@ impl Cluster for SimCluster {
         };
         *polls += 1;
         if *polls >= until {
+            if let Some(reason) = &result.failed {
+                return Ok(JobStatus::Failed {
+                    reason: reason.clone(),
+                });
+            }
             Ok(JobStatus::Succeeded {
                 runtime_s: result.runtime_s,
             })
@@ -339,6 +344,29 @@ mod tests {
             );
         }
         assert_eq!(c.jobs_completed(), n);
+    }
+
+    #[test]
+    fn failed_jobs_surface_through_poll() {
+        // a cluster where every attempt almost surely fails, with a tight
+        // retry budget: poll must report Hadoop's FAILED terminal state
+        let mut spec = ClusterSpec::default();
+        spec.noise.failure_prob = 0.9;
+        spec.noise.max_attempts = 2;
+        spec.speculative = false;
+        let mut c = SimCluster::new(spec);
+        let id = c.submit_job(submission()).unwrap();
+        c.poll(&id).unwrap(); // still "running"
+        match c.poll(&id).unwrap() {
+            JobStatus::Failed { reason } => {
+                assert!(reason.contains("attempts"), "reason: {reason}")
+            }
+            other => panic!("expected FAILED, got {other:?}"),
+        }
+        // artifacts of a failed job are still downloadable (logs matter
+        // most when the job died)
+        let art = c.fetch_artifacts(&id).unwrap();
+        assert!(art.history_json.contains("FAILED"));
     }
 
     #[test]

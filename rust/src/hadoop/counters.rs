@@ -18,6 +18,14 @@ pub struct JobCounters {
     pub data_local_maps: u64,
     pub rack_local_maps: u64,
     pub off_rack_maps: u64,
+    /// Nodes lost mid-job (fault injection).
+    pub node_failures: u64,
+    /// Completed maps re-executed because their intermediate output
+    /// lived on a failed node (lost shuffle output).
+    pub reexecuted_maps: u64,
+    /// In-flight attempts killed by a node failure (Hadoop KILLED, as
+    /// distinct from FAILED — kills never count toward max attempts).
+    pub killed_attempts: u64,
 }
 
 impl JobCounters {
@@ -35,7 +43,10 @@ impl JobCounters {
             .set("FILE_BYTES_WRITTEN_MB", Json::from(self.file_write_mb))
             .set("DATA_LOCAL_MAPS", Json::from(self.data_local_maps))
             .set("RACK_LOCAL_MAPS", Json::from(self.rack_local_maps))
-            .set("OTHER_LOCAL_MAPS", Json::from(self.off_rack_maps));
+            .set("OTHER_LOCAL_MAPS", Json::from(self.off_rack_maps))
+            .set("NUM_NODE_FAILURES", Json::from(self.node_failures))
+            .set("NUM_REEXECUTED_MAPS", Json::from(self.reexecuted_maps))
+            .set("NUM_KILLED_ATTEMPTS", Json::from(self.killed_attempts));
         j
     }
 
@@ -55,6 +66,11 @@ impl JobCounters {
             data_local_maps: f("DATA_LOCAL_MAPS")? as u64,
             rack_local_maps: f("RACK_LOCAL_MAPS")? as u64,
             off_rack_maps: f("OTHER_LOCAL_MAPS")? as u64,
+            // fault counters arrived after the first histories were
+            // written: absent keys parse as zero so old logs stay loadable
+            node_failures: f("NUM_NODE_FAILURES").unwrap_or(0.0) as u64,
+            reexecuted_maps: f("NUM_REEXECUTED_MAPS").unwrap_or(0.0) as u64,
+            killed_attempts: f("NUM_KILLED_ATTEMPTS").unwrap_or(0.0) as u64,
         })
     }
 }
@@ -79,6 +95,9 @@ mod tests {
             data_local_maps: 70,
             rack_local_maps: 8,
             off_rack_maps: 2,
+            node_failures: 2,
+            reexecuted_maps: 5,
+            killed_attempts: 3,
         };
         let back = JobCounters::from_json(&c.to_json()).unwrap();
         assert_eq!(back, c);
@@ -87,5 +106,28 @@ mod tests {
     #[test]
     fn missing_fields_reject() {
         assert!(JobCounters::from_json(&Json::obj()).is_none());
+    }
+
+    #[test]
+    fn pre_fault_histories_parse_with_zero_fault_counters() {
+        let mut old = JobCounters {
+            total_maps: 4,
+            node_failures: 9,
+            reexecuted_maps: 9,
+            killed_attempts: 9,
+            ..JobCounters::default()
+        }
+        .to_json();
+        // a history written before the fault counters existed
+        if let Json::Obj(m) = &mut old {
+            m.remove("NUM_NODE_FAILURES");
+            m.remove("NUM_REEXECUTED_MAPS");
+            m.remove("NUM_KILLED_ATTEMPTS");
+        }
+        let back = JobCounters::from_json(&old).unwrap();
+        assert_eq!(back.total_maps, 4);
+        assert_eq!(back.node_failures, 0);
+        assert_eq!(back.reexecuted_maps, 0);
+        assert_eq!(back.killed_attempts, 0);
     }
 }

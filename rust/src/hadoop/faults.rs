@@ -1,0 +1,184 @@
+//! Deterministic node failure/recovery injection for the DES.
+//!
+//! Real clusters lose whole nodes mid-job, and the failure modes that
+//! dominate production tail latency — killed in-flight attempts, lost
+//! map output forcing re-execution, capacity draining out of YARN — are
+//! invisible to the task-level noise model in [`noise`](super::noise).
+//! This module generates the *when/which-node* half of that story; the
+//! event loop in [`mapreduce`](super::mapreduce) owns the consequences
+//! (`NodeDown`/`NodeUp` events).
+//!
+//! Determinism contract (docs/DETERMINISM.md): the failure chain draws
+//! exclusively from its own forked child stream (`root.fork(5)` in
+//! `simulate_core`), so enabling faults never perturbs HDFS placement,
+//! node speed factors, partition weights, or task noise — and when
+//! `mttf_s == 0` (the default) the chain draws **nothing**, making fault
+//! injection exactly zero-cost-zero-drift when disabled.
+
+use crate::config::params::HadoopConfig;
+use crate::util::rng::Rng;
+
+/// Per-cluster fault-injection knobs (`HadoopEnv.txt` `sim.fault.*`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Per-node mean time to failure, seconds. `0` (default) disables
+    /// fault injection entirely; the cluster-level failure rate is
+    /// `nodes / mttf_s`.
+    pub mttf_s: f64,
+    /// Downtime before a failed node rejoins with full capacity, seconds.
+    pub recovery_s: f64,
+    /// Cap on simultaneously-down nodes; a failure drawn while the cap
+    /// is reached (or for an already-down node) is skipped, not deferred.
+    pub max_concurrent: u32,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        Self {
+            mttf_s: 0.0,
+            recovery_s: 90.0,
+            max_concurrent: 1,
+        }
+    }
+}
+
+impl FaultModel {
+    pub fn enabled(&self) -> bool {
+        self.mttf_s > 0.0
+    }
+
+    /// The effective model for one simulation: cluster defaults
+    /// overridden by spec-declared config params, so failure parameters
+    /// are *tunable dimensions* like any other knob. A `params.spec`
+    /// that declares `fault.node.mttf.s` / `fault.node.recovery.s` /
+    /// `fault.node.max.concurrent` hands the optimizer control of the
+    /// scenario; projects that do not declare them pay nothing (the
+    /// registry lookup misses and the cluster model is used verbatim).
+    pub fn effective(&self, cfg: &HadoopConfig) -> FaultModel {
+        FaultModel {
+            mttf_s: cfg_override(cfg, "fault.node.mttf.s").unwrap_or(self.mttf_s),
+            recovery_s: cfg_override(cfg, "fault.node.recovery.s").unwrap_or(self.recovery_s),
+            max_concurrent: cfg_override(cfg, "fault.node.max.concurrent")
+                .map(|v| v.max(0.0).round() as u32)
+                .unwrap_or(self.max_concurrent),
+        }
+    }
+}
+
+/// Value of a spec-declared config param, if the project's registry
+/// declares it (spec-declared params extend the vector past the AOT
+/// prefix with zero Rust changes — this is the read side).
+pub(crate) fn cfg_override(cfg: &HadoopConfig, name: &str) -> Option<f64> {
+    cfg.registry().by_name(name).map(|(i, _)| cfg.get(i))
+}
+
+/// The failure chain: a self-scheduling sequence of `(gap, node)` draws.
+///
+/// `simulate_core` schedules one `NodeDown` ahead at all times: the
+/// chain is advanced exactly once at job start and once per `NodeDown`
+/// event, so the number and order of draws is a pure function of the
+/// model and the fork seed — independent of cluster load, engine
+/// variant, or how the failure was resolved (applied or skipped).
+pub struct FaultChain {
+    model: FaultModel,
+    rng: Rng,
+    nodes: usize,
+}
+
+impl FaultChain {
+    pub fn new(model: FaultModel, rng: Rng, nodes: usize) -> FaultChain {
+        FaultChain { model, rng, nodes }
+    }
+
+    pub fn model(&self) -> &FaultModel {
+        &self.model
+    }
+
+    /// Draw the next failure as `(gap_from_now_s, node)`, or `None` when
+    /// injection is disabled or the cluster has a single node (killing
+    /// the only node would just stall the job until recovery — not a
+    /// scenario worth modeling). Draws exactly two values from the
+    /// dedicated fault stream per call, and none at all when disabled.
+    pub fn next_failure(&mut self) -> Option<(f64, usize)> {
+        if !self.model.enabled() || self.nodes < 2 {
+            return None;
+        }
+        let mean_gap = self.model.mttf_s / self.nodes as f64;
+        let u = self.rng.f64();
+        // inverse-CDF exponential; u < 1 so ln(1-u) is finite
+        let gap = -mean_gap * (1.0 - u).ln();
+        let node = self.rng.below(self.nodes);
+        Some((gap, node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(mttf: f64) -> FaultChain {
+        FaultChain::new(
+            FaultModel {
+                mttf_s: mttf,
+                ..FaultModel::default()
+            },
+            Rng::new(99),
+            16,
+        )
+    }
+
+    #[test]
+    fn disabled_chain_draws_nothing() {
+        let mut c = chain(0.0);
+        for _ in 0..8 {
+            assert!(c.next_failure().is_none());
+        }
+    }
+
+    #[test]
+    fn single_node_cluster_never_fails() {
+        let mut c = FaultChain::new(
+            FaultModel {
+                mttf_s: 100.0,
+                ..FaultModel::default()
+            },
+            Rng::new(99),
+            1,
+        );
+        assert!(c.next_failure().is_none());
+    }
+
+    #[test]
+    fn chain_is_deterministic_and_in_range() {
+        let mut c1 = chain(400.0);
+        let mut c2 = chain(400.0);
+        for _ in 0..32 {
+            let (g1, n1) = c1.next_failure().unwrap();
+            let (g2, n2) = c2.next_failure().unwrap();
+            assert_eq!(g1.to_bits(), g2.to_bits());
+            assert_eq!(n1, n2);
+            assert!(g1.is_finite() && g1 >= 0.0);
+            assert!(n1 < 16);
+        }
+    }
+
+    #[test]
+    fn mean_gap_tracks_mttf_over_nodes() {
+        let mut c = chain(1600.0); // 16 nodes -> mean gap 100s
+        let n = 20_000;
+        let sum: f64 = (0..n).map(|_| c.next_failure().unwrap().0).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 100.0).abs() < 3.0, "mean gap {mean}");
+    }
+
+    #[test]
+    fn config_override_wins_over_cluster_model() {
+        // the default registry declares no fault params: overrides miss
+        let cfg = HadoopConfig::default();
+        let m = FaultModel {
+            mttf_s: 300.0,
+            ..FaultModel::default()
+        };
+        assert_eq!(m.effective(&cfg), m);
+    }
+}

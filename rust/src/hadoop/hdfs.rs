@@ -162,9 +162,25 @@ pub fn place_blocks_into(
 
 /// Locality of reading `block` from `node`.
 pub fn locality(topo: &Topology, block: &Block, node: usize) -> Locality {
+    locality_with_down(topo, block, node, &[])
+}
+
+/// [`locality`] with node liveness: replicas on currently-down nodes are
+/// unreachable and drop out of the preference order, so a task whose
+/// only same-rack replica just died reads cross-rack. The reading node
+/// itself is always up (YARN never places containers on down nodes); its
+/// local copy — if it holds one — survives the outage (DataNode disks
+/// persist across restarts). `down` may be shorter than the cluster
+/// (missing entries mean "up"), so the no-fault path can pass `&[]`.
+pub fn locality_with_down(topo: &Topology, block: &Block, node: usize, down: &[bool]) -> Locality {
+    let is_down = |n: usize| down.get(n).copied().unwrap_or(false);
     if block.replicas.contains(&node) {
         Locality::NodeLocal
-    } else if block.replicas.iter().any(|&r| topo.same_rack(r, node)) {
+    } else if block
+        .replicas
+        .iter()
+        .any(|&r| !is_down(r) && topo.same_rack(r, node))
+    {
         Locality::RackLocal
     } else {
         Locality::OffRack
@@ -260,6 +276,26 @@ mod tests {
         assert_eq!(t, Topology::new(16, 2));
         t.reset(64, 5);
         assert_eq!(t, Topology::new(64, 5));
+    }
+
+    #[test]
+    fn down_replicas_leave_the_preference_order() {
+        let topo = Topology::new(4, 2); // racks: 0,1,0,1
+        let block = Block { id: 0, replicas: vec![0, 1] };
+        // healthy: node 2 shares rack 0 with replica 0
+        assert_eq!(locality_with_down(&topo, &block, 2, &[]), Locality::RackLocal);
+        // replica 0 down: node 2's only same-rack replica is gone
+        assert_eq!(
+            locality_with_down(&topo, &block, 2, &[true, false, false, false]),
+            Locality::OffRack
+        );
+        // the reader's own copy survives an earlier outage
+        assert_eq!(
+            locality_with_down(&topo, &block, 0, &[false, true, false, false]),
+            Locality::NodeLocal
+        );
+        // empty down-slice is exactly the legacy function
+        assert_eq!(locality(&topo, &block, 2), locality_with_down(&topo, &block, 2, &[]));
     }
 
     #[test]

@@ -40,8 +40,17 @@ pub fn to_history_json(job_id: &str, r: &JobResult) -> Json {
     let mut j = Json::obj();
     j.set("jobId", Json::from(job_id))
         .set("workload", Json::from(r.workload.as_str()))
-        .set("state", Json::from("SUCCEEDED"))
-        .set("runtimeSeconds", Json::from(r.runtime_s))
+        .set(
+            "state",
+            Json::from(if r.failed.is_some() { "FAILED" } else { "SUCCEEDED" }),
+        )
+        .set(
+            // a failed job has no completion time: `runtime_s` is +inf,
+            // which JSON cannot carry — histories use the conventional
+            // -1 sentinel instead
+            "runtimeSeconds",
+            Json::from(if r.failed.is_some() { -1.0 } else { r.runtime_s }),
+        )
         .set("mapPhaseEndSeconds", Json::from(r.map_phase_end_s))
         .set("seed", Json::from(r.seed))
         .set("counters", r.counters.to_json())
@@ -57,6 +66,9 @@ pub fn to_history_json(job_id: &str, r: &JobResult) -> Json {
             Json::Arr(r.config.to_d_args().into_iter().map(Json::from).collect()),
         )
         .set("tasks", Json::Arr(tasks));
+    if let Some(reason) = &r.failed {
+        j.set("failReason", Json::from(reason.as_str()));
+    }
     j
 }
 
@@ -198,6 +210,23 @@ mod tests {
         assert_eq!(p.counters, r.counters);
         assert_eq!(p.n_map_tasks as u64, r.counters.total_maps);
         assert!(!p.config.is_empty());
+    }
+
+    #[test]
+    fn failed_job_history_is_valid_json() {
+        // runtime_s of a failed job is +inf, which must NOT leak into the
+        // document (JSON can't carry it): -1 sentinel + FAILED + reason
+        let mut cl = ClusterSpec::default();
+        cl.noise.failure_prob = 0.9;
+        cl.noise.max_attempts = 2;
+        cl.speculative = false;
+        let r = simulate_job(&cl, &wordcount(2048.0), &HadoopConfig::default(), 1);
+        assert!(r.failed.is_some(), "setup: job should have failed");
+        let text = to_history_json("job_f", &r).to_string();
+        assert!(text.contains("\"state\":\"FAILED\""));
+        assert!(text.contains("failReason"));
+        let p = parse_history(&text).unwrap();
+        assert_eq!(p.runtime_s, -1.0);
     }
 
     #[test]

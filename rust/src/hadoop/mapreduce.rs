@@ -44,6 +44,7 @@ use crate::config::params::*;
 use crate::hadoop::costmodel::{self, N_PHASES};
 use crate::hadoop::counters::JobCounters;
 use crate::hadoop::events::EventQueue;
+use crate::hadoop::faults::{cfg_override, FaultChain};
 use crate::hadoop::hdfs::{self, Block, Locality, Topology};
 use crate::hadoop::noise::partition_weights_into;
 use crate::hadoop::yarn::{Container, YarnState};
@@ -85,6 +86,10 @@ pub struct JobResult {
     pub workload: String,
     pub config: HadoopConfig,
     pub seed: u64,
+    /// `Some(reason)` when the job terminated in Hadoop's FAILED state
+    /// (a task exhausted its max attempts); `runtime_s` is `+inf` then,
+    /// so tuners see a config that cannot finish as infinitely bad.
+    pub failed: Option<String>,
 }
 
 enum Ev {
@@ -92,7 +97,12 @@ enum Ev {
     /// (task id, attempt epoch, attempt ordinal)
     MapFinish(u64, u32, u32),
     MapFail(u64, u32, u32),
-    ReduceFinish(u64),
+    /// (reduce id, attempt epoch)
+    ReduceFinish(u64, u32),
+    ReduceFail(u64, u32),
+    /// Fault injection: a node leaves / rejoins the cluster.
+    NodeDown(usize),
+    NodeUp(usize),
 }
 
 /// One live (scheduled, unresolved) map attempt.
@@ -112,9 +122,16 @@ struct LiveAttempt {
 struct MapTaskState {
     block: usize,
     attempts: u32,
+    /// FAILED attempts only (Hadoop semantics: node-loss KILLED attempts
+    /// never count toward `mapreduce.map.maxattempts`).
+    fails: u32,
     epoch: u32,
     done: bool,
     start: f64,
+    /// Node that ran the winning attempt — where the intermediate map
+    /// output lives until every reducer has fetched it. Losing this node
+    /// forces re-execution of the completed map.
+    out_node: usize,
     live: Vec<LiveAttempt>,
     locality: Option<Locality>,
 }
@@ -124,6 +141,17 @@ struct ReduceTaskState {
     container: Option<Container>,
     node: usize,
     started: bool,
+    /// Bumped on every failure reset and node-loss kill: a scheduled
+    /// `ReduceFinish`/`ReduceFail` carrying a stale epoch is inert. Also
+    /// indexes the attempt's noise fork, so retries draw fresh noise.
+    epoch: u32,
+    /// FAILED attempts only (kills excluded), drives max-attempt
+    /// exhaustion.
+    fails: u32,
+    done: bool,
+    /// Pre-drawn failure point of the current attempt (fraction of its
+    /// duration), sampled from the attempt's own noise fork.
+    fail_frac: Option<f64>,
     weight: f64,
     mult: f64,
 }
@@ -204,6 +232,8 @@ pub struct SimArena {
     not_done: Vec<u64>,
     /// Straggler candidates picked by the current event (scratch).
     spec_buf: Vec<u64>,
+    /// Per-node liveness under fault injection (all `false` without it).
+    node_down: Vec<bool>,
     /// Completed-duration feed, incremental (indexed engine)...
     durs: RunningMedian,
     /// ...or raw, for the baseline's clone-and-sort median.
@@ -229,6 +259,7 @@ impl SimArena {
             fetching_reds: Vec::new(),
             not_done: Vec::new(),
             spec_buf: Vec::new(),
+            node_down: Vec::new(),
             durs: RunningMedian::default(),
             durs_vec: Vec::new(),
         }
@@ -250,6 +281,7 @@ struct SimCore {
     tasks: Vec<TaskRecord>,
     counters: JobCounters,
     phase_secs: [f64; N_PHASES],
+    failed: Option<String>,
 }
 
 /// Simulate one job. Deterministic for a given (cluster, workload,
@@ -282,6 +314,7 @@ pub fn simulate_job_in(
         workload: wl.name.clone(),
         config: cfg.clone(),
         seed,
+        failed: core.failed,
     }
 }
 
@@ -397,6 +430,16 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
     arena.queue.clear();
     arena.queue.reserve(maps + reduces); // pre-size to the task count
     let mut noise_rng = root.fork(4);
+    // fault stream: fork(5), taken unconditionally so the fork layout is
+    // frozen; a disabled chain draws nothing from it, which is what makes
+    // fault injection exactly zero-drift when `fault.*` is off
+    let fault = cl.fault.effective(cfg);
+    let mut fault_chain = FaultChain::new(fault, root.fork(5), cl.nodes as usize);
+    // reduce retry budget: a spec-declared `mapreduce.reduce.maxattempts`
+    // is a tunable dimension; otherwise the noise model's shared max
+    let red_max_attempts = cfg_override(cfg, "mapreduce.reduce.maxattempts")
+        .map(|v| v.round().max(1.0) as u32)
+        .unwrap_or(cl.noise.max_attempts);
 
     arena.map_states.truncate(maps);
     for i in 0..maps {
@@ -404,18 +447,22 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
             let st = &mut arena.map_states[i];
             st.block = i;
             st.attempts = 0;
+            st.fails = 0;
             st.epoch = 0;
             st.done = false;
             st.start = f64::NAN;
+            st.out_node = 0;
             st.live.clear();
             st.locality = None;
         } else {
             arena.map_states.push(MapTaskState {
                 block: i,
                 attempts: 0,
+                fails: 0,
                 epoch: 0,
                 done: false,
                 start: f64::NAN,
+                out_node: 0,
                 live: Vec::new(),
                 locality: None,
             });
@@ -430,6 +477,10 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
             container: None,
             node: 0,
             started: false,
+            epoch: 0,
+            fails: 0,
+            done: false,
+            fail_frac: None,
             weight: 1.0,
             mult: 1.0,
         };
@@ -443,6 +494,8 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
     arena.pending_reds.extend(0..reduces as u64);
     arena.fetching_reds.clear();
     arena.spec_buf.clear();
+    arena.node_down.clear();
+    arena.node_down.resize(arena.topo.nodes(), false);
     if INDEXED {
         arena.not_done.clear();
         arena.not_done.extend(0..maps as u64);
@@ -467,6 +520,7 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
         fetching_reds,
         not_done,
         spec_buf,
+        node_down,
         durs,
         durs_vec,
     } = arena;
@@ -496,6 +550,16 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
     // is skipped (cheap decisions only — the timeline cannot change)
     let mut map_sat: Option<u64> = None;
     let mut red_sat: Option<u64> = None;
+    // Hadoop FAILED terminal state: set when a task exhausts its max
+    // attempts; the event loop stops and `runtime_s` becomes +inf
+    let mut failed: Option<String> = None;
+    // fault-injection bookkeeping (all zero / idle when faults are off)
+    let mut down_count = 0usize;
+    let mut failures_injected = 0u64;
+    // hard cap on injected failures per run: bounds pathological knob
+    // settings (mttf far below task duration) that would otherwise keep
+    // the event loop alive indefinitely
+    const FAULT_CAP: u64 = 10_000;
 
     // --- helpers as closures over the mutable state are painful in rust;
     //     use a small macro instead ---------------------------------------
@@ -513,7 +577,7 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                 None => false,
                 Some(container) => {
                     let node = container.node;
-                    let loc = hdfs::locality(topo, &blocks[st.block], node);
+                    let loc = hdfs::locality_with_down(topo, &blocks[st.block], node, node_down);
                     let mut rng = noise_rng.fork(($tid as u64) * 8 + st.attempts as u64);
                     let mult = cl.noise.task_multiplier(&mut rng) * node_factor[node];
                     let read = map_cost.t_read_local / loc.rate_factor();
@@ -534,7 +598,11 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                         st.locality = Some(loc);
                     }
                     let epoch = st.epoch;
-                    let failure = if !$spec && st.attempts < cl.noise.max_attempts {
+                    // every non-speculative attempt can fail — including
+                    // the last one, which is what makes the FAILED job
+                    // state reachable (speculative copies never fail on
+                    // their own; they can only be killed)
+                    let failure = if !$spec {
                         cl.noise.attempt_failure(&mut rng)
                     } else {
                         None
@@ -571,7 +639,16 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                     * rs.mult
                     + cl.task_overhead_s;
                 let finish = fetch_done + post;
-                $q.schedule(finish.max($q.now()), Ev::ReduceFinish(rid as u64));
+                match rs.fail_frac {
+                    // the attempt dies partway through its timeline
+                    Some(frac) => {
+                        let fail_t = rs.alloc_t + (finish - rs.alloc_t) * frac;
+                        $q.schedule(fail_t.max($q.now()), Ev::ReduceFail(rid as u64, rs.epoch));
+                    }
+                    None => {
+                        $q.schedule(finish.max($q.now()), Ev::ReduceFinish(rid as u64, rs.epoch))
+                    }
+                }
             }
         }};
     }
@@ -612,10 +689,15 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                             rs.alloc_t = $q.now();
                             rs.node = container.node;
                             rs.container = Some(container);
-                            let mut rng = noise_rng.fork(1_000_000 + rid);
+                            // per-attempt noise fork, indexed by epoch so
+                            // retries draw fresh noise; attempt 1 (epoch 0)
+                            // keeps the historical `1_000_000 + rid` stream
+                            let mut rng =
+                                noise_rng.fork((rs.epoch as u64 + 1) * 1_000_000 + rid);
                             rs.mult =
                                 cl.noise.task_multiplier(&mut rng) * node_factor[rs.node];
                             rs.weight = weights[rid as usize];
+                            rs.fail_frac = cl.noise.attempt_failure(&mut rng);
                             fetching_reds.push(rid);
                             if maps_done == maps {
                                 schedule_reduce_finish!($q, rid, map_phase_end);
@@ -628,6 +710,12 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
     }
 
     q.schedule(cl.am_overhead_s, Ev::Start);
+    // exactly one failure draw is in flight at all times: the chain is
+    // advanced here and once per NodeDown event, so the schedule is a
+    // pure function of (fault model, seed) — not of cluster load
+    if let Some((gap, node)) = fault_chain.next_failure() {
+        q.schedule(gap, Ev::NodeDown(node));
+    }
 
     while let Some((t, ev)) = q.pop() {
         match ev {
@@ -639,13 +727,25 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                 if st.done || epoch != st.epoch {
                     continue;
                 }
+                // the failing attempt must still be live — a node-loss
+                // kill removes attempts from `live`, which is what turns
+                // their in-flight events inert
+                let Some(pos) = st.live.iter().position(|a| a.attempt == att) else {
+                    continue;
+                };
                 if RECORD {
                     counters.failed_task_attempts += 1;
                 }
                 // release this attempt's container, requeue the task
-                if let Some(pos) = st.live.iter().position(|a| a.attempt == att) {
-                    let a = st.live.remove(pos);
-                    yarn.release(a.container);
+                let a = st.live.remove(pos);
+                yarn.release(a.container);
+                st.fails += 1;
+                if st.fails >= cl.noise.max_attempts {
+                    failed = Some(format!(
+                        "map task {tid} failed {} attempts (mapreduce.map.maxattempts {})",
+                        st.fails, cl.noise.max_attempts
+                    ));
+                    break;
                 }
                 pending_maps.push_back(tid);
                 schedule_tasks!(q);
@@ -655,12 +755,18 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                 if st.done {
                     continue; // lost the speculation race; container already freed
                 }
-                // the event names its attempt — no float-time matching
-                let spec_of_this = st.live.iter().find(|a| a.attempt == att).map(|a| a.speculative);
-                if epoch != st.epoch && spec_of_this != Some(true) {
+                // the event names its attempt — no float-time matching.
+                // An attempt absent from `live` was killed by a node
+                // failure: its finish event is inert.
+                let Some(win) = st.live.iter().find(|a| a.attempt == att) else {
+                    continue;
+                };
+                let (win_node, win_spec) = (win.container.node, win.speculative);
+                if epoch != st.epoch && !win_spec {
                     continue; // stale attempt (superseded by retry)
                 }
                 st.done = true;
+                st.out_node = win_node;
                 maps_done += 1;
                 map_phase_end = map_phase_end.max(t);
                 // free ALL live attempt containers (speculative copy is
@@ -689,7 +795,7 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                     tasks.push(TaskRecord {
                         kind: TaskKind::Map,
                         id: tid,
-                        node: 0,
+                        node: win_node,
                         start: st.start,
                         finish: t,
                         attempts: st.attempts,
@@ -761,8 +867,12 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                 }
                 schedule_tasks!(q);
             }
-            Ev::ReduceFinish(rid) => {
+            Ev::ReduceFinish(rid, epoch) => {
                 let rs = &mut red_states[rid as usize];
+                if rs.done || epoch != rs.epoch {
+                    continue; // stale attempt (killed or failure-reset)
+                }
+                rs.done = true;
                 if let Some(c) = rs.container.take() {
                     yarn.release(c);
                 }
@@ -781,12 +891,161 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
                         node: rs.node,
                         start: rs.alloc_t,
                         finish: t,
-                        attempts: 1,
+                        attempts: rs.fails + 1,
                         speculative: false,
                         locality: None,
                     });
                 }
                 last_finish = last_finish.max(t);
+                schedule_tasks!(q);
+            }
+            Ev::ReduceFail(rid, epoch) => {
+                let rs = &mut red_states[rid as usize];
+                if rs.done || epoch != rs.epoch {
+                    continue;
+                }
+                if RECORD {
+                    counters.failed_task_attempts += 1;
+                }
+                if let Some(c) = rs.container.take() {
+                    yarn.release(c);
+                }
+                rs.fails += 1;
+                if rs.fails >= red_max_attempts {
+                    failed = Some(format!(
+                        "reduce task {rid} failed {} attempts \
+                         (mapreduce.reduce.maxattempts {red_max_attempts})",
+                        rs.fails
+                    ));
+                    break;
+                }
+                // reset for a fresh attempt; the epoch bump both
+                // invalidates stale events and indexes the retry's
+                // noise fork
+                rs.epoch += 1;
+                rs.started = false;
+                rs.alloc_t = f64::NAN;
+                rs.fail_frac = None;
+                fetching_reds.retain(|&r| r != rid);
+                pending_reds.push_back(rid);
+                schedule_tasks!(q);
+            }
+            Ev::NodeDown(node) => {
+                // chain the next draw NOW — whether or not this failure
+                // applies — so the schedule stays a pure function of the
+                // fault stream; the cap bounds pathological settings
+                failures_injected += 1;
+                if failures_injected < FAULT_CAP {
+                    if let Some((gap, next)) = fault_chain.next_failure() {
+                        q.schedule_in(gap, Ev::NodeDown(next));
+                    }
+                }
+                if node_down[node]
+                    || down_count >= fault.max_concurrent as usize
+                    || down_count + 1 >= topo.nodes()
+                {
+                    continue; // already down, cap reached, or last node standing
+                }
+                node_down[node] = true;
+                down_count += 1;
+                if RECORD {
+                    counters.node_failures += 1;
+                }
+                // 1) kill in-flight map attempts on the node (Hadoop
+                //    KILLED, not FAILED — kills never count toward max
+                //    attempts); removing them from `live` turns their
+                //    scheduled events inert
+                for tid in 0..maps {
+                    let st = &mut map_states[tid];
+                    if st.done || st.live.is_empty() {
+                        continue;
+                    }
+                    let had = st.live.len();
+                    let mut k = 0;
+                    while k < st.live.len() {
+                        if st.live[k].container.node == node {
+                            let a = st.live.remove(k);
+                            yarn.release(a.container);
+                            if RECORD {
+                                counters.killed_attempts += 1;
+                            }
+                        } else {
+                            k += 1;
+                        }
+                    }
+                    if had != st.live.len() && st.live.is_empty() {
+                        // every running copy died: back to the queue
+                        pending_maps.push_back(tid as u64);
+                    }
+                }
+                // 2) kill reduce attempts on the node; the epoch bump
+                //    invalidates their scheduled Finish/Fail events and
+                //    the task re-queues (kills don't count as failures)
+                for rid in 0..reduces {
+                    let rs = &mut red_states[rid];
+                    if rs.done {
+                        continue;
+                    }
+                    match &rs.container {
+                        Some(c) if c.node == node => {}
+                        _ => continue,
+                    }
+                    let c = rs.container.take().expect("matched Some above");
+                    yarn.release(c);
+                    if RECORD {
+                        counters.killed_attempts += 1;
+                    }
+                    rs.epoch += 1;
+                    rs.started = false;
+                    rs.alloc_t = f64::NAN;
+                    rs.fail_frac = None;
+                    fetching_reds.retain(|&r| r != rid as u64);
+                    pending_reds.push_back(rid as u64);
+                }
+                // 3) lost shuffle output: a completed map's intermediate
+                //    data lived on the node that ran it; while reducers
+                //    still need to fetch, the map must re-execute (Hadoop
+                //    re-launches completed maps on node loss for exactly
+                //    this reason). Reducers already mid-fetch keep their
+                //    timeline — modeled as having fetched early.
+                if reds_done < reduces {
+                    for tid in 0..maps {
+                        let st = &mut map_states[tid];
+                        if !(st.done && st.out_node == node) {
+                            continue;
+                        }
+                        st.done = false;
+                        st.epoch += 1;
+                        st.start = f64::NAN;
+                        st.locality = None;
+                        maps_done -= 1;
+                        pending_maps.push_back(tid as u64);
+                        if RECORD {
+                            counters.reexecuted_maps += 1;
+                        }
+                        if INDEXED {
+                            // back into the straggler live set (it may
+                            // still be present — compaction is lazy)
+                            if let Err(p) = not_done.binary_search(&(tid as u64)) {
+                                not_done.insert(p, tid as u64);
+                            }
+                        }
+                    }
+                }
+                // 4) drain the node from YARN (its containers were all
+                //    released above) and schedule its recovery
+                yarn.drain(node);
+                q.schedule_in(fault.recovery_s.max(0.0), Ev::NodeUp(node));
+                schedule_tasks!(q);
+            }
+            Ev::NodeUp(node) => {
+                if !node_down[node] {
+                    continue;
+                }
+                node_down[node] = false;
+                down_count -= 1;
+                // counts as a release: saturation latches re-scan
+                yarn.restore(node, cl.mem_per_node_mb as f64, cl.vcores_per_node);
                 schedule_tasks!(q);
             }
         }
@@ -801,12 +1060,20 @@ fn simulate_core<const RECORD: bool, const INDEXED: bool>(
             cl.am_overhead_s + (maps + reduces) as f64 * cl.task_overhead_s;
     }
 
+    let runtime_s = if failed.is_some() {
+        // Hadoop FAILED: there is no completion time. Tuners must see a
+        // config that cannot finish as infinitely bad, never as fast.
+        f64::INFINITY
+    } else {
+        last_finish + cl.am_overhead_s * 0.25 // AM teardown
+    };
     SimCore {
-        runtime_s: last_finish + cl.am_overhead_s * 0.25, // AM teardown
+        runtime_s,
         map_phase_end_s: map_phase_end,
         tasks,
         counters,
         phase_secs,
+        failed,
     }
 }
 
@@ -1066,6 +1333,95 @@ mod tests {
         let off = mean(false);
         let on = mean(true);
         assert!(on < off, "speculation did not help: on {on:.2} vs off {off:.2}");
+    }
+
+    #[test]
+    fn disabled_fault_model_is_bit_identical_to_default() {
+        // with mttf 0 the chain draws nothing: recovery/concurrency knobs
+        // must be completely inert, bit for bit
+        let mut cl = ClusterSpec::default();
+        cl.fault.recovery_s = 7.0;
+        cl.fault.max_concurrent = 5;
+        let cfg = HadoopConfig::default();
+        for seed in 0..6 {
+            let wl = wordcount(4096.0);
+            let a = simulate_job(&ClusterSpec::default(), &wl, &cfg, seed);
+            let b = simulate_job(&cl, &wl, &cfg, seed);
+            assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits(), "seed {seed}");
+            assert_eq!(a.counters, b.counters, "seed {seed}");
+            assert_eq!(a.counters.node_failures, 0);
+        }
+    }
+
+    #[test]
+    fn node_failures_reexecute_completed_maps_deterministically() {
+        // a flaky cluster: frequent failures, quick recovery. Two runs of
+        // every seed must match bit for bit, and at least one seed must
+        // demonstrate the full lost-shuffle path: node failures that kill
+        // attempts AND force completed maps to re-execute
+        let mut cl = ClusterSpec::default();
+        cl.fault.mttf_s = 250.0;
+        cl.fault.recovery_s = 45.0;
+        let cfg = HadoopConfig::default();
+        let wl = wordcount(10240.0);
+        let mut reexecuted = false;
+        for seed in 0..8 {
+            let a = simulate_job(&cl, &wl, &cfg, seed);
+            let b = simulate_job(&cl, &wl, &cfg, seed);
+            assert_eq!(a.runtime_s.to_bits(), b.runtime_s.to_bits(), "seed {seed}");
+            assert_eq!(a.counters, b.counters, "seed {seed}");
+            assert!(a.counters.node_failures > 0, "seed {seed}: no failures injected");
+            if a.counters.reexecuted_maps > 0 && a.counters.killed_attempts > 0 {
+                reexecuted = true;
+            }
+            // and the engine variants stay in lockstep under faults
+            let lean = simulate_runtime(&cl, &wl, &cfg, seed);
+            let baseline = simulate_runtime_baseline(&cl, &wl, &cfg, seed);
+            assert_eq!(a.runtime_s.to_bits(), lean.to_bits(), "lean diverged, seed {seed}");
+            assert_eq!(a.runtime_s.to_bits(), baseline.to_bits(), "baseline diverged, seed {seed}");
+        }
+        assert!(reexecuted, "no seed exercised lost-shuffle re-execution");
+    }
+
+    #[test]
+    fn node_failures_slow_the_job_down() {
+        let wl = wordcount(10240.0);
+        let cfg = HadoopConfig::default();
+        let mean = |mttf: f64| -> f64 {
+            let mut cl = ClusterSpec::default();
+            cl.fault.mttf_s = mttf;
+            cl.fault.recovery_s = 60.0;
+            (0..10).map(|s| simulate_job(&cl, &wl, &cfg, s).runtime_s).sum::<f64>() / 10.0
+        };
+        let healthy = mean(0.0);
+        let flaky = mean(300.0);
+        assert!(
+            flaky > healthy,
+            "losing nodes did not hurt: flaky {flaky:.1} vs healthy {healthy:.1}"
+        );
+    }
+
+    #[test]
+    fn attempt_exhaustion_fails_the_job() {
+        // satellite: JobState::Failed is reachable — with near-certain
+        // attempt failure and a tight retry budget the job must die
+        let mut cl = ClusterSpec::default();
+        cl.noise.failure_prob = 0.9;
+        cl.noise.max_attempts = 2;
+        cl.speculative = false;
+        let r = simulate_job(&cl, &wordcount(4096.0), &HadoopConfig::default(), 1);
+        let reason = r.failed.as_deref().expect("job should have failed");
+        assert!(reason.contains("attempts"), "reason: {reason}");
+        assert!(r.runtime_s.is_infinite());
+        // and a healthy run reports no failure
+        let ok = simulate_job(
+            &ClusterSpec::default(),
+            &wordcount(4096.0),
+            &HadoopConfig::default(),
+            1,
+        );
+        assert!(ok.failed.is_none());
+        assert!(ok.runtime_s.is_finite());
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod cluster;
 pub mod costmodel;
 pub mod counters;
 pub mod events;
+pub mod faults;
 pub mod hdfs;
 pub mod joblogs;
 pub mod mapreduce;
@@ -17,6 +18,7 @@ pub mod trace;
 pub mod yarn;
 
 pub use cluster::{Cluster, JobArtifacts, JobStatus, JobSubmission, SimCluster};
+pub use faults::FaultModel;
 pub use mapreduce::{
     simulate_job, simulate_job_in, simulate_runtime, simulate_runtime_in, JobResult, SimArena,
 };
@@ -43,6 +45,8 @@ pub struct ClusterSpec {
     /// the DES resolves locality per task from actual placement).
     pub locality: f64,
     pub noise: NoiseModel,
+    /// Node failure/recovery injection (off by default).
+    pub fault: FaultModel,
     /// Hadoop speculative execution (mapreduce.map.speculative).
     pub speculative: bool,
     /// Base seed; every submitted job gets a distinct derived seed.
@@ -63,6 +67,7 @@ impl Default for ClusterSpec {
             am_overhead_s: 8.0,
             locality: 0.85,
             noise: NoiseModel::default(),
+            fault: FaultModel::default(),
             speculative: true,
             seed: 42,
         }
@@ -89,6 +94,13 @@ impl ClusterSpec {
                 straggler_prob: env.get_f64("sim.straggler.prob", d.noise.straggler_prob),
                 failure_prob: env.get_f64("sim.failure.prob", d.noise.failure_prob),
                 ..d.noise
+            },
+            fault: FaultModel {
+                mttf_s: env.get_f64("sim.fault.node.mttf.s", d.fault.mttf_s),
+                recovery_s: env.get_f64("sim.fault.node.recovery.s", d.fault.recovery_s),
+                max_concurrent: env
+                    .get_u64("sim.fault.node.max.concurrent", d.fault.max_concurrent as u64)
+                    as u32,
             },
             speculative: env.get("sim.speculative").map(|v| v == "true").unwrap_or(d.speculative),
             seed: env.get_u64("sim.seed", d.seed),
@@ -129,10 +141,20 @@ mod tests {
         let mut env = HadoopEnv::default();
         env.set("sim.nodes", "32");
         env.set("sim.noise.sigma", "0.3");
+        env.set("sim.fault.node.mttf.s", "1200");
+        env.set("sim.fault.node.max.concurrent", "3");
         let spec = ClusterSpec::from_env(&env);
         assert_eq!(spec.nodes, 32);
         assert_eq!(spec.noise.sigma, 0.3);
         assert_eq!(spec.racks, 2); // default preserved
+        assert_eq!(spec.fault.mttf_s, 1200.0);
+        assert_eq!(spec.fault.max_concurrent, 3);
+        assert_eq!(spec.fault.recovery_s, FaultModel::default().recovery_s);
+    }
+
+    #[test]
+    fn fault_injection_defaults_off() {
+        assert!(!ClusterSpec::default().fault.enabled());
     }
 
     #[test]

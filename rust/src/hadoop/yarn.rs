@@ -237,6 +237,37 @@ impl YarnState {
         self.index_touch(c.node);
     }
 
+    /// Take a failed node out of allocation: its free capacity drops to
+    /// zero so both allocation paths (preferred-list `fits` and the
+    /// fallback search, indexed or linear) skip it naturally, keeping
+    /// the indexed/linear oracle equivalence intact. The caller must
+    /// release or kill the node's in-flight containers FIRST — releasing
+    /// into a drained node would resurrect phantom capacity. Draining
+    /// only shrinks capacity, so the release epoch does not move and
+    /// saturation latches stay valid.
+    pub fn drain(&mut self, node: usize) {
+        {
+            let n = &mut self.nodes[node];
+            n.mem_free_mb = 0.0;
+            n.vcores_free = 0;
+        }
+        self.index_touch(node);
+    }
+
+    /// Bring a recovered node back at full idle capacity (the restarted
+    /// NodeManager re-registers with nothing running). Capacity grows, so
+    /// this counts as a release for the epoch — any saturation latch
+    /// keyed on [`YarnState::release_epoch`] re-scans.
+    pub fn restore(&mut self, node: usize, mem_per_node_mb: f64, vcores_per_node: u32) {
+        {
+            let n = &mut self.nodes[node];
+            n.mem_free_mb = mem_per_node_mb;
+            n.vcores_free = vcores_per_node;
+        }
+        self.epoch += 1;
+        self.index_touch(node);
+    }
+
     /// Total containers of `mem_mb` the cluster could host when idle.
     pub fn capacity(&self, mem_mb: f64) -> usize {
         self.nodes
@@ -412,6 +443,36 @@ mod tests {
         y.release(a);
         y.release(b);
         assert_eq!(y.capacity(4096.0), 4);
+    }
+
+    #[test]
+    fn drain_and_restore_roundtrip() {
+        let mut y = YarnState::new(4, 4096.0, 4);
+        y.drain(2);
+        y.check_invariants().unwrap();
+        assert!(!y.fits(2, 1.0), "drained node must refuse any container");
+        // preferred and fallback paths both avoid the drained node
+        assert_ne!(y.allocate(1024.0, &[2]).unwrap().node, 2);
+        for _ in 0..11 {
+            assert_ne!(y.allocate(1024.0, &[]).unwrap().node, 2);
+        }
+        assert!(y.allocate(1024.0, &[]).is_none(), "3 live nodes hold 12 containers");
+        // draining shrinks capacity: the epoch must not move
+        let epoch = y.release_epoch();
+        y.drain(3);
+        assert_eq!(y.release_epoch(), epoch);
+        // restore grows capacity: epoch bumps, node is allocatable again
+        y.restore(2, 4096.0, 4);
+        assert_eq!(y.release_epoch(), epoch + 1);
+        y.check_invariants().unwrap();
+        assert_eq!(y.allocate(4096.0, &[2]).unwrap().node, 2);
+
+        // the linear oracle sees the same drained state
+        let mut lin = YarnState::new(2, 2048.0, 2);
+        lin.drain(1);
+        assert_eq!(lin.allocate_linear(1024.0, &[]).unwrap().node, 0);
+        assert_eq!(lin.allocate_linear(1024.0, &[]).unwrap().node, 0);
+        assert!(lin.allocate_linear(1024.0, &[]).is_none());
     }
 
     #[test]

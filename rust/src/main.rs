@@ -444,8 +444,21 @@ fn run(args: &Args) -> Result<(), String> {
             let cache_entries: usize =
                 args.opt_parse_or("cache-entries", catla::serve::DEFAULT_CACHE_ENTRIES)?;
             let queue: usize = args.opt_parse_or("queue", catla::serve::DEFAULT_QUEUE_CAP)?;
-            let dispatcher =
+            let mut dispatcher =
                 catla::serve::Dispatcher::new(threads, cache_entries).with_queue_cap(queue);
+            // undocumented fault hook for the serve smoke's poison case:
+            // --poison <id>:<n> makes the next n evaluation attempts
+            // owned by session <id> panic, exercising the retry +
+            // Failed-session path end to end
+            if let Some(spec) = args.opt("poison") {
+                let (id, n) = spec
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad --poison {spec:?} (want <id>:<n>)"))?;
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| format!("bad --poison count {n:?}"))?;
+                dispatcher.inject_eval_faults(id, n);
+            }
             let mut daemon = catla::serve::Daemon::new(dispatcher);
             eprintln!(
                 "catla serve: {threads} workers, cache cap {cache_entries}, queue cap {queue}; \

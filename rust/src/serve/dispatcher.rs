@@ -13,8 +13,21 @@
 //! cached values are bit-identical to freshly simulated ones (the DES is
 //! a pure function of the fingerprinted inputs) — so interleaving and
 //! cache hits are invisible to any single session's outcome.
+//!
+//! The step is also the daemon's fault boundary. Evaluations run through
+//! [`ThreadPool::try_scoped_run_slots`], so a panicking evaluation is
+//! caught per-slot instead of poisoning the pool; panicked evaluations
+//! are retried with bounded deterministic backoff (the owning session's
+//! `serve.retry.max` / `serve.retry.backoff_ms`), and a session whose
+//! evaluation still fails after its retry budget moves to the `Failed`
+//! terminal state ([`ServeSession::fail`]) — sibling sessions in the
+//! same step deliver normally. A retried evaluation re-runs the same
+//! pure simulation inputs, so a retry that succeeds is bit-identical to
+//! one that never failed.
 
 use std::collections::BTreeMap;
+use std::thread;
+use std::time::Duration;
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{simulate_runtime_in, ClusterSpec, SimArena};
@@ -37,6 +50,9 @@ pub struct StepReport {
     pub simulated: usize,
     /// Sessions whose slice completed this step.
     pub sessions: usize,
+    /// Sessions moved to the `Failed` terminal state this step
+    /// (evaluation retries exhausted, or a delivery error).
+    pub failed: usize,
 }
 
 pub struct Dispatcher {
@@ -52,6 +68,13 @@ pub struct Dispatcher {
     /// Intra-step duplicate jobs served off a miss computed in the same
     /// step (counted separately from cache hits).
     deduped: u64,
+    /// Deterministic evaluation-fault injection (tests and the serve
+    /// smoke's poison case): session id → remaining evaluation attempts
+    /// to fail with an injected panic. Attempts owned by the session
+    /// panic until the budget drains; later attempts run the pure
+    /// simulation, so a drained budget converges on the exact no-fault
+    /// result.
+    faults: BTreeMap<String, u64>,
 }
 
 impl Dispatcher {
@@ -65,6 +88,20 @@ impl Dispatcher {
             queue_cap: DEFAULT_QUEUE_CAP,
             cursor: 0,
             deduped: 0,
+            faults: BTreeMap::new(),
+        }
+    }
+
+    /// Arrange for the next `n` evaluation attempts owned by session
+    /// `id` to panic — the deterministic fault hook behind the retry
+    /// and `Failed`-session tests and `scripts/serve_smoke.sh`'s poison
+    /// case. `n = 0` clears the injection.
+    #[doc(hidden)]
+    pub fn inject_eval_faults(&mut self, id: &str, n: u64) {
+        if n == 0 {
+            self.faults.remove(id);
+        } else {
+            self.faults.insert(id.to_string(), n);
         }
     }
 
@@ -159,33 +196,115 @@ impl Dispatcher {
                 (&sess.cluster, &sess.workload, &job.cfg, job.seed)
             })
             .collect();
-        let results: Vec<f64> = {
-            let inputs = &inputs;
-            self.pool.scoped_run_slots(simulated, &mut self.arenas, |arena, u| {
-                let (cl, wl, cfg, seed) = inputs[u];
-                simulate_runtime_in(arena, cl, wl, cfg, seed)
-            })
-        };
-        drop(inputs);
-        for (u, &v) in results.iter().enumerate() {
-            let (qi, j) = misses[u];
-            self.cache.insert(queue[qi].1[j].key, v);
-        }
+        // each miss's retry policy is its OWNING session's — the first
+        // to queue it this step; an intra-step duplicate of a miss that
+        // exhausts its owner's retries fails its session too
+        let owner_of: Vec<usize> = misses.iter().map(|&(qi, _)| queue[qi].0).collect();
 
-        // deliver, per session in its ask order
-        for (qi, (s, jobs)) in queue.iter().enumerate() {
-            let runtimes: Vec<f64> = (0..jobs.len())
-                .map(|j| match resolved[qi][j] {
-                    Resolved::Val(v) => v,
-                    Resolved::Miss(u) => results[u],
+        // panic-isolated evaluation with bounded deterministic retries:
+        // round k re-runs only the evaluations that panicked, after
+        // sleeping `retry_backoff_ms × k` (retries re-run the same pure
+        // inputs, so a retry that succeeds is bit-identical to a first
+        // try that never failed)
+        let mut results: Vec<Result<f64, String>> =
+            (0..simulated).map(|_| Err(String::new())).collect();
+        let mut pending: Vec<usize> = (0..simulated).collect();
+        let mut round = 0usize;
+        while !pending.is_empty() {
+            // injected faults are decided up front in deterministic
+            // miss order — the parallel workers never touch shared state
+            let poison: Vec<bool> = pending
+                .iter()
+                .map(|&u| {
+                    let id = &sessions[owner_of[u]].id;
+                    match self.faults.get_mut(id) {
+                        Some(rem) if *rem > 0 => {
+                            *rem -= 1;
+                            true
+                        }
+                        _ => false,
+                    }
                 })
                 .collect();
-            sessions[*s].complete(&runtimes)?;
+            let outs = {
+                let (inputs, pending, poison) = (&inputs, &pending, &poison);
+                self.pool
+                    .try_scoped_run_slots(pending.len(), &mut self.arenas, move |arena, k| {
+                        assert!(!poison[k], "injected evaluation fault");
+                        let (cl, wl, cfg, seed) = inputs[pending[k]];
+                        simulate_runtime_in(arena, cl, wl, cfg, seed)
+                    })
+            };
+            let mut next = Vec::new();
+            for (k, out) in outs.into_iter().enumerate() {
+                let u = pending[k];
+                match out {
+                    Ok(v) => results[u] = Ok(v),
+                    Err(_) if round < sessions[owner_of[u]].retry_max => next.push(u),
+                    Err(p) => {
+                        results[u] = Err(format!(
+                            "evaluation panicked {} time(s): {}",
+                            round + 1,
+                            panic_text(p.as_ref()),
+                        ));
+                    }
+                }
+            }
+            pending = next;
+            if pending.is_empty() {
+                break;
+            }
+            round += 1;
+            let backoff = pending
+                .iter()
+                .map(|&u| sessions[owner_of[u]].retry_backoff_ms)
+                .max()
+                .unwrap_or(0);
+            if backoff > 0 {
+                thread::sleep(Duration::from_millis(backoff.saturating_mul(round as u64)));
+            }
+        }
+        drop(inputs);
+        for (u, r) in results.iter().enumerate() {
+            if let Ok(v) = r {
+                let (qi, j) = misses[u];
+                self.cache.insert(queue[qi].1[j].key, *v);
+            }
+        }
+
+        // deliver, per session in its ask order; a session whose slice
+        // holds an exhausted-retries evaluation (or whose delivery
+        // errors) fails alone — its siblings in this step still deliver
+        let mut failed = 0usize;
+        for (qi, (s, jobs)) in queue.iter().enumerate() {
+            let mut runtimes = Vec::with_capacity(jobs.len());
+            let mut err: Option<String> = None;
+            for j in 0..jobs.len() {
+                match &resolved[qi][j] {
+                    Resolved::Val(v) => runtimes.push(*v),
+                    Resolved::Miss(u) => match &results[*u] {
+                        Ok(v) => runtimes.push(*v),
+                        Err(e) => {
+                            err = Some(e.clone());
+                            break;
+                        }
+                    },
+                }
+            }
+            let delivered = match err {
+                Some(e) => Err(e),
+                None => sessions[*s].complete(&runtimes),
+            };
+            if let Err(e) = delivered {
+                sessions[*s].fail(e);
+                failed += 1;
+            }
         }
         Ok(StepReport {
             runs: queued,
             simulated,
             sessions: queue.len(),
+            failed,
         })
     }
 
@@ -207,11 +326,13 @@ impl Dispatcher {
     /// measured, not inferred.
     pub fn stats_line(&self, sessions: &[ServeSession]) -> String {
         let live = sessions.iter().filter(|s| !s.is_done()).count();
+        let failed = sessions.iter().filter(|s| s.failed().is_some()).count();
         let s = self.cache.stats();
         format!(
-            "serve: sessions={} live={} cache[entries={} cap={} hits={} misses={} evictions={} deduped={} hit_rate={:.3}]",
+            "serve: sessions={} live={} failed={} cache[entries={} cap={} hits={} misses={} evictions={} deduped={} hit_rate={:.3}]",
             sessions.len(),
             live,
+            failed,
             self.cache.len(),
             self.cache.cap(),
             s.hits,
@@ -221,4 +342,13 @@ impl Dispatcher {
             s.hit_rate(),
         )
     }
+}
+
+/// Best-effort text of a caught panic payload (`&str` and `String`
+/// payloads cover `panic!`/`assert!`; anything else gets a placeholder).
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }

@@ -22,6 +22,12 @@
 //! (the `ask` payload). A recoverable command error answers `err` and
 //! keeps serving; only I/O failure on the stream aborts the daemon.
 //!
+//! A session that exhausts its evaluation retry budget moves to the
+//! `Failed` terminal state without disturbing siblings: `status` then
+//! reports `done=true failed="<reason>"`, `close` answers `err` (there
+//! is no outcome to finalize), and `step`/`run` keep serving every
+//! other session.
+//!
 //! When several sessions open the SAME project directory, the first gets
 //! the default `tuning_log.csv` and later ones get `tuning_log.<id>.csv`
 //! — concurrent users of one project never clobber each other's
@@ -161,8 +167,8 @@ impl Daemon {
                     None => self.dispatcher.step(&mut self.sessions)?,
                 };
                 Ok(format!(
-                    "step runs={} simulated={} sessions={}",
-                    r.runs, r.simulated, r.sessions
+                    "step runs={} simulated={} sessions={} failed={}",
+                    r.runs, r.simulated, r.sessions, r.failed
                 ))
             }
             "run" => {
@@ -207,8 +213,15 @@ impl Daemon {
                     .best_value()
                     .map(|b| format!("{b:.3}"))
                     .unwrap_or_else(|| "none".to_string());
+                // failed sessions carry their reason on the status line
+                // (quoted, so the reply stays a single line); healthy
+                // sessions' replies are unchanged
+                let failed = match sess.failed() {
+                    Some(reason) => format!(" failed={reason:?}"),
+                    None => String::new(),
+                };
                 Ok(format!(
-                    "status {id} evals={} best={best} done={}",
+                    "status {id} evals={} best={best} done={}{failed}",
                     sess.evals(),
                     sess.is_done()
                 ))

@@ -80,8 +80,19 @@ pub struct ServeSession {
     warnings: Vec<String>,
     /// The project's `serve.cache_entries` request, if any.
     pub cache_entries: Option<usize>,
+    /// Dispatcher retry budget for this session's evaluations
+    /// (`serve.retry.max`): how many times a panicked evaluation is
+    /// re-run before the session fails.
+    pub retry_max: usize,
+    /// Base retry backoff in ms (`serve.retry.backoff_ms`), scaled
+    /// linearly by retry number by the dispatcher.
+    pub retry_backoff_ms: u64,
     in_flight: Option<Flight>,
     finalized: bool,
+    /// Terminal failure (evaluation retries exhausted, or a delivery
+    /// error): the session stops asking, and the reason is surfaced
+    /// over the line protocol. Sibling sessions are unaffected.
+    failed: Option<String>,
 }
 
 impl ServeSession {
@@ -165,8 +176,11 @@ impl ServeSession {
             label,
             warnings,
             cache_entries: settings.cache_entries,
+            retry_max: settings.retry_max,
+            retry_backoff_ms: settings.retry_backoff_ms,
             in_flight: None,
             finalized: false,
+            failed: None,
         })
     }
 
@@ -241,16 +255,35 @@ impl ServeSession {
 
     /// The run is over and nothing is in flight. Note this only flips
     /// after a `next_jobs`/`ask_configs` call observed the end of the
-    /// candidate stream.
+    /// candidate stream — or the session failed terminally.
     pub fn is_done(&self) -> bool {
-        self.finalized || (self.driver.is_done() && self.in_flight.is_none())
+        self.failed.is_some()
+            || self.finalized
+            || (self.driver.is_done() && self.in_flight.is_none())
+    }
+
+    /// Why the session is in its `Failed` terminal state, if it is.
+    pub fn failed(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
+    /// Move the session to its `Failed` terminal state (first reason
+    /// wins): the outstanding slice is dropped, no further candidates
+    /// are asked, and `is_done` reports true. The checkpoint log keeps
+    /// every slice completed before the failure, so a re-opened session
+    /// resumes from there.
+    pub fn fail(&mut self, reason: String) {
+        self.in_flight = None;
+        if self.failed.is_none() {
+            self.failed = Some(reason);
+        }
     }
 
     /// The next slice of simulation jobs this session wants evaluated,
     /// with seeds reserved exactly like serial submission. Empty while a
     /// slice is outstanding, or once the run is over.
     pub fn next_jobs(&mut self) -> Vec<EvalJob> {
-        if self.in_flight.is_some() || self.finalized {
+        if self.in_flight.is_some() || self.finalized || self.failed.is_some() {
             return Vec::new();
         }
         let cfgs: Vec<HadoopConfig> = match self.driver.next_slice(self.opt.as_mut(), &self.space)
@@ -311,7 +344,7 @@ impl ServeSession {
     /// consumed — a session driven this way is measured outside the DES,
     /// so the standalone-simulation byte-identity bar does not apply.
     pub fn ask_configs(&mut self) -> Vec<HadoopConfig> {
-        if self.in_flight.is_some() || self.finalized {
+        if self.in_flight.is_some() || self.finalized || self.failed.is_some() {
             return Vec::new();
         }
         let cfgs = match self.driver.next_slice(self.opt.as_mut(), &self.space) {
@@ -356,6 +389,9 @@ impl ServeSession {
     /// Finalize: write the tuning log and summary row (project-backed
     /// sessions), mark the session closed, and return the outcome.
     pub fn finalize(&mut self) -> Result<TuningOutcome, String> {
+        if let Some(reason) = &self.failed {
+            return Err(format!("session {} failed: {reason}", self.id));
+        }
         let outcome = self.driver.outcome(&self.label)?;
         if let Some(dir) = &self.dir {
             let history = History::open(dir).map_err(|e| e.to_string())?;

@@ -113,6 +113,9 @@ fn write_cluster(h: &mut Fnv1a, cl: &ClusterSpec) {
         .write_f64_bits(cl.noise.straggler_mult.1)
         .write_f64_bits(cl.noise.failure_prob)
         .write_u64(cl.noise.max_attempts as u64)
+        .write_f64_bits(cl.fault.mttf_s)
+        .write_f64_bits(cl.fault.recovery_s)
+        .write_u64(cl.fault.max_concurrent as u64)
         .write_u64(cl.speculative as u64);
     // cl.seed is deliberately NOT hashed: the per-run simulation seed is
     // a separate fingerprint component (eval_fingerprint's `seed`), and
@@ -247,6 +250,19 @@ mod tests {
         let mut noisy = cl.clone();
         noisy.noise.sigma += 0.01;
         assert_ne!(k, eval_fingerprint(&noisy, &wl, &cfg, 7));
+        // fault model: a flaky cluster must never share a hit with a
+        // healthy one (mttf), and neither may recovery/concurrency
+        // variants of the same failure rate
+        let mut flaky = cl.clone();
+        flaky.fault.mttf_s = 600.0;
+        let kf = eval_fingerprint(&flaky, &wl, &cfg, 7);
+        assert_ne!(k, kf);
+        let mut slow_recovery = flaky.clone();
+        slow_recovery.fault.recovery_s += 1.0;
+        assert_ne!(kf, eval_fingerprint(&slow_recovery, &wl, &cfg, 7));
+        let mut wide = flaky.clone();
+        wide.fault.max_concurrent += 1;
+        assert_ne!(kf, eval_fingerprint(&wide, &wl, &cfg, 7));
         // config values
         let mut cfg2 = cfg.clone();
         cfg2.set(crate::config::params::P_REDUCES, 3.0);

@@ -143,6 +143,35 @@ impl ThreadPool {
         R: Send,
         F: Fn(&mut S, usize) -> R + Sync,
     {
+        self.try_scoped_run_slots(n, slots, f)
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect()
+    }
+
+    /// [`ThreadPool::scoped_run_slots`] with PER-INDEX panic isolation:
+    /// `f` panicking on index `i` yields `Err(payload)` in position `i`
+    /// while every other index still runs to completion — the worker
+    /// that caught the panic simply claims the next index, and its
+    /// scratch slot stays live. This is the crash-tolerance primitive
+    /// the serve daemon builds on: one poisoned evaluation must fail
+    /// only its own session, never the batch, the workers, or the
+    /// daemon. The caller decides what a panic means; `scoped_run_slots`
+    /// keeps the historical re-raise behavior on top of this.
+    pub fn try_scoped_run_slots<S, R, F>(
+        &self,
+        n: usize,
+        slots: &mut [S],
+        f: F,
+    ) -> Vec<thread::Result<R>>
+    where
+        S: Send,
+        R: Send,
+        F: Fn(&mut S, usize) -> R + Sync,
+    {
         if n == 0 {
             return Vec::new();
         }
@@ -150,10 +179,12 @@ impl ThreadPool {
         let workers = self.size().min(slots.len()).min(n);
         if workers == 1 {
             let s = &mut slots[0];
-            return (0..n).map(|i| f(&mut *s, i)).collect();
+            return (0..n)
+                .map(|i| std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut *s, i))))
+                .collect();
         }
         let scratch = slots;
-        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut slots: Vec<Option<thread::Result<R>>> = (0..n).map(|_| None).collect();
         let next = AtomicUsize::new(0);
         let (done_tx, done_rx) = mpsc::channel::<thread::Result<()>>();
         let slots_ptr = SendPtr(slots.as_mut_ptr());
@@ -175,7 +206,11 @@ impl ThreadPool {
                         if i >= n {
                             break;
                         }
-                        let v = f(s, i);
+                        // per-index isolation: a panicking f poisons only
+                        // index i; this worker and its scratch slot carry
+                        // on with the next index
+                        let v =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(s, i)));
                         // SAFETY: each index `i < n` is claimed by
                         // exactly one worker via the shared `next`
                         // counter, so this write targets a distinct
@@ -207,6 +242,8 @@ impl ThreadPool {
             }
         }
         if let Some(p) = panic {
+            // a panic OUTSIDE f (infrastructure, not workload): results
+            // may be incomplete, so re-raise rather than return holes
             std::panic::resume_unwind(p);
         }
         slots
@@ -356,6 +393,47 @@ mod tests {
         assert!(r.is_err(), "worker panic not propagated");
         // the workers caught the panic — the pool still works afterwards
         assert_eq!(pool.scoped_run(4, 4, |i| i * 2), vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn try_scoped_run_isolates_panics_per_index() {
+        // satellite regression test: a panicking evaluation poisons ONLY
+        // its own index — siblings complete, scratch slots stay live, and
+        // the pool remains fully usable afterwards
+        let pool = ThreadPool::new(4);
+        let mut slots: Vec<usize> = vec![0; 4];
+        let out = pool.try_scoped_run_slots(16, &mut slots, |hits, i| {
+            *hits += 1;
+            if i % 5 == 0 {
+                panic!("poisoned index {i}");
+            }
+            i * 10
+        });
+        assert_eq!(out.len(), 16);
+        for (i, r) in out.iter().enumerate() {
+            if i % 5 == 0 {
+                assert!(r.is_err(), "index {i} should have panicked");
+            } else {
+                match r {
+                    Ok(v) => assert_eq!(*v, i * 10),
+                    Err(_) => panic!("index {i} unexpectedly poisoned"),
+                }
+            }
+        }
+        // every index ran exactly once, panicking ones included
+        assert_eq!(slots.iter().sum::<usize>(), 16);
+        // the same pool + slots serve the next batch (workers survived)
+        let again = pool.scoped_run_slots(4, &mut slots, |_, i| i);
+        assert_eq!(again, vec![0, 1, 2, 3]);
+        // the serial (single-slot) fast path isolates identically
+        let mut one = vec![0usize];
+        let out = pool.try_scoped_run_slots(3, &mut one, |_, i| {
+            if i == 1 {
+                panic!("serial boom");
+            }
+            i
+        });
+        assert!(out[0].is_ok() && out[1].is_err() && out[2].is_ok());
     }
 
     #[test]

@@ -402,6 +402,47 @@ fn early_stop_chunking_does_not_change_bobyqa_trajectory() {
 }
 
 #[test]
+fn flaky_cluster_tuning_replays_byte_identically_for_all_methods() {
+    // the seeded node failure/recovery schedule is part of the simulation
+    // state, so an entire tuning run over a flaky cluster must replay
+    // byte for byte for every method — and must not silently equal the
+    // fault-free run (the schedule has to have touched at least one
+    // evaluation's runtime)
+    use catla::hadoop::FaultModel;
+    let flaky = ClusterSpec {
+        fault: FaultModel {
+            mttf_s: 150.0,
+            recovery_s: 60.0,
+            max_concurrent: 1,
+        },
+        ..ClusterSpec::default()
+    };
+    let drive_on = |cl: &ClusterSpec, name: &str| -> TuningOutcome {
+        let wl = wordcount(4096.0);
+        let sp = space();
+        let mut cluster = SimCluster::new(cl.clone());
+        let mut obj = ClusterObjective::new(&mut cluster, &wl, 1);
+        let mut opt = Method::from_name(name, SEED).unwrap().build();
+        Driver::new(BUDGET).run(opt.as_mut(), &sp, &mut obj).unwrap()
+    };
+    for name in ALL_METHODS {
+        let a = drive_on(&flaky, name);
+        let b = drive_on(&flaky, name);
+        assert_eq!(
+            fingerprint(&a),
+            fingerprint(&b),
+            "{name}: tuning over a flaky cluster is not replayable"
+        );
+        let clean = drive_on(&ClusterSpec::default(), name);
+        assert_ne!(
+            fingerprint(&a),
+            fingerprint(&clean),
+            "{name}: the fault schedule never touched a single evaluation"
+        );
+    }
+}
+
+#[test]
 fn resume_replay_then_continue_covers_total_budget() {
     let wl = wordcount(1024.0);
     let sp = space();

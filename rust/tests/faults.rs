@@ -1,0 +1,179 @@
+//! Fault-injection guarantees at the public-API level:
+//! * zero-cost-zero-drift: with `fault.*` knobs at their defaults
+//!   (mttf 0 = off), every builtin workload's timeline is bit-identical
+//!   to a spec that never heard of fault injection — whatever the other
+//!   fault knobs say;
+//! * replay: a seeded node failure/recovery schedule produces the
+//!   identical `JobResult` (runtime bits, counters, every task record)
+//!   when simulated twice, and demonstrably re-executes completed maps
+//!   (lost shuffle output) and kills in-flight attempts;
+//! * tunable dimensions: a `params.spec`-declared `fault.node.mttf.s`
+//!   hands the optimizer the failure scenario through the ordinary
+//!   typed config space — decode(0) is bit-identical to no injection;
+//! * a job that exhausts task attempts surfaces Hadoop's FAILED
+//!   terminal state through the Cluster API and the history artifact.
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::mapreduce::TaskKind;
+use catla::hadoop::{
+    simulate_job, Cluster, ClusterSpec, FaultModel, JobResult, JobStatus, JobSubmission,
+    SimCluster,
+};
+use catla::optim::ParamSpace;
+use catla::workloads::{by_name, wordcount, BUILTIN_NAMES};
+
+fn flaky(mttf_s: f64) -> ClusterSpec {
+    ClusterSpec {
+        fault: FaultModel {
+            mttf_s,
+            recovery_s: 45.0,
+            max_concurrent: 2,
+        },
+        ..ClusterSpec::default()
+    }
+}
+
+/// Byte-exact fingerprint of a whole `JobResult`: runtime bits, failure
+/// state, counters, and every task record (kind/id/node/times/attempts).
+fn job_fingerprint(r: &JobResult) -> String {
+    let mut s = format!(
+        "{:x}|{:?}|{}",
+        r.runtime_s.to_bits(),
+        r.failed,
+        r.counters.to_json()
+    );
+    for t in &r.tasks {
+        s.push_str(&format!(
+            ";{}:{}:{}:{:x}:{:x}:{}:{}:{:?}",
+            if t.kind == TaskKind::Map { "m" } else { "r" },
+            t.id,
+            t.node,
+            t.start.to_bits(),
+            t.finish.to_bits(),
+            t.attempts,
+            t.speculative,
+            t.locality,
+        ));
+    }
+    s
+}
+
+#[test]
+fn disabled_fault_knobs_are_zero_drift_for_every_builtin_workload() {
+    // recovery/concurrency knobs moved while mttf stays 0: the fault
+    // chain must draw nothing and no timeline byte may move, for every
+    // builtin workload shape
+    let cfg = HadoopConfig::default();
+    let off = ClusterSpec {
+        fault: FaultModel {
+            mttf_s: 0.0,
+            recovery_s: 7.0,
+            max_concurrent: 5,
+        },
+        ..ClusterSpec::default()
+    };
+    for name in BUILTIN_NAMES {
+        let wl = by_name(name, 1536.0).unwrap();
+        for seed in 1..=3u64 {
+            let a = simulate_job(&ClusterSpec::default(), &wl, &cfg, seed);
+            let b = simulate_job(&off, &wl, &cfg, seed);
+            assert_eq!(
+                job_fingerprint(&a),
+                job_fingerprint(&b),
+                "{name} seed {seed}: disabled fault model drifted the timeline"
+            );
+        }
+    }
+}
+
+#[test]
+fn seeded_fault_schedule_replays_bit_identically_and_reexecutes_maps() {
+    let wl = wordcount(8192.0);
+    let cfg = HadoopConfig::default();
+    let (mut reexecuted, mut killed) = (0u64, 0u64);
+    for seed in 1..=5u64 {
+        let a = simulate_job(&flaky(250.0), &wl, &cfg, seed);
+        let b = simulate_job(&flaky(250.0), &wl, &cfg, seed);
+        assert_eq!(
+            job_fingerprint(&a),
+            job_fingerprint(&b),
+            "seed {seed}: fault schedule not replayable"
+        );
+        assert!(
+            a.counters.node_failures > 0,
+            "seed {seed}: the schedule never fired"
+        );
+        reexecuted += a.counters.reexecuted_maps;
+        killed += a.counters.killed_attempts;
+    }
+    assert!(
+        reexecuted > 0,
+        "no completed map was re-executed across any seed — the lost-shuffle path never ran"
+    );
+    assert!(
+        killed > 0,
+        "no in-flight attempt was killed across any seed"
+    );
+}
+
+#[test]
+fn spec_declared_fault_knob_is_a_tunable_dimension() {
+    // fault.node.mttf.s declared like any other parameter: the decoded
+    // value overrides the cluster model, so the optimizer owns the
+    // scenario — and decode(0.0) is bit-identical to no injection
+    let spec = TuningSpec::parse("param fault.node.mttf.s float 0 600\n").unwrap();
+    let space = ParamSpace::new(spec, HadoopConfig::default());
+    let off_cfg = space.decode(&[0.0]);
+    let on_cfg = space.decode(&[1.0]);
+    let wl = wordcount(4096.0);
+    let mut fired = 0u64;
+    for seed in 1..=4u64 {
+        let base = simulate_job(&ClusterSpec::default(), &wl, &HadoopConfig::default(), seed);
+        let off = simulate_job(&ClusterSpec::default(), &wl, &off_cfg, seed);
+        assert_eq!(
+            base.runtime_s.to_bits(),
+            off.runtime_s.to_bits(),
+            "seed {seed}: mttf=0 through the spec drifted from the plain config"
+        );
+        let on = simulate_job(&ClusterSpec::default(), &wl, &on_cfg, seed);
+        fired += on.counters.node_failures;
+    }
+    assert!(
+        fired > 0,
+        "spec-declared mttf=600 never injected a failure across any seed"
+    );
+}
+
+#[test]
+fn attempt_exhaustion_surfaces_failed_state_end_to_end() {
+    let mut spec = ClusterSpec::default();
+    spec.noise.failure_prob = 0.9;
+    spec.noise.max_attempts = 2;
+    spec.speculative = false;
+    let mut cluster = SimCluster::new(spec);
+    let id = cluster
+        .submit_job(JobSubmission {
+            name: "doomed".into(),
+            workload: wordcount(1024.0),
+            config: HadoopConfig::default(),
+        })
+        .unwrap();
+    let reason = loop {
+        match cluster.poll(&id).unwrap() {
+            JobStatus::Failed { reason } => break reason,
+            JobStatus::Succeeded { runtime_s } => {
+                panic!("job should have failed, succeeded in {runtime_s}s")
+            }
+            JobStatus::Running { .. } => {}
+        }
+    };
+    assert!(reason.contains("attempts"), "reason: {reason}");
+    // artifacts of a failed job are still downloadable, carry the FAILED
+    // state + reason, and stay parseable (no JSON infinity leak)
+    let art = cluster.fetch_artifacts(&id).unwrap();
+    assert!(art.history_json.contains("\"state\":\"FAILED\""));
+    assert!(art.history_json.contains("failReason"));
+    let parsed = catla::hadoop::joblogs::parse_history(&art.history_json).unwrap();
+    assert_eq!(parsed.runtime_s, -1.0, "failed history must use the -1 sentinel");
+}

@@ -40,6 +40,8 @@ fn settings(optimizer: &str, repeats: usize) -> TuningSettings {
         early_tol: 1e-3,
         batch_chunk: DEFAULT_BATCH_CHUNK,
         cache_entries: None,
+        retry_max: 2,
+        retry_backoff_ms: 0,
     }
 }
 
@@ -356,4 +358,139 @@ fn external_ask_tell_protocol_drives_a_session() {
         "close did not report the told best:\n{reply}"
     );
     let _ = std::fs::remove_dir_all(dir);
+}
+
+// ---- crash tolerance: retries, Failed sessions, sibling isolation ---
+
+#[test]
+fn retried_evaluations_are_byte_identical_to_unfaulted_runs() {
+    // two injected panics per step against a retry budget of two: every
+    // poisoned evaluation eventually succeeds on a retry, and because a
+    // retry re-runs the same pure simulation inputs the outcome must
+    // not move a byte — for all eight methods
+    for name in ALL_METHODS {
+        let reference = fingerprint(&standalone(name, 1));
+        let mut sessions = vec![session("a", name, 1), session("b", name, 1)];
+        let mut d = Dispatcher::new(2, 1 << 14);
+        d.inject_eval_faults("a", 2);
+        d.run_all(&mut sessions).unwrap();
+        for s in &sessions {
+            assert!(
+                s.failed().is_none(),
+                "{name}: session {} failed despite a sufficient retry budget: {:?}",
+                s.id,
+                s.failed()
+            );
+            assert_eq!(
+                fingerprint(&s.outcome().unwrap()),
+                reference,
+                "{name}: session {} diverged after evaluation retries",
+                s.id
+            );
+        }
+    }
+}
+
+#[test]
+fn poisoned_session_fails_alone_and_siblings_complete() {
+    // "bad" gets more injected faults than any retry budget; "good"
+    // tunes a DIFFERENT cluster (distinct seed ⇒ no shared cache keys)
+    // and must run to the exact standalone outcome while its sibling
+    // moves to the Failed terminal state
+    let reference = fingerprint(&standalone("bobyqa", 1));
+    let bad = ServeSession::new(
+        "bad",
+        TuningSpec::fig3(),
+        HadoopConfig::default(),
+        ClusterSpec {
+            seed: 999,
+            ..ClusterSpec::default()
+        },
+        wordcount(2048.0),
+        &settings("bobyqa", 1),
+    )
+    .unwrap();
+    let mut sessions = vec![bad, session("good", "bobyqa", 1)];
+    let mut d = Dispatcher::new(2, 1 << 14);
+    d.inject_eval_faults("bad", u64::MAX);
+    let first = d.step(&mut sessions).unwrap();
+    assert_eq!(first.failed, 1, "bad session should fail on its first slice");
+    d.run_all(&mut sessions).unwrap();
+
+    assert!(sessions[0].is_done(), "failed session must report done");
+    let reason = sessions[0]
+        .failed()
+        .expect("bad session should be Failed")
+        .to_string();
+    assert!(
+        reason.contains("injected evaluation fault"),
+        "failure reason lost the panic payload: {reason}"
+    );
+    assert!(
+        sessions[0].finalize().is_err(),
+        "finalize of a failed session must error"
+    );
+
+    let good = &sessions[1];
+    assert!(good.failed().is_none(), "sibling caught the failure");
+    assert_eq!(
+        fingerprint(&good.outcome().unwrap()),
+        reference,
+        "sibling session diverged while sharing a dispatcher with a failing one"
+    );
+}
+
+#[test]
+fn protocol_surfaces_failed_sessions() {
+    // different input sizes so the two sessions share no cache keys
+    let dir_bad = tmp("poison-bad");
+    create_template(&dir_bad, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(dir_bad.join("tuning.properties"), SMALL).unwrap();
+    let dir_good = tmp("poison-good");
+    create_template(&dir_good, ProjectKind::Tuning, "wordcount", 512.0).unwrap();
+    std::fs::write(dir_good.join("tuning.properties"), SMALL).unwrap();
+
+    let mut daemon = Daemon::new(Dispatcher::new(2, 1 << 12));
+    daemon.dispatcher.inject_eval_faults("bad", u64::MAX);
+    let reply = serve_script(
+        &mut daemon,
+        format!(
+            "open bad {b}\nopen good {g}\nrun\nstatus bad\nstatus good\nclose good\nclose bad\nshutdown\n",
+            b = dir_bad.display(),
+            g = dir_good.display()
+        ),
+    );
+    let status_bad = reply
+        .lines()
+        .find(|l| l.starts_with("ok status bad"))
+        .unwrap_or_else(|| panic!("no status for bad:\n{reply}"));
+    assert!(
+        status_bad.contains("done=true") && status_bad.contains("failed="),
+        "failed session's status must carry done=true + the reason: {status_bad}"
+    );
+    let status_good = reply
+        .lines()
+        .find(|l| l.starts_with("ok status good"))
+        .unwrap_or_else(|| panic!("no status for good:\n{reply}"));
+    assert!(
+        status_good.contains("done=true") && !status_good.contains("failed="),
+        "healthy session's status reply changed: {status_good}"
+    );
+    assert!(
+        reply.lines().any(|l| l.starts_with("ok close good")),
+        "healthy session did not close cleanly:\n{reply}"
+    );
+    assert!(
+        reply
+            .lines()
+            .any(|l| l.starts_with("err ") && l.contains("failed")),
+        "close of the failed session must answer err with the reason:\n{reply}"
+    );
+    assert!(
+        dir_good.join("history").join("tuning_log.csv").is_file(),
+        "healthy session's tuning log missing"
+    );
+    for d in [dir_bad, dir_good] {
+        let _ = std::fs::remove_dir_all(d);
+    }
 }

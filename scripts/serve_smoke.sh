@@ -49,3 +49,47 @@ for i in $(seq 1 "$N"); do
 done
 
 echo "serve smoke ok: $N sessions opened, drained, closed; clean shutdown"
+
+# ---- crash tolerance: a poisoned session fails alone -------------------
+# A second daemon run with the hidden fault hook: every evaluation owned
+# by session `bad` panics in the worker, forever. The session must
+# exhaust its retry budget and land in the Failed terminal state while
+# its sibling (a different project, so no shared cache entries) drains,
+# closes and writes its logs untouched — and the daemon still answers a
+# clean shutdown. The distinct input sizes keep the two sessions' memo
+# keys disjoint, so the poison cannot leak through dedup.
+for p in bad good; do
+  dir="$work/poison_$p"
+  if [ "$p" = bad ]; then mb=1024; else mb=512; fi
+  ./target/debug/catla template --dir "$dir" --kind tuning --workload wordcount --input-mb "$mb" >/dev/null
+  printf 'optimizer=bobyqa\nbudget=6\nrepeats=1\nseed=7\n' > "$dir/tuning.properties"
+done
+
+{
+  echo "open bad $work/poison_bad"
+  echo "open good $work/poison_good"
+  echo "run"
+  echo "status bad"
+  echo "status good"
+  echo "close good"
+  echo "close bad"
+  echo "shutdown"
+} > "$work/poison_script.txt"
+
+pout="$work/poison_out.txt"
+./target/debug/catla serve --threads 2 --poison bad:999999 < "$work/poison_script.txt" > "$pout"
+
+grep -q '^ok status bad .*done=true failed=' "$pout" \
+  || { echo "poisoned session did not report Failed"; cat "$pout"; exit 1; }
+grep '^ok status good ' "$pout" | grep -q 'done=true' \
+  || { echo "sibling session did not drain"; cat "$pout"; exit 1; }
+if grep '^ok status good ' "$pout" | grep -q 'failed='; then
+  echo "sibling session was poisoned too"; cat "$pout"; exit 1
+fi
+grep -q '^ok close good ' "$pout" || { echo "sibling close failed"; cat "$pout"; exit 1; }
+grep -q '^err session bad failed:' "$pout" \
+  || { echo "close of the failed session should answer err"; cat "$pout"; exit 1; }
+grep -q '^ok shutdown$' "$pout" || { echo "no clean shutdown after a failed session"; cat "$pout"; exit 1; }
+[ -s "$work/poison_good/history/tuning_log.csv" ] || { echo "sibling tuning log missing"; exit 1; }
+
+echo "serve smoke ok: poisoned session failed alone, sibling drained clean"
