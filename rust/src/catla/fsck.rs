@@ -1,0 +1,530 @@
+//! `catla fsck <dir>`: validate (and with `--repair`, fix) a project's
+//! history directory after a crash.
+//!
+//! Everything Catla persists is either atomically replaced or
+//! append-only (see `util/durable.rs`), so the only damage a kill at any
+//! instant can leave behind is *suffix* damage — a stray `.tmp` sibling,
+//! a torn final CSV line, a torn final journal record — plus at most one
+//! in-doubt summary row for a `fin`-marked journal. fsck classifies
+//! exactly those cases as repairable; anything else (a bad record with a
+//! valid one after it, a ragged interior CSV row) cannot be produced by
+//! a crash and is reported as a hard problem, never silently "fixed".
+//!
+//! Repairs, per finding:
+//! * stray `.<name>.tmp` → removed (the rename never happened; the real
+//!   file is either the old version or the new one, both consistent);
+//! * torn final CSV line → file truncated back to the last newline;
+//! * torn final journal record → journal truncated to its clean prefix;
+//! * journal with no complete record (the crash tore the very first,
+//!   header append) → removed;
+//! * non-finalized journal → *materialized*: the checkpoint is rendered
+//!   to its plain tuning CSV (byte-identical to what the session's own
+//!   finalize would write for those evaluations) and the journal
+//!   retired, so legacy CSV resume, `aggregate` and `ui` all see the
+//!   work; this is also the escape hatch when tuning settings changed
+//!   underneath a journal (re-drive would refuse);
+//! * finalized journal (`fin` present: the final CSV is already durable)
+//!   → the summary row is appended if missing, then the journal retired.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::catla::history::History;
+use crate::catla::journal::{Journal, JOURNAL_SUFFIX};
+use crate::util::csv::Csv;
+use crate::util::durable;
+
+/// What a scan found and (optionally) fixed.
+#[derive(Debug, Default)]
+pub struct FsckReport {
+    /// Files examined.
+    pub scanned: usize,
+    /// Repairs applied (only ever non-zero with `repair = true`).
+    pub repaired: usize,
+    /// Repairable findings (torn tails, stray tmp files, pending
+    /// journals) — informational without `--repair`.
+    pub warnings: Vec<String>,
+    /// Hard corruption that cannot be crash damage; fsck refuses to
+    /// guess and the CLI exits non-zero while any remain.
+    pub problems: Vec<String>,
+}
+
+impl fmt::Display for FsckReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "fsck: {} file(s) scanned, {} repair(s) applied, {} warning(s), {} problem(s)",
+            self.scanned,
+            self.repaired,
+            self.warnings.len(),
+            self.problems.len()
+        )?;
+        for w in &self.warnings {
+            writeln!(f, "warning {w}")?;
+        }
+        for p in &self.problems {
+            writeln!(f, "problem {p}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One record of a materialized checkpoint: the folded runtime plus the
+/// per-parameter display cells, in log-column order.
+struct MatRec {
+    value: f64,
+    cells: Vec<String>,
+}
+
+/// Rebuild the evaluation sequence a journal checkpoints, exactly as the
+/// live session records it: the CSV prior prefix (values re-parsed from
+/// the rounded log, like `DriverSession::replay` does), then the slice
+/// evals in order with the driver's early-stop rule applied — a told
+/// slice may contain evals past the stopping point, which the driver
+/// never records.
+fn materialized_records(j: &Journal, prior_rows: &[Vec<String>], vi: usize, dims: &[usize]) -> Result<Vec<MatRec>, String> {
+    let mut recs = Vec::new();
+    for row in prior_rows {
+        let value: f64 = row[vi].parse().map_err(|_| "bad runtime cell in prior log row")?;
+        recs.push(MatRec {
+            value,
+            cells: dims.iter().map(|&i| row[i].clone()).collect(),
+        });
+    }
+    let mut best = recs.iter().map(|r| r.value).fold(f64::INFINITY, f64::min);
+    let mut stall = 0usize;
+    let patience = j.header.early_patience;
+    'slices: for slice in &j.slices {
+        for (value, cfg) in &slice.evals {
+            if patience > 0 {
+                if *value < best * (1.0 - j.header.early_tol) {
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+            }
+            best = best.min(*value);
+            recs.push(MatRec {
+                value: *value,
+                cells: cfg.iter().map(|v| format!("{v}")).collect(),
+            });
+            if patience > 0 && stall >= patience {
+                break 'slices;
+            }
+        }
+    }
+    Ok(recs)
+}
+
+/// Render a journal's checkpoint as the plain tuning CSV its session
+/// would write — same columns, same `{:.3}` rounding, same running
+/// best — and atomically replace `log_path` with it.
+fn materialize_log(j: &Journal, log_path: &Path) -> Result<(), String> {
+    let mut header = vec![
+        "iter".to_string(),
+        "optimizer".to_string(),
+        "runtime_s".to_string(),
+        "best_so_far".to_string(),
+    ];
+    header.extend(j.header.params.iter().cloned());
+
+    // the prior prefix comes from the existing log's clean rows
+    let prior_rows: Vec<Vec<String>> = if j.header.prior > 0 {
+        let (csv, _torn) = Csv::load_tolerant(log_path)
+            .map_err(|e| format!("prior log needed by the journal is unreadable: {e}"))?;
+        if csv.rows.len() < j.header.prior {
+            return Err(format!(
+                "journal expects {} prior rows but the log has only {}",
+                j.header.prior,
+                csv.rows.len()
+            ));
+        }
+        let vi = csv
+            .col_index("runtime_s")
+            .ok_or("prior log missing runtime_s")?;
+        let dims: Vec<usize> = j
+            .header
+            .params
+            .iter()
+            .map(|p| {
+                csv.col_index(p)
+                    .ok_or_else(|| format!("prior log missing column {p}"))
+            })
+            .collect::<Result<_, _>>()?;
+        // re-order the prior cells into the journal's column order
+        csv.rows[..j.header.prior]
+            .iter()
+            .map(|row| {
+                let mut out = vec![row[vi].clone()];
+                out.extend(dims.iter().map(|&i| row[i].clone()));
+                out
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    // prior_rows now hold [runtime, params...]; adapt indices
+    let recs = materialized_records(
+        j,
+        &prior_rows,
+        0,
+        &(1..=j.header.params.len()).collect::<Vec<_>>(),
+    )?;
+
+    let mut csv = Csv {
+        header,
+        rows: Vec::new(),
+    };
+    let mut best = f64::INFINITY;
+    for (i, r) in recs.iter().enumerate() {
+        best = best.min(r.value);
+        let mut row = vec![
+            (i + 1).to_string(),
+            j.header.label.clone(),
+            format!("{:.3}", r.value),
+            format!("{best:.3}"),
+        ];
+        row.extend(r.cells.iter().cloned());
+        csv.push_row(row);
+    }
+    csv.save(log_path).map_err(|e| e.to_string())
+}
+
+/// Append the summary row a finalized journal's crashed finalize may not
+/// have gotten to (exactly-once: skipped when the rendered row already
+/// exists).
+fn complete_summary(j: &Journal, history: &History, log_path: &Path) -> Result<bool, String> {
+    let mut header = vec![
+        "optimizer".to_string(),
+        "evals".to_string(),
+        "best_runtime_s".to_string(),
+    ];
+    header.extend(j.header.params.iter().map(|p| format!("best.{p}")));
+
+    let prior_rows: Vec<Vec<String>> = if j.header.prior > 0 {
+        let (csv, _torn) = Csv::load_tolerant(log_path)
+            .map_err(|e| format!("final log needed by the journal is unreadable: {e}"))?;
+        let vi = csv.col_index("runtime_s").ok_or("final log missing runtime_s")?;
+        let dims: Vec<usize> = j
+            .header
+            .params
+            .iter()
+            .map(|p| csv.col_index(p).ok_or_else(|| format!("final log missing column {p}")))
+            .collect::<Result<_, _>>()?;
+        if csv.rows.len() < j.header.prior {
+            return Err(format!(
+                "journal expects {} prior rows but the log has only {}",
+                j.header.prior,
+                csv.rows.len()
+            ));
+        }
+        csv.rows[..j.header.prior]
+            .iter()
+            .map(|row| {
+                let mut out = vec![row[vi].clone()];
+                out.extend(dims.iter().map(|&i| row[i].clone()));
+                out
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let recs = materialized_records(
+        j,
+        &prior_rows,
+        0,
+        &(1..=j.header.params.len()).collect::<Vec<_>>(),
+    )?;
+    let best = recs
+        .iter()
+        .min_by(|a, b| a.value.total_cmp(&b.value))
+        .ok_or("finalized journal holds no evaluations")?;
+    let mut row = vec![
+        j.header.label.clone(),
+        recs.len().to_string(),
+        format!("{:.3}", best.value),
+    ];
+    row.extend(best.cells.iter().cloned());
+    history.append_summary_row_if_missing(&header, &row)
+}
+
+/// Scan (and with `repair`, fix) one project directory's history. The
+/// project root is accepted too — fsck looks at `<dir>/history` if it
+/// exists, else treats `<dir>` itself as the history directory.
+pub fn fsck_dir(dir: &Path, repair: bool) -> Result<FsckReport, String> {
+    let hist_dir = if dir.join("history").is_dir() {
+        dir.join("history")
+    } else {
+        dir.to_path_buf()
+    };
+    let mut report = FsckReport::default();
+    if !hist_dir.is_dir() {
+        report
+            .warnings
+            .push(format!("{}: no history directory", hist_dir.display()));
+        return Ok(report);
+    }
+    // deterministic scan order (read_dir order is filesystem-dependent);
+    // a CSV sorts before its `<csv>.journal` sibling, so torn logs are
+    // repaired before the journal that reads them is processed
+    let mut names: Vec<String> = std::fs::read_dir(&hist_dir)
+        .map_err(|e| format!("{}: {e}", hist_dir.display()))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().is_file())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .collect();
+    names.sort();
+
+    for name in &names {
+        let path = hist_dir.join(name);
+        report.scanned += 1;
+
+        // stray atomic-write staging file: the rename never happened
+        if name.starts_with('.') && name.ends_with(".tmp") {
+            report.warnings.push(format!(
+                "{}: stray atomic-write staging file (crash between write and rename)",
+                path.display()
+            ));
+            if repair {
+                std::fs::remove_file(&path).map_err(|e| e.to_string())?;
+                report.repaired += 1;
+            }
+            continue;
+        }
+
+        if let Some(log_name) = name.strip_suffix(JOURNAL_SUFFIX) {
+            let log_path = hist_dir.join(log_name);
+            match Journal::load(&path) {
+                Err(e) => report.problems.push(e),
+                Ok(None) => {
+                    report.warnings.push(format!(
+                        "{}: journal with no complete record (crash tore the first append)",
+                        path.display()
+                    ));
+                    if repair {
+                        std::fs::remove_file(&path).map_err(|e| e.to_string())?;
+                        report.repaired += 1;
+                    }
+                }
+                Ok(Some(j)) => {
+                    if j.torn_bytes > 0 {
+                        report.warnings.push(format!(
+                            "{}: torn final journal record ({} bytes)",
+                            path.display(),
+                            j.torn_bytes
+                        ));
+                        if repair {
+                            durable::truncate_to(&path, j.clean_len).map_err(|e| e.to_string())?;
+                            report.repaired += 1;
+                        }
+                    }
+                    let history = History {
+                        dir: hist_dir.clone(),
+                    };
+                    if j.finalized {
+                        report.warnings.push(format!(
+                            "{}: finalized journal pending cleanup (summary row may be missing)",
+                            path.display()
+                        ));
+                        if repair {
+                            match complete_summary(&j, &history, &log_path) {
+                                Ok(_appended) => {
+                                    std::fs::remove_file(&path).map_err(|e| e.to_string())?;
+                                    durable::fsync_dir(&hist_dir);
+                                    report.repaired += 1;
+                                }
+                                Err(e) => report.problems.push(format!("{}: {e}", path.display())),
+                            }
+                        }
+                    } else {
+                        report.warnings.push(format!(
+                            "{}: interrupted-session journal ({} slice(s)); reopen in `catla serve` \
+                             to resume exactly, or --repair to materialize the checkpoint log",
+                            path.display(),
+                            j.slices.len()
+                        ));
+                        if repair {
+                            match materialize_log(&j, &log_path) {
+                                Ok(()) => {
+                                    std::fs::remove_file(&path).map_err(|e| e.to_string())?;
+                                    durable::fsync_dir(&hist_dir);
+                                    report.repaired += 1;
+                                }
+                                Err(e) => report.problems.push(format!("{}: {e}", path.display())),
+                            }
+                        }
+                    }
+                }
+            }
+            continue;
+        }
+
+        if name.ends_with(".csv") {
+            match Csv::load_tolerant(&path) {
+                Err(e) => report
+                    .problems
+                    .push(format!("{}: {e} (mid-file corruption, not crash damage)", path.display())),
+                Ok((_csv, Some(warn))) => {
+                    report.warnings.push(warn);
+                    if repair {
+                        let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+                        let keep = bytes
+                            .iter()
+                            .rposition(|&b| b == b'\n')
+                            .map(|i| i + 1)
+                            .unwrap_or(0);
+                        durable::truncate_to(&path, keep as u64).map_err(|e| e.to_string())?;
+                        report.repaired += 1;
+                    }
+                }
+                Ok((_csv, None)) => {}
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::catla::history::TUNING_CSV;
+    use crate::catla::journal;
+    use crate::catla::optimizer_runner::TuningSettings;
+    use crate::config::params::HadoopConfig;
+    use crate::config::spec::TuningSpec;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-fsck-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(d.join("history")).unwrap();
+        d
+    }
+
+    fn settings() -> TuningSettings {
+        TuningSettings {
+            optimizer: "bobyqa".into(),
+            budget: 8,
+            repeats: 1,
+            seed: 7,
+            prescreen: false,
+            early_patience: 0,
+            early_tol: 1e-3,
+            batch_chunk: 8,
+            cache_entries: None,
+            retry_max: 0,
+            retry_backoff_ms: 0,
+        }
+    }
+
+    fn write_journal(dir: &Path, finalized: bool) -> PathBuf {
+        let spec = TuningSpec::fig2();
+        let hist = dir.join("history");
+        let jpath = journal::journal_path(&hist, TUNING_CSV);
+        let mut cfg = HadoopConfig::default();
+        cfg.set(spec.ranges[0].index, 8.0);
+        durable::append_framed(&jpath, &journal::header_payload(&settings(), "bobyqa", &spec, 0), "x").unwrap();
+        durable::append_framed(&jpath, &journal::slice_payload(false, &spec, &[cfg.clone()], &[120.5]), "x").unwrap();
+        let mut cfg2 = cfg.clone();
+        cfg2.set(spec.ranges[0].index, 12.0);
+        durable::append_framed(&jpath, &journal::slice_payload(false, &spec, &[cfg2], &[98.25]), "x").unwrap();
+        if finalized {
+            durable::append_framed(&jpath, journal::FIN, "x").unwrap();
+        }
+        jpath
+    }
+
+    #[test]
+    fn clean_history_scans_clean() {
+        let dir = tmp("clean");
+        std::fs::write(dir.join("history").join(TUNING_CSV), "iter,optimizer,runtime_s,best_so_far\n").unwrap();
+        let r = fsck_dir(&dir, false).unwrap();
+        assert!(r.warnings.is_empty() && r.problems.is_empty(), "{r}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repair_materializes_an_interrupted_journal() {
+        let dir = tmp("materialize");
+        let jpath = write_journal(&dir, false);
+
+        // dry run: reported, nothing touched
+        let r = fsck_dir(&dir, false).unwrap();
+        assert_eq!(r.repaired, 0);
+        assert!(r.warnings.iter().any(|w| w.contains("interrupted-session journal")), "{r}");
+        assert!(jpath.is_file());
+
+        let r = fsck_dir(&dir, true).unwrap();
+        assert!(r.problems.is_empty(), "{r}");
+        assert!(r.repaired > 0);
+        assert!(!jpath.is_file(), "repair must retire the journal");
+        let csv = Csv::load(&dir.join("history").join(TUNING_CSV)).unwrap();
+        assert_eq!(csv.rows.len(), 2);
+        assert_eq!(csv.rows[0][2], "120.500");
+        assert_eq!(csv.rows[1][3], "98.250", "running best not recomputed");
+        assert_eq!(csv.rows[1][1], "bobyqa");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repair_completes_a_finalized_journal_summary_exactly_once() {
+        let dir = tmp("fin-summary");
+        write_journal(&dir, true);
+        // the final log fin guarantees is durable — materialize it here
+        // the same way the crashed finalize would have
+        std::fs::write(
+            dir.join("history").join(TUNING_CSV),
+            "iter,optimizer,runtime_s,best_so_far,mapreduce.job.reduces,mapreduce.task.io.sort.mb\n\
+             1,bobyqa,120.500,120.500,8,100\n2,bobyqa,98.250,98.250,12,100\n",
+        )
+        .unwrap();
+        let r = fsck_dir(&dir, true).unwrap();
+        assert!(r.problems.is_empty(), "{r}");
+        let summary = std::fs::read_to_string(dir.join("history").join(SUMMARY_CSV)).unwrap();
+        assert_eq!(summary.lines().count(), 2, "header + exactly one row:\n{summary}");
+        assert!(summary.lines().nth(1).unwrap().starts_with("bobyqa,2,98.250"), "{summary}");
+        // a second repair pass finds a clean directory
+        let r = fsck_dir(&dir, true).unwrap();
+        assert_eq!(r.repaired, 0, "{r}");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("history").join(SUMMARY_CSV)).unwrap(),
+            summary,
+            "summary must not grow on re-fsck"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tails_and_stray_tmp_are_repaired_corruption_is_not() {
+        let dir = tmp("torn");
+        let hist = dir.join("history");
+        std::fs::write(hist.join("aux_log.csv"), "iter,runtime_s\n1,120.5\n2,98.").unwrap();
+        std::fs::write(hist.join(".summary.csv.tmp"), "half-staged").unwrap();
+        let jpath = write_journal(&dir, false);
+        // tear the journal's final record mid-line
+        let bytes = std::fs::read(&jpath).unwrap();
+        std::fs::write(&jpath, &bytes[..bytes.len() - 7]).unwrap();
+
+        let r = fsck_dir(&dir, true).unwrap();
+        assert!(r.problems.is_empty(), "{r}");
+        assert!(!hist.join(".summary.csv.tmp").exists());
+        assert_eq!(
+            std::fs::read_to_string(hist.join("aux_log.csv")).unwrap(),
+            "iter,runtime_s\n1,120.5\n",
+            "torn CSV tail must be truncated byte-exactly"
+        );
+        // journal survived with one clean slice and was then materialized
+        let csv = Csv::load(&hist.join(TUNING_CSV)).unwrap();
+        assert_eq!(csv.rows.len(), 1, "only the clean journal prefix materializes");
+
+        // mid-file corruption: flip a byte in the FIRST journal record
+        // while a valid one follows — must be a problem, not a repair
+        let jpath = write_journal(&dir, false);
+        let mut bytes = std::fs::read(&jpath).unwrap();
+        bytes[2] ^= 0xFF;
+        std::fs::write(&jpath, &bytes).unwrap();
+        let r = fsck_dir(&dir, false).unwrap();
+        assert!(!r.problems.is_empty(), "corruption slipped through: {r}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -12,6 +12,7 @@ use crate::catla::metrics::JobMetrics;
 use crate::config::spec::TuningSpec;
 use crate::optim::result::{EvalRecord, TuningOutcome};
 use crate::util::csv::Csv;
+use crate::util::durable;
 
 pub const JOBS_CSV: &str = "jobs.csv";
 pub const TUNING_CSV: &str = "tuning_log.csv";
@@ -45,14 +46,13 @@ impl History {
     }
 
     /// Append one completed job to `jobs.csv` (creates it on first use).
+    /// Append-only with write-header-once semantics: the header goes in
+    /// via an exclusive create, each row is one O_APPEND write — so
+    /// concurrent writers (sharded sweeps, parallel serve sessions)
+    /// interleave rows instead of clobbering each other through the old
+    /// read-modify-rewrite.
     pub fn append_job(&self, m: &JobMetrics) -> Result<(), String> {
-        let path = self.dir.join(JOBS_CSV);
-        let mut csv = if path.is_file() {
-            Csv::load(&path)?
-        } else {
-            Csv::new(&Self::jobs_header())
-        };
-        csv.push_row(vec![
+        let row = vec![
             m.job_id.clone(),
             m.workload.clone(),
             format!("{:.3}", m.runtime_s),
@@ -63,8 +63,47 @@ impl History {
             m.failed_attempts.to_string(),
             format!("{:.4}", m.data_local_fraction),
             format!("{:.1}", m.shuffle_mb),
-        ]);
-        csv.save(&path).map_err(|e| e.to_string())
+        ];
+        let header: Vec<String> = Self::jobs_header().iter().map(|s| s.to_string()).collect();
+        Self::append_row(
+            &self.dir.join(JOBS_CSV),
+            &header,
+            &row,
+            "jobs.mid-append",
+            "jobs.csv header mismatch (written by a different Catla version?)",
+        )
+    }
+
+    /// The shared append-only CSV primitive: exclusive-create the file
+    /// with its header (first writer wins), validate an existing file's
+    /// header, then append the row as a single durable write. The
+    /// `mid_point` crash hook can tear the row append in half — which is
+    /// exactly the torn tail [`Csv::load_tolerant`] and `catla fsck`
+    /// repair.
+    fn append_row(
+        path: &std::path::Path,
+        header: &[String],
+        row: &[String],
+        mid_point: &str,
+        mismatch_err: &str,
+    ) -> Result<(), String> {
+        let header_line = Csv::render_row(header);
+        let row_line = Csv::render_row(row);
+        let created = durable::create_excl(path, header_line.as_bytes()).map_err(|e| e.to_string())?;
+        if !created {
+            let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+            match text.lines().next() {
+                // a zero-length leftover (crashed before the header
+                // write landed): seed the header through the append
+                None => durable::append_bytes(path, header_line.as_bytes(), mid_point)
+                    .map_err(|e| e.to_string())?,
+                Some(first) if first != header_line.trim_end() => {
+                    return Err(mismatch_err.into());
+                }
+                Some(_) => {}
+            }
+        }
+        durable::append_bytes(path, row_line.as_bytes(), mid_point).map_err(|e| e.to_string())
     }
 
     pub fn load_jobs(&self) -> Result<Csv, String> {
@@ -143,13 +182,7 @@ impl History {
         Ok(path)
     }
 
-    /// Append a summary row (one per tuning run) to `summary.csv`.
-    pub fn append_summary(
-        &self,
-        spec: &TuningSpec,
-        outcome: &TuningOutcome,
-    ) -> Result<(), String> {
-        let path = self.dir.join(SUMMARY_CSV);
+    fn summary_header(spec: &TuningSpec) -> Vec<String> {
         let mut header = vec![
             "optimizer".to_string(),
             "evals".to_string(),
@@ -158,17 +191,10 @@ impl History {
         for r in &spec.ranges {
             header.push(format!("best.{}", r.name()));
         }
-        let mut csv = if path.is_file() {
-            Csv::load(&path)?
-        } else {
-            Csv {
-                header: header.clone(),
-                rows: Vec::new(),
-            }
-        };
-        if csv.header != header {
-            return Err("summary.csv header mismatch (different params.spec?)".into());
-        }
+        header
+    }
+
+    fn summary_row(spec: &TuningSpec, outcome: &TuningOutcome) -> Vec<String> {
         let mut row = vec![
             outcome.optimizer.clone(),
             outcome.evals().to_string(),
@@ -177,13 +203,88 @@ impl History {
         for r in &spec.ranges {
             row.push(format!("{}", outcome.best_config.get(r.index)));
         }
-        csv.push_row(row);
-        csv.save(&path).map_err(|e| e.to_string())
+        row
+    }
+
+    /// Append a summary row (one per tuning run) to `summary.csv`.
+    /// Append-only, write-header-once: concurrent runs (sharded sweeps,
+    /// parallel serve sessions) each add their row with a single
+    /// O_APPEND write, so the old read-modify-rewrite lost-update — two
+    /// finishers both loading N rows and both writing back N+1 — cannot
+    /// happen.
+    pub fn append_summary(
+        &self,
+        spec: &TuningSpec,
+        outcome: &TuningOutcome,
+    ) -> Result<(), String> {
+        Self::append_row(
+            &self.dir.join(SUMMARY_CSV),
+            &Self::summary_header(spec),
+            &Self::summary_row(spec, outcome),
+            "summary.mid-append",
+            "summary.csv header mismatch (different params.spec?)",
+        )
+    }
+
+    /// Crash-recovery variant of [`History::append_summary`]: repair a
+    /// torn final line first, then append the outcome's row only if that
+    /// exact rendered row is not already present. Used when resuming a
+    /// `fin`-marked journal — the crash landed somewhere between "final
+    /// log durable" and "journal removed", so the summary row may have
+    /// been written zero times, torn in half, or written completely.
+    /// Returns whether a row was appended.
+    pub fn append_summary_if_missing(
+        &self,
+        spec: &TuningSpec,
+        outcome: &TuningOutcome,
+    ) -> Result<bool, String> {
+        self.append_summary_row_if_missing(
+            &Self::summary_header(spec),
+            &Self::summary_row(spec, outcome),
+        )
+    }
+
+    /// Row-level [`History::append_summary_if_missing`] — `catla fsck`
+    /// reconstructs the row from a journal rather than a live outcome.
+    pub fn append_summary_row_if_missing(
+        &self,
+        header: &[String],
+        row: &[String],
+    ) -> Result<bool, String> {
+        let path = self.dir.join(SUMMARY_CSV);
+        let row_line = Csv::render_row(row);
+        if path.is_file() {
+            let bytes = std::fs::read(&path).map_err(|e| e.to_string())?;
+            if !bytes.is_empty() && !bytes.ends_with(b"\n") {
+                // torn mid-append: drop the partial final line
+                let keep = bytes.iter().rposition(|&b| b == b'\n').map(|i| i + 1).unwrap_or(0);
+                durable::truncate_to(&path, keep as u64).map_err(|e| e.to_string())?;
+            }
+            let text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
+            if text.lines().any(|l| l == row_line.trim_end()) {
+                return Ok(false);
+            }
+        }
+        Self::append_row(
+            &path,
+            header,
+            row,
+            "summary.mid-append",
+            "summary.csv header mismatch (different params.spec?)",
+        )?;
+        Ok(true)
     }
 
     /// Load the tuning log back (resume / aggregate / visualize).
     pub fn load_tuning_log(&self) -> Result<Csv, String> {
         Csv::load(&self.dir.join(TUNING_CSV))
+    }
+
+    /// Crash-tolerant tuning-log load: a torn final line (killed
+    /// mid-write) is dropped and reported as a warning instead of
+    /// failing the parse. See [`Csv::load_tolerant`].
+    pub fn load_tuning_log_tolerant(&self) -> Result<(Csv, Option<String>), String> {
+        Csv::load_tolerant(&self.dir.join(TUNING_CSV))
     }
 
     /// Convergence series (iter, best_so_far) from a stored log.
@@ -245,6 +346,43 @@ mod tests {
         let csv = Csv::load(&h.dir.join(SUMMARY_CSV)).unwrap();
         assert_eq!(csv.rows.len(), 2);
         assert_eq!(csv.col_f64("best_runtime_s").unwrap(), vec![100.0, 95.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summary_recovery_repairs_torn_tail_and_appends_once() {
+        let dir = tmp("summary-recover");
+        let h = History::open(&dir).unwrap();
+        let spec = TuningSpec::fig2();
+        let done = outcome(&spec, &[120.0, 100.0]);
+        h.append_summary(&spec, &done).unwrap();
+
+        // already present → no duplicate row
+        assert!(!h.append_summary_if_missing(&spec, &done).unwrap());
+        assert_eq!(Csv::load(&h.dir.join(SUMMARY_CSV)).unwrap().rows.len(), 1);
+
+        // torn mid-append (partial final line, no newline) → repaired,
+        // then the missing row is appended exactly once
+        let path = h.dir.join(SUMMARY_CSV);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(b"bobyqa,2,99.9"); // torn half-row
+        std::fs::write(&path, &bytes).unwrap();
+        let other = outcome(&spec, &[130.0, 95.0]);
+        assert!(h.append_summary_if_missing(&spec, &other).unwrap());
+        let csv = Csv::load(&path).unwrap();
+        assert_eq!(csv.rows.len(), 2);
+        assert_eq!(csv.col_f64("best_runtime_s").unwrap(), vec![100.0, 95.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summary_header_mismatch_is_a_hard_error() {
+        let dir = tmp("summary-mismatch");
+        let h = History::open(&dir).unwrap();
+        let spec = TuningSpec::fig2();
+        std::fs::write(h.dir.join(SUMMARY_CSV), "who,what\n").unwrap();
+        let err = h.append_summary(&spec, &outcome(&spec, &[120.0])).unwrap_err();
+        assert!(err.contains("summary.csv header mismatch"), "{err}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,375 @@
+//! The per-session checkpoint journal: an append-only, CRC-trailered
+//! record log (`history/<log>.journal`) the serve daemon writes one
+//! record to per completed slice, replacing the old rewrite-the-whole-CSV
+//! checkpoint (which was O(n²) bytes over a session's lifetime and could
+//! tear on a crash).
+//!
+//! Recovery is *re-drive*, not state reload: `ServeSession::open` builds
+//! a fresh optimizer, replays any CSV prior the original session had,
+//! then re-asks the optimizer slice by slice, verifying each re-asked
+//! config bit-for-bit against the journal record and telling back the
+//! journaled values (exact `f64` bits). Because every optimizer is
+//! deterministic given (settings, seed, told values), the re-driven
+//! session is in the *identical* internal state the crashed one was —
+//! which is what makes the resumed outcome byte-identical to an
+//! uninterrupted run, a bar the old `PriorRuns` replay (fresh optimizer
+//! told a flat history) could not meet mid-run.
+//!
+//! Record payloads are single tab-separated lines (framed + CRC'd by
+//! [`crate::util::durable::append_framed`]):
+//!
+//! * `catla-journal v1 <optimizer> <label> <seed> <budget> <repeats>
+//!   <chunk> <patience> <tol-bits> <prior> <params>` — written once,
+//!   before the first slice; `prior` is the number of tuning-log CSV
+//!   rows the session replayed at open, `params` the comma-joined spec
+//!   range names. [`Journal::check_header`] refuses to re-drive under
+//!   different settings (determinism would silently break).
+//! * `slice <s|x> <eval>...` — one per told slice; `s` slices consumed
+//!   simulator seeds, `x` (external ask/tell) did not. Each eval is
+//!   `<value-bits>:<cfg-bits,...>` — full-precision hex bits of the
+//!   folded value and of each spec-range config value.
+//! * `fin` — the run finalized: the final tuning CSV is durably on disk
+//!   (it is written *before* `fin`), the summary row may or may not be.
+//!   Recovery appends the summary row only if missing, then removes the
+//!   journal.
+
+use std::path::{Path, PathBuf};
+
+use crate::catla::optimizer_runner::TuningSettings;
+use crate::config::params::HadoopConfig;
+use crate::config::spec::TuningSpec;
+use crate::util::durable;
+
+const MAGIC: &str = "catla-journal v1";
+pub const FIN: &str = "fin";
+pub const JOURNAL_SUFFIX: &str = ".journal";
+
+/// The journal sibling of a tuning log: `tuning_log.csv` →
+/// `tuning_log.csv.journal`, inside the same history directory.
+pub fn journal_path(hist_dir: &Path, log_name: &str) -> PathBuf {
+    hist_dir.join(format!("{log_name}{JOURNAL_SUFFIX}"))
+}
+
+/// Everything the header record pins about the run that wrote the
+/// journal — the deterministic inputs a re-drive must match exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalHeader {
+    pub optimizer: String,
+    pub label: String,
+    pub seed: u64,
+    pub budget: usize,
+    pub repeats: usize,
+    pub batch_chunk: usize,
+    pub early_patience: usize,
+    pub early_tol: f64,
+    /// Tuning-log CSV rows the session replayed as prior at open time.
+    pub prior: usize,
+    pub params: Vec<String>,
+}
+
+/// One told slice: the values fed to `tell_values` (exact bits) plus the
+/// per-spec-range config values of each candidate, for bitwise
+/// verification against the re-asked slice.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalSlice {
+    /// `true` for external ask/tell slices (no simulator seeds consumed).
+    pub external: bool,
+    /// `(folded value, config value per spec range)` per candidate.
+    pub evals: Vec<(f64, Vec<f64>)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Journal {
+    pub header: JournalHeader,
+    pub slices: Vec<JournalSlice>,
+    /// A `fin` record was present: the final tuning CSV is durable.
+    pub finalized: bool,
+    /// Byte length of the valid prefix (truncate here to repair a tear).
+    pub clean_len: u64,
+    /// Invalid trailing bytes (a torn crash mid-append); 0 when clean.
+    pub torn_bytes: u64,
+}
+
+/// Render the one-time header record payload.
+pub fn header_payload(
+    settings: &TuningSettings,
+    label: &str,
+    spec: &TuningSpec,
+    prior: usize,
+) -> String {
+    let params: Vec<&str> = spec.ranges.iter().map(|r| r.name()).collect();
+    format!(
+        "{MAGIC}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:016x}\t{}\t{}",
+        settings.optimizer,
+        label,
+        settings.seed,
+        settings.budget,
+        settings.repeats.max(1),
+        settings.batch_chunk,
+        settings.early_patience,
+        settings.early_tol.to_bits(),
+        prior,
+        params.join(",")
+    )
+}
+
+/// Render one slice record payload from the told slice.
+pub fn slice_payload(
+    external: bool,
+    spec: &TuningSpec,
+    cfgs: &[HadoopConfig],
+    vals: &[f64],
+) -> String {
+    debug_assert_eq!(cfgs.len(), vals.len());
+    let mut out = format!("slice\t{}", if external { "x" } else { "s" });
+    for (cfg, v) in cfgs.iter().zip(vals) {
+        let bits: Vec<String> = spec
+            .ranges
+            .iter()
+            .map(|r| format!("{:016x}", cfg.get(r.index).to_bits()))
+            .collect();
+        out.push('\t');
+        out.push_str(&format!("{:016x}:{}", v.to_bits(), bits.join(",")));
+    }
+    out
+}
+
+fn parse_bits(field: &str, what: &str) -> Result<f64, String> {
+    u64::from_str_radix(field, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("bad {what} bits {field:?}"))
+}
+
+fn parse_header(payload: &str) -> Result<JournalHeader, String> {
+    let f: Vec<&str> = payload.split('\t').collect();
+    if f.len() != 11 || f[0] != MAGIC {
+        return Err(format!("malformed journal header record ({} fields)", f.len()));
+    }
+    let num = |i: usize, what: &str| -> Result<usize, String> {
+        f[i].parse().map_err(|_| format!("bad {what} {:?} in journal header", f[i]))
+    };
+    Ok(JournalHeader {
+        optimizer: f[1].to_string(),
+        label: f[2].to_string(),
+        seed: f[3].parse().map_err(|_| format!("bad seed {:?} in journal header", f[3]))?,
+        budget: num(4, "budget")?,
+        repeats: num(5, "repeats")?,
+        batch_chunk: num(6, "batch.chunk")?,
+        early_patience: num(7, "early.patience")?,
+        early_tol: parse_bits(f[8], "early.tol")?,
+        prior: num(9, "prior")?,
+        params: if f[10].is_empty() {
+            Vec::new()
+        } else {
+            f[10].split(',').map(str::to_string).collect()
+        },
+    })
+}
+
+fn parse_slice(payload: &str, dims: usize) -> Result<JournalSlice, String> {
+    let mut f = payload.split('\t');
+    f.next(); // "slice"
+    let external = match f.next() {
+        Some("s") => false,
+        Some("x") => true,
+        other => return Err(format!("bad slice kind {other:?}")),
+    };
+    let mut evals = Vec::new();
+    for e in f {
+        let (vbits, cbits) = e
+            .split_once(':')
+            .ok_or_else(|| format!("malformed slice eval {e:?}"))?;
+        let value = parse_bits(vbits, "value")?;
+        let cfg: Vec<f64> = cbits
+            .split(',')
+            .map(|b| parse_bits(b, "config"))
+            .collect::<Result<_, _>>()?;
+        if cfg.len() != dims {
+            return Err(format!("slice eval has {} config dims, header declares {dims}", cfg.len()));
+        }
+        evals.push((value, cfg));
+    }
+    if evals.is_empty() {
+        return Err("slice record with no evaluations".into());
+    }
+    Ok(JournalSlice { external, evals })
+}
+
+impl Journal {
+    /// Load and parse a journal file. `Ok(None)` means nothing usable
+    /// survived (every record torn — possible only when the crash tore
+    /// the very first, header append): the caller discards the file and
+    /// proceeds as if no journal existed. Mid-file corruption — a valid
+    /// record after an invalid one, a non-header first record, a record
+    /// after `fin`, or an unparseable valid-CRC record — is a hard
+    /// error: it cannot be produced by a crash of the append-only
+    /// writer, so recovery refuses to guess.
+    pub fn load(path: &Path) -> Result<Option<Journal>, String> {
+        let log = durable::load_records(path)?;
+        if log.records.is_empty() {
+            return Ok(None);
+        }
+        let err = |i: usize, e: String| format!("{}: record {}: {e}", path.display(), i + 1);
+        let header = parse_header(&log.records[0]).map_err(|e| err(0, e))?;
+        let dims = header.params.len();
+        let mut slices = Vec::new();
+        let mut finalized = false;
+        for (i, rec) in log.records.iter().enumerate().skip(1) {
+            if finalized {
+                return Err(err(i, "record after fin — journal was tampered with".into()));
+            }
+            if rec == FIN {
+                finalized = true;
+            } else if rec.starts_with("slice\t") {
+                slices.push(parse_slice(rec, dims).map_err(|e| err(i, e))?);
+            } else {
+                return Err(err(i, format!("unknown record kind {:?}", rec.split('\t').next().unwrap_or(""))));
+            }
+        }
+        Ok(Some(Journal {
+            header,
+            slices,
+            finalized,
+            clean_len: log.clean_len,
+            torn_bytes: log.torn_bytes,
+        }))
+    }
+
+    /// Refuse to re-drive under settings that differ from the ones the
+    /// journal was written with — the re-asked candidate stream would
+    /// diverge and recovery would not be byte-identical.
+    pub fn check_header(&self, settings: &TuningSettings, spec: &TuningSpec) -> Result<(), String> {
+        let h = &self.header;
+        let params: Vec<String> = spec.ranges.iter().map(|r| r.name().to_string()).collect();
+        let mismatch: Option<(&str, String, String)> = if h.optimizer != settings.optimizer {
+            Some(("optimizer", h.optimizer.clone(), settings.optimizer.clone()))
+        } else if h.seed != settings.seed {
+            Some(("seed", h.seed.to_string(), settings.seed.to_string()))
+        } else if h.budget != settings.budget {
+            Some(("budget", h.budget.to_string(), settings.budget.to_string()))
+        } else if h.repeats != settings.repeats.max(1) {
+            Some(("repeats", h.repeats.to_string(), settings.repeats.max(1).to_string()))
+        } else if h.batch_chunk != settings.batch_chunk {
+            Some(("batch.chunk", h.batch_chunk.to_string(), settings.batch_chunk.to_string()))
+        } else if h.early_patience != settings.early_patience {
+            Some(("early.patience", h.early_patience.to_string(), settings.early_patience.to_string()))
+        } else if h.early_tol.to_bits() != settings.early_tol.to_bits() {
+            Some(("early.tol", h.early_tol.to_string(), settings.early_tol.to_string()))
+        } else if h.params != params {
+            Some(("params.spec", h.params.join(","), params.join(",")))
+        } else {
+            None
+        };
+        match mismatch {
+            Some((what, logged, now)) => Err(format!(
+                "checkpoint journal was written with a different {what} ({logged} vs {now}); \
+                 re-driving it under the new settings would not be deterministic — \
+                 run `catla fsck --repair` to materialize the checkpoint as a plain \
+                 tuning log and retire the journal, or restore the original settings"
+            )),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn settings() -> TuningSettings {
+        TuningSettings {
+            optimizer: "bobyqa".into(),
+            budget: 12,
+            repeats: 2,
+            seed: 7,
+            prescreen: false,
+            early_patience: 0,
+            early_tol: 1e-3,
+            batch_chunk: 8,
+            cache_entries: None,
+            retry_max: 0,
+            retry_backoff_ms: 0,
+        }
+    }
+
+    fn spec() -> TuningSpec {
+        TuningSpec::fig2()
+    }
+
+    fn journal_with(records: &[String], path: &Path) {
+        let _ = std::fs::remove_file(path);
+        for r in records {
+            durable::append_framed(path, r, "x").unwrap();
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-journal-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn header_and_slice_roundtrip_exact_bits() {
+        let dir = tmp("roundtrip");
+        let path = journal_path(&dir, "tuning_log.csv");
+        let sp = spec();
+        let st = settings();
+        let mut cfg = crate::config::params::HadoopConfig::default();
+        for (i, r) in sp.ranges.iter().enumerate() {
+            cfg.set(r.index, 2.0 + i as f64 * 0.1);
+        }
+        let vals = [123.456789012345_f64, 98.765432109876543_f64];
+        journal_with(
+            &[
+                header_payload(&st, "bobyqa", &sp, 3),
+                slice_payload(false, &sp, &[cfg.clone(), cfg.clone()], &vals),
+                slice_payload(true, &sp, &[cfg.clone()], &vals[..1]),
+            ],
+            &path,
+        );
+        let j = Journal::load(&path).unwrap().unwrap();
+        assert_eq!(j.header.label, "bobyqa");
+        assert_eq!(j.header.prior, 3);
+        assert!(!j.finalized);
+        assert_eq!(j.slices.len(), 2);
+        assert!(!j.slices[0].external);
+        assert!(j.slices[1].external);
+        assert_eq!(j.slices[0].evals[1].0.to_bits(), vals[1].to_bits());
+        for (r, got) in sp.ranges.iter().zip(&j.slices[0].evals[0].1) {
+            assert_eq!(got.to_bits(), cfg.get(r.index).to_bits());
+        }
+        j.check_header(&st, &sp).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fin_marks_finalized_and_trailing_records_are_corruption() {
+        let dir = tmp("fin");
+        let path = journal_path(&dir, "tuning_log.csv");
+        let header = header_payload(&settings(), "bobyqa", &spec(), 0);
+        journal_with(&[header.clone(), FIN.to_string()], &path);
+        assert!(Journal::load(&path).unwrap().unwrap().finalized);
+        journal_with(&[header, FIN.to_string(), FIN.to_string()], &path);
+        let err = Journal::load(&path).unwrap_err();
+        assert!(err.contains("after fin"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn all_torn_is_none_and_settings_drift_is_refused() {
+        let dir = tmp("drift");
+        let path = journal_path(&dir, "tuning_log.csv");
+        std::fs::write(&path, "half a torn header rec").unwrap();
+        assert!(Journal::load(&path).unwrap().is_none());
+
+        journal_with(&[header_payload(&settings(), "bobyqa", &spec(), 0)], &path);
+        let j = Journal::load(&path).unwrap().unwrap();
+        let mut changed = settings();
+        changed.seed = 8;
+        let err = j.check_header(&changed, &spec()).unwrap_err();
+        assert!(err.contains("different seed"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

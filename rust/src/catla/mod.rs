@@ -7,7 +7,9 @@
 
 pub mod aggregate;
 pub mod dashboard;
+pub mod fsck;
 pub mod history;
+pub mod journal;
 pub mod metrics;
 pub mod multi_job;
 pub mod optimizer_runner;

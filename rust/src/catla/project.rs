@@ -18,6 +18,7 @@ use crate::config::env::HadoopEnv;
 use crate::config::params::HadoopConfig;
 use crate::config::scope::ScopedSpec;
 use crate::config::spec::TuningSpec;
+use crate::util::durable::atomic_write;
 use crate::workloads::{self, WorkloadSpec};
 
 /// Key=value properties file (job.properties / tuning.properties).
@@ -231,27 +232,28 @@ pub fn create_template(
     job.set("workload", workload);
     job.set("input.mb", &format!("{input_mb}"));
     job.set("jar", &format!("{workload}.jar")); // cosmetic against a sim cluster
-    std::fs::write(dir.join("job.properties"), job.to_string()).map_err(|e| e.to_string())?;
+    atomic_write(&dir.join("job.properties"), job.to_string().as_bytes())
+        .map_err(|e| e.to_string())?;
     match kind {
         ProjectKind::Task => {}
         ProjectKind::Project => {
-            std::fs::write(
-                dir.join("jobs.list"),
+            atomic_write(
+                &dir.join("jobs.list"),
                 format!("# one job per line: <name> <workload> <input_mb> [conf.param=value ...]\n\
                          {workload}-small {workload} {}\n{workload}-large {workload} {}\n",
-                        input_mb / 4.0, input_mb),
+                        input_mb / 4.0, input_mb).as_bytes(),
             )
             .map_err(|e| e.to_string())?;
         }
         ProjectKind::Tuning => {
-            std::fs::write(dir.join("params.spec"), TuningSpec::fig3().to_string())
+            atomic_write(&dir.join("params.spec"), TuningSpec::fig3().to_string().as_bytes())
                 .map_err(|e| e.to_string())?;
             let mut t = Properties::default();
             t.set("optimizer", "bobyqa");
             t.set("budget", "60");
             t.set("repeats", "1");
             t.set("seed", "7");
-            std::fs::write(dir.join("tuning.properties"), t.to_string())
+            atomic_write(&dir.join("tuning.properties"), t.to_string().as_bytes())
                 .map_err(|e| e.to_string())?;
         }
     }
@@ -280,18 +282,19 @@ pub fn create_scoped_template(
         .collect::<Result<_, _>>()?;
     create_template(dir, ProjectKind::Tuning, &workloads[0].name, input_mb)?;
     let refs: Vec<&WorkloadSpec> = workloads.iter().collect();
-    std::fs::write(
-        dir.join("params.spec"),
-        workloads::suggested_scoped_spec(&refs),
+    atomic_write(
+        &dir.join("params.spec"),
+        workloads::suggested_scoped_spec(&refs).as_bytes(),
     )
     .map_err(|e| e.to_string())?;
     let jobs: String = workloads
         .iter()
         .map(|w| format!("{0}-job {0} {input_mb}\n", w.name))
         .collect();
-    std::fs::write(
-        dir.join("jobs.list"),
-        format!("# one job per line: <name> <workload> <input_mb> [conf.param=value ...]\n{jobs}"),
+    atomic_write(
+        &dir.join("jobs.list"),
+        format!("# one job per line: <name> <workload> <input_mb> [conf.param=value ...]\n{jobs}")
+            .as_bytes(),
     )
     .map_err(|e| e.to_string())?;
     Ok(())

@@ -13,6 +13,7 @@ use crate::catla::project::Project;
 use crate::catla::task_runner::TaskRunner;
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{Cluster, JobSubmission, JobStatus};
+use crate::util::durable::atomic_write;
 use crate::workloads::{self, WorkloadSpec};
 
 /// One parsed `jobs.list` entry.
@@ -120,12 +121,15 @@ impl<'a, C: Cluster> ProjectRunner<'a, C> {
             std::fs::create_dir_all(&logs_dir).map_err(|e| e.to_string())?;
             let artifacts = self.cluster.fetch_artifacts(id)?;
             let hist_path = job_dir.join(format!("{id}.history.json"));
-            std::fs::write(&hist_path, &artifacts.history_json).map_err(|e| e.to_string())?;
+            atomic_write(&hist_path, artifacts.history_json.as_bytes())
+                .map_err(|e| e.to_string())?;
             for (fname, content) in &artifacts.container_logs {
-                std::fs::write(logs_dir.join(fname), content).map_err(|e| e.to_string())?;
+                atomic_write(&logs_dir.join(fname), content.as_bytes())
+                    .map_err(|e| e.to_string())?;
             }
             for (fname, content) in &artifacts.outputs {
-                std::fs::write(job_dir.join(fname), content).map_err(|e| e.to_string())?;
+                atomic_write(&job_dir.join(fname), content.as_bytes())
+                    .map_err(|e| e.to_string())?;
             }
             let metrics = JobMetrics::from_file(&hist_path)?;
             history.append_job(&metrics)?;

@@ -142,7 +142,10 @@ pub fn best_logged_config(project: &Project) -> Result<Option<HadoopConfig>, Str
     let Ok(history) = History::open(&project.dir) else {
         return Ok(None);
     };
-    let Ok(csv) = history.load_tuning_log() else {
+    // tolerant: a log with a torn final line (killed mid-write) still
+    // yields its clean prefix — this helper is opportunistic, so an
+    // unreadable log degrades to None rather than an error
+    let Ok((csv, _torn)) = history.load_tuning_log_tolerant() else {
         return Ok(None);
     };
     let spec = logged_space_spec(project, &csv)?;
@@ -177,9 +180,25 @@ pub fn resume_tuning(
         ));
     }
     let history = History::open(&project.dir).map_err(|e| e.to_string())?;
-    let prior = match history.load_tuning_log() {
-        Ok(csv) => PriorRuns::from_log(&csv, &spec)?,
-        Err(_) => PriorRuns::default(),
+    let log_path = history.dir.join(crate::catla::history::TUNING_CSV);
+    // crash-tolerant prefix replay: a torn final line (the writer was
+    // killed mid-append) is dropped with a warning and the clean prefix
+    // resumes; anything structurally wrong INSIDE the log is mid-file
+    // corruption — a hard, explicit error, never a silent restart
+    let prior = if log_path.is_file() {
+        let (csv, torn) = history.load_tuning_log_tolerant().map_err(|e| {
+            format!(
+                "{}: {e} — corrupt tuning log; inspect it or run `catla fsck {}`",
+                log_path.display(),
+                project.dir.display()
+            )
+        })?;
+        if let Some(w) = torn {
+            eprintln!("warning: {w}");
+        }
+        PriorRuns::from_log(&csv, &spec)?
+    } else {
+        PriorRuns::default()
     };
     // one parser for tuning.properties everywhere: the resumed run
     // honors the same optimizer/seed/batch.chunk as the original, and a

@@ -10,6 +10,7 @@ use crate::catla::metrics::JobMetrics;
 use crate::catla::project::Project;
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{Cluster, JobStatus, JobSubmission};
+use crate::util::durable::atomic_write;
 
 /// Outcome of one Task-Runner execution.
 #[derive(Clone, Debug)]
@@ -73,12 +74,12 @@ impl<'a, C: Cluster> TaskRunner<'a, C> {
         std::fs::create_dir_all(&logs_dir).map_err(|e| e.to_string())?;
         let artifacts = self.cluster.fetch_artifacts(&job_id)?;
         let history_path = results_dir.join(format!("{job_id}.history.json"));
-        std::fs::write(&history_path, &artifacts.history_json).map_err(|e| e.to_string())?;
+        atomic_write(&history_path, artifacts.history_json.as_bytes()).map_err(|e| e.to_string())?;
         for (name, content) in &artifacts.container_logs {
-            std::fs::write(logs_dir.join(name), content).map_err(|e| e.to_string())?;
+            atomic_write(&logs_dir.join(name), content.as_bytes()).map_err(|e| e.to_string())?;
         }
         for (name, content) in &artifacts.outputs {
-            std::fs::write(results_dir.join(name), content).map_err(|e| e.to_string())?;
+            atomic_write(&results_dir.join(name), content.as_bytes()).map_err(|e| e.to_string())?;
         }
 
         // parse metrics and append to /history

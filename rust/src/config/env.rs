@@ -66,7 +66,7 @@ impl HadoopEnv {
     }
 
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        std::fs::write(path, self.to_string())
+        crate::util::durable::atomic_write(path, self.to_string().as_bytes())
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {

@@ -8,6 +8,7 @@
 //!   project    run a job group from jobs.list
 //!   tuning     run the Optimizer Runner on a tuning project
 //!   aggregate  re-aggregate logs after an interrupted run (§II.C.4)
+//!   fsck       validate (and --repair) a history directory after a crash
 //!   visualize  terminal charts + gnuplot scripts from /history CSVs
 //!   describe   show the (simulated) cluster a project targets
 
@@ -50,6 +51,11 @@ TOOLS
                                       space minimizing the DAG makespan
   ui        --dir <folder>            terminal dashboard (CatlaUI view)
   aggregate --dir <folder>            re-aggregate logs from /history
+  fsck      --dir <folder> [--repair] check a history directory for crash
+                                      damage; --repair truncates torn
+                                      tails, retires checkpoint journals
+                                      (materializing pending work), and
+                                      removes stray staging files
   visualize --dir <folder> [--gnuplot]  charts from history CSVs
   describe  --dir <folder>            show the cluster this project targets
   serve     [--threads N] [--cache-entries N] [--queue N]
@@ -433,12 +439,38 @@ fn run(args: &Args) -> Result<(), String> {
             if args.has_flag("gnuplot") {
                 let script = visualize::gnuplot_fig3("history/tuning_log.csv", "fig3.png");
                 let path = dir.join("history").join("fig3.gnuplot");
-                std::fs::write(&path, script).map_err(|e| e.to_string())?;
+                catla::util::durable::atomic_write(&path, script.as_bytes())
+                    .map_err(|e| e.to_string())?;
                 println!("wrote {}", path.display());
             }
             Ok(())
         }
+        "fsck" => {
+            let dir = project_dir(args)?;
+            let report = catla::catla::fsck::fsck_dir(&dir, args.has_flag("repair"))?;
+            print!("{report}");
+            if !report.problems.is_empty() {
+                return Err(format!(
+                    "{} unrepairable problem(s) — see above",
+                    report.problems.len()
+                ));
+            }
+            if !report.warnings.is_empty() && !args.has_flag("repair") {
+                println!("re-run with --repair to fix the {} warning(s)", report.warnings.len());
+            }
+            Ok(())
+        }
         "serve" => {
+            // hidden fault hook: --crash-at <point> (or CATLA_CRASH_AT)
+            // aborts the daemon the first time execution reaches the
+            // named durability point — the crash-matrix tests drive it
+            let crash_at = args
+                .opt("crash-at")
+                .map(str::to_string)
+                .or_else(|| std::env::var("CATLA_CRASH_AT").ok().filter(|s| !s.is_empty()));
+            if let Some(point) = crash_at {
+                catla::util::crashpoint::arm(&point)?;
+            }
             let threads: usize =
                 args.opt_parse_or("threads", catla::util::pool::default_threads())?;
             let cache_entries: usize =
@@ -486,7 +518,7 @@ fn force_prescreen(dir: &Path) -> Result<(), String> {
     let mut text = std::fs::read_to_string(&path).map_err(|e| e.to_string())?;
     if !text.contains("prescreen=") {
         text.push_str("prescreen=auto\n");
-        std::fs::write(&path, text).map_err(|e| e.to_string())?;
+        catla::util::durable::atomic_write(&path, text.as_bytes()).map_err(|e| e.to_string())?;
     }
     Ok(())
 }

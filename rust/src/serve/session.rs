@@ -19,14 +19,20 @@
 //! 3. [`ServeSession::complete`] folds repeats into per-config means
 //!    with the exact `ClusterObjective` expression.
 //!
-//! Sessions checkpoint their records to a per-session tuning log after
-//! every completed slice and resume through the existing replay
-//! machinery (`PriorRuns` → `DriverSession::replay`), so a killed daemon
-//! loses at most the in-flight slice.
+//! Sessions checkpoint by appending one CRC-trailered record per
+//! completed slice to `history/<log>.journal` (see [`crate::catla::journal`])
+//! — O(1) bytes per slice instead of the old rewrite-the-whole-CSV
+//! checkpoint. A killed daemon loses at most the in-flight slice:
+//! [`ServeSession::open`] re-drives the journal through a fresh
+//! optimizer (verifying every re-asked config bit-for-bit), so the
+//! recovered session is in the *identical* optimizer state and its
+//! final outcome is byte-identical to an uninterrupted run — pinned by
+//! the crash matrix in `rust/tests/crash_matrix.rs`.
 
 use std::path::{Path, PathBuf};
 
 use crate::catla::history::History;
+use crate::catla::journal::{self, Journal};
 use crate::catla::optimizer_runner::TuningSettings;
 use crate::catla::project::Project;
 use crate::catla::resume::PriorRuns;
@@ -37,6 +43,7 @@ use crate::optim::core::{DriverSession, EarlyStop};
 use crate::optim::{EvalRecord, Method, Optimizer, ParamSpace, TuningOutcome};
 use crate::util::csv::Csv;
 use crate::util::fingerprint::eval_fingerprint;
+use crate::util::{crashpoint, durable};
 use crate::workloads::WorkloadSpec;
 
 /// One simulation run a session wants evaluated: the memo-cache key, the
@@ -48,14 +55,16 @@ pub struct EvalJob {
     pub seed: u64,
 }
 
-/// What kind of evaluation the outstanding slice is waiting on.
+/// What kind of evaluation the outstanding slice is waiting on. Both
+/// variants keep the slice's decoded configs so the checkpoint journal
+/// can record them (for bitwise verification on recovery).
 enum Flight {
     /// Simulator jobs dispatched through the daemon (`runs` runtimes
     /// expected: one per config × repeat).
-    Sim { runs: usize },
+    Sim { runs: usize, cfgs: Vec<HadoopConfig> },
     /// Externally measured values (`ask`/`tell` protocol lines): one
     /// value per config, no simulator seeds consumed.
-    External,
+    External { cfgs: Vec<HadoopConfig> },
 }
 
 pub struct ServeSession {
@@ -87,6 +96,12 @@ pub struct ServeSession {
     /// Base retry backoff in ms (`serve.retry.backoff_ms`), scaled
     /// linearly by retry number by the dispatcher.
     pub retry_backoff_ms: u64,
+    /// Pre-rendered journal header record (see [`journal::header_payload`]),
+    /// appended lazily before the first checkpointed slice.
+    header_payload: String,
+    /// The journal file exists on disk with its header written (either
+    /// this session appended it, or recovery found it).
+    journal_started: bool,
     in_flight: Option<Flight>,
     finalized: bool,
     /// Terminal failure (evaluation retries exhausted, or a delivery
@@ -161,6 +176,7 @@ impl ServeSession {
         let mut driver = DriverSession::new(budget, early, settings.batch_chunk);
         driver.replay(opt.as_mut(), prior);
         let seed_counter = cluster.seed;
+        let header_payload = journal::header_payload(settings, &label, &spec, prior.len());
         Ok(ServeSession {
             id: id.to_string(),
             dir: None,
@@ -178,6 +194,8 @@ impl ServeSession {
             cache_entries: settings.cache_entries,
             retry_max: settings.retry_max,
             retry_backoff_ms: settings.retry_backoff_ms,
+            header_payload,
+            journal_started: false,
             in_flight: None,
             finalized: false,
             failed: None,
@@ -185,7 +203,23 @@ impl ServeSession {
     }
 
     /// Open a session over a tuning project directory, checkpointing to
-    /// `history/<log_name>` and resuming from it when it already exists.
+    /// `history/<log_name>.journal` and recovering from whatever a
+    /// previous (possibly killed) daemon left behind:
+    ///
+    /// * journal present → re-drive it (see the module docs): replay the
+    ///   CSV prior it declares, then re-ask the optimizer slice by
+    ///   slice, verifying configs bitwise and telling the journaled
+    ///   values. The recovered session keeps its original label, so its
+    ///   outcome is byte-identical to an uninterrupted run. A torn final
+    ///   record (the crash hit mid-append) is truncated with a one-line
+    ///   warning; mid-file corruption or changed settings are hard
+    ///   errors. A `fin`-marked journal means the final log is already
+    ///   durable: the summary row is appended only if missing and the
+    ///   journal retired.
+    /// * no journal, tuning log present → legacy resume through
+    ///   `PriorRuns` replay with the `[resumed@n]` label (the log alone
+    ///   cannot reconstruct optimizer state); a torn final CSV line is
+    ///   dropped with a warning.
     pub fn open(dir: &Path, id: &str, log_name: &str) -> Result<ServeSession, String> {
         let project = Project::load(dir)?;
         let settings = TuningSettings::from_project(&project)?;
@@ -204,16 +238,73 @@ impl ServeSession {
             .as_ref()
             .map(|s| s.warnings.clone())
             .unwrap_or_default();
-        let log_path = dir.join("history").join(log_name);
-        let prior = if log_path.is_file() {
-            let csv = Csv::load(&log_path)?;
-            let space = ParamSpace::new(spec.clone(), base.clone());
-            PriorRuns::from_log(&csv, &spec)?.to_records(&space)?
+        let hist_dir = dir.join("history");
+        let log_path = hist_dir.join(log_name);
+        let jpath = journal::journal_path(&hist_dir, log_name);
+        let mut recovery: Vec<String> = Vec::new();
+
+        let jrnl = if jpath.is_file() {
+            match Journal::load(&jpath)? {
+                Some(j) => {
+                    j.check_header(&settings, &spec)
+                        .map_err(|e| format!("{}: {e}", jpath.display()))?;
+                    if j.torn_bytes > 0 {
+                        durable::truncate_to(&jpath, j.clean_len).map_err(|e| e.to_string())?;
+                        recovery.push(format!(
+                            "{}: dropped torn final journal record ({} bytes) — crash mid-append",
+                            jpath.display(),
+                            j.torn_bytes
+                        ));
+                    }
+                    Some(j)
+                }
+                None => {
+                    // the crash tore the very first (header) append;
+                    // nothing was checkpointed, start fresh
+                    std::fs::remove_file(&jpath).map_err(|e| e.to_string())?;
+                    recovery.push(format!(
+                        "{}: discarded unreadable journal (no complete record survived)",
+                        jpath.display()
+                    ));
+                    None
+                }
+            }
         } else {
-            Vec::new()
+            None
         };
-        let mut sess =
-            Self::with_prior(id, spec, base, cluster, workload, &settings, &prior)?;
+
+        let space = ParamSpace::new(spec.clone(), base.clone());
+        let mut load_prior = |expect: Option<usize>| -> Result<Vec<EvalRecord>, String> {
+            let (mut csv, warn) = Csv::load_tolerant(&log_path)?;
+            if let Some(w) = warn {
+                recovery.push(w);
+            }
+            if let Some(n) = expect {
+                if csv.rows.len() < n {
+                    return Err(format!(
+                        "{}: journal expects {} prior rows but the log has only {} — \
+                         history was modified; run `catla fsck {}`",
+                        log_path.display(),
+                        n,
+                        csv.rows.len(),
+                        dir.display()
+                    ));
+                }
+                csv.rows.truncate(n);
+            }
+            PriorRuns::from_log(&csv, &spec)?.to_records(&space)
+        };
+        let prior = match &jrnl {
+            // only the CSV prefix the crashed session itself replayed
+            // counts as prior — everything after it re-drives from the
+            // journal (the CSV may also hold a full finalize rewrite)
+            Some(j) if j.header.prior > 0 => load_prior(Some(j.header.prior))?,
+            Some(_) => Vec::new(),
+            None if log_path.is_file() => load_prior(None)?,
+            None => Vec::new(),
+        };
+
+        let mut sess = Self::with_prior(id, spec, base, cluster, workload, &settings, &prior)?;
         if !scoped_warnings.is_empty() {
             let mut warnings: Vec<String> = Vec::new();
             for w in scoped_warnings {
@@ -225,7 +316,80 @@ impl ServeSession {
         }
         sess.dir = Some(dir.to_path_buf());
         sess.log_name = log_name.to_string();
+
+        if let Some(j) = jrnl {
+            // the original label (not `[resumed@n]`): the re-driven
+            // optimizer is in the exact crashed state, so the session
+            // IS the original one, continued
+            sess.label = j.header.label.clone();
+            sess.header_payload =
+                journal::header_payload(&settings, &sess.label, &sess.spec, j.header.prior);
+            sess.journal_started = true;
+            for (i, slice) in j.slices.iter().enumerate() {
+                sess.redrive_slice(slice)
+                    .map_err(|e| format!("{}: slice {}: {e}", jpath.display(), i + 1))?;
+            }
+            if j.finalized {
+                // fin is appended only after the final log write
+                // completed, so only the summary row is in doubt
+                let history = History::open(dir).map_err(|e| e.to_string())?;
+                let outcome = sess.driver.outcome(&sess.label)?;
+                history.append_summary_if_missing(&sess.spec, &outcome)?;
+                std::fs::remove_file(&jpath).map_err(|e| e.to_string())?;
+                durable::fsync_dir(&hist_dir);
+                sess.journal_started = false;
+                sess.finalized = true;
+            }
+        }
+        for w in recovery {
+            if !sess.warnings.contains(&w) {
+                sess.warnings.push(w);
+            }
+        }
         Ok(sess)
+    }
+
+    /// Recovery step: re-ask the optimizer for the next slice, verify it
+    /// bit-for-bit against the journal record, advance the seed stream
+    /// exactly as the original dispatch did, and tell the journaled
+    /// values back. Any divergence is a hard error — it means the
+    /// journal was written under different code or inputs, and silently
+    /// continuing would break the byte-identity contract.
+    fn redrive_slice(&mut self, slice: &journal::JournalSlice) -> Result<(), String> {
+        let cfgs: Vec<HadoopConfig> = self
+            .driver
+            .next_slice(self.opt.as_mut(), &self.space)
+            .ok_or("journal holds more slices than the optimizer re-asks — settings or code drift")?
+            .to_vec();
+        if cfgs.len() != slice.evals.len() {
+            return Err(format!(
+                "re-asked slice has {} configs, journal recorded {}",
+                cfgs.len(),
+                slice.evals.len()
+            ));
+        }
+        for (k, (cfg, (_, logged))) in cfgs.iter().zip(&slice.evals).enumerate() {
+            for (r, logged_v) in self.spec.ranges.iter().zip(logged) {
+                if cfg.get(r.index).to_bits() != logged_v.to_bits() {
+                    return Err(format!(
+                        "config {} param {} diverged on re-ask ({} vs journaled {})",
+                        k + 1,
+                        r.name(),
+                        cfg.get(r.index),
+                        logged_v
+                    ));
+                }
+            }
+        }
+        if !slice.external {
+            // SimCluster::reserve_seeds arithmetic, replayed without
+            // dispatching: the next real slice gets the same seeds it
+            // would have in the uninterrupted run
+            let runs = cfgs.len() * self.repeats;
+            self.seed_counter = self.seed_counter.wrapping_add(runs as u64);
+        }
+        let vals: Vec<f64> = slice.evals.iter().map(|(v, _)| *v).collect();
+        self.driver.tell_values(self.opt.as_mut(), &vals, &mut [])
     }
 
     /// Spec diagnostics to surface once per loaded session.
@@ -307,7 +471,7 @@ impl ServeSession {
                 }
             })
             .collect();
-        self.in_flight = Some(Flight::Sim { runs });
+        self.in_flight = Some(Flight::Sim { runs, cfgs });
         jobs
     }
 
@@ -316,8 +480,9 @@ impl ServeSession {
     /// like `ClusterObjective`, tell the optimizer, and checkpoint.
     pub fn complete(&mut self, runtimes: &[f64]) -> Result<(), String> {
         match self.in_flight.take() {
-            Some(Flight::Sim { runs }) => {
+            Some(Flight::Sim { runs, cfgs }) => {
                 if runtimes.len() != runs {
+                    self.in_flight = Some(Flight::Sim { runs, cfgs });
                     return Err(format!(
                         "session {}: {} runtimes delivered for {} dispatched runs",
                         self.id,
@@ -330,7 +495,7 @@ impl ServeSession {
                     .map(|c| c.iter().sum::<f64>() / self.repeats as f64)
                     .collect();
                 self.driver.tell_values(self.opt.as_mut(), &vals, &mut [])?;
-                self.checkpoint()
+                self.checkpoint(false, &cfgs, &vals)
             }
             other => {
                 self.in_flight = other;
@@ -351,7 +516,7 @@ impl ServeSession {
             Some(s) => s.to_vec(),
             None => return Vec::new(),
         };
-        self.in_flight = Some(Flight::External);
+        self.in_flight = Some(Flight::External { cfgs: cfgs.clone() });
         cfgs
     }
 
@@ -359,9 +524,9 @@ impl ServeSession {
     /// per config of the outstanding `ask` slice.
     pub fn tell_external(&mut self, vals: &[f64]) -> Result<(), String> {
         match self.in_flight.take() {
-            Some(Flight::External) => {
+            Some(Flight::External { cfgs }) => {
                 self.driver.tell_values(self.opt.as_mut(), vals, &mut [])?;
-                self.checkpoint()
+                self.checkpoint(true, &cfgs, vals)
             }
             other => {
                 self.in_flight = other;
@@ -370,14 +535,27 @@ impl ServeSession {
         }
     }
 
-    /// Write the running records to the session's tuning log (no-op for
-    /// filesystem-less sessions).
-    fn checkpoint(&self) -> Result<(), String> {
+    /// Journal the just-told slice (no-op for filesystem-less sessions):
+    /// one durable O_APPEND record, preceded once by the header record.
+    /// Replaces the old full-log rewrite — O(1) bytes per checkpoint
+    /// instead of O(evals), and a torn write can only ever damage the
+    /// final record, which recovery truncates.
+    fn checkpoint(&mut self, external: bool, cfgs: &[HadoopConfig], vals: &[f64]) -> Result<(), String> {
         let Some(dir) = &self.dir else {
             return Ok(());
         };
         let history = History::open(dir).map_err(|e| e.to_string())?;
-        history.write_tuning_records_to(&self.log_name, &self.spec, &self.label, self.driver.records())?;
+        let jpath = journal::journal_path(&history.dir, &self.log_name);
+        crashpoint::crash_if("journal.before-append");
+        if !self.journal_started {
+            durable::append_framed(&jpath, &self.header_payload, "journal.mid-append")
+                .map_err(|e| format!("{}: {e}", jpath.display()))?;
+            self.journal_started = true;
+        }
+        let payload = journal::slice_payload(external, &self.spec, cfgs, vals);
+        durable::append_framed(&jpath, &payload, "journal.mid-append")
+            .map_err(|e| format!("{}: {e}", jpath.display()))?;
+        crashpoint::crash_if("journal.after-append");
         Ok(())
     }
 
@@ -387,16 +565,45 @@ impl ServeSession {
     }
 
     /// Finalize: write the tuning log and summary row (project-backed
-    /// sessions), mark the session closed, and return the outcome.
+    /// sessions), retire the checkpoint journal, mark the session closed,
+    /// and return the outcome. Idempotent — a session already finalized
+    /// (including by `fin`-recovery in [`ServeSession::open`]) just
+    /// returns its outcome.
+    ///
+    /// The durable ordering is what makes a crash anywhere in here
+    /// recoverable with exactly-once summary semantics:
+    /// final log (atomic replace) → `fin` journal record → summary row →
+    /// journal removal. Before `fin`, recovery re-drives and finalizes
+    /// again from scratch; after `fin`, recovery knows the log is done
+    /// and appends the summary row only if it is missing.
     pub fn finalize(&mut self) -> Result<TuningOutcome, String> {
         if let Some(reason) = &self.failed {
             return Err(format!("session {} failed: {reason}", self.id));
         }
         let outcome = self.driver.outcome(&self.label)?;
+        if self.finalized {
+            return Ok(outcome);
+        }
         if let Some(dir) = &self.dir {
             let history = History::open(dir).map_err(|e| e.to_string())?;
+            crashpoint::crash_if("finalize.before-log");
             history.write_tuning_log_to(&self.log_name, &self.spec, &outcome)?;
-            history.append_summary(&self.spec, &outcome)?;
+            if self.journal_started {
+                let jpath = journal::journal_path(&history.dir, &self.log_name);
+                crashpoint::crash_if("finalize.before-fin");
+                durable::append_framed(&jpath, journal::FIN, "fin.mid-append")
+                    .map_err(|e| format!("{}: {e}", jpath.display()))?;
+                crashpoint::crash_if("finalize.before-summary");
+                history.append_summary(&self.spec, &outcome)?;
+                crashpoint::crash_if("finalize.before-cleanup");
+                std::fs::remove_file(&jpath).map_err(|e| e.to_string())?;
+                durable::fsync_dir(&history.dir);
+                self.journal_started = false;
+            } else {
+                // no slice was ever journaled (e.g. a resumed-exhausted
+                // session that only replayed history)
+                history.append_summary(&self.spec, &outcome)?;
+            }
         }
         self.finalized = true;
         Ok(outcome)

@@ -1,0 +1,114 @@
+//! Deterministic crash injection: named points threaded through the
+//! persistence layer where a `kill -9` would be most damaging.
+//!
+//! Production cost when unarmed is a single relaxed [`AtomicBool`] load
+//! per point — no allocation, no branch beyond the early return. Arming
+//! happens exactly once, from `main.rs` (the hidden `--crash-at <point>`
+//! flag or the `CATLA_CRASH_AT` env hook — both live in the CLI entry,
+//! which owns argv/env under the detlint ambient-entropy rule), before
+//! any worker thread starts.
+//!
+//! A hit calls [`std::process::abort`]: no destructors, no buffered-I/O
+//! flushing, no atexit — the closest in-process stand-in for SIGKILL.
+//! Writes already handed to the OS survive (they are in the page cache);
+//! anything user-space-buffered is lost, exactly like a torn crash.
+//!
+//! The registry below is the single source of truth: `--crash-at`
+//! validates against it and the crash-matrix test
+//! (`rust/tests/crash_matrix.rs`) iterates it, so an unregistered or
+//! unreachable point fails CI rather than rotting.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Every registered crash point, in rough persistence-pipeline order.
+///
+/// * `journal.*` fire around the per-slice checkpoint append
+///   (`ServeSession::checkpoint`); `mid-append` aborts with only the
+///   first half of the record durable, manufacturing a genuinely torn
+///   tail.
+/// * `finalize.*` fire between the finalize steps (final log → `fin`
+///   journal record → summary row → journal removal);
+///   `fin.mid-append` tears the `fin` record itself.
+/// * `summary.mid-append` tears the summary row itself.
+/// * `atomic.*` fire inside [`crate::util::durable::atomic_write`],
+///   between tmp-sync, rename and directory-sync.
+pub const POINTS: &[&str] = &[
+    "journal.before-append",
+    "journal.mid-append",
+    "journal.after-append",
+    "finalize.before-log",
+    "finalize.before-fin",
+    "fin.mid-append",
+    "finalize.before-summary",
+    "summary.mid-append",
+    "finalize.before-cleanup",
+    "atomic.after-tmp",
+    "atomic.after-rename",
+];
+
+/// Fast-path switch: false until [`arm`] succeeds.
+static ON: AtomicBool = AtomicBool::new(false);
+/// Index into [`POINTS`] of the armed point (valid only when `ON`).
+static ARMED: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Arm one crash point by name. Called once from the CLI entry before
+/// any session work starts; unknown names error so a typo in
+/// `--crash-at` fails loudly instead of silently never firing.
+pub fn arm(point: &str) -> Result<(), String> {
+    let idx = POINTS
+        .iter()
+        .position(|p| *p == point)
+        .ok_or_else(|| format!("unknown crash point {point:?} (known: {})", POINTS.join(", ")))?;
+    ARMED.store(idx, Ordering::Relaxed);
+    ON.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Is `point` the armed one? (Zero-cost `false` when nothing is armed.)
+pub fn armed_at(point: &str) -> bool {
+    if !ON.load(Ordering::Relaxed) {
+        return false;
+    }
+    POINTS.get(ARMED.load(Ordering::Relaxed)).copied() == Some(point)
+}
+
+/// Abort the process if `point` is armed. The stderr line is written and
+/// flushed first so the matrix test can assert which point fired.
+pub fn crash_if(point: &str) {
+    if armed_at(point) {
+        crash_now(point);
+    }
+}
+
+/// Unconditional abort with the diagnostic line — callers that already
+/// checked [`armed_at`] (to set up a torn half-write first) end here.
+pub fn crash_now(point: &str) -> ! {
+    use std::io::Write;
+    let mut err = std::io::stderr();
+    let _ = writeln!(err, "catla: crash point {point:?} hit — aborting");
+    let _ = err.flush();
+    std::process::abort();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_nonempty() {
+        let mut seen = std::collections::BTreeSet::new();
+        for p in POINTS {
+            assert!(!p.is_empty());
+            assert!(seen.insert(*p), "duplicate crash point {p:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_point_is_rejected_and_unarmed_is_inert() {
+        assert!(arm("no.such.point").is_err());
+        // arming never happened in this process, so every probe is false
+        // and crash_if returns (the test would abort otherwise)
+        assert!(!armed_at("journal.before-append"));
+        crash_if("journal.before-append");
+    }
+}

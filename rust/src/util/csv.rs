@@ -74,16 +74,53 @@ impl Csv {
         Ok(Csv { header, rows })
     }
 
+    /// Durable save: atomic replace via [`crate::util::durable`] so a
+    /// crash mid-save leaves the previous file intact, never a torn one.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.to_string())
+        crate::util::durable::atomic_write(path, self.to_string().as_bytes())
     }
 
     pub fn load(path: &std::path::Path) -> Result<Csv, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Csv::parse(&text)
+    }
+
+    /// Crash-tolerant load: every writer newline-terminates each row, so
+    /// a file whose final line lacks `\n` was cut mid-append — drop that
+    /// partial line and report it as `Some(warning)`. Anything wrong in
+    /// the surviving prefix (ragged interior row, bad quoting) is still a
+    /// hard error: a torn *tail* is what crashes produce, a torn middle
+    /// is corruption.
+    pub fn load_tolerant(path: &std::path::Path) -> Result<(Csv, Option<String>), String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let mut warning = None;
+        let clean = if !text.is_empty() && !text.ends_with('\n') {
+            let keep = text.rfind('\n').map(|i| i + 1).unwrap_or(0);
+            warning = Some(format!(
+                "{}: dropped torn final line ({} bytes) — file was cut mid-write",
+                path.display(),
+                text.len() - keep
+            ));
+            &text[..keep]
+        } else {
+            text.as_str()
+        };
+        let csv = Csv::parse(clean)?;
+        Ok((csv, warning))
+    }
+
+    /// Render a single row as one CSV line (with trailing newline) using
+    /// the same quoting as `to_string()` — the unit the append-only
+    /// summary/journal writers add per record.
+    pub fn render_row(fields: &[String]) -> String {
+        let mut out = String::new();
+        write_record(fields, &mut out);
+        out
+    }
+
+    /// The header rendered as one CSV line (with trailing newline).
+    pub fn render_header(&self) -> String {
+        Self::render_row(&self.header)
     }
 }
 
@@ -195,5 +232,43 @@ mod tests {
     fn push_checks_width() {
         let mut c = Csv::new(&["a", "b"]);
         c.push(&["only-one"]);
+    }
+
+    #[test]
+    fn render_row_matches_display() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push_row(vec!["x,y".into(), "z".into()]);
+        let rendered = c.render_header() + &Csv::render_row(&c.rows[0]);
+        assert_eq!(rendered, c.to_string());
+    }
+
+    #[test]
+    fn load_tolerant_drops_only_a_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("catla-csv-tolerant-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.csv");
+
+        // clean file → no warning
+        std::fs::write(&path, "a,b\n1,2\n").unwrap();
+        let (csv, warn) = Csv::load_tolerant(&path).unwrap();
+        assert_eq!(csv.rows.len(), 1);
+        assert!(warn.is_none());
+
+        // torn final line → dropped with a warning, prefix intact
+        std::fs::write(&path, "a,b\n1,2\n3,").unwrap();
+        let (csv, warn) = Csv::load_tolerant(&path).unwrap();
+        assert_eq!(csv.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+        assert!(warn.unwrap().contains("torn final line"));
+
+        // torn-only file → hard "empty csv" error, not a panic
+        std::fs::write(&path, "a,").unwrap();
+        assert!(Csv::load_tolerant(&path).is_err());
+
+        // ragged interior row → still a hard error even with a clean tail
+        std::fs::write(&path, "a,b\n1\n2,3\n").unwrap();
+        assert!(Csv::load_tolerant(&path).is_err());
+
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

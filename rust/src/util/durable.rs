@@ -1,0 +1,327 @@
+//! Crash-consistent file I/O: atomic whole-file replacement and a
+//! CRC32-trailered append-only record log.
+//!
+//! Every durable artifact Catla writes goes through one of two shapes:
+//!
+//! * **Atomic replace** ([`atomic_write`]): write a hidden tmp sibling,
+//!   fsync it, rename over the target, fsync the directory. A reader
+//!   (or a post-crash restart) sees either the old bytes or the new
+//!   bytes, never a torn mix — rename within one directory is atomic on
+//!   every filesystem we care about.
+//! * **Append-only records** ([`append_framed`] / [`load_records`]):
+//!   one record per line, `payload crc32=xxxxxxxx`, O_APPEND + fdatasync
+//!   per append. A crash mid-append leaves a *torn tail* — a final line
+//!   with a missing newline or a bad trailer — which recovery detects
+//!   and drops, replaying the clean prefix. A bad record *followed by a
+//!   valid one* cannot be produced by any crash of an append-only
+//!   writer, so it is classified as mid-file corruption and surfaced as
+//!   a hard error instead of being silently skipped.
+//!
+//! The [`crate::util::crashpoint`] hooks inside both shapes let the
+//! crash-matrix test abort this process at every window (tmp written
+//! but not renamed, half a record appended, …) and prove recovery from
+//! each one.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::crashpoint;
+
+/// IEEE CRC-32 (the zlib/PNG polynomial), table generated at compile
+/// time — the offline image has no checksum crate and the journal only
+/// needs torn-write detection, not cryptographic integrity.
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// The tmp sibling `atomic_write` stages into: hidden (leading dot) so
+/// `*.csv`-style globs over a history directory never pick up a
+/// half-written file, deterministic so a crashed leftover is simply
+/// overwritten by the next write (and removable by `catla fsck`).
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let name = path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default();
+    path.with_file_name(format!(".{name}.tmp"))
+}
+
+/// Fsync a directory so a just-renamed entry survives power loss. Best
+/// effort off the happy path: some filesystems refuse O_RDONLY dir
+/// syncs — the rename itself is still atomic, we only lose the
+/// directory-entry durability guarantee there.
+pub fn fsync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Atomically replace `path` with `bytes`: tmp sibling → fsync → rename
+/// → directory fsync. Creates parent directories as needed.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let parent = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = tmp_sibling(path);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    crashpoint::crash_if("atomic.after-tmp");
+    std::fs::rename(&tmp, path)?;
+    crashpoint::crash_if("atomic.after-rename");
+    if let Some(dir) = parent {
+        fsync_dir(dir);
+    }
+    Ok(())
+}
+
+/// Append `bytes` to `path` (creating it if needed) with one O_APPEND
+/// write + fdatasync. `mid_point` names the crash point that tears this
+/// append in half: when armed, only the first half of `bytes` is made
+/// durable before the abort — the torn-tail case recovery must handle.
+pub fn append_bytes(path: &Path, bytes: &[u8], mid_point: &str) -> io::Result<()> {
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = OpenOptions::new().create(true).append(true).open(path)?;
+    if crashpoint::armed_at(mid_point) && bytes.len() > 1 {
+        f.write_all(&bytes[..bytes.len() / 2])?;
+        f.sync_data()?;
+        crashpoint::crash_now(mid_point);
+    }
+    f.write_all(bytes)?;
+    f.sync_data()?;
+    Ok(())
+}
+
+/// Write `bytes` to a brand-new file (O_EXCL) and sync it. `Ok(true)`
+/// when this call created the file, `Ok(false)` when it already existed
+/// (bytes untouched) — the write-header-once primitive for shared
+/// append-only CSVs: concurrent writers race on creation, exactly one
+/// wins, and nobody ever rewrites an existing file's contents.
+pub fn create_excl(path: &Path, bytes: &[u8]) -> io::Result<bool> {
+    let parent = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        std::fs::create_dir_all(dir)?;
+    }
+    match OpenOptions::new().write(true).create_new(true).open(path) {
+        Ok(mut f) => {
+            f.write_all(bytes)?;
+            f.sync_all()?;
+            if let Some(dir) = parent {
+                fsync_dir(dir);
+            }
+            Ok(true)
+        }
+        Err(e) if e.kind() == io::ErrorKind::AlreadyExists => Ok(false),
+        Err(e) => Err(e),
+    }
+}
+
+const CRC_SEP: &str = " crc32=";
+
+/// Frame `payload` as one CRC-trailered record line and append it
+/// durably. `payload` must not contain a newline (the line is the
+/// framing unit).
+pub fn append_framed(path: &Path, payload: &str, mid_point: &str) -> io::Result<()> {
+    debug_assert!(!payload.contains('\n'), "record payloads are single lines");
+    let line = format!("{payload}{CRC_SEP}{:08x}\n", crc32(payload.as_bytes()));
+    append_bytes(path, line.as_bytes(), mid_point)
+}
+
+/// A parsed record log: the clean-prefix payloads plus what (if
+/// anything) trails them.
+#[derive(Clone, Debug, Default)]
+pub struct RecordLog {
+    /// Payloads of the valid prefix, in append order.
+    pub records: Vec<String>,
+    /// Byte length of the valid prefix — truncate the file here before
+    /// appending again after a torn crash.
+    pub clean_len: u64,
+    /// Bytes after the clean prefix that failed validation (0 = clean).
+    /// Always a *suffix*: anything else is corruption and errors.
+    pub torn_bytes: u64,
+}
+
+/// Validate one framed line; `Some(payload)` when the CRC trailer
+/// matches.
+fn parse_framed(line: &str) -> Option<&str> {
+    let (payload, crc_hex) = line.rsplit_once(CRC_SEP)?;
+    if crc_hex.len() != 8 {
+        return None;
+    }
+    let crc = u32::from_str_radix(crc_hex, 16).ok()?;
+    (crc == crc32(payload.as_bytes())).then_some(payload)
+}
+
+/// Load a CRC-trailered record log, classifying the tail.
+///
+/// * Clean file → all payloads, `torn_bytes == 0`.
+/// * Torn tail (incomplete final line, or invalid trailing lines with
+///   nothing valid after them) → the clean-prefix payloads plus
+///   `torn_bytes > 0`; the caller decides whether to warn-and-truncate.
+/// * A valid record *after* an invalid one → `Err`: an append-only
+///   writer cannot produce that by crashing, so the file was edited or
+///   the disk corrupted it — refusing to guess protects the
+///   byte-identity contract.
+pub fn load_records(path: &Path) -> Result<RecordLog, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    parse_records(&bytes).map_err(|line| {
+        format!(
+            "{}: record {line} has a valid CRC after an invalid record — mid-file corruption, \
+             not a torn crash; refusing to resume (inspect or `catla fsck` the directory)",
+            path.display()
+        )
+    })
+}
+
+/// Pure parse of [`load_records`] (unit-testable without a filesystem).
+/// `Err(line_no)` = the 1-based line of the valid-after-invalid record.
+pub fn parse_records(bytes: &[u8]) -> Result<RecordLog, usize> {
+    let text = String::from_utf8_lossy(bytes);
+    let mut log = RecordLog::default();
+    let mut offset = 0usize; // byte offset of the current line start
+    let mut bad_since: Option<usize> = None; // offset of first invalid line
+    for (idx, line) in text.split_inclusive('\n').enumerate() {
+        let complete = line.ends_with('\n');
+        let valid = complete.then(|| parse_framed(line.trim_end_matches('\n'))).flatten();
+        match (valid, bad_since) {
+            (Some(payload), None) => {
+                log.records.push(payload.to_string());
+                offset += line.len();
+                log.clean_len = offset as u64;
+            }
+            (Some(_), Some(_)) => return Err(idx + 1),
+            (None, None) => {
+                bad_since = Some(offset);
+                offset += line.len();
+            }
+            (None, Some(_)) => offset += line.len(),
+        }
+    }
+    log.torn_bytes = bytes.len() as u64 - log.clean_len;
+    Ok(log)
+}
+
+/// Truncate a record log back to its clean prefix (post-torn-crash
+/// repair, before appending resumes) and sync the result.
+pub fn truncate_to(path: &Path, len: u64) -> io::Result<()> {
+    let f = OpenOptions::new().write(true).open(path)?;
+    f.set_len(len)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("catla-durable-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_tmp() {
+        let dir = tmp("atomic");
+        let path = dir.join("out.csv");
+        atomic_write(&path, b"one\n").unwrap();
+        atomic_write(&path, b"two\n").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two\n");
+        assert!(!tmp_sibling(&path).exists(), "tmp sibling left behind");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn framed_roundtrip_and_torn_tail_classification() {
+        let dir = tmp("framed");
+        let path = dir.join("log.journal");
+        append_framed(&path, "alpha\t1", "x").unwrap();
+        append_framed(&path, "beta\t2", "x").unwrap();
+        let full = load_records(&path).unwrap();
+        assert_eq!(full.records, vec!["alpha\t1", "beta\t2"]);
+        assert_eq!(full.torn_bytes, 0);
+
+        // torn at every byte boundary: the clean prefix is always the
+        // records whose full lines survived, never a corrupt row
+        let bytes = std::fs::read(&path).unwrap();
+        let first_line_len = full.clean_len as usize
+            - (bytes.len() - bytes.iter().position(|&b| b == b'\n').unwrap() - 1)
+            - 1;
+        for cut in 0..bytes.len() {
+            let log = parse_records(&bytes[..cut]).unwrap();
+            let expect = if cut >= bytes.len() {
+                2
+            } else if cut > first_line_len {
+                1
+            } else {
+                0
+            };
+            assert_eq!(log.records.len(), expect, "cut at {cut}");
+            assert_eq!(log.clean_len + log.torn_bytes, cut as u64);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn valid_after_invalid_is_corruption() {
+        let dir = tmp("corrupt");
+        let path = dir.join("log.journal");
+        append_framed(&path, "alpha", "x").unwrap();
+        // flip a byte in the first record, keeping the second intact
+        append_framed(&path, "beta", "x").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        assert!(parse_records(&bytes).is_err(), "corruption classified as torn");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncate_to_clean_prefix_enables_reappend() {
+        let dir = tmp("truncate");
+        let path = dir.join("log.journal");
+        append_framed(&path, "alpha", "x").unwrap();
+        let clean = load_records(&path).unwrap().clean_len;
+        append_bytes(&path, b"half-a-rec", "x").unwrap(); // torn tail
+        let log = load_records(&path).unwrap();
+        assert_eq!(log.records.len(), 1);
+        assert!(log.torn_bytes > 0);
+        truncate_to(&path, log.clean_len).unwrap();
+        assert_eq!(clean, log.clean_len);
+        append_framed(&path, "beta", "x").unwrap();
+        assert_eq!(load_records(&path).unwrap().records, vec!["alpha", "beta"]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -5,7 +5,9 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crashpoint;
 pub mod csv;
+pub mod durable;
 pub mod fingerprint;
 pub mod json;
 pub mod linalg;

@@ -1,0 +1,166 @@
+//! Crash-point matrix: kill the serve daemon at EVERY registered
+//! durability point and assert full recovery.
+//!
+//! Each case spawns the compiled `catla` binary with the hidden
+//! `--crash-at <point>` hook, drives one project-backed session over the
+//! line protocol, and lets [`std::process::abort`] cut it down at the
+//! armed point (the in-process stand-in for `kill -9`). A second,
+//! unarmed daemon over the same directory must then finish the session
+//! with `history/tuning_log.csv` and `history/summary.csv` byte-identical
+//! to an uninterrupted run — the full matrix on bobyqa, and the
+//! complete-journal re-drive point pinned for all eight methods.
+//!
+//! The point list comes from `catla::util::crashpoint::POINTS`, so a
+//! newly registered point is exercised here automatically (and an
+//! unreachable one fails the "armed daemon did not abort" assert).
+
+use std::io::Write;
+use std::path::PathBuf;
+use std::process::{Command, Output, Stdio};
+
+use catla::catla::{create_template, ProjectKind};
+use catla::optim::ALL_METHODS;
+use catla::util::crashpoint::POINTS;
+
+const SMALL: &str = "optimizer=bobyqa\nbudget=12\nrepeats=1\nseed=7\n";
+
+fn catla_bin() -> PathBuf {
+    // cargo puts integration-test binaries in target/<profile>/deps;
+    // the main binary lives one level up
+    let mut p = std::env::current_exe().unwrap();
+    p.pop();
+    if p.ends_with("deps") {
+        p.pop();
+    }
+    p.join("catla")
+}
+
+fn tuning_project(name: &str, properties: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("catla-crash-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(dir.join("tuning.properties"), properties).unwrap();
+    dir
+}
+
+/// Drive one session end to end in a spawned daemon; `crash_at` arms the
+/// named point. Stdin write errors are ignored — an armed daemon may
+/// abort before draining the script, which is exactly the test.
+fn serve(dir: &std::path::Path, crash_at: Option<&str>) -> Output {
+    let mut cmd = Command::new(catla_bin());
+    cmd.arg("serve");
+    if let Some(point) = crash_at {
+        cmd.args(["--crash-at", point]);
+    }
+    cmd.stdin(Stdio::piped()).stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().expect("failed to spawn catla binary — build it first");
+    let script = format!("open s {}\nrun s\nclose s\nshutdown\n", dir.display());
+    let _ = child.stdin.take().unwrap().write_all(script.as_bytes());
+    child.wait_with_output().unwrap()
+}
+
+fn history_file(dir: &std::path::Path, name: &str) -> Vec<u8> {
+    std::fs::read(dir.join("history").join(name))
+        .unwrap_or_else(|e| panic!("{}: history/{name} unreadable: {e}", dir.display()))
+}
+
+/// Run the reference (uninterrupted) session and return the durable
+/// state every recovery must reproduce byte for byte.
+fn reference(name: &str, properties: &str) -> (Vec<u8>, Vec<u8>) {
+    let dir = tuning_project(name, properties);
+    let out = serve(&dir, None);
+    assert!(
+        out.status.success(),
+        "reference run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let log = history_file(&dir, "tuning_log.csv");
+    let summary = history_file(&dir, "summary.csv");
+    let _ = std::fs::remove_dir_all(&dir);
+    (log, summary)
+}
+
+/// Crash at `point`, recover unarmed, and assert the recovered history
+/// is byte-identical to the reference.
+fn crash_and_recover(tag: &str, point: &str, properties: &str, ref_log: &[u8], ref_summary: &[u8]) {
+    let dir = tuning_project(&format!("{tag}-{}", point.replace('.', "-")), properties);
+
+    let crashed = serve(&dir, Some(point));
+    assert!(
+        !crashed.status.success(),
+        "{tag}/{point}: armed daemon did not abort — the point never fired"
+    );
+    let stderr = String::from_utf8_lossy(&crashed.stderr);
+    assert!(
+        stderr.contains(&format!("crash point {point:?} hit")),
+        "{tag}/{point}: abort came from somewhere else:\n{stderr}"
+    );
+
+    let recovered = serve(&dir, None);
+    assert!(
+        recovered.status.success(),
+        "{tag}/{point}: recovery run failed:\n{}",
+        String::from_utf8_lossy(&recovered.stderr)
+    );
+    assert_eq!(
+        history_file(&dir, "tuning_log.csv"),
+        ref_log,
+        "{tag}/{point}: recovered tuning log is not byte-identical"
+    );
+    assert_eq!(
+        history_file(&dir, "summary.csv"),
+        ref_summary,
+        "{tag}/{point}: recovered summary is not byte-identical (lost or duplicated row?)"
+    );
+    assert!(
+        !dir.join("history").join("tuning_log.csv.journal").is_file(),
+        "{tag}/{point}: checkpoint journal survived a clean finalize"
+    );
+    for entry in std::fs::read_dir(dir.join("history")).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        assert!(
+            !(name.starts_with('.') && name.ends_with(".tmp")),
+            "{tag}/{point}: stray staging file {name} after recovery"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn every_registered_point_recovers_byte_identically() {
+    let (ref_log, ref_summary) = reference("matrix-ref", SMALL);
+    assert!(!POINTS.is_empty());
+    for point in POINTS {
+        crash_and_recover("matrix", point, SMALL, &ref_log, &ref_summary);
+    }
+}
+
+#[test]
+fn complete_journal_redrive_is_pinned_for_all_methods() {
+    // finalize.before-fin crashes with the journal fully written but the
+    // final log / fin / summary absent: the recovery must re-drive every
+    // slice through a fresh optimizer and land on the identical outcome —
+    // the strongest per-method determinism pin in the matrix
+    for name in ALL_METHODS {
+        let props = format!("optimizer={name}\nbudget=12\nrepeats=1\nseed=7\n");
+        let (ref_log, ref_summary) = reference(&format!("m-{name}-ref"), &props);
+        crash_and_recover(
+            &format!("m-{name}"),
+            "finalize.before-fin",
+            &props,
+            &ref_log,
+            &ref_summary,
+        );
+    }
+}
+
+#[test]
+fn unknown_crash_point_is_rejected_before_any_work() {
+    let out = serve(std::path::Path::new("/nonexistent"), Some("no.such.point"));
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("unknown crash point"),
+        "typo in --crash-at must fail loudly:\n{stderr}"
+    );
+}

@@ -1,0 +1,173 @@
+//! Torn-log durability: truncate a reference `tuning_log.csv` at EVERY
+//! byte boundary and assert the resume path never panics and never
+//! replays a corrupt row — the clean prefix of full lines is all that
+//! ever comes back, for both the flat single-job space and a merged
+//! (scoped) workflow space whose log carries `<param>@<workload>`
+//! columns.
+//!
+//! The tuning log is atomically replaced, so a torn log cannot come from
+//! this writer crashing — but logs also arrive from older versions,
+//! network copies and `aggregate` runs over foreign histories, and the
+//! tolerant loader is the single front door for all of them.
+
+use catla::catla::resume::{best_logged_config, resume_tuning, PriorRuns};
+use catla::catla::workflow::{self, WorkflowJob};
+use catla::catla::{create_template, History, OptimizerRunner, Project, ProjectKind, TuningSettings};
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::Method;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("catla-durab-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn flat_project(name: &str) -> PathBuf {
+    let dir = tmp(name);
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(
+        dir.join("params.spec"),
+        "param mapreduce.job.reduces int 2 32 step 2\n\
+         param mapreduce.task.io.sort.mb int 50 800 step 150\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("tuning.properties"), "optimizer=bobyqa\nbudget=8\nseed=3\n").unwrap();
+    dir
+}
+
+/// For every cut of `reference` at byte boundary `0..=len`, the tolerant
+/// loader must return exactly the rows of the complete data lines in the
+/// prefix — each byte-equal to its reference row — or a hard error when
+/// not even the header survives. Returns how many cuts parsed.
+fn assert_clean_prefixes(dir: &std::path::Path, reference: &[u8]) -> usize {
+    let history = History::open(dir).unwrap();
+    let log_path = history.dir.join("tuning_log.csv");
+    let ref_rows = {
+        let (csv, torn) = history.load_tuning_log_tolerant().unwrap();
+        assert!(torn.is_none(), "reference log is torn?");
+        csv.rows
+    };
+    let header_end = reference.iter().position(|&b| b == b'\n').unwrap() + 1;
+    let mut parsed = 0;
+    for cut in 0..=reference.len() {
+        std::fs::write(&log_path, &reference[..cut]).unwrap();
+        match history.load_tuning_log_tolerant() {
+            Err(e) => assert!(
+                cut < header_end,
+                "cut {cut}: a log with an intact header must load its clean prefix: {e}"
+            ),
+            Ok((csv, torn)) => {
+                parsed += 1;
+                assert!(
+                    cut >= header_end,
+                    "cut {cut}: a headerless fragment parsed as a log"
+                );
+                let complete = reference[header_end..cut].iter().filter(|&&b| b == b'\n').count();
+                assert_eq!(
+                    csv.rows.len(),
+                    complete,
+                    "cut {cut}: row count is not the clean prefix"
+                );
+                for (i, row) in csv.rows.iter().enumerate() {
+                    assert_eq!(
+                        row, &ref_rows[i],
+                        "cut {cut}: row {i} differs from the reference — a corrupt or \
+                         truncated row leaked into the replay"
+                    );
+                }
+                assert_eq!(
+                    torn.is_some(),
+                    cut > header_end && reference[cut - 1] != b'\n',
+                    "cut {cut}: torn-tail warning disagrees with the cut position"
+                );
+            }
+        }
+        // the opportunistic best-config rebuild must never panic either,
+        // whatever the cut (it may degrade to Ok(None))
+        let project = Project::load(dir).unwrap();
+        let _ = best_logged_config(&project);
+    }
+    std::fs::write(&log_path, reference).unwrap();
+    parsed
+}
+
+#[test]
+fn flat_log_truncated_at_every_byte_replays_only_the_clean_prefix() {
+    let dir = flat_project("flat");
+    let project = Project::load(&dir).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+    let log_path = dir.join("history").join("tuning_log.csv");
+    let reference = std::fs::read(&log_path).unwrap();
+    assert!(reference.ends_with(b"\n"), "writer must newline-terminate");
+
+    let parsed = assert_clean_prefixes(&dir, &reference);
+    assert!(parsed > 0, "no cut parsed — the matrix tested nothing");
+
+    // and the full resume front door over a mid-row tear: the clean
+    // prefix replays, the torn row is dropped (not evaluated twice, not
+    // mangled), and the run completes to the original budget
+    std::fs::write(&log_path, &reference[..reference.len() - 3]).unwrap();
+    let resumed = resume_tuning(&mut cluster, &project, 8).unwrap();
+    assert_eq!(resumed.evals(), 8, "torn-tail resume lost the budget");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn merged_scoped_log_truncated_at_every_byte_replays_only_the_clean_prefix() {
+    let dir = tmp("merged");
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(
+        dir.join("params.spec"),
+        "param mapreduce.job.reduces int 2 32\n\
+         workload terasort {\n\
+           param mapreduce.reduce.shuffle.parallelcopies int 4 64\n\
+         }\n\
+         workload wordcount {\n\
+           param mapreduce.map.memory.mb int 512 4096\n\
+         }\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("jobs.list"), "sort terasort 1024\nwc wordcount 1024 after=sort\n")
+        .unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=bobyqa\nbudget=10\nrepeats=1\nseed=3\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    let scoped = project.scoped.clone().unwrap();
+    let jobs: Vec<WorkflowJob> = workflow::from_project(&project).unwrap();
+    let settings = TuningSettings::from_project(&project).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let (outcome, merged) = workflow::tune_workflow(
+        &mut cluster,
+        &jobs,
+        &scoped,
+        project.base_config().unwrap(),
+        &Method::from_name(&settings.optimizer, settings.seed).unwrap(),
+        &mut settings.driver(),
+    )
+    .unwrap();
+    let history = History::open(&dir).unwrap();
+    history.write_tuning_log(&merged.spec, &outcome).unwrap();
+    let log_path = dir.join("history").join("tuning_log.csv");
+    let reference = std::fs::read(&log_path).unwrap();
+    let header = String::from_utf8_lossy(&reference);
+    assert!(
+        header.lines().next().unwrap().contains('@'),
+        "merged log lost its scoped columns"
+    );
+
+    let parsed = assert_clean_prefixes(&dir, &reference);
+    assert!(parsed > 0);
+
+    // the merged-space prior parse accepts exactly the clean prefix too
+    std::fs::write(&log_path, &reference[..reference.len() - 5]).unwrap();
+    let (csv, torn) = History::open(&dir).unwrap().load_tuning_log_tolerant().unwrap();
+    assert!(torn.is_some(), "mid-row cut must surface the torn-tail warning");
+    let prior = PriorRuns::from_log(&csv, &merged.spec).unwrap();
+    assert_eq!(prior.evals.len(), csv.rows.len());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -9,8 +9,10 @@
 //!   standalone `OptimizerRunner`'s, cache-served or not;
 //! * spec typo-guard warnings are emitted exactly once per loaded
 //!   session (at `open`), never again on step/run/ask paths;
-//! * a killed daemon resumes from its per-slice checkpoint through the
-//!   normal replay machinery;
+//! * a killed daemon re-drives its per-slice checkpoint journal back to
+//!   the exact optimizer state, so the resumed outcome is byte-identical
+//!   to an uninterrupted run (and `fsck --repair` can retire a journal
+//!   into a plain log for the legacy `[resumed@n]` replay path);
 //! * the bounded work-queue starves no session, and the external
 //!   `ask`/`tell` protocol path drives a session to completion.
 
@@ -297,7 +299,16 @@ fn spec_typo_warning_is_emitted_once_per_session() {
 }
 
 #[test]
-fn killed_daemon_resumes_from_checkpoint() {
+fn killed_daemon_resumes_from_journal_byte_identically() {
+    // reference: the same project driven to completion uninterrupted
+    let dir_ref = tuning_project("resume-ref", SMALL);
+    let reference = {
+        let mut sessions = vec![ServeSession::open(&dir_ref, "s", "tuning_log.csv").unwrap()];
+        let mut d = Dispatcher::new(2, 1 << 12);
+        d.run_all(&mut sessions).unwrap();
+        fingerprint(&sessions[0].finalize().unwrap())
+    };
+
     let dir = tuning_project("resume", SMALL);
     {
         let mut sessions = vec![ServeSession::open(&dir, "s", "tuning_log.csv").unwrap()];
@@ -309,20 +320,76 @@ fn killed_daemon_resumes_from_checkpoint() {
         assert!(!sessions[0].is_done(), "budget too small to interrupt mid-run");
         // dropped without finalize: the "crash" loses only in-flight work
     }
+    assert!(
+        dir.join("history").join("tuning_log.csv.journal").is_file(),
+        "per-slice checkpoint journal missing after interrupted steps"
+    );
     let mut sessions = vec![ServeSession::open(&dir, "s", "tuning_log.csv").unwrap()];
     let prior = sessions[0].evals();
-    assert!(prior > 0, "checkpoint log was not replayed");
-    assert!(
-        sessions[0].label().contains("resumed"),
-        "resumed session not labeled as such: {}",
-        sessions[0].label()
+    assert!(prior > 0, "checkpoint journal was not re-driven");
+    // journal recovery rebuilds the EXACT optimizer state, so the
+    // session keeps its original label (no [resumed@n] marker) and the
+    // finished outcome must not move a byte vs the uninterrupted run
+    assert_eq!(
+        sessions[0].label(),
+        "bobyqa",
+        "journal recovery must keep the original label"
     );
     let mut d = Dispatcher::new(2, 1 << 12);
     d.run_all(&mut sessions).unwrap();
     let out = sessions[0].finalize().unwrap();
     assert_eq!(out.evals(), 12, "resume did not complete the original budget");
+    assert_eq!(
+        fingerprint(&out),
+        reference,
+        "journal-recovered outcome diverged from the uninterrupted run"
+    );
+    let log = |d: &PathBuf| std::fs::read(d.join("history").join("tuning_log.csv")).unwrap();
+    assert_eq!(log(&dir), log(&dir_ref), "recovered tuning log is not byte-identical");
+    assert!(
+        !dir.join("history").join("tuning_log.csv.journal").is_file(),
+        "journal must be retired after finalize"
+    );
     let summary = std::fs::read_to_string(dir.join("history").join("summary.csv")).unwrap();
     assert!(summary.lines().count() >= 2, "summary row missing after finalize");
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_ref);
+}
+
+#[test]
+fn fsck_repair_materializes_checkpoint_and_legacy_resume_still_works() {
+    // interrupt a session mid-run, then retire its journal with
+    // `fsck --repair`: the checkpoint CSV it materializes feeds the
+    // legacy PriorRuns resume path, which replays a flat history into a
+    // fresh optimizer under the [resumed@n] label
+    let dir = tuning_project("resume-legacy", SMALL);
+    {
+        let mut sessions = vec![ServeSession::open(&dir, "s", "tuning_log.csv").unwrap()];
+        let mut d = Dispatcher::new(2, 1 << 12);
+        for _ in 0..3 {
+            d.step(&mut sessions).unwrap();
+        }
+        assert!(sessions[0].evals() > 0, "no slices completed before the crash");
+    }
+    let report = catla::catla::fsck::fsck_dir(&dir, true).unwrap();
+    assert!(report.repaired > 0, "fsck --repair retired no journal:\n{report}");
+    assert!(report.problems.is_empty(), "fsck left problems:\n{report}");
+    assert!(
+        !dir.join("history").join("tuning_log.csv.journal").is_file(),
+        "repair must retire the journal"
+    );
+    let mut sessions = vec![ServeSession::open(&dir, "s", "tuning_log.csv").unwrap()];
+    let prior = sessions[0].evals();
+    assert!(prior > 0, "materialized checkpoint log was not replayed");
+    assert!(
+        sessions[0].label().contains("resumed"),
+        "legacy CSV resume must carry the [resumed@n] label: {}",
+        sessions[0].label()
+    );
+    let mut d = Dispatcher::new(2, 1 << 12);
+    d.run_all(&mut sessions).unwrap();
+    let out = sessions[0].finalize().unwrap();
+    assert_eq!(out.evals(), 12, "legacy resume did not complete the original budget");
     let _ = std::fs::remove_dir_all(dir);
 }
 

@@ -93,3 +93,41 @@ grep -q '^ok shutdown$' "$pout" || { echo "no clean shutdown after a failed sess
 [ -s "$work/poison_good/history/tuning_log.csv" ] || { echo "sibling tuning log missing"; exit 1; }
 
 echo "serve smoke ok: poisoned session failed alone, sibling drained clean"
+
+# ---- crash consistency: a kill -9 loop crawls to completion ------------
+# The hidden `--crash-at <point>` hook aborts the process (SIGABRT —
+# kill -9's deterministic in-process stand-in) at a registered
+# durability point. Armed at `journal.after-append`, every incarnation
+# replays the journal, evaluates exactly ONE new slice, checkpoints it,
+# and dies — so a loop of kills must make one slice of progress per run,
+# eventually complete (a fully-replayed session appends nothing, so the
+# armed point never fires again), and leave history byte-identical to a
+# daemon that was never killed.
+for p in ref crash; do
+  dir="$work/ckpt_$p"
+  ./target/debug/catla template --dir "$dir" --kind tuning --workload wordcount --input-mb 512 >/dev/null
+  printf 'optimizer=bobyqa\nbudget=6\nrepeats=1\nseed=7\n' > "$dir/tuning.properties"
+done
+session_script() { printf 'open s %s\nrun\nclose s\nshutdown\n' "$1"; }
+
+session_script "$work/ckpt_ref" | ./target/debug/catla serve >/dev/null
+
+kills=0
+for i in $(seq 1 10); do
+  if session_script "$work/ckpt_crash" | ./target/debug/catla serve --crash-at journal.after-append \
+       >/dev/null 2>"$work/ckpt_err.txt"; then
+    break
+  fi
+  kills=$((kills + 1))
+  grep -q 'crash point "journal.after-append" hit' "$work/ckpt_err.txt" \
+    || { echo "daemon died somewhere other than the armed point:"; cat "$work/ckpt_err.txt"; exit 1; }
+done
+[ "$kills" -ge 2 ] || { echo "crash hook fired only $kills time(s) — the loop tested nothing"; exit 1; }
+for f in tuning_log.csv summary.csv; do
+  cmp -s "$work/ckpt_ref/history/$f" "$work/ckpt_crash/history/$f" \
+    || { echo "recovered $f differs from the uninterrupted reference"; exit 1; }
+done
+[ ! -e "$work/ckpt_crash/history/tuning_log.csv.journal" ] \
+  || { echo "checkpoint journal survived a completed session"; exit 1; }
+
+echo "serve smoke ok: $kills kills, one slice per incarnation, byte-identical recovery"

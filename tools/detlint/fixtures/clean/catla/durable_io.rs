@@ -1,0 +1,27 @@
+//! Good cases for `raw-fs-write`: production writes routed through
+//! `util::durable`, a justified escape hatch, and test scaffolding
+//! (exempt — nothing under `cfg(test)` ships).
+
+use std::path::Path;
+
+pub fn persist(path: &Path, text: &str) -> std::io::Result<()> {
+    crate::util::durable::atomic_write(path, text.as_bytes())
+}
+
+pub fn scratch(path: &Path) -> std::io::Result<()> {
+    // detlint: allow(raw-fs-write) -- throwaway debug dump outside any recovery path
+    std::fs::write(path, b"scratch")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::persist;
+
+    #[test]
+    fn writes_fixtures_raw() {
+        let p = std::env::temp_dir().join("detlint-fixture");
+        std::fs::write(&p, "seed").unwrap();
+        persist(&p, "replaced").unwrap();
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! Bad case for `raw-fs-write`: persistence code writing files raw —
+//! a crash mid-call leaves a torn half-file the recovery path then has
+//! to distrust. The rule applies everywhere outside `util/`, not just
+//! the determinism-critical trees.
+
+use std::path::Path;
+
+pub fn persist(path: &Path, text: &str) -> std::io::Result<()> {
+    //~v raw-fs-write
+    std::fs::write(path, text)?;
+    //~v raw-fs-write
+    let _f = std::fs::File::create(path.with_extension("bak"))?;
+    Ok(())
+}

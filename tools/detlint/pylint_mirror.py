@@ -22,9 +22,11 @@ RULES = [
     "float-ord",
     "safety-comment",
     "allow-reason",
+    "raw-fs-write",
 ]
 CRITICAL_TREES = ("hadoop/", "optim/", "serve/", "config/")
 ENTROPY_EXEMPT = ("util/bench.rs", "main.rs")
+RAW_WRITE_TOKENS = ["fs::write", "File::create"]
 ENTROPY_TOKENS = [
     "Instant::now",
     "SystemTime",
@@ -286,6 +288,9 @@ def lint_file(rel, src):
             hits.append("float-ord")
         if has_token(code, "unsafe") and not safety_documented(lines, idx):
             hits.append("safety-comment")
+        if not rel.startswith("util/") and not tests[idx]:
+            if any(has_token(code, p) for p in RAW_WRITE_TOKENS):
+                hits.append("raw-fs-write")
         if critical and ("#[allow" in code or "#![allow" in code):
             if "reason" not in code and not comment.strip():
                 hits.append("allow-reason")

@@ -25,6 +25,10 @@
 //!   `// SAFETY:` comment stating the aliasing/lifetime argument.
 //! - `allow-reason` — no `#[allow(..)]` without a written reason in the
 //!   four determinism-critical trees.
+//! - `raw-fs-write` — no `std::fs::write` / `File::create` outside
+//!   `util/`: a raw write torn by a crash leaves a half-file the
+//!   recovery path then has to distrust. Persistence goes through
+//!   `util::durable` (atomic replace or CRC-framed append).
 //!
 //! Suppression: append `// detlint: allow(<rule>) -- <reason>` on the
 //! offending line, or on a comment line directly above it. The reason
@@ -51,6 +55,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("float-ord", "no .partial_cmp on floats — use total_cmp / util::ord::TotalF64"),
     ("safety-comment", "every unsafe block/impl/fn carries a // SAFETY: comment"),
     ("allow-reason", "no #[allow(..)] without a reason in the determinism-critical trees"),
+    ("raw-fs-write", "no std::fs::write / File::create outside util/ — use util::durable"),
 ];
 
 /// Module trees (paths relative to the scan root) where
@@ -60,6 +65,10 @@ const CRITICAL_TREES: &[&str] = &["hadoop/", "optim/", "serve/", "config/"];
 /// Files exempt from `ambient-entropy`: the bench harness owns the wall
 /// clock, the CLI entry owns argv/env.
 const ENTROPY_EXEMPT: &[&str] = &["util/bench.rs", "main.rs"];
+
+/// Whole-token patterns the `raw-fs-write` rule bans outside `util/`
+/// (where the durable-I/O primitives themselves live).
+const RAW_WRITE_TOKENS: &[&str] = &["fs::write", "File::create"];
 
 /// Whole-token patterns the `ambient-entropy` rule bans.
 const ENTROPY_TOKENS: &[&str] = &[
@@ -492,6 +501,21 @@ pub fn lint_file(rel_path: &str, src: &str, enabled: &BTreeSet<&'static str>) ->
                     .to_string(),
             ));
         }
+        if enabled.contains("raw-fs-write") && !rel.starts_with("util/") && !tests[idx] {
+            for pat in RAW_WRITE_TOKENS {
+                if has_token(code, pat) {
+                    hits.push((
+                        "raw-fs-write",
+                        format!(
+                            "`{pat}`: a raw write torn by a crash leaves a half-file — use \
+                             util::durable::atomic_write (replace) or append_bytes/append_framed \
+                             (append-only)"
+                        ),
+                    ));
+                    break;
+                }
+            }
+        }
         if enabled.contains("allow-reason")
             && critical
             && (code.contains("#[allow") || code.contains("#![allow"))
@@ -698,6 +722,20 @@ mod tests {
         assert!(f[0].message.contains("without a reason"), "{}", f[0].message);
         let wrong_rule = "use std::collections::HashMap; // detlint: allow(float-ord) -- no\n";
         assert_eq!(rules_at(&lint("serve/x.rs", wrong_rule)), vec![(1, "hash-collections")]);
+    }
+
+    #[test]
+    fn raw_fs_write_banned_outside_util_except_tests() {
+        let src = "std::fs::write(&path, text)?;\n";
+        assert_eq!(rules_at(&lint("catla/x.rs", src)), vec![(1, "raw-fs-write")]);
+        assert_eq!(rules_at(&lint("main.rs", src)), vec![(1, "raw-fs-write")]);
+        assert!(lint("util/durable.rs", "let f = File::create(&tmp)?;\n").is_empty());
+        let test_only = "#[cfg(test)]\nmod tests {\n fn t() { std::fs::write(&p, b\"x\").unwrap(); }\n}\n";
+        assert!(lint("catla/x.rs", test_only).is_empty());
+        let allowed = "std::fs::write(&path, text)?; // detlint: allow(raw-fs-write) -- \
+                       scratch file outside any recovery path\n";
+        assert!(lint("catla/x.rs", allowed).is_empty());
+        assert!(lint("catla/x.rs", "fn rewrite_all(&self) {}\n").is_empty(), "token boundary");
     }
 
     #[test]
