@@ -1,0 +1,164 @@
+//! PERF — multi-fidelity racing: the wide-sweep shape racing exists
+//! for (random search, one wide ask-slice, `repeats` seeds per config)
+//! with racing off vs on, across several optimizer seeds. Measures DES
+//! runs, full-fidelity evaluations and wall time, and re-asserts the
+//! PR's acceptance bar in-run: racing spends >= 3x fewer full-fidelity
+//! evaluations while the mean best-value regression stays <= 2%.
+//! Records `BENCH_racing.json` for the CI bench smoke.
+//!
+//! Run: `cargo bench --bench racing` (CATLA_BENCH_QUICK=1 shortens)
+
+use std::time::Instant;
+
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::surrogate::{CandidateScorer, NativeScorer};
+use catla::optim::{
+    ClusterObjective, Driver, Fidelity, Method, ParamSpace, RacingObjective, RacingSettings,
+    TuningOutcome,
+};
+use catla::util::json::Json;
+use catla::workloads::wordcount;
+
+const METHOD: &str = "random";
+const REPEATS: usize = 3;
+
+fn run(seed: u64, budget: usize, racing: Option<RacingSettings>) -> (TuningOutcome, usize, f64) {
+    let wl = wordcount(2048.0);
+    let sp = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let cluster_spec = cluster.spec.clone();
+    let mut opt = Method::from_name(METHOD, seed).unwrap().build();
+    let t0 = Instant::now();
+    let (out, sims) = match racing {
+        None => {
+            let mut obj = ClusterObjective::new(&mut cluster, &wl, REPEATS);
+            let out = Driver::new(budget).run(opt.as_mut(), &sp, &mut obj).unwrap();
+            let sims = budget * REPEATS;
+            (out, sims)
+        }
+        Some(settings) => {
+            let inner = ClusterObjective::new(&mut cluster, &wl, REPEATS);
+            let scorer: Option<Box<dyn CandidateScorer>> = Some(Box::new(NativeScorer {
+                workload: wl.clone(),
+                cluster: cluster_spec,
+            }));
+            let mut obj = RacingObjective::new(inner, settings, scorer);
+            let out = Driver::new(budget).run(opt.as_mut(), &sp, &mut obj).unwrap();
+            let sims = obj.stats().sims;
+            (out, sims)
+        }
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    (out, sims, wall)
+}
+
+fn full_evals(out: &TuningOutcome) -> usize {
+    out.records.iter().filter(|r| r.fidelity == Fidelity::Full).count()
+}
+
+fn main() {
+    let quick = std::env::var("CATLA_BENCH_QUICK").is_ok();
+    let budget: usize = if quick { 48 } else { 96 };
+    let seeds: &[u64] = if quick { &[23, 61] } else { &[11, 23, 47, 61, 89] };
+    let racing = RacingSettings {
+        enabled: true,
+        ..RacingSettings::default()
+    };
+
+    let mut full_off = 0usize;
+    let mut full_on = 0usize;
+    let mut sims_off = 0usize;
+    let mut sims_on = 0usize;
+    let mut wall_off = 0.0f64;
+    let mut wall_on = 0.0f64;
+    let mut regressions: Vec<f64> = Vec::new();
+
+    for &seed in seeds {
+        let (off, s_off, w_off) = run(seed, budget, None);
+        let (on, s_on, w_on) = run(seed, budget, Some(racing));
+        assert_eq!(off.evals(), on.evals(), "seed {seed}: racing changed the eval count");
+        // monotone promotion: a finalist's value is the exact
+        // racing-off measurement of the same candidate (random's ask
+        // stream ignores tells, so the candidate streams are identical)
+        for (a, b) in off.records.iter().zip(&on.records) {
+            if b.fidelity == Fidelity::Full {
+                assert_eq!(
+                    a.value.to_bits(),
+                    b.value.to_bits(),
+                    "seed {seed} iter {}: finalist diverged from racing-off",
+                    a.iter
+                );
+            }
+        }
+        full_off += full_evals(&off);
+        full_on += full_evals(&on);
+        sims_off += s_off;
+        sims_on += s_on;
+        wall_off += w_off;
+        wall_on += w_on;
+        regressions.push(100.0 * (on.best_value - off.best_value) / off.best_value);
+        println!(
+            "seed {seed}: full evals {} -> {}, DES runs {} -> {}, best {:.3} -> {:.3}",
+            full_evals(&off),
+            full_evals(&on),
+            s_off,
+            s_on,
+            off.best_value,
+            on.best_value
+        );
+    }
+
+    let full_reduction = full_off as f64 / full_on.max(1) as f64;
+    let sims_reduction = sims_off as f64 / sims_on.max(1) as f64;
+    let mean_regression = regressions.iter().sum::<f64>() / regressions.len() as f64;
+
+    println!(
+        "{} seeds, budget {budget}, {METHOD}, repeats {REPEATS}, eta {} (min keep {}):",
+        seeds.len(),
+        racing.eta,
+        racing.min_tier_evals
+    );
+    println!(
+        "full-fidelity evals {full_off} -> {full_on} ({full_reduction:.1}x), \
+         DES runs {sims_off} -> {sims_on} ({sims_reduction:.1}x)"
+    );
+    println!(
+        "mean best-value regression {mean_regression:.3}% over {:?}; wall {wall_off:.2}s -> {wall_on:.2}s",
+        regressions
+    );
+
+    // the PR's acceptance bar, asserted in-run so `cargo bench` itself
+    // fails loudly, not just the CI smoke gate over the JSON
+    assert!(
+        full_reduction >= 3.0,
+        "racing spent too many full-fidelity evals: {full_reduction:.2}x < 3x"
+    );
+    assert!(
+        mean_regression <= 2.0,
+        "racing regressed the best value by {mean_regression:.2}% (> 2%)"
+    );
+
+    let mut doc = Json::obj();
+    doc.set("bench", Json::Str("racing".into()));
+    doc.set("quick", Json::Bool(quick));
+    doc.set("method", Json::Str(METHOD.into()));
+    doc.set("budget", Json::Num(budget as f64));
+    doc.set("repeats", Json::Num(REPEATS as f64));
+    doc.set("seeds", Json::Num(seeds.len() as f64));
+    doc.set("eta", Json::Num(racing.eta as f64));
+    doc.set("min_tier_evals", Json::Num(racing.min_tier_evals as f64));
+    doc.set("full_evals_off", Json::Num(full_off as f64));
+    doc.set("full_evals_on", Json::Num(full_on as f64));
+    doc.set("full_eval_reduction", Json::Num(full_reduction));
+    doc.set("des_runs_off", Json::Num(sims_off as f64));
+    doc.set("des_runs_on", Json::Num(sims_on as f64));
+    doc.set("des_run_reduction", Json::Num(sims_reduction));
+    doc.set("mean_best_regression_pct", Json::Num(mean_regression));
+    doc.set("wall_off_s", Json::Num(wall_off));
+    doc.set("wall_on_s", Json::Num(wall_on));
+    doc.set("finalists_bitwise_identical", Json::Bool(true));
+    std::fs::write("BENCH_racing.json", doc.to_string() + "\n").unwrap();
+    println!("wrote BENCH_racing.json");
+}

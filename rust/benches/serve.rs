@@ -22,7 +22,7 @@ use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
 use catla::optim::core::DEFAULT_BATCH_CHUNK;
-use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, TuningOutcome};
+use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, RacingSettings, TuningOutcome};
 use catla::serve::{Dispatcher, ServeSession, DEFAULT_CACHE_ENTRIES};
 use catla::util::json::Json;
 use catla::util::pool::default_threads;
@@ -67,6 +67,7 @@ fn settings() -> TuningSettings {
         cache_entries: None,
         retry_max: 2,
         retry_backoff_ms: 0,
+        racing: RacingSettings::default(),
     }
 }
 

@@ -31,6 +31,7 @@ use std::path::Path;
 
 use crate::catla::history::History;
 use crate::catla::journal::{Journal, JOURNAL_SUFFIX};
+use crate::optim::result::Fidelity;
 use crate::util::csv::Csv;
 use crate::util::durable;
 
@@ -73,6 +74,7 @@ impl fmt::Display for FsckReport {
 /// per-parameter display cells, in log-column order.
 struct MatRec {
     value: f64,
+    fid: Fidelity,
     cells: Vec<String>,
 }
 
@@ -82,30 +84,46 @@ struct MatRec {
 /// evals in order with the driver's early-stop rule applied — a told
 /// slice may contain evals past the stopping point, which the driver
 /// never records.
-fn materialized_records(j: &Journal, prior_rows: &[Vec<String>], vi: usize, dims: &[usize]) -> Result<Vec<MatRec>, String> {
+fn materialized_records(
+    j: &Journal,
+    prior_rows: &[Vec<String>],
+    prior_fids: &[Fidelity],
+    vi: usize,
+    dims: &[usize],
+) -> Result<Vec<MatRec>, String> {
     let mut recs = Vec::new();
-    for row in prior_rows {
+    for (k, row) in prior_rows.iter().enumerate() {
         let value: f64 = row[vi].parse().map_err(|_| "bad runtime cell in prior log row")?;
         recs.push(MatRec {
             value,
+            fid: prior_fids.get(k).copied().unwrap_or(Fidelity::Full),
             cells: dims.iter().map(|&i| row[i].clone()).collect(),
         });
     }
-    let mut best = recs.iter().map(|r| r.value).fold(f64::INFINITY, f64::min);
+    // stall accounting and the running best consider full-fidelity evals
+    // only, exactly like the live session's tell_values_tiered
+    let mut best = recs
+        .iter()
+        .filter(|r| r.fid.is_full())
+        .map(|r| r.value)
+        .fold(f64::INFINITY, f64::min);
     let mut stall = 0usize;
     let patience = j.header.early_patience;
     'slices: for slice in &j.slices {
-        for (value, cfg) in &slice.evals {
-            if patience > 0 {
-                if *value < best * (1.0 - j.header.early_tol) {
-                    stall = 0;
-                } else {
-                    stall += 1;
+        for (value, fid, cfg) in &slice.evals {
+            if fid.is_full() {
+                if patience > 0 {
+                    if *value < best * (1.0 - j.header.early_tol) {
+                        stall = 0;
+                    } else {
+                        stall += 1;
+                    }
                 }
+                best = best.min(*value);
             }
-            best = best.min(*value);
             recs.push(MatRec {
                 value: *value,
+                fid: *fid,
                 cells: cfg.iter().map(|v| format!("{v}")).collect(),
             });
             if patience > 0 && stall >= patience {
@@ -129,7 +147,7 @@ fn materialize_log(j: &Journal, log_path: &Path) -> Result<(), String> {
     header.extend(j.header.params.iter().cloned());
 
     // the prior prefix comes from the existing log's clean rows
-    let prior_rows: Vec<Vec<String>> = if j.header.prior > 0 {
+    let (prior_rows, prior_fids): (Vec<Vec<String>>, Vec<Fidelity>) = if j.header.prior > 0 {
         let (csv, _torn) = Csv::load_tolerant(log_path)
             .map_err(|e| format!("prior log needed by the journal is unreadable: {e}"))?;
         if csv.rows.len() < j.header.prior {
@@ -142,6 +160,7 @@ fn materialize_log(j: &Journal, log_path: &Path) -> Result<(), String> {
         let vi = csv
             .col_index("runtime_s")
             .ok_or("prior log missing runtime_s")?;
+        let fi = csv.col_index("fidelity");
         let dims: Vec<usize> = j
             .header
             .params
@@ -152,39 +171,66 @@ fn materialize_log(j: &Journal, log_path: &Path) -> Result<(), String> {
             })
             .collect::<Result<_, _>>()?;
         // re-order the prior cells into the journal's column order
-        csv.rows[..j.header.prior]
+        let rows: Vec<Vec<String>> = csv.rows[..j.header.prior]
             .iter()
             .map(|row| {
                 let mut out = vec![row[vi].clone()];
                 out.extend(dims.iter().map(|&i| row[i].clone()));
                 out
             })
-            .collect()
+            .collect();
+        let fids: Vec<Fidelity> = csv.rows[..j.header.prior]
+            .iter()
+            .map(|row| match fi {
+                Some(i) => Fidelity::parse(&row[i]),
+                None => Ok(Fidelity::Full),
+            })
+            .collect::<Result<_, _>>()?;
+        (rows, fids)
     } else {
-        Vec::new()
+        (Vec::new(), Vec::new())
     };
     // prior_rows now hold [runtime, params...]; adapt indices
     let recs = materialized_records(
         j,
         &prior_rows,
+        &prior_fids,
         0,
         &(1..=j.header.params.len()).collect::<Vec<_>>(),
     )?;
 
+    // same conditional column rule as History::write_tuning_records_to
+    let with_fidelity = recs.iter().any(|r| !r.fid.is_full());
+    if with_fidelity {
+        header.push("fidelity".to_string());
+    }
     let mut csv = Csv {
         header,
         rows: Vec::new(),
     };
-    let mut best = f64::INFINITY;
+    // best-so-far mirrors Recorder::record_tiered: only full-fidelity
+    // values compete; a pruned row shows the current full best (or its
+    // own value before any full record exists)
+    let mut best: Option<f64> = None;
     for (i, r) in recs.iter().enumerate() {
-        best = best.min(r.value);
+        let bsf = match best {
+            None => r.value,
+            Some(b) if r.fid.is_full() => b.min(r.value),
+            Some(b) => b,
+        };
+        if r.fid.is_full() {
+            best = Some(bsf);
+        }
         let mut row = vec![
             (i + 1).to_string(),
             j.header.label.clone(),
             format!("{:.3}", r.value),
-            format!("{best:.3}"),
+            format!("{bsf:.3}"),
         ];
         row.extend(r.cells.iter().cloned());
+        if with_fidelity {
+            row.push(r.fid.label());
+        }
         csv.push_row(row);
     }
     csv.save(log_path).map_err(|e| e.to_string())
@@ -201,10 +247,11 @@ fn complete_summary(j: &Journal, history: &History, log_path: &Path) -> Result<b
     ];
     header.extend(j.header.params.iter().map(|p| format!("best.{p}")));
 
-    let prior_rows: Vec<Vec<String>> = if j.header.prior > 0 {
+    let (prior_rows, prior_fids): (Vec<Vec<String>>, Vec<Fidelity>) = if j.header.prior > 0 {
         let (csv, _torn) = Csv::load_tolerant(log_path)
             .map_err(|e| format!("final log needed by the journal is unreadable: {e}"))?;
         let vi = csv.col_index("runtime_s").ok_or("final log missing runtime_s")?;
+        let fi = csv.col_index("fidelity");
         let dims: Vec<usize> = j
             .header
             .params
@@ -218,26 +265,39 @@ fn complete_summary(j: &Journal, history: &History, log_path: &Path) -> Result<b
                 csv.rows.len()
             ));
         }
-        csv.rows[..j.header.prior]
+        let rows: Vec<Vec<String>> = csv.rows[..j.header.prior]
             .iter()
             .map(|row| {
                 let mut out = vec![row[vi].clone()];
                 out.extend(dims.iter().map(|&i| row[i].clone()));
                 out
             })
-            .collect()
+            .collect();
+        let fids: Vec<Fidelity> = csv.rows[..j.header.prior]
+            .iter()
+            .map(|row| match fi {
+                Some(i) => Fidelity::parse(&row[i]),
+                None => Ok(Fidelity::Full),
+            })
+            .collect::<Result<_, _>>()?;
+        (rows, fids)
     } else {
-        Vec::new()
+        (Vec::new(), Vec::new())
     };
     let recs = materialized_records(
         j,
         &prior_rows,
+        &prior_fids,
         0,
         &(1..=j.header.params.len()).collect::<Vec<_>>(),
     )?;
+    // the declared best is full-fidelity evidence, with the same
+    // defensive all-pruned fallback as Recorder::finish
     let best = recs
         .iter()
+        .filter(|r| r.fid.is_full())
         .min_by(|a, b| a.value.total_cmp(&b.value))
+        .or_else(|| recs.iter().min_by(|a, b| a.value.total_cmp(&b.value)))
         .ok_or("finalized journal holds no evaluations")?;
     let mut row = vec![
         j.header.label.clone(),
@@ -414,6 +474,7 @@ mod tests {
             cache_entries: None,
             retry_max: 0,
             retry_backoff_ms: 0,
+            racing: Default::default(),
         }
     }
 
@@ -424,10 +485,20 @@ mod tests {
         let mut cfg = HadoopConfig::default();
         cfg.set(spec.ranges[0].index, 8.0);
         durable::append_framed(&jpath, &journal::header_payload(&settings(), "bobyqa", &spec, 0), "x").unwrap();
-        durable::append_framed(&jpath, &journal::slice_payload(false, &spec, &[cfg.clone()], &[120.5]), "x").unwrap();
+        durable::append_framed(
+            &jpath,
+            &journal::slice_payload(false, &spec, &[cfg.clone()], &[120.5], &[Fidelity::Full]),
+            "x",
+        )
+        .unwrap();
         let mut cfg2 = cfg.clone();
         cfg2.set(spec.ranges[0].index, 12.0);
-        durable::append_framed(&jpath, &journal::slice_payload(false, &spec, &[cfg2], &[98.25]), "x").unwrap();
+        durable::append_framed(
+            &jpath,
+            &journal::slice_payload(false, &spec, &[cfg2], &[98.25], &[Fidelity::Full]),
+            "x",
+        )
+        .unwrap();
         if finalized {
             durable::append_framed(&jpath, journal::FIN, "x").unwrap();
         }

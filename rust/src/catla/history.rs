@@ -161,7 +161,14 @@ impl History {
         records: &[EvalRecord],
     ) -> Result<PathBuf, String> {
         let path = self.dir.join(file_name);
-        let header = Self::tuning_header(spec);
+        let mut header = Self::tuning_header(spec);
+        // racing runs carry an extra fidelity column; a log whose every
+        // record is full fidelity stays byte-identical to the pre-racing
+        // layout (and keeps feeding older readers unchanged)
+        let with_fidelity = records.iter().any(|r| !r.fidelity.is_full());
+        if with_fidelity {
+            header.push("fidelity".to_string());
+        }
         let mut csv = Csv {
             header: header.clone(),
             rows: Vec::new(),
@@ -175,6 +182,9 @@ impl History {
             ];
             for r in &spec.ranges {
                 row.push(format!("{}", rec.config.get(r.index)));
+            }
+            if with_fidelity {
+                row.push(rec.fidelity.label());
             }
             csv.push_row(row);
         }
@@ -333,6 +343,34 @@ mod tests {
         assert_eq!(csv.rows.len(), 4);
         let conv = History::convergence_from_log(&csv).unwrap();
         assert_eq!(conv.last().unwrap().1, 90.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fidelity_column_appears_only_on_racing_logs() {
+        use crate::optim::result::Fidelity;
+        let dir = tmp("fidelity");
+        let h = History::open(&dir).unwrap();
+        let spec = TuningSpec::fig2();
+        // all-full log: pre-racing layout, no fidelity column
+        let full = outcome(&spec, &[120.0, 100.0]);
+        h.write_tuning_log(&spec, &full).unwrap();
+        assert!(h.load_tuning_log().unwrap().col_index("fidelity").is_none());
+        // a pruned record brings the column in, rendered via label()
+        let mut rec = Recorder::new();
+        rec.record_tiered(vec![0.5; spec.dims()], HadoopConfig::default(), 130.0, Fidelity::Full);
+        rec.record_tiered(
+            vec![0.5; spec.dims()],
+            HadoopConfig::default(),
+            99.0,
+            Fidelity::Seeds(1),
+        );
+        let raced = rec.finish("random");
+        h.write_tuning_log(&spec, &raced).unwrap();
+        let csv = h.load_tuning_log().unwrap();
+        let fi = csv.col_index("fidelity").expect("racing log missing fidelity column");
+        assert_eq!(csv.rows[0][fi], "full");
+        assert_eq!(csv.rows[1][fi], "1");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

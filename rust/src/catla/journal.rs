@@ -19,15 +19,22 @@
 //! [`crate::util::durable::append_framed`]):
 //!
 //! * `catla-journal v1 <optimizer> <label> <seed> <budget> <repeats>
-//!   <chunk> <patience> <tol-bits> <prior> <params>` — written once,
-//!   before the first slice; `prior` is the number of tuning-log CSV
-//!   rows the session replayed at open, `params` the comma-joined spec
-//!   range names. [`Journal::check_header`] refuses to re-drive under
-//!   different settings (determinism would silently break).
+//!   <chunk> <patience> <tol-bits> <prior> <params>
+//!   [racing:eta=E;min=M]` — written once, before the first slice;
+//!   `prior` is the number of tuning-log CSV rows the session replayed
+//!   at open, `params` the comma-joined spec range names. The trailing
+//!   racing field appears only when `racing.enabled=true`, so
+//!   racing-off journals are byte-identical to the pre-racing format
+//!   (and v1 journals parse as racing-off). [`Journal::check_header`]
+//!   refuses to re-drive under different settings (determinism would
+//!   silently break).
 //! * `slice <s|x> <eval>...` — one per told slice; `s` slices consumed
 //!   simulator seeds, `x` (external ask/tell) did not. Each eval is
-//!   `<value-bits>:<cfg-bits,...>` — full-precision hex bits of the
-//!   folded value and of each spec-range config value.
+//!   `<value-bits>[@<fid>]:<cfg-bits,...>` — full-precision hex bits of
+//!   the folded value and of each spec-range config value. The `@<fid>`
+//!   marker (see [`Fidelity::label`]) appears only on values racing
+//!   pruned below full fidelity, so racing-off slices are byte-identical
+//!   to the pre-racing format.
 //! * `fin` — the run finalized: the final tuning CSV is durably on disk
 //!   (it is written *before* `fin`), the summary row may or may not be.
 //!   Recovery appends the summary row only if missing, then removes the
@@ -38,6 +45,8 @@ use std::path::{Path, PathBuf};
 use crate::catla::optimizer_runner::TuningSettings;
 use crate::config::params::HadoopConfig;
 use crate::config::spec::TuningSpec;
+use crate::optim::racing::RacingSettings;
+use crate::optim::result::Fidelity;
 use crate::util::durable;
 
 const MAGIC: &str = "catla-journal v1";
@@ -65,6 +74,8 @@ pub struct JournalHeader {
     /// Tuning-log CSV rows the session replayed as prior at open time.
     pub prior: usize,
     pub params: Vec<String>,
+    /// Racing knobs the run used (default = off, the v1 header form).
+    pub racing: RacingSettings,
 }
 
 /// One told slice: the values fed to `tell_values` (exact bits) plus the
@@ -74,8 +85,9 @@ pub struct JournalHeader {
 pub struct JournalSlice {
     /// `true` for external ask/tell slices (no simulator seeds consumed).
     pub external: bool,
-    /// `(folded value, config value per spec range)` per candidate.
-    pub evals: Vec<(f64, Vec<f64>)>,
+    /// `(folded value, fidelity, config value per spec range)` per
+    /// candidate; fidelity is `Full` unless racing pruned the candidate.
+    pub evals: Vec<(f64, Fidelity, Vec<f64>)>,
 }
 
 #[derive(Clone, Debug)]
@@ -98,7 +110,7 @@ pub fn header_payload(
     prior: usize,
 ) -> String {
     let params: Vec<&str> = spec.ranges.iter().map(|r| r.name()).collect();
-    format!(
+    let mut out = format!(
         "{MAGIC}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:016x}\t{}\t{}",
         settings.optimizer,
         label,
@@ -110,7 +122,15 @@ pub fn header_payload(
         settings.early_tol.to_bits(),
         prior,
         params.join(",")
-    )
+    );
+    // racing-off headers stay byte-identical to the pre-racing format
+    if settings.racing.enabled {
+        out.push_str(&format!(
+            "\tracing:eta={};min={}",
+            settings.racing.eta, settings.racing.min_tier_evals
+        ));
+    }
+    out
 }
 
 /// Render one slice record payload from the told slice.
@@ -119,17 +139,25 @@ pub fn slice_payload(
     spec: &TuningSpec,
     cfgs: &[HadoopConfig],
     vals: &[f64],
+    fids: &[Fidelity],
 ) -> String {
     debug_assert_eq!(cfgs.len(), vals.len());
+    debug_assert_eq!(cfgs.len(), fids.len());
     let mut out = format!("slice\t{}", if external { "x" } else { "s" });
-    for (cfg, v) in cfgs.iter().zip(vals) {
+    for ((cfg, v), fid) in cfgs.iter().zip(vals).zip(fids) {
         let bits: Vec<String> = spec
             .ranges
             .iter()
             .map(|r| format!("{:016x}", cfg.get(r.index).to_bits()))
             .collect();
         out.push('\t');
-        out.push_str(&format!("{:016x}:{}", v.to_bits(), bits.join(",")));
+        // full-fidelity evals carry no marker — the pre-racing format
+        let marker = if fid.is_full() {
+            String::new()
+        } else {
+            format!("@{}", fid.label())
+        };
+        out.push_str(&format!("{:016x}{marker}:{}", v.to_bits(), bits.join(",")));
     }
     out
 }
@@ -140,9 +168,35 @@ fn parse_bits(field: &str, what: &str) -> Result<f64, String> {
         .map_err(|_| format!("bad {what} bits {field:?}"))
 }
 
+fn parse_racing(field: &str) -> Result<RacingSettings, String> {
+    let body = field
+        .strip_prefix("racing:")
+        .ok_or_else(|| format!("bad racing field {field:?} in journal header"))?;
+    let mut racing = RacingSettings {
+        enabled: true,
+        ..RacingSettings::default()
+    };
+    for part in body.split(';') {
+        match part.split_once('=') {
+            Some(("eta", v)) => {
+                racing.eta = v.parse().map_err(|_| format!("bad racing.eta {v:?}"))?;
+            }
+            Some(("min", v)) => {
+                racing.min_tier_evals =
+                    v.parse().map_err(|_| format!("bad racing.min_tier_evals {v:?}"))?;
+            }
+            _ => return Err(format!("bad racing field part {part:?} in journal header")),
+        }
+    }
+    racing.validate()?;
+    Ok(racing)
+}
+
 fn parse_header(payload: &str) -> Result<JournalHeader, String> {
     let f: Vec<&str> = payload.split('\t').collect();
-    if f.len() != 11 || f[0] != MAGIC {
+    // 11 fields = pre-racing (racing off); 12 = racing-on with the
+    // trailing racing:eta=E;min=M field
+    if !(f.len() == 11 || f.len() == 12) || f[0] != MAGIC {
         return Err(format!("malformed journal header record ({} fields)", f.len()));
     }
     let num = |i: usize, what: &str| -> Result<usize, String> {
@@ -163,6 +217,11 @@ fn parse_header(payload: &str) -> Result<JournalHeader, String> {
         } else {
             f[10].split(',').map(str::to_string).collect()
         },
+        racing: if f.len() == 12 {
+            parse_racing(f[11])?
+        } else {
+            RacingSettings::default()
+        },
     })
 }
 
@@ -176,9 +235,14 @@ fn parse_slice(payload: &str, dims: usize) -> Result<JournalSlice, String> {
     };
     let mut evals = Vec::new();
     for e in f {
-        let (vbits, cbits) = e
+        let (vfield, cbits) = e
             .split_once(':')
             .ok_or_else(|| format!("malformed slice eval {e:?}"))?;
+        // unmarked value = full fidelity (the pre-racing format)
+        let (vbits, fid) = match vfield.split_once('@') {
+            None => (vfield, Fidelity::Full),
+            Some((v, label)) => (v, Fidelity::parse(label)?),
+        };
         let value = parse_bits(vbits, "value")?;
         let cfg: Vec<f64> = cbits
             .split(',')
@@ -187,7 +251,7 @@ fn parse_slice(payload: &str, dims: usize) -> Result<JournalSlice, String> {
         if cfg.len() != dims {
             return Err(format!("slice eval has {} config dims, header declares {dims}", cfg.len()));
         }
-        evals.push((value, cfg));
+        evals.push((value, fid, cfg));
     }
     if evals.is_empty() {
         return Err("slice record with no evaluations".into());
@@ -257,6 +321,20 @@ impl Journal {
             Some(("early.tol", h.early_tol.to_string(), settings.early_tol.to_string()))
         } else if h.params != params {
             Some(("params.spec", h.params.join(","), params.join(",")))
+        } else if h.racing != settings.racing && (h.racing.enabled || settings.racing.enabled) {
+            // eta/min drift on a racing-off run is irrelevant — only an
+            // enabled racing layer shapes the candidate/seed stream
+            Some((
+                "racing",
+                format!(
+                    "enabled={},eta={},min={}",
+                    h.racing.enabled, h.racing.eta, h.racing.min_tier_evals
+                ),
+                format!(
+                    "enabled={},eta={},min={}",
+                    settings.racing.enabled, settings.racing.eta, settings.racing.min_tier_evals
+                ),
+            ))
         } else {
             None
         };
@@ -289,6 +367,7 @@ mod tests {
             cache_entries: None,
             retry_max: 0,
             retry_backoff_ms: 0,
+            racing: Default::default(),
         }
     }
 
@@ -324,23 +403,64 @@ mod tests {
         journal_with(
             &[
                 header_payload(&st, "bobyqa", &sp, 3),
-                slice_payload(false, &sp, &[cfg.clone(), cfg.clone()], &vals),
-                slice_payload(true, &sp, &[cfg.clone()], &vals[..1]),
+                slice_payload(
+                    false,
+                    &sp,
+                    &[cfg.clone(), cfg.clone()],
+                    &vals,
+                    &[Fidelity::Full, Fidelity::Full],
+                ),
+                slice_payload(true, &sp, &[cfg.clone()], &vals[..1], &[Fidelity::Full]),
             ],
             &path,
         );
         let j = Journal::load(&path).unwrap().unwrap();
         assert_eq!(j.header.label, "bobyqa");
         assert_eq!(j.header.prior, 3);
+        assert!(!j.header.racing.enabled, "racing-off header must parse as off");
         assert!(!j.finalized);
         assert_eq!(j.slices.len(), 2);
         assert!(!j.slices[0].external);
         assert!(j.slices[1].external);
         assert_eq!(j.slices[0].evals[1].0.to_bits(), vals[1].to_bits());
-        for (r, got) in sp.ranges.iter().zip(&j.slices[0].evals[0].1) {
+        assert_eq!(j.slices[0].evals[1].1, Fidelity::Full);
+        for (r, got) in sp.ranges.iter().zip(&j.slices[0].evals[0].2) {
             assert_eq!(got.to_bits(), cfg.get(r.index).to_bits());
         }
         j.check_header(&st, &sp).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn racing_header_and_fidelity_markers_roundtrip() {
+        let dir = tmp("racing");
+        let path = journal_path(&dir, "tuning_log.csv");
+        let sp = spec();
+        let mut st = settings();
+        st.racing = RacingSettings {
+            enabled: true,
+            eta: 3,
+            min_tier_evals: 1,
+        };
+        let cfg = crate::config::params::HadoopConfig::default();
+        let vals = [40.5_f64, 41.5, 42.5];
+        let fids = [Fidelity::CostModel, Fidelity::Seeds(1), Fidelity::Full];
+        let payload = slice_payload(false, &sp, &[cfg.clone(), cfg.clone(), cfg], &vals, &fids);
+        assert!(payload.contains("@model") && payload.contains("@1"), "{payload}");
+        journal_with(&[header_payload(&st, "bobyqa", &sp, 0), payload], &path);
+        let j = Journal::load(&path).unwrap().unwrap();
+        assert_eq!(j.header.racing, st.racing);
+        let got: Vec<Fidelity> = j.slices[0].evals.iter().map(|e| e.1).collect();
+        assert_eq!(got, fids);
+        j.check_header(&st, &sp).unwrap();
+        // racing drift is refused, like any other pinned setting
+        let mut off = st.clone();
+        off.racing = RacingSettings::default();
+        let err = j.check_header(&off, &sp).unwrap_err();
+        assert!(err.contains("different racing"), "{err}");
+        // but eta drift between two racing-OFF runs is irrelevant
+        let plain_header = header_payload(&off, "bobyqa", &sp, 0);
+        assert_eq!(plain_header.split('\t').count(), 11, "racing-off header grew a field");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

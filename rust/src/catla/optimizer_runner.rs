@@ -13,9 +13,12 @@ use crate::catla::history::History;
 use crate::catla::project::Project;
 use crate::config::params::N_AOT_PARAMS;
 use crate::config::spec::TuningSpec;
-use crate::hadoop::SimCluster;
-use crate::optim::core::{ClusterObjective, Driver, EarlyStop, DEFAULT_BATCH_CHUNK};
-use crate::optim::surrogate::{CandidateScorer, Prescreen};
+use crate::hadoop::{costmodel, SimCluster};
+use crate::optim::core::{
+    BatchObjective, ClusterObjective, Driver, EarlyStop, DEFAULT_BATCH_CHUNK,
+};
+use crate::optim::racing::{RacingObjective, RacingSettings};
+use crate::optim::surrogate::{CandidateScorer, NativeScorer, Prescreen};
 use crate::optim::{EvalRecord, Method, ParamSpace, TuningOutcome};
 
 /// Parsed tuning settings (from `tuning.properties`).
@@ -50,6 +53,10 @@ pub struct TuningSettings {
     /// (`serve.retry.backoff_ms`), scaled linearly by retry number —
     /// bounded and deterministic. 0 (the default) retries immediately.
     pub retry_backoff_ms: u64,
+    /// Multi-fidelity racing knobs (`racing.{enabled,eta,min_tier_evals}`).
+    /// Off by default — outcomes are then byte-identical to a driver
+    /// without the racing layer.
+    pub racing: RacingSettings,
 }
 
 impl TuningSettings {
@@ -92,6 +99,16 @@ impl TuningSettings {
                 .transpose()?,
             retry_max: parse_usize("serve.retry.max", 2)?,
             retry_backoff_ms: parse_usize("serve.retry.backoff_ms", 0)? as u64,
+            racing: {
+                let d = RacingSettings::default();
+                let racing = RacingSettings {
+                    enabled: t.get("racing.enabled").map(|v| v == "true").unwrap_or(d.enabled),
+                    eta: parse_usize("racing.eta", d.eta)?,
+                    min_tier_evals: parse_usize("racing.min_tier_evals", d.min_tier_evals)?,
+                };
+                racing.validate()?;
+                racing
+            },
         })
     }
 
@@ -120,14 +137,19 @@ impl TuningSettings {
     }
 }
 
-/// Tuned parameters the analytic cost model is blind to: spec-declared
-/// dims beyond the stable [`N_AOT_PARAMS`]-slot AOT feature row
-/// (`HadoopConfig::to_f32_row` exports exactly the builtin prefix, so
-/// the surrogate's predictions cannot react to anything after it).
+/// Tuned parameters the analytic cost model is genuinely blind to.
+///
+/// The stable [`N_AOT_PARAMS`]-slot AOT prefix is always covered, and
+/// [`costmodel::extended_param_mapped`] whitelists the post-prefix
+/// extras the model maps by name (codec choice, shuffle input buffer
+/// percent). Only spec-declared dims in neither set are listed — those
+/// never move a prediction, so the surrogate prescreen ignores them and
+/// multi-fidelity racing refuses its tier-0 model pass (falling back to
+/// tier 1, one DES seed) whenever any appear in the spec.
 pub fn cost_model_blind_params(spec: &TuningSpec) -> Vec<&str> {
     spec.ranges
         .iter()
-        .filter(|r| r.index >= N_AOT_PARAMS)
+        .filter(|r| r.index >= N_AOT_PARAMS && !costmodel::extended_param_mapped(&r.def))
         .map(|r| r.name())
         .collect()
 }
@@ -176,24 +198,43 @@ impl<'a> OptimizerRunner<'a> {
                 workload.name
             ));
         }
-        if settings.prescreen {
-            // satellite guard: the analytic model consumes only the AOT
-            // prefix — dims beyond it silently never move a prediction
-            let blind = cost_model_blind_params(&spec);
-            if !blind.is_empty() {
-                eprintln!(
-                    "note: cost-model prescreen ignores spec-declared parameter(s) {} — \
-                     beyond the {N_AOT_PARAMS}-slot AOT feature row, they never affect \
-                     surrogate predictions (see ROADMAP \"Cost-model coverage\")",
-                    blind.join(", ")
-                );
-            }
+        // satellite guard: one precise note per run, only for params the
+        // model truly cannot map, only when something consumes the model
+        let blind = cost_model_blind_params(&spec);
+        if !blind.is_empty() && (settings.prescreen || settings.racing.enabled) {
+            eprintln!(
+                "note: the analytic cost model cannot map spec-declared parameter(s) {} — \
+                 surrogate prescreen predictions never react to them, and multi-fidelity \
+                 racing skips its tier-0 model pass (tier 1, one DES seed, becomes the \
+                 cheapest fidelity)",
+                blind.join(", ")
+            );
         }
         let base = project.base_config()?;
         let space = ParamSpace::new(spec.clone(), base);
+        let cluster_spec = self.cluster.spec.clone();
 
         let outcome = {
-            let mut obj = ClusterObjective::new(self.cluster, &workload, settings.repeats);
+            let inner = ClusterObjective::new(self.cluster, &workload, settings.repeats);
+            let mut plain;
+            let mut raced;
+            let obj: &mut dyn BatchObjective = if settings.racing.enabled {
+                // tier 0 only when every tuned param is model-visible;
+                // otherwise the race starts at one-seed fidelity
+                let tier0: Option<Box<dyn CandidateScorer>> = if blind.is_empty() {
+                    Some(Box::new(NativeScorer {
+                        workload: workload.clone(),
+                        cluster: cluster_spec,
+                    }))
+                } else {
+                    None
+                };
+                raced = RacingObjective::new(inner, settings.racing, tier0);
+                &mut raced
+            } else {
+                plain = inner;
+                &mut plain
+            };
             let mut driver = settings.driver();
             if settings.prescreen {
                 let scorer = self
@@ -207,23 +248,29 @@ impl<'a> OptimizerRunner<'a> {
                         let mut p = Prescreen::new(scorer);
                         p.seed = settings.seed;
                         p.prime(&space)?;
-                        driver.run(&mut p, &space, &mut obj)?
+                        driver.run(&mut p, &space, obj)?
                     }
                     other => {
                         let mut opt = Method::from_name(other, settings.seed)?.build();
-                        driver.run(opt.as_mut(), &space, &mut obj)?
+                        driver.run(opt.as_mut(), &space, obj)?
                     }
                 }
             } else {
                 let mut opt = Method::from_name(&settings.optimizer, settings.seed)?.build();
-                driver.run(opt.as_mut(), &space, &mut obj)?
+                driver.run(opt.as_mut(), &space, obj)?
             }
         };
 
         let history = History::open(&project.dir).map_err(|e| e.to_string())?;
         let log_path = history.write_tuning_log(&spec, &outcome)?;
         history.append_summary(&spec, &outcome)?;
-        let cluster_evals = outcome.evals() * settings.repeats;
+        // DES runs actually spent: with racing, pruned candidates cost
+        // fewer (or zero) simulations than `repeats`
+        let cluster_evals = outcome
+            .records
+            .iter()
+            .map(|r| r.fidelity.sims(settings.repeats))
+            .sum();
         Ok(TuningRunOutcome {
             outcome,
             cluster_evals,
@@ -330,18 +377,82 @@ mod tests {
     }
 
     #[test]
-    fn cost_model_blind_params_names_exactly_the_post_prefix_dims() {
+    fn cost_model_blind_params_names_exactly_the_unmappable_dims() {
+        // codec choice and shuffle buffer percent are post-prefix but
+        // model-mapped now; only the made-up param is truly blind
         let spec = crate::config::spec::TuningSpec::parse(
             "param mapreduce.task.io.sort.mb int 64 1024\n\
              param x.shuffle.buffer.kb int 32 4096\n\
-             param mapreduce.map.output.compress.codec cat none,snappy,lz4\n",
+             param mapreduce.map.output.compress.codec cat none,snappy,lz4\n\
+             param mapreduce.reduce.shuffle.input.buffer.percent float 0.1 0.9\n",
+        )
+        .unwrap();
+        assert_eq!(cost_model_blind_params(&spec), vec!["x.shuffle.buffer.kb"]);
+        // a codec list with an unknown label cannot be mapped
+        let spec = crate::config::spec::TuningSpec::parse(
+            "param mapreduce.map.output.compress.codec cat none,brotli\n",
         )
         .unwrap();
         assert_eq!(
             cost_model_blind_params(&spec),
-            vec!["x.shuffle.buffer.kb", "mapreduce.map.output.compress.codec"]
+            vec!["mapreduce.map.output.compress.codec"]
         );
         assert!(cost_model_blind_params(&crate::config::spec::TuningSpec::fig3()).is_empty());
+    }
+
+    #[test]
+    fn racing_settings_parse_and_validate() {
+        let dir = make_tuning_project("racing-parse", "random", 8);
+        let project = Project::load(&dir).unwrap();
+        let s = TuningSettings::from_project(&project).unwrap();
+        assert!(!s.racing.enabled, "racing must default off");
+        assert_eq!(s.racing.eta, 4);
+        assert_eq!(s.racing.min_tier_evals, 2);
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=8\nracing.enabled=true\nracing.eta=3\nracing.min_tier_evals=1\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let s = TuningSettings::from_project(&project).unwrap();
+        assert!(s.racing.enabled && s.racing.eta == 3 && s.racing.min_tier_evals == 1);
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=8\nracing.enabled=true\nracing.eta=1\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        assert!(TuningSettings::from_project(&project).is_err(), "eta=1 must be rejected");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn racing_run_spends_fewer_cluster_evals_and_keeps_a_full_best() {
+        let dir = make_tuning_project("racing-run", "random", 24);
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=24\nrepeats=3\nseed=5\nracing.enabled=true\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        assert!(
+            out.cluster_evals < out.outcome.evals() * 3,
+            "racing spent full fidelity everywhere: {} sims for {} evals",
+            out.cluster_evals,
+            out.outcome.evals()
+        );
+        // the declared winner is always full-fidelity evidence
+        let best_full = out
+            .outcome
+            .records
+            .iter()
+            .filter(|r| r.fidelity.is_full())
+            .map(|r| r.value)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(out.outcome.best_value, best_full);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -11,26 +11,32 @@
 //!   checkpoint, now uniform across all DFO methods.
 
 use crate::catla::history::History;
-use crate::catla::optimizer_runner::TuningSettings;
+use crate::catla::optimizer_runner::{cost_model_blind_params, TuningSettings};
 use crate::catla::project::Project;
 use crate::config::params::HadoopConfig;
 use crate::config::spec::TuningSpec;
 use crate::hadoop::SimCluster;
-use crate::optim::core::{ClusterObjective, Driver};
-use crate::optim::result::EvalRecord;
+use crate::optim::core::{BatchObjective, ClusterObjective, Driver};
+use crate::optim::racing::RacingObjective;
+use crate::optim::result::{EvalRecord, Fidelity};
+use crate::optim::surrogate::{CandidateScorer, NativeScorer};
 use crate::optim::{Method, ParamSpace, TuningOutcome};
 use crate::util::csv::Csv;
 
 /// Parsed prior evaluations from a tuning log.
 #[derive(Clone, Debug, Default)]
 pub struct PriorRuns {
-    /// (config values per spec dimension, runtime)
-    pub evals: Vec<(Vec<f64>, f64)>,
+    /// (config values per spec dimension, runtime, evidence tier) — the
+    /// tier comes from the log's optional trailing `fidelity` column
+    /// (racing runs only) and defaults to [`Fidelity::Full`], so logs
+    /// written before racing existed replay unchanged.
+    pub evals: Vec<(Vec<f64>, f64, Fidelity)>,
 }
 
 impl PriorRuns {
     pub fn from_log(csv: &Csv, spec: &TuningSpec) -> Result<PriorRuns, String> {
         let vi = csv.col_index("runtime_s").ok_or("log missing runtime_s")?;
+        let fi = csv.col_index("fidelity");
         let dims: Vec<usize> = spec
             .ranges
             .iter()
@@ -42,19 +48,29 @@ impl PriorRuns {
         let mut evals = Vec::with_capacity(csv.rows.len());
         for row in &csv.rows {
             let v: f64 = row[vi].parse().map_err(|_| "bad runtime cell")?;
+            let fid = match fi {
+                Some(i) => Fidelity::parse(&row[i])?,
+                None => Fidelity::Full,
+            };
             let xs: Vec<f64> = dims
                 .iter()
                 .map(|&i| row[i].parse::<f64>().map_err(|_| "bad param cell".to_string()))
                 .collect::<Result<_, _>>()?;
-            evals.push((xs, v));
+            evals.push((xs, v, fid));
         }
         Ok(PriorRuns { evals })
     }
 
-    pub fn best(&self) -> Option<&(Vec<f64>, f64)> {
+    /// Best prior evaluation — full-fidelity only, because a raced-out
+    /// candidate's cheap score is not a measurement of the incumbent
+    /// (mirrors the live `Recorder` best discipline). Falls back to the
+    /// overall minimum only if the log holds no full evaluation at all.
+    pub fn best(&self) -> Option<&(Vec<f64>, f64, Fidelity)> {
         self.evals
             .iter()
+            .filter(|e| e.2.is_full())
             .min_by(|a, b| a.1.total_cmp(&b.1))
+            .or_else(|| self.evals.iter().min_by(|a, b| a.1.total_cmp(&b.1)))
     }
 
     /// Reconstruct replayable `EvalRecord`s against a parameter space.
@@ -64,7 +80,7 @@ impl PriorRuns {
             .evals
             .iter()
             .enumerate()
-            .map(|(i, (xs, v))| {
+            .map(|(i, (xs, v, fid))| {
                 let mut cfg = base.clone();
                 for (r, x) in space.spec.ranges.iter().zip(xs) {
                     cfg.set(r.index, *x);
@@ -79,6 +95,7 @@ impl PriorRuns {
                     config: cfg,
                     value: *v,
                     best_so_far: 0.0, // recomputed on replay
+                    fidelity: *fid,
                 }
             })
             .collect())
@@ -96,7 +113,9 @@ fn logged_space_spec(project: &Project, csv: &Csv) -> Result<TuningSpec, String>
     // check: a merged log's shared columns would otherwise let the flat
     // global spec shadow the merged space and silently drop every tuned
     // `@workload` dim from the reconstruction
-    let fixed = ["iter", "optimizer", "runtime_s", "best_so_far"];
+    // `fidelity` is the racing runs' trailing evidence-tier column —
+    // never a tuned dimension, so it must not count as a param column
+    let fixed = ["iter", "optimizer", "runtime_s", "best_so_far", "fidelity"];
     let param_cols = csv
         .header
         .iter()
@@ -151,7 +170,7 @@ pub fn best_logged_config(project: &Project) -> Result<Option<HadoopConfig>, Str
     let spec = logged_space_spec(project, &csv)?;
     let space = ParamSpace::new(spec.clone(), project.base_config()?);
     let prior = PriorRuns::from_log(&csv, &spec)?;
-    Ok(prior.best().map(|(xs, _)| {
+    Ok(prior.best().map(|(xs, _, _)| {
         let mut cfg = space.base.clone();
         for (r, x) in spec.ranges.iter().zip(xs) {
             cfg.set(r.index, *x);
@@ -214,10 +233,32 @@ pub fn resume_tuning(
     // to the log size — a too-small budget must not drop history
     let total = budget.max(records.len());
     let mut opt = Method::from_name(&optimizer, settings.seed)?.build();
-    let mut obj = ClusterObjective::new(cluster, &workload, 1);
+    let cluster_spec = cluster.spec.clone();
+    let inner = ClusterObjective::new(cluster, &workload, 1);
+    // a resumed run honors the original run's racing discipline: new
+    // slices race through the same tiers (replayed evaluations keep the
+    // fidelity the log recorded for them and are never re-raced)
+    let mut plain;
+    let mut raced;
+    let obj: &mut dyn BatchObjective = if settings.racing.enabled {
+        let tier0: Option<Box<dyn CandidateScorer>> =
+            if cost_model_blind_params(&spec).is_empty() {
+                Some(Box::new(NativeScorer {
+                    workload: workload.clone(),
+                    cluster: cluster_spec,
+                }))
+            } else {
+                None
+            };
+        raced = RacingObjective::new(inner, settings.racing, tier0);
+        &mut raced
+    } else {
+        plain = inner;
+        &mut plain
+    };
     let mut outcome = Driver::new(total)
         .chunk(settings.batch_chunk)
-        .run_with_history(opt.as_mut(), &space, &mut obj, &records)?;
+        .run_with_history(opt.as_mut(), &space, obj, &records)?;
 
     outcome.optimizer = if records.len() >= budget {
         format!("{optimizer}[resumed,exhausted]")
@@ -319,6 +360,54 @@ mod tests {
         assert!(rebuilt.is_none());
         std::fs::remove_dir_all(&dir).unwrap();
         std::fs::remove_dir_all(&bare).unwrap();
+    }
+
+    #[test]
+    fn racing_resume_replays_fidelities_and_keeps_racing() {
+        let dir = tmp("racing");
+        create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+        std::fs::write(
+            dir.join("params.spec"),
+            "param mapreduce.job.reduces int 2 32 step 2\n\
+             param mapreduce.task.io.sort.mb int 50 800 step 150\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("tuning.properties"),
+            "optimizer=random\nbudget=16\nseed=3\nracing.enabled=true\n",
+        )
+        .unwrap();
+        let project = Project::load(&dir).unwrap();
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let first = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+        assert!(
+            first.outcome.records.iter().any(|r| !r.fidelity.is_full()),
+            "racing run produced no raced-out records"
+        );
+        let resumed = resume_tuning(&mut cluster, &project, 32).unwrap();
+        assert_eq!(resumed.evals(), 32);
+        // the replayed prefix keeps each record's logged fidelity tier
+        // (values to 1e-3: the tuning log rounds runtimes to 3 decimals)
+        for (a, b) in first.outcome.records.iter().zip(&resumed.records) {
+            assert_eq!(a.fidelity, b.fidelity, "replay changed a fidelity tier");
+            assert!((a.value - b.value).abs() < 1e-3);
+        }
+        // the resumed run's NEW slices race too
+        assert!(
+            resumed.records[first.outcome.evals()..]
+                .iter()
+                .any(|r| !r.fidelity.is_full()),
+            "resumed slices did not race"
+        );
+        // best only ever comes from a full-fidelity measurement
+        let best_full = resumed
+            .records
+            .iter()
+            .filter(|r| r.fidelity.is_full())
+            .map(|r| r.value)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(resumed.best_value.to_bits(), best_full.to_bits());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -9,8 +9,22 @@
 //!     (`rust/tests/runtime_integration.rs` asserts it).
 //!
 //! Keep formulas in lockstep with ref.py. Units: MB and seconds.
+//!
+//! # Extended (post-AOT-prefix) parameters
+//!
+//! ref.py and the AOT artifacts consume exactly the 10-slot builtin
+//! prefix ([`crate::config::space::N_AOT_PARAMS`]). Spec-declared extras
+//! used to be invisible to the model; the mapped subset below now moves
+//! the per-task cost structs — and, because the DES samples its per-task
+//! durations from those same structs, the simulator moves in lockstep
+//! automatically. A config whose registry declares none of these is
+//! bit-identical to the pre-extension model. Extras the model still
+//! cannot interpret are *blind*
+//! ([`crate::catla::optimizer_runner::cost_model_blind_params`] lists
+//! them precisely), and blind params disable racing's tier 0.
 
 use crate::config::params::*;
+use crate::config::space::ParamDef;
 use crate::hadoop::ClusterSpec;
 use crate::workloads::WorkloadSpec;
 
@@ -29,6 +43,92 @@ pub const PHASE_NAMES: [&str; N_PHASES] = [
 ];
 
 const EPS: f64 = 1e-6;
+
+/// Default in-memory merge threshold: a reducer merges purely in memory
+/// when its shuffled partition fits in this fraction of its heap
+/// (Hadoop's `mapreduce.reduce.shuffle.input.buffer.percent` default).
+const DEFAULT_SHUFFLE_BUFFER_PCT: f64 = 0.70;
+
+/// Map-output codec character: how a named codec reshapes the
+/// workload's baseline compress ratio and the compression CPU cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CodecEffect {
+    /// `false` for the `none` codec: compression is off regardless of
+    /// the boolean compress knob.
+    pub enabled: bool,
+    /// Multiplier on `WorkloadSpec::compress_ratio` (output-size ratio:
+    /// below 1.0 compresses harder than the workload baseline).
+    pub ratio_mult: f64,
+    /// Multiplier on the compress/decompress CPU terms.
+    pub cpu_mult: f64,
+}
+
+/// Codec table for `mapreduce.map.output.compress.codec`. Labels
+/// outside this table make the parameter blind (no guessing).
+pub fn codec_effect(label: &str) -> Option<CodecEffect> {
+    let (enabled, ratio_mult, cpu_mult) = match label {
+        "none" => (false, 1.0, 0.0),
+        "snappy" => (true, 1.0, 0.6),
+        "lz4" => (true, 1.05, 0.45),
+        "zstd" => (true, 0.85, 1.1),
+        "gzip" => (true, 0.8, 2.2),
+        "deflate" => (true, 0.8, 2.0),
+        "bzip2" => (true, 0.7, 5.0),
+        _ => return None,
+    };
+    Some(CodecEffect {
+        enabled,
+        ratio_mult,
+        cpu_mult,
+    })
+}
+
+/// Effects of the mapped extended parameters a config's registry
+/// declares. Every field defaults to "absent": a builtin-only config
+/// takes identical code paths (and bit-identical results) to the
+/// pre-extension model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExtEffects {
+    /// `mapreduce.map.output.compress.codec` (categorical).
+    pub codec: Option<CodecEffect>,
+    /// `mapreduce.reduce.shuffle.input.buffer.percent` — replaces
+    /// [`DEFAULT_SHUFFLE_BUFFER_PCT`] as the in-memory merge threshold.
+    pub shuffle_buffer_pct: Option<f64>,
+}
+
+/// Look up the mapped extended parameters in `cfg`'s registry. An
+/// unknown codec label degrades to "absent" (identity) — the blind-param
+/// gate in the optimizer runner keeps such specs out of tier 0, so this
+/// is only a defensive fallback.
+pub fn ext_effects(cfg: &HadoopConfig) -> ExtEffects {
+    let reg = cfg.registry();
+    let codec = reg
+        .by_name("mapreduce.map.output.compress.codec")
+        .and_then(|(i, def)| def.category_name(cfg.get(i)))
+        .and_then(codec_effect);
+    let shuffle_buffer_pct = reg
+        .by_name("mapreduce.reduce.shuffle.input.buffer.percent")
+        .map(|(i, _)| cfg.get(i).clamp(0.05, 1.0));
+    ExtEffects {
+        codec,
+        shuffle_buffer_pct,
+    }
+}
+
+/// Can the cost model interpret this spec-declared parameter? Builtin
+/// (AOT-prefix) params are always covered; extras are covered only when
+/// listed here — `cost_model_blind_params` inverts this to produce the
+/// precise blind list that gates surrogate prescreening and racing's
+/// tier 0.
+pub fn extended_param_mapped(def: &ParamDef) -> bool {
+    match def.name.as_str() {
+        "mapreduce.reduce.shuffle.input.buffer.percent" => true,
+        "mapreduce.map.output.compress.codec" => def
+            .categories()
+            .is_some_and(|cats| cats.iter().all(|c| codec_effect(c).is_some())),
+        _ => false,
+    }
+}
 
 /// Task-count / slot geometry for a (config, workload, cluster) triple.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -91,8 +191,23 @@ pub fn map_task_cost(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) ->
     let g = geometry(cfg, wl, cl);
     let b = g.mb_per_map;
     let disk = (cl.disk_mbps).max(EPS);
-    let compress = cfg.get(P_COMPRESS).clamp(0.0, 1.0);
+    let mut compress = cfg.get(P_COMPRESS).clamp(0.0, 1.0);
     let cpu_map = wl.cpu_per_mb_map;
+
+    // mapped extended params: the codec reshapes the compress ratio and
+    // CPU; the `none` codec turns compression off outright. Identity
+    // (bit-exact original formulas) when the registry declares no codec.
+    let ext = ext_effects(cfg);
+    let mut ratio = wl.compress_ratio;
+    let mut codec_cpu = 1.0;
+    match ext.codec {
+        Some(c) if c.enabled => {
+            ratio = (wl.compress_ratio * c.ratio_mult).min(1.0);
+            codec_cpu = c.cpu_mult;
+        }
+        Some(_) => compress = 0.0,
+        None => {}
+    }
 
     // ref.py blends locality into one rate; the DES resolves locality per
     // task, so expose both and let predict_phases() blend identically.
@@ -101,13 +216,13 @@ pub fn map_task_cost(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec) ->
 
     let t_map_fn = b * cpu_map;
     let map_out = b * wl.map_selectivity;
-    let disk_out = map_out * (1.0 - compress * (1.0 - wl.compress_ratio));
+    let disk_out = map_out * (1.0 - compress * (1.0 - ratio));
 
     let buf = cfg.get(P_IO_SORT_MB).max(1.0) * cfg.get(P_SPILL_PERCENT).clamp(0.05, 1.0);
     let spills = (map_out / buf.max(EPS)).ceil().max(1.0);
     let buf_records = (map_out.min(buf) * 1024.0 / wl.record_kb.max(1e-4)).max(2.0);
     let t_sort = map_out * cpu_map * 0.25 * buf_records.log2() / 20.0;
-    let t_compress = map_out * cpu_map * 0.30 * compress;
+    let t_compress = map_out * cpu_map * 0.30 * compress * codec_cpu;
 
     let t_spill_io = disk_out / disk;
     let sort_factor = cfg.get(P_SORT_FACTOR).max(2.0);
@@ -178,12 +293,25 @@ pub fn reduce_task_cost(cfg: &HadoopConfig, wl: &WorkloadSpec, cl: &ClusterSpec)
     let g = geometry(cfg, wl, cl);
     let sh = shuffle_cost(cfg, wl, cl);
     let disk = cl.disk_mbps.max(EPS);
-    let compress = cfg.get(P_COMPRESS).clamp(0.0, 1.0);
+    let mut compress = cfg.get(P_COMPRESS).clamp(0.0, 1.0);
     let sort_factor = cfg.get(P_SORT_FACTOR).max(2.0);
 
-    let t_decompress = sh.per_red_logical_mb * wl.cpu_per_mb_map * 0.10 * compress;
+    // mapped extended params (identity when absent): codec CPU scales
+    // decompression, the shuffle input buffer percent replaces the
+    // default in-memory merge threshold. Wire-size effects already
+    // arrived through map_task_cost's disk_out.
+    let ext = ext_effects(cfg);
+    let mut codec_cpu = 1.0;
+    match ext.codec {
+        Some(c) if c.enabled => codec_cpu = c.cpu_mult,
+        Some(_) => compress = 0.0,
+        None => {}
+    }
+    let buffer_pct = ext.shuffle_buffer_pct.unwrap_or(DEFAULT_SHUFFLE_BUFFER_PCT);
+
+    let t_decompress = sh.per_red_logical_mb * wl.cpu_per_mb_map * 0.10 * compress * codec_cpu;
     let merge_passes = (((g.maps as f64).max(2.0).ln() / sort_factor.ln()).ceil() - 1.0).max(0.0);
-    let in_memory = sh.per_red_mb <= 0.70 * cfg.get(P_RED_MEM_MB);
+    let in_memory = sh.per_red_mb <= buffer_pct * cfg.get(P_RED_MEM_MB);
     let t_merge_io = if in_memory {
         0.0
     } else {
@@ -337,6 +465,104 @@ mod tests {
         let mut c33 = c32.clone();
         c33.set(P_REDUCES, 33.0);
         assert!(predict_runtime(&c33, &wl, &cl) > predict_runtime(&c32, &wl, &cl));
+    }
+
+    fn registry_with(extras: Vec<crate::config::space::ParamDef>) -> HadoopConfig {
+        let reg = crate::config::space::ParamRegistry::with_extras(extras).unwrap();
+        HadoopConfig::for_registry(reg)
+    }
+
+    #[test]
+    fn builtin_configs_are_bit_identical_to_pre_extension_model() {
+        // the extension is identity for registries without mapped extras:
+        // ext_effects must resolve to "absent" on the builtin table
+        let cfg = HadoopConfig::default();
+        let e = ext_effects(&cfg);
+        assert!(e.codec.is_none());
+        assert!(e.shuffle_buffer_pct.is_none());
+    }
+
+    #[test]
+    fn codec_choice_moves_wire_bytes_and_cpu() {
+        use crate::config::space::ParamDef;
+        let wl = wordcount(10240.0);
+        let codecs = ["none", "snappy", "gzip"];
+        let mk = |label: &str| {
+            let mut cfg = registry_with(vec![ParamDef::cat(
+                "mapreduce.map.output.compress.codec",
+                &codecs,
+                "snappy",
+            )]);
+            cfg.set(P_COMPRESS, 1.0);
+            let idx = codecs.iter().position(|c| *c == label).unwrap() as f64;
+            cfg.set_by_name("mapreduce.map.output.compress.codec", idx)
+                .unwrap();
+            cfg
+        };
+        let none = map_task_cost(&mk("none"), &wl, &cl());
+        let snappy = map_task_cost(&mk("snappy"), &wl, &cl());
+        let gzip = map_task_cost(&mk("gzip"), &wl, &cl());
+        // `none` disables compression even with the compress knob on
+        assert_eq!(none.disk_out_mb, none.map_out_mb);
+        assert!(snappy.disk_out_mb < none.disk_out_mb);
+        assert!(gzip.disk_out_mb < snappy.disk_out_mb, "gzip compresses harder");
+        assert!(gzip.t_cpu > snappy.t_cpu, "gzip costs more CPU");
+        // and the effect reaches predict_runtime (tier-0 can rank codecs)
+        let p_snappy = predict_runtime(&mk("snappy"), &wl, &cl());
+        let p_gzip = predict_runtime(&mk("gzip"), &wl, &cl());
+        assert!(p_snappy.is_finite() && p_gzip.is_finite());
+        assert!(p_snappy != p_gzip, "codec choice invisible to the model");
+    }
+
+    #[test]
+    fn shuffle_buffer_percent_gates_reduce_merge_io() {
+        use crate::config::space::ParamDef;
+        let wl = wordcount(10240.0);
+        let mk = |pct: f64| {
+            let mut cfg = registry_with(vec![ParamDef::float(
+                "mapreduce.reduce.shuffle.input.buffer.percent",
+                0.05,
+                1.0,
+                0.70,
+            )]);
+            cfg.set(P_REDUCES, 2.0);
+            cfg.set_by_name("mapreduce.reduce.shuffle.input.buffer.percent", pct)
+                .unwrap();
+            cfg
+        };
+        // with 2 reducers over 10 GiB wordcount the partition exceeds a
+        // small buffer fraction but fits memory-resident thresholds >= 1.0
+        let tight = reduce_task_cost(&mk(0.05), &wl, &cl());
+        let roomy = reduce_task_cost(&mk(1.0), &wl, &cl());
+        assert!(tight.t_merge_io >= roomy.t_merge_io);
+    }
+
+    #[test]
+    fn extended_param_mapped_is_precise() {
+        use crate::config::space::ParamDef;
+        assert!(extended_param_mapped(&ParamDef::float(
+            "mapreduce.reduce.shuffle.input.buffer.percent",
+            0.05,
+            1.0,
+            0.70
+        )));
+        assert!(extended_param_mapped(&ParamDef::cat(
+            "mapreduce.map.output.compress.codec",
+            &["none", "snappy", "lz4"],
+            "none"
+        )));
+        // unknown codec label -> blind, no guessing
+        assert!(!extended_param_mapped(&ParamDef::cat(
+            "mapreduce.map.output.compress.codec",
+            &["snappy", "quantum"],
+            "snappy"
+        )));
+        assert!(!extended_param_mapped(&ParamDef::int(
+            "x.shuffle.buffer.kb",
+            1.0,
+            1024.0,
+            64.0
+        )));
     }
 
     #[test]

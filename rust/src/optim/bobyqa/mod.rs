@@ -20,7 +20,7 @@ pub mod model;
 pub mod trust_region;
 
 use crate::optim::core::{BestSeen, Candidate, Optimizer};
-use crate::optim::result::EvalRecord;
+use crate::optim::result::{EvalRecord, Fidelity};
 use crate::optim::space::ParamSpace;
 use crate::util::linalg::norm2;
 use crate::util::rng::Rng;
@@ -406,6 +406,7 @@ mod tests {
                 unit_x: c.unit_x.clone(),
                 value: 1.0 + i as f64,
                 best_so_far: 1.0,
+                fidelity: Fidelity::Full,
             })
             .collect();
         bob.tell(&records);
@@ -418,6 +419,7 @@ mod tests {
                 unit_x: b[0].unit_x.clone(),
                 value: 2.0,
                 best_so_far: 1.0,
+                fidelity: Fidelity::Full,
             }]);
         }
     }
@@ -436,6 +438,7 @@ mod tests {
                     unit_x: c.unit_x.clone(),
                     value: 9.0 - i as f64 * 0.5,
                     best_so_far: 9.0,
+                    fidelity: Fidelity::Full,
                 })
                 .collect()
         };

@@ -8,7 +8,7 @@
 //! old monolithic loop.
 
 use crate::optim::core::{BestSeen, Candidate, Optimizer};
-use crate::optim::result::EvalRecord;
+use crate::optim::result::{EvalRecord, Fidelity};
 use crate::optim::space::ParamSpace;
 use crate::optim::sweep::Sweep;
 
@@ -195,6 +195,7 @@ mod tests {
                 unit_x: batch[0].unit_x.clone(),
                 value: 1.0, // flat: every sweep fails, step halves to stop
                 best_so_far: 1.0,
+                fidelity: Fidelity::Full,
             }]);
             n += 1;
             assert!(n < 10_000, "coordinate search never converged on flat");

@@ -48,7 +48,7 @@
 
 use crate::config::params::HadoopConfig;
 use crate::hadoop::{simulate_runtime, simulate_runtime_in, SimArena, SimCluster};
-use crate::optim::result::{EvalRecord, Recorder, TuningOutcome};
+use crate::optim::result::{EvalRecord, Fidelity, Recorder, TuningOutcome};
 use crate::optim::space::ParamSpace;
 use crate::optim::surrogate::CandidateScorer;
 use crate::util::pool::{default_threads, ThreadPool};
@@ -131,6 +131,12 @@ pub struct BestSeen {
 impl BestSeen {
     pub fn update(&mut self, evals: &[EvalRecord]) {
         for r in evals {
+            // A low-fidelity (raced-out) value is evidence for the
+            // method's search state, not for the incumbent: only
+            // full-fidelity measurements may become `best`.
+            if !r.fidelity.is_full() {
+                continue;
+            }
             if self.best.as_ref().map(|(_, b)| r.value < *b).unwrap_or(true) {
                 self.best = Some((r.unit_x.clone(), r.value));
             }
@@ -145,6 +151,21 @@ impl BestSeen {
 /// A batched black-box objective: score a whole ask-batch in one call.
 pub trait BatchObjective {
     fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String>;
+
+    /// Score a batch and report the evidence tier behind each value.
+    /// The default forwards to [`BatchObjective::eval_batch`] and labels
+    /// everything [`Fidelity::Full`] — only the multi-fidelity
+    /// [`crate::optim::racing::RacingObjective`] overrides this, so a
+    /// driver calling `eval_batch_tiered` on a plain objective takes the
+    /// exact same path as before racing existed.
+    fn eval_batch_tiered(
+        &mut self,
+        cfgs: &[HadoopConfig],
+    ) -> Result<(Vec<f64>, Vec<Fidelity>), String> {
+        let vals = self.eval_batch(cfgs)?;
+        let fids = vec![Fidelity::Full; vals.len()];
+        Ok((vals, fids))
+    }
 }
 
 /// Adapter for plain per-config closures (`FnMut(&HadoopConfig) -> f64`):
@@ -232,31 +253,45 @@ impl<'a> ClusterObjective<'a> {
         self.arenas = Vec::new();
         self
     }
-}
 
-impl BatchObjective for ClusterObjective<'_> {
-    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
-        if cfgs.is_empty() {
-            return Ok(Vec::new());
+    pub fn repeats(&self) -> usize {
+        self.repeats
+    }
+
+    /// Reserve the full `n_cfgs * repeats` seed block for a slice and
+    /// return its first seed. Config `c`, repeat `r` owns seed
+    /// `first + c * repeats + r` — the same layout `eval_batch` uses, so
+    /// callers that simulate only part of the block (the racing layer)
+    /// advance the cluster's seed stream exactly as a full evaluation
+    /// would.
+    pub fn reserve_block(&mut self, n_cfgs: usize) -> u64 {
+        self.cluster.reserve_seeds((n_cfgs * self.repeats) as u64)
+    }
+
+    /// Simulate an explicit `(config index, seed)` job list through the
+    /// same pool/arena machinery as `eval_batch`, returning runtimes in
+    /// job order. Results depend only on each job's `(config, seed)`
+    /// pair, never on thread count or scheduling.
+    pub fn run_jobs(&mut self, cfgs: &[HadoopConfig], jobs: &[(usize, u64)]) -> Vec<f64> {
+        if jobs.is_empty() {
+            return Vec::new();
         }
-        let repeats = self.repeats;
         let reuse = self.reuse_arenas;
-        let runs = cfgs.len() * repeats;
-        let first_seed = self.cluster.reserve_seeds(runs as u64);
         let spec = &self.cluster.spec;
         let wl = &self.workload;
         let run_one = |arena: &mut SimArena, i: usize| {
-            let cfg = &cfgs[i / repeats];
-            let seed = first_seed.wrapping_add(i as u64);
+            let (c, seed) = jobs[i];
+            let cfg = &cfgs[c];
             if reuse {
                 simulate_runtime_in(arena, spec, wl, cfg, seed)
             } else {
                 simulate_runtime(spec, wl, cfg, seed)
             }
         };
+        let runs = jobs.len();
         let workers = self.threads.min(runs);
         let arenas = &mut self.arenas;
-        let runtimes: Vec<f64> = if workers <= 1 {
+        if workers <= 1 {
             if arenas.is_empty() {
                 arenas.push(SimArena::new());
             }
@@ -267,7 +302,22 @@ impl BatchObjective for ClusterObjective<'_> {
             self.pool
                 .get_or_insert_with(|| ThreadPool::new(threads))
                 .scoped_run_with(runs, workers, arenas, SimArena::new, run_one)
-        };
+        }
+    }
+}
+
+impl BatchObjective for ClusterObjective<'_> {
+    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        if cfgs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let repeats = self.repeats;
+        let first_seed = self.reserve_block(cfgs.len());
+        let runs = cfgs.len() * repeats;
+        let jobs: Vec<(usize, u64)> = (0..runs)
+            .map(|i| (i / repeats, first_seed.wrapping_add(i as u64)))
+            .collect();
+        let runtimes = self.run_jobs(cfgs, &jobs);
         Ok(runtimes
             .chunks(repeats)
             .map(|c| c.iter().sum::<f64>() / repeats as f64)
@@ -413,9 +463,12 @@ impl DriverSession {
         }
         let mut replayed = Vec::with_capacity(prior.len());
         for p in prior.iter().take(self.budget) {
-            self.rec.record(p.unit_x.clone(), p.config.clone(), p.value);
+            self.rec
+                .record_tiered(p.unit_x.clone(), p.config.clone(), p.value, p.fidelity);
             let r = self.rec.last().expect("just recorded").clone();
-            self.best = self.best.min(r.value);
+            if r.fidelity.is_full() {
+                self.best = self.best.min(r.value);
+            }
             replayed.push(r);
         }
         opt.tell(&replayed);
@@ -469,11 +522,27 @@ impl DriverSession {
 
     /// Feed back the measured values for the outstanding slice, in slice
     /// order: record each evaluation, fire observers, update early-stop
-    /// state, and tell the optimizer.
+    /// state, and tell the optimizer. Every value is full-fidelity; the
+    /// racing layer uses [`DriverSession::tell_values_tiered`].
     pub fn tell_values<O: Optimizer + ?Sized>(
         &mut self,
         opt: &mut O,
         vals: &[f64],
+        observers: &mut [Box<dyn Observer + '_>],
+    ) -> Result<(), String> {
+        self.tell_values_tiered(opt, vals, &vec![Fidelity::Full; vals.len()], observers)
+    }
+
+    /// [`DriverSession::tell_values`] with an explicit evidence tier per
+    /// value. Early-stop stall accounting and the session's running best
+    /// consider full-fidelity evaluations only — a raced-out candidate's
+    /// cheap score can neither reset nor advance the stall counter, so a
+    /// racing-off run (all `Full`) behaves exactly as before.
+    pub fn tell_values_tiered<O: Optimizer + ?Sized>(
+        &mut self,
+        opt: &mut O,
+        vals: &[f64],
+        fids: &[Fidelity],
         observers: &mut [Box<dyn Observer + '_>],
     ) -> Result<(), String> {
         let PendingSlice { from, cfgs } = self
@@ -487,23 +556,37 @@ impl DriverSession {
                 cfgs.len()
             ));
         }
+        if fids.len() != vals.len() {
+            return Err(format!(
+                "objective returned {} fidelities for {} values",
+                fids.len(),
+                vals.len()
+            ));
+        }
         let end = from + cfgs.len();
         let mut told = Vec::with_capacity(vals.len());
         let mut stopped = false;
-        for ((cand, cfg), v) in self.batch[from..end].iter().zip(cfgs).zip(vals.iter().copied()) {
-            self.rec.record(cand.unit_x.clone(), cfg, v);
+        for (((cand, cfg), v), f) in self.batch[from..end]
+            .iter()
+            .zip(cfgs)
+            .zip(vals.iter().copied())
+            .zip(fids.iter().copied())
+        {
+            self.rec.record_tiered(cand.unit_x.clone(), cfg, v, f);
             let r = self.rec.last().expect("just recorded").clone();
             for ob in observers.iter_mut() {
                 ob.on_eval(&r);
             }
-            if let Some(es) = self.early_stop {
-                if r.value < self.best * (1.0 - es.min_rel) {
-                    self.stall = 0;
-                } else {
-                    self.stall += 1;
+            if f.is_full() {
+                if let Some(es) = self.early_stop {
+                    if r.value < self.best * (1.0 - es.min_rel) {
+                        self.stall = 0;
+                    } else {
+                        self.stall += 1;
+                    }
                 }
+                self.best = self.best.min(r.value);
             }
-            self.best = self.best.min(r.value);
             told.push(r);
             if let Some(es) = self.early_stop {
                 if self.stall >= es.patience {
@@ -660,11 +743,11 @@ impl<'a> Driver<'a> {
         let mut session = DriverSession::new(self.budget, self.early_stop, self.batch_chunk);
         session.replay(opt, prior);
         loop {
-            let vals = match session.next_slice(opt, space) {
+            let (vals, fids) = match session.next_slice(opt, space) {
                 None => break,
-                Some(cfgs) => obj.eval_batch(cfgs)?,
+                Some(cfgs) => obj.eval_batch_tiered(cfgs)?,
             };
-            session.tell_values(opt, &vals, &mut self.observers)?;
+            session.tell_values_tiered(opt, &vals, &fids, &mut self.observers)?;
         }
         session.into_outcome(opt.name())
     }
@@ -861,6 +944,7 @@ mod tests {
                     unit_x: x,
                     value: 100.0 - i as f64,
                     best_so_far: 0.0, // recomputed on replay
+                    fidelity: Fidelity::Full,
                 }
             })
             .collect();

@@ -13,7 +13,7 @@ use std::collections::BTreeSet;
 
 use crate::config::params::HadoopConfig;
 use crate::optim::core::{BestSeen, Candidate, Optimizer, DEFAULT_BATCH_CHUNK};
-use crate::optim::result::EvalRecord;
+use crate::optim::result::{EvalRecord, Fidelity};
 use crate::optim::space::{GridCursor, ParamSpace};
 use crate::util::fingerprint::config_value_key;
 
@@ -259,6 +259,7 @@ mod tests {
                 unit_x: c.unit_x.clone(),
                 value: 1.0,
                 best_so_far: 1.0,
+                fidelity: Fidelity::Full,
             })
             .collect();
         g.tell(&recs);
@@ -330,6 +331,7 @@ mod tests {
                 unit_x: x.clone(),
                 value: 1.0,
                 best_so_far: 1.0,
+                fidelity: Fidelity::Full,
             })
             .collect();
         let mut g = GridSearch::new();

@@ -7,7 +7,7 @@
 //! monolithic loop move for move.
 
 use crate::optim::core::{BestSeen, Candidate, Optimizer};
-use crate::optim::result::EvalRecord;
+use crate::optim::result::{EvalRecord, Fidelity};
 use crate::optim::space::ParamSpace;
 use crate::optim::sweep::Sweep;
 
@@ -221,6 +221,7 @@ mod tests {
                 unit_x: batch[0].unit_x.clone(),
                 value: 1.0, // flat objective: HJ must converge by halving
                 best_so_far: 1.0,
+                fidelity: Fidelity::Full,
             }]);
             n += 1;
             assert!(n < 10_000, "HJ never converged on a flat objective");

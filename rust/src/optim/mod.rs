@@ -48,6 +48,7 @@ pub mod grid;
 pub mod hooke_jeeves;
 pub mod latin;
 pub mod nelder_mead;
+pub mod racing;
 pub mod random;
 pub mod result;
 pub mod space;
@@ -65,8 +66,9 @@ pub use grid::GridSearch;
 pub use hooke_jeeves::HookeJeeves;
 pub use latin::LatinHypercube;
 pub use nelder_mead::NelderMead;
+pub use racing::{Race, RacingObjective, RacingSettings, RacingStats};
 pub use random::RandomSearch;
-pub use result::{EvalRecord, TuningOutcome};
+pub use result::{EvalRecord, Fidelity, TuningOutcome};
 pub use space::{GridCursor, ParamSpace};
 
 /// Every optimizer, behind one dispatchable handle (CLI / Optimizer

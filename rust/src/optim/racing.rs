@@ -1,0 +1,581 @@
+//! Multi-fidelity racing: successive halving over cost-model →
+//! low-seed → full-fidelity tiers.
+//!
+//! The DES is the expensive truth; `hadoop/costmodel` is a cheap
+//! analytic oracle. Racing spends the cheap tiers first, so a wide
+//! ask-batch reaches full fidelity only for the candidates that earn it
+//! (BestConfig's wide-then-narrow sampling, arxiv 1710.03439; the
+//! low-cost-predictor screening of Bao et al., arxiv 1808.06008):
+//!
+//! * **tier 0** — `costmodel::predict_runtime` scores the whole batch
+//!   with zero simulations and only the top `keep` fraction advances.
+//!   Refused (every candidate advances) when any tuned parameter is
+//!   blind to the model — the wrapper is built without a scorer then.
+//! * **tier 1** — each survivor simulates its *first* reserved seed.
+//!   The top `keep` fraction of those one-seed scores advances.
+//! * **tier 2** — survivors simulate their remaining `repeats - 1`
+//!   seeds and report the full-fidelity mean. With `repeats == 1`,
+//!   tier 1 already is full fidelity and there is no tier 2.
+//!
+//! Per tier, `keep = max(ceil(n / racing.eta), racing.min_tier_evals)`,
+//! clamped to the field — eta-style halving with a floor so tiny fields
+//! are never over-pruned. A singleton slice (every sequential DFO
+//! method) degenerates to full fidelity, so racing cannot perturb
+//! those methods at all.
+//!
+//! # Seed discipline (see docs/DETERMINISM.md)
+//!
+//! A raced slice reserves the **full** `n_cfgs * repeats` seed block up
+//! front, exactly like a racing-off evaluation; racing only decides
+//! which reserved seeds are actually simulated. Config `c`, repeat `r`
+//! always owns seed `first + c * repeats + r`, so:
+//!
+//! * a promoted config's tier-1 seed is seed 0 of its block and tier 2
+//!   adds seeds `1..repeats` — no seed is ever re-simulated, and the
+//!   tier-k seed set is a prefix of the tier-k+1 set;
+//! * finalists' full-fidelity values are byte-identical to what a
+//!   racing-off run would have measured for them;
+//! * the cluster's seed stream advances identically with racing on or
+//!   off, so all later slices are unperturbed.
+//!
+//! The tier planner is the pure [`Race`] state machine; this wrapper
+//! drives it against [`ClusterObjective`]'s pool, and the serve
+//! daemon's `ServeSession` drives the identical machine through the
+//! dispatcher's memo-cache — shared planner, so serve-vs-standalone
+//! byte-identity holds by construction (`rust/tests/racing.rs`).
+
+use crate::config::params::HadoopConfig;
+use crate::optim::core::{BatchObjective, ClusterObjective};
+use crate::optim::result::Fidelity;
+use crate::optim::surrogate::CandidateScorer;
+
+/// The `racing.*` knobs from `tuning.properties`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RacingSettings {
+    /// `racing.enabled` — off by default: the driver is then
+    /// byte-identical to a build without the racing layer.
+    pub enabled: bool,
+    /// `racing.eta` — halving rate: each tier keeps `ceil(n / eta)`.
+    pub eta: usize,
+    /// `racing.min_tier_evals` — promotion floor: no tier prunes the
+    /// field below this many candidates.
+    pub min_tier_evals: usize,
+}
+
+impl Default for RacingSettings {
+    fn default() -> RacingSettings {
+        RacingSettings {
+            enabled: false,
+            eta: 4,
+            min_tier_evals: 2,
+        }
+    }
+}
+
+impl RacingSettings {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.eta < 2 {
+            return Err(format!("racing.eta must be >= 2, got {}", self.eta));
+        }
+        if self.min_tier_evals < 1 {
+            return Err("racing.min_tier_evals must be >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Number of candidates a tier promotes out of a field of `n`.
+pub fn keep_count(n: usize, eta: usize, min_keep: usize) -> usize {
+    n.div_ceil(eta.max(2)).max(min_keep.max(1)).min(n)
+}
+
+/// Rank `live` by `score` (ascending, ties by candidate index) and keep
+/// the top of the field, returned in ascending candidate-index order so
+/// downstream work is scheduled in ask order.
+fn top_keep(
+    live: &[usize],
+    score: impl Fn(usize) -> f64,
+    eta: usize,
+    min_keep: usize,
+) -> Vec<usize> {
+    let k = keep_count(live.len(), eta, min_keep);
+    if k == live.len() {
+        return live.to_vec();
+    }
+    let mut ranked = live.to_vec();
+    ranked.sort_by(|&a, &b| score(a).total_cmp(&score(b)).then(a.cmp(&b)));
+    ranked.truncate(k);
+    ranked.sort_unstable();
+    ranked
+}
+
+/// One simulation a race wants run: candidate `cfg`'s repeat `rep`
+/// (seed offset `cfg * repeats + rep` into the slice's seed block).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunRequest {
+    pub cfg: usize,
+    pub rep: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Stage {
+    /// Tier 1 outstanding: every live candidate's first seed.
+    Seed,
+    /// Tier 2 outstanding: survivors' remaining `1..repeats` seeds.
+    Confirm,
+    Done,
+}
+
+/// The pure successive-halving planner for one ask-slice: which
+/// simulations to run next, and the per-candidate (value, fidelity)
+/// verdicts once finished. Both executors drive this same machine —
+/// [`RacingObjective`] against the in-process pool, the serve daemon's
+/// session against the dispatcher's memo-cache — so they cannot drift.
+#[derive(Clone, Debug)]
+pub struct Race {
+    n: usize,
+    repeats: usize,
+    eta: usize,
+    min_keep: usize,
+    /// Tier-0 scores for the whole slice; `None` = tier 0 refused.
+    model_scores: Option<Vec<f64>>,
+    /// Simulated runtimes per candidate, in seed (repeat) order. A
+    /// candidate's list is always a prefix of its reserved seed block.
+    seed_vals: Vec<Vec<f64>>,
+    live: Vec<usize>,
+    pending: Vec<RunRequest>,
+    stage: Stage,
+}
+
+impl Race {
+    /// Plan a race over `n` candidates. With `model_scores`, tier 0
+    /// prunes the field before any simulation; without (a blind
+    /// parameter in the spec), every candidate enters tier 1 — the
+    /// cheapest fidelity is then one seed.
+    pub fn new(
+        n: usize,
+        repeats: usize,
+        settings: &RacingSettings,
+        model_scores: Option<Vec<f64>>,
+    ) -> Race {
+        assert!(n > 0, "cannot race an empty slice");
+        if let Some(scores) = &model_scores {
+            assert_eq!(scores.len(), n, "model score count != slice size");
+        }
+        let repeats = repeats.max(1);
+        let eta = settings.eta.max(2);
+        let min_keep = settings.min_tier_evals.max(1);
+        let all: Vec<usize> = (0..n).collect();
+        let live = match &model_scores {
+            Some(scores) => top_keep(&all, |c| scores[c], eta, min_keep),
+            None => all,
+        };
+        let pending = live.iter().map(|&c| RunRequest { cfg: c, rep: 0 }).collect();
+        Race {
+            n,
+            repeats,
+            eta,
+            min_keep,
+            model_scores,
+            seed_vals: vec![Vec::new(); n],
+            live,
+            pending,
+            stage: Stage::Seed,
+        }
+    }
+
+    /// Simulations the current tier still needs, in candidate order.
+    pub fn pending(&self) -> &[RunRequest] {
+        &self.pending
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.stage == Stage::Done
+    }
+
+    /// Candidates still in the running (ascending index order).
+    pub fn live(&self) -> &[usize] {
+        &self.live
+    }
+
+    /// Simulated runtimes candidate `c` has accumulated, in seed order.
+    pub fn seed_values(&self, c: usize) -> &[f64] {
+        &self.seed_vals[c]
+    }
+
+    /// Total simulations the race has run so far.
+    pub fn sims(&self) -> usize {
+        self.seed_vals.iter().map(Vec::len).sum()
+    }
+
+    /// Candidates that reached full fidelity.
+    pub fn full_evals(&self) -> usize {
+        self.seed_vals.iter().filter(|v| v.len() == self.repeats).count()
+    }
+
+    /// Feed back the runtimes for the outstanding [`Race::pending`]
+    /// requests (same order), advancing the race one tier.
+    pub fn absorb(&mut self, results: &[f64]) -> Result<(), String> {
+        if self.stage == Stage::Done {
+            return Err("race already finished".to_string());
+        }
+        if results.len() != self.pending.len() {
+            return Err(format!(
+                "race absorbed {} results for {} pending runs",
+                results.len(),
+                self.pending.len()
+            ));
+        }
+        for (req, v) in self.pending.iter().zip(results) {
+            self.seed_vals[req.cfg].push(*v);
+        }
+        self.pending.clear();
+        match self.stage {
+            Stage::Seed if self.repeats > 1 => {
+                let sv = &self.seed_vals;
+                let survivors = top_keep(&self.live, |c| sv[c][0], self.eta, self.min_keep);
+                self.pending = survivors
+                    .iter()
+                    .flat_map(|&c| (1..self.repeats).map(move |rep| RunRequest { cfg: c, rep }))
+                    .collect();
+                self.live = survivors;
+                self.stage = Stage::Confirm;
+            }
+            // repeats == 1: one seed IS full fidelity — no tier 2
+            Stage::Seed | Stage::Confirm => self.stage = Stage::Done,
+            Stage::Done => unreachable!(),
+        }
+        Ok(())
+    }
+
+    /// The per-candidate verdicts of a finished race: each candidate's
+    /// highest-fidelity score and the tier it came from. Full-fidelity
+    /// means use the exact `ClusterObjective` fold (sum over the seed
+    /// block in seed order / repeats), so a finalist's value is
+    /// byte-identical to a racing-off evaluation.
+    pub fn values(&self) -> (Vec<f64>, Vec<Fidelity>) {
+        debug_assert!(self.is_finished(), "values() on an unfinished race");
+        let mut vals = Vec::with_capacity(self.n);
+        let mut fids = Vec::with_capacity(self.n);
+        for (c, sv) in self.seed_vals.iter().enumerate() {
+            if sv.len() == self.repeats {
+                vals.push(sv.iter().sum::<f64>() / self.repeats as f64);
+                fids.push(Fidelity::Full);
+            } else if !sv.is_empty() {
+                vals.push(sv.iter().sum::<f64>() / sv.len() as f64);
+                fids.push(Fidelity::Seeds(sv.len() as u32));
+            } else {
+                let m = self
+                    .model_scores
+                    .as_ref()
+                    .expect("tier-0-pruned candidate without model scores");
+                vals.push(m[c]);
+                fids.push(Fidelity::CostModel);
+            }
+        }
+        (vals, fids)
+    }
+}
+
+/// Cumulative counters across a run's raced slices (reported by the
+/// optimizer runner and the racing bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RacingStats {
+    pub slices: usize,
+    pub candidates: usize,
+    /// DES runs actually simulated.
+    pub sims: usize,
+    /// Candidates that reached full fidelity.
+    pub full_evals: usize,
+}
+
+/// [`BatchObjective`] adapter that races each ask-slice through the
+/// fidelity tiers against a [`ClusterObjective`]. With
+/// `racing.enabled=false` (or no tiering-aware caller) it is a plain
+/// pass-through — byte-identical to the wrapped objective.
+pub struct RacingObjective<'a> {
+    inner: ClusterObjective<'a>,
+    /// Tier-0 oracle; `None` = tier 0 refused (some tuned parameter is
+    /// blind to the cost model) and tier 1 is the cheapest fidelity.
+    scorer: Option<Box<dyn CandidateScorer>>,
+    settings: RacingSettings,
+    stats: RacingStats,
+}
+
+impl<'a> RacingObjective<'a> {
+    pub fn new(
+        inner: ClusterObjective<'a>,
+        settings: RacingSettings,
+        scorer: Option<Box<dyn CandidateScorer>>,
+    ) -> RacingObjective<'a> {
+        RacingObjective {
+            inner,
+            scorer,
+            settings,
+            stats: RacingStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> RacingStats {
+        self.stats
+    }
+
+    /// Whether tier 0 is available (a scorer was supplied).
+    pub fn has_tier0(&self) -> bool {
+        self.scorer.is_some()
+    }
+}
+
+impl BatchObjective for RacingObjective<'_> {
+    /// Full-fidelity pass-through (used by non-tiering callers).
+    fn eval_batch(&mut self, cfgs: &[HadoopConfig]) -> Result<Vec<f64>, String> {
+        self.inner.eval_batch(cfgs)
+    }
+
+    fn eval_batch_tiered(
+        &mut self,
+        cfgs: &[HadoopConfig],
+    ) -> Result<(Vec<f64>, Vec<Fidelity>), String> {
+        if !self.settings.enabled || cfgs.is_empty() {
+            // structurally the racing-off path: same eval_batch, same
+            // all-Full labels as a plain ClusterObjective
+            return self.inner.eval_batch_tiered(cfgs);
+        }
+        let repeats = self.inner.repeats();
+        let model_scores = match self.scorer.as_mut() {
+            Some(s) => {
+                let scores = s.score(cfgs)?;
+                if scores.len() != cfgs.len() {
+                    return Err(format!(
+                        "scorer {} returned {} scores for {} configs",
+                        s.name(),
+                        scores.len(),
+                        cfgs.len()
+                    ));
+                }
+                Some(scores)
+            }
+            None => None,
+        };
+        let mut race = Race::new(cfgs.len(), repeats, &self.settings, model_scores);
+        // reserve the FULL seed block, exactly like eval_batch: racing
+        // only chooses which reserved seeds get simulated
+        let first = self.inner.reserve_block(cfgs.len());
+        while !race.is_finished() {
+            let jobs: Vec<(usize, u64)> = race
+                .pending()
+                .iter()
+                .map(|r| (r.cfg, first.wrapping_add((r.cfg * repeats + r.rep) as u64)))
+                .collect();
+            let results = self.inner.run_jobs(cfgs, &jobs);
+            race.absorb(&results)?;
+        }
+        self.stats.slices += 1;
+        self.stats.candidates += cfgs.len();
+        self.stats.sims += race.sims();
+        self.stats.full_evals += race.full_evals();
+        Ok(race.values())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::TuningSpec;
+    use crate::hadoop::{ClusterSpec, SimCluster};
+    use crate::optim::space::ParamSpace;
+    use crate::workloads::wordcount;
+
+    fn on(eta: usize, min_keep: usize) -> RacingSettings {
+        RacingSettings {
+            enabled: true,
+            eta,
+            min_tier_evals: min_keep,
+        }
+    }
+
+    #[test]
+    fn keep_count_halving_with_floor() {
+        assert_eq!(keep_count(1024, 4, 2), 256);
+        assert_eq!(keep_count(9, 4, 2), 3);
+        assert_eq!(keep_count(4, 4, 2), 2); // floor wins over ceil(4/4)=1
+        assert_eq!(keep_count(3, 4, 2), 2);
+        assert_eq!(keep_count(2, 4, 2), 2);
+        assert_eq!(keep_count(1, 4, 2), 1); // never exceeds the field
+    }
+
+    #[test]
+    fn settings_validation() {
+        assert!(on(2, 1).validate().is_ok());
+        assert!(on(1, 2).validate().is_err());
+        assert!(on(4, 0).validate().is_err());
+        assert!(!RacingSettings::default().enabled);
+    }
+
+    #[test]
+    fn race_prunes_by_model_then_seed_then_confirms() {
+        // 8 candidates, repeats 3, eta 2: tier 0 keeps 4, tier 1 keeps 2
+        let model: Vec<f64> = vec![8.0, 1.0, 7.0, 2.0, 6.0, 3.0, 5.0, 4.0];
+        let mut race = Race::new(8, 3, &on(2, 2), Some(model));
+        // best model scores: candidates 1, 3, 5, 7 — promoted in index order
+        let t1: Vec<usize> = race.pending().iter().map(|r| r.cfg).collect();
+        assert_eq!(t1, vec![1, 3, 5, 7]);
+        assert!(race.pending().iter().all(|r| r.rep == 0));
+        // tier-1 results invert the model's ranking for 5 and 7
+        race.absorb(&[4.0, 3.0, 1.0, 2.0]).unwrap();
+        assert_eq!(race.live(), &[5, 7]);
+        let t2: Vec<(usize, usize)> = race.pending().iter().map(|r| (r.cfg, r.rep)).collect();
+        assert_eq!(t2, vec![(5, 1), (5, 2), (7, 1), (7, 2)]);
+        race.absorb(&[1.5, 2.5, 2.0, 3.0]).unwrap();
+        assert!(race.is_finished());
+
+        let (vals, fids) = race.values();
+        // tier-0 losers carry the model score
+        assert_eq!(fids[0], Fidelity::CostModel);
+        assert_eq!(vals[0], 8.0);
+        // tier-1 losers carry their one-seed score
+        assert_eq!(fids[1], Fidelity::Seeds(1));
+        assert_eq!(vals[1], 4.0);
+        // finalists carry the full mean over all three seeds
+        assert_eq!(fids[5], Fidelity::Full);
+        assert_eq!(vals[5], (1.0 + 1.5 + 2.5) / 3.0);
+        assert_eq!(fids[7], Fidelity::Full);
+        assert_eq!(vals[7], (2.0 + 2.0 + 3.0) / 3.0);
+        assert_eq!(race.sims(), 4 + 2 * 2);
+        assert_eq!(race.full_evals(), 2);
+    }
+
+    #[test]
+    fn tier_seed_sets_are_prefixes() {
+        // the monotone-promotion invariant: a candidate's tier-k seed
+        // list is a prefix of its tier-k+1 list (seed 0, then 1..repeats)
+        let mut race = Race::new(4, 3, &on(2, 1), None);
+        race.absorb(&[4.0, 1.0, 3.0, 2.0]).unwrap();
+        let after_t1: Vec<Vec<f64>> = (0..4).map(|c| race.seed_values(c).to_vec()).collect();
+        race.absorb(&[1.1, 1.2, 2.1, 2.2]).unwrap();
+        for c in 0..4 {
+            let now = race.seed_values(c);
+            assert!(
+                now.starts_with(&after_t1[c]),
+                "candidate {c}: {after_t1:?} not a prefix of {now:?}"
+            );
+        }
+        assert_eq!(race.seed_values(1), &[1.0, 1.1, 1.2]);
+    }
+
+    #[test]
+    fn no_model_scores_sends_everyone_to_tier_one() {
+        let race = Race::new(6, 2, &on(2, 2), None);
+        assert_eq!(race.pending().len(), 6, "tier 0 refused: nobody pruned before a sim");
+    }
+
+    #[test]
+    fn singleton_slice_degenerates_to_full_fidelity() {
+        let mut race = Race::new(1, 3, &on(4, 2), Some(vec![5.0]));
+        assert_eq!(race.pending().len(), 1);
+        race.absorb(&[2.0]).unwrap();
+        assert_eq!(race.live(), &[0]);
+        race.absorb(&[3.0, 4.0]).unwrap();
+        let (vals, fids) = race.values();
+        assert_eq!(fids, vec![Fidelity::Full]);
+        assert_eq!(vals[0], (2.0 + 3.0 + 4.0) / 3.0);
+    }
+
+    #[test]
+    fn repeats_one_has_no_confirm_tier() {
+        let mut race = Race::new(4, 1, &on(2, 1), None);
+        race.absorb(&[4.0, 3.0, 2.0, 1.0]).unwrap();
+        assert!(race.is_finished());
+        let (_, fids) = race.values();
+        assert_eq!(fids, vec![Fidelity::Full; 4]);
+    }
+
+    #[test]
+    fn absorb_length_mismatch_is_an_error() {
+        let mut race = Race::new(2, 1, &on(2, 1), None);
+        assert!(race.absorb(&[1.0]).is_err());
+    }
+
+    /// Finalists' full-fidelity values must be byte-identical to a
+    /// racing-off evaluation of the same slice on an identical cluster.
+    #[test]
+    fn finalists_match_racing_off_values_bitwise() {
+        let wl = wordcount(2048.0);
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let cfgs: Vec<HadoopConfig> = (0..6)
+            .map(|i| space.decode(&vec![i as f64 / 5.0; space.dims()]))
+            .collect();
+
+        let mut off_cluster = SimCluster::new(ClusterSpec::default());
+        let mut off = ClusterObjective::new(&mut off_cluster, &wl, 3);
+        let off_vals = off.eval_batch(&cfgs).unwrap();
+
+        let mut on_cluster = SimCluster::new(ClusterSpec::default());
+        let inner = ClusterObjective::new(&mut on_cluster, &wl, 3);
+        let mut raced = RacingObjective::new(inner, on(2, 2), None);
+        let (vals, fids) = raced.eval_batch_tiered(&cfgs).unwrap();
+
+        let full: Vec<usize> = (0..6).filter(|&i| fids[i] == Fidelity::Full).collect();
+        assert!(!full.is_empty(), "race promoted nobody");
+        assert!(full.len() < 6, "race pruned nobody");
+        for &i in &full {
+            assert_eq!(
+                vals[i].to_bits(),
+                off_vals[i].to_bits(),
+                "finalist {i} diverged from racing-off value"
+            );
+        }
+        let st = raced.stats();
+        assert_eq!(st.slices, 1);
+        assert!(st.sims < 6 * 3, "racing simulated the whole block");
+    }
+
+    /// Racing advances the seed stream exactly like a full evaluation,
+    /// so everything AFTER a raced slice is also unperturbed.
+    #[test]
+    fn seed_stream_advance_matches_racing_off() {
+        let wl = wordcount(2048.0);
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let cfgs: Vec<HadoopConfig> = (0..4)
+            .map(|i| space.decode(&vec![i as f64 / 3.0; space.dims()]))
+            .collect();
+        let probe = space.decode(&vec![0.5; space.dims()]);
+
+        let mut off_cluster = SimCluster::new(ClusterSpec::default());
+        let mut off = ClusterObjective::new(&mut off_cluster, &wl, 2);
+        off.eval_batch(&cfgs).unwrap();
+        let off_probe = off.eval_batch(std::slice::from_ref(&probe)).unwrap();
+
+        let mut on_cluster = SimCluster::new(ClusterSpec::default());
+        let inner = ClusterObjective::new(&mut on_cluster, &wl, 2);
+        let mut raced = RacingObjective::new(inner, on(2, 1), None);
+        raced.eval_batch_tiered(&cfgs).unwrap();
+        let (on_probe, _) = raced.eval_batch_tiered(std::slice::from_ref(&probe)).unwrap();
+
+        assert_eq!(off_probe[0].to_bits(), on_probe[0].to_bits());
+    }
+
+    #[test]
+    fn disabled_racing_is_a_passthrough() {
+        let wl = wordcount(2048.0);
+        let space = ParamSpace::new(TuningSpec::fig2(), HadoopConfig::default());
+        let cfgs: Vec<HadoopConfig> = (0..5)
+            .map(|i| space.decode(&vec![i as f64 / 4.0; space.dims()]))
+            .collect();
+
+        let mut a_cluster = SimCluster::new(ClusterSpec::default());
+        let mut plain = ClusterObjective::new(&mut a_cluster, &wl, 2);
+        let want = plain.eval_batch(&cfgs).unwrap();
+
+        let mut b_cluster = SimCluster::new(ClusterSpec::default());
+        let inner = ClusterObjective::new(&mut b_cluster, &wl, 2);
+        let mut off = RacingObjective::new(inner, RacingSettings::default(), None);
+        let (got, fids) = off.eval_batch_tiered(&cfgs).unwrap();
+
+        assert_eq!(fids, vec![Fidelity::Full; 5]);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.to_bits(), g.to_bits());
+        }
+        assert_eq!(off.stats().slices, 0, "disabled racing must not count slices");
+    }
+}

@@ -3,6 +3,65 @@
 
 use crate::config::params::HadoopConfig;
 
+/// How much evidence stands behind an [`EvalRecord::value`].
+///
+/// Every record of a non-racing run is `Full`. With multi-fidelity
+/// racing enabled (`racing.enabled=true`), candidates pruned before
+/// reaching full fidelity carry the cheaper tier their value came from:
+/// `CostModel` (tier 0, the analytic oracle — zero simulations) or
+/// `Seeds(k)` (mean over the first `k < repeats` seeds of the config's
+/// reserved seed block). Best-so-far tracking, early stopping, and
+/// summary "best" selection all consider `Full` records only, so a
+/// low-fidelity score can never be declared the winner of a run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fidelity {
+    /// Tier 0: `costmodel::predict_runtime` — no simulation behind it.
+    CostModel,
+    /// Mean over this many DES seeds, fewer than the run's `repeats`.
+    Seeds(u32),
+    /// Mean over the config's whole reserved seed block (every record
+    /// of a racing-off run).
+    Full,
+}
+
+impl Fidelity {
+    pub fn is_full(self) -> bool {
+        matches!(self, Fidelity::Full)
+    }
+
+    /// Number of DES runs behind a value at this fidelity, given the
+    /// run's `repeats` setting.
+    pub fn sims(self, repeats: usize) -> usize {
+        match self {
+            Fidelity::CostModel => 0,
+            Fidelity::Seeds(k) => k as usize,
+            Fidelity::Full => repeats.max(1),
+        }
+    }
+
+    /// Tuning-log / journal rendering: `model`, the seed count, or
+    /// `full`.
+    pub fn label(self) -> String {
+        match self {
+            Fidelity::CostModel => "model".to_string(),
+            Fidelity::Seeds(k) => k.to_string(),
+            Fidelity::Full => "full".to_string(),
+        }
+    }
+
+    /// Inverse of [`Fidelity::label`].
+    pub fn parse(s: &str) -> Result<Fidelity, String> {
+        match s {
+            "model" => Ok(Fidelity::CostModel),
+            "full" => Ok(Fidelity::Full),
+            other => other
+                .parse::<u32>()
+                .map(Fidelity::Seeds)
+                .map_err(|_| format!("unknown fidelity {other:?} (expected model|full|<seeds>)")),
+        }
+    }
+}
+
 /// One cluster evaluation during a tuning run.
 #[derive(Clone, Debug)]
 pub struct EvalRecord {
@@ -11,10 +70,14 @@ pub struct EvalRecord {
     pub config: HadoopConfig,
     /// Unit-cube coordinates the optimizer proposed.
     pub unit_x: Vec<f64>,
-    /// Measured job running time, seconds.
+    /// Measured job running time, seconds (or a cheaper-tier estimate —
+    /// see `fidelity`).
     pub value: f64,
-    /// min(value) over evaluations 1..=iter.
+    /// min(value) over full-fidelity evaluations 1..=iter.
     pub best_so_far: f64,
+    /// Evidence tier behind `value`; `Full` unless racing pruned this
+    /// candidate early.
+    pub fidelity: Fidelity,
 }
 
 /// Result of a whole tuning run.
@@ -65,11 +128,31 @@ impl Recorder {
     }
 
     pub fn record(&mut self, unit_x: Vec<f64>, config: HadoopConfig, value: f64) {
+        self.record_tiered(unit_x, config, value, Fidelity::Full);
+    }
+
+    /// Record an evaluation at an explicit fidelity tier. Only `Full`
+    /// records compete for `best` / `best_so_far`: a low-fidelity row
+    /// shows the current full-fidelity best (or, before the first full
+    /// record exists, its own value as a provisional placeholder).
+    pub fn record_tiered(
+        &mut self,
+        unit_x: Vec<f64>,
+        config: HadoopConfig,
+        value: f64,
+        fidelity: Fidelity,
+    ) {
         let best_so_far = match &self.best {
-            Some((_, b)) => b.min(value),
+            Some((_, b)) => {
+                if fidelity.is_full() {
+                    b.min(value)
+                } else {
+                    *b
+                }
+            }
             None => value,
         };
-        if self.best.as_ref().map(|(_, b)| value < *b).unwrap_or(true) {
+        if fidelity.is_full() && self.best.as_ref().map(|(_, b)| value < *b).unwrap_or(true) {
             self.best = Some((config.clone(), value));
         }
         self.records.push(EvalRecord {
@@ -78,6 +161,7 @@ impl Recorder {
             unit_x,
             value,
             best_so_far,
+            fidelity,
         });
     }
 
@@ -104,6 +188,16 @@ impl Recorder {
     pub fn finish(self, optimizer: &str) -> TuningOutcome {
         let (best_config, best_value) = self
             .best
+            .or_else(|| {
+                // Defensive: a run whose every record is low-fidelity
+                // (cannot happen through the racing layer, which always
+                // promotes at least one candidate per slice) still gets
+                // a best rather than a panic.
+                self.records
+                    .iter()
+                    .min_by(|a, b| a.value.total_cmp(&b.value))
+                    .map(|r| (r.config.clone(), r.value))
+            })
             .expect("tuning run recorded no evaluations");
         TuningOutcome {
             optimizer: optimizer.to_string(),
@@ -150,5 +244,39 @@ mod tests {
     #[should_panic(expected = "no evaluations")]
     fn empty_run_panics() {
         Recorder::new().finish("test");
+    }
+
+    #[test]
+    fn low_fidelity_records_never_win_best() {
+        let mut r = Recorder::new();
+        r.record_tiered(vec![0.1], cfg(), 9.0, Fidelity::Full);
+        // cheaper tiers report smaller values but must not displace best
+        r.record_tiered(vec![0.2], cfg(), 1.0, Fidelity::CostModel);
+        r.record_tiered(vec![0.3], cfg(), 2.0, Fidelity::Seeds(1));
+        r.record_tiered(vec![0.4], cfg(), 7.0, Fidelity::Full);
+        let out = r.finish("test");
+        assert_eq!(out.best_value, 7.0);
+        let bsf: Vec<f64> = out.records.iter().map(|x| x.best_so_far).collect();
+        assert_eq!(bsf, vec![9.0, 9.0, 9.0, 7.0]);
+    }
+
+    #[test]
+    fn all_low_fidelity_falls_back_to_min_value() {
+        let mut r = Recorder::new();
+        r.record_tiered(vec![0.1], cfg(), 4.0, Fidelity::Seeds(1));
+        r.record_tiered(vec![0.2], cfg(), 3.0, Fidelity::CostModel);
+        let out = r.finish("test");
+        assert_eq!(out.best_value, 3.0);
+    }
+
+    #[test]
+    fn fidelity_label_roundtrip() {
+        for f in [Fidelity::CostModel, Fidelity::Seeds(1), Fidelity::Seeds(7), Fidelity::Full] {
+            assert_eq!(Fidelity::parse(&f.label()).unwrap(), f);
+        }
+        assert!(Fidelity::parse("half").is_err());
+        assert_eq!(Fidelity::CostModel.sims(5), 0);
+        assert_eq!(Fidelity::Seeds(2).sims(5), 2);
+        assert_eq!(Fidelity::Full.sims(5), 5);
     }
 }

@@ -33,13 +33,15 @@ use std::path::{Path, PathBuf};
 
 use crate::catla::history::History;
 use crate::catla::journal::{self, Journal};
-use crate::catla::optimizer_runner::TuningSettings;
+use crate::catla::optimizer_runner::{cost_model_blind_params, TuningSettings};
 use crate::catla::project::Project;
 use crate::catla::resume::PriorRuns;
 use crate::config::params::HadoopConfig;
 use crate::config::spec::TuningSpec;
-use crate::hadoop::ClusterSpec;
+use crate::hadoop::{costmodel, ClusterSpec};
 use crate::optim::core::{DriverSession, EarlyStop};
+use crate::optim::racing::{Race, RacingSettings};
+use crate::optim::result::Fidelity;
 use crate::optim::{EvalRecord, Method, Optimizer, ParamSpace, TuningOutcome};
 use crate::util::csv::Csv;
 use crate::util::fingerprint::eval_fingerprint;
@@ -62,6 +64,18 @@ enum Flight {
     /// Simulator jobs dispatched through the daemon (`runs` runtimes
     /// expected: one per config × repeat).
     Sim { runs: usize, cfgs: Vec<HadoopConfig> },
+    /// A multi-fidelity race over the slice (`racing.enabled=true`): the
+    /// [`Race`] planner decides which of the slice's reserved seeds are
+    /// simulated, one dispatched wave per tier. `dispatched` is `None`
+    /// between tiers — the next [`ServeSession::next_jobs`] call hands
+    /// out the current tier's pending runs.
+    Race {
+        race: Race,
+        cfgs: Vec<HadoopConfig>,
+        /// First seed of the slice's reserved `cfgs × repeats` block.
+        first: u64,
+        dispatched: Option<usize>,
+    },
     /// Externally measured values (`ask`/`tell` protocol lines): one
     /// value per config, no simulator seeds consumed.
     External { cfgs: Vec<HadoopConfig> },
@@ -96,6 +110,11 @@ pub struct ServeSession {
     /// Base retry backoff in ms (`serve.retry.backoff_ms`), scaled
     /// linearly by retry number by the dispatcher.
     pub retry_backoff_ms: u64,
+    /// Multi-fidelity racing knobs (`racing.*` in tuning.properties).
+    racing: RacingSettings,
+    /// Tier 0 is usable: every tuned parameter is cost-model-mapped.
+    /// With a blind param in the spec the race starts at tier 1.
+    tier0_ok: bool,
     /// Pre-rendered journal header record (see [`journal::header_payload`]),
     /// appended lazily before the first checkpointed slice.
     header_payload: String,
@@ -177,6 +196,7 @@ impl ServeSession {
         driver.replay(opt.as_mut(), prior);
         let seed_counter = cluster.seed;
         let header_payload = journal::header_payload(settings, &label, &spec, prior.len());
+        let tier0_ok = cost_model_blind_params(&spec).is_empty();
         Ok(ServeSession {
             id: id.to_string(),
             dir: None,
@@ -194,6 +214,8 @@ impl ServeSession {
             cache_entries: settings.cache_entries,
             retry_max: settings.retry_max,
             retry_backoff_ms: settings.retry_backoff_ms,
+            racing: settings.racing,
+            tier0_ok,
             header_payload,
             journal_started: false,
             in_flight: None,
@@ -368,7 +390,7 @@ impl ServeSession {
                 slice.evals.len()
             ));
         }
-        for (k, (cfg, (_, logged))) in cfgs.iter().zip(&slice.evals).enumerate() {
+        for (k, (cfg, (_, _, logged))) in cfgs.iter().zip(&slice.evals).enumerate() {
             for (r, logged_v) in self.spec.ranges.iter().zip(logged) {
                 if cfg.get(r.index).to_bits() != logged_v.to_bits() {
                     return Err(format!(
@@ -388,8 +410,10 @@ impl ServeSession {
             let runs = cfgs.len() * self.repeats;
             self.seed_counter = self.seed_counter.wrapping_add(runs as u64);
         }
-        let vals: Vec<f64> = slice.evals.iter().map(|(v, _)| *v).collect();
-        self.driver.tell_values(self.opt.as_mut(), &vals, &mut [])
+        let vals: Vec<f64> = slice.evals.iter().map(|e| e.0).collect();
+        let fids: Vec<Fidelity> = slice.evals.iter().map(|e| e.1).collect();
+        self.driver
+            .tell_values_tiered(self.opt.as_mut(), &vals, &fids, &mut [])
     }
 
     /// Spec diagnostics to surface once per loaded session.
@@ -447,7 +471,33 @@ impl ServeSession {
     /// with seeds reserved exactly like serial submission. Empty while a
     /// slice is outstanding, or once the run is over.
     pub fn next_jobs(&mut self) -> Vec<EvalJob> {
-        if self.in_flight.is_some() || self.finalized || self.failed.is_some() {
+        if self.finalized || self.failed.is_some() {
+            return Vec::new();
+        }
+        // a multi-tier race re-arms between tiers: hand out the current
+        // tier's pending runs before asking the optimizer for anything
+        if let Some(Flight::Race {
+            race,
+            cfgs,
+            first,
+            dispatched,
+        }) = &mut self.in_flight
+        {
+            if dispatched.is_none() {
+                let jobs = Self::race_jobs(
+                    race,
+                    cfgs,
+                    *first,
+                    self.repeats,
+                    &self.cluster,
+                    &self.workload,
+                );
+                *dispatched = Some(jobs.len());
+                return jobs;
+            }
+            return Vec::new();
+        }
+        if self.in_flight.is_some() {
             return Vec::new();
         }
         let cfgs: Vec<HadoopConfig> = match self.driver.next_slice(self.opt.as_mut(), &self.space)
@@ -457,9 +507,38 @@ impl ServeSession {
         };
         let runs = cfgs.len() * self.repeats;
         // SimCluster::reserve_seeds, verbatim: first = counter+1, then
-        // advance by the run count
+        // advance by the run count. Racing reserves the IDENTICAL full
+        // block — it only chooses which reserved seeds get simulated, so
+        // the seed stream advance matches the racing-off session exactly.
         let first = self.seed_counter.wrapping_add(1);
         self.seed_counter = self.seed_counter.wrapping_add(runs as u64);
+        if self.racing.enabled {
+            let model_scores = if self.tier0_ok {
+                Some(
+                    cfgs.iter()
+                        .map(|c| costmodel::predict_runtime(c, &self.workload, &self.cluster))
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let race = Race::new(cfgs.len(), self.repeats, &self.racing, model_scores);
+            let jobs = Self::race_jobs(
+                &race,
+                &cfgs,
+                first,
+                self.repeats,
+                &self.cluster,
+                &self.workload,
+            );
+            self.in_flight = Some(Flight::Race {
+                dispatched: Some(jobs.len()),
+                race,
+                cfgs,
+                first,
+            });
+            return jobs;
+        }
         let jobs = (0..runs)
             .map(|i| {
                 let cfg = &cfgs[i / self.repeats];
@@ -473,6 +552,32 @@ impl ServeSession {
             .collect();
         self.in_flight = Some(Flight::Sim { runs, cfgs });
         jobs
+    }
+
+    /// Jobs for the current tier of a race: each pending (cfg, rep)
+    /// maps to seed offset `cfg × repeats + rep` of the slice's reserved
+    /// block — the same seed that run gets in the standalone
+    /// `RacingObjective`, and in a racing-off session's full sweep.
+    fn race_jobs(
+        race: &Race,
+        cfgs: &[HadoopConfig],
+        first: u64,
+        repeats: usize,
+        cluster: &ClusterSpec,
+        workload: &WorkloadSpec,
+    ) -> Vec<EvalJob> {
+        race.pending()
+            .iter()
+            .map(|r| {
+                let cfg = &cfgs[r.cfg];
+                let seed = first.wrapping_add((r.cfg * repeats + r.rep) as u64);
+                EvalJob {
+                    key: eval_fingerprint(cluster, workload, cfg, seed),
+                    cfg: cfg.clone(),
+                    seed,
+                }
+            })
+            .collect()
     }
 
     /// Deliver the runtimes for the outstanding [`ServeSession::next_jobs`]
@@ -495,7 +600,51 @@ impl ServeSession {
                     .map(|c| c.iter().sum::<f64>() / self.repeats as f64)
                     .collect();
                 self.driver.tell_values(self.opt.as_mut(), &vals, &mut [])?;
-                self.checkpoint(false, &cfgs, &vals)
+                let fids = vec![Fidelity::Full; vals.len()];
+                self.checkpoint(false, &cfgs, &vals, &fids)
+            }
+            Some(Flight::Race {
+                mut race,
+                cfgs,
+                first,
+                dispatched,
+            }) => {
+                if dispatched.is_none() || runtimes.len() != race.pending().len() {
+                    let msg = if dispatched.is_none() {
+                        format!("session {}: complete without dispatched jobs", self.id)
+                    } else {
+                        format!(
+                            "session {}: {} runtimes delivered for {} dispatched runs",
+                            self.id,
+                            runtimes.len(),
+                            race.pending().len()
+                        )
+                    };
+                    self.in_flight = Some(Flight::Race {
+                        race,
+                        cfgs,
+                        first,
+                        dispatched,
+                    });
+                    return Err(msg);
+                }
+                race.absorb(runtimes)?;
+                if race.is_finished() {
+                    let (vals, fids) = race.values();
+                    self.driver
+                        .tell_values_tiered(self.opt.as_mut(), &vals, &fids, &mut [])?;
+                    self.checkpoint(false, &cfgs, &vals, &fids)
+                } else {
+                    // re-arm: the next tier's runs go out on the next
+                    // next_jobs call
+                    self.in_flight = Some(Flight::Race {
+                        race,
+                        cfgs,
+                        first,
+                        dispatched: None,
+                    });
+                    Ok(())
+                }
             }
             other => {
                 self.in_flight = other;
@@ -526,7 +675,8 @@ impl ServeSession {
         match self.in_flight.take() {
             Some(Flight::External { cfgs }) => {
                 self.driver.tell_values(self.opt.as_mut(), vals, &mut [])?;
-                self.checkpoint(true, &cfgs, vals)
+                let fids = vec![Fidelity::Full; vals.len()];
+                self.checkpoint(true, &cfgs, vals, &fids)
             }
             other => {
                 self.in_flight = other;
@@ -540,7 +690,13 @@ impl ServeSession {
     /// Replaces the old full-log rewrite — O(1) bytes per checkpoint
     /// instead of O(evals), and a torn write can only ever damage the
     /// final record, which recovery truncates.
-    fn checkpoint(&mut self, external: bool, cfgs: &[HadoopConfig], vals: &[f64]) -> Result<(), String> {
+    fn checkpoint(
+        &mut self,
+        external: bool,
+        cfgs: &[HadoopConfig],
+        vals: &[f64],
+        fids: &[Fidelity],
+    ) -> Result<(), String> {
         let Some(dir) = &self.dir else {
             return Ok(());
         };
@@ -552,7 +708,7 @@ impl ServeSession {
                 .map_err(|e| format!("{}: {e}", jpath.display()))?;
             self.journal_started = true;
         }
-        let payload = journal::slice_payload(external, &self.spec, cfgs, vals);
+        let payload = journal::slice_payload(external, &self.spec, cfgs, vals, fids);
         durable::append_framed(&jpath, &payload, "journal.mid-append")
             .map_err(|e| format!("{}: {e}", jpath.display()))?;
         crashpoint::crash_if("journal.after-append");

@@ -16,8 +16,8 @@ use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
 use catla::optim::core::{BatchObjective, Candidate, Driver, FnObjective, Optimizer};
 use catla::optim::{
-    Bobyqa, ClusterObjective, EarlyStop, EvalRecord, Method, ParamSpace, TuningOutcome,
-    ALL_METHODS,
+    Bobyqa, ClusterObjective, EarlyStop, EvalRecord, Fidelity, Method, ParamSpace, RacingObjective,
+    RacingSettings, TuningOutcome, ALL_METHODS,
 };
 use catla::workloads::wordcount;
 
@@ -66,10 +66,11 @@ fn fingerprint(out: &TuningOutcome) -> String {
     let mut s = format!("{}|{}|{:x}", out.optimizer, out.evals(), out.best_value.to_bits());
     for r in &out.records {
         s.push_str(&format!(
-            ";{}:{:x}:{:x}:{}",
+            ";{}:{:x}:{:x}:{}:{}",
             r.iter,
             r.value.to_bits(),
             r.best_so_far.to_bits(),
+            r.fidelity.label(),
             r.unit_x
                 .iter()
                 .map(|u| format!("{:x}", u.to_bits()))
@@ -92,6 +93,30 @@ fn determinism_same_method_seed_budget_is_byte_identical() {
             "{name}: outcome not reproducible under a fixed seed"
         );
         assert!(a.evals() > 0 && a.evals() <= BUDGET, "{name}: bad eval count");
+    }
+}
+
+#[test]
+fn disabled_racing_objective_is_byte_identical_for_all_methods() {
+    // racing.enabled=false must be a structural no-op: the RacingObjective
+    // wrapper delegates straight to the inner ClusterObjective, so every
+    // method's outcome (values, best-so-far, configs, fidelities — all
+    // Full) stays byte-identical to the unwrapped driver
+    let wl = wordcount(2048.0);
+    let sp = space();
+    for name in ALL_METHODS {
+        let plain = drive(name, false);
+        let mut cluster = SimCluster::new(ClusterSpec::default());
+        let inner = ClusterObjective::new(&mut cluster, &wl, 1);
+        let mut obj = RacingObjective::new(inner, RacingSettings::default(), None);
+        let mut opt = Method::from_name(name, SEED).unwrap().build();
+        let raced = Driver::new(BUDGET).run(opt.as_mut(), &sp, &mut obj).unwrap();
+        assert_eq!(
+            fingerprint(&plain),
+            fingerprint(&raced),
+            "{name}: disabled racing changed the outcome"
+        );
+        assert!(raced.records.iter().all(|r| r.fidelity == Fidelity::Full));
     }
 }
 
@@ -297,6 +322,7 @@ fn record(sp: &ParamSpace, c: &Candidate, value: f64) -> EvalRecord {
         unit_x: c.unit_x.clone(),
         value,
         best_so_far: value,
+        fidelity: Fidelity::Full,
     }
 }
 

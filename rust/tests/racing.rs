@@ -1,0 +1,228 @@
+//! Multi-fidelity racing guarantees, pinned byte-for-byte:
+//! * racing-on runs are deterministic: repeat runs, different dispatcher
+//!   thread counts, and serve-vs-standalone all land on the identical
+//!   outcome — values AND fidelity tiers;
+//! * monotone promotion at the run level: with an ask stream that
+//!   ignores told values (random), every full-fidelity record of a
+//!   racing-on run is bit-identical to the racing-off run's measurement
+//!   of the same candidate, and the race simulates strictly less;
+//! * a cost-model-blind parameter in the spec refuses tier 0: no record
+//!   ever carries `model` fidelity — the cheapest tier is one simulated
+//!   seed.
+//!
+//! (The racing-OFF byte-identity bar for all eight methods lives in
+//! `rust/tests/ask_tell.rs`; the pure tier planner's unit invariants in
+//! `rust/src/optim/racing.rs`.)
+
+use catla::catla::{create_template, OptimizerRunner, Project, ProjectKind, TuningSettings};
+use catla::config::params::HadoopConfig;
+use catla::config::spec::TuningSpec;
+use catla::hadoop::{ClusterSpec, SimCluster};
+use catla::optim::core::DEFAULT_BATCH_CHUNK;
+use catla::optim::surrogate::{CandidateScorer, NativeScorer};
+use catla::optim::{
+    ClusterObjective, Driver, Fidelity, Method, ParamSpace, RacingObjective, RacingSettings,
+    TuningOutcome, ALL_METHODS,
+};
+use catla::serve::{Dispatcher, ServeSession};
+use catla::workloads::wordcount;
+
+const BUDGET: usize = 18;
+const SEED: u64 = 23;
+
+fn racing_on() -> RacingSettings {
+    RacingSettings {
+        enabled: true,
+        eta: 4,
+        min_tier_evals: 2,
+    }
+}
+
+/// Standalone racing-enabled drive over fig3 — every fig3 dim is
+/// cost-model-mapped, so tier 0 is armed with the native scorer exactly
+/// like the `OptimizerRunner` arms it.
+fn standalone_raced(optimizer: &str, repeats: usize) -> TuningOutcome {
+    let wl = wordcount(2048.0);
+    let sp = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let cluster_spec = cluster.spec.clone();
+    let inner = ClusterObjective::new(&mut cluster, &wl, repeats);
+    let scorer: Option<Box<dyn CandidateScorer>> = Some(Box::new(NativeScorer {
+        workload: wl.clone(),
+        cluster: cluster_spec,
+    }));
+    let mut obj = RacingObjective::new(inner, racing_on(), scorer);
+    let mut opt = Method::from_name(optimizer, SEED).unwrap().build();
+    Driver::new(BUDGET).run(opt.as_mut(), &sp, &mut obj).unwrap()
+}
+
+fn standalone_plain(optimizer: &str, repeats: usize) -> TuningOutcome {
+    let wl = wordcount(2048.0);
+    let sp = ParamSpace::new(TuningSpec::fig3(), HadoopConfig::default());
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let mut obj = ClusterObjective::new(&mut cluster, &wl, repeats);
+    let mut opt = Method::from_name(optimizer, SEED).unwrap().build();
+    Driver::new(BUDGET).run(opt.as_mut(), &sp, &mut obj).unwrap()
+}
+
+fn settings(optimizer: &str, repeats: usize) -> TuningSettings {
+    TuningSettings {
+        optimizer: optimizer.to_string(),
+        budget: BUDGET,
+        repeats,
+        seed: SEED,
+        prescreen: false,
+        early_patience: 0,
+        early_tol: 1e-3,
+        batch_chunk: DEFAULT_BATCH_CHUNK,
+        cache_entries: None,
+        retry_max: 2,
+        retry_backoff_ms: 0,
+        racing: racing_on(),
+    }
+}
+
+fn session(id: &str, optimizer: &str, repeats: usize) -> ServeSession {
+    ServeSession::new(
+        id,
+        TuningSpec::fig3(),
+        HadoopConfig::default(),
+        ClusterSpec::default(),
+        wordcount(2048.0),
+        &settings(optimizer, repeats),
+    )
+    .unwrap()
+}
+
+/// Byte-exact fingerprint including each record's fidelity tier.
+fn fingerprint(out: &TuningOutcome) -> String {
+    let mut s = format!("{}|{}|{:x}", out.optimizer, out.evals(), out.best_value.to_bits());
+    for r in &out.records {
+        s.push_str(&format!(
+            ";{}@{}:{:x}:{:x}:{}",
+            r.iter,
+            r.fidelity.label(),
+            r.value.to_bits(),
+            r.best_so_far.to_bits(),
+            r.unit_x
+                .iter()
+                .map(|u| format!("{:x}", u.to_bits()))
+                .collect::<Vec<_>>()
+                .join(","),
+        ));
+        s.push_str(&format!("{:?}", r.config.values));
+    }
+    s
+}
+
+#[test]
+fn racing_runs_are_repeatable_for_all_methods() {
+    for name in ALL_METHODS {
+        assert_eq!(
+            fingerprint(&standalone_raced(name, 2)),
+            fingerprint(&standalone_raced(name, 2)),
+            "{name}: racing run is not repeatable"
+        );
+    }
+}
+
+#[test]
+fn serve_racing_matches_standalone_across_thread_counts() {
+    // the serve daemon drives the identical Race planner through its
+    // memo-cache and thread pool: interleaved sessions, any pool size —
+    // the outcome (values and tiers) must not move a byte
+    for name in ALL_METHODS {
+        let reference = fingerprint(&standalone_raced(name, 2));
+        for threads in [1usize, 4] {
+            let mut sessions = vec![session("a", name, 2), session("b", name, 2)];
+            let mut d = Dispatcher::new(threads, 1 << 14);
+            d.run_all(&mut sessions).unwrap();
+            for s in &sessions {
+                assert_eq!(
+                    fingerprint(&s.outcome().unwrap()),
+                    reference,
+                    "{name} threads={threads}: serve session {} diverged from standalone racing",
+                    s.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_fidelity_records_match_racing_off_bitwise() {
+    // random's ask stream ignores told values, so racing-on and
+    // racing-off evaluate the SAME candidates on the SAME reserved
+    // seeds: promotion is monotone (a finalist's value is the exact
+    // racing-off measurement) and the race simulates strictly less
+    let off = standalone_plain("random", 3);
+    let on = standalone_raced("random", 3);
+    assert_eq!(off.evals(), on.evals());
+
+    let mut promoted = 0usize;
+    for (a, b) in off.records.iter().zip(&on.records) {
+        assert_eq!(
+            format!("{:?}", a.config.values),
+            format!("{:?}", b.config.values),
+            "iter {}: candidate streams diverged",
+            a.iter
+        );
+        if b.fidelity.is_full() {
+            promoted += 1;
+            assert_eq!(
+                a.value.to_bits(),
+                b.value.to_bits(),
+                "iter {}: finalist value diverged from the racing-off measurement",
+                a.iter
+            );
+        }
+    }
+    assert!(
+        promoted >= 2 && promoted < on.evals(),
+        "degenerate race: {promoted} of {} promoted",
+        on.evals()
+    );
+    // the incumbent is always a full-fidelity measurement
+    let best_full = on
+        .records
+        .iter()
+        .filter(|r| r.fidelity.is_full())
+        .map(|r| r.value)
+        .fold(f64::INFINITY, f64::min);
+    assert_eq!(on.best_value.to_bits(), best_full.to_bits());
+}
+
+#[test]
+fn blind_param_spec_refuses_tier_zero() {
+    // `x.shuffle.buffer.kb` is invisible to the cost model, so the
+    // OptimizerRunner must arm the race WITHOUT a tier-0 scorer: no
+    // record may carry `model` fidelity, and tier-1 pruning still runs
+    let dir = std::env::temp_dir().join(format!("catla-racing-blind-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    create_template(&dir, ProjectKind::Tuning, "wordcount", 1024.0).unwrap();
+    std::fs::write(
+        dir.join("params.spec"),
+        "param mapreduce.task.io.sort.mb int 50 800 step 50\n\
+         param x.shuffle.buffer.kb int 32 4096\n",
+    )
+    .unwrap();
+    std::fs::write(
+        dir.join("tuning.properties"),
+        "optimizer=random\nbudget=12\nrepeats=2\nseed=5\nracing.enabled=true\n",
+    )
+    .unwrap();
+    let project = Project::load(&dir).unwrap();
+    let mut cluster = SimCluster::new(ClusterSpec::default());
+    let out = OptimizerRunner::new(&mut cluster).run(&project).unwrap();
+    let recs = &out.outcome.records;
+    assert!(
+        recs.iter().all(|r| r.fidelity != Fidelity::CostModel),
+        "blind-param spec must refuse cost-model fidelity"
+    );
+    assert!(
+        recs.iter().any(|r| matches!(r.fidelity, Fidelity::Seeds(_))),
+        "tier-1 pruning should still race a blind-param spec"
+    );
+    assert!(recs.iter().any(|r| r.fidelity.is_full()), "no finalist reached full fidelity");
+    let _ = std::fs::remove_dir_all(&dir);
+}

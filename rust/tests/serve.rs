@@ -24,7 +24,9 @@ use catla::config::params::HadoopConfig;
 use catla::config::spec::TuningSpec;
 use catla::hadoop::{ClusterSpec, SimCluster};
 use catla::optim::core::DEFAULT_BATCH_CHUNK;
-use catla::optim::{ClusterObjective, Driver, Method, ParamSpace, TuningOutcome, ALL_METHODS};
+use catla::optim::{
+    ClusterObjective, Driver, Method, ParamSpace, RacingSettings, TuningOutcome, ALL_METHODS,
+};
 use catla::serve::{Daemon, Dispatcher, ServeSession};
 use catla::workloads::wordcount;
 
@@ -44,6 +46,7 @@ fn settings(optimizer: &str, repeats: usize) -> TuningSettings {
         cache_entries: None,
         retry_max: 2,
         retry_backoff_ms: 0,
+        racing: RacingSettings::default(),
     }
 }
 
